@@ -1,0 +1,14 @@
+//! Hardware cost study (Fig. 4(a), Sec. 3.1, App. K): the PE-level cost
+//! of every scale-format option, plus the storage/bandwidth model.
+//!
+//! ```bash
+//! cargo run --release --example hw_cost
+//! ```
+
+use microscale::experiments::hwx;
+
+fn main() {
+    println!("{}", hwx::fig4a());
+    println!("{}", hwx::appendix_k());
+    println!("{}", hwx::sec31_costs());
+}

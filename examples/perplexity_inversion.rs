@@ -1,0 +1,23 @@
+//! Perplexity inversion, live: reproduce the paper's Fig. 1(b) headline
+//! phenomenon on the σ-calibrated model suite through the full
+//! AOT-runtime stack (trains the base model on first run; cached after).
+//!
+//! ```bash
+//! cargo run --release --example perplexity_inversion -- [--fast]
+//! ```
+
+use microscale::experiments::{self, Ctx};
+use microscale::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let mut ctx = Ctx::default_dirs(args.has("fast") || !args.has("full"))?;
+    println!("{}", experiments::figure(&mut ctx, "1a")?);
+    println!("{}", experiments::figure(&mut ctx, "1b")?);
+    println!(
+        "Fig. 1(a) vs 1(b): with BF16 (non-quantized) scales the gap shrinks\n\
+         monotonically as blocks shrink; quantizing the scales to UE4M3 makes\n\
+         the narrow-σ models INVERT at small block sizes — the paper's anomaly."
+    );
+    Ok(())
+}

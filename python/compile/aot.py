@@ -1,0 +1,291 @@
+"""AOT compile path: lower every L2 entry point to HLO *text* artifacts.
+
+Run once via `make artifacts` (no-op when up to date). Python never runs on
+the experiment path: the Rust binary loads `artifacts/*.hlo.txt` through
+the PJRT CPU client (`rust/src/runtime/`).
+
+Interchange format is HLO text, NOT `.serialize()`: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1
+rejects (`proto.id() <= INT_MAX`); the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Emits:
+  artifacts/loss_bs{2,4,8,16,32,64,128}.hlo.txt   eval NLL per block size
+  artifacts/logits_bs{8,16}.hlo.txt               logits for probes
+  artifacts/train_step.hlo.txt                    AdamW step
+  artifacts/kernel_fq.hlo.txt                     L1 Pallas fake-quant demo
+  artifacts/kernel_qmm.hlo.txt                    L1 Pallas fused GEMM demo
+  artifacts/manifest.json                         shapes/param-init contract
+  artifacts/golden/quant_golden.json              Rust bit-exactness vectors
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Any, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import microscale as mk
+from .kernels import ref
+
+EVAL_BATCH = 8
+TRAIN_BATCH = 16
+BLOCK_SIZES = (2, 4, 8, 16, 32, 64, 128)
+LOGITS_BLOCK_SIZES = (8, 16)
+KERNEL_SHAPE = (128, 128)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _leaf_spec(name: str, x) -> dict:
+    return {
+        "name": name,
+        "shape": list(x.shape),
+        "dtype": str(x.dtype),
+    }
+
+
+def _param_leaves(cfg: M.ModelConfig) -> List[str]:
+    """Flattened param order: jax flattens dicts by sorted key."""
+    return sorted(M.init_specs(cfg).keys())
+
+
+def _example_params(cfg: M.ModelConfig):
+    specs = M.init_specs(cfg)
+    return {
+        k: jnp.zeros(tuple(s["shape"]), jnp.float32) for k, s in specs.items()
+    }
+
+
+def lower_artifacts(out_dir: str, cfg: M.ModelConfig) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest: dict = {
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_heads": cfg.n_heads,
+            "n_layers": cfg.n_layers,
+            "d_ff": cfg.d_ff,
+            "seq_len": cfg.seq_len,
+        },
+        "eval_batch": EVAL_BATCH,
+        "train_batch": TRAIN_BATCH,
+        "block_sizes": list(BLOCK_SIZES),
+        "qvec_len": M.QV_LEN,
+        "params": {},
+        "artifacts": {},
+    }
+    for k, s in M.init_specs(cfg).items():
+        manifest["params"][k] = {
+            "shape": list(s["shape"]),
+            "init": s["init"],
+            "std": s.get("std", 0.0),
+            "decay": s["decay"],
+        }
+    manifest["param_order"] = _param_leaves(cfg)
+
+    params = _example_params(cfg)
+    qv = jnp.zeros((M.QV_LEN,), jnp.float32)
+
+    def emit(name: str, lowered, inputs: List[dict], outputs: List[dict]):
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": inputs,
+            "outputs": outputs,
+        }
+        print(f"  {name}: {len(text)/1e6:.2f} MB HLO text")
+
+    param_inputs = [
+        _leaf_spec(k, params[k]) for k in _param_leaves(cfg)
+    ]
+
+    # -- eval loss per block size -------------------------------------
+    tokens_eval = jnp.zeros((EVAL_BATCH, cfg.seq_len + 1), jnp.int32)
+    for bs in BLOCK_SIZES:
+        fn = lambda p, t, q, _bs=bs: (M.nll_loss(p, t, q, cfg, _bs),)
+        lowered = jax.jit(fn).lower(params, tokens_eval, qv)
+        emit(
+            f"loss_bs{bs}",
+            lowered,
+            param_inputs
+            + [_leaf_spec("tokens", tokens_eval), _leaf_spec("qv", qv)],
+            [{"shape": [], "dtype": "float32"}],
+        )
+
+    # -- logits for downstream probes ----------------------------------
+    tokens_fwd = jnp.zeros((EVAL_BATCH, cfg.seq_len), jnp.int32)
+    for bs in LOGITS_BLOCK_SIZES:
+        fn = lambda p, t, q, _bs=bs: (M.forward(p, t, q, cfg, _bs),)
+        lowered = jax.jit(fn).lower(params, tokens_fwd, qv)
+        emit(
+            f"logits_bs{bs}",
+            lowered,
+            param_inputs
+            + [_leaf_spec("tokens", tokens_fwd), _leaf_spec("qv", qv)],
+            [{
+                "shape": [EVAL_BATCH, cfg.seq_len, cfg.vocab],
+                "dtype": "float32",
+            }],
+        )
+
+    # -- train step -----------------------------------------------------
+    tokens_tr = jnp.zeros((TRAIN_BATCH, cfg.seq_len + 1), jnp.int32)
+    step = jnp.zeros((), jnp.float32)
+    lr = jnp.zeros((), jnp.float32)
+    wd = jnp.zeros((), jnp.float32)
+
+    def train_fn(p, m, v, s, t, lr_, wd_):
+        np_, nm, nv, loss = M.adamw_step(p, m, v, s, t, lr_, wd_, cfg)
+        return (np_, nm, nv, loss)
+
+    lowered = jax.jit(train_fn).lower(
+        params, params, params, step, tokens_tr, lr, wd
+    )
+    order = _param_leaves(cfg)
+    tr_inputs = (
+        [_leaf_spec(f"p.{k}", params[k]) for k in order]
+        + [_leaf_spec(f"m.{k}", params[k]) for k in order]
+        + [_leaf_spec(f"v.{k}", params[k]) for k in order]
+        + [
+            _leaf_spec("step", step),
+            _leaf_spec("tokens", tokens_tr),
+            _leaf_spec("lr", lr),
+            _leaf_spec("wd", wd),
+        ]
+    )
+    tr_outputs = (
+        [
+            {"shape": list(params[k].shape), "dtype": "float32", "name": g + k}
+            for g in ("p.", "m.", "v.")
+            for k in order
+        ]
+        + [{"shape": [], "dtype": "float32", "name": "loss"}]
+    )
+    emit("train_step", lowered, tr_inputs, tr_outputs)
+
+    # -- L1 Pallas kernel demos ------------------------------------------
+    x_spec = jax.ShapeDtypeStruct(KERNEL_SHAPE, jnp.float32)
+    cfg_fq = {
+        k: v
+        for k, v in ref.default_qcfg("fp4_e2m1", "ue4m3").items()
+        if k not in ("per_tensor", "scale_fmt_max")
+    }
+    lowered = jax.jit(
+        lambda x: (mk.fake_quant_pallas(x, 16, cfg_fq),)
+    ).lower(x_spec)
+    emit(
+        "kernel_fq",
+        lowered,
+        [{"name": "x", "shape": list(KERNEL_SHAPE), "dtype": "float32"}],
+        [{"shape": list(KERNEL_SHAPE), "dtype": "float32"}],
+    )
+    lowered = jax.jit(
+        lambda x, w: (mk.quantized_matmul_pallas(x, w, 16, cfg_fq),)
+    ).lower(x_spec, x_spec)
+    emit(
+        "kernel_qmm",
+        lowered,
+        [
+            {"name": "x", "shape": list(KERNEL_SHAPE), "dtype": "float32"},
+            {"name": "w", "shape": list(KERNEL_SHAPE), "dtype": "float32"},
+        ],
+        [{"shape": list(KERNEL_SHAPE), "dtype": "float32"}],
+    )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    return manifest
+
+
+def emit_golden(out_dir: str) -> None:
+    """Golden vectors tying the Rust quantizer bit-exactly to ref.py."""
+    gdir = os.path.join(out_dir, "golden")
+    os.makedirs(gdir, exist_ok=True)
+    rng = np.random.default_rng(20260710)
+    cases: List[dict] = []
+
+    # minifloat casts across every scale format, log-uniform magnitudes
+    mags = np.concatenate([
+        np.float32(10.0) ** rng.uniform(-9, 6, 256).astype(np.float32),
+        np.zeros(4, np.float32),
+        np.float32([2**-9, 2**-10, 2**-17, 2**-18, 448.0, 449.0, 1e30]),
+    ]).astype(np.float32)
+    for name, f in ref.SCALE_FORMATS.items():
+        out = np.asarray(
+            ref.cast_minifloat(jnp.array(mags), f.m_bits, f.e_min, f.max_val)
+        )
+        cases.append({
+            "kind": "cast",
+            "fmt": name,
+            "m_bits": f.m_bits,
+            "e_min": f.e_min,
+            "max_val": f.max_val,
+            "x": mags.tolist(),
+            "y": out.astype(float).tolist(),
+        })
+
+    # block fake-quant across element/scale/bs/per-tensor combinations
+    combos = [
+        ("fp4_e2m1", "ue4m3", False), ("fp4_e2m1", "ue4m3", True),
+        ("fp4_e2m1", "ue5m3", False), ("fp4_e2m1", "ue4m4", False),
+        ("fp4_e2m1", "ue5m1", False), ("fp4_e2m1", "ue4m2", False),
+        ("fp4_e2m1", "bf16", False), ("fp4_e2m1", "e8m0", False),
+        ("int4", "ue4m3", False), ("int4", "ue5m3", True),
+        ("fp6_e2m3", "ue4m3", False), ("fp6_e3m2", "ue4m3", False),
+    ]
+    for elem, scale, pt in combos:
+        for bsz in (2, 8, 16, 32):
+            for sigma in (1.0, 2e-2, 1e-4):
+                x = rng.normal(0, sigma, 64).astype(np.float32)
+                cfgq = ref.default_qcfg(elem, scale, pt)
+                y = np.asarray(ref.fake_quant(jnp.array(x), bsz, **cfgq))
+                cases.append({
+                    "kind": "fake_quant",
+                    "elem": elem,
+                    "scale": scale,
+                    "per_tensor": pt,
+                    "block_size": bsz,
+                    "x": x.astype(float).tolist(),
+                    "y": y.astype(float).tolist(),
+                })
+
+    with open(os.path.join(gdir, "quant_golden.json"), "w") as f:
+        json.dump({"cases": cases}, f)
+    print(f"  golden: {len(cases)} cases")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="sentinel path; artifacts land in its directory")
+    args = ap.parse_args()
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    cfg = M.ModelConfig()
+    print(f"lowering artifacts to {out_dir} (model={cfg})")
+    lower_artifacts(out_dir, cfg)
+    emit_golden(out_dir)
+    # sentinel for the Makefile dependency
+    with open(args.out, "w") as f:
+        f.write("see manifest.json\n")
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

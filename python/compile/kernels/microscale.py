@@ -1,0 +1,150 @@
+"""L1 — Pallas kernels for the microscaling hot-spot.
+
+Two kernels:
+
+  * ``fake_quant_pallas`` — tiled block fake-quantize (quantize-dequantize)
+    of a 2-D tensor with microscaling blocks along the last axis;
+  * ``quantized_matmul_pallas`` — fused "quantize both operands in VMEM,
+    then matmul" kernel, the paper's quantized-GEMM datapath.
+
+Hardware adaptation (DESIGN.md §2): the paper's formats target CUDA-style
+microscaling tensor-core units. Here the same insight is expressed for a
+TPU-like memory hierarchy: each grid step stages a (TILE_M, K) activation
+strip and a (K, TILE_N) weight strip in VMEM via BlockSpec (the HBM→VMEM
+schedule CUDA expresses with threadblocks), extracts per-block scales in
+registers/VMEM scratch without ever round-tripping them to HBM, and feeds
+the MXU-style ``jnp.dot`` with the dequantized tiles.
+
+Kernels are lowered with ``interpret=True`` only: real-TPU lowering emits a
+Mosaic custom-call the CPU PJRT plugin cannot execute. Format parameters
+are *static* per instantiation (they specialize the kernel, exactly like a
+hardware format select), while `model.py` uses the identical `ref.py` math
+with *runtime* format scalars; pytest asserts kernel == ref bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _fq_block_body(x, qcfg: dict):
+    """Fake-quant an array whose last axis is the block axis (static qcfg)."""
+    return ref.fake_quant_blocks(
+        x,
+        qcfg["elem_is_int"], qcfg["elem_m"], qcfg["elem_emin"],
+        qcfg["elem_max"], qcfg["scale_m"], qcfg["scale_emin"],
+        qcfg["scale_max"],
+    )
+
+
+def _fake_quant_kernel(x_ref, o_ref, *, block_size: int, qcfg: dict):
+    """Kernel body: VMEM tile (TILE_M, K) -> blocks -> fake-quant -> out."""
+    x = x_ref[...]
+    tm, k = x.shape
+    xb = x.reshape(tm, k // block_size, block_size)
+    o_ref[...] = _fq_block_body(xb, qcfg).reshape(tm, k)
+
+
+def fake_quant_pallas(
+    x: jnp.ndarray,
+    block_size: int,
+    qcfg: dict,
+    tile_m: int = 64,
+) -> jnp.ndarray:
+    """Tiled microscaling fake-quant of a 2-D (M, K) tensor.
+
+    Grid over row-tiles; each step owns a (tile_m, K) VMEM strip. K must be
+    a multiple of block_size; M a multiple of tile_m (callers pad).
+    """
+    m, k = x.shape
+    assert k % block_size == 0 and m % tile_m == 0, (x.shape, block_size, tile_m)
+    kern = functools.partial(
+        _fake_quant_kernel, block_size=block_size, qcfg=qcfg
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(m // tile_m,),
+        in_specs=[pl.BlockSpec((tile_m, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tile_m, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32))
+
+
+def _qmatmul_kernel(x_ref, w_ref, o_ref, *, block_size: int, qcfg: dict):
+    """Fused kernel body: quantize x-tile and w-tile in VMEM, then dot.
+
+    x tile: (TILE_M, K) with blocks along K.
+    w tile: (K, TILE_N); microscaling blocks run along the contraction dim,
+    so the weight strip is quantized on its transposed view, matching the
+    per-output-column block layout of hardware microscaling GEMMs.
+    """
+    x = x_ref[...]
+    w = w_ref[...]
+    tm, k = x.shape
+    _, tn = w.shape
+    xq = _fq_block_body(
+        x.reshape(tm, k // block_size, block_size), qcfg
+    ).reshape(tm, k)
+    wq = _fq_block_body(
+        w.T.reshape(tn, k // block_size, block_size), qcfg
+    ).reshape(tn, k).T
+    o_ref[...] = jnp.dot(xq, wq, preferred_element_type=jnp.float32)
+
+
+def quantized_matmul_pallas(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    block_size: int,
+    qcfg: dict,
+    tile_m: int = 64,
+    tile_n: int = 64,
+) -> jnp.ndarray:
+    """Fused microscaling GEMM: matmul(FQ(x), FQ(w)) for (M,K) @ (K,N).
+
+    The grid is (M/tile_m, N/tile_n); each step stages a (tile_m, K)
+    activation strip and a (K, tile_n) weight strip in VMEM, quantizes both
+    in-register, and emits one output tile. The whole-K strip keeps scale
+    extraction local to a single grid step (no partial-block seams and no
+    scale traffic to HBM); see DESIGN.md §Perf for the VMEM budget.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2 and k % block_size == 0, (x.shape, w.shape, block_size)
+    assert m % tile_m == 0 and n % tile_n == 0, (x.shape, w.shape)
+    kern = functools.partial(_qmatmul_kernel, block_size=block_size, qcfg=qcfg)
+    return pl.pallas_call(
+        kern,
+        grid=(m // tile_m, n // tile_n),
+        in_specs=[
+            pl.BlockSpec((tile_m, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tile_n), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(x.astype(jnp.float32), w.astype(jnp.float32))
+
+
+def vmem_footprint_bytes(
+    tile_m: int, tile_n: int, k: int, block_size: int
+) -> Tuple[int, dict]:
+    """Estimated VMEM bytes per grid step of the fused GEMM kernel.
+
+    Used by DESIGN.md/EXPERIMENTS.md §Perf to size tiles against a ~16 MiB
+    TPU VMEM budget. f32 staging for activations/weights/output plus the
+    per-block scale vectors (one scale per block per row/column).
+    """
+    act = tile_m * k * 4
+    wgt = k * tile_n * 4
+    out = tile_m * tile_n * 4
+    scales = (tile_m + tile_n) * (k // block_size) * 4
+    total = act + wgt + out + scales
+    return total, {"act": act, "wgt": wgt, "out": out, "scales": scales}

@@ -1,0 +1,268 @@
+"""Pure-jnp reference implementation of microscaling quantization.
+
+This module is the single source of truth for the quantization numerics of
+the whole repository:
+
+  * the L1 Pallas kernel (`microscale.py`) is asserted bit-identical to it
+    by pytest + hypothesis (`python/tests/test_kernel.py`);
+  * the L2 model (`model.py`) calls these functions directly so that the
+    lowered HLO artifacts embed exactly these semantics;
+  * the Rust quantizer (`rust/src/quant/`) is asserted bit-identical to it
+    via golden vectors emitted by `aot.py` (`rust/tests/golden.rs`).
+
+Everything is float32, deterministic, and implemented with exact
+power-of-two arithmetic (bitcast exponent extraction + round-half-even on
+an exact power-of-two-scaled value), so the Rust port can match it
+bit-for-bit.
+
+Formats are described by `MiniFloat(m_bits, e_min, max_val)`:
+
+  * the representable non-negative values are 0 and
+    ``r * 2**(e - m_bits)`` for integers r in [2**m_bits, 2**(m_bits+1))
+    and exponents e >= e_min (normals), plus the subnormal grid
+    ``r * 2**(e_min - m_bits)`` for r in [0, 2**m_bits);
+  * rounding is round-to-nearest-even on that grid;
+  * values above `max_val` saturate to `max_val` (hardware cast behaviour).
+
+The concrete formats of the paper (Sec. 2.1, 5.2, App. H/J):
+
+  ===========  ======  =====  ========  ==========================
+  format       m_bits  e_min  max_val   min subnormal (paper)
+  ===========  ======  =====  ========  ==========================
+  FP4  E2M1    1       0      6.0       0.5
+  UE4M3        3       -6     448.0     2**-9    (Sec. 2.1)
+  UE5M3        3       -14    122880.0  2**-17   (Sec. 5.2, ours)
+  UE4M4        4       -6     496.0     2**-10   (App. J)
+  UE5M1 (FP6)  1       -14    98304.0   2**-15   (App. H)
+  UE4M2 (FP6)  2       -6     448.0     2**-8    (App. H)
+  E8M0  (PoT)  0       -127   2**127    --       (OCP MX)
+  BF16-ish     7       -126   ~3.39e38  "non-quantized" scales
+  ===========  ======  =====  ========  ==========================
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MiniFloat:
+    """A saturating, unsigned-magnitude minifloat grid (see module doc)."""
+
+    m_bits: int
+    e_min: int
+    max_val: float
+    name: str = ""
+
+    def as_tuple(self) -> Tuple[int, int, float]:
+        return (self.m_bits, self.e_min, self.max_val)
+
+
+# -- the paper's format registry ------------------------------------------
+
+FP4_E2M1 = MiniFloat(1, 0, 6.0, "fp4_e2m1")
+FP6_E2M3 = MiniFloat(3, 0, 7.5, "fp6_e2m3")      # OCP MXFP6 element format
+FP6_E3M2 = MiniFloat(2, -2, 28.0, "fp6_e3m2")    # OCP MXFP6 element format
+UE4M3 = MiniFloat(3, -6, 448.0, "ue4m3")
+UE5M3 = MiniFloat(3, -14, 122880.0, "ue5m3")
+UE4M4 = MiniFloat(4, -6, 496.0, "ue4m4")
+UE5M1 = MiniFloat(1, -14, 98304.0, "ue5m1")
+UE4M2 = MiniFloat(2, -6, 448.0, "ue4m2")
+# OCP E8M0 spans 2**-127..2**128; we clamp to the normal-f32 range
+# [2**-126, 2**127] because the fake-quant pipeline carries values in f32
+# (and XLA CPU flushes f32 subnormals to zero anyway).
+E8M0 = MiniFloat(0, -126, 2.0**127, "e8m0")
+BF16_SCALE = MiniFloat(7, -126, 3.3895313892515355e38, "bf16")
+
+SCALE_FORMATS = {
+    f.name: f for f in (UE4M3, UE5M3, UE4M4, UE5M1, UE4M2, E8M0, BF16_SCALE)
+}
+ELEM_FORMATS = {f.name: f for f in (FP4_E2M1, FP6_E2M3, FP6_E3M2)}
+
+# INT4 elements quantize to integers in [-7, 7] (App. G).
+INT4_MAX = 7.0
+
+
+def _pow2(e: jnp.ndarray) -> jnp.ndarray:
+    """Exact 2**e for integer e in [-126, 127], constructed by bitcast.
+
+    jnp.exp2 is an *approximation* on the XLA CPU backend (observed
+    |rel err| ~ 5e-10), which would corrupt the bit-exact grid; building
+    the IEEE754 representation directly is exact.
+    """
+    bits = ((e + 127) << 23).astype(jnp.uint32)
+    return jax.lax.bitcast_convert_type(bits, jnp.float32)
+
+
+def _ldexp2(x: jnp.ndarray, e) -> jnp.ndarray:
+    """Exact x * 2**e for integer e with |e| <= 252 (two-step bitcast pow2).
+
+    Single-step multiply overflows to inf for e > 127 even when the product
+    is representable; splitting keeps every factor finite and exact.
+    Mirrored by `util::ldexp2` on the Rust side.
+    """
+    e = jnp.asarray(e, jnp.int32)
+    e1 = jnp.clip(e, -126, 126)
+    e2 = e - e1
+    return x * _pow2(e1) * _pow2(e2)
+
+
+def _floor_log2(x: jnp.ndarray) -> jnp.ndarray:
+    """floor(log2(x)) for x > 0 via exponent-field extraction (exact).
+
+    f32 subnormal inputs report -127 which is always <= any e_min we use,
+    so they land on the target subnormal grid as intended.
+    """
+    bits = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    return ((bits >> 23) & 0xFF).astype(jnp.int32) - 127
+
+
+def cast_minifloat(x: jnp.ndarray, m_bits, e_min, max_val) -> jnp.ndarray:
+    """Round non-negative f32 `x` to the MiniFloat(m_bits, e_min, max_val) grid.
+
+    Round-to-nearest-even, saturating at max_val. Accepts traced scalars for
+    the format parameters so one lowered HLO serves every scale format
+    (DESIGN.md L2 notes).
+    """
+    x = x.astype(jnp.float32)
+    m_bits = jnp.asarray(m_bits, jnp.int32)
+    e_min = jnp.asarray(e_min, jnp.int32)
+    max_val = jnp.asarray(max_val, jnp.float32)
+
+    xc = jnp.minimum(x, max_val)
+    # DAZ: XLA CPU flushes f32 subnormals; make that part of the contract
+    # so the Rust port (which is strict-IEEE) matches bit-for-bit.
+    xc = jnp.where(xc >= jnp.float32(1.1754944e-38), xc, 0.0)
+    g = _floor_log2(jnp.where(xc > 0, xc, 1.0))
+    p = jnp.maximum(g, e_min) - m_bits  # grid exponent: quantum = 2**p
+    y = _ldexp2(xc, -p)
+    r = jnp.round(y)  # jnp.round is round-half-even
+    out = _ldexp2(r, p)
+    return jnp.where(xc > 0, out, 0.0).astype(jnp.float32)
+
+
+def cast_signed_minifloat(x, m_bits, e_min, max_val):
+    """Signed-magnitude minifloat cast (used for FP4/FP6 elements)."""
+    return jnp.sign(x) * cast_minifloat(jnp.abs(x), m_bits, e_min, max_val)
+
+
+def cast_int_symmetric(x: jnp.ndarray, int_max) -> jnp.ndarray:
+    """INT-k element cast: round-half-even then clamp to [-int_max, int_max]."""
+    int_max = jnp.asarray(int_max, jnp.float32)
+    return jnp.clip(jnp.round(x.astype(jnp.float32)), -int_max, int_max)
+
+
+# -- block microscaling ------------------------------------------------------
+
+
+def block_scales(x_blocks, elem_max, scale_m, scale_emin, scale_max):
+    """Per-block quantized scales s = Q_scale(absmax(block) / elem_max).
+
+    `x_blocks` has blocks on the last axis; returns one scale per block
+    (last axis reduced). Sec. 2.1 of the paper.
+    """
+    absmax = jnp.max(jnp.abs(x_blocks), axis=-1)
+    raw = absmax / jnp.asarray(elem_max, jnp.float32)
+    return cast_minifloat(raw, scale_m, scale_emin, scale_max)
+
+
+def fake_quant_blocks(
+    x_blocks,
+    elem_is_int,
+    elem_m,
+    elem_emin,
+    elem_max,
+    scale_m,
+    scale_emin,
+    scale_max,
+):
+    """Quantize-dequantize blocks (last axis = block of size N).
+
+    Implements Sec. 2.1: s = Q_scale(absmax / elem_max), q = Q_elem(x / s),
+    xhat = s * q, with the s == 0 edge case (whole block rounds to zero,
+    App. F.3) handled explicitly.
+    """
+    s = block_scales(x_blocks, elem_max, scale_m, scale_emin, scale_max)
+    s_b = s[..., None]
+    y = jnp.where(s_b > 0, x_blocks / jnp.where(s_b > 0, s_b, 1.0), 0.0)
+    q_fp = cast_signed_minifloat(y, elem_m, elem_emin, elem_max)
+    q_int = cast_int_symmetric(y, elem_max)
+    q = jnp.where(jnp.asarray(elem_is_int, jnp.bool_), q_int, q_fp)
+    return (s_b * q).astype(jnp.float32)
+
+
+def fake_quant(
+    x: jnp.ndarray,
+    block_size: int,
+    elem_is_int,
+    elem_m,
+    elem_emin,
+    elem_max,
+    scale_m,
+    scale_emin,
+    scale_max,
+    per_tensor=False,
+    scale_fmt_max=448.0,
+) -> jnp.ndarray:
+    """Microscaling fake-quant of `x` with blocks along the last axis.
+
+    `per_tensor` enables the UE4M3-S global pre-scaling of eq. 11:
+    s_T = (elem_max * scale_fmt_max) / absmax(x); the tensor is multiplied
+    by s_T before block quantization and divided back after.
+    """
+    shape = x.shape
+    assert shape[-1] % block_size == 0, (shape, block_size)
+    per_tensor = jnp.asarray(per_tensor, jnp.bool_)
+    absmax = jnp.max(jnp.abs(x))
+    s_t_raw = (
+        jnp.asarray(elem_max, jnp.float32)
+        * jnp.asarray(scale_fmt_max, jnp.float32)
+        / jnp.where(absmax > 0, absmax, 1.0)
+    )
+    s_t = jnp.where(per_tensor & (absmax > 0), s_t_raw, 1.0)
+    xb = (x * s_t).reshape(shape[:-1] + (shape[-1] // block_size, block_size))
+    xq = fake_quant_blocks(
+        xb, elem_is_int, elem_m, elem_emin, elem_max,
+        scale_m, scale_emin, scale_max,
+    )
+    return (xq.reshape(shape) / s_t).astype(jnp.float32)
+
+
+def quantized_matmul(x, w, block_size: int, qcfg: dict):
+    """matmul(FQ(x), FQ(w)) with microscaling blocks along the contraction dim.
+
+    `x`: (..., K); `w`: (K, F). Weights are blocked along K per output
+    column (transposed view), as hardware microscaling GEMMs do.
+    """
+    xq = fake_quant(x, block_size, **qcfg)
+    wq = fake_quant(w.T, block_size, **qcfg).T
+    return xq @ wq
+
+
+def default_qcfg(
+    elem: str = "fp4_e2m1",
+    scale: str = "ue4m3",
+    per_tensor: bool = False,
+) -> dict:
+    """Build a concrete (python-scalar) qcfg dict from format names."""
+    if elem == "int4":
+        e = dict(elem_is_int=True, elem_m=0, elem_emin=0, elem_max=INT4_MAX)
+    else:
+        f = ELEM_FORMATS[elem]
+        e = dict(
+            elem_is_int=False, elem_m=f.m_bits, elem_emin=f.e_min,
+            elem_max=f.max_val,
+        )
+    s = SCALE_FORMATS[scale]
+    return dict(
+        **e,
+        scale_m=s.m_bits,
+        scale_emin=s.e_min,
+        scale_max=s.max_val,
+        per_tensor=per_tensor,
+        scale_fmt_max=s.max_val,
+    )

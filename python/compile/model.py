@@ -1,0 +1,267 @@
+"""L2 — JAX decoder-only transformer LM with in-graph microscaling quantization.
+
+This is the model substrate for every perplexity/accuracy experiment of the
+paper (Figs. 1, 4, 5, 14, 16, 17; Tables 1-3). Following the paper's
+protocol (App. A):
+
+  * the weights AND activations of every linear layer are fake-quantized
+    with the selected microscaling format — except the model head;
+  * attention matmuls (QK^T, PV) are NOT quantized;
+  * perplexity is next-token NLL on held-out data.
+
+The quantization configuration is NOT baked into the graph: it is a vector
+of 11 runtime f32 scalars (`QV_*` below), so a single lowered HLO per block
+size serves every (element format, scale format, per-tensor-scaling,
+BF16-baseline) combination in the paper. Block size changes tensor shapes
+and is therefore static per artifact (`aot.py` lowers one HLO per block
+size).
+
+σ-transformed model zoo support: each quantized weight tensor carries a
+per-tensor `gain` γ. The stored tensor is w̃ = w/γ and the forward computes
+γ·(FQ(x) @ FQ(w̃)), which preserves the learned function exactly while
+letting the *stored* tensor σ be dialed to mimic the per-tensor σ spectra
+of the paper's models (granite-narrow vs llama-2-wide vs mamba-ultranarrow)
+— see DESIGN.md §1 and `rust/src/model/zoo.rs`.
+
+Everything here is build-time only; `aot.py` lowers it to HLO text that the
+Rust runtime executes via PJRT.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+
+# -- runtime quant-config vector layout (f32 scalars) -----------------------
+QV_QUANT_ON = 0      # 0.0 => exact BF16-path baseline (no fake-quant at all)
+QV_ELEM_IS_INT = 1   # 1.0 => INT4 elements (App. G), else minifloat elements
+QV_ELEM_M = 2        # element minifloat mantissa bits
+QV_ELEM_EMIN = 3     # element minifloat min normal exponent
+QV_ELEM_MAX = 4      # element max (6.0 FP4; 7.0 INT4)
+QV_SCALE_M = 5       # scale minifloat mantissa bits
+QV_SCALE_EMIN = 6    # scale minifloat min normal exponent
+QV_SCALE_MAX = 7     # scale minifloat max value
+QV_PER_TENSOR = 8    # 1.0 => UE4M3-S-style global pre-scaling (eq. 11)
+QV_SCALE_FMT_MAX = 9 # max(scale fmt) used in the eq. 11 numerator
+QV_ACT_QUANT = 10    # 1.0 => quantize activations too (paper default)
+QV_LEN = 11
+
+
+def qvec(
+    elem: str = "fp4_e2m1",
+    scale: str = "ue4m3",
+    per_tensor: bool = False,
+    quant_on: bool = True,
+    act_quant: bool = True,
+):
+    """Build the runtime quant-config vector from format names (host side)."""
+    import numpy as np
+
+    c = ref.default_qcfg(elem if elem != "int4" else "int4", scale, per_tensor)
+    v = np.zeros(QV_LEN, dtype=np.float32)
+    v[QV_QUANT_ON] = 1.0 if quant_on else 0.0
+    v[QV_ELEM_IS_INT] = 1.0 if c["elem_is_int"] else 0.0
+    v[QV_ELEM_M] = c["elem_m"]
+    v[QV_ELEM_EMIN] = c["elem_emin"]
+    v[QV_ELEM_MAX] = c["elem_max"]
+    v[QV_SCALE_M] = c["scale_m"]
+    v[QV_SCALE_EMIN] = c["scale_emin"]
+    v[QV_SCALE_MAX] = c["scale_max"]
+    v[QV_PER_TENSOR] = 1.0 if per_tensor else 0.0
+    v[QV_SCALE_FMT_MAX] = c["scale_fmt_max"]
+    v[QV_ACT_QUANT] = 1.0 if act_quant else 0.0
+    return v
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer configuration.
+
+    Defaults are the `tiny` preset used throughout the reproduction
+    (sized for the single-core CPU sandbox; see DESIGN.md §7). All K
+    (contraction) dimensions are multiples of 128 so that microscaling
+    block sizes up to 128 divide evenly.
+    """
+
+    vocab: int = 256
+    d_model: int = 128
+    n_heads: int = 4
+    n_layers: int = 4
+    d_ff: int = 512
+    seq_len: int = 128
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+
+def init_specs(cfg: ModelConfig) -> Dict[str, dict]:
+    """Shape/init spec for every parameter tensor (consumed by Rust init).
+
+    Layer tensors are stacked on a leading n_layers axis (scanned in the
+    forward pass). `init` kinds: normal(std), zeros, ones.
+    """
+    L, D, F, V, S = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab, cfg.seq_len
+    std = 0.02
+    out_std = std / (2.0 * L) ** 0.5  # GPT-2-style residual-out scaling
+    return {
+        "embed": dict(shape=(V, D), init="normal", std=std, decay=True),
+        "pos": dict(shape=(S, D), init="normal", std=std, decay=True),
+        "ln1_g": dict(shape=(L, D), init="ones", decay=False),
+        "ln1_b": dict(shape=(L, D), init="zeros", decay=False),
+        "wq": dict(shape=(L, D, D), init="normal", std=std, decay=True),
+        "wk": dict(shape=(L, D, D), init="normal", std=std, decay=True),
+        "wv": dict(shape=(L, D, D), init="normal", std=std, decay=True),
+        "wo": dict(shape=(L, D, D), init="normal", std=out_std, decay=True),
+        "ln2_g": dict(shape=(L, D), init="ones", decay=False),
+        "ln2_b": dict(shape=(L, D), init="zeros", decay=False),
+        "w1": dict(shape=(L, D, F), init="normal", std=std, decay=True),
+        "w2": dict(shape=(L, F, D), init="normal", std=out_std, decay=True),
+        "gains": dict(shape=(L, 6), init="ones", decay=False),
+        "lnf_g": dict(shape=(D,), init="ones", decay=False),
+        "lnf_b": dict(shape=(D,), init="zeros", decay=False),
+        "head": dict(shape=(D, V), init="normal", std=std, decay=True),
+    }
+
+
+PARAM_ORDER = tuple(sorted(init_specs(ModelConfig()).keys()))
+
+
+def _fq(x: jnp.ndarray, block_size: int, qv: jnp.ndarray) -> jnp.ndarray:
+    """Runtime-configured microscaling fake-quant (blocks on last axis)."""
+    xq = ref.fake_quant(
+        x,
+        block_size,
+        elem_is_int=qv[QV_ELEM_IS_INT] > 0.5,
+        elem_m=qv[QV_ELEM_M].astype(jnp.int32),
+        elem_emin=qv[QV_ELEM_EMIN].astype(jnp.int32),
+        elem_max=qv[QV_ELEM_MAX],
+        scale_m=qv[QV_SCALE_M].astype(jnp.int32),
+        scale_emin=qv[QV_SCALE_EMIN].astype(jnp.int32),
+        scale_max=qv[QV_SCALE_MAX],
+        per_tensor=qv[QV_PER_TENSOR] > 0.5,
+        scale_fmt_max=qv[QV_SCALE_FMT_MAX],
+    )
+    return jnp.where(qv[QV_QUANT_ON] > 0.5, xq, x)
+
+
+def _qlinear(x, w, gain, block_size: int, qv: jnp.ndarray):
+    """y = γ · (FQ(x) @ FQ(w̃)): the paper's quantized linear layer.
+
+    x: (..., K); w: (K, F) stored tensor w̃; gain: scalar γ. Weight blocks
+    run along K on the transposed view (per-output-column), activations
+    along their last axis.
+    """
+    act_on = qv[QV_ACT_QUANT] > 0.5
+    xq = jnp.where(act_on, _fq(x, block_size, qv), x)
+    wq = _fq(w.T, block_size, qv).T
+    return (xq @ wq) * gain
+
+
+def _ln(x, g, b):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-5) * g + b
+
+
+def forward(
+    params: Dict[str, jnp.ndarray],
+    tokens: jnp.ndarray,
+    qv: jnp.ndarray,
+    cfg: ModelConfig,
+    block_size: int,
+) -> jnp.ndarray:
+    """Logits (B, S, V) for int32 tokens (B, S) under quant config `qv`."""
+    B, S = tokens.shape
+    D, H = cfg.d_model, cfg.n_heads
+    hd = cfg.head_dim
+    x = params["embed"][tokens] + params["pos"][None, :S, :]
+    mask = jnp.tril(jnp.ones((S, S), jnp.bool_))
+
+    layer_keys = (
+        "ln1_g", "ln1_b", "wq", "wk", "wv", "wo",
+        "ln2_g", "ln2_b", "w1", "w2", "gains",
+    )
+
+    def layer(x, lp):
+        h = _ln(x, lp["ln1_g"], lp["ln1_b"])
+        g = lp["gains"]
+        q = _qlinear(h, lp["wq"], g[0], block_size, qv)
+        k = _qlinear(h, lp["wk"], g[1], block_size, qv)
+        v = _qlinear(h, lp["wv"], g[2], block_size, qv)
+        q = q.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+        k = k.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+        v = v.reshape(B, S, H, hd).transpose(0, 2, 1, 3)
+        # attention matmuls are full-precision (paper App. A)
+        att = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(hd))
+        att = jnp.where(mask[None, None], att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", att, v)
+        o = o.transpose(0, 2, 1, 3).reshape(B, S, D)
+        x = x + _qlinear(o, lp["wo"], g[3], block_size, qv)
+        h2 = _ln(x, lp["ln2_g"], lp["ln2_b"])
+        h2 = _qlinear(h2, lp["w1"], g[4], block_size, qv)
+        h2 = jax.nn.gelu(h2)
+        x = x + _qlinear(h2, lp["w2"], g[5], block_size, qv)
+        return x, None
+
+    stacked = {k: params[k] for k in layer_keys}
+    x, _ = jax.lax.scan(layer, x, stacked)
+    x = _ln(x, params["lnf_g"], params["lnf_b"])
+    # model head is NOT quantized (paper App. A)
+    return x @ params["head"]
+
+
+def nll_loss(
+    params, tokens, qv, cfg: ModelConfig, block_size: int
+) -> jnp.ndarray:
+    """Mean next-token NLL (nats) over a (B, S+1) token batch.
+
+    Perplexity = exp(mean NLL aggregated over batches) — the Rust eval
+    driver aggregates sums, so we also return the token count.
+    """
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    logits = forward(params, inp, qv, cfg, block_size)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, tgt[..., None], axis=-1)[..., 0]
+    return jnp.mean(nll)
+
+
+# -- training (AdamW, full precision: we reproduce PTQ like the paper) ------
+
+
+def adamw_step(
+    params, m, v, step, tokens, lr, wd, cfg: ModelConfig
+) -> Tuple[Any, Any, Any, jnp.ndarray]:
+    """One full-precision AdamW step on the unquantized model.
+
+    step is the 1-based f32 step index (for bias correction). Weight decay
+    applies only to tensors flagged decay=True in `init_specs`.
+    """
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    qv_off = jnp.zeros((QV_LEN,), jnp.float32)  # quant_on = 0
+
+    def loss_fn(p):
+        return nll_loss(p, tokens, qv_off, cfg, block_size=8)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    specs = init_specs(cfg)
+    new_p, new_m, new_v = {}, {}, {}
+    for k in params:
+        g = grads[k]
+        mk = b1 * m[k] + (1 - b1) * g
+        vk = b2 * v[k] + (1 - b2) * jnp.square(g)
+        mhat = mk / (1 - b1**step)
+        vhat = vk / (1 - b2**step)
+        upd = mhat / (jnp.sqrt(vhat) + eps)
+        if specs[k]["decay"]:
+            upd = upd + wd * params[k]
+        new_p[k] = params[k] - lr * upd
+        new_m[k] = mk
+        new_v[k] = vk
+    return new_p, new_m, new_v, loss

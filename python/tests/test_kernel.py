@@ -1,0 +1,104 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle, bit-for-bit.
+
+Hypothesis sweeps shapes, block sizes, formats, and value distributions;
+every case asserts exact equality (the kernel and the oracle share the
+same grid math, so any drift is a bug, not tolerance noise).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import microscale as mk
+from compile.kernels import ref
+
+FORMATS = [
+    ("fp4_e2m1", "ue4m3"),
+    ("fp4_e2m1", "ue5m3"),
+    ("fp4_e2m1", "ue4m4"),
+    ("fp4_e2m1", "ue5m1"),
+    ("fp4_e2m1", "ue4m2"),
+    ("fp4_e2m1", "e8m0"),
+    ("fp4_e2m1", "bf16"),
+    ("int4", "ue4m3"),
+    ("int4", "ue5m3"),
+    ("fp6_e2m3", "ue4m3"),
+    ("fp6_e3m2", "ue5m3"),
+]
+
+
+def _cfg(elem, scale):
+    c = ref.default_qcfg(elem, scale)
+    return {k: v for k, v in c.items() if k not in ("per_tensor", "scale_fmt_max")}
+
+
+def _full_cfg(elem, scale):
+    return ref.default_qcfg(elem, scale)
+
+
+@pytest.mark.parametrize("elem,scale", FORMATS)
+def test_fake_quant_kernel_matches_ref(elem, scale):
+    rng = np.random.default_rng(42)
+    x = rng.normal(0, 0.02, (128, 64)).astype(np.float32)
+    got = mk.fake_quant_pallas(jnp.array(x), 16, _cfg(elem, scale))
+    want = ref.fake_quant(jnp.array(x), 16, **_full_cfg(elem, scale))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("elem,scale", FORMATS[:4])
+def test_qmatmul_kernel_matches_ref(elem, scale):
+    rng = np.random.default_rng(7)
+    x = rng.normal(0, 0.05, (64, 128)).astype(np.float32)
+    w = rng.normal(0, 0.02, (128, 64)).astype(np.float32)
+    got = mk.quantized_matmul_pallas(
+        jnp.array(x), jnp.array(w), 16, _cfg(elem, scale)
+    )
+    want = ref.quantized_matmul(
+        jnp.array(x), jnp.array(w), 16, _full_cfg(elem, scale)
+    )
+    # jnp.dot inside the kernel and the top-level @ use the same XLA CPU
+    # dot; tiles are whole-K so partial sums associate identically.
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=0, atol=1e-6
+    )
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    rows=st.sampled_from([64, 128, 192]),
+    kmul=st.integers(1, 3),
+    bs=st.sampled_from([2, 4, 8, 16, 32]),
+    sigma=st.sampled_from([1e-4, 1e-2, 1.0, 100.0]),
+    fmt=st.sampled_from(FORMATS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fake_quant_kernel_hypothesis(rows, kmul, bs, sigma, fmt, seed):
+    k = bs * kmul * 2
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, sigma, (rows, k)).astype(np.float32)
+    got = mk.fake_quant_pallas(jnp.array(x), bs, _cfg(*fmt), tile_m=64)
+    want = ref.fake_quant(jnp.array(x), bs, **_full_cfg(*fmt))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    bs=st.sampled_from([4, 8, 16]),
+    sigma=st.sampled_from([1e-3, 0.05]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_qmatmul_kernel_hypothesis(bs, sigma, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.normal(0, sigma, (64, 64)).astype(np.float32)
+    w = rng.normal(0, sigma, (64, 64)).astype(np.float32)
+    got = mk.quantized_matmul_pallas(jnp.array(x), jnp.array(w), bs, _cfg(*FORMATS[0]))
+    want = ref.quantized_matmul(jnp.array(x), jnp.array(w), bs, _full_cfg(*FORMATS[0]))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-6)
+
+
+def test_vmem_footprint_within_budget():
+    """Perf contract: default tiles fit a 16 MiB VMEM budget with slack
+    for double buffering (DESIGN.md §Perf)."""
+    total, parts = mk.vmem_footprint_bytes(64, 64, 4096, 32)
+    assert 2 * total < 16 * 2**20, (total, parts)

@@ -1,0 +1,132 @@
+"""L2 model tests: shapes, quant-config plumbing, training step sanity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+CFG = M.ModelConfig(n_layers=2, seq_len=32)
+
+
+def _params(seed=0):
+    rng = np.random.default_rng(seed)
+    out = {}
+    for k, s in M.init_specs(CFG).items():
+        if s["init"] == "normal":
+            out[k] = jnp.array(
+                rng.normal(0, s["std"], s["shape"]).astype(np.float32)
+            )
+        elif s["init"] == "ones":
+            out[k] = jnp.ones(s["shape"], jnp.float32)
+        else:
+            out[k] = jnp.zeros(s["shape"], jnp.float32)
+    return out
+
+
+def _tokens(rng, batch, seqlen):
+    return jnp.array(
+        rng.integers(0, CFG.vocab, (batch, seqlen)).astype(np.int32)
+    )
+
+
+def test_forward_shapes():
+    p = _params()
+    rng = np.random.default_rng(0)
+    t = _tokens(rng, 2, CFG.seq_len)
+    qv = jnp.array(M.qvec(quant_on=False))
+    logits = M.forward(p, t, qv, CFG, block_size=8)
+    assert logits.shape == (2, CFG.seq_len, CFG.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_quant_off_equals_exact():
+    """quant_on=0 must bypass fake-quant entirely (bit-exact baseline)."""
+    p = _params()
+    rng = np.random.default_rng(1)
+    t = _tokens(rng, 2, CFG.seq_len)
+    qv_off = jnp.array(M.qvec(quant_on=False))
+    qv_off2 = jnp.array(M.qvec(scale="ue5m3", quant_on=False))
+    a = M.forward(p, t, qv_off, CFG, 8)
+    b = M.forward(p, t, qv_off2, CFG, 8)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_quant_configs_differ():
+    p = _params()
+    rng = np.random.default_rng(2)
+    t = _tokens(rng, 2, CFG.seq_len)
+    a = M.forward(p, t, jnp.array(M.qvec(scale="ue4m3")), CFG, 8)
+    b = M.forward(p, t, jnp.array(M.qvec(scale="ue5m3")), CFG, 8)
+    c = M.forward(p, t, jnp.array(M.qvec(quant_on=False)), CFG, 8)
+    assert float(jnp.max(jnp.abs(a - c))) > 0
+    assert float(jnp.max(jnp.abs(a - b))) > 0
+
+
+def test_gain_sigma_transform_preserves_function():
+    """DESIGN §1: w̃=w/γ with gain γ leaves the unquantized fwd invariant
+    and (nearly) the quantized fwd too when scales are unquantized."""
+    p = _params()
+    rng = np.random.default_rng(3)
+    t = _tokens(rng, 2, CFG.seq_len)
+    p2 = dict(p)
+    gamma = 0.125  # power of two => exact f32 rescale
+    for k in ("wq", "wk", "wv", "wo", "w1", "w2"):
+        p2[k] = p[k] / gamma
+    p2["gains"] = p["gains"] * gamma
+    qv_off = jnp.array(M.qvec(quant_on=False))
+    a = M.forward(p, t, qv_off, CFG, 8)
+    b = M.forward(p2, t, qv_off, CFG, 8)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    # with BF16 (quasi-continuous) scales, a power-of-two γ is also exact
+    qv_bf = jnp.array(M.qvec(scale="bf16"))
+    aq = M.forward(p, t, qv_bf, CFG, 8)
+    bq = M.forward(p2, t, qv_bf, CFG, 8)
+    np.testing.assert_allclose(np.asarray(aq), np.asarray(bq), atol=1e-5)
+
+
+def test_nll_loss_reasonable_at_init():
+    p = _params()
+    rng = np.random.default_rng(4)
+    t = _tokens(rng, 4, CFG.seq_len + 1)
+    qv = jnp.array(M.qvec(quant_on=False))
+    loss = float(M.nll_loss(p, t, qv, CFG, 8))
+    # near-uniform logits at init: NLL ~ ln(vocab) = ln 256 ~ 5.55
+    assert 4.5 < loss < 6.5, loss
+
+
+def test_adamw_step_decreases_loss():
+    p = _params()
+    m = jax.tree.map(jnp.zeros_like, p)
+    v = jax.tree.map(jnp.zeros_like, p)
+    rng = np.random.default_rng(5)
+    t = _tokens(rng, 8, CFG.seq_len + 1)
+    step_fn = jax.jit(
+        lambda p, m, v, s, t: M.adamw_step(
+            p, m, v, s, t, 1e-3, 0.01, CFG
+        )
+    )
+    losses = []
+    for i in range(8):
+        p, m, v, loss = step_fn(p, m, v, jnp.float32(i + 1), t)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.05, losses
+
+
+def test_qvec_layout_stable():
+    """The Rust runtime hardcodes this layout — lock it."""
+    v = M.qvec("fp4_e2m1", "ue4m3", per_tensor=True)
+    assert v.shape == (11,)
+    assert v[M.QV_QUANT_ON] == 1.0
+    assert v[M.QV_ELEM_MAX] == 6.0
+    assert v[M.QV_SCALE_M] == 3.0
+    assert v[M.QV_SCALE_EMIN] == -6.0
+    assert v[M.QV_SCALE_MAX] == 448.0
+    assert v[M.QV_PER_TENSOR] == 1.0
+    assert v[M.QV_ACT_QUANT] == 1.0
+    v5 = M.qvec("fp4_e2m1", "ue5m3")
+    assert v5[M.QV_SCALE_EMIN] == -14.0
+    assert v5[M.QV_SCALE_MAX] == 122880.0
+    vi = M.qvec("int4", "ue4m3")
+    assert vi[M.QV_ELEM_IS_INT] == 1.0 and vi[M.QV_ELEM_MAX] == 7.0

@@ -1,0 +1,165 @@
+"""Properties of the reference quantizer (`ref.py`) itself.
+
+These are the invariants the paper's formulation relies on (Sec. 2.1,
+App. E/F) plus grid-exactness properties of the minifloat codec.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+ALL_SCALE_FMTS = list(ref.SCALE_FORMATS.values())
+
+
+def _levels(fmt: ref.MiniFloat, count: int = 4096) -> np.ndarray:
+    """Enumerate the first `count` non-negative representable values."""
+    out = [0.0]
+    q = 2.0 ** (fmt.e_min - fmt.m_bits)
+    r = 1
+    # subnormals (levels below f32 MIN_POSITIVE are excluded: the cast
+    # contract flushes f32-subnormal inputs/outputs — see ref.py DAZ note)
+    while r < 2**fmt.m_bits and len(out) < count:
+        if r * q >= 2.0**-126:
+            out.append(r * q)
+        r += 1
+    e = fmt.e_min
+    while len(out) < count:
+        for r in range(2**fmt.m_bits, 2 ** (fmt.m_bits + 1)):
+            v = r * 2.0 ** (e - fmt.m_bits)
+            if v > fmt.max_val or v > 3.0e38 or len(out) >= count:
+                return np.array(out, np.float64)
+            out.append(v)
+        e += 1
+    return np.array(out, np.float64)
+
+
+@pytest.mark.parametrize("fmt", ALL_SCALE_FMTS, ids=lambda f: f.name)
+def test_cast_is_idempotent_on_levels(fmt):
+    lv = _levels(fmt, 600).astype(np.float32)
+    got = np.asarray(ref.cast_minifloat(jnp.array(lv), *fmt.as_tuple()))
+    np.testing.assert_array_equal(got, lv)
+
+
+@pytest.mark.parametrize("fmt", ALL_SCALE_FMTS, ids=lambda f: f.name)
+def test_cast_rounds_to_nearest(fmt):
+    """Random points round to the nearest enumerated level (ties -> even)."""
+    if fmt.name == "bf16":
+        pytest.skip("bf16 level enumeration too large for a dense check")
+    lv = _levels(fmt, 3000)
+    rng = np.random.default_rng(3)
+    hi = min(float(lv[-1]), fmt.max_val)
+    x = (10.0 ** rng.uniform(np.log10(lv[1]) - 1, np.log10(hi), 500)).astype(
+        np.float32
+    )
+    x = x[x <= hi]
+    got = np.asarray(
+        ref.cast_minifloat(jnp.array(x), *fmt.as_tuple())
+    ).astype(np.float64)
+    for xi, gi in zip(x.astype(np.float64), got):
+        err = np.abs(lv - xi)
+        best = err.min()
+        assert abs(gi - xi) <= best + 1e-30, (fmt.name, xi, gi)
+
+
+def test_paper_min_subnormals():
+    """Sec. 2.1 / 5.2 / App. H/J: smallest non-zero representables."""
+    expect = {
+        "ue4m3": 2.0**-9,
+        "ue5m3": 2.0**-17,
+        "ue4m4": 2.0**-10,
+        "ue5m1": 2.0**-15,
+        "ue4m2": 2.0**-8,
+    }
+    for name, want in expect.items():
+        f = ref.SCALE_FORMATS[name]
+        # want is representable; want * 0.51 rounds up to want; 0.49 -> 0
+        assert float(ref.cast_minifloat(jnp.float32(want), *f.as_tuple())) == want
+        assert (
+            float(ref.cast_minifloat(jnp.float32(want * 0.51), *f.as_tuple()))
+            == want
+        )
+        assert (
+            float(ref.cast_minifloat(jnp.float32(want * 0.49), *f.as_tuple()))
+            == 0.0
+        )
+
+
+def test_fp4_level_set():
+    xs = jnp.linspace(-8, 8, 4001)
+    q = np.asarray(ref.cast_signed_minifloat(xs, 1, 0, 6.0))
+    assert set(np.abs(np.unique(q)).tolist()) == {
+        0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0
+    }
+
+
+def test_int4_level_set():
+    xs = jnp.linspace(-9, 9, 1001)
+    q = np.asarray(ref.cast_int_symmetric(xs, 7.0))
+    assert set(np.unique(q).tolist()) == set(float(i) for i in range(-7, 8))
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    bs=st.sampled_from([2, 4, 8, 16, 32]),
+    sigma=st.floats(1e-5, 10.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fake_quant_bounded_error(bs, sigma, seed):
+    """|xhat| is bounded by the block absmax plus one scale-rounding ulp.
+
+    (Note: fake-quant is deliberately NOT asserted idempotent — requantizing
+    the dequantized tensor changes the block absmax and hence the quantized
+    scale, so a second pass can legitimately move values.)
+    """
+    rng = np.random.default_rng(seed)
+    x = (rng.normal(0, sigma, 64)).astype(np.float32).reshape(1, 64)
+    cfg = ref.default_qcfg("fp4_e2m1", "ue4m3")
+    xq = ref.fake_quant(jnp.array(x), bs, **cfg)
+    absmax = np.abs(x).max()
+    # dequantized magnitudes can exceed absmax only via scale round-up
+    # (s <= RNE-up one ulp): bound by (1 + 2^-m) slack plus saturation
+    assert float(jnp.max(jnp.abs(xq))) <= absmax * (1 + 2.0**-3) + 1e-30
+
+
+def test_zero_block_rounds_to_zero():
+    """App. F.3: if absmax/6 < s_min/2, the whole block collapses to 0."""
+    x = jnp.full((1, 8), 6.0 * 2.0**-10 * 0.99, jnp.float32)
+    cfg = ref.default_qcfg("fp4_e2m1", "ue4m3")
+    xq = ref.fake_quant(x, 8, **cfg)
+    assert float(jnp.max(jnp.abs(xq))) == 0.0
+    # ... but UE5M3's extended range still represents it (Sec. 5.2)
+    cfg5 = ref.default_qcfg("fp4_e2m1", "ue5m3")
+    xq5 = ref.fake_quant(x, 8, **cfg5)
+    assert float(jnp.max(jnp.abs(xq5))) > 0.0
+
+
+def test_per_tensor_scaling_rescues_narrow_tensor():
+    """Eq. 11 / Table 1: UE4M3-S beats plain UE4M3 on narrow tensors."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(0, 1e-3, (8, 64)).astype(np.float32)
+    base = ref.default_qcfg("fp4_e2m1", "ue4m3")
+    scaled = ref.default_qcfg("fp4_e2m1", "ue4m3", per_tensor=True)
+    mse = lambda c: float(
+        jnp.mean((ref.fake_quant(jnp.array(x), 8, **c) - x) ** 2)
+    )
+    assert mse(scaled) < mse(base)
+
+
+def test_ue5m3_matches_per_tensor_scaling_on_narrow():
+    """Headline claim (Sec. 5.2): UE5M3 ~ UE4M3-S without the global scale."""
+    rng = np.random.default_rng(1)
+    x = rng.normal(0, 5e-3, (16, 64)).astype(np.float32)
+    m = {}
+    for name, cfg in [
+        ("ue4m3", ref.default_qcfg("fp4_e2m1", "ue4m3")),
+        ("ue4m3s", ref.default_qcfg("fp4_e2m1", "ue4m3", per_tensor=True)),
+        ("ue5m3", ref.default_qcfg("fp4_e2m1", "ue5m3")),
+    ]:
+        m[name] = float(
+            jnp.mean((ref.fake_quant(jnp.array(x), 8, **cfg) - x) ** 2)
+        )
+    assert m["ue5m3"] <= m["ue4m3s"] * 1.05
+    assert m["ue5m3"] < m["ue4m3"]

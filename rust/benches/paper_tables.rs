@@ -1,0 +1,50 @@
+//! Regenerate every table AND figure of the paper (fast grids) — the
+//! deliverable-(d) harness: workload generation, sweeps, baselines, and
+//! the printed rows/series the paper reports. Runtime figures train/load
+//! the model zoo on first use and are cached under results/.
+//!
+//! `cargo bench --bench paper_tables`
+
+use microscale::experiments::{self, Ctx};
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let mut ctx = Ctx::default_dirs(true).expect("ctx");
+    let figures = [
+        "1a", "1b", "2a", "2b", "2c", "3a", "3b", "3c", "4a", "4b", "5a",
+        "5b", "6", "7", "8", "9", "10", "11", "12", "13", "14", "15", "16",
+        "17",
+    ];
+    for id in figures {
+        let t = std::time::Instant::now();
+        match experiments::figure(&mut ctx, id) {
+            Ok(out) => {
+                println!("{out}");
+                println!(
+                    "[figure {id}: {:.1}s]\n",
+                    t.elapsed().as_secs_f64()
+                );
+            }
+            Err(e) => {
+                println!("figure {id} FAILED: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+    for id in ["1", "2", "3"] {
+        let t = std::time::Instant::now();
+        match experiments::table(&mut ctx, id) {
+            Ok(out) => {
+                println!("{out}");
+                println!("[table {id}: {:.1}s]\n", t.elapsed().as_secs_f64());
+            }
+            Err(e) => {
+                println!("table {id} FAILED: {e:#}");
+                std::process::exit(1);
+            }
+        }
+    }
+    println!("{}", experiments::hwx::appendix_k());
+    println!("{}", experiments::hwx::sec31_costs());
+    println!("total: {:.1}s", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,69 @@
+//! L3 hot-path micro-benchmarks: minifloat casts, the block quantizer
+//! across formats and block sizes, and the quantized GEMM.
+//!
+//! `cargo bench --bench quant_bench` — results quoted in
+//! EXPERIMENTS.md §Perf.
+
+use std::time::Duration;
+
+use microscale::dist::Pcg64;
+use microscale::formats::{ElemFormat, E8M0, UE4M3, UE5M3};
+use microscale::quant::matmul::quantized_matmul;
+use microscale::quant::{fake_quant_into, QuantScheme};
+use microscale::util::timer::{bench, black_box};
+
+fn main() {
+    let budget = Duration::from_millis(400);
+    let mut rng = Pcg64::new(1);
+    let n = 1 << 16;
+    let x = rng.normal_vec_f32(n, 0.02);
+
+    println!("== minifloat cast (65,536 elements/iter) ==");
+    for fmt in [UE4M3, UE5M3, E8M0] {
+        let data = x.clone();
+        let r = bench(&format!("cast/{}", fmt.name), budget, || {
+            let mut acc = 0.0f32;
+            for &v in &data {
+                acc += fmt.cast(v.abs());
+            }
+            black_box(acc);
+        });
+        println!(
+            "    -> {:.0} Melem/s",
+            r.throughput(n as f64) / 1e6
+        );
+    }
+
+    println!("\n== block fake-quant (65,536 elements/iter) ==");
+    for (elem, name) in [(ElemFormat::FP4, "fp4"), (ElemFormat::INT4, "int4")] {
+        for bs in [8usize, 16, 32, 128] {
+            let scheme = QuantScheme::new(elem, UE4M3, bs);
+            let mut buf = x.clone();
+            let r = bench(
+                &format!("fake_quant/{name}/ue4m3/bs{bs}"),
+                budget,
+                || {
+                    buf.copy_from_slice(&x);
+                    black_box(fake_quant_into(&scheme, &mut buf));
+                },
+            );
+            println!(
+                "    -> {:.0} Melem/s",
+                r.throughput(n as f64) / 1e6
+            );
+        }
+    }
+
+    println!("\n== quantized GEMM 128x128x128 ==");
+    let m = 128;
+    let a = rng.normal_vec_f32(m * m, 0.05);
+    let b = rng.normal_vec_f32(m * m, 0.02);
+    let scheme = QuantScheme::new(ElemFormat::FP4, UE4M3, 16);
+    let r = bench("qmatmul/fp4/ue4m3/bs16/128^3", budget, || {
+        black_box(quantized_matmul(&scheme, &a, &b, m, m, m));
+    });
+    println!(
+        "    -> {:.2} GFLOP/s equivalent",
+        r.throughput(2.0 * (m * m * m) as f64) / 1e9
+    );
+}

@@ -1,0 +1,59 @@
+//! Theory-framework benchmarks: per-σ-point cost and full-figure sweeps
+//! (the integration must stay fast enough to use interactively for
+//! format exploration — Sec. 4.3).
+
+use std::time::Duration;
+
+use microscale::formats::{ElemFormat, UE4M3, UE5M3};
+use microscale::stats::geomspace;
+use microscale::theory;
+use microscale::util::timer::{bench, black_box};
+
+fn main() {
+    let budget = Duration::from_millis(500);
+    println!("== single MSE(σ) evaluations ==");
+    for (name, sigma, n) in [
+        ("mid-sigma/bs16", 0.02, 16),
+        ("narrow-sigma/bs8", 1e-3, 8),
+        ("wide-sigma/bs32", 0.5, 32),
+    ] {
+        bench(&format!("quantized_scales/{name}"), budget, || {
+            black_box(theory::mse_quantized_scales(
+                &ElemFormat::FP4,
+                &UE4M3,
+                sigma,
+                n,
+            ));
+        });
+    }
+    bench("unquantized_scales/bs16", budget, || {
+        black_box(theory::mse_unquantized_scales(&ElemFormat::FP4, 0.02, 16));
+    });
+
+    println!("\n== full Fig. 11-style sweep (48 σ-points x 4 block sizes) ==");
+    let sigmas = geomspace(1e-4, 2.0, 48);
+    bench("fig11_sweep/ue4m3", Duration::from_secs(2), || {
+        for n in [4usize, 8, 16, 32] {
+            for &s in &sigmas {
+                black_box(theory::mse_quantized_scales(
+                    &ElemFormat::FP4,
+                    &UE4M3,
+                    s,
+                    n,
+                ));
+            }
+        }
+    });
+    bench("fig11_sweep/ue5m3", Duration::from_secs(2), || {
+        for n in [4usize, 8, 16, 32] {
+            for &s in &sigmas {
+                black_box(theory::mse_quantized_scales(
+                    &ElemFormat::FP4,
+                    &UE5M3,
+                    s,
+                    n,
+                ));
+            }
+        }
+    });
+}

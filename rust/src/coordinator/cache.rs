@@ -1,0 +1,111 @@
+//! Persistent result cache: JSON file keyed by job key.
+//!
+//! Figures re-run incrementally: a sweep first consults the cache, then
+//! computes only the missing points, flushing after each completion so an
+//! interrupted run loses nothing.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+pub struct ResultCache {
+    path: PathBuf,
+    entries: BTreeMap<String, Json>,
+    dirty: usize,
+    flush_every: usize,
+}
+
+impl ResultCache {
+    pub fn open(path: &Path) -> Result<ResultCache> {
+        let entries = if path.exists() {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading cache {path:?}"))?;
+            match Json::parse(&text) {
+                Ok(Json::Obj(m)) => m,
+                _ => {
+                    log::warn!("cache {path:?} unreadable; starting fresh");
+                    BTreeMap::new()
+                }
+            }
+        } else {
+            BTreeMap::new()
+        };
+        Ok(ResultCache { path: path.to_path_buf(), entries, dirty: 0, flush_every: 32 })
+    }
+
+    /// In-memory cache (tests).
+    pub fn ephemeral() -> ResultCache {
+        ResultCache {
+            path: PathBuf::new(),
+            entries: BTreeMap::new(),
+            dirty: 0,
+            flush_every: usize::MAX,
+        }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        self.entries.get(key)
+    }
+
+    pub fn put(&mut self, key: String, value: Json) {
+        self.entries.insert(key, value);
+        self.dirty += 1;
+        if self.dirty >= self.flush_every {
+            if let Err(e) = self.flush() {
+                log::warn!("cache flush failed: {e:#}");
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    pub fn flush(&mut self) -> Result<()> {
+        if self.path.as_os_str().is_empty() {
+            return Ok(());
+        }
+        if let Some(dir) = self.path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let tmp = self.path.with_extension("tmp");
+        std::fs::write(&tmp, Json::Obj(self.entries.clone()).to_string())?;
+        std::fs::rename(&tmp, &self.path)?;
+        self.dirty = 0;
+        Ok(())
+    }
+}
+
+impl Drop for ResultCache {
+    fn drop(&mut self) {
+        let _ = self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::num;
+
+    #[test]
+    fn roundtrip_through_disk() {
+        let path = std::env::temp_dir().join("microscale_cache_test.json");
+        std::fs::remove_file(&path).ok();
+        {
+            let mut c = ResultCache::open(&path).unwrap();
+            c.put("a/b".into(), num(1.5));
+            c.flush().unwrap();
+        }
+        let c = ResultCache::open(&path).unwrap();
+        assert_eq!(c.get("a/b").unwrap().as_f64().unwrap(), 1.5);
+        assert!(c.get("missing").is_none());
+        std::fs::remove_file(&path).ok();
+    }
+}

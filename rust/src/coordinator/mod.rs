@@ -1,0 +1,22 @@
+//! Experiment coordinator: the L3 orchestration runtime.
+//!
+//! Every figure/table of the paper is a *sweep* — a deterministic
+//! expansion into jobs (one per (model, format, block size, σ, ...)
+//! point). The coordinator:
+//!
+//! * expands sweeps into keyed [`spec::Job`]s,
+//! * serves results from a persistent JSON [`cache`] (re-running a figure
+//!   is incremental: only missing points compute),
+//! * executes CPU-pure jobs on a [`pool`] of workers with a bounded queue
+//!   (backpressure) and panic isolation, while PJRT-bound jobs run on the
+//!   coordinator thread (the PJRT client is not Sync),
+//! * streams results to CSV/JSON [`sink`]s consumed by EXPERIMENTS.md.
+
+pub mod cache;
+pub mod pool;
+pub mod sink;
+pub mod spec;
+
+pub use cache::ResultCache;
+pub use pool::Pool;
+pub use spec::{Job, JobOutput};

@@ -1,0 +1,257 @@
+//! Worker pool with a bounded queue, panic isolation and result caching.
+//!
+//! Pure jobs fan out to `std::thread` workers over a bounded channel
+//! (backpressure: submission blocks when the queue is full); PJRT-bound
+//! jobs run inline on the coordinator thread because the client is not
+//! Sync. On this sandbox (1 core) the pool degenerates gracefully to
+//! sequential execution, but the structure is what a multi-core deploy
+//! uses.
+
+use std::collections::VecDeque;
+use std::panic::AssertUnwindSafe;
+use std::sync::{Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+
+use super::cache::ResultCache;
+use super::spec::{Job, JobOutput};
+use crate::util::json::Json;
+
+/// Minimal bounded MPMC channel (std::sync::mpsc has no bounded MPMC and
+/// crossbeam-channel is not vendored).
+struct Bounded<T> {
+    q: Mutex<(VecDeque<T>, bool)>, // (queue, closed)
+    not_full: Condvar,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+impl<T> Bounded<T> {
+    fn new(cap: usize) -> Self {
+        Bounded {
+            q: Mutex::new((VecDeque::new(), false)),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            cap,
+        }
+    }
+
+    fn send(&self, item: T) {
+        let mut g = self.q.lock().unwrap();
+        while g.0.len() >= self.cap {
+            g = self.not_full.wait(g).unwrap();
+        }
+        g.0.push_back(item);
+        self.not_empty.notify_one();
+    }
+
+    fn recv(&self) -> Option<T> {
+        let mut g = self.q.lock().unwrap();
+        loop {
+            if let Some(item) = g.0.pop_front() {
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.1 {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    fn close(&self) {
+        let mut g = self.q.lock().unwrap();
+        g.1 = true;
+        self.not_empty.notify_all();
+    }
+}
+
+/// Execution pool configuration.
+pub struct Pool {
+    pub workers: usize,
+    pub queue_cap: usize,
+    pub progress: bool,
+}
+
+impl Default for Pool {
+    fn default() -> Self {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1);
+        Pool { workers, queue_cap: 2 * workers.max(1), progress: true }
+    }
+}
+
+impl Pool {
+    /// Run `jobs`, serving repeats from `cache`. Results are returned in
+    /// the original job order. Pure jobs run on workers; runtime jobs run
+    /// inline after the pure jobs are dispatched.
+    pub fn run(
+        &self,
+        jobs: Vec<Job>,
+        cache: &mut ResultCache,
+    ) -> Result<Vec<JobOutput>> {
+        let total = jobs.len();
+        let mut outputs: Vec<Option<JobOutput>> = Vec::new();
+        outputs.resize_with(total, || None);
+
+        let mut pure_jobs = Vec::new();
+        let mut inline_jobs = Vec::new();
+        for (idx, job) in jobs.into_iter().enumerate() {
+            if let Some(v) = cache.get(&job.key) {
+                outputs[idx] = Some(JobOutput {
+                    key: job.key,
+                    value: v.clone(),
+                    seconds: 0.0,
+                    from_cache: true,
+                });
+            } else if job.pure {
+                pure_jobs.push((idx, job));
+            } else {
+                inline_jobs.push((idx, job));
+            }
+        }
+        let fresh = pure_jobs.len() + inline_jobs.len();
+        if self.progress && total > 0 {
+            log::info!(
+                "pool: {total} jobs ({} cached, {fresh} to run, {} workers)",
+                total - fresh,
+                self.workers
+            );
+        }
+
+        // -- pure jobs on workers ---------------------------------------
+        if !pure_jobs.is_empty() {
+            let chan: Bounded<(usize, Job)> = Bounded::new(self.queue_cap);
+            let results: Mutex<Vec<(usize, String, Result<Json>, f64)>> =
+                Mutex::new(Vec::new());
+            crossbeam_utils::thread::scope(|s| {
+                for _ in 0..self.workers.max(1) {
+                    s.spawn(|_| {
+                        while let Some((idx, job)) = chan.recv() {
+                            let t = Instant::now();
+                            let key = job.key;
+                            let run = job.run;
+                            let r = std::panic::catch_unwind(
+                                AssertUnwindSafe(run),
+                            )
+                            .unwrap_or_else(|p| {
+                                Err(anyhow!(
+                                    "job panicked: {}",
+                                    panic_msg(&p)
+                                ))
+                            });
+                            results.lock().unwrap().push((
+                                idx,
+                                key,
+                                r,
+                                t.elapsed().as_secs_f64(),
+                            ));
+                        }
+                    });
+                }
+                for item in pure_jobs {
+                    chan.send(item);
+                }
+                chan.close();
+            })
+            .map_err(|_| anyhow!("worker panicked irrecoverably"))?;
+            for (idx, key, r, secs) in results.into_inner().unwrap() {
+                let value = r?;
+                cache.put(key.clone(), value.clone());
+                outputs[idx] =
+                    Some(JobOutput { key, value, seconds: secs, from_cache: false });
+            }
+        }
+
+        // -- runtime jobs inline ------------------------------------------
+        let n_inline = inline_jobs.len();
+        for (done, (idx, job)) in inline_jobs.into_iter().enumerate() {
+            let t = Instant::now();
+            let key = job.key.clone();
+            let value = (job.run)()?;
+            cache.put(key.clone(), value.clone());
+            if self.progress && (done % 8 == 0 || done + 1 == n_inline) {
+                log::info!(
+                    "  [{}/{}] {key} ({:.1}s)",
+                    done + 1,
+                    n_inline,
+                    t.elapsed().as_secs_f64()
+                );
+            }
+            outputs[idx] = Some(JobOutput {
+                key,
+                value,
+                seconds: t.elapsed().as_secs_f64(),
+                from_cache: false,
+            });
+        }
+        cache.flush()?;
+        Ok(outputs.into_iter().map(|o| o.unwrap()).collect())
+    }
+}
+
+fn panic_msg(p: &Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        s.to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "<non-string panic>".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::num;
+
+    #[test]
+    fn runs_and_caches() {
+        let mut cache = ResultCache::ephemeral();
+        let jobs: Vec<Job> = (0..20)
+            .map(|i| {
+                Job::pure(format!("sq/{i}"), move || Ok(num((i * i) as f64)))
+            })
+            .collect();
+        let pool = Pool { workers: 3, queue_cap: 4, progress: false };
+        let out = pool.run(jobs, &mut cache).unwrap();
+        assert_eq!(out.len(), 20);
+        for (i, o) in out.iter().enumerate() {
+            assert_eq!(o.value.as_f64().unwrap(), (i * i) as f64);
+            assert!(!o.from_cache);
+        }
+        // second run: everything cached
+        let jobs: Vec<Job> = (0..20)
+            .map(|i| Job::pure(format!("sq/{i}"), move || Ok(num(-1.0))))
+            .collect();
+        let out = pool.run(jobs, &mut cache).unwrap();
+        assert!(out.iter().all(|o| o.from_cache));
+        assert_eq!(out[3].value.as_f64().unwrap(), 9.0);
+    }
+
+    #[test]
+    fn job_panic_is_an_error_not_a_crash() {
+        let mut cache = ResultCache::ephemeral();
+        let jobs = vec![Job::pure("boom", || panic!("kapow"))];
+        let pool = Pool { workers: 2, queue_cap: 2, progress: false };
+        let err = pool.run(jobs, &mut cache).unwrap_err();
+        assert!(format!("{err:#}").contains("kapow"));
+    }
+
+    #[test]
+    fn preserves_order_with_mixed_kinds() {
+        let mut cache = ResultCache::ephemeral();
+        let jobs = vec![
+            Job::pure("a", || Ok(num(1.0))),
+            Job::runtime("b", || Ok(num(2.0))),
+            Job::pure("c", || Ok(num(3.0))),
+        ];
+        let pool = Pool { workers: 2, queue_cap: 2, progress: false };
+        let out = pool.run(jobs, &mut cache).unwrap();
+        let vals: Vec<f64> =
+            out.iter().map(|o| o.value.as_f64().unwrap()).collect();
+        assert_eq!(vals, vec![1.0, 2.0, 3.0]);
+    }
+}

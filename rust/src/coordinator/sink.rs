@@ -1,0 +1,94 @@
+//! Result sinks: CSV series and JSON documents under `results/`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Directory layout helper for experiment outputs.
+pub struct Sink {
+    pub dir: PathBuf,
+}
+
+impl Sink {
+    pub fn new(dir: &Path) -> Result<Sink> {
+        std::fs::create_dir_all(dir)
+            .with_context(|| format!("creating {dir:?}"))?;
+        Ok(Sink { dir: dir.to_path_buf() })
+    }
+
+    /// Write a CSV with a header row; cells are formatted with enough
+    /// precision to round-trip f64.
+    pub fn csv(
+        &self,
+        name: &str,
+        header: &[&str],
+        rows: &[Vec<String>],
+    ) -> Result<PathBuf> {
+        let path = self.dir.join(format!("{name}.csv"));
+        let mut out = String::new();
+        out.push_str(&header.join(","));
+        out.push('\n');
+        for r in rows {
+            out.push_str(&r.join(","));
+            out.push('\n');
+        }
+        std::fs::write(&path, out)?;
+        Ok(path)
+    }
+
+    pub fn json(&self, name: &str, value: &Json) -> Result<PathBuf> {
+        let path = self.dir.join(format!("{name}.json"));
+        std::fs::write(&path, value.to_string())?;
+        Ok(path)
+    }
+
+    pub fn text(&self, name: &str, body: &str) -> Result<PathBuf> {
+        let path = self.dir.join(name);
+        std::fs::write(&path, body)?;
+        Ok(path)
+    }
+}
+
+pub fn fmt_g(v: f64) -> String {
+    if v == 0.0 {
+        return "0".to_string();
+    }
+    let a = v.abs();
+    if (1e-4..1e7).contains(&a) {
+        let s = format!("{v:.6}");
+        s.trim_end_matches('0').trim_end_matches('.').to_string()
+    } else {
+        format!("{v:.6e}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("microscale_sink_test");
+        let s = Sink::new(&dir).unwrap();
+        let p = s
+            .csv(
+                "t",
+                &["a", "b"],
+                &[vec!["1".into(), "2".into()], vec!["3".into(), "4".into()]],
+            )
+            .unwrap();
+        let text = std::fs::read_to_string(p).unwrap();
+        assert_eq!(text, "a,b\n1,2\n3,4\n");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn fmt_g_reasonable() {
+        assert_eq!(fmt_g(0.0), "0");
+        assert_eq!(fmt_g(1.5), "1.5");
+        assert_eq!(fmt_g(2.0), "2");
+        assert!(fmt_g(1.23e-9).contains('e'));
+    }
+}

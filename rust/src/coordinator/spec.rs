@@ -1,0 +1,41 @@
+//! Job specification: a keyed unit of experiment work.
+
+use crate::util::json::Json;
+
+/// A unit of work with a stable cache key.
+pub struct Job {
+    /// Stable, human-readable cache key, e.g.
+    /// `mse_sigma/normal/fp4_e2m1/ue4m3/bs8/s=0.02/n=65536/seed=3`.
+    pub key: String,
+    /// Pure CPU jobs may run on pool workers; runtime jobs (PJRT) must
+    /// run on the coordinator thread.
+    pub pure: bool,
+    /// The work itself; returns a JSON result payload.
+    pub run: Box<dyn FnOnce() -> anyhow::Result<Json> + Send>,
+}
+
+impl Job {
+    pub fn pure<F>(key: impl Into<String>, f: F) -> Job
+    where
+        F: FnOnce() -> anyhow::Result<Json> + Send + 'static,
+    {
+        Job { key: key.into(), pure: true, run: Box::new(f) }
+    }
+
+    pub fn runtime<F>(key: impl Into<String>, f: F) -> Job
+    where
+        F: FnOnce() -> anyhow::Result<Json> + Send + 'static,
+    {
+        Job { key: key.into(), pure: false, run: Box::new(f) }
+    }
+}
+
+/// A completed job.
+#[derive(Debug, Clone)]
+pub struct JobOutput {
+    pub key: String,
+    pub value: Json,
+    /// wall seconds (0 when served from cache)
+    pub seconds: f64,
+    pub from_cache: bool,
+}

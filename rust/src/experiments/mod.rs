@@ -1,0 +1,152 @@
+//! Figure/table generators: one entry point per paper artifact.
+//!
+//! `DESIGN.md §4` maps every figure and table of the paper to a generator
+//! here; the CLI (`microscale figure <id>` / `table <id>`) and the
+//! `paper_tables` bench target both dispatch into this module. Results are
+//! cached in `results/cache.json` (sweeps re-run incrementally) and
+//! rendered as aligned tables + ASCII log-log plots, with CSVs under
+//! `results/`.
+
+pub mod hwx;
+pub mod ppl;
+pub mod synth;
+pub mod theory_figs;
+
+use std::cell::OnceCell;
+use std::path::PathBuf;
+
+use anyhow::{Context as _, Result};
+
+use crate::coordinator::sink::Sink;
+use crate::coordinator::{Pool, ResultCache};
+use crate::runtime::{Manifest, Session};
+use crate::util::json::Json;
+
+/// Shared experiment context: directories, cache, worker pool, lazy PJRT
+/// session.
+pub struct Ctx {
+    pub artifacts_dir: PathBuf,
+    pub results_dir: PathBuf,
+    pub models_dir: PathBuf,
+    /// reduce sample counts / grids (bench + smoke runs)
+    pub fast: bool,
+    /// training steps for the base model (experiments needing ppl)
+    pub train_steps: usize,
+    pub pool: Pool,
+    pub cache: ResultCache,
+    session: OnceCell<Session>,
+}
+
+impl Ctx {
+    pub fn new(
+        artifacts_dir: PathBuf,
+        results_dir: PathBuf,
+        models_dir: PathBuf,
+        fast: bool,
+    ) -> Result<Ctx> {
+        std::fs::create_dir_all(&results_dir).ok();
+        std::fs::create_dir_all(&models_dir).ok();
+        let cache = ResultCache::open(&results_dir.join("cache.json"))?;
+        Ok(Ctx {
+            artifacts_dir,
+            results_dir,
+            models_dir,
+            fast,
+            train_steps: 240,
+            pool: Pool::default(),
+            cache,
+            session: OnceCell::new(),
+        })
+    }
+
+    pub fn default_dirs(fast: bool) -> Result<Ctx> {
+        Ctx::new(
+            PathBuf::from("artifacts"),
+            PathBuf::from("results"),
+            PathBuf::from("models"),
+            fast,
+        )
+    }
+
+    pub fn sink(&self) -> Result<Sink> {
+        Sink::new(&self.results_dir)
+    }
+
+    /// Lazily opened PJRT session (only figures needing the model pay
+    /// for client + compilation).
+    pub fn session(&self) -> Result<&Session> {
+        if self.session.get().is_none() {
+            let m = Manifest::load(&self.artifacts_dir)
+                .context("loading artifact manifest")?;
+            let s = Session::open(m)?;
+            let _ = self.session.set(s);
+        }
+        Ok(self.session.get().unwrap())
+    }
+
+    /// Cache-through execution for runtime-bound (non-Send) work.
+    pub fn cached<F>(&mut self, key: &str, f: F) -> Result<Json>
+    where
+        F: FnOnce(&Self) -> Result<Json>,
+    {
+        if let Some(v) = self.cache.get(key) {
+            return Ok(v.clone());
+        }
+        let t = std::time::Instant::now();
+        let v = f(self)?;
+        log::info!("  {key} ({:.1}s)", t.elapsed().as_secs_f64());
+        self.cache.put(key.to_string(), v.clone());
+        Ok(v)
+    }
+}
+
+/// Dispatch a figure id to its generator; returns the rendered text.
+pub fn figure(ctx: &mut Ctx, id: &str) -> Result<String> {
+    match id {
+        "1a" => ppl::fig1(ctx, "bf16", "Figure 1(a): perplexity gap vs block size, BF16 (non-quantized) scales"),
+        "1b" => ppl::fig1(ctx, "ue4m3", "Figure 1(b): perplexity gap vs block size, FP8 UE4M3 scales"),
+        "2a" => synth::fig2a(ctx),
+        "2b" => synth::fig2bc(ctx, "ue4m3"),
+        "2c" => synth::fig2bc(ctx, "bf16"),
+        "3a" => synth::fig3a(ctx),
+        "3b" => synth::fig3b(ctx),
+        "3c" => theory_figs::fig3c(ctx),
+        "4a" => Ok(hwx::fig4a()),
+        "4b" | "4c" => ppl::fig4bc(ctx),
+        "5a" => ppl::fig5a(ctx),
+        "5b" => ppl::fig5b(ctx),
+        "6" => synth::fig6(ctx),
+        "7" => synth::fig7(ctx),
+        "8" => synth::fig8(ctx),
+        "9" => synth::fig9(ctx),
+        "10" => theory_figs::fig10(ctx),
+        "11" => theory_figs::fig11(ctx),
+        "12" => theory_figs::fig12(ctx),
+        "13" => theory_figs::fig13(ctx),
+        "14" => ppl::fig14(ctx),
+        "15" => theory_figs::fig15(ctx),
+        "16" => ppl::fig16(ctx),
+        "17" => ppl::fig17(ctx),
+        _ => anyhow::bail!("unknown figure {id:?} (see DESIGN.md §4)"),
+    }
+}
+
+/// Dispatch a table id.
+pub fn table(ctx: &mut Ctx, id: &str) -> Result<String> {
+    match id {
+        "1" => ppl::table1or3(ctx, 8),
+        "2" => ppl::table2(ctx),
+        "3" => ppl::table1or3(ctx, 16),
+        _ => anyhow::bail!("unknown table {id:?}"),
+    }
+}
+
+/// Figures that need no PJRT runtime (pure quant/theory/dist).
+pub const PURE_FIGURES: [&str; 14] = [
+    "2a", "2b", "2c", "3a", "3b", "3c", "4a", "6", "7", "8", "9", "10",
+    "11", "12",
+];
+/// Figures/tables driven by model evaluation through the runtime.
+pub const RUNTIME_FIGURES: [&str; 9] =
+    ["1a", "1b", "4b", "5a", "5b", "14", "16", "17", "13"];
+pub const ALL_TABLES: [&str; 3] = ["1", "2", "3"];

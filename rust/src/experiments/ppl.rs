@@ -1,0 +1,480 @@
+//! Perplexity / accuracy experiments through the PJRT runtime
+//! (Figs. 1, 4(b,c), 5, 14, 16, 17; Tables 1–3).
+//!
+//! Models: one base transformer trained in-repo on the synthetic corpus,
+//! plus σ-transformed zoo variants standing in for the paper's model
+//! suite (DESIGN.md §1). Every (model, format, block size) point is
+//! cached, so figures sharing points (1b/5a/16...) reuse evaluations.
+
+use std::cell::OnceCell;
+
+use anyhow::Result;
+
+use super::Ctx;
+use crate::model::weights::Params;
+use crate::model::zoo;
+use crate::model::Corpus;
+use crate::report::Table;
+use crate::runtime::eval::{self, DeviceParams};
+use crate::runtime::train::{train, TrainConfig};
+use crate::runtime::QConfig;
+use crate::util::json::{num, Json};
+
+/// The model-suite stand-ins used in ppl experiments.
+pub const MODELS: [&str; 4] = [
+    "granite-like",
+    "llama2-like",
+    "llama3-like",
+    "mamba-codestral-like",
+];
+
+const EVAL_SEED: u64 = 4242;
+const PROBE_SEED: u64 = 777;
+
+pub struct ModelEntry {
+    pub name: String,
+    pub params: Params,
+    dev: OnceCell<DeviceParams>,
+}
+
+impl ModelEntry {
+    fn dev(&self, ctx: &Ctx) -> Result<&DeviceParams> {
+        if self.dev.get().is_none() {
+            let d = DeviceParams::upload(ctx.session()?, &self.params)?;
+            let _ = self.dev.set(d);
+        }
+        Ok(self.dev.get().unwrap())
+    }
+}
+
+fn n_eval_batches(ctx: &Ctx) -> usize {
+    if ctx.fast {
+        2
+    } else {
+        8
+    }
+}
+
+fn block_sweep(ctx: &Ctx) -> Vec<usize> {
+    if ctx.fast {
+        vec![2, 8, 16, 32, 128]
+    } else {
+        vec![2, 4, 8, 16, 32, 64, 128]
+    }
+}
+
+/// Train (or load) the base model and build the σ-transformed zoo.
+pub fn ensure_models(ctx: &mut Ctx) -> Result<Vec<ModelEntry>> {
+    let steps = if ctx.fast { 60 } else { ctx.train_steps };
+    let base_path = ctx.models_dir.join(format!("base-s{steps}.bin"));
+    let base = if base_path.exists() {
+        Params::load(&base_path)?
+    } else {
+        log::info!("training base model ({steps} steps)...");
+        let sess = ctx.session()?;
+        let m = sess.manifest().clone();
+        let corpus = Corpus::default_language(m.model.vocab);
+        let init = Params::init(&m, 2026);
+        let cfg = TrainConfig {
+            steps,
+            lr: 1.5e-3,
+            warmup: steps / 10 + 1,
+            weight_decay: 0.01,
+            seed: 1,
+            log_every: (steps / 10).max(1),
+        };
+        let (trained, curve) = train(sess, &corpus, &init, &cfg)?;
+        trained.save(&base_path)?;
+        // persist the loss curve for EXPERIMENTS.md
+        let rows: Vec<Vec<String>> = curve
+            .iter()
+            .map(|p| {
+                vec![p.step.to_string(), format!("{:.4}", p.loss), format!("{:.2e}", p.lr)]
+            })
+            .collect();
+        ctx.sink()?.csv("train_loss_curve", &["step", "loss", "lr"], &rows)?;
+        trained
+    };
+
+    let n_layers = {
+        let sess = ctx.session()?;
+        sess.manifest().model.n_layers
+    };
+    let mut out = Vec::new();
+    for name in MODELS {
+        let path = ctx.models_dir.join(format!("{name}-s{steps}.bin"));
+        let params = if path.exists() {
+            Params::load(&path)?
+        } else {
+            let mut p = base.clone();
+            let prof = zoo::profile(name).unwrap();
+            zoo::apply_sigma_profile(&mut p, n_layers, &prof, 0xA11CE);
+            p.save(&path)?;
+            p
+        };
+        out.push(ModelEntry {
+            name: name.to_string(),
+            params,
+            dev: OnceCell::new(),
+        });
+    }
+    Ok(out)
+}
+
+/// One cached perplexity point.
+pub fn ppl_point(
+    ctx: &mut Ctx,
+    model: &ModelEntry,
+    qcfg: &QConfig,
+    bs: usize,
+) -> Result<f64> {
+    let nb = n_eval_batches(ctx);
+    let steps = if ctx.fast { 60 } else { ctx.train_steps };
+    let key = format!(
+        "ppl/s{steps}/{}/{}/bs{bs}/eb{nb}/seed{EVAL_SEED}",
+        model.name,
+        qcfg.id()
+    );
+    let v = ctx.cached(&key, |c| {
+        let sess = c.session()?;
+        let m = sess.manifest();
+        let corpus = Corpus::default_language(m.model.vocab);
+        let batches =
+            corpus.batches(EVAL_SEED, nb, m.eval_batch, m.model.seq_len + 1);
+        let p =
+            eval::perplexity(sess, model.dev(c)?, qcfg, bs, &batches)?;
+        Ok(num(p))
+    })?;
+    v.as_f64()
+}
+
+/// Figs. 1(a)/1(b): perplexity gap vs block size across the model suite.
+pub fn fig1(ctx: &mut Ctx, scale_name: &str, title: &str) -> Result<String> {
+    let models = ensure_models(ctx)?;
+    let sweep = block_sweep(ctx);
+    let qcfg = QConfig::fp4(scale_name)?;
+    let base_cfg = QConfig::baseline();
+    let mut t = Table::new(
+        title,
+        &[&["block size"][..], &MODELS].concat(),
+    );
+    let mut gaps: Vec<Vec<f64>> = Vec::new();
+    for &bs in &sweep {
+        let mut row = vec![bs.to_string()];
+        let mut grow = Vec::new();
+        for m in &models {
+            let base = ppl_point(ctx, m, &base_cfg, 8)?;
+            let q = ppl_point(ctx, m, &qcfg, bs)?;
+            row.push(format!("{:+.3}", q - base));
+            grow.push(q - base);
+        }
+        t.row(row);
+        gaps.push(grow);
+    }
+    let mut verdicts = String::new();
+    for (j, name) in MODELS.iter().enumerate() {
+        // inversion = the gap at the smallest bs exceeds the minimum gap
+        let col: Vec<f64> = gaps.iter().map(|r| r[j]).collect();
+        let min = col.iter().cloned().fold(f64::INFINITY, f64::min);
+        let inverted = col[0] > min * 1.02 + 2e-3;
+        verdicts.push_str(&format!(
+            "  {name}: {}\n",
+            if inverted {
+                "perplexity INVERSION at small bs"
+            } else {
+                "monotone (no inversion in range)"
+            }
+        ));
+    }
+    Ok(format!("{}{verdicts}", t.render()))
+}
+
+/// Fig. 4(b,c): ppl vs bs with UE5M3 vs UE4M3 / UE4M3-S on two models.
+pub fn fig4bc(ctx: &mut Ctx) -> Result<String> {
+    let models = ensure_models(ctx)?;
+    let sweep = block_sweep(ctx);
+    let mut out = String::new();
+    for want in ["granite-like", "llama3-like"] {
+        let m = models.iter().find(|m| m.name == want).unwrap();
+        let mut t = Table::new(
+            &format!("Figure 4(b/c): perplexity vs block size — {want}"),
+            &["block size", "UE4M3", "UE4M3-S", "UE5M3 (ours)", "BF16 base"],
+        );
+        let base = ppl_point(ctx, m, &QConfig::baseline(), 8)?;
+        for &bs in &sweep {
+            t.row(vec![
+                bs.to_string(),
+                format!("{:.3}", ppl_point(ctx, m, &QConfig::fp4("ue4m3")?, bs)?),
+                format!(
+                    "{:.3}",
+                    ppl_point(
+                        ctx,
+                        m,
+                        &QConfig::fp4("ue4m3")?.with_per_tensor(true),
+                        bs
+                    )?
+                ),
+                format!("{:.3}", ppl_point(ctx, m, &QConfig::fp4("ue5m3")?, bs)?),
+                format!("{base:.3}"),
+            ]);
+        }
+        out.push_str(&t.render());
+    }
+    Ok(out)
+}
+
+/// Fig. 5(a): the fig-1(b) data on a log-gap scale (dominant inversions).
+pub fn fig5a(ctx: &mut Ctx) -> Result<String> {
+    let models = ensure_models(ctx)?;
+    let sweep = block_sweep(ctx);
+    let qcfg = QConfig::fp4("ue4m3")?;
+    let mut t = Table::new(
+        "Figure 5(a): log10 perplexity gap vs block size (FP4+UE4M3)",
+        &[&["block size"][..], &MODELS].concat(),
+    );
+    for &bs in &sweep {
+        let mut row = vec![bs.to_string()];
+        for m in &models {
+            let base = ppl_point(ctx, m, &QConfig::baseline(), 8)?;
+            let q = ppl_point(ctx, m, &qcfg, bs)?;
+            let gap = (q - base).max(1e-6);
+            row.push(format!("{:.2}", gap.log10()));
+        }
+        t.row(row);
+    }
+    Ok(t.render())
+}
+
+/// Fig. 5(b): inversion emerging at bs 2/4 even for the wide model.
+pub fn fig5b(ctx: &mut Ctx) -> Result<String> {
+    let models = ensure_models(ctx)?;
+    let m = models.iter().find(|m| m.name == "llama2-like").unwrap();
+    let qcfg = QConfig::fp4("ue4m3")?;
+    let base = ppl_point(ctx, m, &QConfig::baseline(), 8)?;
+    let mut t = Table::new(
+        "Figure 5(b): llama2-like at tiny block sizes (FP4+UE4M3)",
+        &["block size", "ppl gap"],
+    );
+    let mut col = Vec::new();
+    for bs in [2usize, 4, 8, 16, 32] {
+        let q = ppl_point(ctx, m, &qcfg, bs)?;
+        t.row(vec![bs.to_string(), format!("{:+.3}", q - base)]);
+        col.push(q - base);
+    }
+    let min = col.iter().cloned().fold(f64::INFINITY, f64::min);
+    Ok(format!(
+        "{}  inversion at bs 2/4: {}\n",
+        t.render(),
+        if col[0] > min * 1.02 + 2e-3 { "YES (paper: emerges at bs 2-4)" } else { "no" }
+    ))
+}
+
+/// Fig. 14: INT4 elements — UE4M3 / UE4M3-S / UE5M3.
+pub fn fig14(ctx: &mut Ctx) -> Result<String> {
+    let models = ensure_models(ctx)?;
+    let sweep: Vec<usize> =
+        if ctx.fast { vec![2, 8, 32] } else { vec![2, 4, 8, 16, 32] };
+    let mut out = String::new();
+    for want in ["granite-like", "llama3-like"] {
+        let m = models.iter().find(|m| m.name == want).unwrap();
+        let base = ppl_point(ctx, m, &QConfig::baseline(), 8)?;
+        let mut t = Table::new(
+            &format!("Figure 14: INT4 microscaling — {want} (BF16 base {base:.3})"),
+            &["block size", "UE4M3", "UE4M3-S", "UE5M3 (ours)"],
+        );
+        for &bs in &sweep {
+            t.row(vec![
+                bs.to_string(),
+                format!(
+                    "{:.3}",
+                    ppl_point(ctx, m, &QConfig::named("int4", "ue4m3", false)?, bs)?
+                ),
+                format!(
+                    "{:.3}",
+                    ppl_point(ctx, m, &QConfig::named("int4", "ue4m3", true)?, bs)?
+                ),
+                format!(
+                    "{:.3}",
+                    ppl_point(ctx, m, &QConfig::named("int4", "ue5m3", false)?, bs)?
+                ),
+            ]);
+        }
+        out.push_str(&t.render());
+    }
+    Ok(out)
+}
+
+/// Fig. 16: UE4M3 vs UE4M3-S vs UE5M3 across the model suite.
+pub fn fig16(ctx: &mut Ctx) -> Result<String> {
+    let models = ensure_models(ctx)?;
+    let sweep = block_sweep(ctx);
+    let mut out = String::new();
+    for m in &models {
+        let base = ppl_point(ctx, m, &QConfig::baseline(), 8)?;
+        let mut t = Table::new(
+            &format!("Figure 16: {} (BF16 base {base:.3})", m.name),
+            &["block size", "UE4M3", "UE4M3-S", "UE5M3 (ours)"],
+        );
+        for &bs in &sweep {
+            t.row(vec![
+                bs.to_string(),
+                format!("{:.3}", ppl_point(ctx, m, &QConfig::fp4("ue4m3")?, bs)?),
+                format!(
+                    "{:.3}",
+                    ppl_point(ctx, m, &QConfig::fp4("ue4m3")?.with_per_tensor(true), bs)?
+                ),
+                format!("{:.3}", ppl_point(ctx, m, &QConfig::fp4("ue5m3")?, bs)?),
+            ]);
+        }
+        out.push_str(&t.render());
+    }
+    Ok(out)
+}
+
+/// Fig. 17: the UE4M4 alternative repurposing (App. J).
+pub fn fig17(ctx: &mut Ctx) -> Result<String> {
+    let models = ensure_models(ctx)?;
+    let sweep = block_sweep(ctx);
+    let mut out = String::new();
+    for want in ["granite-like", "llama3-like"] {
+        let m = models.iter().find(|mm| mm.name == want).unwrap();
+        let base = ppl_point(ctx, m, &QConfig::baseline(), 8)?;
+        let mut t = Table::new(
+            &format!("Figure 17: UE4M4 repurposing — {want}"),
+            &["block size", "UE4M3 gap", "UE4M4 gap", "UE5M3 gap"],
+        );
+        for &bs in &sweep {
+            let mut g = |scale: &str| -> Result<String> {
+                Ok(format!(
+                    "{:+.3}",
+                    ppl_point(ctx, m, &QConfig::fp4(scale)?, bs)? - base
+                ))
+            };
+            t.row(vec![bs.to_string(), g("ue4m3")?, g("ue4m4")?, g("ue5m3")?]);
+        }
+        out.push_str(&t.render());
+    }
+    Ok(out)
+}
+
+/// Tables 1 (bs 8) and 3 (bs 16): perplexity + downstream probes per
+/// format across the model suite.
+pub fn table1or3(ctx: &mut Ctx, bs: usize) -> Result<String> {
+    let models = ensure_models(ctx)?;
+    let formats: [(&str, QConfig); 4] = [
+        ("BF16", QConfig::baseline()),
+        ("UE4M3", QConfig::fp4("ue4m3")?),
+        ("UE4M3-S", QConfig::fp4("ue4m3")?.with_per_tensor(true)),
+        ("UE5M3 (ours)", QConfig::fp4("ue5m3")?),
+    ];
+    let nb = if ctx.fast { 1 } else { 3 };
+    let steps = if ctx.fast { 60 } else { ctx.train_steps };
+    let mut t = Table::new(
+        &format!(
+            "Table {}: accuracy probes at block size {bs} (synthetic substitutes — see DESIGN.md §1)",
+            if bs == 8 { "1" } else { "3" }
+        ),
+        &["model", "format", "SynPPL ↓", "Top1 ↑", "Top5 ↑", "PrefAcc ↑", "KL→BF16 ↓"],
+    );
+    for m in &models {
+        for (label, qcfg) in &formats {
+            let ppl = ppl_point(ctx, m, qcfg, bs)?;
+            let key = format!(
+                "probes/s{steps}/{}/{}/bs{bs}/pb{nb}/seed{PROBE_SEED}",
+                m.name,
+                qcfg.id()
+            );
+            let v = ctx.cached(&key, |c| {
+                let sess = c.session()?;
+                let corpus =
+                    Corpus::default_language(sess.manifest().model.vocab);
+                let r = eval::probes_for_config(
+                    sess,
+                    m.dev(c)?,
+                    &corpus,
+                    qcfg,
+                    bs,
+                    nb,
+                    PROBE_SEED,
+                )?;
+                Ok(crate::util::json::obj(vec![
+                    ("top1", num(r.top1)),
+                    ("top5", num(r.top5)),
+                    ("pref", num(r.pref_acc)),
+                    ("kl", num(r.kl_to_baseline)),
+                ]))
+            })?;
+            t.row(vec![
+                m.name.clone(),
+                label.to_string(),
+                format!("{ppl:.3}"),
+                format!("{:.2}", v.get("top1")?.as_f64()?),
+                format!("{:.2}", v.get("top5")?.as_f64()?),
+                format!("{:.2}", v.get("pref")?.as_f64()?),
+                format!("{:.4}", v.get("kl")?.as_f64()?),
+            ]);
+        }
+    }
+    Ok(t.render())
+}
+
+/// Table 2: FP6 scale formats (App. H) on the llama3-like model.
+pub fn table2(ctx: &mut Ctx) -> Result<String> {
+    let models = ensure_models(ctx)?;
+    let m = models.iter().find(|m| m.name == "llama3-like").unwrap();
+    let base = ppl_point(ctx, m, &QConfig::baseline(), 8)?;
+    let sweep = block_sweep(ctx);
+    let mut t = Table::new(
+        &format!(
+            "Table 2: FP4 elements with FP6 scales — llama3-like (BF16 base {base:.3})"
+        ),
+        &["block size", "UE5M1", "UE5M1-S", "UE4M2", "UE4M2-S"],
+    );
+    for &bs in &sweep {
+        let mut p = |scale: &str, pt: bool| -> Result<String> {
+            Ok(format!(
+                "{:.3}",
+                ppl_point(
+                    ctx,
+                    m,
+                    &QConfig::named("fp4_e2m1", scale, pt)?,
+                    bs
+                )?
+            ))
+        };
+        t.row(vec![
+            bs.to_string(),
+            p("ue5m1", false)?,
+            p("ue5m1", true)?,
+            p("ue4m2", false)?,
+            p("ue4m2", true)?,
+        ]);
+    }
+    Ok(t.render())
+}
+
+/// Export a machine-readable summary of all cached ppl points (CSV).
+pub fn export_csv(ctx: &mut Ctx) -> Result<()> {
+    let mut rows = Vec::new();
+    // cache keys are "ppl/s{steps}/{model}/{cfg}/bs{bs}/eb{n}/seed{s}"
+    let keys: Vec<String> = {
+        // snapshot of keys via a JSON round-trip of the cache file
+        let path = ctx.results_dir.join("cache.json");
+        if !path.exists() {
+            return Ok(());
+        }
+        let j = Json::parse(&std::fs::read_to_string(path)?)?;
+        j.as_obj()?
+            .iter()
+            .filter(|(k, _)| k.starts_with("ppl/"))
+            .map(|(k, _)| k.clone())
+            .collect()
+    };
+    for k in keys {
+        if let Some(v) = ctx.cache.get(&k) {
+            rows.push(vec![k.clone(), format!("{}", v.as_f64().unwrap_or(f64::NAN))]);
+        }
+    }
+    ctx.sink()?.csv("ppl_points", &["key", "perplexity"], &rows)?;
+    Ok(())
+}

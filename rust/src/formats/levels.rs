@@ -1,0 +1,148 @@
+//! Level enumeration and Voronoi boundaries for quantization grids.
+//!
+//! The theoretical framework (Sec. 4) integrates the per-bin error over
+//! each quantization level's Voronoi cell `[a_j, b_j]` (eq. 2/3) and sums
+//! the probability mass of each *scale* level's cell (eq. 6/33). This
+//! module enumerates the positive levels of a [`MiniFloat`] or integer
+//! grid and their round-to-nearest boundaries.
+
+use super::{ElemFormat, MiniFloat};
+
+/// A quantization level and its Voronoi cell under round-to-nearest.
+#[derive(Debug, Clone, Copy)]
+pub struct Level {
+    pub q: f64,
+    pub lo: f64,
+    pub hi: f64,
+}
+
+/// Enumerate the positive levels of a minifloat grid, capped at
+/// `max_levels` (guards E8M0/BF16 whose full enumeration is huge but whose
+/// tail carries no probability mass for our σ ranges).
+pub fn positive_levels(fmt: &MiniFloat, max_levels: usize) -> Vec<f64> {
+    let mut out = Vec::new();
+    let m = fmt.m_bits;
+    let quantum = 2.0f64.powi(fmt.e_min - m);
+    // subnormals: r * quantum for r = 1 .. 2^m - 1
+    for r in 1..(1i64 << m) {
+        if out.len() >= max_levels {
+            return out;
+        }
+        let v = r as f64 * quantum;
+        if v >= f32::MIN_POSITIVE as f64 {
+            out.push(v);
+        }
+    }
+    // normals
+    let mut e = fmt.e_min;
+    loop {
+        for r in (1i64 << m)..(1i64 << (m + 1)) {
+            let v = r as f64 * 2.0f64.powi(e - m);
+            if v > fmt.max_val as f64 || out.len() >= max_levels {
+                return out;
+            }
+            if v >= f32::MIN_POSITIVE as f64 {
+                out.push(v);
+            }
+        }
+        e += 1;
+    }
+}
+
+/// Positive levels of an element format (FP: minifloat levels; INT: 1..max).
+pub fn elem_positive_levels(fmt: &ElemFormat) -> Vec<f64> {
+    match fmt {
+        ElemFormat::Fp(f) => positive_levels(f, 4096),
+        ElemFormat::Int(m) => (1..=(*m as i64)).map(|v| v as f64).collect(),
+    }
+}
+
+/// Voronoi cells of the *positive* levels (plus the implicit 0 level),
+/// under round-to-nearest: cell(q_j) = [(q_{j-1}+q_j)/2, (q_j+q_{j+1})/2],
+/// the last cell extending to `top` (saturation absorbs everything above).
+pub fn voronoi(levels: &[f64], top: f64) -> Vec<Level> {
+    let mut out = Vec::with_capacity(levels.len());
+    for (j, &q) in levels.iter().enumerate() {
+        let lo = if j == 0 {
+            q / 2.0 // boundary with the 0 level
+        } else {
+            (levels[j - 1] + q) / 2.0
+        };
+        let hi = if j + 1 < levels.len() {
+            (q + levels[j + 1]) / 2.0
+        } else {
+            top
+        };
+        out.push(Level { q, lo, hi });
+    }
+    out
+}
+
+/// The zero-level cell `[0, q_1/2)` (paper's `[0, s_min/2]`, App. F.3).
+pub fn zero_cell_hi(levels: &[f64]) -> f64 {
+    levels.first().map(|&q| q / 2.0).unwrap_or(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{FP4_E2M1, UE4M3, UE5M3};
+
+    #[test]
+    fn fp4_levels() {
+        let lv = positive_levels(&FP4_E2M1, 100);
+        assert_eq!(lv, vec![0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn ue4m3_level_count_and_range() {
+        let lv = positive_levels(&UE4M3, 10_000);
+        // 7 subnormals + 14 full exponents (e_min..=7) x 8 mantissas +
+        // 7 levels at e=8 (capped at 448 = 1.75 * 2^8, i.e. r = 8..=14).
+        assert_eq!(lv[0], 2.0f64.powi(-9));
+        assert_eq!(*lv.last().unwrap(), 448.0);
+        assert_eq!(lv.len(), 7 + 14 * 8 + 7);
+        // strictly increasing
+        assert!(lv.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn ue5m3_extends_low_range() {
+        let lv = positive_levels(&UE5M3, 10_000);
+        assert_eq!(lv[0], 2.0f64.powi(-17));
+        assert_eq!(*lv.last().unwrap(), 122880.0);
+    }
+
+    #[test]
+    fn voronoi_cells_tile_the_axis() {
+        let lv = positive_levels(&UE4M3, 10_000);
+        let cells = voronoi(&lv, 1e9);
+        assert_eq!(cells[0].lo, zero_cell_hi(&lv));
+        for w in cells.windows(2) {
+            assert_eq!(w[0].hi, w[1].lo);
+        }
+        // every cell contains its level
+        for c in &cells {
+            assert!(c.lo <= c.q && c.q <= c.hi, "{c:?}");
+        }
+    }
+
+    #[test]
+    fn voronoi_matches_cast() {
+        // midpoint-rounding cells agree with the RNE cast away from ties
+        let lv = positive_levels(&UE4M3, 10_000);
+        let cells = voronoi(&lv, f64::INFINITY);
+        let mut rng = crate::dist::Pcg64::new(3);
+        for _ in 0..2000 {
+            let x = (10.0f64.powf(rng.uniform() * 8.0 - 4.0)) as f32;
+            let y = UE4M3.cast(x) as f64;
+            let cell = cells
+                .iter()
+                .find(|c| (x as f64) >= c.lo && (x as f64) < c.hi);
+            match cell {
+                Some(c) => assert_eq!(y, c.q, "x={x}"),
+                None => assert_eq!(y, 0.0, "x={x}"),
+            }
+        }
+    }
+}

@@ -1,0 +1,278 @@
+//! Numeric format registry: every element and scale format of the paper.
+//!
+//! A format is a saturating, signed- or unsigned-magnitude
+//! [`MiniFloat`] grid (parametric mantissa bits / min normal exponent /
+//! max value), mirroring `python/compile/kernels/ref.py` bit-for-bit
+//! (enforced by `rust/tests/golden.rs`). Integer element formats (INT4)
+//! are a separate cast.
+//!
+//! | name        | m | e_min | max      | min subnormal | paper ref     |
+//! |-------------|---|-------|----------|---------------|---------------|
+//! | FP4 E2M1    | 1 | 0     | 6        | 0.5           | Sec. 2.1      |
+//! | FP6 E2M3    | 3 | 0     | 7.5      | 2^-3          | OCP elements  |
+//! | FP6 E3M2    | 2 | -2    | 28       | 2^-4          | OCP elements  |
+//! | UE4M3       | 3 | -6    | 448      | 2^-9          | Sec. 2.1      |
+//! | UE5M3       | 3 | -14   | 122880   | 2^-17         | Sec. 5.2 ours |
+//! | UE4M4       | 4 | -6    | 496      | 2^-10         | App. J        |
+//! | UE5M1       | 1 | -14   | 98304    | 2^-15         | App. H        |
+//! | UE4M2       | 2 | -6    | 448      | 2^-8          | App. H        |
+//! | E8M0 (PoT)  | 0 | -126  | 2^127    | —             | OCP MX        |
+//! | BF16 scale  | 7 | -126  | 3.39e38  | —             | "unquantized" |
+
+pub mod levels;
+
+use crate::util::{floor_log2, ldexp2};
+
+/// A saturating minifloat grid; see module docs. `Copy`-able and cheap.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MiniFloat {
+    pub m_bits: i32,
+    pub e_min: i32,
+    pub max_val: f32,
+    pub name: &'static str,
+}
+
+impl MiniFloat {
+    pub const fn new(
+        m_bits: i32,
+        e_min: i32,
+        max_val: f32,
+        name: &'static str,
+    ) -> Self {
+        MiniFloat { m_bits, e_min, max_val, name }
+    }
+
+    /// Smallest positive representable value: the subnormal quantum
+    /// `2^(e_min - m_bits)` (paper's `s_min`, App. F.3).
+    pub fn min_subnormal(&self) -> f32 {
+        ldexp2(1.0, self.e_min - self.m_bits)
+    }
+
+    /// Round non-negative `x` to this grid (RNE, saturating).
+    ///
+    /// Bit-identical to `ref.cast_minifloat`: clamp to max, flush
+    /// f32-subnormal inputs (DAZ — XLA CPU semantics), extract the grid
+    /// exponent from the f32 exponent field, round half-even on the
+    /// exactly-rescaled value.
+    /// (A branchless select-style formulation was tried and measured
+    /// SLOWER on this target — no SIMD materialized and the scalar path
+    /// paid for the extra selects; see EXPERIMENTS.md §Perf — so the
+    /// early-return form stays.)
+    #[inline(always)]
+    pub fn cast(&self, x: f32) -> f32 {
+        let xc = if x < self.max_val { x } else { self.max_val };
+        if !(xc >= f32::MIN_POSITIVE) {
+            return 0.0; // zero, negative, NaN, or f32-subnormal (DAZ)
+        }
+        let g = floor_log2(xc);
+        let p = g.max(self.e_min) - self.m_bits;
+        let y = ldexp2(xc, -p);
+        let r = y.round_ties_even();
+        ldexp2(r, p)
+    }
+
+    /// Signed-magnitude cast (element formats).
+    #[inline(always)]
+    pub fn cast_signed(&self, x: f32) -> f32 {
+        let m = self.cast(x.abs());
+        if x.is_sign_negative() {
+            -m
+        } else {
+            m
+        }
+    }
+}
+
+/// INT-k symmetric element cast: RNE then clamp to ±int_max (App. G).
+#[inline]
+pub fn cast_int_symmetric(x: f32, int_max: f32) -> f32 {
+    x.round_ties_even().clamp(-int_max, int_max)
+}
+
+// -- element formats ---------------------------------------------------------
+
+pub const FP4_E2M1: MiniFloat = MiniFloat::new(1, 0, 6.0, "fp4_e2m1");
+pub const FP6_E2M3: MiniFloat = MiniFloat::new(3, 0, 7.5, "fp6_e2m3");
+pub const FP6_E3M2: MiniFloat = MiniFloat::new(2, -2, 28.0, "fp6_e3m2");
+
+// -- scale formats ------------------------------------------------------------
+
+pub const UE4M3: MiniFloat = MiniFloat::new(3, -6, 448.0, "ue4m3");
+/// The paper's proposed format (Sec. 5.2): the unused sign bit of UE4M3
+/// repurposed as a 5th exponent bit. Same precision, min subnormal drops
+/// from 2^-9 to 2^-17.
+pub const UE5M3: MiniFloat = MiniFloat::new(3, -14, 122880.0, "ue5m3");
+/// App. J alternative: the unused bit extends the mantissa instead.
+pub const UE4M4: MiniFloat = MiniFloat::new(4, -6, 496.0, "ue4m4");
+/// FP6 scale candidates (App. H), sign bit repurposed.
+pub const UE5M1: MiniFloat = MiniFloat::new(1, -14, 98304.0, "ue5m1");
+pub const UE4M2: MiniFloat = MiniFloat::new(2, -6, 448.0, "ue4m2");
+/// OCP MX power-of-two scale, clamped to the normal-f32 exponent range.
+pub const E8M0: MiniFloat = MiniFloat::new(0, -126, 1.7014118e38, "e8m0");
+/// Quasi-continuous "non-quantized" scales (Fig. 1(a) baseline).
+pub const BF16_SCALE: MiniFloat =
+    MiniFloat::new(7, -126, 3.3895314e38, "bf16");
+
+pub const SCALE_FORMATS: [MiniFloat; 7] =
+    [UE4M3, UE5M3, UE4M4, UE5M1, UE4M2, E8M0, BF16_SCALE];
+
+pub fn scale_format(name: &str) -> Option<MiniFloat> {
+    SCALE_FORMATS.iter().copied().find(|f| f.name == name)
+}
+
+/// Element format spec: either a minifloat or a symmetric integer grid.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ElemFormat {
+    Fp(MiniFloat),
+    /// `Int(max)`: integers in [-max, max] (INT4 => 7).
+    Int(f32),
+}
+
+impl ElemFormat {
+    pub const FP4: ElemFormat = ElemFormat::Fp(FP4_E2M1);
+    pub const INT4: ElemFormat = ElemFormat::Int(7.0);
+
+    pub fn from_name(name: &str) -> Option<ElemFormat> {
+        match name {
+            "fp4_e2m1" | "fp4" => Some(ElemFormat::FP4),
+            "fp6_e2m3" => Some(ElemFormat::Fp(FP6_E2M3)),
+            "fp6_e3m2" => Some(ElemFormat::Fp(FP6_E3M2)),
+            "int4" => Some(ElemFormat::INT4),
+            "int8" => Some(ElemFormat::Int(127.0)),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ElemFormat::Fp(f) => f.name,
+            ElemFormat::Int(m) if *m == 7.0 => "int4",
+            ElemFormat::Int(m) if *m == 127.0 => "int8",
+            ElemFormat::Int(_) => "int",
+        }
+    }
+
+    /// `C` in s = Q(absmax / C): the element format's max value.
+    #[inline]
+    pub fn max_val(&self) -> f32 {
+        match self {
+            ElemFormat::Fp(f) => f.max_val,
+            ElemFormat::Int(m) => *m,
+        }
+    }
+
+    #[inline]
+    pub fn cast(&self, x: f32) -> f32 {
+        match self {
+            ElemFormat::Fp(f) => f.cast_signed(x),
+            ElemFormat::Int(m) => cast_int_symmetric(x, *m),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_min_subnormals() {
+        assert_eq!(UE4M3.min_subnormal(), 2f32.powi(-9));
+        assert_eq!(UE5M3.min_subnormal(), 2f32.powi(-17));
+        assert_eq!(UE4M4.min_subnormal(), 2f32.powi(-10));
+        assert_eq!(UE5M1.min_subnormal(), 2f32.powi(-15));
+        assert_eq!(UE4M2.min_subnormal(), 2f32.powi(-8));
+        assert_eq!(FP4_E2M1.min_subnormal(), 0.5);
+    }
+
+    #[test]
+    fn fp4_level_set() {
+        let mut seen = std::collections::BTreeSet::new();
+        let mut x = -8.0f32;
+        while x <= 8.0 {
+            seen.insert((FP4_E2M1.cast_signed(x).abs() * 2.0) as i32);
+            x += 0.003;
+        }
+        let want: std::collections::BTreeSet<i32> =
+            [0, 1, 2, 3, 4, 6, 8, 12].into_iter().collect();
+        assert_eq!(seen, want);
+    }
+
+    #[test]
+    fn saturation_and_ties() {
+        assert_eq!(UE4M3.cast(449.0), 448.0);
+        assert_eq!(UE4M3.cast(1e30), 448.0);
+        assert_eq!(UE4M3.cast(1.0625), 1.0); // tie -> even
+        assert_eq!(UE4M3.cast(1.1875), 1.25);
+        assert_eq!(UE4M3.cast(2f32.powi(-10)), 0.0); // tie at s_min/2 -> 0
+        assert_eq!(UE4M3.cast(2f32.powi(-10) * 1.1), 2f32.powi(-9));
+        assert_eq!(UE5M3.cast(2f32.powi(-18)), 0.0);
+        assert_eq!(UE5M3.cast(2f32.powi(-17)), 2f32.powi(-17));
+    }
+
+    #[test]
+    fn e8m0_is_power_of_two() {
+        for x in [0.7f32, 0.8, 3.0, 5.9, 100.0] {
+            let y = E8M0.cast(x);
+            assert_eq!(y.to_bits() & 0x007F_FFFF, 0, "{x} -> {y}");
+        }
+        assert_eq!(E8M0.cast(0.7), 0.5);
+        assert_eq!(E8M0.cast(0.8), 1.0);
+    }
+
+    #[test]
+    fn int4_levels() {
+        let mut seen = std::collections::BTreeSet::new();
+        let mut x = -9.0f32;
+        while x <= 9.0 {
+            seen.insert(cast_int_symmetric(x, 7.0) as i32);
+            x += 0.01;
+        }
+        assert_eq!(seen, (-7..=7).collect());
+    }
+
+    #[test]
+    fn cast_monotone() {
+        crate::util::check::property("cast monotone", 50, |g| {
+            let fmt = *g.pick(&SCALE_FORMATS);
+            let a = g.log_uniform(1e-12, 1e6) as f32;
+            let b = g.log_uniform(1e-12, 1e6) as f32;
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            assert!(fmt.cast(lo) <= fmt.cast(hi), "{fmt:?} {lo} {hi}");
+        });
+    }
+
+    #[test]
+    fn ue5m3_grid_nests_ue4m3() {
+        // every UE4M3-representable value is UE5M3-representable, so the
+        // UE5M3 cast error is pointwise <= the UE4M3 cast error below the
+        // shared max (the formal core of the Sec. 5.2 claim)
+        crate::util::check::property("ue5m3 nests ue4m3", 80, |g| {
+            let x = g.log_uniform(1e-7, 448.0) as f32;
+            let e43 = (UE4M3.cast(x) - x).abs();
+            let e53 = (UE5M3.cast(x) - x).abs();
+            assert!(e53 <= e43 + f32::EPSILON * x.abs(), "x={x} {e53} {e43}");
+            // and UE4M3 outputs are fixed points of the UE5M3 cast
+            let y = UE4M3.cast(x);
+            assert_eq!(UE5M3.cast(y), y);
+        });
+    }
+
+    #[test]
+    fn signed_cast_is_odd() {
+        crate::util::check::property("cast odd symmetry", 60, |g| {
+            let fmt = if g.bool() { FP4_E2M1 } else { FP6_E3M2 };
+            let x = (g.normal(0.0, 2.0)) as f32;
+            assert_eq!(fmt.cast_signed(-x).to_bits(), (-fmt.cast_signed(x)).to_bits());
+        });
+    }
+
+    #[test]
+    fn cast_idempotent_on_outputs() {
+        crate::util::check::property("cast idempotent", 50, |g| {
+            let fmt = *g.pick(&SCALE_FORMATS);
+            let x = g.log_uniform(1e-12, 1e6) as f32;
+            let y = fmt.cast(x);
+            assert_eq!(fmt.cast(y), y);
+        });
+    }
+}

@@ -1,0 +1,55 @@
+//! Storage / bandwidth model (Sec. 3.1).
+//!
+//! "memory requirements for a format with N 4-bit elements per block and
+//! 16-bit scales are 1/2 + 2/N bytes and every halving of block size
+//! increases storage by a factor of 4/(N+4)."
+
+/// Bytes per element for `elem_bits`-bit elements sharing a
+/// `scale_bits`-bit scale over blocks of N.
+pub fn bytes_per_element(elem_bits: u32, scale_bits: u32, n: usize) -> f64 {
+    elem_bits as f64 / 8.0 + scale_bits as f64 / 8.0 / n as f64
+}
+
+/// Relative storage increase when halving the block size N → N/2
+/// (paper: +4/(N+4) for 4-bit elems + 16-bit scales).
+pub fn halving_overhead(elem_bits: u32, scale_bits: u32, n: usize) -> f64 {
+    bytes_per_element(elem_bits, scale_bits, n / 2)
+        / bytes_per_element(elem_bits, scale_bits, n)
+        - 1.0
+}
+
+/// Compression ratio vs 16-bit baseline storage.
+pub fn compression_vs_bf16(elem_bits: u32, scale_bits: u32, n: usize) -> f64 {
+    2.0 / bytes_per_element(elem_bits, scale_bits, n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_storage_formula() {
+        for n in [8usize, 16, 32, 256] {
+            assert!(
+                (bytes_per_element(4, 16, n) - (0.5 + 2.0 / n as f64)).abs()
+                    < 1e-12
+            );
+            // paper: halving N increases storage by 4/(N+4)
+            assert!(
+                (halving_overhead(4, 16, n) - 4.0 / (n as f64 + 4.0)).abs()
+                    < 1e-12,
+                "N={n}"
+            );
+        }
+    }
+
+    #[test]
+    fn fp8_scales_compress_better() {
+        assert!(
+            compression_vs_bf16(4, 8, 16) > compression_vs_bf16(4, 16, 16)
+        );
+        // MXFP4-with-FP8-scale at N=32: 0.53125 B/elem → ~3.76x vs bf16
+        let c = compression_vs_bf16(4, 8, 32);
+        assert!((c - 2.0 / (0.5 + 1.0 / 32.0)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,13 @@
+//! Hardware cost model (Fig. 4(a), Sec. 3.1, App. K).
+//!
+//! The paper's hardware claim is *relative*: adding one exponent bit to
+//! the microscaling-FP4 scale datapath (UE4M3 → UE5M3) of a
+//! multi-precision SIMD PE (Agrawal et al. 2021-style: BF16, FP8 E4M3 /
+//! E5M2, INT8, MXFP4 pipelines + staging/register file) costs ≈0.5% area
+//! and ≈4 ps of critical path, because the extra bit is diluted by
+//! everything else. [`pe`] reproduces that dilution argument with a
+//! transparent unit-gate model; [`memory`] implements the Sec. 3.1
+//! storage/complexity formulas.
+
+pub mod memory;
+pub mod pe;

@@ -1,0 +1,211 @@
+//! Unit-gate area/timing model of the multi-precision MAC processing
+//! engine (App. K).
+//!
+//! Area unit: NAND2-equivalent gates (GE). Standard structural estimates:
+//!
+//! * ripple/compressor array multiplier n×m: ~6·n·m GE
+//! * adder n bits: ~7·n GE (incl. carry logic)
+//! * barrel shifter n bits × log2(n) stages: ~3·n·log2(n) GE
+//! * 2:1 mux n bits: ~3·n GE; register bit: ~6 GE
+//!
+//! Timing unit: picoseconds at a nominal 4 nm-ish 15 ps/FO4; adder delay
+//! modeled as carry-lookahead ~ (2·log2(n)+4) FO4.
+//!
+//! These constants are conventional textbook figures — the *claim* under
+//! test is relative (Δarea, Δdelay between the E4M3- and E5M3-scale PE
+//! variants), which is insensitive to the absolute calibration.
+
+/// Gate-equivalents of structural blocks.
+pub fn mult_ge(n: u32, m: u32) -> f64 {
+    6.0 * n as f64 * m as f64
+}
+
+pub fn adder_ge(n: u32) -> f64 {
+    7.0 * n as f64
+}
+
+pub fn shifter_ge(n: u32) -> f64 {
+    let stages = (n as f64).log2().ceil().max(1.0);
+    3.0 * n as f64 * stages
+}
+
+pub fn mux_ge(n: u32) -> f64 {
+    3.0 * n as f64
+}
+
+pub fn regs_ge(bits: u32) -> f64 {
+    6.0 * bits as f64
+}
+
+const FO4_PS: f64 = 15.0;
+
+/// Carry-lookahead adder delay in ps (smooth log2: a 4b->5b widening
+/// costs a fraction of a stage, not a full one).
+pub fn adder_delay_ps(n: u32) -> f64 {
+    (2.0 * (n as f64).log2() + 4.0) * FO4_PS
+}
+
+/// A scale format's datapath parameters.
+#[derive(Debug, Clone, Copy)]
+pub struct ScaleFmt {
+    pub name: &'static str,
+    pub e_bits: u32,
+    /// mantissa bits including the implied 1 (paper Sec. 3.1's M)
+    pub m_bits_incl: u32,
+}
+
+pub const SCALE_E4M3: ScaleFmt = ScaleFmt { name: "ue4m3", e_bits: 4, m_bits_incl: 4 };
+pub const SCALE_E5M3: ScaleFmt = ScaleFmt { name: "ue5m3", e_bits: 5, m_bits_incl: 4 };
+pub const SCALE_E4M4: ScaleFmt = ScaleFmt { name: "ue4m4", e_bits: 4, m_bits_incl: 5 };
+pub const SCALE_BF16: ScaleFmt = ScaleFmt { name: "bf16", e_bits: 8, m_bits_incl: 8 };
+
+/// Area breakdown of one SIMD lane (GE).
+#[derive(Debug, Clone)]
+pub struct LaneArea {
+    pub bf16_pipe: f64,
+    pub fp8_pipe: f64,
+    pub int8_pipe: f64,
+    pub mxfp4_products: f64,
+    pub mxfp4_scale_path: f64,
+    pub accum: f64,
+    pub staging: f64,
+}
+
+impl LaneArea {
+    pub fn total(&self) -> f64 {
+        self.bf16_pipe
+            + self.fp8_pipe
+            + self.int8_pipe
+            + self.mxfp4_products
+            + self.mxfp4_scale_path
+            + self.accum
+            + self.staging
+    }
+}
+
+/// MAC terms per lane (the engine multiplies several weight/input pairs
+/// per instruction, per Agrawal et al.).
+pub const MAC_TERMS: u32 = 8;
+/// inter-PE partial-sum width (paper's K in the M²·K complexity note)
+pub const PSUM_MANTISSA: u32 = 24;
+pub const PSUM_EXP: u32 = 8;
+
+/// Model one SIMD lane of the PE for a given MXFP4 scale format.
+pub fn lane_area(scale: ScaleFmt) -> LaneArea {
+    let t = MAC_TERMS as f64;
+    // BF16 FMA pipeline: 8x8 mantissa mult per term + exponent add +
+    // align/normalize shifters
+    let bf16_pipe = t * (mult_ge(8, 8) + adder_ge(8) + shifter_ge(24))
+        + shifter_ge(24)
+        + adder_ge(24);
+    // FP8 (E4M3/E5M2 shared datapath): 4x4 mult + 5b exp add + align
+    let fp8_pipe = t * (mult_ge(4, 4) + adder_ge(5) + shifter_ge(16))
+        + adder_ge(16);
+    // INT8: 8x8 mult + 18b accumulate
+    let int8_pipe = t * mult_ge(8, 8) + adder_ge(18);
+    // MXFP4 products: E2M1 elements: 2x2 mantissa mult (trivial) + 3b exp
+    // add per term, then a small adder tree over the terms
+    let mxfp4_products =
+        t * (mult_ge(2, 2) + adder_ge(3)) + (t - 1.0) * adder_ge(8);
+    // MXFP4 scale path (the part UE5M3 touches — Fig. 4(a)):
+    //   mantissa: M×M mult of the two block scales, fused into the
+    //   product sum: M × PSUM multiplier contribution (Sec. 3.1: M²K
+    //   complexity enters through this fusion)
+    //   exponent: e_bits adder for the scale-exponent sum + subtract
+    //   from the 8b partial-sum exponent (width unchanged, App. K)
+    let m = scale.m_bits_incl;
+    // scale operand staging: weight + activation scale per instruction,
+    // (e + m) bits wide, held across the 4-stage MAC pipeline
+    let scale_regs = regs_ge(2 * (scale.e_bits + m) * 4);
+    let mxfp4_scale_path = mult_ge(m, m)
+        + mult_ge(m, PSUM_MANTISSA) / 4.0 // fused rescale of the psum
+        + adder_ge(scale.e_bits)
+        + adder_ge(PSUM_EXP)
+        + scale_regs;
+    // FP32 accumulator + normalization shared across precisions
+    let accum = adder_ge(PSUM_MANTISSA) + shifter_ge(PSUM_MANTISSA);
+    // operand staging + local register file (dominant non-arithmetic
+    // area, App. K's dilution argument)
+    let staging = regs_ge(4 * 256) + mux_ge(256);
+    LaneArea {
+        bf16_pipe,
+        fp8_pipe,
+        int8_pipe,
+        mxfp4_products,
+        mxfp4_scale_path,
+        accum,
+        staging,
+    }
+}
+
+/// Whole-PE area (8 SIMD lanes + control overhead).
+pub fn pe_area(scale: ScaleFmt) -> f64 {
+    let lane = lane_area(scale).total();
+    8.0 * lane * 1.08 // +8% control/clocking overhead
+}
+
+/// Critical path of the MXFP4 scale-fusion stage (ps): exponent adder →
+/// psum exponent subtract → align. Only the first adder widens with
+/// e_bits (App. K: "the width of the subsequent adders/datapath remains
+/// unchanged").
+pub fn scale_stage_delay_ps(scale: ScaleFmt) -> f64 {
+    adder_delay_ps(scale.e_bits)
+        + adder_delay_ps(PSUM_EXP)
+        + adder_delay_ps(PSUM_MANTISSA)
+}
+
+/// The App. K comparison: Δarea (%) and Δdelay (ps) of E5M3 vs E4M3.
+pub fn appendix_k_comparison() -> (f64, f64) {
+    let a4 = pe_area(SCALE_E4M3);
+    let a5 = pe_area(SCALE_E5M3);
+    let d4 = scale_stage_delay_ps(SCALE_E4M3);
+    let d5 = scale_stage_delay_ps(SCALE_E5M3);
+    (100.0 * (a5 - a4) / a4, d5 - d4)
+}
+
+/// Sec. 3.1: multiplication complexity of scale fusion grows as M²·K.
+pub fn scale_mult_complexity(m_bits_incl: u32, k: u32) -> f64 {
+    (m_bits_incl as f64).powi(2) * k as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e5m3_area_delta_is_negligible() {
+        let (darea, ddelay) = appendix_k_comparison();
+        // paper: 0.5% area, 4 ps
+        assert!(darea > 0.0 && darea < 1.5, "Δarea {darea}%");
+        assert!(ddelay > 0.0 && ddelay < 40.0, "Δdelay {ddelay} ps");
+    }
+
+    #[test]
+    fn bf16_scales_cost_much_more_than_fp8_scales() {
+        // Sec. 3.1: 16-bit scales (M=8) raise the scale-path area by ~M²
+        let p8 = lane_area(SCALE_E4M3).mxfp4_scale_path;
+        let p16 = lane_area(SCALE_BF16).mxfp4_scale_path;
+        assert!(p16 > 2.0 * p8, "{p16} vs {p8}");
+        // and the M²K law is what drives it
+        assert!(
+            scale_mult_complexity(8, 24) / scale_mult_complexity(4, 24)
+                == 4.0
+        );
+    }
+
+    #[test]
+    fn ue4m4_costs_more_area_than_ue5m3() {
+        // App. J: the mantissa repurposing (M²) is pricier than the
+        // exponent one (linear)
+        let a5 = pe_area(SCALE_E5M3);
+        let a44 = pe_area(SCALE_E4M4);
+        assert!(a44 > a5, "{a44} vs {a5}");
+    }
+
+    #[test]
+    fn area_breakdown_dominated_by_non_scale_logic() {
+        // the dilution argument: the scale path is a small slice
+        let l = lane_area(SCALE_E4M3);
+        assert!(l.mxfp4_scale_path / l.total() < 0.10);
+    }
+}

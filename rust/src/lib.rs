@@ -1,0 +1,49 @@
+//! # microscale
+//!
+//! Production-quality reproduction of *"Is Finer Better? The Limits of
+//! Microscaling Formats in Large Language Models"* (Fasoli et al., IBM
+//! Research, 2026).
+//!
+//! The paper discovers **perplexity inversion** — quantization error that
+//! *increases* as the microscaling block size shrinks — traces it to the
+//! limited dynamic range of quantized FP8 scales interacting with narrow
+//! tensor distributions, builds a first-principles theoretical framework
+//! for the three error contributions, and proposes the **UE5M3** scale
+//! format as a hardware-friendly mitigation.
+//!
+//! This crate is the L3 layer of a three-layer rust+JAX+Pallas stack:
+//!
+//! * [`formats`] / [`quant`] — bit-exact re-implementation of every
+//!   numeric format and the block microscaling quantizer (validated
+//!   against the python oracle via golden vectors);
+//! * [`theory`] — the paper's analytical MSE framework (Sec. 4,
+//!   App. E–H) as fast closed-form/numerical integration;
+//! * [`dist`] / [`stats`] — synthetic distribution substrate and metrics;
+//! * [`model`] — transformer weight store, synthetic corpus, σ-calibrated
+//!   model zoo, downstream probes;
+//! * [`runtime`] — PJRT CPU client executing the AOT-lowered HLO
+//!   artifacts (python runs only at build time);
+//! * [`coordinator`] — experiment job expansion, caching, worker pool and
+//!   result sinks driving every figure/table of the paper;
+//! * [`experiments`] — one generator per paper figure/table;
+//! * [`hw`] — the Appendix-K hardware cost model;
+//! * [`report`] — table/series renderers and tiny JSON/CSV codecs.
+//!
+//! See `DESIGN.md` for the experiment index and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod coordinator;
+pub mod dist;
+pub mod experiments;
+pub mod formats;
+pub mod hw;
+pub mod model;
+pub mod quant;
+pub mod report;
+pub mod runtime;
+pub mod stats;
+pub mod theory;
+pub mod util;
+
+/// Crate-level result alias (anyhow-based, like the rest of the stack).
+pub type Result<T> = anyhow::Result<T>;

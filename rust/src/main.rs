@@ -1,0 +1,281 @@
+//! `microscale` — CLI for the paper reproduction.
+//!
+//! ```text
+//! microscale figure <id>        reproduce a paper figure (1a..17)
+//! microscale table <id>         reproduce a paper table (1, 2, 3)
+//! microscale all                every figure + table (respects cache)
+//! microscale hw                 Fig. 4(a) + App. K + Sec. 3.1 hardware model
+//! microscale train              train the base model (--steps N)
+//! microscale models             build the σ-transformed model zoo
+//! microscale eval               one perplexity point (--model --scale --bs ...)
+//! microscale theory             MSE-σ theory sweep (--elem --scale --bs)
+//! microscale quantize           fake-quant an f32 binary file
+//! microscale selftest           quick smoke of the full stack
+//! ```
+//!
+//! Global flags: `--fast` (reduced grids), `--results DIR`, `--models DIR`,
+//! `--artifacts DIR`, `--train-steps N`, `--quiet`.
+
+use std::io::Write as _;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use microscale::experiments::{self, Ctx};
+use microscale::formats::{scale_format, ElemFormat};
+use microscale::model::{weights::Params, Corpus};
+use microscale::quant::{fake_quant, QuantScheme};
+use microscale::runtime::eval::{self, DeviceParams};
+use microscale::runtime::train::{train, TrainConfig};
+use microscale::runtime::QConfig;
+use microscale::stats::geomspace;
+use microscale::theory;
+use microscale::util::cli::Args;
+
+struct StderrLogger;
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, m: &log::Metadata) -> bool {
+        m.level() <= log::Level::Info
+    }
+    fn log(&self, r: &log::Record) {
+        if self.enabled(r.metadata()) {
+            eprintln!("[{}] {}", r.level().as_str().to_lowercase(), r.args());
+        }
+    }
+    fn flush(&self) {}
+}
+
+static LOGGER: StderrLogger = StderrLogger;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn ctx_from(args: &Args) -> Result<Ctx> {
+    let mut ctx = Ctx::new(
+        PathBuf::from(args.get_or("artifacts", "artifacts")),
+        PathBuf::from(args.get_or("results", "results")),
+        PathBuf::from(args.get_or("models", "models")),
+        args.has("fast"),
+    )?;
+    ctx.train_steps = args.get_usize("train-steps", 240)?;
+    Ok(ctx)
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    if !args.has("quiet") {
+        let _ = log::set_logger(&LOGGER);
+        log::set_max_level(log::LevelFilter::Info);
+    }
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "figure" => {
+            let id = args
+                .positional
+                .get(1)
+                .context("usage: microscale figure <id>")?;
+            let mut ctx = ctx_from(&args)?;
+            println!("{}", experiments::figure(&mut ctx, id)?);
+        }
+        "table" => {
+            let id = args
+                .positional
+                .get(1)
+                .context("usage: microscale table <id>")?;
+            let mut ctx = ctx_from(&args)?;
+            println!("{}", experiments::table(&mut ctx, id)?);
+        }
+        "all" => {
+            let mut ctx = ctx_from(&args)?;
+            let mut out = String::new();
+            for id in [
+                "1a", "1b", "2a", "2b", "2c", "3a", "3b", "3c", "4a", "4b",
+                "5a", "5b", "6", "7", "8", "9", "10", "11", "12", "13",
+                "14", "15", "16", "17",
+            ] {
+                log::info!("figure {id}...");
+                out.push_str(&experiments::figure(&mut ctx, id)?);
+                out.push('\n');
+            }
+            for id in experiments::ALL_TABLES {
+                log::info!("table {id}...");
+                out.push_str(&experiments::table(&mut ctx, id)?);
+                out.push('\n');
+            }
+            out.push_str(&experiments::hwx::appendix_k());
+            out.push_str(&experiments::hwx::sec31_costs());
+            experiments::ppl::export_csv(&mut ctx)?;
+            ctx.sink()?.text("all_figures.txt", &out)?;
+            println!("{out}");
+        }
+        "hw" => {
+            println!("{}", experiments::hwx::fig4a());
+            println!("{}", experiments::hwx::appendix_k());
+            println!("{}", experiments::hwx::sec31_costs());
+        }
+        "train" => {
+            let ctx = ctx_from(&args)?;
+            let sess = ctx.session()?;
+            let m = sess.manifest().clone();
+            let corpus = Corpus::default_language(m.model.vocab);
+            let steps = args.get_usize("steps", 240)?;
+            let cfg = TrainConfig {
+                steps,
+                lr: args.get_f64("lr", 1.5e-3)?,
+                warmup: steps / 10 + 1,
+                weight_decay: args.get_f64("wd", 0.01)?,
+                seed: args.get_usize("seed", 1)? as u64,
+                log_every: (steps / 20).max(1),
+            };
+            let init = Params::init(&m, 2026);
+            let (trained, curve) = train(sess, &corpus, &init, &cfg)?;
+            let out = PathBuf::from(
+                args.get_or("out", &format!("models/base-s{steps}.bin")),
+            );
+            if let Some(p) = out.parent() {
+                std::fs::create_dir_all(p).ok();
+            }
+            trained.save(&out)?;
+            println!("saved {} params to {}", trained.numel(), out.display());
+            for p in curve {
+                println!("step {:>5}  loss {:.4}", p.step, p.loss);
+            }
+        }
+        "models" => {
+            let mut ctx = ctx_from(&args)?;
+            let models = experiments::ppl::ensure_models(&mut ctx)?;
+            let n_layers = ctx.session()?.manifest().model.n_layers;
+            for m in &models {
+                let spec = m.params.sigma_spectrum(n_layers);
+                let sigmas: Vec<f64> = spec.iter().map(|(_, s)| *s).collect();
+                let below = sigmas.iter().filter(|&&s| s < 2e-2).count();
+                println!(
+                    "{:<24} {} tensors, stored-σ ∈ [{:.1e}, {:.1e}], {}/{} below σ=2e-2",
+                    m.name,
+                    sigmas.len(),
+                    sigmas.iter().cloned().fold(f64::MAX, f64::min),
+                    sigmas.iter().cloned().fold(0.0, f64::max),
+                    below,
+                    sigmas.len()
+                );
+            }
+        }
+        "eval" => {
+            let mut ctx = ctx_from(&args)?;
+            let models = experiments::ppl::ensure_models(&mut ctx)?;
+            let want = args.get_or("model", "granite-like");
+            let m = models
+                .iter()
+                .find(|m| m.name == want)
+                .with_context(|| format!("unknown model {want:?}"))?;
+            let qcfg = if args.get_or("scale", "ue4m3") == "none" {
+                QConfig::baseline()
+            } else {
+                QConfig::named(
+                    &args.get_or("elem", "fp4_e2m1"),
+                    &args.get_or("scale", "ue4m3"),
+                    args.has("per-tensor"),
+                )?
+            };
+            let bs = args.get_usize("bs", 8)?;
+            let ppl = experiments::ppl::ppl_point(&mut ctx, m, &qcfg, bs)?;
+            println!("{want} {} bs{bs}: perplexity {ppl:.4}", qcfg.id());
+        }
+        "theory" => {
+            let elem = ElemFormat::from_name(&args.get_or("elem", "fp4_e2m1"))
+                .context("bad --elem")?;
+            let scale = scale_format(&args.get_or("scale", "ue4m3"))
+                .context("bad --scale")?;
+            let bs = args.get_usize("bs", 16)?;
+            let lo = args.get_f64("sigma-lo", 1e-4)?;
+            let hi = args.get_f64("sigma-hi", 2.0)?;
+            let k = args.get_usize("points", 33)?;
+            println!("sigma,mse_total,xi_ne_xmax,xi_eq_xmax,s_zero");
+            for s in geomspace(lo, hi, k) {
+                let b = theory::mse_quantized_scales(&elem, &scale, s, bs);
+                println!(
+                    "{s:.6e},{:.6e},{:.6e},{:.6e},{:.6e}",
+                    b.total(),
+                    b.xi_ne_xmax,
+                    b.xi_eq_xmax,
+                    b.s_zero
+                );
+            }
+        }
+        "quantize" => {
+            let input = args.get("in").context("--in FILE (raw f32 LE)")?;
+            let bytes = std::fs::read(input)?;
+            let mut x: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            let scheme = QuantScheme::new(
+                ElemFormat::from_name(&args.get_or("elem", "fp4_e2m1"))
+                    .context("bad --elem")?,
+                scale_format(&args.get_or("scale", "ue4m3"))
+                    .context("bad --scale")?,
+                args.get_usize("bs", 16)?,
+            )
+            .with_per_tensor(args.has("per-tensor"));
+            let pad = (scheme.block_size - x.len() % scheme.block_size)
+                % scheme.block_size;
+            x.extend(std::iter::repeat(0.0).take(pad));
+            let xq = fake_quant(&scheme, &x);
+            let mse = microscale::stats::mse_f32(&x, &xq);
+            let out = args.get_or("out", &format!("{input}.fq"));
+            let mut f = std::io::BufWriter::new(std::fs::File::create(&out)?);
+            for v in &xq[..xq.len() - pad] {
+                f.write_all(&v.to_le_bytes())?;
+            }
+            println!(
+                "{}: {} elems, mse {mse:.3e}, wrote {out}",
+                scheme.id(),
+                x.len() - pad
+            );
+        }
+        "selftest" => {
+            let ctx = ctx_from(&args)?;
+            let sess = ctx.session()?;
+            let m = sess.manifest().clone();
+            println!("artifacts: {} ({} params)", m.artifacts.len(), m.param_count());
+            let corpus = Corpus::default_language(m.model.vocab);
+            let params = Params::init(&m, 1);
+            let dev = DeviceParams::upload(sess, &params)?;
+            let batches = corpus.batches(9, 1, m.eval_batch, m.model.seq_len + 1);
+            let base = eval::perplexity(sess, &dev, &QConfig::baseline(), 8, &batches)?;
+            let q = eval::perplexity(sess, &dev, &QConfig::fp4("ue4m3")?, 8, &batches)?;
+            println!("random-init ppl: baseline {base:.2}, ue4m3 {q:.2}");
+            let (da, dd) = microscale::hw::pe::appendix_k_comparison();
+            println!("hw model: Δarea {da:+.2}%, Δdelay {dd:+.1} ps");
+            let b = theory::mse_quantized_scales(
+                &ElemFormat::FP4,
+                &microscale::formats::UE4M3,
+                0.02,
+                16,
+            );
+            println!("theory @ σ=0.02, bs16: {:.3e}", b.total());
+            println!("selftest OK");
+        }
+        other => {
+            println!(
+                "microscale — reproduction of 'Is Finer Better?' (IBM, 2026)\n\
+                 \n\
+                 commands: figure <id> | table <1|2|3> | all | hw | train |\n\
+                 models | eval | theory | quantize | selftest\n\
+                 figures: 1a 1b 2a 2b 2c 3a 3b 3c 4a 4b 5a 5b 6 7 8 9 10 11\n\
+                 12 13 14 15 16 17\n\
+                 flags: --fast --results DIR --models DIR --artifacts DIR\n\
+                 --train-steps N --quiet"
+            );
+            if other != "help" {
+                bail!("unknown command {other:?}");
+            }
+        }
+    }
+    Ok(())
+}

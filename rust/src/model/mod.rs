@@ -1,0 +1,17 @@
+//! Model substrate: parameter store, synthetic corpus, σ-calibrated model
+//! zoo, and downstream probes.
+//!
+//! The paper evaluates on 7–9 B-parameter pretrained LLMs that are not
+//! available in this sandbox (repro band 0/5); DESIGN.md §1 documents the
+//! substitution: small transformers trained in-repo on a synthetic corpus
+//! plus a zoo of σ-transformed variants whose *stored-tensor* σ spectra
+//! mimic the paper's models (the paper itself shows σ is the driving
+//! statistic — Fig. 3(a), App. C).
+
+pub mod corpus;
+pub mod probes;
+pub mod weights;
+pub mod zoo;
+
+pub use corpus::Corpus;
+pub use weights::Params;

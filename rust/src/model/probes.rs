@@ -1,0 +1,144 @@
+//! Downstream-capability probes: the Table 1/3 substitute (DESIGN.md §1).
+//!
+//! The paper's benchmark battery (PIQA/HellaSwag/Winogrande/GSM8K/MMLU)
+//! asks one question: does the quantized model preserve the capabilities
+//! of the BF16 baseline? For the in-repo trained models we measure
+//! capabilities they actually have:
+//!
+//! * `top1` / `top5` — held-out next-token accuracy (greedy / @5);
+//! * `pref_acc` — accuracy restricted to positions whose context has a
+//!   dominant preferred continuation in the generating chain (the
+//!   "knowledge recall" analog: these are the learnable facts);
+//! * `kl_to_baseline` — mean KL(baseline ‖ quantized) of the next-token
+//!   distributions (how much the quantized model drifts from BF16).
+//!
+//! All are computed from the `logits_bs{N}` artifacts.
+
+/// Aggregated probe metrics.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ProbeResult {
+    pub top1: f64,
+    pub top5: f64,
+    pub pref_acc: f64,
+    pub kl_to_baseline: f64,
+}
+
+/// Streaming accumulator over batches of logits.
+#[derive(Debug, Default)]
+pub struct ProbeAccum {
+    n: u64,
+    top1: u64,
+    top5: u64,
+    pref_n: u64,
+    pref_hit: u64,
+    kl_sum: f64,
+    kl_n: u64,
+}
+
+impl ProbeAccum {
+    /// `logits`: (batch*seq, vocab) for the quantized model;
+    /// `baseline_logits`: same shape from the BF16 run (or empty to skip
+    /// the KL probe); `targets`: the true next tokens; `is_pref`: marks
+    /// positions with a dominant continuation.
+    pub fn add_batch(
+        &mut self,
+        logits: &[f32],
+        baseline_logits: &[f32],
+        targets: &[i32],
+        is_pref: &[bool],
+        vocab: usize,
+    ) {
+        assert_eq!(logits.len(), targets.len() * vocab);
+        let do_kl = !baseline_logits.is_empty();
+        for (i, &t) in targets.iter().enumerate() {
+            let row = &logits[i * vocab..(i + 1) * vocab];
+            let t = t as usize;
+            let tv = row[t];
+            let mut greater = 0usize;
+            let mut max = f32::NEG_INFINITY;
+            for &v in row {
+                if v > tv {
+                    greater += 1;
+                }
+                if v > max {
+                    max = v;
+                }
+            }
+            self.n += 1;
+            if greater == 0 {
+                self.top1 += 1;
+            }
+            if greater < 5 {
+                self.top5 += 1;
+            }
+            if is_pref[i] {
+                self.pref_n += 1;
+                if greater == 0 {
+                    self.pref_hit += 1;
+                }
+            }
+            if do_kl {
+                let brow = &baseline_logits[i * vocab..(i + 1) * vocab];
+                self.kl_sum += kl_softmax(brow, row);
+                self.kl_n += 1;
+            }
+        }
+    }
+
+    pub fn finish(&self) -> ProbeResult {
+        ProbeResult {
+            top1: self.top1 as f64 / self.n.max(1) as f64 * 100.0,
+            top5: self.top5 as f64 / self.n.max(1) as f64 * 100.0,
+            pref_acc: self.pref_hit as f64 / self.pref_n.max(1) as f64
+                * 100.0,
+            kl_to_baseline: self.kl_sum / self.kl_n.max(1) as f64,
+        }
+    }
+}
+
+/// KL(softmax(p) ‖ softmax(q)) in nats.
+pub fn kl_softmax(p_logits: &[f32], q_logits: &[f32]) -> f64 {
+    let lse = |x: &[f32]| -> f64 {
+        let m = x.iter().cloned().fold(f32::NEG_INFINITY, f32::max) as f64;
+        m + x.iter().map(|&v| ((v as f64) - m).exp()).sum::<f64>().ln()
+    };
+    let lp = lse(p_logits);
+    let lq = lse(q_logits);
+    let mut kl = 0.0;
+    for (&a, &b) in p_logits.iter().zip(q_logits) {
+        let pa = ((a as f64) - lp).exp();
+        if pa > 0.0 {
+            kl += pa * (((a as f64) - lp) - ((b as f64) - lq));
+        }
+    }
+    kl.max(0.0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kl_zero_for_identical() {
+        let p = [1.0f32, 2.0, 0.5];
+        assert!(kl_softmax(&p, &p).abs() < 1e-12);
+        let q = [1.0f32, 1.0, 1.0];
+        assert!(kl_softmax(&p, &q) > 0.0);
+    }
+
+    #[test]
+    fn probe_accounting() {
+        // vocab 4; two positions; logits favour token 0 then token 2
+        let logits = [
+            5.0f32, 1.0, 0.0, 0.0, // argmax 0
+            0.0, 1.0, 5.0, 0.0, // argmax 2
+        ];
+        let mut acc = ProbeAccum::default();
+        acc.add_batch(&logits, &logits, &[0, 1], &[true, false], 4);
+        let r = acc.finish();
+        assert!((r.top1 - 50.0).abs() < 1e-9); // first hit, second miss
+        assert!((r.top5 - 100.0).abs() < 1e-9); // vocab 4 < 5: all hit @5
+        assert!((r.pref_acc - 100.0).abs() < 1e-9); // the pref position hit
+        assert!(r.kl_to_baseline.abs() < 1e-12);
+    }
+}

@@ -1,0 +1,200 @@
+//! Parameter store: ordered tensors matching the AOT manifest, with
+//! deterministic initialization, binary (de)serialization, and σ
+//! statistics (the per-tensor spectra of Figs. 2(b)/7).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::dist::Pcg64;
+use crate::runtime::artifacts::Manifest;
+use crate::stats;
+
+const MAGIC: &[u8; 8] = b"MSCALE01";
+
+/// Ordered parameter set (order = manifest `param_order`, which is the
+/// flattening order of the lowered HLO signature).
+#[derive(Debug, Clone)]
+pub struct Params {
+    pub order: Vec<String>,
+    pub tensors: BTreeMap<String, (Vec<usize>, Vec<f32>)>,
+}
+
+impl Params {
+    /// Deterministic initialization per the manifest init specs.
+    pub fn init(manifest: &Manifest, seed: u64) -> Params {
+        let mut rng = Pcg64::new(seed);
+        let mut tensors = BTreeMap::new();
+        // iterate in a fixed order so seeds are reproducible
+        for name in &manifest.param_order {
+            let spec = &manifest.params[name];
+            let n = spec.numel();
+            let data = match spec.init.as_str() {
+                "normal" => rng.normal_vec_f32(n, spec.std),
+                "ones" => vec![1.0; n],
+                _ => vec![0.0; n],
+            };
+            tensors.insert(name.clone(), (spec.shape.clone(), data));
+        }
+        Params { order: manifest.param_order.clone(), tensors }
+    }
+
+    /// Zero-filled clone with the same shapes (optimizer state).
+    pub fn zeros_like(&self) -> Params {
+        let tensors = self
+            .tensors
+            .iter()
+            .map(|(k, (s, d))| (k.clone(), (s.clone(), vec![0.0; d.len()])))
+            .collect();
+        Params { order: self.order.clone(), tensors }
+    }
+
+    pub fn get(&self, name: &str) -> Result<(&[usize], &[f32])> {
+        self.tensors
+            .get(name)
+            .map(|(s, d)| (s.as_slice(), d.as_slice()))
+            .with_context(|| format!("missing tensor {name:?}"))
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Result<&mut Vec<f32>> {
+        self.tensors
+            .get_mut(name)
+            .map(|(_, d)| d)
+            .with_context(|| format!("missing tensor {name:?}"))
+    }
+
+    pub fn numel(&self) -> usize {
+        self.tensors.values().map(|(_, d)| d.len()).sum()
+    }
+
+    /// The weight tensors the model quantizes (per layer), in the gain
+    /// vector's column order — matches `model.py::layer` g[0..6].
+    pub const QUANTIZED: [&'static str; 6] =
+        ["wq", "wk", "wv", "wo", "w1", "w2"];
+
+    /// Per-(layer, tensor) σ of the stored quantized weight tensors:
+    /// the model's σ spectrum (x-axis population of Fig. 2(b)).
+    pub fn sigma_spectrum(&self, n_layers: usize) -> Vec<(String, f64)> {
+        let mut out = Vec::new();
+        for name in Self::QUANTIZED {
+            if let Some((shape, data)) = self.tensors.get(name) {
+                let per_layer = data.len() / n_layers;
+                for l in 0..n_layers {
+                    let t = &data[l * per_layer..(l + 1) * per_layer];
+                    out.push((
+                        format!("{name}[{l}] {:?}", &shape[1..]),
+                        stats::std_dev_f32(t),
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// Save in a simple self-describing binary format.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut f = std::io::BufWriter::new(
+            std::fs::File::create(path)
+                .with_context(|| format!("create {path:?}"))?,
+        );
+        f.write_all(MAGIC)?;
+        f.write_all(&(self.order.len() as u32).to_le_bytes())?;
+        for name in &self.order {
+            let (shape, data) = &self.tensors[name];
+            f.write_all(&(name.len() as u32).to_le_bytes())?;
+            f.write_all(name.as_bytes())?;
+            f.write_all(&(shape.len() as u32).to_le_bytes())?;
+            for d in shape {
+                f.write_all(&(*d as u32).to_le_bytes())?;
+            }
+            for v in data {
+                f.write_all(&v.to_le_bytes())?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Params> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path)
+                .with_context(|| format!("open {path:?}"))?,
+        );
+        let mut magic = [0u8; 8];
+        f.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("{path:?}: not a microscale params file");
+        }
+        let mut u32buf = [0u8; 4];
+        f.read_exact(&mut u32buf)?;
+        let count = u32::from_le_bytes(u32buf) as usize;
+        let mut order = Vec::with_capacity(count);
+        let mut tensors = BTreeMap::new();
+        for _ in 0..count {
+            f.read_exact(&mut u32buf)?;
+            let name_len = u32::from_le_bytes(u32buf) as usize;
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let name = String::from_utf8(name)?;
+            f.read_exact(&mut u32buf)?;
+            let rank = u32::from_le_bytes(u32buf) as usize;
+            let mut shape = Vec::with_capacity(rank);
+            for _ in 0..rank {
+                f.read_exact(&mut u32buf)?;
+                shape.push(u32::from_le_bytes(u32buf) as usize);
+            }
+            let n: usize = shape.iter().product();
+            let mut data = vec![0f32; n];
+            let mut fbuf = [0u8; 4];
+            for v in data.iter_mut() {
+                f.read_exact(&mut fbuf)?;
+                *v = f32::from_le_bytes(fbuf);
+            }
+            order.push(name.clone());
+            tensors.insert(name, (shape, data));
+        }
+        Ok(Params { order, tensors })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> Params {
+        let mut tensors = BTreeMap::new();
+        tensors.insert("a".to_string(), (vec![2, 3], vec![1.0; 6]));
+        tensors
+            .insert("b".to_string(), (vec![4], vec![0.5, -0.5, 2.0, 0.0]));
+        Params { order: vec!["a".into(), "b".into()], tensors }
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let p = toy();
+        let path = std::env::temp_dir().join("microscale_params_test.bin");
+        p.save(&path).unwrap();
+        let q = Params::load(&path).unwrap();
+        assert_eq!(p.order, q.order);
+        for k in &p.order {
+            assert_eq!(p.tensors[k], q.tensors[k]);
+        }
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn zeros_like_preserves_shapes() {
+        let z = toy().zeros_like();
+        assert_eq!(z.numel(), 10);
+        assert!(z.tensors.values().all(|(_, d)| d.iter().all(|&v| v == 0.0)));
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let path = std::env::temp_dir().join("microscale_bad_magic.bin");
+        std::fs::write(&path, b"NOTMAGIC____").unwrap();
+        assert!(Params::load(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

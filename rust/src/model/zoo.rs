@@ -1,0 +1,164 @@
+//! σ-calibrated model zoo: stand-ins for the paper's model suite.
+//!
+//! Two mechanisms (DESIGN.md §1):
+//!
+//! 1. **σ-transform** of a trained model: each quantized weight tensor is
+//!    stored as w̃ = w/γ with the per-tensor gain γ folded into the
+//!    forward pass (`model.py` gains), preserving the learned function
+//!    *exactly* while dialing the stored-tensor σ spectrum to match a
+//!    target profile. This isolates precisely the statistic the paper
+//!    shows drives perplexity inversion.
+//! 2. **Weight-tensor ensembles** for the no-runtime experiments
+//!    (Figs. 2, 3(a), 6, 7): synthetic tensors whose per-tensor σ values
+//!    follow each profile, drawn Normal per Fig. 3(a)'s finding.
+//!
+//! Profiles are calibrated to the paper's descriptions: granite-3.3-8b
+//! (most tensors below the σ ≈ 2e-2 crossover → pronounced inversion),
+//! llama-2-7b (most above → no inversion down to bs 8), llama-3.1-8b /
+//! mixtral (intermediate → inversion at bs 8), mamba-codestral-7b
+//! (ultra-narrow tail), nemotron/bamba (hybrid SSM, wide spread).
+
+use crate::dist::{Ideal, IdealKind, Pcg64};
+use crate::model::weights::Params;
+use crate::stats;
+
+/// A named σ profile: log10-σ range that per-tensor σ values span.
+#[derive(Debug, Clone, Copy)]
+pub struct SigmaProfile {
+    pub name: &'static str,
+    /// log10 bounds of the bulk of the per-tensor σ spectrum
+    pub log10_lo: f64,
+    pub log10_hi: f64,
+    /// fraction of tensors in an extra narrow tail below log10_lo
+    pub narrow_tail: f64,
+}
+
+/// The model suite of the paper, as σ profiles.
+///
+/// Calibrated against the theory's UE4M3 block-size crossovers
+/// (bs8/16 at σ≈1.8e-2, bs16/32 at 1.6e-2, bs32/64 at 1.2e-2,
+/// bs64/128 at 8.8e-3, bs4/8 at 2.1e-2, bs2/4 at 2.8e-2) so each
+/// stand-in reproduces the paper's phenomenology: granite sits just
+/// below the bs8/16 crossover ("most weights below σ≈2e-2" → clear
+/// upswing), llama-2 sits above (monotone down to bs 8, inversion only
+/// at bs 2–4 per Fig. 5(b)), llama-3/mixtral straddle it (upswing at
+/// bs 8), mamba-codestral carries a genuinely narrow tail (log-scale
+/// gaps, Fig. 5(a)) without annihilating the tiny 4-layer model.
+pub const PROFILES: [SigmaProfile; 6] = [
+    SigmaProfile { name: "granite-like", log10_lo: -2.20, log10_hi: -1.85, narrow_tail: 0.08 },
+    SigmaProfile { name: "llama2-like", log10_lo: -1.68, log10_hi: -1.42, narrow_tail: 0.0 },
+    SigmaProfile { name: "llama3-like", log10_lo: -2.0, log10_hi: -1.65, narrow_tail: 0.04 },
+    SigmaProfile { name: "mixtral-like", log10_lo: -1.88, log10_hi: -1.62, narrow_tail: 0.03 },
+    SigmaProfile { name: "mamba-codestral-like", log10_lo: -2.65, log10_hi: -2.0, narrow_tail: 0.12 },
+    SigmaProfile { name: "bamba-like", log10_lo: -2.2, log10_hi: -1.5, narrow_tail: 0.08 },
+];
+
+pub fn profile(name: &str) -> Option<SigmaProfile> {
+    PROFILES.iter().copied().find(|p| p.name == name)
+}
+
+impl SigmaProfile {
+    /// Sample a per-tensor σ from the profile.
+    pub fn sample_sigma(&self, rng: &mut Pcg64) -> f64 {
+        let (lo, hi) = if rng.uniform() < self.narrow_tail {
+            (self.log10_lo - 1.0, self.log10_lo)
+        } else {
+            (self.log10_lo, self.log10_hi)
+        };
+        10f64.powf(lo + (hi - lo) * rng.uniform())
+    }
+
+    /// Synthetic weight-tensor ensemble: `count` tensors of `numel`
+    /// elements each, Normal with profile-sampled σ (for the
+    /// runtime-free MSE experiments).
+    pub fn tensor_ensemble(
+        &self,
+        rng: &mut Pcg64,
+        count: usize,
+        numel: usize,
+    ) -> Vec<Vec<f32>> {
+        let normal = Ideal::new(IdealKind::Normal);
+        (0..count)
+            .map(|_| {
+                let sigma = self.sample_sigma(rng);
+                normal.tensor_f32(rng, numel, sigma)
+            })
+            .collect()
+    }
+}
+
+/// Apply the σ-transform to a trained model: rescale each quantized
+/// weight tensor (per layer) so its stored σ matches a profile sample,
+/// folding the inverse into the `gains` tensor. Function-preserving up
+/// to f32 rounding (~1e-7 relative — orders of magnitude below any
+/// quantization effect under study; the integration suite pins the
+/// baseline-ppl drift). Exact γ is used rather than a power of two
+/// because the crossover-calibrated profile windows are only ~1.8x wide
+/// (zoo.rs PROFILES docs), tighter than pow2's ±41% granularity.
+pub fn apply_sigma_profile(
+    params: &mut Params,
+    n_layers: usize,
+    prof: &SigmaProfile,
+    seed: u64,
+) -> Vec<(String, f64, f64)> {
+    let mut rng = Pcg64::new(seed ^ 0x5A00_5A00);
+    let mut log = Vec::new();
+    for (col, name) in Params::QUANTIZED.iter().enumerate() {
+        let (_, data) = params.tensors[*name].clone();
+        let per_layer = data.len() / n_layers;
+        for l in 0..n_layers {
+            let t = l * per_layer..(l + 1) * per_layer;
+            let cur = stats::std_dev_f32(&data[t.clone()]);
+            let target = prof.sample_sigma(&mut rng);
+            let gamma = if cur > 0.0 { (cur / target) as f32 } else { 1.0 };
+            let w = params.get_mut(name).unwrap();
+            for v in &mut w[t] {
+                *v /= gamma;
+            }
+            let gains = params.get_mut("gains").unwrap();
+            gains[l * Params::QUANTIZED.len() + col] *= gamma;
+            log.push((format!("{name}[{l}]"), cur, cur / gamma as f64));
+        }
+    }
+    log
+}
+
+#[allow(dead_code)]
+fn pow2_near(x: f64) -> f32 {
+    if !(x > 0.0) {
+        return 1.0;
+    }
+    let e = x.log2().round() as i32;
+    crate::util::ldexp2(1.0, e.clamp(-60, 60))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn profiles_span_the_paper_ranges() {
+        let mut rng = Pcg64::new(1);
+        let g = profile("granite-like").unwrap();
+        let l2 = profile("llama2-like").unwrap();
+        let crossover = 2e-2;
+        let frac_below = |p: &SigmaProfile, rng: &mut Pcg64| {
+            let n = 2000;
+            (0..n).filter(|_| p.sample_sigma(rng) < crossover).count()
+                as f64
+                / n as f64
+        };
+        assert!(frac_below(&g, &mut rng) > 0.8, "granite mostly below");
+        assert!(frac_below(&l2, &mut rng) < 0.2, "llama2 mostly above");
+    }
+
+    #[test]
+    fn pow2_near_is_power_of_two() {
+        for x in [0.1, 0.5, 1.0, 3.7, 100.0] {
+            let g = pow2_near(x);
+            assert_eq!(g.to_bits() & 0x007F_FFFF, 0);
+            let g = g as f64;
+            assert!(g / x < 1.5 && x / g < 1.5, "{x} {g}");
+        }
+    }
+}

@@ -1,0 +1,139 @@
+//! Quantized GEMM semantics on the CPU side.
+//!
+//! The heavy model matmuls run through the AOT HLO artifacts; this module
+//! provides the same microscaling-GEMM semantics natively in Rust for
+//! (a) unit/property tests against the runtime path, (b) the quant_service
+//! example, and (c) the L3 perf benches.
+
+use super::{fake_quant, QuantScheme};
+
+/// Row-major (m×k) · (k×n) with both operands microscaling-fake-quantized
+/// along the contraction dimension (weights per output column, i.e. on the
+/// transposed view), mirroring `ref.quantized_matmul`.
+pub fn quantized_matmul(
+    scheme: &QuantScheme,
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    assert_eq!(x.len(), m * k);
+    assert_eq!(w.len(), k * n);
+    let xq = fake_quant(scheme, x); // rows are contiguous: blocks along k
+    // transpose w to (n, k) so its blocks run along k as well
+    let mut wt = vec![0.0f32; n * k];
+    for i in 0..k {
+        for j in 0..n {
+            wt[j * k + i] = w[i * n + j];
+        }
+    }
+    let wtq = fake_quant(scheme, &wt);
+    matmul_t(&xq, &wtq, m, k, n)
+}
+
+/// Plain f32 GEMM with the second operand transposed: (m×k) · (n×k)ᵀ.
+pub fn matmul_t(x: &[f32], wt: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let xr = &x[i * k..(i + 1) * k];
+        for j in 0..n {
+            let wr = &wt[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for t in 0..k {
+                acc += xr[t] * wr[t];
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    out
+}
+
+/// Reference unquantized GEMM (row-major operands).
+pub fn matmul(x: &[f32], w: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for t in 0..k {
+            let xv = x[i * k + t];
+            if xv == 0.0 {
+                continue;
+            }
+            let wr = &w[t * n..(t + 1) * n];
+            let or = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                or[j] += xv * wr[j];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Pcg64;
+    use crate::formats::{ElemFormat, BF16_SCALE, UE4M3};
+
+    #[test]
+    fn quantized_matmul_close_to_exact_for_wide_scales() {
+        let mut rng = Pcg64::new(8);
+        let (m, k, n) = (8, 32, 8);
+        let x = rng.normal_vec_f32(m * k, 1.0);
+        let w = rng.normal_vec_f32(k * n, 1.0);
+        let exact = matmul(&x, &w, m, k, n);
+        let s = QuantScheme::new(ElemFormat::FP4, BF16_SCALE, 8);
+        let q = quantized_matmul(&s, &x, &w, m, k, n);
+        // FP4 elements: coarse but correlated; relative Frobenius error
+        // bounded well below 1
+        let num: f64 = exact
+            .iter()
+            .zip(&q)
+            .map(|(&a, &b)| ((a - b) as f64).powi(2))
+            .sum();
+        let den: f64 = exact.iter().map(|&a| (a as f64).powi(2)).sum();
+        assert!(num / den < 0.05, "rel err {}", num / den);
+    }
+
+    #[test]
+    fn matmul_t_matches_matmul() {
+        let mut rng = Pcg64::new(9);
+        let (m, k, n) = (5, 7, 3);
+        let x = rng.normal_vec_f32(m * k, 1.0);
+        let w = rng.normal_vec_f32(k * n, 1.0);
+        let mut wt = vec![0.0f32; n * k];
+        for i in 0..k {
+            for j in 0..n {
+                wt[j * k + i] = w[i * n + j];
+            }
+        }
+        let a = matmul(&x, &w, m, k, n);
+        let b = matmul_t(&x, &wt, m, k, n);
+        for (u, v) in a.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn narrow_weights_suffer_under_ue4m3() {
+        let mut rng = Pcg64::new(10);
+        let (m, k, n) = (8, 64, 8);
+        let x = rng.normal_vec_f32(m * k, 1.0);
+        let w = rng.normal_vec_f32(k * n, 1e-3);
+        let exact = matmul(&x, &w, m, k, n);
+        let err = |scheme: &QuantScheme| -> f64 {
+            let q = quantized_matmul(scheme, &x, &w, m, k, n);
+            exact
+                .iter()
+                .zip(&q)
+                .map(|(&a, &b)| ((a - b) as f64).powi(2))
+                .sum()
+        };
+        let e43 = err(&QuantScheme::new(ElemFormat::FP4, UE4M3, 8));
+        let e53 = err(&QuantScheme::new(
+            ElemFormat::FP4,
+            crate::formats::UE5M3,
+            8,
+        ));
+        assert!(e53 < e43, "ue5m3 {e53} vs ue4m3 {e43}");
+    }
+}

@@ -1,0 +1,333 @@
+//! Block microscaling quantizer (Sec. 2.1) — the experiment-path
+//! implementation, bit-identical to `ref.py` (see `rust/tests/golden.rs`).
+//!
+//! [`QuantScheme`] bundles (element format, scale format, block size,
+//! per-tensor scaling); [`fake_quant`]/[`fake_quant_into`] quantize +
+//! dequantize tensors; [`error`] computes the per-block / per-tensor MSE
+//! statistics behind Figs. 2, 3, 6, 7, 9; [`matmul`] provides the
+//! quantized-GEMM semantics used by CPU-side checks.
+
+pub mod error;
+pub mod matmul;
+
+use crate::formats::{ElemFormat, MiniFloat};
+
+/// A complete microscaling quantization configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantScheme {
+    pub elem: ElemFormat,
+    pub scale: MiniFloat,
+    pub block_size: usize,
+    /// eq. 11 per-tensor pre-scaling (the paper's "-S" variants).
+    pub per_tensor: bool,
+}
+
+impl QuantScheme {
+    pub fn new(elem: ElemFormat, scale: MiniFloat, block_size: usize) -> Self {
+        QuantScheme { elem, scale, block_size, per_tensor: false }
+    }
+
+    pub fn with_per_tensor(mut self, on: bool) -> Self {
+        self.per_tensor = on;
+        self
+    }
+
+    /// Short id like `fp4_e2m1/ue4m3-S/bs8` (cache keys, reports).
+    pub fn id(&self) -> String {
+        format!(
+            "{}/{}{}/bs{}",
+            self.elem.name(),
+            self.scale.name,
+            if self.per_tensor { "-S" } else { "" },
+            self.block_size
+        )
+    }
+
+    /// eq. 11: s_T = (max(elem) * max(scale)) / absmax(T).
+    pub fn per_tensor_factor(&self, absmax: f32) -> f32 {
+        if !self.per_tensor || !(absmax > 0.0) {
+            return 1.0;
+        }
+        self.elem.max_val() * self.scale.max_val / absmax
+    }
+
+    /// Storage cost in bytes/element: 4-bit elems + scale bits shared by N
+    /// (Sec. 3.1: 1/2 + 2/N bytes for 16-bit scales).
+    pub fn bytes_per_element(&self, elem_bits: u32, scale_bits: u32) -> f64 {
+        elem_bits as f64 / 8.0
+            + scale_bits as f64 / 8.0 / self.block_size as f64
+    }
+}
+
+/// Quantize one block in place: `block` holds the raw values and is
+/// replaced by dequantized values. Returns the quantized scale.
+#[inline]
+pub fn fake_quant_block(scheme: &QuantScheme, block: &mut [f32]) -> f32 {
+    let mut absmax = 0.0f32;
+    for &v in block.iter() {
+        let a = v.abs();
+        if a > absmax {
+            absmax = a;
+        }
+    }
+    let s = scheme.scale.cast(absmax / scheme.elem.max_val());
+    if s > 0.0 {
+        // NOTE: true IEEE division (not multiply-by-reciprocal) — required
+        // for bit-exactness with ref.py: q = cast(x / s); xhat = s * q.
+        match scheme.elem {
+            ElemFormat::Fp(f) => {
+                for v in block.iter_mut() {
+                    *v = s * f.cast_signed(*v / s);
+                }
+            }
+            ElemFormat::Int(m) => {
+                for v in block.iter_mut() {
+                    *v = s * crate::formats::cast_int_symmetric(*v / s, m);
+                }
+            }
+        }
+    } else {
+        // App. F.3: whole block rounds to zero
+        block.fill(0.0);
+    }
+    s
+}
+
+/// Quantize-dequantize a full tensor (blocks along the flat axis).
+/// `x.len()` must be a multiple of the block size.
+pub fn fake_quant(scheme: &QuantScheme, x: &[f32]) -> Vec<f32> {
+    let mut out = x.to_vec();
+    fake_quant_into(scheme, &mut out);
+    out
+}
+
+/// In-place variant of [`fake_quant`]; returns the per-block scales.
+pub fn fake_quant_into(scheme: &QuantScheme, x: &mut [f32]) -> Vec<f32> {
+    assert!(
+        x.len() % scheme.block_size == 0,
+        "len {} not divisible by block size {}",
+        x.len(),
+        scheme.block_size
+    );
+    let s_t = if scheme.per_tensor {
+        let absmax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+        scheme.per_tensor_factor(absmax)
+    } else {
+        1.0
+    };
+    if s_t != 1.0 {
+        for v in x.iter_mut() {
+            *v *= s_t;
+        }
+    }
+    let mut scales = Vec::with_capacity(x.len() / scheme.block_size);
+    for block in x.chunks_mut(scheme.block_size) {
+        scales.push(fake_quant_block(scheme, block));
+    }
+    if s_t != 1.0 {
+        for v in x.iter_mut() {
+            *v /= s_t;
+        }
+    }
+    scales
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Pcg64;
+    use crate::formats::{BF16_SCALE, UE4M3, UE5M3};
+
+    fn mse(a: &[f32], b: &[f32]) -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(&x, &y)| ((x - y) as f64).powi(2))
+            .sum::<f64>()
+            / a.len() as f64
+    }
+
+    #[test]
+    fn zero_tensor_is_fixed_point() {
+        let s = QuantScheme::new(ElemFormat::FP4, UE4M3, 8);
+        let x = vec![0.0f32; 32];
+        assert_eq!(fake_quant(&s, &x), x);
+    }
+
+    #[test]
+    fn narrow_block_collapses_under_ue4m3_not_ue5m3() {
+        // App. F.3 / Sec. 5.2: absmax/6 below s_min/2 rounds the whole
+        // block to zero under UE4M3; UE5M3's extended range represents it.
+        let x = vec![6.0 * 2.0f32.powi(-10) * 0.99; 8];
+        let s4 = QuantScheme::new(ElemFormat::FP4, UE4M3, 8);
+        let s5 = QuantScheme::new(ElemFormat::FP4, UE5M3, 8);
+        assert!(fake_quant(&s4, &x).iter().all(|&v| v == 0.0));
+        assert!(fake_quant(&s5, &x).iter().any(|&v| v != 0.0));
+    }
+
+    #[test]
+    fn per_tensor_scaling_rescues_narrow_tensor() {
+        let mut rng = Pcg64::new(0);
+        let x = rng.normal_vec_f32(512, 1e-3);
+        let plain = QuantScheme::new(ElemFormat::FP4, UE4M3, 8);
+        let scaled = plain.with_per_tensor(true);
+        assert!(
+            mse(&fake_quant(&scaled, &x), &x) < mse(&fake_quant(&plain, &x), &x)
+        );
+    }
+
+    #[test]
+    fn ue5m3_close_to_per_tensor_on_narrow() {
+        let mut rng = Pcg64::new(1);
+        let x = rng.normal_vec_f32(4096, 5e-3);
+        let m_s = mse(
+            &fake_quant(
+                &QuantScheme::new(ElemFormat::FP4, UE4M3, 8)
+                    .with_per_tensor(true),
+                &x,
+            ),
+            &x,
+        );
+        let m_5 = mse(
+            &fake_quant(&QuantScheme::new(ElemFormat::FP4, UE5M3, 8), &x),
+            &x,
+        );
+        assert!(m_5 <= m_s * 1.1, "ue5m3 {m_5} vs ue4m3-S {m_s}");
+    }
+
+    #[test]
+    fn bf16_scales_monotone_in_block_size() {
+        // Fig. 2(c): with (quasi-)unquantized scales, smaller blocks are
+        // never worse on aggregate.
+        let mut rng = Pcg64::new(2);
+        let x = rng.normal_vec_f32(1 << 14, 0.02);
+        let m8 = mse(
+            &fake_quant(&QuantScheme::new(ElemFormat::FP4, BF16_SCALE, 8), &x),
+            &x,
+        );
+        let m16 = mse(
+            &fake_quant(&QuantScheme::new(ElemFormat::FP4, BF16_SCALE, 16), &x),
+            &x,
+        );
+        assert!(m8 < m16, "bs8 {m8} >= bs16 {m16}");
+    }
+
+    #[test]
+    fn crossover_under_quantized_scales() {
+        // Sec. 3.2 headline: at σ well below 2e-2, bs8 error EXCEEDS bs16
+        // under UE4M3 scales — the anomaly this paper is about.
+        let mut rng = Pcg64::new(3);
+        let x = rng.normal_vec_f32(1 << 15, 4e-3);
+        let m8 = mse(
+            &fake_quant(&QuantScheme::new(ElemFormat::FP4, UE4M3, 8), &x),
+            &x,
+        );
+        let m16 = mse(
+            &fake_quant(&QuantScheme::new(ElemFormat::FP4, UE4M3, 16), &x),
+            &x,
+        );
+        assert!(m8 > m16, "expected inversion: bs8 {m8} <= bs16 {m16}");
+    }
+
+    #[test]
+    fn storage_formula_matches_paper() {
+        // Sec. 3.1: N 4-bit elements + 16-bit scale = 1/2 + 2/N bytes/elem
+        for n in [8usize, 16, 32, 256] {
+            let s = QuantScheme::new(ElemFormat::FP4, BF16_SCALE, n);
+            assert!(
+                (s.bytes_per_element(4, 16) - (0.5 + 2.0 / n as f64)).abs()
+                    < 1e-12
+            );
+        }
+    }
+
+    #[test]
+    fn fake_quant_is_odd() {
+        // FQ(-x) == -FQ(x): absmax, scales, and the signed element cast
+        // are all sign-symmetric
+        crate::util::check::property("fake_quant odd", 40, |g| {
+            let bs = *g.pick(&[4usize, 8, 16]);
+            let sigma = g.log_uniform(1e-4, 1.0);
+            let x = g.normal_vec_f32(bs * 4, sigma);
+            let neg: Vec<f32> = x.iter().map(|v| -v).collect();
+            let scheme = QuantScheme::new(ElemFormat::FP4, UE4M3, bs);
+            let a = fake_quant(&scheme, &x);
+            let b = fake_quant(&scheme, &neg);
+            for (u, v) in a.iter().zip(&b) {
+                if *u == 0.0 && *v == 0.0 {
+                    continue; // collapsed blocks fill +0.0 for both signs
+                }
+                assert_eq!(u.to_bits(), (-v).to_bits());
+            }
+        });
+    }
+
+    #[test]
+    fn per_tensor_factor_saturates_range() {
+        // eq. 11: after scaling, the tensor absmax maps exactly onto
+        // max(elem) * max(scale)
+        let scheme = QuantScheme::new(ElemFormat::FP4, UE4M3, 8)
+            .with_per_tensor(true);
+        for absmax in [1e-4f32, 0.02, 3.0] {
+            let f = scheme.per_tensor_factor(absmax);
+            assert!((absmax * f - 6.0 * 448.0).abs() / (6.0 * 448.0) < 1e-6);
+        }
+        assert_eq!(scheme.per_tensor_factor(0.0), 1.0);
+    }
+
+    #[test]
+    fn ue5m3_never_worse_than_ue4m3_per_tensor() {
+        // grid nesting lifts to whole-tensor MSE at equal block size
+        crate::util::check::property("ue5m3 <= ue4m3 mse", 25, |g| {
+            let bs = *g.pick(&[8usize, 16]);
+            let sigma = g.log_uniform(1e-4, 0.5);
+            let x = g.normal_vec_f32(512, sigma);
+            let m43 = {
+                let s = QuantScheme::new(ElemFormat::FP4, UE4M3, bs);
+                let q = fake_quant(&s, &x);
+                crate::stats::mse_f32(&x, &q)
+            };
+            let m53 = {
+                let s = QuantScheme::new(ElemFormat::FP4, UE5M3, bs);
+                let q = fake_quant(&s, &x);
+                crate::stats::mse_f32(&x, &q)
+            };
+            // scale-grid nesting does NOT strictly dominate post-division
+            // errors element-by-element, but aggregate MSE should never
+            // regress beyond noise
+            assert!(m53 <= m43 * 1.05 + 1e-20, "{m53} vs {m43}");
+        });
+    }
+
+    #[test]
+    fn property_block_quant_bounds() {
+        // Per-block bound: |xhat| <= block absmax + one element quantum
+        // (q <= y + ½·elem-quantum, and elem quanta never exceed 1·s for
+        // FP4/INT4). In the subnormal-scale regime the scale itself can
+        // round up by ~2x (the very pathology the paper studies), so a
+        // purely relative bound does NOT hold — the additive one does.
+        crate::util::check::property("block bounds", 60, |g| {
+            let bs = *g.pick(&[2usize, 4, 8, 16, 32]);
+            let sigma = g.log_uniform(1e-5, 10.0);
+            let mut x = g.normal_vec_f32(bs * 8, sigma);
+            let scheme = QuantScheme::new(
+                if g.bool() { ElemFormat::FP4 } else { ElemFormat::INT4 },
+                *g.pick(&[UE4M3, UE5M3]),
+                bs,
+            );
+            let orig = x.clone();
+            let scales = fake_quant_into(&scheme, &mut x);
+            for (b, s) in scales.iter().enumerate() {
+                let blk = b * bs..(b + 1) * bs;
+                let absmax =
+                    orig[blk.clone()].iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                let qmax =
+                    x[blk].iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                assert!(
+                    qmax <= absmax + s + 1e-30,
+                    "{}: qmax {qmax} absmax {absmax} s {s}",
+                    scheme.id()
+                );
+            }
+        });
+    }
+}

@@ -1,0 +1,201 @@
+//! Rendering: aligned ASCII tables, log-log series plots, and Markdown —
+//! the terminal/EXPERIMENTS.md faces of every figure and table.
+
+/// An aligned text table.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row arity");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn render(&self) -> String {
+        let cols = self.header.len();
+        let mut w = vec![0usize; cols];
+        for (i, h) in self.header.iter().enumerate() {
+            w[i] = w[i].max(display_width(h));
+        }
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                w[i] = w[i].max(display_width(c));
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let line = |cells: &[String], w: &[usize]| -> String {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| {
+                    format!("{}{}", c, " ".repeat(w[i] - display_width(c)))
+                })
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&line(&self.header, &w));
+        out.push('\n');
+        out.push_str(&"-".repeat(w.iter().sum::<usize>() + 2 * (cols - 1)));
+        out.push('\n');
+        for r in &self.rows {
+            out.push_str(&line(r, &w));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// GitHub-flavoured Markdown rendering (for EXPERIMENTS.md).
+    pub fn markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("| {} |\n", self.header.join(" | ")));
+        out.push_str(&format!(
+            "|{}\n",
+            "---|".repeat(self.header.len())
+        ));
+        for r in &self.rows {
+            out.push_str(&format!("| {} |\n", r.join(" | ")));
+        }
+        out
+    }
+}
+
+fn display_width(s: &str) -> usize {
+    s.chars().count()
+}
+
+/// A named (x, y) series — one curve of a figure.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub x: Vec<f64>,
+    pub y: Vec<f64>,
+}
+
+impl Series {
+    pub fn new(name: impl Into<String>) -> Series {
+        Series { name: name.into(), x: Vec::new(), y: Vec::new() }
+    }
+
+    pub fn push(&mut self, x: f64, y: f64) {
+        self.x.push(x);
+        self.y.push(y);
+    }
+}
+
+/// ASCII log-log plot of several series (the terminal face of the MSE-σ
+/// figures). Each series gets a distinct glyph; overlapping points show
+/// the later series' glyph.
+pub fn ascii_loglog(series: &[Series], width: usize, height: usize) -> String {
+    const GLYPHS: &[char] = &['o', 'x', '+', '*', '#', '@', '%', '&'];
+    let pts: Vec<(f64, f64)> = series
+        .iter()
+        .flat_map(|s| s.x.iter().zip(&s.y).map(|(&a, &b)| (a, b)))
+        .filter(|(a, b)| *a > 0.0 && *b > 0.0)
+        .collect();
+    if pts.is_empty() {
+        return "(no positive data)\n".to_string();
+    }
+    let (mut x0, mut x1, mut y0, mut y1) =
+        (f64::MAX, f64::MIN, f64::MAX, f64::MIN);
+    for (a, b) in &pts {
+        x0 = x0.min(a.log10());
+        x1 = x1.max(a.log10());
+        y0 = y0.min(b.log10());
+        y1 = y1.max(b.log10());
+    }
+    if x1 - x0 < 1e-12 {
+        x1 = x0 + 1.0;
+    }
+    if y1 - y0 < 1e-12 {
+        y1 = y0 + 1.0;
+    }
+    // clamp the y span to 12 decades below the top so vanishing tails
+    // (e.g. the s=0 term at large σ) don't squash the interesting region
+    y0 = y0.max(y1 - 12.0);
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let g = GLYPHS[si % GLYPHS.len()];
+        for (&a, &b) in s.x.iter().zip(&s.y) {
+            if !(a > 0.0 && b > 0.0) {
+                continue;
+            }
+            let ix = (((a.log10() - x0) / (x1 - x0)) * (width - 1) as f64)
+                .round() as usize;
+            let iy = (((b.log10() - y0) / (y1 - y0)) * (height - 1) as f64)
+                .round() as usize;
+            grid[height - 1 - iy][ix.min(width - 1)] = g;
+        }
+    }
+    let mut out = String::new();
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!(
+            "  {} {}\n",
+            GLYPHS[si % GLYPHS.len()],
+            s.name
+        ));
+    }
+    out.push_str(&format!("  y: log10 in [{y0:.1}, {y1:.1}]\n"));
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!("  x: log10 in [{x0:.1}, {x1:.1}]\n"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new("T", &["name", "v"]);
+        t.row(vec!["a".into(), "1.25".into()]);
+        t.row(vec!["longer".into(), "2".into()]);
+        let r = t.render();
+        assert!(r.contains("== T =="));
+        let lines: Vec<&str> = r.lines().collect();
+        assert_eq!(lines.len(), 5);
+        assert!(r.contains("longer  2"));
+        let md = t.markdown();
+        assert!(md.starts_with("| name | v |"));
+    }
+
+    #[test]
+    fn plot_handles_data() {
+        let mut s = Series::new("curve");
+        for i in 1..20 {
+            s.push(i as f64 * 1e-3, (i as f64).powi(2) * 1e-6);
+        }
+        let p = ascii_loglog(&[s], 40, 10);
+        assert!(p.contains("curve"));
+        assert!(p.contains('o'));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_arity() {
+        let mut t = Table::new("T", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,190 @@
+//! Artifact manifest: the contract emitted by `python/compile/aot.py`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Model dimensions as lowered (fixed per artifact set).
+#[derive(Debug, Clone, Copy)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub n_layers: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+}
+
+/// How a parameter tensor is initialized (mirrors `model.init_specs`).
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub shape: Vec<usize>,
+    pub init: String, // "normal" | "ones" | "zeros"
+    pub std: f64,
+    pub decay: bool,
+}
+
+impl ParamSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One tensor slot of an artifact signature.
+#[derive(Debug, Clone)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "float32" | "int32"
+}
+
+/// One lowered HLO artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+/// Parsed `artifacts/manifest.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelDims,
+    pub eval_batch: usize,
+    pub train_batch: usize,
+    pub block_sizes: Vec<usize>,
+    pub qvec_len: usize,
+    pub params: BTreeMap<String, ParamSpec>,
+    pub param_order: Vec<String>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts`"))?;
+        let j = Json::parse(&text)?;
+        let m = j.get("model")?;
+        let model = ModelDims {
+            vocab: m.get("vocab")?.as_usize()?,
+            d_model: m.get("d_model")?.as_usize()?,
+            n_heads: m.get("n_heads")?.as_usize()?,
+            n_layers: m.get("n_layers")?.as_usize()?,
+            d_ff: m.get("d_ff")?.as_usize()?,
+            seq_len: m.get("seq_len")?.as_usize()?,
+        };
+        let mut params = BTreeMap::new();
+        for (k, v) in j.get("params")?.as_obj()? {
+            params.insert(
+                k.clone(),
+                ParamSpec {
+                    shape: v.get("shape")?.as_usize_vec()?,
+                    init: v.get("init")?.as_str()?.to_string(),
+                    std: v.get("std")?.as_f64()?,
+                    decay: v.get("decay")?.as_bool()?,
+                },
+            );
+        }
+        let param_order: Vec<String> = j
+            .get("param_order")?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_str()?.to_string()))
+            .collect::<Result<_>>()?;
+        if param_order.len() != params.len() {
+            bail!("param_order / params mismatch");
+        }
+        let tensor_specs = |arr: &Json| -> Result<Vec<TensorSpec>> {
+            arr.as_arr()?
+                .iter()
+                .map(|t| {
+                    Ok(TensorSpec {
+                        name: t
+                            .opt("name")
+                            .map(|n| n.as_str().map(|s| s.to_string()))
+                            .transpose()?
+                            .unwrap_or_default(),
+                        shape: t.get("shape")?.as_usize_vec()?,
+                        dtype: t.get("dtype")?.as_str()?.to_string(),
+                    })
+                })
+                .collect()
+        };
+        let mut artifacts = BTreeMap::new();
+        for (k, v) in j.get("artifacts")?.as_obj()? {
+            artifacts.insert(
+                k.clone(),
+                ArtifactSpec {
+                    name: k.clone(),
+                    file: v.get("file")?.as_str()?.to_string(),
+                    inputs: tensor_specs(v.get("inputs")?)?,
+                    outputs: tensor_specs(v.get("outputs")?)?,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            model,
+            eval_batch: j.get("eval_batch")?.as_usize()?,
+            train_batch: j.get("train_batch")?.as_usize()?,
+            block_sizes: j.get("block_sizes")?.as_usize_vec()?,
+            qvec_len: j.get("qvec_len")?.as_usize()?,
+            params,
+            param_order,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact {name:?}"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.artifact(name)?.file))
+    }
+
+    /// Total parameter count of the lowered model.
+    pub fn param_count(&self) -> usize {
+        self.params.values().map(|p| p.numel()).sum()
+    }
+
+    pub fn loss_artifact(&self, block_size: usize) -> String {
+        format!("loss_bs{block_size}")
+    }
+
+    pub fn logits_artifact(&self, block_size: usize) -> String {
+        format!("logits_bs{block_size}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        // unit-level smoke; full coverage lives in rust/tests/integration.rs
+        let dir = Path::new("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(dir).unwrap();
+        assert!(m.param_count() > 100_000);
+        assert!(m.artifacts.contains_key("train_step"));
+        assert!(m.artifacts.contains_key("loss_bs8"));
+        assert_eq!(m.qvec_len, 11);
+        // every artifact file exists
+        for a in m.artifacts.values() {
+            assert!(m.dir.join(&a.file).exists(), "{}", a.file);
+        }
+    }
+}

@@ -1,0 +1,195 @@
+//! Evaluation drivers: perplexity and probe metrics over the AOT loss /
+//! logits artifacts.
+//!
+//! Parameters are uploaded to device-resident buffers once per model and
+//! reused across every (format, block size) configuration in a sweep —
+//! the host→device traffic per evaluation is then just the token batch
+//! and the 11-scalar qvec.
+
+use anyhow::{Context, Result};
+
+use super::qconfig::QConfig;
+use super::session::{literal_scalar_f32, literal_vec_f32, HostTensor, Session};
+use crate::model::probes::{ProbeAccum, ProbeResult};
+use crate::model::weights::Params;
+use crate::model::Corpus;
+
+/// Device-resident parameter set (manifest order).
+pub struct DeviceParams {
+    bufs: Vec<xla::PjRtBuffer>,
+}
+
+impl DeviceParams {
+    pub fn upload(session: &Session, params: &Params) -> Result<DeviceParams> {
+        let order = &session.manifest().param_order;
+        let mut bufs = Vec::with_capacity(order.len());
+        for name in order {
+            let (shape, data) = params.get(name)?;
+            bufs.push(
+                session
+                    .upload(&HostTensor::F32(shape.to_vec(), data.to_vec()))
+                    .with_context(|| format!("uploading {name}"))?,
+            );
+        }
+        Ok(DeviceParams { bufs })
+    }
+}
+
+/// Mean NLL (nats/token) over token batches; each batch is a flattened
+/// (eval_batch, seq_len+1) i32 tensor.
+pub fn mean_nll(
+    session: &Session,
+    params: &DeviceParams,
+    qcfg: &QConfig,
+    block_size: usize,
+    batches: &[Vec<i32>],
+) -> Result<f64> {
+    let m = session.manifest();
+    let artifact = m.loss_artifact(block_size);
+    let tok_shape = vec![m.eval_batch, m.model.seq_len + 1];
+    let qv = qcfg.to_qvec();
+    let qv_buf = session
+        .upload(&HostTensor::F32(vec![qv.len()], qv.to_vec()))?;
+    let mut total = 0.0f64;
+    for b in batches {
+        let tok = session.upload(&HostTensor::I32(tok_shape.clone(), b.clone()))?;
+        let mut args: Vec<&xla::PjRtBuffer> =
+            params.bufs.iter().collect();
+        args.push(&tok);
+        args.push(&qv_buf);
+        let out = session.run_buffers(&artifact, &args)?;
+        total += literal_scalar_f32(&out[0])? as f64;
+    }
+    Ok(total / batches.len().max(1) as f64)
+}
+
+/// Perplexity = exp(mean NLL).
+pub fn perplexity(
+    session: &Session,
+    params: &DeviceParams,
+    qcfg: &QConfig,
+    block_size: usize,
+    batches: &[Vec<i32>],
+) -> Result<f64> {
+    Ok(mean_nll(session, params, qcfg, block_size, batches)?.exp())
+}
+
+/// Logits for one (eval_batch, seq_len) token batch; returns a
+/// (batch*seq, vocab) row-major tensor.
+pub fn logits(
+    session: &Session,
+    params: &DeviceParams,
+    qcfg: &QConfig,
+    block_size: usize,
+    tokens: &[i32],
+) -> Result<Vec<f32>> {
+    let m = session.manifest();
+    let artifact = m.logits_artifact(block_size);
+    let qv = qcfg.to_qvec();
+    let qv_buf =
+        session.upload(&HostTensor::F32(vec![qv.len()], qv.to_vec()))?;
+    let tok = session.upload(&HostTensor::I32(
+        vec![m.eval_batch, m.model.seq_len],
+        tokens.to_vec(),
+    ))?;
+    let mut args: Vec<&xla::PjRtBuffer> = params.bufs.iter().collect();
+    args.push(&tok);
+    args.push(&qv_buf);
+    let out = session.run_buffers(&artifact, &args)?;
+    literal_vec_f32(&out[0])
+}
+
+/// Run the downstream probes (Table 1/3 substitute) for one config.
+///
+/// Uses `n_batches` held-out batches; the BF16 baseline logits are
+/// recomputed per batch (callers comparing many configs should hoist
+/// them — `probe_many` does).
+pub fn probes_for_config(
+    session: &Session,
+    params: &DeviceParams,
+    corpus: &Corpus,
+    qcfg: &QConfig,
+    block_size: usize,
+    n_batches: usize,
+    seed: u64,
+) -> Result<ProbeResult> {
+    let m = session.manifest();
+    let (b, s, v) = (m.eval_batch, m.model.seq_len, m.model.vocab);
+    let baseline = QConfig::baseline();
+    let mut acc = ProbeAccum::default();
+    // batches of (b, s+1): inputs [:, :-1], targets [:, 1:]
+    let batches = corpus.batches(seed, n_batches, b, s + 1);
+    for batch in &batches {
+        let (inputs, targets, is_pref) = split_probe_batch(corpus, batch, b, s);
+        let ql = logits(session, params, qcfg, block_size, &inputs)?;
+        let bl = logits(session, params, &baseline, block_size, &inputs)?;
+        acc.add_batch(&ql, &bl, &targets, &is_pref, v);
+    }
+    Ok(acc.finish())
+}
+
+/// Shared probe evaluation across many configs (baseline hoisted).
+pub fn probe_many(
+    session: &Session,
+    params: &DeviceParams,
+    corpus: &Corpus,
+    configs: &[(QConfig, usize)],
+    n_batches: usize,
+    seed: u64,
+) -> Result<Vec<ProbeResult>> {
+    let m = session.manifest();
+    let (b, s, v) = (m.eval_batch, m.model.seq_len, m.model.vocab);
+    let batches = corpus.batches(seed, n_batches, b, s + 1);
+    let mut prepared = Vec::new();
+    for batch in &batches {
+        let (inputs, targets, is_pref) = split_probe_batch(corpus, batch, b, s);
+        // baseline at any block size is identical (quant bypassed); use
+        // the first config's block size artifact
+        let bl = logits(
+            session,
+            params,
+            &QConfig::baseline(),
+            configs.first().map(|c| c.1).unwrap_or(8),
+            &inputs,
+        )?;
+        prepared.push((inputs, targets, is_pref, bl));
+    }
+    let mut out = Vec::with_capacity(configs.len());
+    for (qcfg, bs) in configs {
+        let mut acc = ProbeAccum::default();
+        for (inputs, targets, is_pref, bl) in &prepared {
+            let ql = logits(session, params, qcfg, *bs, inputs)?;
+            acc.add_batch(&ql, bl, targets, is_pref, v);
+        }
+        out.push(acc.finish());
+    }
+    Ok(out)
+}
+
+fn split_probe_batch(
+    corpus: &Corpus,
+    batch: &[i32],
+    b: usize,
+    s: usize,
+) -> (Vec<i32>, Vec<i32>, Vec<bool>) {
+    let mut inputs = Vec::with_capacity(b * s);
+    let mut targets = Vec::with_capacity(b * s);
+    let mut is_pref = Vec::with_capacity(b * s);
+    for row in 0..b {
+        let r = &batch[row * (s + 1)..(row + 1) * (s + 1)];
+        inputs.extend_from_slice(&r[..s]);
+        targets.extend_from_slice(&r[1..]);
+        for i in 0..s {
+            let (a_ctx, b_ctx) = if i == 0 {
+                (r[0], r[0]) // degenerate first-position context
+            } else {
+                (r[i - 1], r[i])
+            };
+            is_pref.push(
+                corpus.top_continuation(a_ctx as u32, b_ctx as u32)
+                    == r[i + 1],
+            );
+        }
+    }
+    (inputs, targets, is_pref)
+}

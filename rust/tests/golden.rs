@@ -1,0 +1,89 @@
+//! Cross-language bit-exactness: the Rust quantizer vs the python oracle
+//! (`ref.py`), via golden vectors emitted by `python/compile/aot.py` into
+//! `artifacts/golden/quant_golden.json`.
+//!
+//! Every minifloat cast and every block fake-quant case must match
+//! BIT-FOR-BIT — the whole experiment stack relies on the two
+//! implementations being interchangeable.
+
+use microscale::formats::{scale_format, ElemFormat, MiniFloat};
+use microscale::quant::{fake_quant, QuantScheme};
+use microscale::util::json::Json;
+
+fn load() -> Json {
+    let text = std::fs::read_to_string("artifacts/golden/quant_golden.json")
+        .expect("run `make artifacts` first");
+    Json::parse(&text).unwrap()
+}
+
+#[test]
+fn golden_minifloat_casts_bit_exact() {
+    let g = load();
+    let mut checked = 0usize;
+    for case in g.get("cases").unwrap().as_arr().unwrap() {
+        if case.get("kind").unwrap().as_str().unwrap() != "cast" {
+            continue;
+        }
+        let fmt = MiniFloat {
+            m_bits: case.get("m_bits").unwrap().as_i64().unwrap() as i32,
+            e_min: case.get("e_min").unwrap().as_i64().unwrap() as i32,
+            max_val: case.get("max_val").unwrap().as_f64().unwrap() as f32,
+            name: "golden",
+        };
+        let xs = case.get("x").unwrap().as_f32_vec().unwrap();
+        let ys = case.get("y").unwrap().as_f32_vec().unwrap();
+        let reg = scale_format(case.get("fmt").unwrap().as_str().unwrap());
+        for (x, y) in xs.iter().zip(&ys) {
+            let got = fmt.cast(*x);
+            assert_eq!(
+                got.to_bits(),
+                y.to_bits(),
+                "fmt {:?} x={x}: got {got}, want {y}",
+                case.get("fmt").unwrap()
+            );
+            // the registry entry (if present) must agree with the golden
+            // file's parameters
+            if let Some(r) = reg {
+                assert_eq!(r.cast(*x).to_bits(), y.to_bits());
+            }
+        }
+        checked += xs.len();
+    }
+    assert!(checked > 1000, "only {checked} cast points checked");
+}
+
+#[test]
+fn golden_fake_quant_bit_exact() {
+    let g = load();
+    let mut checked = 0usize;
+    for case in g.get("cases").unwrap().as_arr().unwrap() {
+        if case.get("kind").unwrap().as_str().unwrap() != "fake_quant" {
+            continue;
+        }
+        let elem =
+            ElemFormat::from_name(case.get("elem").unwrap().as_str().unwrap())
+                .unwrap();
+        let scale =
+            scale_format(case.get("scale").unwrap().as_str().unwrap())
+                .unwrap();
+        let bs = case.get("block_size").unwrap().as_usize().unwrap();
+        let pt = case.get("per_tensor").unwrap().as_bool().unwrap();
+        let scheme =
+            QuantScheme::new(elem, scale, bs).with_per_tensor(pt);
+        let xs = case.get("x").unwrap().as_f32_vec().unwrap();
+        let ys = case.get("y").unwrap().as_f32_vec().unwrap();
+        let got = fake_quant(&scheme, &xs);
+        for (i, (a, b)) in got.iter().zip(&ys).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "{} elem {}: got {a}, want {b} (x={})",
+                scheme.id(),
+                i,
+                xs[i]
+            );
+        }
+        checked += 1;
+    }
+    assert!(checked > 100, "only {checked} fake-quant cases");
+}

@@ -1,0 +1,198 @@
+//! End-to-end integration over the PJRT runtime: artifacts load, the
+//! training step optimizes, perplexity evaluation responds to
+//! quantization configs the way the paper says it must, and the CPU-side
+//! quantizer agrees with the in-graph quantization.
+
+use std::path::Path;
+
+use microscale::model::{weights::Params, Corpus};
+use microscale::runtime::eval::{self, DeviceParams};
+use microscale::runtime::train::{train, TrainConfig};
+use microscale::runtime::{Manifest, QConfig, Session};
+
+fn session() -> Session {
+    let m = Manifest::load(Path::new("artifacts")).expect("make artifacts");
+    Session::open(m).unwrap()
+}
+
+#[test]
+fn end_to_end_train_and_quantized_eval() {
+    let s = session();
+    let m = s.manifest().clone();
+    let corpus = Corpus::default_language(m.model.vocab);
+
+    // -- a few training steps must reduce loss -------------------------
+    let init = Params::init(&m, 7);
+    let cfg = TrainConfig {
+        steps: 20,
+        lr: 2e-3,
+        warmup: 2,
+        weight_decay: 0.01,
+        seed: 3,
+        log_every: 4,
+    };
+    let (trained, curve) = train(&s, &corpus, &init, &cfg).unwrap();
+    assert!(curve.len() >= 2);
+    let first = curve.first().unwrap().loss;
+    let last = curve.last().unwrap().loss;
+    assert!(
+        last < first - 0.1,
+        "loss did not decrease: {first} -> {last}"
+    );
+
+    // -- eval: quantization configs order as the paper requires --------
+    let dev = DeviceParams::upload(&s, &trained).unwrap();
+    let batches = corpus.batches(999, 2, m.eval_batch, m.model.seq_len + 1);
+    let ppl = |q: &QConfig, bs: usize| -> f64 {
+        eval::perplexity(&s, &dev, q, bs, &batches).unwrap()
+    };
+    let base = ppl(&QConfig::baseline(), 8);
+    let ue4m3 = ppl(&QConfig::fp4("ue4m3").unwrap(), 8);
+    let ue5m3 = ppl(&QConfig::fp4("ue5m3").unwrap(), 8);
+    let bf16s = ppl(&QConfig::fp4("bf16").unwrap(), 8);
+    assert!(base > 1.0 && base < 300.0, "baseline ppl {base}");
+    assert!(ue4m3 >= base * 0.999, "quantized can't beat baseline much");
+    // after only 20 steps the model is weakly trained and format
+    // orderings carry ~0.3% noise; the strict orderings are asserted on
+    // the fully-trained models by the experiment suite (EXPERIMENTS.md)
+    assert!(bf16s <= ue4m3 * 1.005, "bf16 scales {bf16s} vs ue4m3 {ue4m3}");
+    assert!(ue5m3 <= ue4m3 * 1.005, "ue5m3 {ue5m3} vs ue4m3 {ue4m3}");
+
+    // baseline is block-size invariant (quant bypassed)
+    let base16 = ppl(&QConfig::baseline(), 16);
+    assert!((base - base16).abs() < 1e-6 * base.max(1.0));
+
+    // -- logits + probes pipeline --------------------------------------
+    let probes = eval::probes_for_config(
+        &s,
+        &dev,
+        &corpus,
+        &QConfig::baseline(),
+        8,
+        1,
+        555,
+    )
+    .unwrap();
+    assert!(probes.top1 > 0.0 && probes.top1 <= 100.0);
+    assert!(probes.kl_to_baseline.abs() < 1e-9, "baseline KL to itself");
+}
+
+#[test]
+fn kernel_artifacts_match_rust_quantizer() {
+    // The standalone Pallas kernel artifact (L1) must agree with the
+    // Rust CPU quantizer bit-for-bit on the same inputs.
+    use microscale::formats::{ElemFormat, UE4M3};
+    use microscale::quant::{fake_quant, QuantScheme};
+    use microscale::runtime::session::HostTensor;
+
+    let s = session();
+    let mut rng = microscale::dist::Pcg64::new(42);
+    let x = rng.normal_vec_f32(128 * 128, 0.02);
+    let out = s
+        .run(
+            "kernel_fq",
+            &[HostTensor::F32(vec![128, 128], x.clone())],
+        )
+        .unwrap();
+    let got = out[0].to_vec::<f32>().unwrap();
+    let scheme = QuantScheme::new(ElemFormat::FP4, UE4M3, 16);
+    let want = fake_quant(&scheme, &x);
+    assert_eq!(got.len(), want.len());
+    for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "elem {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn fused_gemm_artifact_matches_rust() {
+    use microscale::formats::{ElemFormat, UE4M3};
+    use microscale::quant::matmul::quantized_matmul;
+    use microscale::quant::QuantScheme;
+    use microscale::runtime::session::HostTensor;
+
+    let s = session();
+    let mut rng = microscale::dist::Pcg64::new(43);
+    let x = rng.normal_vec_f32(128 * 128, 0.05);
+    let w = rng.normal_vec_f32(128 * 128, 0.02);
+    let out = s
+        .run(
+            "kernel_qmm",
+            &[
+                HostTensor::F32(vec![128, 128], x.clone()),
+                HostTensor::F32(vec![128, 128], w.clone()),
+            ],
+        )
+        .unwrap();
+    let got = out[0].to_vec::<f32>().unwrap();
+    let scheme = QuantScheme::new(ElemFormat::FP4, UE4M3, 16);
+    let want = quantized_matmul(&scheme, &x, &w, 128, 128, 128);
+    let mut max_rel = 0.0f64;
+    for (a, b) in got.iter().zip(&want) {
+        let d = (*a as f64 - *b as f64).abs()
+            / (b.abs() as f64).max(1e-3);
+        max_rel = max_rel.max(d);
+    }
+    // accumulation order differs (XLA dot vs naive loop): tiny fp drift
+    assert!(max_rel < 1e-4, "max rel diff {max_rel}");
+}
+
+#[test]
+fn sigma_transform_preserves_baseline_ppl() {
+    // the zoo transform must not change the unquantized model function
+    use microscale::model::zoo;
+
+    let s = session();
+    let m = s.manifest().clone();
+    let corpus = Corpus::default_language(m.model.vocab);
+    let params = Params::init(&m, 11);
+    let batches = corpus.batches(1000, 1, m.eval_batch, m.model.seq_len + 1);
+
+    let dev = DeviceParams::upload(&s, &params).unwrap();
+    let base =
+        eval::perplexity(&s, &dev, &QConfig::baseline(), 8, &batches).unwrap();
+
+    let mut zp = params.clone();
+    let prof = zoo::profile("granite-like").unwrap();
+    zoo::apply_sigma_profile(&mut zp, m.model.n_layers, &prof, 5);
+    let devz = DeviceParams::upload(&s, &zp).unwrap();
+    let basez =
+        eval::perplexity(&s, &devz, &QConfig::baseline(), 8, &batches)
+            .unwrap();
+    let rel = (base - basez).abs() / base;
+    assert!(rel < 1e-3, "σ-transform changed the function: {base} vs {basez}");
+
+    // ... but it must increase the *effective* quantization error of the
+    // stored weights: sum of gamma^2 * ||w_stored - FQ(w_stored)||^2
+    // relative to the effective weight norm. (The perplexity-level effect
+    // needs a trained model and is covered by the Fig. 1 reproduction.)
+    use microscale::formats::{ElemFormat, UE4M3};
+    use microscale::quant::{fake_quant, QuantScheme};
+    let rel_err = |p: &Params| -> f64 {
+        let scheme = QuantScheme::new(ElemFormat::FP4, UE4M3, 8);
+        let (_, gains) = p.get("gains").unwrap();
+        let n_layers = m.model.n_layers;
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (col, name) in Params::QUANTIZED.iter().enumerate() {
+            let (_, data) = p.get(name).unwrap();
+            let per_layer = data.len() / n_layers;
+            for l in 0..n_layers {
+                let t = &data[l * per_layer..(l + 1) * per_layer];
+                let g = gains[l * Params::QUANTIZED.len() + col] as f64;
+                let tq = fake_quant(&scheme, t);
+                for (a, b) in t.iter().zip(&tq) {
+                    num += g * g * ((a - b) as f64).powi(2);
+                    den += g * g * (*a as f64).powi(2);
+                }
+            }
+        }
+        num / den
+    };
+    let e_orig = rel_err(&params);
+    let e_zoo = rel_err(&zp);
+    assert!(
+        e_zoo > 1.5 * e_orig,
+        "granite-like transform should raise relative UE4M3 error: \
+         {e_zoo:.3e} vs {e_orig:.3e}"
+    );
+}

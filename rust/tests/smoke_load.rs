@@ -1,0 +1,19 @@
+// Smoke: AOT artifacts load + execute on the PJRT CPU client.
+use anyhow::Result;
+
+#[test]
+fn kernel_fq_artifact_runs() -> Result<()> {
+    let client = xla::PjRtClient::cpu()?;
+    let proto = xla::HloModuleProto::from_text_file("artifacts/kernel_fq.hlo.txt")?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    let exe = client.compile(&comp)?;
+    let x: Vec<f32> = (0..128 * 128).map(|i| (i as f32 * 0.001) - 8.0).collect();
+    let lit = xla::Literal::vec1(&x).reshape(&[128, 128])?;
+    let out = exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+    let out = out.to_tuple1()?;
+    let v = out.to_vec::<f32>()?;
+    assert_eq!(v.len(), 128 * 128);
+    // fake-quant output must be finite and within |x|max * small slack
+    assert!(v.iter().all(|a| a.is_finite() && a.abs() <= 9.0));
+    Ok(())
+}
