@@ -1,13 +1,15 @@
 //! Quickstart: quantize a tensor with every scale format of the paper,
-//! see the anomaly, and run the L1 Pallas kernel artifact through PJRT.
+//! see the anomaly, store it on real packed bytes, and (when artifacts
+//! are present) run the L1 Pallas kernel artifact through PJRT.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! cargo run --release --example quickstart          # steps 1-3
+//! make artifacts && cargo run --release --example quickstart  # + PJRT
 //! ```
 
 use microscale::dist::Pcg64;
 use microscale::formats::{ElemFormat, SCALE_FORMATS};
-use microscale::quant::{fake_quant, QuantScheme};
+use microscale::quant::{fake_quant, PackedMxTensor, QuantScheme};
 use microscale::report::Table;
 use microscale::runtime::{Manifest, Session};
 use microscale::stats::mse_f32;
@@ -54,9 +56,42 @@ fn main() -> anyhow::Result<()> {
         mse_f32(&x, &fake_quant(&s53, &x)),
     );
 
-    // 3) The same quantizer as an AOT Pallas kernel through PJRT.
-    let manifest = Manifest::load(std::path::Path::new("artifacts"))?;
-    let session = Session::open(manifest)?;
+    // 3) The same tensor on real packed bytes: PackedMxTensor stores
+    //    bit-packed FP4 codes + one scale byte per block, and decodes
+    //    bit-exactly to the fake-quant output.
+    let packed = PackedMxTensor::encode(&s43, &x)?;
+    assert!(packed
+        .decode()
+        .iter()
+        .zip(&fake_quant(&s43, &x))
+        .all(|(a, b)| a.to_bits() == b.to_bits()));
+    println!(
+        "PackedMxTensor: {} elements -> {} bytes ({:.3} bits/elem, \
+         {:.2}x smaller than bf16), decode == fake_quant bit-for-bit ✓\n",
+        packed.len(),
+        packed.payload_bytes(),
+        packed.bits_per_element(),
+        packed.compression_vs_bf16(),
+    );
+
+    // 4) The same quantizer as an AOT Pallas kernel through PJRT
+    //    (optional: needs `make artifacts` and a native PJRT build).
+    let manifest = match Manifest::load(std::path::Path::new("artifacts")) {
+        Ok(m) => m,
+        Err(e) => {
+            println!(
+                "Skipping the PJRT step (run `make artifacts` to enable): {e}"
+            );
+            return Ok(());
+        }
+    };
+    let session = match Session::open(manifest) {
+        Ok(s) => s,
+        Err(e) => {
+            println!("Skipping the PJRT step (no native runtime): {e}");
+            return Ok(());
+        }
+    };
     let input = rng.normal_vec_f32(128 * 128, 0.02);
     let out = session.run(
         "kernel_fq",

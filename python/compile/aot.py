@@ -249,6 +249,8 @@ def emit_golden(out_dir: str) -> None:
         ("fp4_e2m1", "bf16", False), ("fp4_e2m1", "e8m0", False),
         ("int4", "ue4m3", False), ("int4", "ue5m3", True),
         ("fp6_e2m3", "ue4m3", False), ("fp6_e3m2", "ue4m3", False),
+        ("fp8_e4m3", "ue4m3", False), ("fp8_e4m3", "ue5m3", True),
+        ("fp8_e4m3", "e8m0", False),
     ]
     for elem, scale, pt in combos:
         for bsz in (2, 8, 16, 32):
@@ -275,8 +277,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--out", default="../artifacts/model.hlo.txt",
                     help="sentinel path; artifacts land in its directory")
+    ap.add_argument("--golden-only", action="store_true",
+                    help="emit only golden/quant_golden.json (no HLO "
+                         "lowering) — what CI uses to enforce the rust "
+                         "bit-exactness contract without a PJRT build")
     args = ap.parse_args()
     out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    if args.golden_only:
+        print(f"emitting golden vectors to {out_dir}/golden")
+        emit_golden(out_dir)
+        print("done")
+        return
     cfg = M.ModelConfig()
     print(f"lowering artifacts to {out_dir} (model={cfg})")
     lower_artifacts(out_dir, cfg)

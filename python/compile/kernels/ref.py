@@ -67,6 +67,7 @@ class MiniFloat:
 FP4_E2M1 = MiniFloat(1, 0, 6.0, "fp4_e2m1")
 FP6_E2M3 = MiniFloat(3, 0, 7.5, "fp6_e2m3")      # OCP MXFP6 element format
 FP6_E3M2 = MiniFloat(2, -2, 28.0, "fp6_e3m2")    # OCP MXFP6 element format
+FP8_E4M3 = MiniFloat(3, -6, 448.0, "fp8_e4m3")   # OCP MXFP8 element format
 UE4M3 = MiniFloat(3, -6, 448.0, "ue4m3")
 UE5M3 = MiniFloat(3, -14, 122880.0, "ue5m3")
 UE4M4 = MiniFloat(4, -6, 496.0, "ue4m4")
@@ -81,7 +82,7 @@ BF16_SCALE = MiniFloat(7, -126, 3.3895313892515355e38, "bf16")
 SCALE_FORMATS = {
     f.name: f for f in (UE4M3, UE5M3, UE4M4, UE5M1, UE4M2, E8M0, BF16_SCALE)
 }
-ELEM_FORMATS = {f.name: f for f in (FP4_E2M1, FP6_E2M3, FP6_E3M2)}
+ELEM_FORMATS = {f.name: f for f in (FP4_E2M1, FP6_E2M3, FP6_E3M2, FP8_E4M3)}
 
 # INT4 elements quantize to integers in [-7, 7] (App. G).
 INT4_MAX = 7.0

@@ -1,0 +1,105 @@
+//! Packed-tensor + kernel benchmarks (the ISSUE-1 acceptance bench):
+//!
+//! 1. fake-quant a 4096×4096 tensor through the scalar reference, the
+//!    tiled single-thread chunked kernel, and the full multi-threaded
+//!    chunked kernel — reporting the chunked-vs-scalar speedup (target:
+//!    ≥ 2× on a multi-core host);
+//! 2. `PackedMxTensor` encode/decode throughput and the measured
+//!    bytes/element against the Sec. 3.1 analytic storage model.
+//!
+//! `cargo bench --bench packed_bench` — results quoted in
+//! EXPERIMENTS.md §Perf.
+
+use std::time::Duration;
+
+use microscale::dist::Pcg64;
+use microscale::formats::{ElemFormat, UE4M3, UE5M3};
+use microscale::hw::memory;
+use microscale::quant::{
+    ChunkedKernel, PackedMxTensor, QuantKernel, QuantScheme, ScalarKernel,
+};
+use microscale::util::timer::{bench, black_box};
+
+fn main() {
+    let dim = 4096usize;
+    let n = dim * dim;
+    let budget = Duration::from_millis(1200);
+    let mut rng = Pcg64::new(0xBEC);
+    // granite-territory σ so the sweep exercises the regime the paper
+    // cares about (scale subnormals, occasional block collapse)
+    let x = rng.normal_vec_f32(n, 5e-3);
+
+    println!("== fake-quant, {dim}x{dim} f32 (FP4 + UE4M3, bs 16) ==");
+    let scheme = QuantScheme::new(ElemFormat::FP4, UE4M3, 16);
+    let mut buf = x.clone();
+
+    let scalar = bench("kernel/scalar", budget, || {
+        buf.copy_from_slice(&x);
+        black_box(ScalarKernel.fake_quant_into(&scheme, &mut buf));
+    });
+    println!("    -> {:.0} Melem/s", scalar.throughput(n as f64) / 1e6);
+
+    let serial_kernel = ChunkedKernel::serial();
+    let serial = bench("kernel/chunked-1t", budget, || {
+        buf.copy_from_slice(&x);
+        black_box(serial_kernel.fake_quant_into(&scheme, &mut buf));
+    });
+    println!("    -> {:.0} Melem/s", serial.throughput(n as f64) / 1e6);
+
+    let auto_kernel = ChunkedKernel::auto();
+    let auto = bench(
+        &format!("kernel/chunked-{}t", auto_kernel.threads),
+        budget,
+        || {
+            buf.copy_from_slice(&x);
+            black_box(auto_kernel.fake_quant_into(&scheme, &mut buf));
+        },
+    );
+    println!("    -> {:.0} Melem/s", auto.throughput(n as f64) / 1e6);
+
+    let speedup_1t = scalar.median_ns / serial.median_ns;
+    let speedup = scalar.median_ns / auto.median_ns;
+    println!(
+        "\n    chunked vs scalar: {speedup_1t:.2}x single-thread, \
+         {speedup:.2}x with {} threads",
+        auto_kernel.threads
+    );
+    println!(
+        "    acceptance target (>= 2.00x): {}",
+        if speedup >= 2.0 { "PASS" } else { "MISS (host-dependent)" }
+    );
+
+    println!("\n== PackedMxTensor encode/decode, {dim}x{dim} ==");
+    for (scale, bs) in [(UE4M3, 32usize), (UE5M3, 8)] {
+        let scheme = QuantScheme::new(ElemFormat::FP4, scale, bs);
+        let enc = bench(
+            &format!("packed/encode/{}/bs{bs}", scale.name),
+            budget,
+            || {
+                black_box(PackedMxTensor::encode(&scheme, &x).unwrap());
+            },
+        );
+        println!("    -> {:.0} Melem/s", enc.throughput(n as f64) / 1e6);
+        let packed = PackedMxTensor::encode(&scheme, &x).unwrap();
+        let mut out = vec![0.0f32; n];
+        let dec = bench(
+            &format!("packed/decode/{}/bs{bs}", scale.name),
+            budget,
+            || {
+                packed.decode_into(&mut out);
+                black_box(&out);
+            },
+        );
+        println!("    -> {:.0} Melem/s", dec.throughput(n as f64) / 1e6);
+        let analytic =
+            memory::packed_bytes_per_element(packed.elem_bits(), n, bs);
+        println!(
+            "    payload {} bytes = {:.4} B/elem (analytic {:.4}), \
+             {:.2}x vs bf16",
+            packed.payload_bytes(),
+            packed.bits_per_element() / 8.0,
+            analytic,
+            packed.compression_vs_bf16()
+        );
+    }
+}

@@ -126,36 +126,44 @@ impl Pool {
             let chan: Bounded<(usize, Job)> = Bounded::new(self.queue_cap);
             let results: Mutex<Vec<(usize, String, Result<Json>, f64)>> =
                 Mutex::new(Vec::new());
-            crossbeam_utils::thread::scope(|s| {
-                for _ in 0..self.workers.max(1) {
-                    s.spawn(|_| {
-                        while let Some((idx, job)) = chan.recv() {
-                            let t = Instant::now();
-                            let key = job.key;
-                            let run = job.run;
-                            let r = std::panic::catch_unwind(
-                                AssertUnwindSafe(run),
-                            )
-                            .unwrap_or_else(|p| {
-                                Err(anyhow!(
-                                    "job panicked: {}",
-                                    panic_msg(&p)
-                                ))
-                            });
-                            results.lock().unwrap().push((
-                                idx,
-                                key,
-                                r,
-                                t.elapsed().as_secs_f64(),
-                            ));
-                        }
-                    });
-                }
-                for item in pure_jobs {
-                    chan.send(item);
-                }
-                chan.close();
-            })
+            // std::thread::scope re-raises worker panics on exit; workers
+            // catch job panics themselves, so a scope-level panic only
+            // happens on truly unrecoverable states (poisoned mutex).
+            std::panic::catch_unwind(AssertUnwindSafe(|| {
+                std::thread::scope(|s| {
+                    for _ in 0..self.workers.max(1) {
+                        s.spawn(|| {
+                            // inner data-parallel kernels stay serial on
+                            // pool workers (see util::par docs)
+                            crate::util::par::mark_worker_thread();
+                            while let Some((idx, job)) = chan.recv() {
+                                let t = Instant::now();
+                                let key = job.key;
+                                let run = job.run;
+                                let r = std::panic::catch_unwind(
+                                    AssertUnwindSafe(run),
+                                )
+                                .unwrap_or_else(|p| {
+                                    Err(anyhow!(
+                                        "job panicked: {}",
+                                        panic_msg(&p)
+                                    ))
+                                });
+                                results.lock().unwrap().push((
+                                    idx,
+                                    key,
+                                    r,
+                                    t.elapsed().as_secs_f64(),
+                                ));
+                            }
+                        });
+                    }
+                    for item in pure_jobs {
+                        chan.send(item);
+                    }
+                    chan.close();
+                })
+            }))
             .map_err(|_| anyhow!("worker panicked irrecoverably"))?;
             for (idx, key, r, secs) in results.into_inner().unwrap() {
                 let value = r?;

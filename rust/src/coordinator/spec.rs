@@ -1,6 +1,8 @@
-//! Job specification: a keyed unit of experiment work.
+//! Job specification: a keyed unit of experiment work, plus parallel
+//! sweep expansion.
 
 use crate::util::json::Json;
+use crate::util::par;
 
 /// A unit of work with a stable cache key.
 pub struct Job {
@@ -15,6 +17,7 @@ pub struct Job {
 }
 
 impl Job {
+    /// A pure CPU job (eligible for pool workers).
     pub fn pure<F>(key: impl Into<String>, f: F) -> Job
     where
         F: FnOnce() -> anyhow::Result<Json> + Send + 'static,
@@ -22,6 +25,8 @@ impl Job {
         Job { key: key.into(), pure: true, run: Box::new(f) }
     }
 
+    /// A runtime-bound job (PJRT session is not `Sync`; runs inline on
+    /// the coordinator thread).
     pub fn runtime<F>(key: impl Into<String>, f: F) -> Job
     where
         F: FnOnce() -> anyhow::Result<Json> + Send + 'static,
@@ -30,12 +35,52 @@ impl Job {
     }
 }
 
+/// Expand sweep points into jobs, preserving sweep order (job order is
+/// what [`super::Pool::run`] returns results in).
+///
+/// Today's generators build cheap jobs (a key + a deferred closure),
+/// so small expansions run serially — threads only engage past 32
+/// points, where a builder that pre-computes per-point state (tensor
+/// draws, σ grids) would start to matter. The helper exists so sweep
+/// construction has one order-preserving entry point whose
+/// parallelism ([`crate::util::par::par_map`]) scales with the sweep
+/// instead of being re-invented per figure.
+pub fn expand_jobs<P, F>(points: Vec<P>, build: F) -> Vec<Job>
+where
+    P: Send,
+    F: Fn(P) -> Job + Sync,
+{
+    let threads = if points.len() >= 32 { par::max_threads() } else { 1 };
+    par::par_map(points, threads, build)
+}
+
 /// A completed job.
 #[derive(Debug, Clone)]
 pub struct JobOutput {
+    /// The job's cache key.
     pub key: String,
+    /// The JSON result payload.
     pub value: Json,
-    /// wall seconds (0 when served from cache)
+    /// Wall seconds spent computing (0 when served from cache).
     pub seconds: f64,
+    /// Whether the value came from the result cache.
     pub from_cache: bool,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::num;
+
+    #[test]
+    fn expand_preserves_order_and_keys() {
+        let jobs = expand_jobs((0..33).collect(), |i: i32| {
+            Job::pure(format!("k/{i}"), move || Ok(num(i as f64)))
+        });
+        assert_eq!(jobs.len(), 33);
+        for (i, j) in jobs.iter().enumerate() {
+            assert_eq!(j.key, format!("k/{i}"));
+            assert!(j.pure);
+        }
+    }
 }

@@ -1,0 +1,195 @@
+//! Synthetic distribution substrate: the seeded generator ([`rng`]) and
+//! the paper's "ideal distribution" family (Fig. 3(b), Fig. 8, Fig. 9
+//! right column).
+//!
+//! The paper probes whether perplexity inversion is a quirk of real
+//! weight tensors or a property of *any* narrow distribution by sweeping
+//! σ across a family of shapes — Gaussian, bounded (uniform), exponential
+//! tails (Laplace, logistic) and polynomial tails (Student-t). [`Ideal`]
+//! reproduces that family; every member is sampled at a known base scale
+//! and rescaled so the drawn tensor has a target standard deviation σ,
+//! making MSE-vs-σ curves directly comparable across shapes.
+
+pub mod rng;
+
+pub use rng::Pcg64;
+
+/// The ideal-distribution family of Fig. 3(b) / Fig. 8.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IdealKind {
+    /// Standard normal — the reference shape (weights are near-Gaussian,
+    /// Fig. 3(a)).
+    Normal,
+    /// Uniform on [-1, 1] — hard-bounded, no tail.
+    Uniform,
+    /// Laplace (b = 1) — exponential tail, peaked center.
+    Laplace,
+    /// Logistic (s = 1) — exponential tail, flatter center.
+    Logistic,
+    /// Student-t with ν = 5 — polynomial (heavy) tail.
+    StudentT5,
+}
+
+impl IdealKind {
+    /// Every member, in the order figures enumerate them.
+    pub const ALL: [IdealKind; 5] = [
+        IdealKind::Normal,
+        IdealKind::Uniform,
+        IdealKind::Laplace,
+        IdealKind::Logistic,
+        IdealKind::StudentT5,
+    ];
+
+    /// Stable display/cache-key name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            IdealKind::Normal => "normal",
+            IdealKind::Uniform => "uniform",
+            IdealKind::Laplace => "laplace",
+            IdealKind::Logistic => "logistic",
+            IdealKind::StudentT5 => "student-t5",
+        }
+    }
+}
+
+/// A sampler for one [`IdealKind`].
+#[derive(Debug, Clone, Copy)]
+pub struct Ideal {
+    kind: IdealKind,
+}
+
+impl Ideal {
+    /// Sampler for `kind`.
+    pub fn new(kind: IdealKind) -> Ideal {
+        Ideal { kind }
+    }
+
+    /// The sampler's kind.
+    pub fn kind(&self) -> IdealKind {
+        self.kind
+    }
+
+    /// Standard deviation of [`Ideal::sample`] at base scale (used to
+    /// rescale draws to a target σ).
+    pub fn base_sigma(&self) -> f64 {
+        match self.kind {
+            IdealKind::Normal => 1.0,
+            // Var(U[-1,1]) = 1/3
+            IdealKind::Uniform => 1.0 / 3f64.sqrt(),
+            // Var(Laplace(b)) = 2 b²
+            IdealKind::Laplace => 2f64.sqrt(),
+            // Var(Logistic(s)) = π² s² / 3
+            IdealKind::Logistic => std::f64::consts::PI / 3f64.sqrt(),
+            // Var(t_ν) = ν / (ν - 2), ν = 5
+            IdealKind::StudentT5 => (5.0f64 / 3.0).sqrt(),
+        }
+    }
+
+    /// One draw at the distribution's base scale.
+    pub fn sample(&self, rng: &mut Pcg64) -> f64 {
+        match self.kind {
+            IdealKind::Normal => rng.standard_normal(),
+            IdealKind::Uniform => 2.0 * rng.uniform() - 1.0,
+            IdealKind::Laplace => {
+                // inverse CDF on u ∈ (-1/2, 1/2]
+                let u = rng.uniform() - 0.5;
+                let mag = -(1.0 - 2.0 * u.abs()).max(f64::MIN_POSITIVE).ln();
+                if u < 0.0 {
+                    -mag
+                } else {
+                    mag
+                }
+            }
+            IdealKind::Logistic => {
+                // inverse CDF, clamped away from {0, 1}
+                let u = rng.uniform().clamp(1e-300, 1.0 - 1e-16);
+                (u / (1.0 - u)).ln()
+            }
+            IdealKind::StudentT5 => {
+                // z / sqrt(χ²_ν / ν) with ν = 5
+                let z = rng.standard_normal();
+                let mut chi2 = 0.0;
+                for _ in 0..5 {
+                    let g = rng.standard_normal();
+                    chi2 += g * g;
+                }
+                z / (chi2 / 5.0).max(f64::MIN_POSITIVE).sqrt()
+            }
+        }
+    }
+
+    /// An n-element f32 tensor rescaled to standard deviation `sigma`
+    /// (in expectation; the realized sample σ is what experiments report
+    /// on their x-axes).
+    pub fn tensor_f32(&self, rng: &mut Pcg64, n: usize, sigma: f64) -> Vec<f32> {
+        let k = sigma / self.base_sigma();
+        (0..n).map(|_| (k * self.sample(rng)) as f32).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::stats::std_dev_f32;
+
+    #[test]
+    fn every_kind_hits_target_sigma() {
+        for kind in IdealKind::ALL {
+            let d = Ideal::new(kind);
+            let mut rng = Pcg64::new(0xD157);
+            for sigma in [1e-3, 0.02, 0.5] {
+                let x = d.tensor_f32(&mut rng, 1 << 16, sigma);
+                let sd = std_dev_f32(&x);
+                // Student-t's heavy tail converges slowest; 12% tolerance
+                assert!(
+                    (sd - sigma).abs() / sigma < 0.12,
+                    "{}: σ target {sigma}, got {sd}",
+                    kind.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn uniform_is_bounded() {
+        let d = Ideal::new(IdealKind::Uniform);
+        let mut rng = Pcg64::new(3);
+        for _ in 0..10_000 {
+            let x = d.sample(&mut rng);
+            assert!((-1.0..=1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn tail_ordering_matches_shapes() {
+        // P(|x| > 3σ): uniform = 0 < normal (0.0027) < logistic (0.0086)
+        // < t5 (0.0117) < laplace (0.0144) — exponential tails carry more
+        // 3σ mass than the polynomial t5 tail; t5 only dominates further
+        // out (it does beat laplace by 6σ, the regime behind the paper's
+        // heavy-tail MSE bumps).
+        let mut tails = Vec::new();
+        for kind in IdealKind::ALL {
+            let d = Ideal::new(kind);
+            let mut rng = Pcg64::new(17);
+            let n = 200_000;
+            let thresh = 3.0 * d.base_sigma();
+            let c = (0..n).filter(|_| d.sample(&mut rng).abs() > thresh).count();
+            tails.push((kind, c as f64 / n as f64));
+        }
+        let get = |k: IdealKind| tails.iter().find(|(t, _)| *t == k).unwrap().1;
+        assert_eq!(get(IdealKind::Uniform), 0.0);
+        assert!(get(IdealKind::Normal) > 0.0);
+        assert!(get(IdealKind::Logistic) > get(IdealKind::Normal));
+        assert!(get(IdealKind::StudentT5) > get(IdealKind::Logistic));
+        assert!(get(IdealKind::Laplace) > get(IdealKind::StudentT5));
+    }
+
+    #[test]
+    fn names_are_unique() {
+        let mut names: Vec<&str> =
+            IdealKind::ALL.iter().map(|k| k.name()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), IdealKind::ALL.len());
+    }
+}

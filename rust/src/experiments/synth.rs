@@ -6,6 +6,7 @@ use anyhow::Result;
 
 use super::Ctx;
 use crate::coordinator::sink::fmt_g;
+use crate::coordinator::spec::expand_jobs;
 use crate::coordinator::Job;
 use crate::dist::{Ideal, IdealKind, Pcg64};
 use crate::formats::{scale_format, ElemFormat};
@@ -80,19 +81,19 @@ pub fn fig2a(ctx: &mut Ctx) -> Result<String> {
 pub fn fig2bc(ctx: &mut Ctx, scale_name: &str) -> Result<String> {
     let (count, numel) = ensemble_sizes(ctx);
     let profiles = ["granite-like", "llama2-like"];
-    let mut jobs = Vec::new();
-    for pname in profiles {
-        for bs in [8usize, 16] {
-            let prof = profile(pname).unwrap();
-            let key = format!(
-                "fig2bc/{pname}/{scale_name}/bs{bs}/c{count}/n{numel}"
-            );
-            let scale_name = scale_name.to_string();
-            jobs.push(Job::pure(key, move || {
-                Ok(ensemble_points(&prof, &scale_name, bs, count, numel))
-            }));
-        }
-    }
+    let points: Vec<(&str, usize)> = profiles
+        .iter()
+        .flat_map(|p| [(*p, 8usize), (*p, 16)])
+        .collect();
+    let jobs = expand_jobs(points, |(pname, bs)| {
+        let prof = profile(pname).unwrap();
+        let key =
+            format!("fig2bc/{pname}/{scale_name}/bs{bs}/c{count}/n{numel}");
+        let scale_name = scale_name.to_string();
+        Job::pure(key, move || {
+            Ok(ensemble_points(&prof, &scale_name, bs, count, numel))
+        })
+    });
     let out = ctx.pool.run(jobs, &mut ctx.cache)?;
     let mut series = Vec::new();
     let mut crossover_txt = String::new();
@@ -245,13 +246,10 @@ pub fn fig3b(ctx: &mut Ctx) -> Result<String> {
 fn fig_ideal_family(ctx: &mut Ctx, bs: usize, title: &str) -> Result<String> {
     let sweep_n = if ctx.fast { 20 } else { 40 };
     let per_point = if ctx.fast { 1 << 14 } else { 1 << 16 };
-    let mut jobs = Vec::new();
-    for kind in IdealKind::ALL {
-        let key = format!(
-            "fig3b/{}/bs{bs}/k{sweep_n}/n{per_point}",
-            kind.name()
-        );
-        jobs.push(Job::pure(key, move || {
+    let jobs = expand_jobs(IdealKind::ALL.to_vec(), |kind| {
+        let key =
+            format!("fig3b/{}/bs{bs}/k{sweep_n}/n{per_point}", kind.name());
+        Job::pure(key, move || {
             let dist = Ideal::new(kind);
             let scheme = QuantScheme::new(
                 ElemFormat::FP4,
@@ -265,8 +263,8 @@ fn fig_ideal_family(ctx: &mut Ctx, bs: usize, title: &str) -> Result<String> {
                 let (sig, mse) = mse_vs_sigma(&scheme, &x);
                 obj(vec![("sigma", num(sig)), ("mse", num(mse))])
             })))
-        }));
-    }
+        })
+    });
     let out = ctx.pool.run(jobs, &mut ctx.cache)?;
     let mut series = Vec::new();
     for (kind, o) in IdealKind::ALL.iter().zip(&out) {
@@ -282,32 +280,33 @@ pub fn fig6(ctx: &mut Ctx) -> Result<String> {
         "Figure 6: per-block MSE bs8 vs bs16 — fraction of blocks above the diagonal (FP4+UE4M3)",
         &["model profile", "tensor draw", "above diag", "aggregate inverted?"],
     );
-    let mut jobs = Vec::new();
-    for prof in PROFILES {
-        for draw in 0..3u64 {
-            let key = format!("fig6/{}/d{draw}/n{n}", prof.name);
-            jobs.push(Job::pure(key, move || {
-                let mut rng = Pcg64::new(0xF16 ^ draw);
-                let sigma = prof.sample_sigma(&mut rng);
-                let x = Ideal::new(IdealKind::Normal)
-                    .tensor_f32(&mut rng, n, sigma);
-                let scheme = QuantScheme::new(
-                    ElemFormat::FP4,
-                    crate::formats::UE4M3,
-                    8,
-                );
-                let pairs = per_block_mse_pairs(&scheme, &x, 8, 16);
-                let (sf, sc) = pairs
-                    .iter()
-                    .fold((0.0, 0.0), |(a, b), (f, c)| (a + f, b + c));
-                Ok(obj(vec![
-                    ("sigma", num(sigma)),
-                    ("above", num(fraction_fine_worse(&pairs))),
-                    ("inverted", num((sf > sc) as u8 as f64)),
-                ]))
-            }));
-        }
-    }
+    let points: Vec<(SigmaProfile, u64)> = PROFILES
+        .iter()
+        .flat_map(|p| (0..3u64).map(move |d| (*p, d)))
+        .collect();
+    let jobs = expand_jobs(points, |(prof, draw)| {
+        let key = format!("fig6/{}/d{draw}/n{n}", prof.name);
+        Job::pure(key, move || {
+            let mut rng = Pcg64::new(0xF16 ^ draw);
+            let sigma = prof.sample_sigma(&mut rng);
+            let x = Ideal::new(IdealKind::Normal)
+                .tensor_f32(&mut rng, n, sigma);
+            let scheme = QuantScheme::new(
+                ElemFormat::FP4,
+                crate::formats::UE4M3,
+                8,
+            );
+            let pairs = per_block_mse_pairs(&scheme, &x, 8, 16);
+            let (sf, sc) = pairs
+                .iter()
+                .fold((0.0, 0.0), |(a, b), (f, c)| (a + f, b + c));
+            Ok(obj(vec![
+                ("sigma", num(sigma)),
+                ("above", num(fraction_fine_worse(&pairs))),
+                ("inverted", num((sf > sc) as u8 as f64)),
+            ]))
+        })
+    });
     let out = ctx.pool.run(jobs, &mut ctx.cache)?;
     let mut i = 0;
     for prof in PROFILES {

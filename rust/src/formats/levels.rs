@@ -11,8 +11,11 @@ use super::{ElemFormat, MiniFloat};
 /// A quantization level and its Voronoi cell under round-to-nearest.
 #[derive(Debug, Clone, Copy)]
 pub struct Level {
+    /// The representable value.
     pub q: f64,
+    /// Lower cell boundary (inputs in `[lo, hi)` round to `q`).
     pub lo: f64,
+    /// Upper cell boundary.
     pub hi: f64,
 }
 

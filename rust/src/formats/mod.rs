@@ -11,6 +11,7 @@
 //! | FP4 E2M1    | 1 | 0     | 6        | 0.5           | Sec. 2.1      |
 //! | FP6 E2M3    | 3 | 0     | 7.5      | 2^-3          | OCP elements  |
 //! | FP6 E3M2    | 2 | -2    | 28       | 2^-4          | OCP elements  |
+//! | FP8 E4M3    | 3 | -6    | 448      | 2^-9          | OCP elements  |
 //! | UE4M3       | 3 | -6    | 448      | 2^-9          | Sec. 2.1      |
 //! | UE5M3       | 3 | -14   | 122880   | 2^-17         | Sec. 5.2 ours |
 //! | UE4M4       | 4 | -6    | 496      | 2^-10         | App. J        |
@@ -26,13 +27,19 @@ use crate::util::{floor_log2, ldexp2};
 /// A saturating minifloat grid; see module docs. `Copy`-able and cheap.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct MiniFloat {
+    /// Mantissa bits (excluding the implicit leading 1).
     pub m_bits: i32,
+    /// Minimum normal exponent; values below `2^e_min` are subnormal on
+    /// this grid.
     pub e_min: i32,
+    /// Largest representable magnitude (casts saturate here).
     pub max_val: f32,
+    /// Stable display/cache-key name (e.g. `"ue5m3"`).
     pub name: &'static str,
 }
 
 impl MiniFloat {
+    /// Const constructor (all the named formats below use it).
     pub const fn new(
         m_bits: i32,
         e_min: i32,
@@ -91,9 +98,15 @@ pub fn cast_int_symmetric(x: f32, int_max: f32) -> f32 {
 
 // -- element formats ---------------------------------------------------------
 
+/// FP4 E2M1 — the paper's primary element format (Sec. 2.1).
 pub const FP4_E2M1: MiniFloat = MiniFloat::new(1, 0, 6.0, "fp4_e2m1");
+/// FP6 E2M3 — OCP MX element option (precision-leaning).
 pub const FP6_E2M3: MiniFloat = MiniFloat::new(3, 0, 7.5, "fp6_e2m3");
+/// FP6 E3M2 — OCP MX element option (range-leaning).
 pub const FP6_E3M2: MiniFloat = MiniFloat::new(2, -2, 28.0, "fp6_e3m2");
+/// FP8 E4M3 — OCP MX element option (same grid the UE4M3 scale uses,
+/// but signed); exercised by the packed-tensor path ([`crate::quant::packed`]).
+pub const FP8_E4M3: MiniFloat = MiniFloat::new(3, -6, 448.0, "fp8_e4m3");
 
 // -- scale formats ------------------------------------------------------------
 
@@ -113,9 +126,11 @@ pub const E8M0: MiniFloat = MiniFloat::new(0, -126, 1.7014118e38, "e8m0");
 pub const BF16_SCALE: MiniFloat =
     MiniFloat::new(7, -126, 3.3895314e38, "bf16");
 
+/// Every scale format the experiments sweep (Sec. 2.1 + App. H/J).
 pub const SCALE_FORMATS: [MiniFloat; 7] =
     [UE4M3, UE5M3, UE4M4, UE5M1, UE4M2, E8M0, BF16_SCALE];
 
+/// Look up a scale format by its stable name (CLI flags, cache keys).
 pub fn scale_format(name: &str) -> Option<MiniFloat> {
     SCALE_FORMATS.iter().copied().find(|f| f.name == name)
 }
@@ -123,26 +138,34 @@ pub fn scale_format(name: &str) -> Option<MiniFloat> {
 /// Element format spec: either a minifloat or a symmetric integer grid.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ElemFormat {
+    /// Signed-magnitude minifloat elements (FP4/FP6/FP8).
     Fp(MiniFloat),
     /// `Int(max)`: integers in [-max, max] (INT4 => 7).
     Int(f32),
 }
 
 impl ElemFormat {
+    /// FP4 E2M1 elements (the paper's default).
     pub const FP4: ElemFormat = ElemFormat::Fp(FP4_E2M1);
+    /// FP8 E4M3 elements (OCP MXFP8).
+    pub const FP8: ElemFormat = ElemFormat::Fp(FP8_E4M3);
+    /// Symmetric INT4 elements, levels −7..=7 (App. G).
     pub const INT4: ElemFormat = ElemFormat::Int(7.0);
 
+    /// Parse a format name as used in CLI flags and cache keys.
     pub fn from_name(name: &str) -> Option<ElemFormat> {
         match name {
             "fp4_e2m1" | "fp4" => Some(ElemFormat::FP4),
             "fp6_e2m3" => Some(ElemFormat::Fp(FP6_E2M3)),
             "fp6_e3m2" => Some(ElemFormat::Fp(FP6_E3M2)),
+            "fp8_e4m3" | "fp8" => Some(ElemFormat::FP8),
             "int4" => Some(ElemFormat::INT4),
             "int8" => Some(ElemFormat::Int(127.0)),
             _ => None,
         }
     }
 
+    /// Stable display/cache-key name (inverse of [`ElemFormat::from_name`]).
     pub fn name(&self) -> &'static str {
         match self {
             ElemFormat::Fp(f) => f.name,

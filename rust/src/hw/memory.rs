@@ -23,6 +23,26 @@ pub fn compression_vs_bf16(elem_bits: u32, scale_bits: u32, n: usize) -> f64 {
     2.0 / bytes_per_element(elem_bits, scale_bits, n)
 }
 
+/// Exact payload bytes of a **materialized** packed MX tensor
+/// ([`crate::quant::packed::PackedMxTensor`]): the bit-packed element
+/// field rounded up to whole bytes, plus one scale byte per block — a
+/// trailing partial block still needs its own scale byte.
+///
+/// Where a tensor actually exists in memory this replaces the analytic
+/// [`bytes_per_element`] estimate (which ignores byte rounding and
+/// assumes 16-bit scales); the two agree in the limit — see the tests.
+pub fn packed_payload_bytes(elem_bits: u32, numel: usize, block: usize) -> usize {
+    (numel * elem_bits as usize + 7) / 8 + numel.div_ceil(block.max(1))
+}
+
+/// Measured bytes/element of the packed layout (8-bit scale codes).
+pub fn packed_bytes_per_element(elem_bits: u32, numel: usize, block: usize) -> f64 {
+    if numel == 0 {
+        return 0.0;
+    }
+    packed_payload_bytes(elem_bits, numel, block) as f64 / numel as f64
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -41,6 +61,33 @@ mod tests {
                 "N={n}"
             );
         }
+    }
+
+    #[test]
+    fn packed_layout_matches_analytic_model() {
+        // whole-byte element fields: measured == analytic with 8-bit scales
+        for (bits, bs) in [(4u32, 8usize), (4, 32), (8, 16)] {
+            let n = bs * 100;
+            assert_eq!(
+                packed_bytes_per_element(bits, n, bs),
+                bytes_per_element(bits, 8, bs),
+                "bits={bits} bs={bs}"
+            );
+        }
+        // 6-bit elements, element count NOT a multiple of 4: the bit
+        // field is not byte-aligned, so the +7 round-up must fire.
+        // 10 elements * 6 bits = 60 bits -> 8 bytes (7 if truncated),
+        // plus 5 scale bytes at block size 2.
+        assert_eq!(packed_payload_bytes(6, 10, 2), 8 + 5);
+        // byte-aligned 6-bit case collapses onto the analytic model
+        let n = 16 * 100;
+        let meas = packed_bytes_per_element(6, n, 16);
+        let analytic = bytes_per_element(6, 8, 16);
+        assert!((meas - analytic).abs() < 1e-15);
+        assert_eq!(packed_payload_bytes(4, 64, 8), 32 + 8);
+        // a trailing partial block still carries a scale byte
+        assert_eq!(packed_payload_bytes(4, 12, 8), 6 + 2);
+        assert_eq!(packed_bytes_per_element(4, 0, 8), 0.0);
     }
 
     #[test]

@@ -15,7 +15,11 @@
 //!
 //! * [`formats`] / [`quant`] — bit-exact re-implementation of every
 //!   numeric format and the block microscaling quantizer (validated
-//!   against the python oracle via golden vectors);
+//!   against the python oracle via golden vectors), the
+//!   [`quant::kernel`] execution engine (scalar reference + tiled
+//!   multi-threaded chunked kernel behind one trait), and
+//!   [`quant::packed`] — truly bit-packed MX tensor storage with one
+//!   scale byte per block;
 //! * [`theory`] — the paper's analytical MSE framework (Sec. 4,
 //!   App. E–H) as fast closed-form/numerical integration;
 //! * [`dist`] / [`stats`] — synthetic distribution substrate and metrics;

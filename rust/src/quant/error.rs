@@ -2,12 +2,16 @@
 //! 7, 9 (per-tensor MSE vs σ; per-block MSE comparisons across block
 //! sizes).
 
-use super::{fake_quant, QuantScheme};
+use super::{default_kernel, QuantScheme};
 use crate::stats;
 
 /// Per-tensor MSE of `x` under `scheme` (f64 accumulation).
+///
+/// Quantization runs on [`default_kernel`] (bit-identical to the scalar
+/// reference, but tiled and threaded — these sweeps are the hot path of
+/// every runtime-free figure).
 pub fn tensor_mse(scheme: &QuantScheme, x: &[f32]) -> f64 {
-    let xq = fake_quant(scheme, x);
+    let xq = default_kernel().fake_quant(scheme, x);
     stats::mse_f32(x, &xq)
 }
 
@@ -33,8 +37,8 @@ pub fn per_block_mse_pairs(
     assert!(ref_block % fine_block == 0 && ref_block >= fine_block);
     let coarse = QuantScheme { block_size: ref_block, ..*elem_scale };
     let fine = QuantScheme { block_size: fine_block, ..*elem_scale };
-    let xc = fake_quant(&coarse, x);
-    let xf = fake_quant(&fine, x);
+    let xc = default_kernel().fake_quant(&coarse, x);
+    let xf = default_kernel().fake_quant(&fine, x);
     let mut out = Vec::with_capacity(x.len() / ref_block);
     for b in 0..x.len() / ref_block {
         let r = b * ref_block..(b + 1) * ref_block;

@@ -1,0 +1,372 @@
+//! Quantization execution kernels: the hot path behind every sweep.
+//!
+//! [`QuantKernel`] abstracts *how* a tensor is fake-quantized without
+//! changing *what* is computed — every implementation must be bit-exact
+//! with the scalar reference path ([`super::fake_quant_into`], which is
+//! itself pinned to the python oracle by `rust/tests/golden.rs`). Two
+//! implementations ship:
+//!
+//! * [`ScalarKernel`] — the reference: one block at a time, exactly the
+//!   seed implementation.
+//! * [`ChunkedKernel`] — the production path: processes row-major tiles
+//!   sized for L1/L2 residency, computes all block absmaxes + encoded
+//!   scales of a tile in one fused pass (unrolled 4-way max reduction),
+//!   then dequantizes with the element-format dispatch hoisted out of
+//!   the inner loop, and splits large tensors across scoped worker
+//!   threads at block boundaries ([`crate::util::par`]).
+//!
+//! Bit-exactness argument for the chunked path: absmax is an
+//! associative/commutative max over `|x|` (NaN-ignoring in both
+//! orderings), the per-block scale cast depends only on that absmax, and
+//! element casts are pointwise — so tiling, fusing and threading cannot
+//! change any bit. The `chunked_matches_scalar_bitwise` property test
+//! enforces this over random (σ, block size, format) draws.
+//!
+//! [`default_kernel`] is what the bulk call sites (GEMM, error sweeps,
+//! experiment generators) use; set `MICROSCALE_KERNEL=scalar` to force
+//! the reference path when bisecting a discrepancy.
+
+use std::sync::OnceLock;
+
+use crate::formats::ElemFormat;
+use crate::util::par;
+
+use super::QuantScheme;
+
+/// A fake-quantization executor; all implementations are bit-identical.
+pub trait QuantKernel: Sync {
+    /// Implementation name (reports, benches, env selection).
+    fn name(&self) -> &'static str;
+
+    /// Quantize-dequantize `x` in place (blocks along the flat axis);
+    /// returns the per-block quantized scales. `x.len()` must be a
+    /// multiple of the scheme's block size.
+    fn fake_quant_into(&self, scheme: &QuantScheme, x: &mut [f32]) -> Vec<f32>;
+
+    /// Out-of-place convenience: returns the dequantized tensor.
+    fn fake_quant(&self, scheme: &QuantScheme, x: &[f32]) -> Vec<f32> {
+        let mut out = x.to_vec();
+        self.fake_quant_into(scheme, &mut out);
+        out
+    }
+}
+
+/// The block-at-a-time reference implementation (golden-pinned).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ScalarKernel;
+
+impl QuantKernel for ScalarKernel {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn fake_quant_into(&self, scheme: &QuantScheme, x: &mut [f32]) -> Vec<f32> {
+        super::fake_quant_into(scheme, x)
+    }
+}
+
+/// Tiled, fused, optionally multi-threaded implementation.
+#[derive(Debug, Clone, Copy)]
+pub struct ChunkedKernel {
+    /// Tile size in elements (rounded down to whole blocks); sized so a
+    /// tile plus its scales stay L1/L2-resident.
+    pub tile: usize,
+    /// Worker-thread cap for large tensors (1 = stay on the caller).
+    pub threads: usize,
+    /// Minimum tensor size (elements) before threads are used; below
+    /// this the spawn cost dominates the quantization itself.
+    pub par_threshold: usize,
+}
+
+impl ChunkedKernel {
+    /// Production configuration: 16 Ki-element tiles (64 KiB of f32),
+    /// one worker per logical CPU, threading from 64 Ki elements up.
+    pub fn auto() -> ChunkedKernel {
+        ChunkedKernel {
+            tile: 16 * 1024,
+            threads: par::max_threads(),
+            par_threshold: 64 * 1024,
+        }
+    }
+
+    /// Single-threaded variant (tiling + fusion only) — what the benches
+    /// compare against [`ScalarKernel`] to isolate the layout win from
+    /// the threading win.
+    pub fn serial() -> ChunkedKernel {
+        ChunkedKernel { threads: 1, ..ChunkedKernel::auto() }
+    }
+}
+
+impl Default for ChunkedKernel {
+    fn default() -> Self {
+        ChunkedKernel::auto()
+    }
+}
+
+impl QuantKernel for ChunkedKernel {
+    fn name(&self) -> &'static str {
+        "chunked"
+    }
+
+    fn fake_quant_into(&self, scheme: &QuantScheme, x: &mut [f32]) -> Vec<f32> {
+        let bs = scheme.block_size;
+        assert!(
+            bs > 0 && x.len() % bs == 0,
+            "len {} not divisible by block size {}",
+            x.len(),
+            bs
+        );
+        let n_blocks = x.len() / bs;
+        // Stay serial on coordinator-pool worker threads: the sweep is
+        // already running one job per core, and nesting another fan-out
+        // here would oversubscribe to ncpus² threads.
+        let threads = if x.len() >= self.par_threshold
+            && !par::on_worker_thread()
+        {
+            self.threads.max(1)
+        } else {
+            1
+        };
+
+        // eq. 11 per-tensor pre-scaling (same op order as the reference)
+        let s_t = if scheme.per_tensor {
+            let absmax = parallel_absmax(x, threads);
+            scheme.per_tensor_factor(absmax)
+        } else {
+            1.0
+        };
+        if s_t != 1.0 {
+            par::par_chunks_mut(x, bs, threads, |_, chunk| {
+                for v in chunk.iter_mut() {
+                    *v *= s_t;
+                }
+            });
+        }
+
+        let mut scales = vec![0.0f32; n_blocks];
+        if threads <= 1 {
+            quantize_range(scheme, self.tile, x, &mut scales);
+        } else {
+            // split both the tensor and its scale row at block boundaries
+            let per_blocks = (n_blocks + threads - 1) / threads;
+            let tile = self.tile;
+            std::thread::scope(|scope| {
+                // reborrow so `x`/`scales` stay usable after the scope
+                let mut xs: &mut [f32] = &mut *x;
+                let mut ss: &mut [f32] = &mut scales[..];
+                while !ss.is_empty() {
+                    let nb = per_blocks.min(ss.len());
+                    let (xh, xt) = xs.split_at_mut(nb * bs);
+                    let (sh, st) = ss.split_at_mut(nb);
+                    scope.spawn(move || quantize_range(scheme, tile, xh, sh));
+                    xs = xt;
+                    ss = st;
+                }
+            });
+        }
+
+        if s_t != 1.0 {
+            par::par_chunks_mut(x, bs, threads, |_, chunk| {
+                for v in chunk.iter_mut() {
+                    *v /= s_t;
+                }
+            });
+        }
+        scales
+    }
+}
+
+/// Tensor absmax, reduced per worker chunk then across chunks (same
+/// value as the serial fold: max is associative, commutative, and
+/// NaN-ignoring under `f32::max` and the `>` fold alike).
+fn parallel_absmax(x: &[f32], threads: usize) -> f32 {
+    if threads <= 1 {
+        return x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    }
+    let per = (x.len() + threads - 1) / threads;
+    let partials = std::sync::Mutex::new(Vec::with_capacity(threads));
+    std::thread::scope(|scope| {
+        for chunk in x.chunks(per.max(1)) {
+            let partials = &partials;
+            scope.spawn(move || {
+                let m = chunk.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                partials.lock().unwrap().push(m);
+            });
+        }
+    });
+    partials
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .fold(0.0f32, f32::max)
+}
+
+/// Quantize a contiguous run of whole blocks, tile by tile: pass 1 fuses
+/// the absmax reduction and the scale encode for every block of the
+/// tile; pass 2 dequantizes with the element dispatch hoisted.
+fn quantize_range(
+    scheme: &QuantScheme,
+    tile: usize,
+    x: &mut [f32],
+    scales: &mut [f32],
+) {
+    let bs = scheme.block_size;
+    let tile = (tile / bs).max(1) * bs;
+    let c = scheme.elem.max_val(); // divisor C in s = Q(absmax / C)
+    let mut done_blocks = 0usize;
+    for chunk in x.chunks_mut(tile) {
+        let nb = chunk.len() / bs;
+        let srow = &mut scales[done_blocks..done_blocks + nb];
+        // pass 1: fused absmax + scale encode
+        for (b, s) in srow.iter_mut().enumerate() {
+            let absmax = block_absmax(&chunk[b * bs..(b + 1) * bs]);
+            *s = scheme.scale.cast(absmax / c);
+        }
+        // pass 2: dequantize (element dispatch hoisted off the hot loop)
+        match scheme.elem {
+            ElemFormat::Fp(f) => {
+                for (b, &s) in srow.iter().enumerate() {
+                    let blk = &mut chunk[b * bs..(b + 1) * bs];
+                    if s > 0.0 {
+                        for v in blk.iter_mut() {
+                            *v = s * f.cast_signed(*v / s);
+                        }
+                    } else {
+                        blk.fill(0.0); // App. F.3 whole-block collapse
+                    }
+                }
+            }
+            ElemFormat::Int(m) => {
+                for (b, &s) in srow.iter().enumerate() {
+                    let blk = &mut chunk[b * bs..(b + 1) * bs];
+                    if s > 0.0 {
+                        for v in blk.iter_mut() {
+                            *v = s * crate::formats::cast_int_symmetric(*v / s, m);
+                        }
+                    } else {
+                        blk.fill(0.0);
+                    }
+                }
+            }
+        }
+        done_blocks += nb;
+    }
+}
+
+/// 4-accumulator unrolled |x| max over one block (bit-identical to the
+/// serial fold; see module docs).
+#[inline]
+fn block_absmax(blk: &[f32]) -> f32 {
+    let mut acc = [0.0f32; 4];
+    let mut it = blk.chunks_exact(4);
+    for q in &mut it {
+        acc[0] = acc[0].max(q[0].abs());
+        acc[1] = acc[1].max(q[1].abs());
+        acc[2] = acc[2].max(q[2].abs());
+        acc[3] = acc[3].max(q[3].abs());
+    }
+    let mut m = acc[0].max(acc[1]).max(acc[2].max(acc[3]));
+    for &v in it.remainder() {
+        m = m.max(v.abs());
+    }
+    m
+}
+
+/// The kernel bulk call sites use: [`ChunkedKernel::auto`], unless the
+/// `MICROSCALE_KERNEL=scalar` environment variable forces the reference.
+pub fn default_kernel() -> &'static dyn QuantKernel {
+    static SCALAR: ScalarKernel = ScalarKernel;
+    static CHUNKED: OnceLock<ChunkedKernel> = OnceLock::new();
+    static CHOICE: OnceLock<bool> = OnceLock::new(); // true = scalar
+    let scalar = *CHOICE.get_or_init(|| {
+        matches!(
+            std::env::var("MICROSCALE_KERNEL").as_deref(),
+            Ok("scalar")
+        )
+    });
+    if scalar {
+        &SCALAR
+    } else {
+        CHUNKED.get_or_init(ChunkedKernel::auto)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{E8M0, FP6_E3M2, UE4M3, UE5M3};
+
+    #[test]
+    fn chunked_matches_scalar_bitwise() {
+        crate::util::check::property("chunked == scalar", 60, |g| {
+            let bs = *g.pick(&[2usize, 4, 8, 16, 32, 64]);
+            let blocks = g.usize_in(1, 40);
+            let sigma = g.log_uniform(1e-5, 10.0);
+            let x = g.normal_vec_f32(bs * blocks, sigma);
+            let scheme = QuantScheme::new(
+                *g.pick(&[
+                    ElemFormat::FP4,
+                    ElemFormat::FP8,
+                    ElemFormat::Fp(FP6_E3M2),
+                    ElemFormat::INT4,
+                ]),
+                *g.pick(&[UE4M3, UE5M3, E8M0]),
+                bs,
+            )
+            .with_per_tensor(g.bool());
+            // tiny tile + forced threads to exercise every seam
+            let chunked = ChunkedKernel {
+                tile: bs * g.usize_in(1, 3),
+                threads: g.usize_in(1, 4),
+                par_threshold: 0,
+            };
+            let mut a = x.clone();
+            let sa = ScalarKernel.fake_quant_into(&scheme, &mut a);
+            let mut b = x.clone();
+            let sb = chunked.fake_quant_into(&scheme, &mut b);
+            assert_eq!(sa.len(), sb.len());
+            for (u, v) in sa.iter().zip(&sb) {
+                assert_eq!(u.to_bits(), v.to_bits(), "scale {}", scheme.id());
+            }
+            for (i, (u, v)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(
+                    u.to_bits(),
+                    v.to_bits(),
+                    "{} elem {i}: {u} vs {v}",
+                    scheme.id()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn default_kernel_matches_reference_on_a_sweep() {
+        let mut rng = crate::dist::Pcg64::new(0xC0DE);
+        let scheme = QuantScheme::new(ElemFormat::FP4, UE4M3, 16);
+        let x = rng.normal_vec_f32(1 << 14, 4e-3);
+        let a = ScalarKernel.fake_quant(&scheme, &x);
+        let b = default_kernel().fake_quant(&scheme, &x);
+        assert!(a.iter().zip(&b).all(|(u, v)| u.to_bits() == v.to_bits()));
+    }
+
+    #[test]
+    fn block_absmax_matches_fold() {
+        crate::util::check::property("absmax unroll", 40, |g| {
+            let n = g.usize_in(1, 67);
+            let x = g.normal_vec_f32(n, g.log_uniform(1e-6, 1e3));
+            let want = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            assert_eq!(block_absmax(&x).to_bits(), want.to_bits());
+        });
+    }
+
+    #[test]
+    fn serial_and_auto_configs_agree() {
+        let mut rng = crate::dist::Pcg64::new(7);
+        let x = rng.normal_vec_f32(1 << 16, 0.02);
+        let scheme =
+            QuantScheme::new(ElemFormat::FP4, UE5M3, 8).with_per_tensor(true);
+        let a = ChunkedKernel::serial().fake_quant(&scheme, &x);
+        let b = ChunkedKernel::auto().fake_quant(&scheme, &x);
+        assert!(a.iter().zip(&b).all(|(u, v)| u.to_bits() == v.to_bits()));
+    }
+}

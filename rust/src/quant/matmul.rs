@@ -5,12 +5,28 @@
 //! (a) unit/property tests against the runtime path, (b) the quant_service
 //! example, and (c) the L3 perf benches.
 
-use super::{fake_quant, QuantScheme};
+use super::{default_kernel, QuantKernel, QuantScheme};
 
 /// Row-major (m×k) · (k×n) with both operands microscaling-fake-quantized
 /// along the contraction dimension (weights per output column, i.e. on the
 /// transposed view), mirroring `ref.quantized_matmul`.
+///
+/// Quantization runs on [`default_kernel`]; use
+/// [`quantized_matmul_with`] to pin a specific kernel (benches do).
 pub fn quantized_matmul(
+    scheme: &QuantScheme,
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> Vec<f32> {
+    quantized_matmul_with(default_kernel(), scheme, x, w, m, k, n)
+}
+
+/// [`quantized_matmul`] with an explicit [`QuantKernel`].
+pub fn quantized_matmul_with(
+    kernel: &dyn QuantKernel,
     scheme: &QuantScheme,
     x: &[f32],
     w: &[f32],
@@ -20,7 +36,7 @@ pub fn quantized_matmul(
 ) -> Vec<f32> {
     assert_eq!(x.len(), m * k);
     assert_eq!(w.len(), k * n);
-    let xq = fake_quant(scheme, x); // rows are contiguous: blocks along k
+    let xq = kernel.fake_quant(scheme, x); // rows contiguous: blocks along k
     // transpose w to (n, k) so its blocks run along k as well
     let mut wt = vec![0.0f32; n * k];
     for i in 0..k {
@@ -28,7 +44,7 @@ pub fn quantized_matmul(
             wt[j * k + i] = w[i * n + j];
         }
     }
-    let wtq = fake_quant(scheme, &wt);
+    let wtq = kernel.fake_quant(scheme, &wt);
     matmul_t(&xq, &wtq, m, k, n)
 }
 

@@ -2,37 +2,57 @@
 //! implementation, bit-identical to `ref.py` (see `rust/tests/golden.rs`).
 //!
 //! [`QuantScheme`] bundles (element format, scale format, block size,
-//! per-tensor scaling); [`fake_quant`]/[`fake_quant_into`] quantize +
-//! dequantize tensors; [`error`] computes the per-block / per-tensor MSE
-//! statistics behind Figs. 2, 3, 6, 7, 9; [`matmul`] provides the
-//! quantized-GEMM semantics used by CPU-side checks.
+//! per-tensor scaling); [`fake_quant`]/[`fake_quant_into`] are the
+//! scalar *reference* quantizer (golden-pinned); [`kernel`] puts the hot
+//! path behind the [`QuantKernel`] trait with a tiled multi-threaded
+//! implementation the bulk callers use; [`packed`] stores quantized
+//! tensors on real bit-packed bytes; [`error`] computes the per-block /
+//! per-tensor MSE statistics behind Figs. 2, 3, 6, 7, 9; [`matmul`]
+//! provides the quantized-GEMM semantics used by CPU-side checks.
 
 pub mod error;
+pub mod kernel;
 pub mod matmul;
+pub mod packed;
+
+pub use kernel::{default_kernel, ChunkedKernel, QuantKernel, ScalarKernel};
+pub use packed::PackedMxTensor;
 
 use crate::formats::{ElemFormat, MiniFloat};
 
 /// A complete microscaling quantization configuration.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct QuantScheme {
+    /// Element format the block values are cast to.
     pub elem: ElemFormat,
+    /// Scale format the per-block scale is cast to.
     pub scale: MiniFloat,
+    /// Elements sharing one scale (the paper's N).
     pub block_size: usize,
     /// eq. 11 per-tensor pre-scaling (the paper's "-S" variants).
     pub per_tensor: bool,
 }
 
 impl QuantScheme {
+    /// Scheme with per-tensor scaling off (the common case).
     pub fn new(elem: ElemFormat, scale: MiniFloat, block_size: usize) -> Self {
         QuantScheme { elem, scale, block_size, per_tensor: false }
     }
 
+    /// Builder-style toggle for eq. 11 per-tensor pre-scaling.
     pub fn with_per_tensor(mut self, on: bool) -> Self {
         self.per_tensor = on;
         self
     }
 
-    /// Short id like `fp4_e2m1/ue4m3-S/bs8` (cache keys, reports).
+    /// Short id like `fp4_e2m1/ue4m3-S/bs8` (cache keys, reports, CLI).
+    ///
+    /// Naming convention: `<elem name>/<scale name>[-S]/bs<N>` where the
+    /// element and scale names are the stable
+    /// [`ElemFormat::name`]/[`MiniFloat::name`] strings, `-S` marks the
+    /// per-tensor ("scaled") variant, and `N` is the block size. Ids are
+    /// embedded in result-cache keys, so changing this format
+    /// invalidates `results/cache.json`.
     pub fn id(&self) -> String {
         format!(
             "{}/{}{}/bs{}",
@@ -95,6 +115,11 @@ pub fn fake_quant_block(scheme: &QuantScheme, block: &mut [f32]) -> f32 {
 
 /// Quantize-dequantize a full tensor (blocks along the flat axis).
 /// `x.len()` must be a multiple of the block size.
+///
+/// This is the scalar *reference* path, pinned bit-for-bit to the python
+/// oracle by the golden tests; bulk callers go through
+/// [`default_kernel`] instead, which is bit-identical but tiled and
+/// multi-threaded (see [`kernel`]).
 pub fn fake_quant(scheme: &QuantScheme, x: &[f32]) -> Vec<f32> {
     let mut out = x.to_vec();
     fake_quant_into(scheme, &mut out);

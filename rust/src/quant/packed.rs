@@ -1,0 +1,510 @@
+//! Packed MX tensors: real bit-packed storage for microscaling formats.
+//!
+//! The analytic storage model (Sec. 3.1, [`crate::hw::memory`]) prices a
+//! block format at `elem_bits/8 + scale_bits/8/N` bytes per element.
+//! This module *materializes* that layout so the compression claims can
+//! be measured on real bytes and the decode path can be timed:
+//!
+//! * element field — one `elem_bits`-wide code per value (4 bits for
+//!   FP4/INT4, 6 for FP6, 8 for FP8/INT8), bit-packed LSB-first into a
+//!   contiguous byte stream. Codes are sign-magnitude: the top bit is the
+//!   sign (preserving `-0.0`, which the fake-quant path produces for
+//!   small negative inputs), the low bits index the format's magnitude
+//!   level table ([`crate::formats::levels`]).
+//! * scale field — **one byte per block**, a level-table index over the
+//!   non-negative scale grid. Every FP8/FP6 scale format of the paper
+//!   fits: UE4M3 has 127 levels incl. zero, UE5M3 exactly 256 (the
+//!   repurposed sign bit doubles the exponent range — the whole point of
+//!   the format), E8M0 255. BF16 scales need 16 bits and are rejected
+//!   ([`PackedMxTensor::encode`] returns an error; the experiments treat
+//!   BF16 scales as the *unquantized* baseline, which is never
+//!   materialized in packed form).
+//! * an f32 per-tensor factor (eq. 11) when the scheme uses "-S"
+//!   variants.
+//!
+//! **Round-trip contract**: `decode(encode(x))` is bit-identical to
+//! [`super::fake_quant`]`(scheme, x)` — the packed representation is a
+//! lossless re-encoding of the quantizer's output, enforced by a
+//! property test over random (σ, block size, element, scale) draws.
+
+use crate::formats::levels::{elem_positive_levels, positive_levels};
+use crate::formats::{ElemFormat, MiniFloat};
+
+use super::QuantScheme;
+
+/// Codes-per-level lookup for one non-negative quantization grid.
+///
+/// `levels[0]` is always `0.0`; magnitudes are encoded as their index.
+#[derive(Debug, Clone)]
+pub struct LevelCodec {
+    levels: Vec<f32>,
+    /// bits needed for a magnitude index
+    mag_bits: u32,
+}
+
+impl LevelCodec {
+    fn from_levels(levels: Vec<f32>) -> LevelCodec {
+        debug_assert!(!levels.is_empty() && levels[0] == 0.0);
+        debug_assert!(levels.windows(2).all(|w| w[0] < w[1]));
+        // bit length of the largest index = ceil(log2(level count))
+        let mag_bits = usize::BITS - (levels.len() - 1).leading_zeros();
+        LevelCodec { levels, mag_bits: mag_bits.max(1) }
+    }
+
+    /// Codec for an element format's magnitude grid.
+    pub fn for_elem(elem: &ElemFormat) -> LevelCodec {
+        let mut levels = vec![0.0f32];
+        levels.extend(elem_positive_levels(elem).into_iter().map(|v| v as f32));
+        LevelCodec::from_levels(levels)
+    }
+
+    /// Codec for a scale format's non-negative grid; `None` when the
+    /// format does not fit one byte (BF16 "unquantized" scales).
+    pub fn for_scale(scale: &MiniFloat) -> Option<LevelCodec> {
+        let pos = positive_levels(scale, 257);
+        if pos.len() >= 256 {
+            return None;
+        }
+        let mut levels = vec![0.0f32];
+        levels.extend(pos.into_iter().map(|v| v as f32));
+        Some(LevelCodec::from_levels(levels))
+    }
+
+    /// Bits per magnitude index.
+    pub fn mag_bits(&self) -> u32 {
+        self.mag_bits
+    }
+
+    /// Number of representable non-negative values (incl. zero).
+    pub fn level_count(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Exact-match encode of a non-negative grid value to its index;
+    /// `None` if `mag` is not on the grid (inputs must come from the
+    /// format's own cast — that is the round-trip contract; NaN, which
+    /// the cast pipeline can only produce in pathological
+    /// per-tensor-overflow regimes, is not on any grid).
+    pub fn encode_mag(&self, mag: f32) -> Option<u32> {
+        let i = self.levels.partition_point(|&l| l < mag);
+        if i < self.levels.len() && self.levels[i].to_bits() == mag.to_bits() {
+            Some(i as u32)
+        } else {
+            None
+        }
+    }
+
+    /// Decode an index back to its grid value.
+    #[inline]
+    pub fn decode(&self, idx: u32) -> f32 {
+        self.levels[idx as usize]
+    }
+}
+
+/// LSB-first bit packer for fixed-width codes.
+struct BitWriter {
+    buf: Vec<u8>,
+    acc: u64,
+    nbits: u32,
+}
+
+impl BitWriter {
+    fn with_capacity(bits: usize) -> BitWriter {
+        BitWriter { buf: Vec::with_capacity((bits + 7) / 8), acc: 0, nbits: 0 }
+    }
+
+    #[inline]
+    fn push(&mut self, code: u32, bits: u32) {
+        debug_assert!(bits <= 32 && (bits == 32 || code < (1u32 << bits)));
+        self.acc |= (code as u64) << self.nbits;
+        self.nbits += bits;
+        while self.nbits >= 8 {
+            self.buf.push(self.acc as u8);
+            self.acc >>= 8;
+            self.nbits -= 8;
+        }
+    }
+
+    fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.buf.push(self.acc as u8);
+        }
+        self.buf
+    }
+}
+
+/// LSB-first bit reader matching [`BitWriter`].
+struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+    acc: u64,
+    nbits: u32,
+}
+
+impl<'a> BitReader<'a> {
+    fn new(buf: &'a [u8]) -> BitReader<'a> {
+        BitReader { buf, pos: 0, acc: 0, nbits: 0 }
+    }
+
+    #[inline]
+    fn read(&mut self, bits: u32) -> u32 {
+        while self.nbits < bits {
+            self.acc |= (self.buf[self.pos] as u64) << self.nbits;
+            self.pos += 1;
+            self.nbits += 8;
+        }
+        let v = (self.acc & ((1u64 << bits) - 1)) as u32;
+        self.acc >>= bits;
+        self.nbits -= bits;
+        v
+    }
+}
+
+/// A microscaling tensor stored on real packed bytes.
+///
+/// See the module docs for the layout; construct with
+/// [`PackedMxTensor::encode`], recover values with
+/// [`PackedMxTensor::decode`] / [`PackedMxTensor::decode_into`].
+pub struct PackedMxTensor {
+    scheme: QuantScheme,
+    len: usize,
+    elem_bits: u32,
+    /// eq. 11 factor the decode divides by (1.0 when per-tensor is off)
+    s_t: f32,
+    /// one scale-grid index per block
+    scale_codes: Vec<u8>,
+    /// bit-packed sign-magnitude element codes
+    elem_data: Vec<u8>,
+    elem_codec: LevelCodec,
+    scale_codec: LevelCodec,
+}
+
+impl PackedMxTensor {
+    /// Quantize `x` under `scheme` directly into packed form.
+    ///
+    /// Errors when the scheme has no packed representation (BF16 scales,
+    /// or integer elements wider than 8 bits). `x.len()` must be a
+    /// multiple of the block size.
+    pub fn encode(scheme: &QuantScheme, x: &[f32]) -> crate::Result<PackedMxTensor> {
+        let bs = scheme.block_size;
+        anyhow::ensure!(bs > 0, "block size must be positive");
+        anyhow::ensure!(
+            x.len() % bs == 0,
+            "len {} not divisible by block size {}",
+            x.len(),
+            bs
+        );
+        let elem_codec = LevelCodec::for_elem(&scheme.elem);
+        let elem_bits = elem_codec.mag_bits() + 1; // + sign
+        anyhow::ensure!(
+            elem_bits <= 8,
+            "element format {} needs {elem_bits} bits/code (max 8)",
+            scheme.elem.name()
+        );
+        let Some(scale_codec) = LevelCodec::for_scale(&scheme.scale) else {
+            anyhow::bail!(
+                "scale format {} does not fit a 1-byte code (quasi-continuous \
+                 scales have no packed MX representation)",
+                scheme.scale.name
+            );
+        };
+
+        // replicate the fake-quant pipeline exactly (see round-trip
+        // contract): pre-scale, per-block cast, signs from the cast output
+        let s_t = if scheme.per_tensor {
+            let absmax = x.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            scheme.per_tensor_factor(absmax)
+        } else {
+            1.0
+        };
+
+        let n_blocks = x.len() / bs;
+        let mut scale_codes = Vec::with_capacity(n_blocks);
+        let mut w = BitWriter::with_capacity(x.len() * elem_bits as usize);
+        let sign_shift = elem_bits - 1;
+        for block in x.chunks(bs) {
+            let mut absmax = 0.0f32;
+            for &v in block {
+                let a = (v * s_t).abs();
+                if a > absmax {
+                    absmax = a;
+                }
+            }
+            let s = scheme.scale.cast(absmax / scheme.elem.max_val());
+            let s_code = scale_codec.encode_mag(s).ok_or_else(|| {
+                anyhow::anyhow!("scale {s} is not on the {} grid", scheme.scale.name)
+            })?;
+            scale_codes.push(s_code as u8);
+            if s > 0.0 {
+                for &v in block {
+                    let q = scheme.elem.cast((v * s_t) / s);
+                    let sign = (q.is_sign_negative() as u32) << sign_shift;
+                    let mag = elem_codec.encode_mag(q.abs()).ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "quantized value {q} is not on the {} grid \
+                             (degenerate per-tensor overflow?)",
+                            scheme.elem.name()
+                        )
+                    })?;
+                    w.push(sign | mag, elem_bits);
+                }
+            } else {
+                // App. F.3: whole block collapses to +0.0
+                for _ in block {
+                    w.push(0, elem_bits);
+                }
+            }
+        }
+
+        Ok(PackedMxTensor {
+            scheme: *scheme,
+            len: x.len(),
+            elem_bits,
+            s_t,
+            scale_codes,
+            elem_data: w.finish(),
+            elem_codec,
+            scale_codec,
+        })
+    }
+
+    /// Dequantize into a fresh vector (bit-identical to
+    /// [`super::fake_quant`] on the original input).
+    pub fn decode(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.len];
+        self.decode_into(&mut out);
+        out
+    }
+
+    /// Dequantize into a caller-provided buffer of exactly
+    /// [`PackedMxTensor::len`] elements.
+    pub fn decode_into(&self, out: &mut [f32]) {
+        assert_eq!(out.len(), self.len, "decode buffer size");
+        let bs = self.scheme.block_size;
+        let mut r = BitReader::new(&self.elem_data);
+        let sign_shift = self.elem_bits - 1;
+        let mag_mask = (1u32 << sign_shift) - 1;
+        for (block, &code) in out.chunks_mut(bs).zip(&self.scale_codes) {
+            let s = self.scale_codec.decode(code as u32);
+            if s > 0.0 {
+                for v in block.iter_mut() {
+                    let c = r.read(self.elem_bits);
+                    // same op order as the quantizer: s * (±mag), then
+                    // the eq. 11 un-scaling division
+                    let mut y = s * self.elem_codec.decode(c & mag_mask);
+                    if c >> sign_shift != 0 {
+                        y = -y;
+                    }
+                    if self.s_t != 1.0 {
+                        y /= self.s_t;
+                    }
+                    *v = y;
+                }
+            } else {
+                for v in block.iter_mut() {
+                    let _ = r.read(self.elem_bits);
+                    *v = if self.s_t != 1.0 { 0.0 / self.s_t } else { 0.0 };
+                }
+            }
+        }
+    }
+
+    /// Number of logical f32 elements.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the tensor has zero elements.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The quantization scheme this tensor was packed under.
+    pub fn scheme(&self) -> &QuantScheme {
+        &self.scheme
+    }
+
+    /// Bits per element code (sign + magnitude index).
+    pub fn elem_bits(&self) -> u32 {
+        self.elem_bits
+    }
+
+    /// The decoded scale of block `b`.
+    pub fn block_scale(&self, b: usize) -> f32 {
+        self.scale_codec.decode(self.scale_codes[b] as u32)
+    }
+
+    /// Payload bytes actually stored: packed element field + one scale
+    /// byte per block (matches
+    /// [`crate::hw::memory::packed_payload_bytes`] exactly).
+    pub fn payload_bytes(&self) -> usize {
+        self.elem_data.len() + self.scale_codes.len()
+    }
+
+    /// Measured storage cost in bits per element.
+    pub fn bits_per_element(&self) -> f64 {
+        if self.len == 0 {
+            return 0.0;
+        }
+        self.payload_bytes() as f64 * 8.0 / self.len as f64
+    }
+
+    /// Compression ratio vs a 16-bit (BF16) baseline.
+    pub fn compression_vs_bf16(&self) -> f64 {
+        16.0 / self.bits_per_element()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::formats::{BF16_SCALE, E8M0, FP6_E2M3, FP6_E3M2, UE4M3, UE5M3};
+    use crate::hw::memory;
+    use crate::quant::fake_quant;
+
+    const PACKABLE_ELEMS: [ElemFormat; 6] = [
+        ElemFormat::FP4,
+        ElemFormat::Fp(FP6_E2M3),
+        ElemFormat::Fp(FP6_E3M2),
+        ElemFormat::FP8,
+        ElemFormat::INT4,
+        ElemFormat::Int(127.0),
+    ];
+
+    #[test]
+    fn code_widths_match_the_formats() {
+        let widths: Vec<u32> = PACKABLE_ELEMS
+            .iter()
+            .map(|e| LevelCodec::for_elem(e).mag_bits() + 1)
+            .collect();
+        assert_eq!(widths, vec![4, 6, 6, 8, 4, 8]);
+        // UE5M3 uses its byte exactly: 255 positive levels + zero
+        assert_eq!(LevelCodec::for_scale(&UE5M3).unwrap().level_count(), 256);
+        assert_eq!(LevelCodec::for_scale(&UE4M3).unwrap().level_count(), 127);
+        assert_eq!(LevelCodec::for_scale(&E8M0).unwrap().level_count(), 255);
+    }
+
+    #[test]
+    fn bf16_scales_have_no_packed_form() {
+        assert!(LevelCodec::for_scale(&BF16_SCALE).is_none());
+        let scheme = QuantScheme::new(ElemFormat::FP4, BF16_SCALE, 8);
+        let err = PackedMxTensor::encode(&scheme, &[0.0; 8]).unwrap_err();
+        assert!(format!("{err}").contains("1-byte"));
+    }
+
+    #[test]
+    fn roundtrip_bit_exact_with_fake_quant() {
+        // The ISSUE-level acceptance property: encode→decode equals the
+        // fake-quant reference bit for bit, across formats, scales,
+        // block sizes {8,16,32,64}, random σ, and the eq. 11 variants.
+        crate::util::check::property("packed roundtrip", 80, |g| {
+            let bs = *g.pick(&[8usize, 16, 32, 64]);
+            let blocks = g.usize_in(1, 24);
+            let sigma = g.log_uniform(1e-5, 10.0);
+            let x = g.normal_vec_f32(bs * blocks, sigma);
+            let scheme = QuantScheme::new(
+                *g.pick(&PACKABLE_ELEMS),
+                *g.pick(&[UE4M3, UE5M3, E8M0]),
+                bs,
+            )
+            .with_per_tensor(g.bool());
+            let packed = PackedMxTensor::encode(&scheme, &x).unwrap();
+            let want = fake_quant(&scheme, &x);
+            let got = packed.decode();
+            assert_eq!(got.len(), want.len());
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{} elem {i}: packed {a} vs fake_quant {b} (x={})",
+                    scheme.id(),
+                    x[i]
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn decode_into_matches_decode() {
+        let mut rng = crate::dist::Pcg64::new(5);
+        let x = rng.normal_vec_f32(512, 0.01);
+        let scheme = QuantScheme::new(ElemFormat::FP4, UE4M3, 16);
+        let p = PackedMxTensor::encode(&scheme, &x).unwrap();
+        let a = p.decode();
+        let mut b = vec![0.0f32; 512];
+        p.decode_into(&mut b);
+        assert!(a.iter().zip(&b).all(|(u, v)| u.to_bits() == v.to_bits()));
+        assert_eq!(p.len(), 512);
+        assert!(!p.is_empty());
+        assert_eq!(p.scheme().block_size, 16);
+    }
+
+    #[test]
+    fn payload_matches_memory_model() {
+        let mut rng = crate::dist::Pcg64::new(6);
+        for (elem, bits) in [
+            (ElemFormat::FP4, 4u32),
+            (ElemFormat::Fp(FP6_E2M3), 6),
+            (ElemFormat::FP8, 8),
+        ] {
+            for bs in [8usize, 16, 32] {
+                let n = bs * 50;
+                let x = rng.normal_vec_f32(n, 0.02);
+                let scheme = QuantScheme::new(elem, UE5M3, bs);
+                let p = PackedMxTensor::encode(&scheme, &x).unwrap();
+                assert_eq!(p.elem_bits(), bits);
+                assert_eq!(
+                    p.payload_bytes(),
+                    memory::packed_payload_bytes(bits, n, bs),
+                    "{} bs{bs}",
+                    elem.name()
+                );
+                // measured bits/elem equals the Sec. 3.1 analytic model
+                // with 8-bit scales
+                let analytic = bits as f64 + 8.0 / bs as f64;
+                assert!((p.bits_per_element() - analytic).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn fp4_bs32_hits_the_ocp_storage_point() {
+        // MXFP4 with FP8 scales at N=32: 4.25 bits/elem → ~3.76x vs bf16
+        let mut rng = crate::dist::Pcg64::new(8);
+        let x = rng.normal_vec_f32(32 * 64, 0.02);
+        let p = PackedMxTensor::encode(
+            &QuantScheme::new(ElemFormat::FP4, UE4M3, 32),
+            &x,
+        )
+        .unwrap();
+        assert!((p.bits_per_element() - 4.25).abs() < 1e-12);
+        assert!((p.compression_vs_bf16() - 16.0 / 4.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn block_scales_are_recoverable() {
+        let mut rng = crate::dist::Pcg64::new(9);
+        let x = rng.normal_vec_f32(8 * 16, 5e-3);
+        let scheme = QuantScheme::new(ElemFormat::FP4, UE4M3, 8);
+        let p = PackedMxTensor::encode(&scheme, &x).unwrap();
+        let scales = crate::quant::fake_quant_into(&scheme, &mut x.clone());
+        for (b, s) in scales.iter().enumerate() {
+            assert_eq!(p.block_scale(b).to_bits(), s.to_bits(), "block {b}");
+        }
+    }
+
+    #[test]
+    fn bitrw_roundtrip() {
+        let mut w = BitWriter::with_capacity(100 * 6);
+        let codes: Vec<u32> = (0..100u32).map(|i| (i * 37) % 64).collect();
+        for &c in &codes {
+            w.push(c, 6);
+        }
+        let buf = w.finish();
+        assert_eq!(buf.len(), (100 * 6 + 7) / 8);
+        let mut r = BitReader::new(&buf);
+        for &c in &codes {
+            assert_eq!(r.read(6), c);
+        }
+    }
+}

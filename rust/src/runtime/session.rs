@@ -168,7 +168,7 @@ pub fn literal_scalar_f32(lit: &xla::Literal) -> Result<f32> {
     Ok(lit.get_first_element::<f32>()?)
 }
 
-/// Extract a Vec<f32> from an output literal.
+/// Extract a `Vec<f32>` from an output literal.
 pub fn literal_vec_f32(lit: &xla::Literal) -> Result<Vec<f32>> {
     Ok(lit.to_vec::<f32>()?)
 }

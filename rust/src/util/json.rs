@@ -92,17 +92,17 @@ impl Json {
         }
     }
 
-    /// Array of numbers -> Vec<f64>.
+    /// Array of numbers -> `Vec<f64>`.
     pub fn as_f64_vec(&self) -> Result<Vec<f64>> {
         self.as_arr()?.iter().map(|v| v.as_f64()).collect()
     }
 
-    /// Array of numbers -> Vec<f32>.
+    /// Array of numbers -> `Vec<f32>`.
     pub fn as_f32_vec(&self) -> Result<Vec<f32>> {
         Ok(self.as_f64_vec()?.into_iter().map(|v| v as f32).collect())
     }
 
-    /// Array of numbers -> Vec<usize> (shapes etc.).
+    /// Array of numbers -> `Vec<usize>` (shapes etc.).
     pub fn as_usize_vec(&self) -> Result<Vec<usize>> {
         Ok(self.as_f64_vec()?.into_iter().map(|v| v as usize).collect())
     }

@@ -8,6 +8,7 @@
 pub mod check;
 pub mod cli;
 pub mod json;
+pub mod par;
 pub mod timer;
 
 /// Exact `2^e` for `e ∈ [-126, 127]`, constructed by bit pattern.

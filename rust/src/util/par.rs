@@ -1,0 +1,190 @@
+//! Scoped-thread data parallelism (rayon is not vendored in the offline
+//! build, so this module provides the two shapes the crate needs on top
+//! of `std::thread::scope`).
+//!
+//! Design notes:
+//!
+//! * [`par_map`] mirrors `rayon`'s `par_iter().map().collect()` for owned
+//!   inputs: order-preserving, work-stealing via a shared LIFO queue, and
+//!   it degrades to a plain serial map for 1 thread / tiny inputs, so
+//!   callers never pay thread spawn cost on small sweeps.
+//! * [`par_chunks_mut`] mirrors `par_chunks_mut`: disjoint `&mut` chunks
+//!   aligned to a caller-chosen boundary (quantization block size), which
+//!   is what the [`crate::quant::kernel::ChunkedKernel`] builds on.
+//!
+//! Panics in worker closures propagate to the caller (std scoped threads
+//! re-raise on scope exit), matching rayon semantics.
+
+use std::cell::Cell;
+use std::sync::Mutex;
+
+/// Number of worker threads to use by default (logical CPUs).
+pub fn max_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+thread_local! {
+    static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
+}
+
+/// Mark the current thread as a coordinator-pool worker. Inner
+/// data-parallel helpers ([`crate::quant::kernel::ChunkedKernel`])
+/// check [`on_worker_thread`] and stay serial, so N pool workers don't
+/// each fan out N kernel threads (ncpus² oversubscription).
+pub fn mark_worker_thread() {
+    IN_POOL_WORKER.with(|f| f.set(true));
+}
+
+/// Whether this thread is a coordinator-pool worker (see
+/// [`mark_worker_thread`]).
+pub fn on_worker_thread() -> bool {
+    IN_POOL_WORKER.with(|f| f.get())
+}
+
+/// Order-preserving parallel map over an owned vector.
+///
+/// `threads` is a cap, not a demand: the effective worker count is
+/// `min(threads, items.len())`, and `threads <= 1` (or a 0/1-element
+/// input) runs serially with zero overhead.
+pub fn par_map<I, O, F>(items: Vec<I>, threads: usize, f: F) -> Vec<O>
+where
+    I: Send,
+    O: Send,
+    F: Fn(I) -> O + Sync,
+{
+    let n = items.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return items.into_iter().map(f).collect();
+    }
+    // Index-tagged LIFO queue; workers pop until empty.
+    let queue: Mutex<Vec<(usize, I)>> =
+        Mutex::new(items.into_iter().enumerate().rev().collect());
+    let out: Mutex<Vec<Option<O>>> =
+        Mutex::new((0..n).map(|_| None).collect());
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let item = queue.lock().unwrap().pop();
+                match item {
+                    Some((i, x)) => {
+                        let y = f(x);
+                        out.lock().unwrap()[i] = Some(y);
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+    out.into_inner()
+        .unwrap()
+        .into_iter()
+        .map(|o| o.expect("worker filled every slot"))
+        .collect()
+}
+
+/// Run `f(offset, chunk)` over disjoint mutable chunks of `data`, split
+/// at multiples of `align` elements, using up to `threads` workers.
+///
+/// The trailing `data.len() % align` remainder (if any) is attached to
+/// the last chunk. `threads <= 1` processes the whole slice in one call.
+pub fn par_chunks_mut<T, F>(data: &mut [T], align: usize, threads: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let n = data.len();
+    let align = align.max(1);
+    let units = n / align;
+    let threads = threads.max(1).min(units.max(1));
+    if threads <= 1 || units <= 1 {
+        if n > 0 {
+            f(0, data);
+        }
+        return;
+    }
+    let per = (units + threads - 1) / threads * align;
+    let fref = &f;
+    std::thread::scope(|scope| {
+        let mut rest = data;
+        let mut offset = 0usize;
+        while !rest.is_empty() {
+            let take = if rest.len() <= per + (n - units * align) {
+                rest.len() // last chunk absorbs the unaligned remainder
+            } else {
+                per
+            };
+            let (head, tail) = rest.split_at_mut(take);
+            let off = offset;
+            scope.spawn(move || fref(off, head));
+            offset += take;
+            rest = tail;
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<usize> = (0..257).collect();
+        let serial: Vec<usize> = items.iter().map(|i| i * i).collect();
+        for threads in [1, 2, 3, 8] {
+            let got = par_map(items.clone(), threads, |i| i * i);
+            assert_eq!(got, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn par_map_empty_and_single() {
+        let e: Vec<u32> = par_map(Vec::<u32>::new(), 4, |x| x + 1);
+        assert!(e.is_empty());
+        assert_eq!(par_map(vec![41u32], 4, |x| x + 1), vec![42]);
+    }
+
+    #[test]
+    fn par_chunks_cover_exactly_once() {
+        // mark every element with its visiting chunk's offset parity
+        let n = 8 * 13 + 5; // unaligned remainder
+        for threads in [1, 2, 4, 7] {
+            let mut data = vec![0u32; n];
+            par_chunks_mut(&mut data, 8, threads, |off, chunk| {
+                for (i, v) in chunk.iter_mut().enumerate() {
+                    *v += (off + i) as u32 + 1;
+                }
+            });
+            for (i, v) in data.iter().enumerate() {
+                assert_eq!(*v, i as u32 + 1, "i={i} threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn worker_thread_flag_is_per_thread() {
+        assert!(!on_worker_thread());
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                mark_worker_thread();
+                assert!(on_worker_thread());
+            });
+        });
+        // marking another thread does not leak into this one
+        assert!(!on_worker_thread());
+    }
+
+    #[test]
+    fn par_chunks_offsets_are_aligned() {
+        let mut data = vec![0u8; 64];
+        let offsets = Mutex::new(Vec::new());
+        par_chunks_mut(&mut data, 16, 4, |off, chunk| {
+            assert_eq!(off % 16, 0);
+            assert_eq!(chunk.len() % 16, 0);
+            offsets.lock().unwrap().push(off);
+        });
+        let mut offs = offsets.into_inner().unwrap();
+        offs.sort();
+        assert_eq!(offs, vec![0, 16, 32, 48]);
+    }
+}

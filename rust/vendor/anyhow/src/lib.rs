@@ -1,0 +1,220 @@
+//! Minimal in-tree reimplementation of the `anyhow` API surface used by
+//! the `microscale` crate (the sandbox builds fully offline, so the real
+//! crates.io `anyhow` cannot be fetched).
+//!
+//! Implemented subset:
+//!
+//! * [`Error`] — a boxed message with an optional source chain; `{}`
+//!   prints the outermost message, `{:#}` prints the whole chain
+//!   separated by `": "` (matching anyhow's alternate formatting).
+//! * [`Result<T>`] with the `Error` default.
+//! * [`anyhow!`], [`bail!`], [`ensure!`] macros.
+//! * [`Context`] — `.context(..)` / `.with_context(..)` on `Result` and
+//!   `Option`.
+//! * Blanket `From<E: std::error::Error>` so `?` converts io/parse/etc.
+//!   errors. As in real anyhow, `Error` itself deliberately does NOT
+//!   implement `std::error::Error` (that is what makes the blanket
+//!   conversion coherent).
+
+use std::fmt;
+
+/// `Result<T, anyhow::Error>` alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+struct ErrorImpl {
+    msg: String,
+    source: Option<Box<ErrorImpl>>,
+}
+
+/// An error message with an optional chain of underlying causes.
+pub struct Error(Box<ErrorImpl>);
+
+impl Error {
+    /// Construct from a displayable message (what [`anyhow!`] expands to).
+    pub fn msg<M: fmt::Display>(m: M) -> Error {
+        Error(Box::new(ErrorImpl { msg: m.to_string(), source: None }))
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(self, c: C) -> Error {
+        Error(Box::new(ErrorImpl { msg: c.to_string(), source: Some(self.0) }))
+    }
+
+    /// Iterate the messages from outermost to innermost.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut msgs = Vec::new();
+        let mut cur = Some(&self.0);
+        while let Some(e) = cur {
+            msgs.push(e.msg.as_str());
+            cur = e.source.as_ref();
+        }
+        msgs.into_iter()
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            for (i, m) in self.chain().enumerate() {
+                if i > 0 {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{m}")?;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.0.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0.msg)?;
+        let causes: Vec<&str> = self.chain().skip(1).collect();
+        if !causes.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            for c in causes {
+                write!(f, "\n    {c}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        // Preserve the std source chain as context layers.
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        let mut inner: Option<Box<ErrorImpl>> = None;
+        for m in msgs.into_iter().rev() {
+            inner = Some(Box::new(ErrorImpl { msg: m, source: inner }));
+        }
+        Error(inner.expect("at least one message"))
+    }
+}
+
+/// Attach context to the error variant of a `Result` or to a `None`.
+pub trait Context<T> {
+    /// Wrap the error with a fixed context message.
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+    /// Wrap the error with a lazily-built context message.
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T> Context<T> for Result<T, Error> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| e.context(c))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| e.context(f()))
+    }
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T>
+    for std::result::Result<T, E>
+{
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(c))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::from(e).context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(c))
+    }
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", ::std::stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "nope")
+    }
+
+    #[test]
+    fn display_and_alternate() {
+        let e: Error = Error::msg("root").context("mid").context("top");
+        assert_eq!(format!("{e}"), "top");
+        assert_eq!(format!("{e:#}"), "top: mid: root");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert!(format!("{:#}", f().unwrap_err()).contains("nope"));
+    }
+
+    #[test]
+    fn context_on_option_and_result() {
+        let n: Option<u32> = None;
+        assert_eq!(format!("{}", n.context("missing").unwrap_err()), "missing");
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.with_context(|| format!("doing {}", "x")).unwrap_err();
+        assert_eq!(format!("{e:#}"), "doing x: nope");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(ok: bool) -> Result<u32> {
+            ensure!(ok, "flag was {ok}");
+            if !ok {
+                bail!("unreachable");
+            }
+            Ok(7)
+        }
+        assert_eq!(f(true).unwrap(), 7);
+        assert_eq!(format!("{}", f(false).unwrap_err()), "flag was false");
+        fn g(n: usize) -> Result<()> {
+            ensure!(n == 3);
+            Ok(())
+        }
+        assert!(format!("{}", g(2).unwrap_err()).contains("n == 3"));
+    }
+}

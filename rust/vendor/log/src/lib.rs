@@ -1,0 +1,253 @@
+//! Minimal in-tree reimplementation of the `log` facade API surface used
+//! by the `microscale` crate (the sandbox builds fully offline, so the
+//! real crates.io `log` cannot be fetched).
+//!
+//! Implemented subset: [`Level`], [`LevelFilter`], [`Metadata`],
+//! [`Record`], the [`Log`] trait, [`set_logger`]/[`set_max_level`], and
+//! the `error!`/`warn!`/`info!`/`debug!`/`trace!` macros. Semantics match
+//! the real facade: no logger installed (or level filtered out) means the
+//! record is silently dropped.
+
+use std::fmt;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Verbosity level of a record (ordered: `Error < Warn < .. < Trace`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    /// Unrecoverable problems.
+    Error = 1,
+    /// Recoverable problems worth surfacing.
+    Warn,
+    /// High-level progress (the default CLI verbosity).
+    Info,
+    /// Developer diagnostics.
+    Debug,
+    /// Very fine-grained tracing.
+    Trace,
+}
+
+impl Level {
+    /// Uppercase static name, e.g. `"INFO"`.
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN",
+            Level::Info => "INFO",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        }
+    }
+}
+
+impl fmt::Display for Level {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Maximum-verbosity filter installed with [`set_max_level`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum LevelFilter {
+    /// Disable all logging.
+    Off = 0,
+    /// Allow `Error` only.
+    Error,
+    /// Allow `Error..=Warn`.
+    Warn,
+    /// Allow `Error..=Info`.
+    Info,
+    /// Allow `Error..=Debug`.
+    Debug,
+    /// Allow everything.
+    Trace,
+}
+
+/// Metadata about a record (its level and target module).
+#[derive(Debug, Clone, Copy)]
+pub struct Metadata<'a> {
+    level: Level,
+    target: &'a str,
+}
+
+impl<'a> Metadata<'a> {
+    /// The record's verbosity level.
+    pub fn level(&self) -> Level {
+        self.level
+    }
+
+    /// The record's target (module path of the call site).
+    pub fn target(&self) -> &'a str {
+        self.target
+    }
+}
+
+/// A single log record: metadata plus the formatted message arguments.
+#[derive(Clone, Copy)]
+pub struct Record<'a> {
+    metadata: Metadata<'a>,
+    args: fmt::Arguments<'a>,
+}
+
+impl<'a> Record<'a> {
+    /// The record's verbosity level.
+    pub fn level(&self) -> Level {
+        self.metadata.level
+    }
+
+    /// The record's target (module path of the call site).
+    pub fn target(&self) -> &'a str {
+        self.metadata.target
+    }
+
+    /// The record's metadata.
+    pub fn metadata(&self) -> &Metadata<'a> {
+        &self.metadata
+    }
+
+    /// The message, ready for `{}` formatting.
+    pub fn args(&self) -> &fmt::Arguments<'a> {
+        &self.args
+    }
+}
+
+/// A logging sink; install one with [`set_logger`].
+pub trait Log: Sync + Send {
+    /// Whether a record with this metadata would be logged.
+    fn enabled(&self, metadata: &Metadata) -> bool;
+    /// Consume a record.
+    fn log(&self, record: &Record);
+    /// Flush buffered output.
+    fn flush(&self);
+}
+
+static LOGGER: OnceLock<&'static dyn Log> = OnceLock::new();
+static MAX_LEVEL: AtomicUsize = AtomicUsize::new(0); // LevelFilter::Off
+
+/// Error returned when [`set_logger`] is called twice.
+#[derive(Debug)]
+pub struct SetLoggerError(());
+
+impl fmt::Display for SetLoggerError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str("a logger is already installed")
+    }
+}
+
+impl std::error::Error for SetLoggerError {}
+
+/// Install the global logger (first call wins).
+pub fn set_logger(logger: &'static dyn Log) -> Result<(), SetLoggerError> {
+    LOGGER.set(logger).map_err(|_| SetLoggerError(()))
+}
+
+/// Set the global maximum verbosity.
+pub fn set_max_level(filter: LevelFilter) {
+    MAX_LEVEL.store(filter as usize, Ordering::Relaxed);
+}
+
+/// The current global maximum verbosity.
+pub fn max_level() -> LevelFilter {
+    match MAX_LEVEL.load(Ordering::Relaxed) {
+        1 => LevelFilter::Error,
+        2 => LevelFilter::Warn,
+        3 => LevelFilter::Info,
+        4 => LevelFilter::Debug,
+        5 => LevelFilter::Trace,
+        _ => LevelFilter::Off,
+    }
+}
+
+/// Macro plumbing: dispatch one record to the installed logger.
+#[doc(hidden)]
+pub fn __log(level: Level, target: &str, args: fmt::Arguments) {
+    if level as usize > MAX_LEVEL.load(Ordering::Relaxed) {
+        return;
+    }
+    if let Some(logger) = LOGGER.get() {
+        let metadata = Metadata { level, target };
+        if logger.enabled(&metadata) {
+            logger.log(&Record { metadata, args });
+        }
+    }
+}
+
+/// Log at an explicit [`Level`].
+#[macro_export]
+macro_rules! log {
+    ($lvl:expr, $($arg:tt)+) => {
+        $crate::__log($lvl, ::std::module_path!(), ::std::format_args!($($arg)+))
+    };
+}
+
+/// Log at [`Level::Error`].
+#[macro_export]
+macro_rules! error {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Error, $($arg)+) };
+}
+
+/// Log at [`Level::Warn`].
+#[macro_export]
+macro_rules! warn {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Warn, $($arg)+) };
+}
+
+/// Log at [`Level::Info`].
+#[macro_export]
+macro_rules! info {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Info, $($arg)+) };
+}
+
+/// Log at [`Level::Debug`].
+#[macro_export]
+macro_rules! debug {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Debug, $($arg)+) };
+}
+
+/// Log at [`Level::Trace`].
+#[macro_export]
+macro_rules! trace {
+    ($($arg:tt)+) => { $crate::log!($crate::Level::Trace, $($arg)+) };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    static COUNT: AtomicU64 = AtomicU64::new(0);
+
+    struct Counter;
+    impl Log for Counter {
+        fn enabled(&self, m: &Metadata) -> bool {
+            m.level() <= Level::Info
+        }
+        fn log(&self, r: &Record) {
+            if self.enabled(r.metadata()) {
+                let _ = format!("{}", r.args());
+                COUNT.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+        fn flush(&self) {}
+    }
+
+    #[test]
+    fn levels_order() {
+        assert!(Level::Error < Level::Info);
+        assert!(Level::Info <= Level::Info);
+        assert_eq!(Level::Warn.as_str(), "WARN");
+    }
+
+    #[test]
+    fn filtered_dispatch() {
+        static C: Counter = Counter;
+        let _ = set_logger(&C);
+        set_max_level(LevelFilter::Info);
+        let before = COUNT.load(Ordering::Relaxed);
+        info!("hello {}", 1);
+        debug!("dropped by max level");
+        trace!("also dropped");
+        assert_eq!(COUNT.load(Ordering::Relaxed), before + 1);
+        assert_eq!(max_level(), LevelFilter::Info);
+    }
+}

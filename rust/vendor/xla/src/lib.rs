@@ -1,0 +1,201 @@
+//! API-compatible **stub** of the `xla-rs` PJRT bindings.
+//!
+//! The sandbox image carries no native XLA/PJRT shared library, so this
+//! crate provides the exact type/method surface `microscale::runtime`
+//! compiles against, with every operation that would need the native
+//! runtime returning a descriptive [`Error`] at *call time*. Everything
+//! that does not need PJRT (the quantizer, theory, distributions,
+//! hardware model — 14 of the paper's figures) runs without it; the
+//! runtime-bound figures fail gracefully with the message below.
+//!
+//! Substituting a real build of `xla-rs` (same method surface) under
+//! `vendor/xla` re-enables the PJRT paths with no source changes — see
+//! DESIGN.md §7.
+
+use std::fmt;
+
+/// Error raised by every stubbed PJRT operation.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn stub(what: &str) -> Error {
+        Error(format!(
+            "{what}: native XLA/PJRT runtime not available in this build \
+             (stub vendor/xla crate; see DESIGN.md §7)"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// `Result` alias matching xla-rs.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Element types transferable to/from device buffers and literals.
+pub trait NativeType: Copy + 'static {}
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+impl NativeType for u32 {}
+
+/// A parsed HLO module (stub: retains only the source path).
+#[derive(Debug, Clone)]
+pub struct HloModuleProto {
+    path: String,
+}
+
+impl HloModuleProto {
+    /// Parse an HLO text file. The stub fails if the file is unreadable
+    /// (matching the real binding's first error) and otherwise defers the
+    /// failure to compile time.
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        if !std::path::Path::new(path).exists() {
+            return Err(Error(format!("HLO text file not found: {path}")));
+        }
+        Ok(HloModuleProto { path: path.to_string() })
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+#[derive(Debug, Clone)]
+pub struct XlaComputation {
+    #[allow(dead_code)]
+    proto: HloModuleProto,
+}
+
+impl XlaComputation {
+    /// Wrap a parsed HLO module.
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { proto: proto.clone() }
+    }
+}
+
+/// PJRT client handle (stub: cannot be constructed).
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    /// Create the CPU client. Always fails in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::stub("PjRtClient::cpu"))
+    }
+
+    /// Compile a computation for this client.
+    pub fn compile(&self, _c: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::stub("PjRtClient::compile"))
+    }
+
+    /// Upload a host buffer to a device-resident buffer.
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Err(Error::stub("PjRtClient::buffer_from_host_buffer"))
+    }
+}
+
+/// Device-resident buffer (stub: cannot be constructed).
+#[derive(Debug)]
+pub struct PjRtBuffer(());
+
+impl PjRtBuffer {
+    /// Copy the buffer back to a host literal.
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::stub("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+/// Compiled executable (stub: cannot be constructed).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute on host literals (uploads, runs, returns output buffers).
+    pub fn execute<L: std::borrow::Borrow<Literal>>(
+        &self,
+        _args: &[L],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub("PjRtLoadedExecutable::execute"))
+    }
+
+    /// Execute on device-resident buffers.
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::stub("PjRtLoadedExecutable::execute_b"))
+    }
+}
+
+/// A host-side literal value (stub: holds f32 data only).
+#[derive(Debug, Clone, Default)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Build a rank-1 f32 literal.
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reshape to new dimensions (element count must match).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let n: i64 = dims.iter().product();
+        if n as usize != self.data.len() {
+            return Err(Error(format!(
+                "reshape: {} elements into {dims:?}",
+                self.data.len()
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// Copy out as a typed vector. Stub: device round-trips never
+    /// succeed, so there is nothing typed to copy.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::stub("Literal::to_vec"))
+    }
+
+    /// First element of the literal.
+    pub fn get_first_element<T: NativeType>(&self) -> Result<T> {
+        Err(Error::stub("Literal::get_first_element"))
+    }
+
+    /// Split a tuple literal into its parts.
+    pub fn decompose_tuple(&mut self) -> Result<Vec<Literal>> {
+        Err(Error::stub("Literal::decompose_tuple"))
+    }
+
+    /// Extract the single element of a 1-tuple.
+    pub fn to_tuple1(self) -> Result<Literal> {
+        Err(Error::stub("Literal::to_tuple1"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_is_stubbed() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(format!("{e}").contains("stub"));
+    }
+
+    #[test]
+    fn literal_vec1_reshape() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[2, 2]).is_ok());
+        assert!(l.reshape(&[3, 3]).is_err());
+    }
+}
