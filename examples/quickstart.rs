@@ -1,14 +1,17 @@
 //! Quickstart: quantize a tensor with every scale format of the paper,
-//! see the anomaly, store it on real packed bytes, and (when artifacts
-//! are present) run the L1 Pallas kernel artifact through PJRT.
+//! see the anomaly, store it on real packed bytes, multiply it natively
+//! in the packed code domain, and (when artifacts are present) run the
+//! L1 Pallas kernel artifact through PJRT.
 //!
 //! ```bash
-//! cargo run --release --example quickstart          # steps 1-3
+//! cargo run --release --example quickstart          # steps 1-4
 //! make artifacts && cargo run --release --example quickstart  # + PJRT
 //! ```
 
 use microscale::dist::Pcg64;
 use microscale::formats::{ElemFormat, SCALE_FORMATS};
+use microscale::quant::gemm::{GemmOperand, PackedGemm};
+use microscale::quant::matmul::matmul_t;
 use microscale::quant::{fake_quant, PackedMxTensor, QuantScheme};
 use microscale::report::Table;
 use microscale::runtime::{Manifest, Session};
@@ -74,7 +77,26 @@ fn main() -> anyhow::Result<()> {
         packed.compression_vs_bf16(),
     );
 
-    // 4) The same quantizer as an AOT Pallas kernel through PJRT
+    // 4) Multiply without ever dequantizing: the packed-native GEMM
+    //    engine consumes the integer codes directly (decode LUTs +
+    //    per-block scale fusion, mirroring the PE datapath) and is
+    //    bit-identical to dequantize-then-f32-GEMM.
+    let (m, kd, nd) = (48usize, 256, 32);
+    let a = rng.normal_vec_f32(m * kd, 5e-3);
+    let b = rng.normal_vec_f32(kd * nd, 5e-3);
+    let xo = GemmOperand::quantize(&s43, &a, m, kd)?;
+    let wo = GemmOperand::quantize_transposed(&s43, &b, kd, nd)?; // prepacked ᵀ
+    let y = PackedGemm::auto().matmul(&xo, &wo)?;
+    let want = matmul_t(&xo.decode(), &wo.decode(), m, kd, nd);
+    assert!(y.iter().zip(&want).all(|(u, v)| u.to_bits() == v.to_bits()));
+    println!(
+        "PackedGemm: {m}x{kd}x{nd} multiplied in the code domain \
+         ({} + {} packed bytes) == dequant + f32 GEMM, bit-for-bit ✓\n",
+        xo.payload_bytes(),
+        wo.payload_bytes(),
+    );
+
+    // 5) The same quantizer as an AOT Pallas kernel through PJRT
     //    (optional: needs `make artifacts` and a native PJRT build).
     let manifest = match Manifest::load(std::path::Path::new("artifacts")) {
         Ok(m) => m,

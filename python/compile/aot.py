@@ -268,6 +268,33 @@ def emit_golden(out_dir: str) -> None:
                     "y": y.astype(float).tolist(),
                 })
 
+    # UE5M3 scale-grid corner cases (subnormal scales, the s_min/2
+    # collapse tie, overflow clamp, amax = 0 blocks): the proposed format
+    # lives or dies on these edges, so the rust<->python contract pins
+    # them explicitly. rust/tests/golden.rs additionally runs the packed
+    # codec and the GEMM operand encoder over every tagged case.
+    for bsz in (8, 32):
+        for elem in ("fp4_e2m1", "fp8_e4m3"):
+            # boundary motifs are dyadic multiples of the format's C, so
+            # each element format gets its own calibrated vectors
+            emax = ref.ELEM_FORMATS[elem].max_val
+            edge = np.asarray(
+                ref.ue5m3_edge_blocks(bsz, emax), dtype=np.float32
+            )
+            for pt in (False, True):
+                cfgq = ref.default_qcfg(elem, "ue5m3", pt)
+                y = np.asarray(ref.fake_quant(jnp.array(edge), bsz, **cfgq))
+                cases.append({
+                    "kind": "fake_quant",
+                    "tag": "ue5m3_edge",
+                    "elem": elem,
+                    "scale": "ue5m3",
+                    "per_tensor": pt,
+                    "block_size": bsz,
+                    "x": edge.astype(float).tolist(),
+                    "y": y.astype(float).tolist(),
+                })
+
     with open(os.path.join(gdir, "quant_golden.json"), "w") as f:
         json.dump({"cases": cases}, f)
     print(f"  golden: {len(cases)} cases")

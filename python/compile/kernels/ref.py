@@ -233,6 +233,63 @@ def fake_quant(
     return (xq.reshape(shape) / s_t).astype(jnp.float32)
 
 
+def ue5m3_edge_blocks(block_size: int = 8, elem_max: float = 6.0) -> list:
+    """Crafted corner-case blocks for the UE5M3 scale grid (golden edges).
+
+    One motif per corner the paper's proposed format lives or dies on:
+    amax = 0 blocks, absmax at/below the s_min/2 collapse tie, subnormal
+    scales, the scale-overflow clamp with element saturation, and live
+    blocks containing values that quantize to signed zeros. Returned as
+    a flat list whose length is ``8 * block_size`` (eight blocks).
+
+    The boundary motifs are built as exact power-of-two multiples of
+    ``elem_max`` — the element format's ``C`` in ``s = Q(absmax / C)`` —
+    so ties and clamp points are hit bit-exactly *for that format*; pass
+    the matching ``elem_max`` (6.0 for FP4, 448.0 for FP8 E4M3). The
+    interior motifs deliberately use non-dyadic values (0.99, 0.55, …)
+    to exercise ordinary rounding alongside the boundaries.
+
+    `aot.py --golden-only` emits these under ``tag: "ue5m3_edge"`` and
+    `rust/tests/golden.rs` pins the Rust quantizer, the packed-tensor
+    codec, and the GEMM operand encoder to them.
+    """
+    C = float(elem_max)
+    smax = 122880.0  # UE5M3 max_val
+    motifs = [
+        # amax = 0: scale quantizes to 0, block stays zero
+        [0.0] * 8,
+        # absmax/C just below s_min/2: whole block collapses (App. F.3)
+        [C * 2.0 ** -18 * 0.99 * (1 if i % 2 == 0 else -1)
+         for i in range(8)],
+        # absmax/C exactly s_min/2: round-half-even tie -> 0
+        [C * 2.0 ** -18] * 8,
+        # absmax/C = 1.5 * s_min: subnormal scale, live block whose tiny
+        # members quantize to signed zeros
+        [C * 1.5 * 2.0 ** -17, -C * 1.5 * 2.0 ** -17,
+         1e-9, -1e-9, C * 1.5 * 2.0 ** -17, -1e-9, 1e-9, 0.0],
+        # mid subnormal-scale region (the paper's granite territory)
+        [C * 2.0 ** -15 * v
+         for v in (1.0, -0.6, 0.3, -0.05, 1.0, -0.6, 0.3, -0.05)],
+        # scale overflow: absmax/C far above max_val -> scale clamps to
+        # 122880 and the elements saturate at the element-format max
+        [C * smax * 4.0, -C * smax * 4.0,
+         C * smax * 2.8, -C * smax * 2.8,
+         C * smax * 4.0 * 1e-8, -C * smax * 4.0 * 1e-8,
+         0.0, 1e-3],
+        # absmax/C exactly at the scale max: boundary, no clamp
+        [C * smax, -C * smax, C * smax * 0.5,
+         -C * smax * 0.25, C * smax, 0.0, 1.0, -1.0],
+        # narrow-σ regime (granite-like), non-trivial mantissas
+        [2.0 ** -13 * v
+         for v in (0.9, -0.8, 0.55, -0.33, 0.21, -0.13, 0.08, -0.05)],
+    ]
+    reps = -(-block_size // 8)  # ceil
+    out: list = []
+    for m in motifs:
+        out.extend((m * reps)[:block_size])
+    return out
+
+
 def quantized_matmul(x, w, block_size: int, qcfg: dict):
     """matmul(FQ(x), FQ(w)) with microscaling blocks along the contraction dim.
 

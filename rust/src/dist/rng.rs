@@ -136,6 +136,41 @@ mod tests {
     }
 
     #[test]
+    fn normal_vec_f32_moment_bounds() {
+        // The fuzz/property suites draw their inputs from normal_vec_f32;
+        // pin its sampling quality so "bit-exact across random draws"
+        // statements rest on inputs that actually are N(0, σ²). For
+        // n = 2^17 samples the standard error of the mean is σ/√n ≈
+        // 0.0028σ and of the variance ≈ σ²√(2/n) ≈ 0.0039σ², so 5-sigma
+        // bounds are ~0.014σ and ~0.02σ² — loose enough to be
+        // deterministic-stable across seeds, tight enough to catch a
+        // broken Box–Muller or scaling bug.
+        for (seed, sigma) in [(13u64, 1.0f64), (14, 5e-3), (15, 40.0)] {
+            let n = 1usize << 17;
+            let mut rng = Pcg64::new(seed);
+            let x = rng.normal_vec_f32(n, sigma);
+            let mean = x.iter().map(|&v| v as f64).sum::<f64>() / n as f64;
+            let var = x
+                .iter()
+                .map(|&v| (v as f64 - mean).powi(2))
+                .sum::<f64>()
+                / n as f64;
+            assert!(
+                mean.abs() < 0.014 * sigma,
+                "seed {seed} σ {sigma}: mean {mean}"
+            );
+            let s2 = sigma * sigma;
+            assert!(
+                (var - s2).abs() < 0.02 * s2,
+                "seed {seed} σ {sigma}: var {var} want {s2}"
+            );
+            // roughly symmetric: sign balance within 1% + 5·SE
+            let pos = x.iter().filter(|&&v| v > 0.0).count() as f64 / n as f64;
+            assert!((pos - 0.5).abs() < 0.017, "seed {seed}: P(x>0) {pos}");
+        }
+    }
+
+    #[test]
     fn reference_stream_is_pinned() {
         // Guard against accidental algorithm changes: cached results and
         // golden comparisons depend on the exact stream.

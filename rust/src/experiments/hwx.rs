@@ -125,6 +125,54 @@ pub fn sec31_costs() -> String {
         ]);
     }
     out.push_str(&c.render());
+    out.push_str(&native_gemm_table(&mut rng));
+    out
+}
+
+/// The Sec. 3.1 byte accounting priced on a real compute path: GEMM
+/// operands for the native packed engine ([`crate::quant::gemm`]), with
+/// a live bit-exactness check of the engine against decoding the same
+/// operands and running the f32 reference.
+fn native_gemm_table(rng: &mut crate::dist::Pcg64) -> String {
+    use crate::quant::gemm::{GemmOperand, PackedGemm};
+    use crate::quant::matmul::matmul_t;
+
+    let (m, k, n) = (64usize, 64, 64);
+    let scheme = crate::quant::QuantScheme::new(
+        crate::formats::ElemFormat::FP4,
+        crate::formats::UE5M3,
+        32,
+    );
+    let x = rng.normal_vec_f32(m * k, 5e-3);
+    let w = rng.normal_vec_f32(k * n, 5e-3);
+    let mut t = Table::new(
+        "Native packed GEMM operands, FP4/UE5M3 bs32 (64x64x64 check)",
+        &["operand", "packed bytes", "f32 bytes", "ratio"],
+    );
+    let xo = GemmOperand::quantize(&scheme, &x, m, k).expect("packable");
+    let wo =
+        GemmOperand::quantize_transposed(&scheme, &w, k, n).expect("packable");
+    for (name, op, f32_bytes) in
+        [("activations m x k", &xo, 4 * m * k), ("weights (n x k)ᵀ", &wo, 4 * k * n)]
+    {
+        t.row(vec![
+            name.to_string(),
+            op.payload_bytes().to_string(),
+            f32_bytes.to_string(),
+            format!("{:.2}x", f32_bytes as f64 / op.payload_bytes() as f64),
+        ]);
+    }
+    let mut out = t.render();
+    let native = PackedGemm::serial().matmul(&xo, &wo).expect("engine runs");
+    let reference = matmul_t(&xo.decode(), &wo.decode(), m, k, n);
+    let exact = native
+        .iter()
+        .zip(&reference)
+        .all(|(a, b)| a.to_bits() == b.to_bits());
+    out.push_str(&format!(
+        "Engine vs dequantize+f32 reference on these operands: {}\n",
+        if exact { "bit-exact" } else { "MISMATCH (bug!)" }
+    ));
     out
 }
 
@@ -134,6 +182,9 @@ mod tests {
     fn renders_are_nonempty() {
         assert!(super::fig4a().contains("UE5M3"));
         assert!(super::appendix_k().contains("PE area"));
-        assert!(super::sec31_costs().contains("bytes/element"));
+        let costs = super::sec31_costs();
+        assert!(costs.contains("bytes/element"));
+        // the native-GEMM check must confirm bit-exactness inline
+        assert!(costs.contains("bit-exact"), "{costs}");
     }
 }

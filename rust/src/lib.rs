@@ -17,9 +17,11 @@
 //!   numeric format and the block microscaling quantizer (validated
 //!   against the python oracle via golden vectors), the
 //!   [`quant::kernel`] execution engine (scalar reference + tiled
-//!   multi-threaded chunked kernel behind one trait), and
+//!   multi-threaded chunked kernel behind one trait),
 //!   [`quant::packed`] — truly bit-packed MX tensor storage with one
-//!   scale byte per block;
+//!   scale byte per block — and [`quant::gemm`] — the packed-domain
+//!   GEMM engine multiplying element codes directly (decode LUTs +
+//!   per-block scale fusion), bit-identical to dequantize-then-multiply;
 //! * [`theory`] — the paper's analytical MSE framework (Sec. 4,
 //!   App. E–H) as fast closed-form/numerical integration;
 //! * [`dist`] / [`stats`] — synthetic distribution substrate and metrics;

@@ -1,0 +1,834 @@
+//! Native packed-domain microscaling GEMM: multiply two quantized
+//! operands directly on their integer element codes.
+//!
+//! The experiment path fake-quantizes to f32 and runs a plain f32 GEMM
+//! ([`super::matmul`]); real microscaling hardware never materializes
+//! those floats — it feeds element *codes* into the MAC array and fuses
+//! the two block scales into the partial sum once per block pair
+//! ([`crate::hw::pe`] models exactly that datapath). This module is the
+//! CPU realization of the same dataflow:
+//!
+//! * [`GemmOperand`] — a quantized matrix stored as one sign-magnitude
+//!   code byte per element plus one decoded f32 scale per block, with
+//!   blocks running along the contraction dimension *row-aligned* (each
+//!   row is blocked independently; a trailing partial block per row is
+//!   allowed, so odd shapes work). Weights are prepacked through
+//!   [`GemmOperand::quantize_transposed`], hoisting the per-call
+//!   transpose of the old path out of the GEMM.
+//! * [`PackedGemm`] — the engine: per block pair it fuses the scale
+//!   product `ss = s_x · s_w` once, then accumulates code products
+//!   through small decode LUTs (16-entry for FP4, 64-entry for FP6,
+//!   256-entry for FP8), cache-blocked over n-tiles and parallelized
+//!   across output row panels ([`crate::util::par`]).
+//!
+//! # Bit-exactness contract (FP elements)
+//!
+//! For minifloat elements the engine is **bit-identical** to decoding
+//! both operands and running the sequential reference
+//! [`super::matmul::matmul_t`]. This is not a coincidence but a theorem
+//! about significand widths: every factor pairing is exact in f32 —
+//! scale products carry ≤ 8+8 significant bits (bf16 scales are the
+//! worst case), code products ≤ 4+4, and the fused product
+//! `(s_x·s_w)·(e_x·e_w)` therefore carries ≤ 24 significant bits, the
+//! f32 significand exactly. Both groupings compute the same real number
+//! exactly, so every term matches the decoded product bit for bit; the
+//! engine then adds terms in the same `t = 0..k` order as `matmul_t`
+//! (tiling and row-panel threading never reorder a single output's
+//! accumulation), so whole outputs match bit for bit. The significand
+//! argument needs one more hypothesis — every intermediate must stay in
+//! the *normal* f32 exponent range — which bounded scale grids
+//! (UE4M3/UE5M3 and friends) always satisfy; for unbounded ones (bf16,
+//! e8m0) the engine checks the operands' actual scale ranges
+//! (`fusion_safe`) and falls back to decode + multiply on extreme
+//! tensors, keeping the contract unconditional. The
+//! `rust/tests/packed_gemm.rs` property suite enforces it across every
+//! element × scale × block-size × shape combination.
+//!
+//! # Integer elements
+//!
+//! INT4/INT8 elements take the faster hardware-shaped path: exact i32
+//! partial sums per block pair, then one fused `acc += ss · psum` per
+//! block — fewer rounding steps than the f32 reference, so it is *not*
+//! bit-comparable to `matmul_t` (it is closer to the exact value).
+//! It is still deterministic: byte-identical for any thread count and
+//! tile size, which the determinism tests pin down.
+//!
+//! # Per-tensor ("-S") schemes
+//!
+//! The eq. 11 division by `s_t` makes per-term fusion inexact, so
+//! per-tensor operands fall back to decode + [`super::matmul::matmul_t`]
+//! inside [`PackedGemm::matmul`] — same answer, none of the speed.
+
+use crate::formats::ElemFormat;
+use crate::util::par;
+
+use super::kernel::plan_threads;
+use super::matmul::matmul_t;
+use super::packed::{encode_block, LevelCodec, PackedMxTensor};
+use super::QuantScheme;
+
+/// A quantized matrix in GEMM-ready packed-domain layout (see module
+/// docs): `rows × cols`, blocks along `cols`, one code byte per element
+/// and one decoded f32 scale per block.
+pub struct GemmOperand {
+    scheme: QuantScheme,
+    rows: usize,
+    cols: usize,
+    /// ceil(cols / block_size): row-aligned blocks per row.
+    blocks_per_row: usize,
+    /// padded row stride in elements (`blocks_per_row * block_size`);
+    /// pad positions hold code 0 and are never accumulated.
+    stride: usize,
+    /// bits per sign-magnitude code in the wire format.
+    elem_bits: u32,
+    /// `rows * stride` sign-magnitude code bytes.
+    codes: Vec<u8>,
+    /// `rows * blocks_per_row` decoded block scales.
+    scales: Vec<f32>,
+    /// eq. 11 per-tensor factor (1.0 = off).
+    s_t: f32,
+    /// wire-format bytes per block scale (1 when the scale format fits a
+    /// code byte, 2 for bf16 scales).
+    scale_bytes: usize,
+    /// smallest nonzero block scale (`f32::INFINITY` when every block
+    /// collapsed) — input to the `fusion_safe` range check.
+    scale_min_nz: f32,
+    /// largest block scale.
+    scale_max: f32,
+    elem_codec: LevelCodec,
+}
+
+impl GemmOperand {
+    /// Quantize row-major `rows × cols` data under `scheme`, blocking
+    /// each row independently along `cols` (the contraction dimension).
+    ///
+    /// Unlike [`PackedMxTensor::encode`] this accepts any shape (a
+    /// trailing partial block per row is fine) and any scale format
+    /// including bf16 (scales are carried as decoded f32 either way).
+    pub fn quantize(
+        scheme: &QuantScheme,
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+    ) -> crate::Result<GemmOperand> {
+        anyhow::ensure!(scheme.block_size > 0, "block size must be positive");
+        anyhow::ensure!(
+            data.len() == rows * cols,
+            "data len {} != {rows}x{cols}",
+            data.len()
+        );
+        let elem_codec = LevelCodec::for_elem(&scheme.elem);
+        let elem_bits = elem_codec.mag_bits() + 1;
+        anyhow::ensure!(
+            elem_bits <= 8,
+            "element format {} needs {elem_bits} bits/code (max 8)",
+            scheme.elem.name()
+        );
+        let bs = scheme.block_size;
+        let blocks_per_row = cols.div_ceil(bs);
+        let stride = blocks_per_row * bs;
+        let scale_bytes = if LevelCodec::for_scale(&scheme.scale).is_some() {
+            1
+        } else {
+            2
+        };
+
+        // same pipeline as the fake-quant reference: eq. 11 pre-scale,
+        // per-block absmax -> scale cast -> element cast -> code
+        let s_t = if scheme.per_tensor {
+            let absmax = data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+            scheme.per_tensor_factor(absmax)
+        } else {
+            1.0
+        };
+
+        let mut codes = vec![0u8; rows * stride];
+        let mut scales = vec![0.0f32; rows * blocks_per_row];
+        let mut scale_min_nz = f32::INFINITY;
+        let mut scale_max = 0.0f32;
+        for r in 0..rows {
+            let row = &data[r * cols..(r + 1) * cols];
+            for b in 0..blocks_per_row {
+                let t0 = b * bs;
+                let tl = bs.min(cols - t0);
+                let crow = &mut codes[r * stride + t0..r * stride + t0 + tl];
+                // the shared per-block pipeline (packed.rs) — collapsed
+                // blocks leave their zero codes in place (App. F.3)
+                let s = encode_block(
+                    scheme,
+                    &elem_codec,
+                    s_t,
+                    &row[t0..t0 + tl],
+                    crow,
+                )?;
+                scales[r * blocks_per_row + b] = s;
+                if s > 0.0 && s < scale_min_nz {
+                    scale_min_nz = s;
+                }
+                if s > scale_max {
+                    scale_max = s;
+                }
+            }
+        }
+
+        Ok(GemmOperand {
+            scheme: *scheme,
+            rows,
+            cols,
+            blocks_per_row,
+            stride,
+            elem_bits,
+            codes,
+            scales,
+            s_t,
+            scale_bytes,
+            scale_min_nz,
+            scale_max,
+            elem_codec,
+        })
+    }
+
+    /// Quantize a row-major `k × n` weight matrix as the **transposed**
+    /// `n × k` operand (blocks along `k`, one block row per output
+    /// column) — the prepacked form [`PackedGemm::matmul`] consumes.
+    /// Pack once, multiply many times.
+    pub fn quantize_transposed(
+        scheme: &QuantScheme,
+        w: &[f32],
+        k: usize,
+        n: usize,
+    ) -> crate::Result<GemmOperand> {
+        anyhow::ensure!(
+            w.len() == k * n,
+            "weight len {} != {k}x{n}",
+            w.len()
+        );
+        GemmOperand::quantize(scheme, &super::matmul::transpose(w, k, n), n, k)
+    }
+
+    /// Reinterpret an already-packed flat tensor as a `rows × cols` GEMM
+    /// operand. Requires `cols` to be a multiple of the block size so
+    /// the flat blocking coincides with row-aligned blocking.
+    pub fn from_packed(
+        p: &PackedMxTensor,
+        rows: usize,
+        cols: usize,
+    ) -> crate::Result<GemmOperand> {
+        anyhow::ensure!(
+            p.len() == rows * cols,
+            "packed len {} != {rows}x{cols}",
+            p.len()
+        );
+        let scheme = *p.scheme();
+        anyhow::ensure!(
+            cols % scheme.block_size == 0,
+            "cols {cols} not divisible by block size {} (flat blocks would \
+             span rows)",
+            scheme.block_size
+        );
+        let scales = p.block_scales_f32();
+        let mut scale_min_nz = f32::INFINITY;
+        let mut scale_max = 0.0f32;
+        for &s in &scales {
+            if s > 0.0 && s < scale_min_nz {
+                scale_min_nz = s;
+            }
+            if s > scale_max {
+                scale_max = s;
+            }
+        }
+        Ok(GemmOperand {
+            scheme,
+            rows,
+            cols,
+            blocks_per_row: cols / scheme.block_size,
+            stride: cols,
+            elem_bits: p.elem_bits(),
+            codes: p.unpack_codes(),
+            scales,
+            s_t: p.per_tensor_factor(),
+            scale_bytes: 1,
+            scale_min_nz,
+            scale_max,
+            elem_codec: LevelCodec::for_elem(&scheme.elem),
+        })
+    }
+
+    /// Dequantize to row-major `rows × cols` f32 — the reference-path
+    /// view of this operand (bit-identical to what the fake-quant
+    /// pipeline would have produced under the same blocking).
+    pub fn decode(&self) -> Vec<f32> {
+        let mut out = vec![0.0f32; self.rows * self.cols];
+        let bs = self.scheme.block_size;
+        let sign_shift = self.elem_bits - 1;
+        let mag_mask = (1u32 << sign_shift) - 1;
+        for r in 0..self.rows {
+            for b in 0..self.blocks_per_row {
+                let t0 = b * bs;
+                let tl = bs.min(self.cols - t0);
+                let s = self.scales[r * self.blocks_per_row + b];
+                for t in t0..t0 + tl {
+                    let c = self.codes[r * self.stride + t] as u32;
+                    let y = if s > 0.0 {
+                        let mut y = s * self.elem_codec.decode(c & mag_mask);
+                        if c >> sign_shift != 0 {
+                            y = -y;
+                        }
+                        if self.s_t != 1.0 {
+                            y /= self.s_t;
+                        }
+                        y
+                    } else {
+                        0.0
+                    };
+                    out[r * self.cols + t] = y;
+                }
+            }
+        }
+        out
+    }
+
+    /// Logical rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Logical columns (the contraction dimension).
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+
+    /// The quantization scheme this operand was packed under.
+    pub fn scheme(&self) -> &QuantScheme {
+        &self.scheme
+    }
+
+    /// The eq. 11 per-tensor factor (1.0 when off).
+    pub fn per_tensor_factor(&self) -> f32 {
+        self.s_t
+    }
+
+    /// Wire-format payload bytes: the bit-packed element field (codes at
+    /// `elem_bits` each, rounded up to whole bytes) plus the per-block
+    /// scales. The in-RAM working set is larger (one byte per code) —
+    /// this prices what moves over a memory bus, matching
+    /// [`crate::hw::memory::packed_payload_bytes`] for 1-byte scales.
+    pub fn payload_bytes(&self) -> usize {
+        (self.rows * self.cols * self.elem_bits as usize).div_ceil(8)
+            + self.rows * self.blocks_per_row * self.scale_bytes
+    }
+
+    /// Measured wire-format storage cost in bits per element.
+    pub fn bits_per_element(&self) -> f64 {
+        if self.rows * self.cols == 0 {
+            return 0.0;
+        }
+        self.payload_bytes() as f64 * 8.0 / (self.rows * self.cols) as f64
+    }
+}
+
+/// Decode tables for one element format, built once per GEMM call.
+enum Engine {
+    /// ≤4-bit codes: fused 16×16 signed code-product LUT (1 KiB).
+    ProdLut4(Box<[f32; 256]>),
+    /// 5–6-bit codes: fused 64×64 signed code-product LUT (16 KiB).
+    ProdLut6(Box<[f32; 4096]>),
+    /// 8-bit FP codes: two 256-entry signed decode LUTs (a fused product
+    /// table would be 256 KiB — cache-hostile).
+    TwoLut(Box<[f32; 256]>),
+    /// Integer elements: signed i32 code values, exact block psums.
+    IntPsum(Box<[i32; 256]>),
+}
+
+impl Engine {
+    fn build(op: &GemmOperand) -> Engine {
+        let sl = op.elem_codec.signed_lut();
+        match op.scheme.elem {
+            ElemFormat::Fp(_) if op.elem_bits <= 4 => {
+                let mut plut = Box::new([0.0f32; 256]);
+                for (a, &va) in sl.iter().enumerate() {
+                    for (b, &vb) in sl.iter().enumerate() {
+                        plut[(a << 4) | b] = va * vb;
+                    }
+                }
+                Engine::ProdLut4(plut)
+            }
+            ElemFormat::Fp(_) if op.elem_bits <= 6 => {
+                let mut plut = Box::new([0.0f32; 4096]);
+                for (a, &va) in sl.iter().enumerate() {
+                    for (b, &vb) in sl.iter().enumerate() {
+                        plut[(a << 6) | b] = va * vb;
+                    }
+                }
+                Engine::ProdLut6(plut)
+            }
+            ElemFormat::Fp(_) => {
+                let mut lut = Box::new([0.0f32; 256]);
+                lut[..sl.len()].copy_from_slice(&sl);
+                Engine::TwoLut(lut)
+            }
+            ElemFormat::Int(_) => {
+                let half = 1usize << (op.elem_bits - 1);
+                let mut ilut = Box::new([0i32; 256]);
+                for (code, slot) in ilut.iter_mut().enumerate().take(sl.len()) {
+                    let mag = (code & (half - 1)) as i32;
+                    *slot = if code >= half { -mag } else { mag };
+                }
+                Engine::IntPsum(ilut)
+            }
+        }
+    }
+}
+
+/// The packed-domain GEMM engine (see module docs). Configuration knobs
+/// change only *speed*, never bytes of the result.
+#[derive(Debug, Clone, Copy)]
+pub struct PackedGemm {
+    /// Output columns per cache tile: one tile of weight code rows
+    /// (`tile_n × k` bytes) is streamed per activation row, so size it
+    /// to keep the tile L2-resident.
+    pub tile_n: usize,
+    /// Worker-thread cap; output rows are split across workers.
+    pub threads: usize,
+    /// Minimum `m·k·n` product before threads are used.
+    pub par_threshold: usize,
+}
+
+impl PackedGemm {
+    /// Production configuration: 64-column tiles, one worker per logical
+    /// CPU, threading from 2 Mi multiply-accumulates up.
+    pub fn auto() -> PackedGemm {
+        PackedGemm {
+            tile_n: 64,
+            threads: par::max_threads(),
+            par_threshold: 1 << 21,
+        }
+    }
+
+    /// Single-threaded variant (benches isolate tiling from threading).
+    pub fn serial() -> PackedGemm {
+        PackedGemm { threads: 1, ..PackedGemm::auto() }
+    }
+
+    /// Multiply `x` (`m × k`) by the prepacked transposed weights `w`
+    /// (`n × k`), returning the row-major `m × n` product.
+    ///
+    /// Both operands must share the same scheme and contraction length.
+    /// FP-element results are bit-identical to
+    /// `matmul_t(x.decode(), w.decode())`; see the module docs for the
+    /// INT and per-tensor variants.
+    pub fn matmul(
+        &self,
+        x: &GemmOperand,
+        w: &GemmOperand,
+    ) -> crate::Result<Vec<f32>> {
+        anyhow::ensure!(
+            x.scheme == w.scheme,
+            "operand schemes differ: {} vs {}",
+            x.scheme.id(),
+            w.scheme.id()
+        );
+        anyhow::ensure!(
+            x.cols == w.cols,
+            "contraction mismatch: x is {}x{}, w is {}x{}",
+            x.rows,
+            x.cols,
+            w.rows,
+            w.cols
+        );
+        let (m, n, k) = (x.rows, w.rows, x.cols);
+        if m * n == 0 {
+            return Ok(vec![0.0f32; m * n]);
+        }
+        let fp_elems = matches!(x.scheme.elem, ElemFormat::Fp(_));
+        if x.s_t != 1.0 || w.s_t != 1.0 || (fp_elems && !fusion_safe(x, w)) {
+            // eq. 11 division breaks per-term fusion exactness, and
+            // out-of-normal-range scale products break the regrouping
+            // argument (see fusion_safe) — decode instead, which is the
+            // reference by definition
+            return Ok(matmul_t(&x.decode(), &w.decode(), m, k, n));
+        }
+        let engine = Engine::build(x);
+        let tile_n = self.tile_n.max(1);
+        let threads = plan_threads(
+            m.saturating_mul(n).saturating_mul(k.max(1)),
+            self.threads,
+            self.par_threshold,
+        );
+        let mut out = vec![0.0f32; m * n];
+        par::par_chunks_mut(&mut out, n, threads, |off, chunk| {
+            let row0 = off / n;
+            match &engine {
+                Engine::ProdLut4(plut) => {
+                    prod_panel::<4, 256>(x, w, plut, row0, chunk, tile_n)
+                }
+                Engine::ProdLut6(plut) => {
+                    prod_panel::<6, 4096>(x, w, plut, row0, chunk, tile_n)
+                }
+                Engine::TwoLut(lut) => {
+                    twolut_panel(x, w, lut, row0, chunk, tile_n)
+                }
+                Engine::IntPsum(ilut) => {
+                    int_panel(x, w, ilut, row0, chunk, tile_n)
+                }
+            }
+        });
+        Ok(out)
+    }
+}
+
+impl Default for PackedGemm {
+    fn default() -> Self {
+        PackedGemm::auto()
+    }
+}
+
+/// One-shot convenience: quantize both operands under `scheme` and run
+/// the packed-native GEMM (`x`: row-major `m × k`, `w`: row-major
+/// `k × n`, blocks along `k` on both sides).
+pub fn packed_matmul(
+    scheme: &QuantScheme,
+    x: &[f32],
+    w: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+) -> crate::Result<Vec<f32>> {
+    let xo = GemmOperand::quantize(scheme, x, m, k)?;
+    let wo = GemmOperand::quantize_transposed(scheme, w, k, n)?;
+    PackedGemm::auto().matmul(&xo, &wo)
+}
+
+/// Whether the fused-product regrouping is bit-exact for this operand
+/// pair: the module-docs significand argument additionally needs every
+/// intermediate — the decoded values `s·lvl`, the scale product
+/// `s_x·s_w`, and the full term — to stay in the *normal* f32 range (or
+/// be exactly zero). Significand widths say nothing about exponents:
+/// on unbounded scale grids (bf16, e8m0) an extreme tensor can push
+/// `s_x·s_w` to `inf` or a term into the subnormal range, where the two
+/// groupings round differently. The bounds are evaluated in f64 from
+/// the operands' actual scale ranges; UE4M3/UE5M3-class scale formats
+/// (max 122880, min subnormal 2⁻¹⁷) can never fail them.
+fn fusion_safe(x: &GemmOperand, w: &GemmOperand) -> bool {
+    let lc = &x.elem_codec;
+    if lc.level_count() < 2 {
+        return true; // no nonzero magnitudes: every product is a signed zero
+    }
+    let lvl_min = lc.decode(1) as f64;
+    let lvl_max = lc.decode(lc.level_count() as u32 - 1) as f64;
+    let min_pos = f32::MIN_POSITIVE as f64;
+    let max = f32::MAX as f64;
+    // per-operand: decoded values s·lvl are exact (normal or zero); an
+    // all-collapsed operand has scale_min_nz = +inf and scale_max = 0,
+    // which passes vacuously
+    let op_ok = |smin_nz: f64, smax: f64| {
+        smax * lvl_max <= max && smin_nz * lvl_min >= min_pos
+    };
+    let ss_min = x.scale_min_nz as f64 * w.scale_min_nz as f64;
+    let ss_max = x.scale_max as f64 * w.scale_max as f64;
+    op_ok(x.scale_min_nz as f64, x.scale_max as f64)
+        && op_ok(w.scale_min_nz as f64, w.scale_max as f64)
+        // the fused scale product itself stays normal…
+        && ss_max <= max
+        && ss_min >= min_pos
+        // …and so does every nonzero term (s_x·s_w)·(e_x·e_w)
+        && ss_max * (lvl_max * lvl_max) <= max
+        && ss_min * (lvl_min * lvl_min) >= min_pos
+}
+
+/// FP inner kernels over a fused code-product LUT (`EB`-bit codes,
+/// `N = 1 << (2·EB)` entries). Each output's terms are accumulated in
+/// ascending `t` with one rounded add per term — the exact op sequence
+/// of [`matmul_t`] on the decoded operands (module docs).
+fn prod_panel<const EB: usize, const N: usize>(
+    x: &GemmOperand,
+    w: &GemmOperand,
+    plut: &[f32; N],
+    row0: usize,
+    out: &mut [f32],
+    tile_n: usize,
+) {
+    let mask = (1usize << EB) - 1;
+    let n = w.rows;
+    let bpr = x.blocks_per_row;
+    let bs = x.scheme.block_size;
+    let stride = x.stride;
+    let nrows = out.len() / n;
+    for jt0 in (0..n).step_by(tile_n) {
+        let jt1 = (jt0 + tile_n).min(n);
+        for i in 0..nrows {
+            let r = row0 + i;
+            let cx = &x.codes[r * stride..(r + 1) * stride];
+            let sx = &x.scales[r * bpr..(r + 1) * bpr];
+            let orow = &mut out[i * n..(i + 1) * n];
+            let mut j = jt0;
+            // 4-wide register blocking: four independent accumulator
+            // chains hide the f32 add latency the naive loop serializes on
+            while j + 4 <= jt1 {
+                let cw0 = &w.codes[j * stride..(j + 1) * stride];
+                let cw1 = &w.codes[(j + 1) * stride..(j + 2) * stride];
+                let cw2 = &w.codes[(j + 2) * stride..(j + 3) * stride];
+                let cw3 = &w.codes[(j + 3) * stride..(j + 4) * stride];
+                let sw0 = &w.scales[j * bpr..(j + 1) * bpr];
+                let sw1 = &w.scales[(j + 1) * bpr..(j + 2) * bpr];
+                let sw2 = &w.scales[(j + 2) * bpr..(j + 3) * bpr];
+                let sw3 = &w.scales[(j + 3) * bpr..(j + 4) * bpr];
+                let mut acc = [0.0f32; 4];
+                for b in 0..bpr {
+                    let sxb = sx[b];
+                    let ss =
+                        [sxb * sw0[b], sxb * sw1[b], sxb * sw2[b], sxb * sw3[b]];
+                    let t0 = b * bs;
+                    let tl = bs.min(x.cols - t0);
+                    for t in t0..t0 + tl {
+                        let ix = ((cx[t] as usize) & mask) << EB;
+                        acc[0] += ss[0] * plut[ix | ((cw0[t] as usize) & mask)];
+                        acc[1] += ss[1] * plut[ix | ((cw1[t] as usize) & mask)];
+                        acc[2] += ss[2] * plut[ix | ((cw2[t] as usize) & mask)];
+                        acc[3] += ss[3] * plut[ix | ((cw3[t] as usize) & mask)];
+                    }
+                }
+                orow[j] = acc[0];
+                orow[j + 1] = acc[1];
+                orow[j + 2] = acc[2];
+                orow[j + 3] = acc[3];
+                j += 4;
+            }
+            while j < jt1 {
+                let cw = &w.codes[j * stride..(j + 1) * stride];
+                let sw = &w.scales[j * bpr..(j + 1) * bpr];
+                let mut acc = 0.0f32;
+                for b in 0..bpr {
+                    let ss = sx[b] * sw[b];
+                    let t0 = b * bs;
+                    let tl = bs.min(x.cols - t0);
+                    for t in t0..t0 + tl {
+                        let ix = ((cx[t] as usize) & mask) << EB;
+                        acc += ss * plut[ix | ((cw[t] as usize) & mask)];
+                    }
+                }
+                orow[j] = acc;
+                j += 1;
+            }
+        }
+    }
+}
+
+/// FP8 inner kernel: two 256-entry decode LUT loads per term instead of
+/// one 256 KiB product table. `ss·(lx·lw)` is exact at ≤ 24 significand
+/// bits, so the bit-exactness argument is unchanged.
+fn twolut_panel(
+    x: &GemmOperand,
+    w: &GemmOperand,
+    lut: &[f32; 256],
+    row0: usize,
+    out: &mut [f32],
+    tile_n: usize,
+) {
+    let n = w.rows;
+    let bpr = x.blocks_per_row;
+    let bs = x.scheme.block_size;
+    let stride = x.stride;
+    let nrows = out.len() / n;
+    for jt0 in (0..n).step_by(tile_n) {
+        let jt1 = (jt0 + tile_n).min(n);
+        for i in 0..nrows {
+            let r = row0 + i;
+            let cx = &x.codes[r * stride..(r + 1) * stride];
+            let sx = &x.scales[r * bpr..(r + 1) * bpr];
+            let orow = &mut out[i * n..(i + 1) * n];
+            let mut j = jt0;
+            while j + 2 <= jt1 {
+                let cw0 = &w.codes[j * stride..(j + 1) * stride];
+                let cw1 = &w.codes[(j + 1) * stride..(j + 2) * stride];
+                let sw0 = &w.scales[j * bpr..(j + 1) * bpr];
+                let sw1 = &w.scales[(j + 1) * bpr..(j + 2) * bpr];
+                let mut acc = [0.0f32; 2];
+                for b in 0..bpr {
+                    let sxb = sx[b];
+                    let ss = [sxb * sw0[b], sxb * sw1[b]];
+                    let t0 = b * bs;
+                    let tl = bs.min(x.cols - t0);
+                    for t in t0..t0 + tl {
+                        let lx = lut[cx[t] as usize];
+                        acc[0] += ss[0] * (lx * lut[cw0[t] as usize]);
+                        acc[1] += ss[1] * (lx * lut[cw1[t] as usize]);
+                    }
+                }
+                orow[j] = acc[0];
+                orow[j + 1] = acc[1];
+                j += 2;
+            }
+            while j < jt1 {
+                let cw = &w.codes[j * stride..(j + 1) * stride];
+                let sw = &w.scales[j * bpr..(j + 1) * bpr];
+                let mut acc = 0.0f32;
+                for b in 0..bpr {
+                    let ss = sx[b] * sw[b];
+                    let t0 = b * bs;
+                    let tl = bs.min(x.cols - t0);
+                    for t in t0..t0 + tl {
+                        acc += ss * (lut[cx[t] as usize] * lut[cw[t] as usize]);
+                    }
+                }
+                orow[j] = acc;
+                j += 1;
+            }
+        }
+    }
+}
+
+/// Integer inner kernel: exact i32 partial sums per block pair, one
+/// fused `acc += ss · psum` per block — the PE datapath of
+/// [`crate::hw::pe`] verbatim. Pad codes decode to integer 0, so the
+/// loop runs whole (padded) blocks with a constant trip count.
+fn int_panel(
+    x: &GemmOperand,
+    w: &GemmOperand,
+    ilut: &[i32; 256],
+    row0: usize,
+    out: &mut [f32],
+    tile_n: usize,
+) {
+    let n = w.rows;
+    let bpr = x.blocks_per_row;
+    let bs = x.scheme.block_size;
+    let stride = x.stride;
+    let nrows = out.len() / n;
+    for jt0 in (0..n).step_by(tile_n) {
+        let jt1 = (jt0 + tile_n).min(n);
+        for i in 0..nrows {
+            let r = row0 + i;
+            let cx = &x.codes[r * stride..(r + 1) * stride];
+            let sx = &x.scales[r * bpr..(r + 1) * bpr];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in jt0..jt1 {
+                let cw = &w.codes[j * stride..(j + 1) * stride];
+                let sw = &w.scales[j * bpr..(j + 1) * bpr];
+                let mut acc = 0.0f32;
+                for b in 0..bpr {
+                    let t0 = b * bs;
+                    let mut psum = 0i32;
+                    for t in t0..t0 + bs {
+                        psum += ilut[cx[t] as usize] * ilut[cw[t] as usize];
+                    }
+                    acc += (sx[b] * sw[b]) * psum as f32;
+                }
+                orow[j] = acc;
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Pcg64;
+    use crate::formats::{ElemFormat, BF16_SCALE, UE4M3, UE5M3};
+
+    #[test]
+    fn operand_decode_matches_fake_quant_when_aligned() {
+        // with cols % bs == 0, row-aligned blocking coincides with the
+        // flat fake-quant blocking, so decode == fake_quant bit for bit
+        let mut rng = Pcg64::new(21);
+        let (rows, cols) = (7, 48);
+        let x = rng.normal_vec_f32(rows * cols, 4e-3);
+        for scale in [UE4M3, UE5M3, BF16_SCALE] {
+            let scheme = QuantScheme::new(ElemFormat::FP4, scale, 16);
+            let op = GemmOperand::quantize(&scheme, &x, rows, cols).unwrap();
+            let want = crate::quant::fake_quant(&scheme, &x);
+            let got = op.decode();
+            assert_eq!(got.len(), want.len());
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{} elem {i}", scheme.id());
+            }
+        }
+    }
+
+    #[test]
+    fn operand_handles_partial_trailing_blocks() {
+        let mut rng = Pcg64::new(22);
+        let (rows, cols) = (3, 13); // 13 = 8 + 5: one partial block/row
+        let x = rng.normal_vec_f32(rows * cols, 0.02);
+        let scheme = QuantScheme::new(ElemFormat::FP4, UE4M3, 8);
+        let op = GemmOperand::quantize(&scheme, &x, rows, cols).unwrap();
+        let y = op.decode();
+        assert_eq!(y.len(), rows * cols);
+        // each row's trailing 5 elements quantize under their own scale:
+        // re-quantize row-by-row with explicit padding-free blocks
+        for r in 0..rows {
+            let row = &x[r * cols..(r + 1) * cols];
+            let mut head = row[..8].to_vec();
+            crate::quant::fake_quant_into(&scheme, &mut head);
+            let tail_scale = {
+                let absmax =
+                    row[8..].iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+                scheme.scale.cast(absmax / scheme.elem.max_val())
+            };
+            for (t, &v) in head.iter().enumerate() {
+                assert_eq!(y[r * cols + t].to_bits(), v.to_bits(), "row {r} t {t}");
+            }
+            for (t, &v) in row[8..].iter().enumerate() {
+                let want = if tail_scale > 0.0 {
+                    tail_scale * scheme.elem.cast(v / tail_scale)
+                } else {
+                    0.0
+                };
+                assert_eq!(
+                    y[r * cols + 8 + t].to_bits(),
+                    want.to_bits(),
+                    "row {r} tail {t}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn from_packed_equals_direct_quantize() {
+        let mut rng = Pcg64::new(23);
+        let (rows, cols) = (5, 32);
+        let x = rng.normal_vec_f32(rows * cols, 0.01);
+        let scheme = QuantScheme::new(ElemFormat::FP4, UE4M3, 8);
+        let p = PackedMxTensor::encode(&scheme, &x).unwrap();
+        let a = GemmOperand::from_packed(&p, rows, cols).unwrap();
+        let b = GemmOperand::quantize(&scheme, &x, rows, cols).unwrap();
+        assert_eq!(a.codes, b.codes);
+        let bits = |s: &[f32]| s.iter().map(|v| v.to_bits()).collect::<Vec<_>>();
+        assert_eq!(bits(&a.scales), bits(&b.scales));
+        assert_eq!(a.payload_bytes(), b.payload_bytes());
+        assert_eq!(a.payload_bytes(), p.payload_bytes());
+    }
+
+    #[test]
+    fn packed_gemm_bit_exact_vs_decode_reference() {
+        // the in-crate smoke version of the tests/packed_gemm.rs suite
+        let mut rng = Pcg64::new(24);
+        let (m, k, n) = (4, 24, 5);
+        let x = rng.normal_vec_f32(m * k, 0.02);
+        let w = rng.normal_vec_f32(k * n, 0.02);
+        for elem in [ElemFormat::FP4, ElemFormat::FP8] {
+            let scheme = QuantScheme::new(elem, UE5M3, 8);
+            let xo = GemmOperand::quantize(&scheme, &x, m, k).unwrap();
+            let wo = GemmOperand::quantize_transposed(&scheme, &w, k, n).unwrap();
+            let want = matmul_t(&xo.decode(), &wo.decode(), m, k, n);
+            let got = PackedGemm::serial().matmul(&xo, &wo).unwrap();
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "{} out {i}", scheme.id());
+            }
+        }
+    }
+
+    #[test]
+    fn payload_accounting_counts_wire_bytes() {
+        let mut rng = Pcg64::new(25);
+        let (rows, cols) = (4, 33); // 5 blocks of 8 per row (one partial)
+        let x = rng.normal_vec_f32(rows * cols, 0.02);
+        let scheme = QuantScheme::new(ElemFormat::FP4, UE4M3, 8);
+        let op = GemmOperand::quantize(&scheme, &x, rows, cols).unwrap();
+        assert_eq!(op.payload_bytes(), (4 * 33 * 4).div_ceil(8) + 4 * 5);
+        // bf16 scales cost two bytes per block on the wire
+        let scheme = QuantScheme::new(ElemFormat::FP4, BF16_SCALE, 8);
+        let op = GemmOperand::quantize(&scheme, &x, rows, cols).unwrap();
+        assert_eq!(op.payload_bytes(), (4 * 33 * 4).div_ceil(8) + 4 * 5 * 2);
+    }
+}

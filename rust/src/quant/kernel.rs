@@ -103,6 +103,21 @@ impl Default for ChunkedKernel {
     }
 }
 
+/// Effective worker count for a bulk data-parallel operation of `work`
+/// units: honors the caller's thread cap, stays serial below the spawn
+/// break-even threshold, and stays serial on coordinator-pool worker
+/// threads (the sweep is already running one job per core; nesting
+/// another fan-out would oversubscribe to ncpus² threads). Shared by
+/// [`ChunkedKernel`] and the packed GEMM engine
+/// ([`crate::quant::gemm::PackedGemm`]).
+pub(crate) fn plan_threads(work: usize, threads: usize, par_threshold: usize) -> usize {
+    if work >= par_threshold && !par::on_worker_thread() {
+        threads.max(1)
+    } else {
+        1
+    }
+}
+
 impl QuantKernel for ChunkedKernel {
     fn name(&self) -> &'static str {
         "chunked"
@@ -117,16 +132,7 @@ impl QuantKernel for ChunkedKernel {
             bs
         );
         let n_blocks = x.len() / bs;
-        // Stay serial on coordinator-pool worker threads: the sweep is
-        // already running one job per core, and nesting another fan-out
-        // here would oversubscribe to ncpus² threads.
-        let threads = if x.len() >= self.par_threshold
-            && !par::on_worker_thread()
-        {
-            self.threads.max(1)
-        } else {
-            1
-        };
+        let threads = plan_threads(x.len(), self.threads, self.par_threshold);
 
         // eq. 11 per-tensor pre-scaling (same op order as the reference)
         let s_t = if scheme.per_tensor {

@@ -4,15 +4,68 @@
 //! provides the same microscaling-GEMM semantics natively in Rust for
 //! (a) unit/property tests against the runtime path, (b) the quant_service
 //! example, and (c) the L3 perf benches.
+//!
+//! Two execution paths compute those semantics:
+//!
+//! * **Reference** ([`quantized_matmul_with`]): fake-quantize both
+//!   operands to f32, transpose the weights, run the sequential
+//!   [`matmul_t`] triple loop. Golden-pinned, slow.
+//! * **Packed-native** ([`super::gemm`]): quantize straight to packed
+//!   element codes and multiply in the code domain. Bit-identical to the
+//!   reference whenever the blockings coincide (`k` a multiple of the
+//!   block size), several times faster.
+//!
+//! [`quantized_matmul`] picks via [`gemm_path_for`]: packed-native for
+//! minifloat elements on aligned shapes, reference otherwise;
+//! `MICROSCALE_KERNEL`-style env pinning is available through
+//! `MICROSCALE_GEMM=reference|packed` when bisecting a discrepancy.
 
+use crate::formats::ElemFormat;
+
+use super::gemm::{GemmOperand, PackedGemm};
 use super::{default_kernel, QuantKernel, QuantScheme};
+
+/// Which engine a `quantized_matmul` call runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GemmPath {
+    /// Fake-quantize + sequential f32 triple loop (golden-pinned).
+    Reference,
+    /// Code-domain engine ([`super::gemm::PackedGemm`]), bit-identical
+    /// on its eligible shapes.
+    PackedNative,
+}
+
+/// Decide the execution path for a `(scheme, k)` GEMM: the packed-native
+/// engine whenever it is bit-equivalent to the reference — minifloat
+/// elements, no eq. 11 per-tensor pre-scaling (the engine would only
+/// fall back to decode + multiply, all cost and no win), and `k` a
+/// multiple of the block size so flat and row-aligned blockings agree.
+/// `MICROSCALE_GEMM=reference` / `=packed` forces one side (debug aid;
+/// forcing `packed` on unaligned `k` changes which elements share a
+/// block, i.e. the quantization itself).
+pub fn gemm_path_for(scheme: &QuantScheme, k: usize) -> GemmPath {
+    match std::env::var("MICROSCALE_GEMM").as_deref() {
+        Ok("reference") => return GemmPath::Reference,
+        Ok("packed") => return GemmPath::PackedNative,
+        _ => {}
+    }
+    let aligned = scheme.block_size > 0 && k % scheme.block_size == 0;
+    let fp_elems = matches!(scheme.elem, ElemFormat::Fp(_));
+    if aligned && !scheme.per_tensor && fp_elems {
+        GemmPath::PackedNative
+    } else {
+        GemmPath::Reference
+    }
+}
 
 /// Row-major (m×k) · (k×n) with both operands microscaling-fake-quantized
 /// along the contraction dimension (weights per output column, i.e. on the
 /// transposed view), mirroring `ref.quantized_matmul`.
 ///
-/// Quantization runs on [`default_kernel`]; use
-/// [`quantized_matmul_with`] to pin a specific kernel (benches do).
+/// Dispatches per [`gemm_path_for`] — the result is bit-identical either
+/// way; use [`quantized_matmul_with`] to pin the reference kernel path
+/// explicitly (benches do) or [`super::gemm::packed_matmul`] to demand
+/// the packed engine.
 pub fn quantized_matmul(
     scheme: &QuantScheme,
     x: &[f32],
@@ -21,10 +74,22 @@ pub fn quantized_matmul(
     k: usize,
     n: usize,
 ) -> Vec<f32> {
+    if gemm_path_for(scheme, k) == GemmPath::PackedNative {
+        let packed = GemmOperand::quantize(scheme, x, m, k).and_then(|xo| {
+            let wo = GemmOperand::quantize_transposed(scheme, w, k, n)?;
+            PackedGemm::auto().matmul(&xo, &wo)
+        });
+        if let Ok(out) = packed {
+            return out;
+        }
+        // unpackable scheme (shouldn't happen for registry formats):
+        // fall through to the reference path
+    }
     quantized_matmul_with(default_kernel(), scheme, x, w, m, k, n)
 }
 
-/// [`quantized_matmul`] with an explicit [`QuantKernel`].
+/// [`quantized_matmul`] pinned to the fake-quant **reference** path with
+/// an explicit [`QuantKernel`].
 pub fn quantized_matmul_with(
     kernel: &dyn QuantKernel,
     scheme: &QuantScheme,
@@ -38,14 +103,21 @@ pub fn quantized_matmul_with(
     assert_eq!(w.len(), k * n);
     let xq = kernel.fake_quant(scheme, x); // rows contiguous: blocks along k
     // transpose w to (n, k) so its blocks run along k as well
+    let wtq = kernel.fake_quant(scheme, &transpose(w, k, n));
+    matmul_t(&xq, &wtq, m, k, n)
+}
+
+/// Row-major transpose of a `k × n` matrix into `n × k` — the operand
+/// layout both GEMM paths block along the contraction dimension.
+pub fn transpose(w: &[f32], k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(w.len(), k * n);
     let mut wt = vec![0.0f32; n * k];
     for i in 0..k {
         for j in 0..n {
             wt[j * k + i] = w[i * n + j];
         }
     }
-    let wtq = kernel.fake_quant(scheme, &wt);
-    matmul_t(&xq, &wtq, m, k, n)
+    wt
 }
 
 /// Plain f32 GEMM with the second operand transposed: (m×k) · (n×k)ᵀ.
@@ -116,16 +188,60 @@ mod tests {
         let (m, k, n) = (5, 7, 3);
         let x = rng.normal_vec_f32(m * k, 1.0);
         let w = rng.normal_vec_f32(k * n, 1.0);
-        let mut wt = vec![0.0f32; n * k];
-        for i in 0..k {
-            for j in 0..n {
-                wt[j * k + i] = w[i * n + j];
-            }
-        }
         let a = matmul(&x, &w, m, k, n);
-        let b = matmul_t(&x, &wt, m, k, n);
+        let b = matmul_t(&x, &transpose(&w, k, n), m, k, n);
         for (u, v) in a.iter().zip(&b) {
             assert!((u - v).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn dispatch_rules() {
+        let fp4 = QuantScheme::new(ElemFormat::FP4, UE4M3, 8);
+        assert_eq!(gemm_path_for(&fp4, 64), GemmPath::PackedNative);
+        // unaligned k: flat blocking spans rows, only the reference does that
+        assert_eq!(gemm_path_for(&fp4, 63), GemmPath::Reference);
+        // integer elements: psum path is not bit-comparable -> reference
+        let int4 = QuantScheme::new(ElemFormat::INT4, UE4M3, 8);
+        assert_eq!(gemm_path_for(&int4, 64), GemmPath::Reference);
+        // per-tensor: eq. 11 spans the whole tensor -> reference
+        assert_eq!(
+            gemm_path_for(&fp4.with_per_tensor(true), 64),
+            GemmPath::Reference
+        );
+    }
+
+    #[test]
+    fn packed_dispatch_is_bit_identical_to_reference() {
+        let mut rng = Pcg64::new(11);
+        let (m, k, n) = (6, 48, 10);
+        let x = rng.normal_vec_f32(m * k, 5e-3);
+        let w = rng.normal_vec_f32(k * n, 5e-3);
+        for scheme in [
+            QuantScheme::new(ElemFormat::FP4, UE4M3, 8),
+            QuantScheme::new(ElemFormat::FP4, BF16_SCALE, 16),
+            QuantScheme::new(ElemFormat::FP8, crate::formats::UE5M3, 12),
+        ] {
+            assert_eq!(gemm_path_for(&scheme, k), GemmPath::PackedNative);
+            let a = quantized_matmul(&scheme, &x, &w, m, k, n);
+            let b = quantized_matmul_with(
+                &crate::quant::ScalarKernel,
+                &scheme,
+                &x,
+                &w,
+                m,
+                k,
+                n,
+            );
+            assert_eq!(a.len(), b.len());
+            for (i, (u, v)) in a.iter().zip(&b).enumerate() {
+                assert_eq!(
+                    u.to_bits(),
+                    v.to_bits(),
+                    "{} out {i}: {u} vs {v}",
+                    scheme.id()
+                );
+            }
         }
     }
 

@@ -8,13 +8,19 @@
 //! implementation the bulk callers use; [`packed`] stores quantized
 //! tensors on real bit-packed bytes; [`error`] computes the per-block /
 //! per-tensor MSE statistics behind Figs. 2, 3, 6, 7, 9; [`matmul`]
-//! provides the quantized-GEMM semantics used by CPU-side checks.
+//! provides the quantized-GEMM semantics used by CPU-side checks;
+//! [`gemm`] multiplies packed operands natively in the code domain
+//! (decode LUTs + per-block-pair scale fusion), bit-identical to the
+//! decode-then-multiply reference but without ever materializing the
+//! dequantized tensors.
 
 pub mod error;
+pub mod gemm;
 pub mod kernel;
 pub mod matmul;
 pub mod packed;
 
+pub use gemm::{packed_matmul, GemmOperand, PackedGemm};
 pub use kernel::{default_kernel, ChunkedKernel, QuantKernel, ScalarKernel};
 pub use packed::PackedMxTensor;
 

@@ -99,6 +99,72 @@ impl LevelCodec {
     pub fn decode(&self, idx: u32) -> f32 {
         self.levels[idx as usize]
     }
+
+    /// Signed decode LUT over the full sign-magnitude code space
+    /// (`1 << (mag_bits + 1)` entries, the GEMM engine's "decode LUT":
+    /// 16 entries for FP4, 64 for FP6, 256 for FP8). Entry
+    /// `sign << mag_bits | mag` holds `±levels[mag]`; the negative-zero
+    /// code decodes to `-0.0` (preserving the quantizer's signed zeros),
+    /// and magnitude indices past the level table — which
+    /// [`LevelCodec::encode_mag`] never produces — decode to `0.0` so the
+    /// table is total.
+    pub fn signed_lut(&self) -> Vec<f32> {
+        let half = 1usize << self.mag_bits;
+        let mut lut = vec![0.0f32; 2 * half];
+        for code in 0..2 * half {
+            let mag = code & (half - 1);
+            let v = self.levels.get(mag).copied().unwrap_or(0.0);
+            lut[code] = if code >= half { -v } else { v };
+        }
+        lut
+    }
+}
+
+/// Quantize one block of raw values to sign-magnitude element codes —
+/// the single implementation of the per-block encode pipeline
+/// (absmax → scale cast → element cast → code), shared by
+/// [`PackedMxTensor::encode`] and the GEMM operand encoder
+/// ([`crate::quant::gemm::GemmOperand::quantize`]) so the two packed
+/// encoders cannot drift apart. The scalar reference
+/// [`super::fake_quant_block`] stays a separate implementation on
+/// purpose: it is the golden-pinned oracle both encoders are
+/// property-tested against.
+///
+/// Returns the cast block scale. `codes` must be at least
+/// `block.len()` long; it is written for every element when the scale
+/// is nonzero and left untouched for a collapsed block (callers keep
+/// zero-initialized buffers, and code 0 is the canonical `+0.0`).
+pub(crate) fn encode_block(
+    scheme: &QuantScheme,
+    elem_codec: &LevelCodec,
+    s_t: f32,
+    block: &[f32],
+    codes: &mut [u8],
+) -> crate::Result<f32> {
+    let sign_shift = elem_codec.mag_bits();
+    let mut absmax = 0.0f32;
+    for &v in block {
+        let a = (v * s_t).abs();
+        if a > absmax {
+            absmax = a;
+        }
+    }
+    let s = scheme.scale.cast(absmax / scheme.elem.max_val());
+    if s > 0.0 {
+        for (cd, &v) in codes.iter_mut().zip(block) {
+            let q = scheme.elem.cast((v * s_t) / s);
+            let sign = (q.is_sign_negative() as u32) << sign_shift;
+            let mag = elem_codec.encode_mag(q.abs()).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "quantized value {q} is not on the {} grid \
+                     (degenerate per-tensor overflow?)",
+                    scheme.elem.name()
+                )
+            })?;
+            *cd = (sign | mag) as u8;
+        }
+    }
+    Ok(s)
 }
 
 /// LSB-first bit packer for fixed-width codes.
@@ -221,38 +287,16 @@ impl PackedMxTensor {
         let n_blocks = x.len() / bs;
         let mut scale_codes = Vec::with_capacity(n_blocks);
         let mut w = BitWriter::with_capacity(x.len() * elem_bits as usize);
-        let sign_shift = elem_bits - 1;
+        let mut blk_codes = vec![0u8; bs];
         for block in x.chunks(bs) {
-            let mut absmax = 0.0f32;
-            for &v in block {
-                let a = (v * s_t).abs();
-                if a > absmax {
-                    absmax = a;
-                }
-            }
-            let s = scheme.scale.cast(absmax / scheme.elem.max_val());
+            blk_codes.fill(0); // collapsed blocks stay all-zero (App. F.3)
+            let s = encode_block(scheme, &elem_codec, s_t, block, &mut blk_codes)?;
             let s_code = scale_codec.encode_mag(s).ok_or_else(|| {
                 anyhow::anyhow!("scale {s} is not on the {} grid", scheme.scale.name)
             })?;
             scale_codes.push(s_code as u8);
-            if s > 0.0 {
-                for &v in block {
-                    let q = scheme.elem.cast((v * s_t) / s);
-                    let sign = (q.is_sign_negative() as u32) << sign_shift;
-                    let mag = elem_codec.encode_mag(q.abs()).ok_or_else(|| {
-                        anyhow::anyhow!(
-                            "quantized value {q} is not on the {} grid \
-                             (degenerate per-tensor overflow?)",
-                            scheme.elem.name()
-                        )
-                    })?;
-                    w.push(sign | mag, elem_bits);
-                }
-            } else {
-                // App. F.3: whole block collapses to +0.0
-                for _ in block {
-                    w.push(0, elem_bits);
-                }
+            for &c in blk_codes.iter().take(block.len()) {
+                w.push(c as u32, elem_bits);
             }
         }
 
@@ -332,6 +376,28 @@ impl PackedMxTensor {
     /// The decoded scale of block `b`.
     pub fn block_scale(&self, b: usize) -> f32 {
         self.scale_codec.decode(self.scale_codes[b] as u32)
+    }
+
+    /// All block scales, decoded to f32 (one per block, in order).
+    pub fn block_scales_f32(&self) -> Vec<f32> {
+        self.scale_codes
+            .iter()
+            .map(|&c| self.scale_codec.decode(c as u32))
+            .collect()
+    }
+
+    /// The eq. 11 per-tensor factor this tensor was packed under
+    /// (`1.0` when per-tensor scaling is off).
+    pub fn per_tensor_factor(&self) -> f32 {
+        self.s_t
+    }
+
+    /// Unpack the bit-packed element field into one sign-magnitude code
+    /// byte per element (the layout the GEMM engine computes on; see
+    /// [`crate::quant::gemm::GemmOperand::from_packed`]).
+    pub fn unpack_codes(&self) -> Vec<u8> {
+        let mut r = BitReader::new(&self.elem_data);
+        (0..self.len).map(|_| r.read(self.elem_bits) as u8).collect()
     }
 
     /// Payload bytes actually stored: packed element field + one scale

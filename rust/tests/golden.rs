@@ -7,7 +7,8 @@
 //! implementations being interchangeable.
 
 use microscale::formats::{scale_format, ElemFormat, MiniFloat};
-use microscale::quant::{fake_quant, QuantScheme};
+use microscale::quant::gemm::GemmOperand;
+use microscale::quant::{fake_quant, PackedMxTensor, QuantScheme};
 use microscale::util::json::Json;
 
 /// Golden vectors are produced by `make artifacts` (python build step)
@@ -93,4 +94,69 @@ fn golden_fake_quant_bit_exact() {
         checked += 1;
     }
     assert!(checked > 100, "only {checked} fake-quant cases");
+}
+
+/// The `ue5m3_edge` vectors (subnormal scales, the s_min/2 collapse tie,
+/// overflow clamp, amax = 0 blocks — see `ref.ue5m3_edge_blocks`) must be
+/// reproduced bit-for-bit by every Rust encoding of the quantizer: the
+/// scalar reference, the bit-packed tensor codec, and the GEMM operand
+/// encoder the packed-native engine multiplies on.
+#[test]
+fn golden_ue5m3_edge_cases_pin_every_encoder() {
+    let Some(g) = load() else { return };
+    let mut checked = 0usize;
+    for case in g.get("cases").unwrap().as_arr().unwrap() {
+        let tagged = case
+            .opt("tag")
+            .and_then(|t| t.as_str().ok())
+            .is_some_and(|t| t == "ue5m3_edge");
+        if !tagged {
+            continue;
+        }
+        let elem =
+            ElemFormat::from_name(case.get("elem").unwrap().as_str().unwrap())
+                .unwrap();
+        let scale =
+            scale_format(case.get("scale").unwrap().as_str().unwrap()).unwrap();
+        let bs = case.get("block_size").unwrap().as_usize().unwrap();
+        let pt = case.get("per_tensor").unwrap().as_bool().unwrap();
+        let scheme = QuantScheme::new(elem, scale, bs).with_per_tensor(pt);
+        let xs = case.get("x").unwrap().as_f32_vec().unwrap();
+        let ys = case.get("y").unwrap().as_f32_vec().unwrap();
+
+        let check = |name: &str, got: &[f32]| {
+            assert_eq!(got.len(), ys.len(), "{name} {}", scheme.id());
+            for (i, (a, b)) in got.iter().zip(&ys).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{name} {} elem {i}: got {a}, want {b} (x={})",
+                    scheme.id(),
+                    xs[i]
+                );
+            }
+        };
+        check("fake_quant", &fake_quant(&scheme, &xs));
+        let packed = PackedMxTensor::encode(&scheme, &xs)
+            .expect("edge vectors must stay packable");
+        check("packed roundtrip", &packed.decode());
+        let op = GemmOperand::quantize(&scheme, &xs, 1, xs.len())
+            .expect("edge vectors must stay GEMM-packable");
+        check("gemm operand", &op.decode());
+        checked += 1;
+    }
+    if checked == 0 {
+        // artifacts predate the edge vectors: skip like every other
+        // artifact-dependent test (CI always regenerates, so the
+        // presence of all 8 cases is still enforced there)
+        eprintln!(
+            "skipping ue5m3_edge golden checks: artifacts predate these \
+             vectors (regenerate with `make artifacts` / aot.py --golden-only)"
+        );
+        return;
+    }
+    assert!(
+        checked >= 8,
+        "only {checked} ue5m3_edge cases — partially regenerated artifacts?"
+    );
 }

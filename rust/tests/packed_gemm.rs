@@ -1,0 +1,299 @@
+//! Packed-native GEMM acceptance suite (ISSUE 2).
+//!
+//! 1. **Bit-exactness**: the code-domain engine equals decode +
+//!    [`matmul_t`] bit for bit across every element × scale ×
+//!    block-size × shape combination of the acceptance matrix, plus a
+//!    randomized property sweep on seeded [`Pcg64`] inputs.
+//! 2. **Determinism**: thread count and tile size never change a byte,
+//!    for the tiled GEMM and for [`ChunkedKernel`] alike.
+//! 3. **Dispatch**: `quantized_matmul`'s packed path is bit-identical
+//!    to the golden-pinned fake-quant reference on aligned shapes.
+//! 4. **Integer psum path**: deterministic, near-exact (i32 block
+//!    psums), and bit-stable across engine configurations.
+
+use microscale::dist::Pcg64;
+use microscale::formats::{
+    ElemFormat, MiniFloat, BF16_SCALE, E8M0, FP6_E2M3, FP6_E3M2, UE4M3, UE5M3,
+};
+use microscale::quant::gemm::{packed_matmul, GemmOperand, PackedGemm};
+use microscale::quant::matmul::{matmul_t, quantized_matmul_with};
+use microscale::quant::{QuantKernel, QuantScheme, ScalarKernel};
+
+/// The ISSUE acceptance matrix.
+const ELEMS: [ElemFormat; 4] = [
+    ElemFormat::FP4,
+    ElemFormat::Fp(FP6_E2M3),
+    ElemFormat::Fp(FP6_E3M2),
+    ElemFormat::FP8,
+];
+const SCALES: [MiniFloat; 3] = [UE4M3, UE5M3, BF16_SCALE];
+const BLOCK_SIZES: [usize; 4] = [4, 8, 16, 32];
+/// Odd / non-multiple shapes on purpose: trailing partial blocks per
+/// row, quad-kernel remainders in every dimension.
+const SHAPES: [(usize, usize, usize); 5] =
+    [(1, 1, 1), (3, 5, 2), (8, 40, 7), (5, 33, 9), (16, 64, 13)];
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{what} out {i}: packed {a} vs reference {b}"
+        );
+    }
+}
+
+#[test]
+fn packed_gemm_bit_exact_across_acceptance_matrix() {
+    let mut rng = Pcg64::new(0x6E44);
+    for elem in ELEMS {
+        for scale in SCALES {
+            for bs in BLOCK_SIZES {
+                let scheme = QuantScheme::new(elem, scale, bs);
+                for &(m, k, n) in &SHAPES {
+                    // σ sweeps the regimes the paper cares about: wide,
+                    // granite-narrow (subnormal scales), collapsing
+                    for sigma in [1.0, 5e-3, 2e-5] {
+                        let x = rng.normal_vec_f32(m * k, sigma);
+                        let w = rng.normal_vec_f32(k * n, sigma);
+                        let xo =
+                            GemmOperand::quantize(&scheme, &x, m, k).unwrap();
+                        let wo =
+                            GemmOperand::quantize_transposed(&scheme, &w, k, n)
+                                .unwrap();
+                        let want =
+                            matmul_t(&xo.decode(), &wo.decode(), m, k, n);
+                        let got =
+                            PackedGemm::serial().matmul(&xo, &wo).unwrap();
+                        assert_bits_eq(
+                            &got,
+                            &want,
+                            &format!("{} {m}x{k}x{n} σ={sigma}", scheme.id()),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn packed_gemm_bit_exact_property() {
+    // randomized shapes/configs beyond the fixed matrix, threaded engine
+    microscale::util::check::property("packed gemm == decode+matmul_t", 40, |g| {
+        let scheme = QuantScheme::new(
+            *g.pick(&ELEMS),
+            *g.pick(&SCALES),
+            *g.pick(&BLOCK_SIZES),
+        );
+        let (m, k, n) = (g.usize_in(1, 12), g.usize_in(1, 70), g.usize_in(1, 12));
+        let sigma = g.log_uniform(1e-5, 2.0);
+        let x = g.normal_vec_f32(m * k, sigma);
+        let w = g.normal_vec_f32(k * n, sigma);
+        let xo = GemmOperand::quantize(&scheme, &x, m, k).unwrap();
+        let wo = GemmOperand::quantize_transposed(&scheme, &w, k, n).unwrap();
+        let want = matmul_t(&xo.decode(), &wo.decode(), m, k, n);
+        let engine = PackedGemm {
+            tile_n: g.usize_in(1, 9),
+            threads: g.usize_in(1, 4),
+            par_threshold: 0,
+        };
+        let got = engine.matmul(&xo, &wo).unwrap();
+        assert_bits_eq(&got, &want, &scheme.id());
+    });
+}
+
+#[test]
+fn gemm_determinism_across_threads_and_tiles() {
+    // byte-identical output for every (thread count, tile size) pairing
+    let mut rng = Pcg64::new(0xDE7);
+    let (m, k, n) = (33, 96, 29);
+    let x = rng.normal_vec_f32(m * k, 5e-3);
+    let w = rng.normal_vec_f32(k * n, 5e-3);
+    for scheme in [
+        QuantScheme::new(ElemFormat::FP4, UE5M3, 8),
+        QuantScheme::new(ElemFormat::FP8, UE4M3, 16),
+        QuantScheme::new(ElemFormat::INT4, UE4M3, 8),
+    ] {
+        let xo = GemmOperand::quantize(&scheme, &x, m, k).unwrap();
+        let wo = GemmOperand::quantize_transposed(&scheme, &w, k, n).unwrap();
+        let baseline = PackedGemm { tile_n: 64, threads: 1, par_threshold: 0 }
+            .matmul(&xo, &wo)
+            .unwrap();
+        for tile_n in [1, 3, 8, 256] {
+            for threads in [1, 2, 4, 8] {
+                let engine = PackedGemm { tile_n, threads, par_threshold: 0 };
+                let got = engine.matmul(&xo, &wo).unwrap();
+                assert_bits_eq(
+                    &got,
+                    &baseline,
+                    &format!("{} tile {tile_n} threads {threads}", scheme.id()),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn chunked_kernel_determinism_across_threads_and_tiles() {
+    use microscale::quant::ChunkedKernel;
+    let mut rng = Pcg64::new(0xC4A);
+    let scheme = QuantScheme::new(ElemFormat::FP4, UE5M3, 16).with_per_tensor(true);
+    let x = rng.normal_vec_f32(16 * 700, 4e-3);
+    let mut baseline = x.clone();
+    let base_scales = ChunkedKernel { tile: 16 * 1024, threads: 1, par_threshold: 0 }
+        .fake_quant_into(&scheme, &mut baseline);
+    for tile in [16, 64, 1024] {
+        for threads in [1, 2, 4, 8] {
+            let kernel = ChunkedKernel { tile, threads, par_threshold: 0 };
+            let mut y = x.clone();
+            let scales = kernel.fake_quant_into(&scheme, &mut y);
+            assert_bits_eq(
+                &y,
+                &baseline,
+                &format!("chunked tile {tile} threads {threads}"),
+            );
+            assert_bits_eq(&scales, &base_scales, "chunked scales");
+        }
+    }
+}
+
+#[test]
+fn packed_dispatch_matches_fake_quant_reference() {
+    // end-to-end: quantize straight to codes, multiply natively ==
+    // fake-quantize to f32, transpose, naive GEMM — bit for bit
+    let mut rng = Pcg64::new(0xD15);
+    let (m, k, n) = (9, 64, 11);
+    let x = rng.normal_vec_f32(m * k, 5e-3);
+    let w = rng.normal_vec_f32(k * n, 1e-2);
+    for elem in ELEMS {
+        for scale in SCALES {
+            let scheme = QuantScheme::new(elem, scale, 16);
+            let got = packed_matmul(&scheme, &x, &w, m, k, n).unwrap();
+            let want =
+                quantized_matmul_with(&ScalarKernel, &scheme, &x, &w, m, k, n);
+            assert_bits_eq(&got, &want, &scheme.id());
+        }
+    }
+}
+
+#[test]
+fn per_tensor_operands_fall_back_bit_exact() {
+    let mut rng = Pcg64::new(0x5CA);
+    let (m, k, n) = (4, 32, 6);
+    let x = rng.normal_vec_f32(m * k, 1e-3);
+    let w = rng.normal_vec_f32(k * n, 1e-3);
+    let scheme =
+        QuantScheme::new(ElemFormat::FP4, UE4M3, 8).with_per_tensor(true);
+    let xo = GemmOperand::quantize(&scheme, &x, m, k).unwrap();
+    let wo = GemmOperand::quantize_transposed(&scheme, &w, k, n).unwrap();
+    assert!(xo.per_tensor_factor() != 1.0);
+    let got = PackedGemm::auto().matmul(&xo, &wo).unwrap();
+    let want = matmul_t(&xo.decode(), &wo.decode(), m, k, n);
+    assert_bits_eq(&got, &want, "per-tensor fallback");
+}
+
+#[test]
+fn int_psum_path_is_block_fused_and_accurate() {
+    let mut rng = Pcg64::new(0x177);
+    let (m, k, n) = (7, 40, 5);
+    let x = rng.normal_vec_f32(m * k, 0.5);
+    let w = rng.normal_vec_f32(k * n, 0.5);
+    let cases = [(ElemFormat::INT4, 8usize), (ElemFormat::Int(127.0), 16)];
+    for (elem, bs) in cases {
+        let scheme = QuantScheme::new(elem, UE4M3, bs);
+        let xo = GemmOperand::quantize(&scheme, &x, m, k).unwrap();
+        let wo = GemmOperand::quantize_transposed(&scheme, &w, k, n).unwrap();
+        let got = PackedGemm::serial().matmul(&xo, &wo).unwrap();
+
+        let dx = xo.decode();
+        let dw = wo.decode();
+        let bpr = k.div_ceil(bs);
+
+        // (a) near-exact vs f64 on the decoded operands: the i32 block
+        // psums are exact, so the only roundings are one f32 product and
+        // one f32 add per block
+
+        for i in 0..m {
+            for j in 0..n {
+                let mut exact = 0.0f64;
+                let mut mag = 0.0f64;
+                for t in 0..k {
+                    let p = dx[i * k + t] as f64 * dw[j * k + t] as f64;
+                    exact += p;
+                    mag += p.abs();
+                }
+                let gotv = got[i * n + j] as f64;
+                // 2 roundings per block at f32 eps, vs the magnitude sum
+                // (the exact value may cancel toward zero)
+                let tol = 1e-6 * (2 * bpr) as f64 * mag.max(1e-30);
+                assert!(
+                    (gotv - exact).abs() <= tol,
+                    "{} out ({i},{j}): {gotv} vs exact {exact} (mag {mag})",
+                    scheme.id()
+                );
+            }
+        }
+
+        // (b) byte-stable across engine configurations
+        for tile_n in [1, 4, 64] {
+            for threads in [1, 2, 5] {
+                let engine = PackedGemm { tile_n, threads, par_threshold: 0 };
+                let again = engine.matmul(&xo, &wo).unwrap();
+                assert_bits_eq(&again, &got, "int determinism");
+            }
+        }
+    }
+}
+
+#[test]
+fn extreme_magnitudes_stay_bit_exact_on_unbounded_scale_grids() {
+    // On bf16/e8m0 scale grids an extreme tensor can push the fused
+    // scale product out of the normal f32 range, where the significand
+    // exactness argument no longer applies; the engine must detect the
+    // regime (fusion_safe) and still match decode + matmul_t bit for
+    // bit. Covers overflow (1e20: s_x·s_w -> inf territory) and
+    // underflow (1e-25: subnormal terms).
+    let mut rng = Pcg64::new(0xFFF);
+    let (m, k, n) = (3, 16, 4);
+    for scale in [E8M0, BF16_SCALE] {
+        for mag in [1e20f32, 1e-25] {
+            let x: Vec<f32> = rng
+                .normal_vec_f32(m * k, 1.0)
+                .iter()
+                .map(|v| v * mag)
+                .collect();
+            let w: Vec<f32> = rng
+                .normal_vec_f32(k * n, 1.0)
+                .iter()
+                .map(|v| v * mag)
+                .collect();
+            let scheme = QuantScheme::new(ElemFormat::FP4, scale, 8);
+            let xo = GemmOperand::quantize(&scheme, &x, m, k).unwrap();
+            let wo =
+                GemmOperand::quantize_transposed(&scheme, &w, k, n).unwrap();
+            let want = matmul_t(&xo.decode(), &wo.decode(), m, k, n);
+            let got = PackedGemm::auto().matmul(&xo, &wo).unwrap();
+            assert_bits_eq(
+                &got,
+                &want,
+                &format!("{} mag {mag:e}", scheme.id()),
+            );
+        }
+    }
+}
+
+#[test]
+fn operand_shape_validation() {
+    let scheme = QuantScheme::new(ElemFormat::FP4, UE4M3, 8);
+    assert!(GemmOperand::quantize(&scheme, &[0.0; 10], 2, 4).is_err());
+    let xo = GemmOperand::quantize(&scheme, &[0.0; 8], 2, 4).unwrap();
+    let wo = GemmOperand::quantize(&scheme, &[0.0; 15], 3, 5).unwrap();
+    // contraction mismatch (4 vs 5) must error, not panic
+    assert!(PackedGemm::serial().matmul(&xo, &wo).is_err());
+    // scheme mismatch
+    let other = QuantScheme::new(ElemFormat::FP4, UE5M3, 8);
+    let wo2 = GemmOperand::quantize(&other, &[0.0; 8], 2, 4).unwrap();
+    assert!(PackedGemm::serial().matmul(&xo, &wo2).is_err());
+}
