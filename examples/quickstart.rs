@@ -1,10 +1,11 @@
 //! Quickstart: quantize a tensor with every scale format of the paper,
 //! see the anomaly, store it on real packed bytes, multiply it natively
-//! in the packed code domain, and (when artifacts are present) run the
-//! L1 Pallas kernel artifact through PJRT.
+//! in the packed code domain, serve a whole transformer on prepacked
+//! weights, and (when artifacts are present) run the L1 Pallas kernel
+//! artifact through PJRT.
 //!
 //! ```bash
-//! cargo run --release --example quickstart          # steps 1-4
+//! cargo run --release --example quickstart          # steps 1-5
 //! make artifacts && cargo run --release --example quickstart  # + PJRT
 //! ```
 
@@ -96,7 +97,52 @@ fn main() -> anyhow::Result<()> {
         wo.payload_bytes(),
     );
 
-    // 5) The same quantizer as an AOT Pallas kernel through PJRT
+    // 5) Serve a whole model on those packed codes: prepack a surrogate
+    //    transformer's weights once (no XLA artifacts needed), then run
+    //    micro-batched inference through the multi-worker engine.
+    let dims = microscale::runtime::artifacts::ModelDims {
+        vocab: 64,
+        d_model: 64,
+        n_heads: 2,
+        n_layers: 2,
+        d_ff: 128,
+        seq_len: 16,
+    };
+    let params = microscale::model::Params::init_surrogate(&dims, 2026);
+    let qcfg = microscale::runtime::qconfig::PerLayerQConfig::uniform(
+        microscale::runtime::QConfig::fp4("ue5m3")?,
+    );
+    let model = std::sync::Arc::new(microscale::serve::PackedModel::build(
+        &dims,
+        &params,
+        &qcfg,
+        16,
+        microscale::serve::operand_cache(),
+    )?);
+    let engine = microscale::serve::ServeEngine::start(
+        model,
+        microscale::serve::EngineConfig::default(),
+    )?;
+    let mut handles = Vec::new();
+    for _ in 0..8 {
+        let toks: Vec<i32> = (0..dims.seq_len)
+            .map(|_| (rng.next_u64() % dims.vocab as u64) as i32)
+            .collect();
+        handles.push(engine.submit(toks)?);
+    }
+    for h in handles {
+        let logits = h.wait()?;
+        assert_eq!(logits.len(), dims.seq_len * dims.vocab);
+    }
+    let stats = engine.shutdown();
+    println!(
+        "ServeEngine: {} requests served ({} batches, mean batch {:.1}), \
+         p50 {:.2} ms, p99 {:.2} ms ✓\n",
+        stats.requests, stats.batches, stats.mean_batch, stats.p50_ms,
+        stats.p99_ms,
+    );
+
+    // 6) The same quantizer as an AOT Pallas kernel through PJRT
     //    (optional: needs `make artifacts` and a native PJRT build).
     let manifest = match Manifest::load(std::path::Path::new("artifacts")) {
         Ok(m) => m,

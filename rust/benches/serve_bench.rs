@@ -1,0 +1,17 @@
+//! Serving-path benchmark: thin wrapper over the same driver that backs
+//! `microscale serve-bench` (`microscale::serve::bench`), so `cargo
+//! bench --bench serve_bench` and the CLI produce identical
+//! `BENCH_serve.json` reports (field map in EXPERIMENTS.md §Perf).
+//!
+//! Pass `-- --smoke` (or set `MICROSCALE_BENCH_SMOKE=1`) for the
+//! CI-sized run on a shrunken model.
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("MICROSCALE_BENCH_SMOKE").is_ok();
+    let opts = microscale::serve::bench::BenchOpts::new(smoke);
+    if let Err(e) = microscale::serve::bench::run(&opts) {
+        eprintln!("serve bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -135,7 +135,7 @@ impl Pool {
                         s.spawn(|| {
                             // inner data-parallel kernels stay serial on
                             // pool workers (see util::par docs)
-                            crate::util::par::mark_worker_thread();
+                            let _guard = crate::util::par::WorkerGuard::enter();
                             while let Some((idx, job)) = chan.recv() {
                                 let t = Instant::now();
                                 let key = job.key;

@@ -29,6 +29,11 @@
 //!   model zoo, downstream probes;
 //! * [`runtime`] — PJRT CPU client executing the AOT-lowered HLO
 //!   artifacts (python runs only at build time);
+//! * [`serve`] — native packed-domain inference serving: the surrogate
+//!   transformer on prepacked weights ([`serve::PackedModel`]), a
+//!   micro-batching admission queue, a multi-worker engine with latency
+//!   histograms, and the process-wide prepacked weight-operand cache —
+//!   the model runs end to end without XLA artifacts;
 //! * [`coordinator`] — experiment job expansion, caching, worker pool and
 //!   result sinks driving every figure/table of the paper;
 //! * [`experiments`] — one generator per paper figure/table;
@@ -47,6 +52,7 @@ pub mod model;
 pub mod quant;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod stats;
 pub mod theory;
 pub mod util;

@@ -10,6 +10,7 @@
 //! microscale eval               one perplexity point (--model --scale --bs ...)
 //! microscale theory             MSE-σ theory sweep (--elem --scale --bs)
 //! microscale quantize           fake-quant an f32 binary file
+//! microscale serve-bench        packed-domain serving bench (BENCH_serve.json)
 //! microscale selftest           quick smoke of the full stack
 //! ```
 //!
@@ -238,6 +239,33 @@ fn run() -> Result<()> {
                 x.len() - pad
             );
         }
+        "serve-bench" => {
+            let mut opts =
+                microscale::serve::bench::BenchOpts::new(args.has("smoke"));
+            if let Some(out) = args.get("out") {
+                opts.out = PathBuf::from(out);
+            }
+            opts.workers = args.get_usize("workers", opts.workers)?;
+            opts.rounds = args.get_usize("rounds", opts.rounds)?;
+            opts.serial_requests =
+                args.get_usize("serial-requests", opts.serial_requests)?;
+            if let Some(bs) = args.get("batch-sizes") {
+                opts.batch_sizes = bs
+                    .split(',')
+                    .map(|s| {
+                        s.trim().parse::<usize>().map_err(|e| {
+                            anyhow::anyhow!("--batch-sizes {s:?}: {e}")
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            if let Some(q) = args.get("qconfig") {
+                let cfg = microscale::runtime::qconfig::PerLayerQConfig::parse(q)
+                    .with_context(|| format!("--qconfig {q:?}"))?;
+                opts.qconfigs = Some(vec![(q.to_string(), cfg)]);
+            }
+            microscale::serve::bench::run(&opts)?;
+        }
         "selftest" => {
             let ctx = ctx_from(&args)?;
             let sess = ctx.session()?;
@@ -266,11 +294,13 @@ fn run() -> Result<()> {
                 "microscale — reproduction of 'Is Finer Better?' (IBM, 2026)\n\
                  \n\
                  commands: figure <id> | table <1|2|3> | all | hw | train |\n\
-                 models | eval | theory | quantize | selftest\n\
+                 models | eval | theory | quantize | serve-bench | selftest\n\
                  figures: 1a 1b 2a 2b 2c 3a 3b 3c 4a 4b 5a 5b 6 7 8 9 10 11\n\
                  12 13 14 15 16 17\n\
                  flags: --fast --results DIR --models DIR --artifacts DIR\n\
-                 --train-steps N --quiet"
+                 --train-steps N --quiet\n\
+                 serve-bench flags: --smoke --workers N --batch-sizes 8,32\n\
+                 --rounds N --serial-requests N --qconfig CFG --out FILE"
             );
             if other != "help" {
                 bail!("unknown command {other:?}");

@@ -9,7 +9,7 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::dist::Pcg64;
-use crate::runtime::artifacts::Manifest;
+use crate::runtime::artifacts::{Manifest, ModelDims, ParamSpec};
 use crate::stats;
 
 const MAGIC: &[u8; 8] = b"MSCALE01";
@@ -25,11 +25,22 @@ pub struct Params {
 impl Params {
     /// Deterministic initialization per the manifest init specs.
     pub fn init(manifest: &Manifest, seed: u64) -> Params {
+        Self::init_from_specs(&manifest.param_order, &manifest.params, seed)
+    }
+
+    /// Deterministic initialization from an explicit (order, specs) set
+    /// — shared by the manifest path and the artifact-free surrogate
+    /// path ([`Params::init_surrogate`]).
+    pub fn init_from_specs(
+        order: &[String],
+        specs: &BTreeMap<String, ParamSpec>,
+        seed: u64,
+    ) -> Params {
         let mut rng = Pcg64::new(seed);
         let mut tensors = BTreeMap::new();
         // iterate in a fixed order so seeds are reproducible
-        for name in &manifest.param_order {
-            let spec = &manifest.params[name];
+        for name in order {
+            let spec = &specs[name];
             let n = spec.numel();
             let data = match spec.init.as_str() {
                 "normal" => rng.normal_vec_f32(n, spec.std),
@@ -38,7 +49,54 @@ impl Params {
             };
             tensors.insert(name.clone(), (spec.shape.clone(), data));
         }
-        Params { order: manifest.param_order.clone(), tensors }
+        Params { order: order.to_vec(), tensors }
+    }
+
+    /// The `model.py::init_specs` shape/init table for a dimension set,
+    /// built host-side so the serve path needs no AOT artifacts on
+    /// disk. Order is the sorted-name `PARAM_ORDER` convention the
+    /// manifest uses, so [`Params::init_surrogate`] draws exactly the
+    /// same tensors as `Params::init(&manifest, seed)` for matching
+    /// dims.
+    pub fn surrogate_specs(
+        d: &ModelDims,
+    ) -> (Vec<String>, BTreeMap<String, ParamSpec>) {
+        let (l, dm, f, v, s) =
+            (d.n_layers, d.d_model, d.d_ff, d.vocab, d.seq_len);
+        let std = 0.02;
+        // GPT-2-style residual-out scaling, as in model.py
+        let out_std = std / (2.0 * l as f64).sqrt();
+        let spec = |shape: Vec<usize>, init: &str, std: f64, decay: bool| {
+            ParamSpec { shape, init: init.to_string(), std, decay }
+        };
+        let mut specs = BTreeMap::new();
+        specs.insert("embed".into(), spec(vec![v, dm], "normal", std, true));
+        specs.insert("pos".into(), spec(vec![s, dm], "normal", std, true));
+        specs.insert("ln1_g".into(), spec(vec![l, dm], "ones", 0.0, false));
+        specs.insert("ln1_b".into(), spec(vec![l, dm], "zeros", 0.0, false));
+        specs.insert("wq".into(), spec(vec![l, dm, dm], "normal", std, true));
+        specs.insert("wk".into(), spec(vec![l, dm, dm], "normal", std, true));
+        specs.insert("wv".into(), spec(vec![l, dm, dm], "normal", std, true));
+        specs
+            .insert("wo".into(), spec(vec![l, dm, dm], "normal", out_std, true));
+        specs.insert("ln2_g".into(), spec(vec![l, dm], "ones", 0.0, false));
+        specs.insert("ln2_b".into(), spec(vec![l, dm], "zeros", 0.0, false));
+        specs.insert("w1".into(), spec(vec![l, dm, f], "normal", std, true));
+        specs.insert("w2".into(), spec(vec![l, f, dm], "normal", out_std, true));
+        specs.insert("gains".into(), spec(vec![l, 6], "ones", 0.0, false));
+        specs.insert("lnf_g".into(), spec(vec![dm], "ones", 0.0, false));
+        specs.insert("lnf_b".into(), spec(vec![dm], "zeros", 0.0, false));
+        specs.insert("head".into(), spec(vec![dm, v], "normal", std, true));
+        // BTreeMap keys iterate sorted — exactly PARAM_ORDER
+        let order: Vec<String> = specs.keys().cloned().collect();
+        (order, specs)
+    }
+
+    /// Initialize a surrogate-transformer parameter set directly from
+    /// dimensions (no artifacts needed) — the serve-path entry point.
+    pub fn init_surrogate(dims: &ModelDims, seed: u64) -> Params {
+        let (order, specs) = Self::surrogate_specs(dims);
+        Self::init_from_specs(&order, &specs, seed)
     }
 
     /// Zero-filled clone with the same shapes (optimizer state).
@@ -188,6 +246,34 @@ mod tests {
         let z = toy().zeros_like();
         assert_eq!(z.numel(), 10);
         assert!(z.tensors.values().all(|(_, d)| d.iter().all(|&v| v == 0.0)));
+    }
+
+    #[test]
+    fn surrogate_init_matches_model_py_table() {
+        let dims = ModelDims {
+            vocab: 16,
+            d_model: 8,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 16,
+            seq_len: 4,
+        };
+        let p = Params::init_surrogate(&dims, 3);
+        assert_eq!(p.order.len(), 16);
+        // sorted names = the PARAM_ORDER convention
+        assert!(p.order.windows(2).all(|w| w[0] < w[1]));
+        let (shape, data) = p.get("w2").unwrap();
+        assert_eq!(shape, &[2, 16, 8]);
+        assert_eq!(data.len(), 2 * 16 * 8);
+        assert!(p.get("gains").unwrap().1.iter().all(|&v| v == 1.0));
+        assert!(p.get("lnf_b").unwrap().1.iter().all(|&v| v == 0.0));
+        // deterministic per seed
+        let q = Params::init_surrogate(&dims, 3);
+        assert_eq!(p.tensors, q.tensors);
+        // residual-out tensors draw at the narrower GPT-2 std
+        let wo = stats::std_dev_f32(p.get("wo").unwrap().1);
+        let wq = stats::std_dev_f32(p.get("wq").unwrap().1);
+        assert!(wo < wq, "wo σ {wo} vs wq σ {wq}");
     }
 
     #[test]

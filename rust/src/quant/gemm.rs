@@ -318,12 +318,38 @@ impl GemmOperand {
             + self.rows * self.blocks_per_row * self.scale_bytes
     }
 
+    /// In-RAM working-set bytes of this operand (one byte per code plus
+    /// f32 block scales) — what a cache retaining it actually holds, as
+    /// opposed to the wire-format [`GemmOperand::payload_bytes`].
+    pub fn resident_bytes(&self) -> usize {
+        self.codes.len() + 4 * self.scales.len()
+    }
+
     /// Measured wire-format storage cost in bits per element.
     pub fn bits_per_element(&self) -> f64 {
         if self.rows * self.cols == 0 {
             return 0.0;
         }
         self.payload_bytes() as f64 * 8.0 / (self.rows * self.cols) as f64
+    }
+
+    /// Order-sensitive FNV-1a digest over the packed payload (shape,
+    /// element codes, scale bits, per-tensor factor): a cheap identity
+    /// check for the serve-side operand cache — two operands packed from
+    /// the same tensor under the same scheme always digest equal, and
+    /// any flipped code or scale bit changes the digest.
+    pub fn bits_digest(&self) -> u64 {
+        let meta = [
+            self.rows as u64,
+            self.cols as u64,
+            self.scheme.block_size as u64,
+            self.s_t.to_bits() as u64,
+        ];
+        let words = meta
+            .into_iter()
+            .chain(self.codes.iter().map(|&c| c as u64))
+            .chain(self.scales.iter().map(|&s| s.to_bits() as u64));
+        crate::util::fnv1a_words(words, crate::util::FNV_OFFSET_BASIS)
     }
 }
 

@@ -19,6 +19,9 @@
 //! minifloat elements on aligned shapes, reference otherwise;
 //! `MICROSCALE_KERNEL`-style env pinning is available through
 //! `MICROSCALE_GEMM=reference|packed` when bisecting a discrepancy.
+//! On the packed path the weight operand comes from the process-wide
+//! [`super::opcache::operand_cache`], so sweeps that re-multiply the
+//! same weight tensor under the same scheme encode it exactly once.
 
 use crate::formats::ElemFormat;
 
@@ -76,7 +79,13 @@ pub fn quantized_matmul(
 ) -> Vec<f32> {
     if gemm_path_for(scheme, k) == GemmPath::PackedNative {
         let packed = GemmOperand::quantize(scheme, x, m, k).and_then(|xo| {
-            let wo = GemmOperand::quantize_transposed(scheme, w, k, n)?;
+            // weights route through the shared operand cache: sweeps
+            // multiply the same (tensor, scheme) pair many times, and
+            // re-encoding the weight operand per call dominated the old
+            // profile. A hit returns the operand the first encode
+            // produced, so cached and fresh calls are bit-identical.
+            let wo = super::opcache::operand_cache()
+                .get_or_pack_transposed(scheme, w, k, n)?;
             PackedGemm::auto().matmul(&xo, &wo)
         });
         if let Ok(out) = packed {

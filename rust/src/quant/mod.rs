@@ -12,16 +12,20 @@
 //! [`gemm`] multiplies packed operands natively in the code domain
 //! (decode LUTs + per-block-pair scale fusion), bit-identical to the
 //! decode-then-multiply reference but without ever materializing the
-//! dequantized tensors.
+//! dequantized tensors; [`opcache`] is the shared prepacked
+//! weight-operand cache behind both [`matmul::quantized_matmul`] and
+//! the serving stack ([`crate::serve`]).
 
 pub mod error;
 pub mod gemm;
 pub mod kernel;
 pub mod matmul;
+pub mod opcache;
 pub mod packed;
 
 pub use gemm::{packed_matmul, GemmOperand, PackedGemm};
 pub use kernel::{default_kernel, ChunkedKernel, QuantKernel, ScalarKernel};
+pub use opcache::{operand_cache, CacheStats, OperandCache};
 pub use packed::PackedMxTensor;
 
 use crate::formats::{ElemFormat, MiniFloat};

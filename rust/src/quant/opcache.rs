@@ -1,0 +1,253 @@
+//! Shared prepacked weight-operand cache.
+//!
+//! Packing a weight matrix into a [`GemmOperand`] (transpose + absmax +
+//! scale cast + element cast per block) costs as much as several
+//! multiplies against it, and both serving sessions and experiment
+//! sweeps multiply the *same* (tensor, qconfig) pairs over and over.
+//! [`OperandCache`] encodes each pair once and hands out `Arc` clones of
+//! that one operand afterwards — which also makes the hit path
+//! bit-identical to the miss path by construction (there is exactly one
+//! encode; [`GemmOperand::bits_digest`] lets tests assert it).
+//!
+//! The cache lives in the quant layer (it is keyed on [`QuantScheme`]
+//! and stores [`GemmOperand`]s — nothing serve-specific) so the layer
+//! dependency stays one-directional; the serve subsystem re-exports it
+//! as `serve::cache`.
+//!
+//! Keying is by **content**: two independent 64-bit FNV-1a word digests
+//! over the raw f32 bit patterns (computed in one fused pass), plus
+//! shape and the full scheme id. A collision would need both digests to
+//! agree on different data (~2⁻¹²⁸ per pair) — far below any
+//! hardware-error floor. Eviction is insertion-order FIFO with a
+//! configurable entry cap, so a sweep over hundreds of distinct tensors
+//! cannot grow the cache without bound.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::gemm::GemmOperand;
+use super::QuantScheme;
+
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct Key {
+    h1: u64,
+    h2: u64,
+    k: usize,
+    n: usize,
+    scheme: String,
+}
+
+/// Monotonic cache counters (snapshot via [`OperandCache::stats`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Current resident entry count.
+    pub entries: usize,
+    /// Current resident working-set bytes
+    /// ([`GemmOperand::resident_bytes`] summed over entries).
+    pub resident_bytes: usize,
+}
+
+struct Inner {
+    map: HashMap<Key, Arc<GemmOperand>>,
+    order: VecDeque<Key>,
+    resident_bytes: usize,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+/// A bounded, thread-safe (tensor, qconfig) → prepacked-operand cache.
+/// Residency is capped both by entry count and by working-set bytes
+/// (FIFO eviction on whichever bound is hit first), so neither many
+/// small operands nor a few huge ones can grow the cache without
+/// bound.
+pub struct OperandCache {
+    cap: usize,
+    byte_cap: usize,
+    inner: Mutex<Inner>,
+}
+
+impl OperandCache {
+    /// Default working-set byte budget (see [`OperandCache::new`]).
+    pub const DEFAULT_BYTE_CAP: usize = 256 << 20;
+
+    /// Cache holding at most `cap` operands and at most
+    /// [`OperandCache::DEFAULT_BYTE_CAP`] resident bytes.
+    pub fn new(cap: usize) -> OperandCache {
+        OperandCache::with_byte_cap(cap, Self::DEFAULT_BYTE_CAP)
+    }
+
+    /// Cache bounded by `cap` entries and `byte_cap` resident bytes.
+    pub fn with_byte_cap(cap: usize, byte_cap: usize) -> OperandCache {
+        OperandCache {
+            cap: cap.max(1),
+            byte_cap: byte_cap.max(1),
+            inner: Mutex::new(Inner {
+                map: HashMap::new(),
+                order: VecDeque::new(),
+                resident_bytes: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            }),
+        }
+    }
+
+    /// The prepacked transposed operand for a row-major `k × n` weight
+    /// matrix under `scheme` (the [`GemmOperand::quantize_transposed`]
+    /// layout): encoded on first use, shared afterwards.
+    pub fn get_or_pack_transposed(
+        &self,
+        scheme: &QuantScheme,
+        w: &[f32],
+        k: usize,
+        n: usize,
+    ) -> crate::Result<Arc<GemmOperand>> {
+        let (h1, h2) = content_digests(w);
+        let key = Key { h1, h2, k, n, scheme: scheme.id() };
+        {
+            let mut g = self.inner.lock().unwrap();
+            let found = g.map.get(&key).cloned();
+            if let Some(op) = found {
+                g.hits += 1;
+                return Ok(op);
+            }
+        }
+        // pack outside the lock: two threads missing the same key may
+        // both encode, but encoding is deterministic and the first
+        // insert wins, so every caller still sees one canonical operand
+        let op = Arc::new(GemmOperand::quantize_transposed(scheme, w, k, n)?);
+        let mut g = self.inner.lock().unwrap();
+        g.misses += 1;
+        if let Some(existing) = g.map.get(&key).cloned() {
+            return Ok(existing);
+        }
+        g.resident_bytes += op.resident_bytes();
+        g.map.insert(key.clone(), op.clone());
+        g.order.push_back(key);
+        while g.map.len() > self.cap || g.resident_bytes > self.byte_cap {
+            match g.order.pop_front() {
+                Some(old) => {
+                    if let Some(gone) = g.map.remove(&old) {
+                        g.resident_bytes =
+                            g.resident_bytes.saturating_sub(gone.resident_bytes());
+                    }
+                    g.evictions += 1;
+                }
+                None => break,
+            }
+        }
+        Ok(op)
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        let g = self.inner.lock().unwrap();
+        CacheStats {
+            hits: g.hits,
+            misses: g.misses,
+            evictions: g.evictions,
+            entries: g.map.len(),
+            resident_bytes: g.resident_bytes,
+        }
+    }
+
+    /// Drop every resident operand (counters are kept).
+    pub fn clear(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.map.clear();
+        g.order.clear();
+        g.resident_bytes = 0;
+    }
+}
+
+/// The process-wide cache shared by every serve session and by
+/// [`crate::quant::matmul::quantized_matmul`] sweeps: up to 128
+/// operands / [`OperandCache::DEFAULT_BYTE_CAP`] resident bytes, so a
+/// sweep over large weight tensors (a 4096×4096 operand is ~17 MiB)
+/// hits the byte bound long before the entry bound.
+pub fn operand_cache() -> &'static OperandCache {
+    static CACHE: OnceLock<OperandCache> = OnceLock::new();
+    CACHE.get_or_init(|| OperandCache::new(128))
+}
+
+/// Two independent FNV-1a word digests over the f32 bit patterns in
+/// **one** pass (the fused form of two [`crate::util::fnv1a_words`]
+/// runs — hashing is on the `quantized_matmul` hot path, so one memory
+/// sweep matters): different bases, second stream bit-rotated so the
+/// digests never degenerate into each other.
+fn content_digests(w: &[f32]) -> (u64, u64) {
+    const SECOND_BASIS: u64 = 0x6c62_272e_07bb_0142;
+    let mut h1 = crate::util::FNV_OFFSET_BASIS;
+    let mut h2 = SECOND_BASIS;
+    for &v in w {
+        let b = v.to_bits() as u64;
+        h1 = (h1 ^ b).wrapping_mul(crate::util::FNV_PRIME);
+        h2 = (h2 ^ b.rotate_left(17)).wrapping_mul(crate::util::FNV_PRIME);
+    }
+    (h1, h2)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Pcg64;
+    use crate::formats::{ElemFormat, UE5M3};
+
+    #[test]
+    fn hit_returns_the_same_operand() {
+        let cache = OperandCache::new(4);
+        let mut rng = Pcg64::new(5);
+        let (k, n) = (16usize, 6);
+        let w = rng.normal_vec_f32(k * n, 0.02);
+        let scheme = QuantScheme::new(ElemFormat::FP4, UE5M3, 8);
+        let a = cache.get_or_pack_transposed(&scheme, &w, k, n).unwrap();
+        let b = cache.get_or_pack_transposed(&scheme, &w, k, n).unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+        // same bytes under a different scheme is a different entry
+        let scheme16 = QuantScheme::new(ElemFormat::FP4, UE5M3, 16);
+        let c = cache.get_or_pack_transposed(&scheme16, &w, k, n).unwrap();
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.stats().entries, 2);
+    }
+
+    #[test]
+    fn eviction_caps_residency() {
+        let cache = OperandCache::new(2);
+        let mut rng = Pcg64::new(6);
+        let scheme = QuantScheme::new(ElemFormat::FP4, UE5M3, 8);
+        for _ in 0..5 {
+            let w = rng.normal_vec_f32(8 * 3, 0.02);
+            cache.get_or_pack_transposed(&scheme, &w, 8, 3).unwrap();
+        }
+        let s = cache.stats();
+        assert_eq!(s.entries, 2);
+        assert_eq!(s.evictions, 3);
+        assert!(s.resident_bytes > 0);
+        cache.clear();
+        let s = cache.stats();
+        assert_eq!((s.entries, s.resident_bytes), (0, 0));
+    }
+
+    #[test]
+    fn byte_budget_caps_residency() {
+        // each 8x3 FP4/bs8 operand resides at 3*8 codes + 3 scales*4 =
+        // 36 bytes; a 100-byte budget holds at most two
+        let cache = OperandCache::with_byte_cap(64, 100);
+        let mut rng = Pcg64::new(7);
+        let scheme = QuantScheme::new(ElemFormat::FP4, UE5M3, 8);
+        for _ in 0..5 {
+            let w = rng.normal_vec_f32(8 * 3, 0.02);
+            let op = cache.get_or_pack_transposed(&scheme, &w, 8, 3).unwrap();
+            assert_eq!(op.resident_bytes(), 36);
+        }
+        let s = cache.stats();
+        assert_eq!(s.entries, 2);
+        assert!(s.resident_bytes <= 100, "{} bytes resident", s.resident_bytes);
+        assert_eq!(s.evictions, 3);
+    }
+}

@@ -65,6 +65,38 @@ impl QConfig {
         self
     }
 
+    /// Parse the short display id produced by [`QConfig::id`]:
+    /// `bf16-exact` (or `none`) for the quantization-off baseline,
+    /// otherwise `<elem>/<scale>[-S][-wonly]` — e.g. `fp4_e2m1/ue5m3`,
+    /// `int4/ue4m3-S`, `fp8_e4m3/ue4m3-wonly`.
+    pub fn parse(s: &str) -> Result<QConfig> {
+        let s = s.trim();
+        if s == "bf16-exact" || s == "none" {
+            return Ok(QConfig::baseline());
+        }
+        let Some((elem, rest)) = s.split_once('/') else {
+            bail!(
+                "bad qconfig {s:?}: expected <elem>/<scale>[-S][-wonly] \
+                 or bf16-exact"
+            );
+        };
+        // id() appends "-S" before "-wonly", so strip in reverse order
+        let mut rest = rest;
+        let mut act_quant = true;
+        if let Some(r) = rest.strip_suffix("-wonly") {
+            act_quant = false;
+            rest = r;
+        }
+        let mut per_tensor = false;
+        if let Some(r) = rest.strip_suffix("-S") {
+            per_tensor = true;
+            rest = r;
+        }
+        let mut cfg = QConfig::named(elem, rest, per_tensor)?;
+        cfg.act_quant = act_quant;
+        Ok(cfg)
+    }
+
     /// Equivalent CPU-side scheme (for cross-validation tests).
     pub fn scheme(&self, block_size: usize) -> QuantScheme {
         QuantScheme::new(self.elem, self.scale, block_size)
@@ -116,6 +148,87 @@ impl QConfig {
     }
 }
 
+/// A per-layer quantization assignment: one base [`QConfig`] plus
+/// sparse layer-index overrides — the mixed-precision serving scenarios
+/// of *Scaling Laws For Mixed Quantization* (keep sensitive layers at
+/// FP8 while the bulk runs FP4). Model-global configs are the
+/// [`PerLayerQConfig::uniform`] special case; both the serve subsystem
+/// ([`crate::serve`]) and the CLI consume this type.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PerLayerQConfig {
+    base: QConfig,
+    /// `(layer index, config)`, sorted by layer, at most one per layer.
+    overrides: Vec<(usize, QConfig)>,
+}
+
+impl PerLayerQConfig {
+    /// The same config on every layer.
+    pub fn uniform(base: QConfig) -> PerLayerQConfig {
+        PerLayerQConfig { base, overrides: Vec::new() }
+    }
+
+    /// Builder-style override for one layer (replaces an existing
+    /// override for the same layer).
+    pub fn with_override(mut self, layer: usize, cfg: QConfig) -> PerLayerQConfig {
+        match self.overrides.binary_search_by_key(&layer, |(l, _)| *l) {
+            Ok(i) => self.overrides[i].1 = cfg,
+            Err(i) => self.overrides.insert(i, (layer, cfg)),
+        }
+        self
+    }
+
+    pub fn base(&self) -> &QConfig {
+        &self.base
+    }
+
+    pub fn overrides(&self) -> &[(usize, QConfig)] {
+        &self.overrides
+    }
+
+    pub fn is_uniform(&self) -> bool {
+        self.overrides.is_empty()
+    }
+
+    /// The effective config for layer `l`.
+    pub fn layer(&self, l: usize) -> QConfig {
+        match self.overrides.binary_search_by_key(&l, |(i, _)| *i) {
+            Ok(i) => self.overrides[i].1,
+            Err(_) => self.base,
+        }
+    }
+
+    /// Stable display id (also the parse syntax): the base
+    /// [`QConfig::id`], then `;<layer>=<id>` per override — e.g.
+    /// `fp4_e2m1/ue5m3;0=fp8_e4m3/ue5m3;3=bf16-exact`. Used in cache
+    /// keys and `BENCH_serve.json`, so the format is load-bearing.
+    pub fn id(&self) -> String {
+        let mut s = self.base.id();
+        for (l, c) in &self.overrides {
+            s.push(';');
+            s.push_str(&format!("{l}={}", c.id()));
+        }
+        s
+    }
+
+    /// Inverse of [`PerLayerQConfig::id`].
+    pub fn parse(s: &str) -> Result<PerLayerQConfig> {
+        let mut parts = s.split(';');
+        let base = QConfig::parse(parts.next().unwrap_or(""))?;
+        let mut out = PerLayerQConfig::uniform(base);
+        for p in parts {
+            let Some((l, c)) = p.split_once('=') else {
+                bail!("bad per-layer override {p:?}: expected <layer>=<config>");
+            };
+            let layer: usize = l
+                .trim()
+                .parse()
+                .map_err(|e| anyhow::anyhow!("bad layer index {l:?}: {e}"))?;
+            out = out.with_override(layer, QConfig::parse(c)?);
+        }
+        Ok(out)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -152,5 +265,48 @@ mod tests {
             QConfig::named("int4", "ue4m3", true).unwrap().id(),
             "int4/ue4m3-S"
         );
+    }
+
+    #[test]
+    fn parse_inverts_id() {
+        let mut wonly = QConfig::fp4("ue4m3").unwrap();
+        wonly.act_quant = false;
+        for cfg in [
+            QConfig::baseline(),
+            QConfig::fp4("ue5m3").unwrap(),
+            QConfig::named("int4", "ue4m3", true).unwrap(),
+            QConfig::named("fp8_e4m3", "ue4m3", false).unwrap(),
+            wonly,
+        ] {
+            let back = QConfig::parse(&cfg.id()).unwrap();
+            assert_eq!(back, cfg, "round-trip of {}", cfg.id());
+        }
+        assert_eq!(QConfig::parse("none").unwrap(), QConfig::baseline());
+        assert!(QConfig::parse("fp4_e2m1").is_err());
+        assert!(QConfig::parse("fp4_e2m1/nope").is_err());
+    }
+
+    #[test]
+    fn per_layer_overrides_resolve_and_round_trip() {
+        let base = QConfig::fp4("ue5m3").unwrap();
+        let hi = QConfig::named("fp8_e4m3", "ue5m3", false).unwrap();
+        let q = PerLayerQConfig::uniform(base)
+            .with_override(3, QConfig::baseline())
+            .with_override(0, hi);
+        assert_eq!(q.layer(0), hi);
+        assert_eq!(q.layer(1), base);
+        assert_eq!(q.layer(3), QConfig::baseline());
+        assert!(!q.is_uniform());
+        assert_eq!(
+            q.id(),
+            "fp4_e2m1/ue5m3;0=fp8_e4m3/ue5m3;3=bf16-exact"
+        );
+        let back = PerLayerQConfig::parse(&q.id()).unwrap();
+        assert_eq!(back, q);
+        // replacing an existing override keeps one entry per layer
+        let q2 = q.clone().with_override(0, base);
+        assert_eq!(q2.layer(0), base);
+        assert_eq!(q2.overrides().len(), 2);
+        assert!(PerLayerQConfig::parse("fp4_e2m1/ue4m3;x=fp8").is_err());
     }
 }

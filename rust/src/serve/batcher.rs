@@ -1,0 +1,289 @@
+//! Admission queue with deadline/size-triggered micro-batching.
+//!
+//! Concurrent requests coalesce into one forward-batch matrix. The
+//! release state machine (documented in DESIGN.md §9) is:
+//!
+//! 1. **Size trigger** — as soon as `max_batch` compatible requests are
+//!    queued, a batch is released immediately.
+//! 2. **Deadline trigger** — otherwise, once the *oldest* queued
+//!    request has waited `max_wait`, whatever is compatible with it is
+//!    released (latency is bounded by `max_wait` + one forward pass
+//!    ahead of it in line).
+//! 3. **Drain trigger** — after [`Batcher::close`], remaining requests
+//!    release without waiting, then [`Batcher::next_batch`] returns
+//!    `None` and workers exit.
+//!
+//! "Compatible" means equal sequence length: a batch is one
+//! `(n, seq)` token matrix. The collector gives the head's length group
+//! priority (the head always makes progress, so mixed-length traffic
+//! cannot starve), but a **full** non-head group also releases on the
+//! size trigger alone — a complete batch never idles behind an
+//! incompatible head that hasn't reached its deadline. Coalescing never
+//! changes results — see the batching-invariance notes in
+//! [`super::packed_model`].
+
+use std::collections::VecDeque;
+use std::sync::mpsc;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One admitted request: a full token sequence plus its completion
+/// channel (the engine sends the request's logits back through `done`).
+pub struct Request {
+    pub id: u64,
+    pub tokens: Vec<i32>,
+    pub seq: usize,
+    pub enqueued: Instant,
+    pub done: mpsc::Sender<crate::Result<Vec<f32>>>,
+}
+
+/// Micro-batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Coalesce at most this many requests into one forward batch.
+    pub max_batch: usize,
+    /// Oldest-request deadline: a non-full batch releases once the head
+    /// of the queue has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 32, max_wait: Duration::from_millis(2) }
+    }
+}
+
+struct State {
+    queue: VecDeque<Request>,
+    closed: bool,
+}
+
+/// The admission queue (see module docs).
+pub struct Batcher {
+    cfg: BatcherConfig,
+    state: Mutex<State>,
+    ready: Condvar,
+}
+
+impl Batcher {
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        Batcher {
+            cfg: BatcherConfig { max_batch: cfg.max_batch.max(1), ..cfg },
+            state: Mutex::new(State { queue: VecDeque::new(), closed: false }),
+            ready: Condvar::new(),
+        }
+    }
+
+    pub fn config(&self) -> &BatcherConfig {
+        &self.cfg
+    }
+
+    /// Admit a request; returns `false` (dropping the request) if the
+    /// batcher is closed.
+    pub fn submit(&self, req: Request) -> bool {
+        let mut g = self.state.lock().unwrap();
+        if g.closed {
+            return false;
+        }
+        g.queue.push_back(req);
+        self.ready.notify_one();
+        true
+    }
+
+    /// Queued (not yet collected) request count.
+    pub fn pending(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    /// Stop admissions; queued requests still drain.
+    pub fn close(&self) {
+        let mut g = self.state.lock().unwrap();
+        g.closed = true;
+        self.ready.notify_all();
+    }
+
+    /// Block until a batch is ready per the release rules; `None` once
+    /// the batcher is closed and drained.
+    pub fn next_batch(&self) -> Option<Vec<Request>> {
+        let mut g = self.state.lock().unwrap();
+        loop {
+            if let Some(batch) = self.try_collect(&mut g) {
+                return Some(batch);
+            }
+            if g.closed && g.queue.is_empty() {
+                return None;
+            }
+            if g.queue.is_empty() {
+                g = self.ready.wait(g).unwrap();
+            } else {
+                // sleep until the head's deadline (or a new submission)
+                let age = g.queue.front().unwrap().enqueued.elapsed();
+                let left = self
+                    .cfg
+                    .max_wait
+                    .saturating_sub(age)
+                    .max(Duration::from_micros(50));
+                let (g2, _timeout) = self.ready.wait_timeout(g, left).unwrap();
+                g = g2;
+            }
+        }
+    }
+
+    /// The release rule: the head's same-sequence-length group releases
+    /// on size/deadline/drain; a *full* non-head group releases on size
+    /// alone, so a complete batch never waits behind an incompatible
+    /// head (module docs).
+    fn try_collect(&self, g: &mut State) -> Option<Vec<Request>> {
+        let head = g.queue.front()?;
+        let head_seq = head.seq;
+        let deadline_hit = head.enqueued.elapsed() >= self.cfg.max_wait;
+        let mut head_idxs = Vec::new();
+        // non-head groups in first-seen order: (seq, queue indices)
+        let mut others: Vec<(usize, Vec<usize>)> = Vec::new();
+        for (i, r) in g.queue.iter().enumerate() {
+            if r.seq == head_seq {
+                head_idxs.push(i);
+                if head_idxs.len() == self.cfg.max_batch {
+                    break; // head priority satisfied
+                }
+            } else {
+                let p = others.iter().position(|(s, _)| *s == r.seq);
+                let grp = match p {
+                    Some(p) => &mut others[p],
+                    None => {
+                        others.push((r.seq, Vec::new()));
+                        others.last_mut().unwrap()
+                    }
+                };
+                if grp.1.len() < self.cfg.max_batch {
+                    grp.1.push(i);
+                }
+            }
+        }
+        let take = if head_idxs.len() == self.cfg.max_batch
+            || deadline_hit
+            || g.closed
+        {
+            head_idxs
+        } else if let Some(p) = others
+            .iter()
+            .position(|(_, v)| v.len() >= self.cfg.max_batch)
+        {
+            others.swap_remove(p).1
+        } else {
+            return None;
+        };
+        // remove back-to-front so earlier indices stay valid
+        let mut batch: Vec<Request> = Vec::with_capacity(take.len());
+        for &i in take.iter().rev() {
+            batch.push(g.queue.remove(i).unwrap());
+        }
+        batch.reverse(); // restore admission order
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, seq: usize) -> (Request, mpsc::Receiver<crate::Result<Vec<f32>>>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Request {
+                id,
+                tokens: vec![0; seq],
+                seq,
+                enqueued: Instant::now(),
+                done: tx,
+            },
+            rx,
+        )
+    }
+
+    #[test]
+    fn size_trigger_releases_full_batch_in_order() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 3,
+            max_wait: Duration::from_secs(60),
+        });
+        let mut rxs = Vec::new();
+        for id in 0..4 {
+            let (r, rx) = req(id, 8);
+            assert!(b.submit(r));
+            rxs.push(rx);
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.iter().map(|r| r.id).collect::<Vec<_>>(), [0, 1, 2]);
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn deadline_trigger_releases_partial_batch() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+        });
+        let (r, _rx) = req(7, 4);
+        assert!(b.submit(r));
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert_eq!(batch[0].id, 7);
+        assert!(t0.elapsed() >= Duration::from_millis(2));
+    }
+
+    #[test]
+    fn full_batch_is_not_blocked_by_incompatible_head() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_secs(60),
+        });
+        let (r, _rx0) = req(0, 4);
+        assert!(b.submit(r));
+        let mut keep = Vec::new();
+        for id in 1..=4 {
+            let (r, rx) = req(id, 8);
+            assert!(b.submit(r));
+            keep.push(rx);
+        }
+        // the seq-8 group is complete: it must release on the size
+        // trigger even though the seq-4 head is nowhere near deadline
+        let batch = b.next_batch().unwrap();
+        assert_eq!(
+            batch.iter().map(|r| r.id).collect::<Vec<_>>(),
+            [1, 2, 3, 4]
+        );
+        assert_eq!(b.pending(), 1);
+    }
+
+    #[test]
+    fn mixed_lengths_split_into_uniform_batches() {
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 4,
+            max_wait: Duration::from_secs(60),
+        });
+        let mut keep = Vec::new();
+        for (id, seq) in [(0u64, 8usize), (1, 4), (2, 8), (3, 8), (4, 8)] {
+            let (r, rx) = req(id, seq);
+            assert!(b.submit(r));
+            keep.push(rx);
+        }
+        // four seq-8 requests fill a batch around the seq-4 one
+        let batch = b.next_batch().unwrap();
+        assert_eq!(
+            batch.iter().map(|r| r.id).collect::<Vec<_>>(),
+            [0, 2, 3, 4]
+        );
+        assert!(batch.iter().all(|r| r.seq == 8));
+        // the leftover seq-4 request drains on close
+        b.close();
+        let rest = b.next_batch().unwrap();
+        assert_eq!(rest.len(), 1);
+        assert_eq!(rest[0].id, 1);
+        assert!(b.next_batch().is_none());
+        // closed batcher refuses admissions
+        let (r, _rx) = req(9, 8);
+        assert!(!b.submit(r));
+    }
+}

@@ -1,0 +1,309 @@
+//! The multi-worker serving loop: submit/collect API over one shared
+//! [`PackedModel`], with latency/throughput statistics.
+//!
+//! Worker threads block on the [`Batcher`], run one forward pass per
+//! released batch, and deliver each request's logit slice through its
+//! completion channel. With more than one worker, each marks itself
+//! with the [`crate::util::par::WorkerGuard`] pool-worker protocol so
+//! the packed GEMM inside stays serial (workers parallelize across
+//! batches instead — the same no-ncpus²-oversubscription rule the
+//! coordinator pool follows); a lone worker leaves the guard off and
+//! lets the GEMM fan out across cores.
+//!
+//! Determinism: request logits are identical for any worker count and
+//! any arrival interleaving — batching invariance (see
+//! [`super::packed_model`]) makes co-batch composition irrelevant, and
+//! each forward pass is bitwise deterministic. `rust/tests/serve.rs`
+//! pins this.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use anyhow::{anyhow, ensure};
+
+use super::batcher::{Batcher, BatcherConfig, Request};
+use super::packed_model::PackedModel;
+use crate::util::par;
+
+/// Engine configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct EngineConfig {
+    /// Serving threads (each runs whole batches).
+    pub workers: usize,
+    pub batcher: BatcherConfig,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        EngineConfig {
+            workers: par::max_threads().min(4),
+            batcher: BatcherConfig::default(),
+        }
+    }
+}
+
+/// Latency sample cap: percentiles are computed over a sliding window
+/// of the most recent samples so a long-lived engine's memory and
+/// `stats()` sort cost stay bounded.
+const LATENCY_WINDOW: usize = 4096;
+
+#[derive(Default)]
+struct StatsInner {
+    /// Ring buffer of the most recent `LATENCY_WINDOW` request
+    /// latencies (submit → logits-ready).
+    latencies_ns: Vec<u64>,
+    lat_cursor: usize,
+    requests: u64,
+    tokens: u64,
+    batches: u64,
+    batched_requests: u64,
+    errors: u64,
+    first_submit: Option<Instant>,
+    last_done: Option<Instant>,
+}
+
+impl StatsInner {
+    fn record_latency(&mut self, ns: u64) {
+        if self.latencies_ns.len() < LATENCY_WINDOW {
+            self.latencies_ns.push(ns);
+        } else {
+            self.latencies_ns[self.lat_cursor] = ns;
+            self.lat_cursor = (self.lat_cursor + 1) % LATENCY_WINDOW;
+        }
+    }
+
+    fn snapshot(&self) -> ServeStats {
+        let mut lat = self.latencies_ns.clone();
+        lat.sort_unstable();
+        let pct = |p: f64| -> f64 {
+            if lat.is_empty() {
+                return 0.0;
+            }
+            let idx = ((lat.len() - 1) as f64 * p / 100.0).round() as usize;
+            lat[idx] as f64 / 1e6
+        };
+        let window = match (self.first_submit, self.last_done) {
+            (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
+            _ => 0.0,
+        };
+        let rate = |count: u64| -> f64 {
+            if window > 0.0 {
+                count as f64 / window
+            } else {
+                0.0
+            }
+        };
+        ServeStats {
+            requests: self.requests,
+            tokens: self.tokens,
+            batches: self.batches,
+            errors: self.errors,
+            mean_batch: if self.batches > 0 {
+                self.batched_requests as f64 / self.batches as f64
+            } else {
+                0.0
+            },
+            p50_ms: pct(50.0),
+            p95_ms: pct(95.0),
+            p99_ms: pct(99.0),
+            req_per_s: rate(self.requests),
+            tok_per_s: rate(self.tokens),
+        }
+    }
+}
+
+/// Aggregate serving statistics. Latency percentiles cover the most
+/// recent [`LATENCY_WINDOW`] requests (submit → logits-ready);
+/// throughput is measured over the first-submit → last-completion
+/// window.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ServeStats {
+    pub requests: u64,
+    pub tokens: u64,
+    pub batches: u64,
+    pub errors: u64,
+    /// Mean coalesced batch size.
+    pub mean_batch: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub req_per_s: f64,
+    pub tok_per_s: f64,
+}
+
+/// Handle to one in-flight request.
+pub struct ResponseHandle {
+    pub id: u64,
+    pub seq: usize,
+    rx: mpsc::Receiver<crate::Result<Vec<f32>>>,
+}
+
+impl ResponseHandle {
+    /// Block for the request's logits (`seq × vocab`, row-major).
+    pub fn wait(self) -> crate::Result<Vec<f32>> {
+        self.rx
+            .recv()
+            .map_err(|_| anyhow!("serve worker dropped the request"))?
+    }
+}
+
+/// The serving engine (see module docs).
+pub struct ServeEngine {
+    model: Arc<PackedModel>,
+    batcher: Arc<Batcher>,
+    workers: Vec<JoinHandle<()>>,
+    stats: Arc<Mutex<StatsInner>>,
+    next_id: AtomicU64,
+}
+
+impl ServeEngine {
+    /// Spawn `cfg.workers` serving threads over `model`.
+    pub fn start(
+        model: Arc<PackedModel>,
+        cfg: EngineConfig,
+    ) -> crate::Result<ServeEngine> {
+        ensure!(cfg.workers >= 1, "need at least one worker");
+        let batcher = Arc::new(Batcher::new(cfg.batcher));
+        let stats = Arc::new(Mutex::new(StatsInner::default()));
+        let mark = cfg.workers > 1;
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for i in 0..cfg.workers {
+            let m = model.clone();
+            let b = batcher.clone();
+            let st = stats.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("serve-worker-{i}"))
+                .spawn(move || worker_loop(&m, &b, &st, mark))
+                .map_err(|e| anyhow!("spawning serve worker: {e}"))?;
+            workers.push(handle);
+        }
+        Ok(ServeEngine {
+            model,
+            batcher,
+            workers,
+            stats,
+            next_id: AtomicU64::new(0),
+        })
+    }
+
+    /// Admit one request (a full token sequence, `1..=seq_len` tokens).
+    pub fn submit(&self, tokens: Vec<i32>) -> crate::Result<ResponseHandle> {
+        let seq = tokens.len();
+        let max = self.model.dims().seq_len;
+        ensure!(
+            seq >= 1 && seq <= max,
+            "sequence length {seq} out of range 1..={max}"
+        );
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = mpsc::channel();
+        {
+            let mut st = self.stats.lock().unwrap();
+            if st.first_submit.is_none() {
+                st.first_submit = Some(Instant::now());
+            }
+        }
+        let admitted = self.batcher.submit(Request {
+            id,
+            tokens,
+            seq,
+            enqueued: Instant::now(),
+            done: tx,
+        });
+        ensure!(admitted, "engine is shut down");
+        Ok(ResponseHandle { id, seq, rx })
+    }
+
+    /// Convenience: submit one request and block for its logits.
+    pub fn infer(&self, tokens: Vec<i32>) -> crate::Result<Vec<f32>> {
+        self.submit(tokens)?.wait()
+    }
+
+    pub fn model(&self) -> &PackedModel {
+        &self.model
+    }
+
+    pub fn stats(&self) -> ServeStats {
+        self.stats.lock().unwrap().snapshot()
+    }
+
+    /// Stop admissions, drain the queue, join workers; returns final
+    /// stats. (Dropping the engine does the same minus the stats.)
+    pub fn shutdown(mut self) -> ServeStats {
+        self.shutdown_inner();
+        self.stats()
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.batcher.close();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for ServeEngine {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn worker_loop(
+    model: &PackedModel,
+    batcher: &Batcher,
+    stats: &Mutex<StatsInner>,
+    mark: bool,
+) {
+    // several workers -> each keeps its GEMM serial (pool-worker guard);
+    // a lone worker lets the GEMM thread across cores instead
+    let _guard = mark.then(par::WorkerGuard::enter);
+    while let Some(batch) = batcher.next_batch() {
+        serve_batch(model, batch, stats);
+    }
+}
+
+fn serve_batch(model: &PackedModel, batch: Vec<Request>, stats: &Mutex<StatsInner>) {
+    let n = batch.len();
+    let seq = batch[0].seq;
+    let mut tokens = Vec::with_capacity(n * seq);
+    for r in &batch {
+        tokens.extend_from_slice(&r.tokens);
+    }
+    let result = model.forward(&tokens, n, seq);
+    let done_at = Instant::now();
+    let vocab = model.dims().vocab;
+    match result {
+        Ok(logits) => {
+            {
+                let mut st = stats.lock().unwrap();
+                st.batches += 1;
+                st.batched_requests += n as u64;
+                st.last_done = Some(done_at);
+                for r in &batch {
+                    st.requests += 1;
+                    st.tokens += seq as u64;
+                    st.record_latency(
+                        done_at.duration_since(r.enqueued).as_nanos() as u64,
+                    );
+                }
+            }
+            for (i, r) in batch.into_iter().enumerate() {
+                let slice =
+                    logits[i * seq * vocab..(i + 1) * seq * vocab].to_vec();
+                let _ = r.done.send(Ok(slice));
+            }
+        }
+        Err(e) => {
+            let msg = format!("{e:#}");
+            {
+                let mut st = stats.lock().unwrap();
+                st.errors += n as u64;
+                st.last_done = Some(done_at);
+            }
+            for r in batch {
+                let _ = r.done.send(Err(anyhow!("forward failed: {msg}")));
+            }
+        }
+    }
+}

@@ -1,0 +1,55 @@
+//! Native packed-domain inference serving: the repo's model runs
+//! end-to-end on prepacked quantized weights — no XLA artifacts, no
+//! dequantized weight tensors, no python.
+//!
+//! The paper's headline claim (FP4 microscaling with UE5M3 scales
+//! matches E4M3 without global rescaling) only pays off if inference
+//! actually executes natively on the packed representation; this
+//! subsystem is that on-ramp. Four pieces:
+//!
+//! * [`packed_model`] — [`PackedModel`]: the surrogate transformer of
+//!   `python/compile/model.py` (embed + pos, per-layer LN → quantized
+//!   Q/K/V/O linears → full-precision attention → quantized GELU MLP,
+//!   unquantized head) with every linear weight prepacked **once** as a
+//!   transposed [`crate::quant::gemm::GemmOperand`]; `forward()`
+//!   quantizes activations per batch and dispatches through
+//!   [`crate::quant::gemm::PackedGemm`]. Bit-identical to the scalar
+//!   fake-quant [`reference_forward`] (pinned by `rust/tests/serve.rs`).
+//!   Per-layer [`crate::runtime::qconfig::PerLayerQConfig`] overrides
+//!   express mixed-precision assignments (cf. *Scaling Laws For Mixed
+//!   Quantization*).
+//! * [`batcher`] — [`Batcher`]: an admission queue with deadline/size
+//!   triggered micro-batching. Coalesced neighbors never change a
+//!   request's logits (batching invariance — quantization, GEMM rows,
+//!   LN, attention and softmax are all per-row/per-sequence; per-tensor
+//!   "-S" activation scaling is applied per *sequence*, not per batch).
+//! * [`engine`] — [`ServeEngine`]: multi-worker serving loop over one
+//!   shared model (submit/collect API, p50/p95/p99 latency + throughput
+//!   stats). Workers reuse the [`crate::util::par::WorkerGuard`]
+//!   pool-worker protocol so nested GEMM threading never oversubscribes.
+//! * [`cache`] — [`OperandCache`]: the process-wide prepacked
+//!   weight-operand cache keyed by (tensor content, shape, qconfig),
+//!   shared across serve sessions *and* by
+//!   [`crate::quant::matmul::quantized_matmul`] sweeps; hits return the
+//!   exact operand the first encode produced, so cached and fresh paths
+//!   are bit-identical by construction.
+//!
+//! `microscale serve-bench` ([`bench`]) drives synthetic traffic across
+//! {FP4/UE4M3, FP4/UE5M3, FP8, mixed-per-layer} × batch sizes and emits
+//! machine-readable `BENCH_serve.json` (field map in EXPERIMENTS.md
+//! §Perf). Architecture notes live in DESIGN.md §9.
+
+pub mod batcher;
+pub mod bench;
+pub mod engine;
+pub mod packed_model;
+
+/// The weight-operand cache lives in the quant layer
+/// ([`crate::quant::opcache`] — it is generic quant infrastructure);
+/// re-exported here because serve sessions are its primary consumer.
+pub use crate::quant::opcache as cache;
+
+pub use batcher::{Batcher, BatcherConfig};
+pub use self::cache::{operand_cache, CacheStats, OperandCache};
+pub use engine::{EngineConfig, ResponseHandle, ServeEngine, ServeStats};
+pub use packed_model::{reference_forward, PackedModel};

@@ -1,0 +1,718 @@
+//! The surrogate transformer running natively on prepacked quantized
+//! weights.
+//!
+//! [`PackedModel::build`] prepacks every linear weight **once** under a
+//! per-layer quantization assignment; `forward()` quantizes activations
+//! per batch and multiplies in the packed code domain. The forward math
+//! mirrors `python/compile/model.py` exactly (embed + learned pos,
+//! pre-LN blocks, full-precision attention and head per paper App. A,
+//! per-tensor γ gains folded around every quantized linear).
+//!
+//! # Execution paths (decided per layer at build time)
+//!
+//! * **Packed** — minifloat elements, activations quantized, no eq. 11
+//!   per-tensor scaling, contraction dim block-aligned: activations
+//!   encode to a [`GemmOperand`] per batch and multiply through
+//!   [`PackedGemm`] against the cached weight operand. Bit-identical to
+//!   the reference path by the engine's exactness contract (DESIGN.md
+//!   §8) — which the serve property suite re-pins end to end.
+//! * **Reference** — INT elements, per-tensor "-S" scaling, or
+//!   weight-only quantization: the prepacked weights are the scalar
+//!   fake-quant of the transposed tensor, and the GEMM is the f32
+//!   [`matmul_t`] reference.
+//! * **Exact** — quantization off for this layer (`bf16-exact`):
+//!   plain f32 GEMM on stored transposed weights.
+//!
+//! Set `MICROSCALE_SERVE=reference` to force every layer onto the
+//! reference path when bisecting a discrepancy.
+//!
+//! # Batching invariance
+//!
+//! A request's logits never depend on its co-batched neighbors: token
+//! embedding, LN, GELU and the residual stream are per-position;
+//! attention and softmax are per-sequence; GEMM outputs are per-row
+//! with a fixed accumulation order; block quantization of activations
+//! is per-row (blocks never span rows in the [`GemmOperand`] layout);
+//! and the one batch-global statistic in the system — the eq. 11
+//! per-tensor absmax — is deliberately computed per *sequence*
+//! ([`quantize_acts_by_sequence`]). `rust/tests/serve.rs` pins the
+//! guarantee by re-batching the same request among different neighbors.
+
+use std::sync::Arc;
+
+use anyhow::ensure;
+
+use crate::formats::ElemFormat;
+use crate::model::weights::Params;
+use crate::quant::gemm::{GemmOperand, PackedGemm};
+use crate::quant::matmul::{matmul_t, transpose};
+use crate::quant::{QuantKernel, QuantScheme, ScalarKernel};
+use crate::runtime::artifacts::ModelDims;
+use crate::runtime::qconfig::{PerLayerQConfig, QConfig};
+
+use super::cache::OperandCache;
+
+/// How one linear layer executes at serve time.
+enum LinearPath {
+    /// Quantization off: plain f32 GEMM on stored transposed weights.
+    Exact { wt: Vec<f32> },
+    /// Code-domain path: prepacked weight operand (shared through the
+    /// [`OperandCache`]), activations quantized per batch.
+    Packed { op: Arc<GemmOperand> },
+    /// Scalar fake-quant fallback: prepacked fake-quantized transposed
+    /// weights + f32 reference GEMM.
+    Reference { wt_q: Vec<f32> },
+}
+
+/// One prepacked linear (`y = x @ w`, weights stored transposed).
+struct Linear {
+    path: LinearPath,
+    cfg: QConfig,
+    /// `Some` whenever quantization is on for this layer.
+    scheme: Option<QuantScheme>,
+    k: usize,
+    n: usize,
+}
+
+impl Linear {
+    fn build(
+        cfg: &QConfig,
+        block_size: usize,
+        w: &[f32],
+        k: usize,
+        n: usize,
+        cache: &OperandCache,
+    ) -> crate::Result<Linear> {
+        if !cfg.quant_on {
+            return Ok(Linear {
+                path: LinearPath::Exact { wt: transpose(w, k, n) },
+                cfg: *cfg,
+                scheme: None,
+                k,
+                n,
+            });
+        }
+        let scheme = cfg.scheme(block_size);
+        let forced_ref =
+            std::env::var("MICROSCALE_SERVE").as_deref() == Ok("reference");
+        // the packed engine is used only where it is provably
+        // bit-identical to the reference (minifloat elements, no eq. 11
+        // pre-scaling, both operands quantized, aligned contraction)
+        let packed_ok = !forced_ref
+            && cfg.act_quant
+            && !scheme.per_tensor
+            && matches!(scheme.elem, ElemFormat::Fp(_))
+            && k % scheme.block_size == 0;
+        let path = if packed_ok {
+            LinearPath::Packed {
+                op: cache.get_or_pack_transposed(&scheme, w, k, n)?,
+            }
+        } else {
+            LinearPath::Reference {
+                wt_q: ScalarKernel.fake_quant(&scheme, &transpose(w, k, n)),
+            }
+        };
+        Ok(Linear { path, cfg: *cfg, scheme: Some(scheme), k, n })
+    }
+
+    /// `x` is row-major `rows × k` (rows = batch·seq); returns
+    /// `rows × n`. `seq` bounds the per-sequence quantization chunks.
+    fn apply(
+        &self,
+        x: &[f32],
+        rows: usize,
+        seq: usize,
+        gemm: &PackedGemm,
+    ) -> crate::Result<Vec<f32>> {
+        debug_assert_eq!(x.len(), rows * self.k);
+        match &self.path {
+            LinearPath::Exact { wt } => {
+                Ok(matmul_t(x, wt, rows, self.k, self.n))
+            }
+            LinearPath::Packed { op } => {
+                let scheme = self.scheme.as_ref().unwrap();
+                let xo = GemmOperand::quantize(scheme, x, rows, self.k)?;
+                gemm.matmul(&xo, op)
+            }
+            LinearPath::Reference { wt_q } => {
+                let scheme = self.scheme.as_ref().unwrap();
+                if self.cfg.act_quant {
+                    let xq = quantize_acts_by_sequence(
+                        scheme, x, rows, seq, self.k,
+                    );
+                    Ok(matmul_t(&xq, wt_q, rows, self.k, self.n))
+                } else {
+                    Ok(matmul_t(x, wt_q, rows, self.k, self.n))
+                }
+            }
+        }
+    }
+}
+
+/// Counts of layers on each execution path (build diagnostics).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PathSummary {
+    pub exact: usize,
+    pub packed: usize,
+    pub reference: usize,
+}
+
+/// The prepacked surrogate transformer (see module docs).
+pub struct PackedModel {
+    dims: ModelDims,
+    qcfg: PerLayerQConfig,
+    block_size: usize,
+    gemm: PackedGemm,
+    embed: Vec<f32>,
+    pos: Vec<f32>,
+    ln1_g: Vec<f32>,
+    ln1_b: Vec<f32>,
+    ln2_g: Vec<f32>,
+    ln2_b: Vec<f32>,
+    lnf_g: Vec<f32>,
+    lnf_b: Vec<f32>,
+    gains: Vec<f32>,
+    /// Transposed unquantized head, `(vocab, d_model)` (paper App. A).
+    head_t: Vec<f32>,
+    /// `n_layers × 6` linears in [`Params::QUANTIZED`] order.
+    linears: Vec<Linear>,
+}
+
+/// Contraction/output dims of quantized linear `which`
+/// ([`Params::QUANTIZED`] order: wq wk wv wo w1 w2).
+fn linear_dims(dims: &ModelDims, which: usize) -> (usize, usize) {
+    let (d, f) = (dims.d_model, dims.d_ff);
+    match which {
+        4 => (d, f), // w1
+        5 => (f, d), // w2
+        _ => (d, d), // wq wk wv wo
+    }
+}
+
+impl PackedModel {
+    /// Prepack `params` under the per-layer config. Every linear weight
+    /// encodes exactly once; packed operands are shared through `cache`,
+    /// so sessions over the same (tensor, qconfig) pairs reuse one
+    /// encode.
+    pub fn build(
+        dims: &ModelDims,
+        params: &Params,
+        qcfg: &PerLayerQConfig,
+        block_size: usize,
+        cache: &OperandCache,
+    ) -> crate::Result<PackedModel> {
+        ensure!(block_size > 0, "block size must be positive");
+        ensure!(
+            dims.n_heads > 0 && dims.d_model % dims.n_heads == 0,
+            "d_model {} not divisible by n_heads {}",
+            dims.d_model,
+            dims.n_heads
+        );
+        ensure!(
+            dims.d_model % block_size == 0 && dims.d_ff % block_size == 0,
+            "block size {block_size} must divide d_model {} and d_ff {}",
+            dims.d_model,
+            dims.d_ff
+        );
+        let (l, d, f, v, s) =
+            (dims.n_layers, dims.d_model, dims.d_ff, dims.vocab, dims.seq_len);
+        let get = |name: &str, want: usize| -> crate::Result<Vec<f32>> {
+            let (_, data) = params.get(name)?;
+            ensure!(
+                data.len() == want,
+                "tensor {name}: {} elements, want {want}",
+                data.len()
+            );
+            Ok(data.to_vec())
+        };
+        let head = get("head", d * v)?;
+        let mut linears = Vec::with_capacity(l * 6);
+        for layer in 0..l {
+            let cfg = qcfg.layer(layer);
+            for (which, name) in Params::QUANTIZED.iter().enumerate() {
+                let (kd, nd) = linear_dims(dims, which);
+                let (_, data) = params.get(name)?;
+                let per = kd * nd;
+                ensure!(
+                    data.len() == l * per,
+                    "tensor {name}: {} elements, want {l}x{per}",
+                    data.len()
+                );
+                let w = &data[layer * per..(layer + 1) * per];
+                linears.push(Linear::build(
+                    &cfg, block_size, w, kd, nd, cache,
+                )?);
+            }
+        }
+        Ok(PackedModel {
+            dims: *dims,
+            qcfg: qcfg.clone(),
+            block_size,
+            gemm: PackedGemm::auto(),
+            embed: get("embed", v * d)?,
+            pos: get("pos", s * d)?,
+            ln1_g: get("ln1_g", l * d)?,
+            ln1_b: get("ln1_b", l * d)?,
+            ln2_g: get("ln2_g", l * d)?,
+            ln2_b: get("ln2_b", l * d)?,
+            lnf_g: get("lnf_g", d)?,
+            lnf_b: get("lnf_b", d)?,
+            gains: get("gains", l * 6)?,
+            head_t: transpose(&head, d, v),
+            linears,
+        })
+    }
+
+    /// Override the GEMM engine configuration (benches pin
+    /// [`PackedGemm::serial`] for the single-thread baseline).
+    pub fn with_gemm(mut self, gemm: PackedGemm) -> PackedModel {
+        self.gemm = gemm;
+        self
+    }
+
+    pub fn dims(&self) -> &ModelDims {
+        &self.dims
+    }
+
+    pub fn qcfg(&self) -> &PerLayerQConfig {
+        &self.qcfg
+    }
+
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    /// How many linears landed on each execution path.
+    pub fn path_summary(&self) -> PathSummary {
+        let mut s = PathSummary::default();
+        for lin in &self.linears {
+            match lin.path {
+                LinearPath::Exact { .. } => s.exact += 1,
+                LinearPath::Packed { .. } => s.packed += 1,
+                LinearPath::Reference { .. } => s.reference += 1,
+            }
+        }
+        s
+    }
+
+    /// Total prepacked wire bytes across the packed-path weights.
+    pub fn packed_weight_bytes(&self) -> usize {
+        self.linears
+            .iter()
+            .map(|lin| match &lin.path {
+                LinearPath::Packed { op } => op.payload_bytes(),
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Logits (`batch · seq · vocab`, row-major) for `batch` sequences
+    /// of `seq` tokens each (`tokens.len() == batch · seq`,
+    /// `1 <= seq <= dims.seq_len`).
+    pub fn forward(
+        &self,
+        tokens: &[i32],
+        batch: usize,
+        seq: usize,
+    ) -> crate::Result<Vec<f32>> {
+        let ctx = self.ctx();
+        forward_core(&ctx, tokens, batch, seq, |layer, which, x, rows| {
+            self.linears[layer * 6 + which].apply(x, rows, seq, &self.gemm)
+        })
+    }
+
+    fn ctx(&self) -> Ctx<'_> {
+        Ctx {
+            dims: &self.dims,
+            embed: &self.embed,
+            pos: &self.pos,
+            ln1_g: &self.ln1_g,
+            ln1_b: &self.ln1_b,
+            ln2_g: &self.ln2_g,
+            ln2_b: &self.ln2_b,
+            lnf_g: &self.lnf_g,
+            lnf_b: &self.lnf_b,
+            gains: &self.gains,
+            head_t: &self.head_t,
+        }
+    }
+}
+
+/// The non-GEMM tensors a forward pass reads — shared verbatim between
+/// [`PackedModel::forward`] and [`reference_forward`] so bit-exactness
+/// of the whole pass reduces to bit-exactness of the linears.
+struct Ctx<'a> {
+    dims: &'a ModelDims,
+    embed: &'a [f32],
+    pos: &'a [f32],
+    ln1_g: &'a [f32],
+    ln1_b: &'a [f32],
+    ln2_g: &'a [f32],
+    ln2_b: &'a [f32],
+    lnf_g: &'a [f32],
+    lnf_b: &'a [f32],
+    gains: &'a [f32],
+    head_t: &'a [f32],
+}
+
+/// The scalar fake-quant reference forward: identical math to
+/// [`PackedModel::forward`] with every linear on the
+/// [`ScalarKernel`]-quantized f32 path, recomputed from raw `params` on
+/// each call (no prepacking, no packed engine anywhere). The serve test
+/// suite pins the packed model bit-identical to this.
+pub fn reference_forward(
+    params: &Params,
+    dims: &ModelDims,
+    qcfg: &PerLayerQConfig,
+    block_size: usize,
+    tokens: &[i32],
+    batch: usize,
+    seq: usize,
+) -> crate::Result<Vec<f32>> {
+    let (d, v) = (dims.d_model, dims.vocab);
+    let head_t = transpose(params.get("head")?.1, d, v);
+    let ctx = Ctx {
+        dims,
+        embed: params.get("embed")?.1,
+        pos: params.get("pos")?.1,
+        ln1_g: params.get("ln1_g")?.1,
+        ln1_b: params.get("ln1_b")?.1,
+        ln2_g: params.get("ln2_g")?.1,
+        ln2_b: params.get("ln2_b")?.1,
+        lnf_g: params.get("lnf_g")?.1,
+        lnf_b: params.get("lnf_b")?.1,
+        gains: params.get("gains")?.1,
+        head_t: &head_t,
+    };
+    forward_core(&ctx, tokens, batch, seq, |layer, which, x, rows| {
+        let cfg = qcfg.layer(layer);
+        let (kd, nd) = linear_dims(dims, which);
+        let data = params.get(Params::QUANTIZED[which])?.1;
+        let w = &data[layer * kd * nd..(layer + 1) * kd * nd];
+        let wt = transpose(w, kd, nd);
+        if !cfg.quant_on {
+            return Ok(matmul_t(x, &wt, rows, kd, nd));
+        }
+        let scheme = cfg.scheme(block_size);
+        let wt_q = ScalarKernel.fake_quant(&scheme, &wt);
+        if cfg.act_quant {
+            let xq = quantize_acts_by_sequence(&scheme, x, rows, seq, kd);
+            Ok(matmul_t(&xq, &wt_q, rows, kd, nd))
+        } else {
+            Ok(matmul_t(x, &wt_q, rows, kd, nd))
+        }
+    })
+}
+
+/// Fake-quantize a `rows × k` activation matrix one sequence at a time
+/// (`seq` rows per chunk). For per-tensor "-S" schemes the eq. 11
+/// absmax then spans a single request, never its co-batched neighbors —
+/// the batching-invariance guarantee. For plain block schemes
+/// (`k % bs == 0`, blocks within rows) chunking changes nothing.
+fn quantize_acts_by_sequence(
+    scheme: &QuantScheme,
+    x: &[f32],
+    rows: usize,
+    seq: usize,
+    k: usize,
+) -> Vec<f32> {
+    debug_assert_eq!(x.len(), rows * k);
+    debug_assert_eq!(rows % seq.max(1), 0);
+    let mut out = x.to_vec();
+    for chunk in out.chunks_mut(seq.max(1) * k) {
+        crate::quant::fake_quant_into(scheme, chunk);
+    }
+    out
+}
+
+/// The shared forward skeleton: everything except the quantized linears,
+/// which are injected as `linear(layer, which, x, rows) -> rows × n`.
+fn forward_core<L>(
+    ctx: &Ctx,
+    tokens: &[i32],
+    batch: usize,
+    seq: usize,
+    mut linear: L,
+) -> crate::Result<Vec<f32>>
+where
+    L: FnMut(usize, usize, &[f32], usize) -> crate::Result<Vec<f32>>,
+{
+    let dims = ctx.dims;
+    let (d, v, nh) = (dims.d_model, dims.vocab, dims.n_heads);
+    let hd = d / nh;
+    ensure!(batch > 0, "empty batch");
+    ensure!(
+        seq >= 1 && seq <= dims.seq_len,
+        "sequence length {seq} out of range 1..={}",
+        dims.seq_len
+    );
+    ensure!(
+        tokens.len() == batch * seq,
+        "token count {} != batch {batch} x seq {seq}",
+        tokens.len()
+    );
+    for &t in tokens {
+        ensure!(
+            t >= 0 && (t as usize) < v,
+            "token {t} out of vocab range 0..{v}"
+        );
+    }
+    let rows = batch * seq;
+
+    // x = embed[tokens] + pos[:seq]
+    let mut x = vec![0.0f32; rows * d];
+    for r in 0..rows {
+        let tok = tokens[r] as usize;
+        let p = r % seq;
+        let e = &ctx.embed[tok * d..(tok + 1) * d];
+        let pp = &ctx.pos[p * d..(p + 1) * d];
+        let xr = &mut x[r * d..(r + 1) * d];
+        for c in 0..d {
+            xr[c] = e[c] + pp[c];
+        }
+    }
+
+    let att_scale = 1.0 / (hd as f32).sqrt();
+    let mut att = vec![0.0f32; seq];
+    for layer in 0..dims.n_layers {
+        let g = &ctx.gains[layer * 6..(layer + 1) * 6];
+        let h1 = layer_norm(
+            &x,
+            &ctx.ln1_g[layer * d..(layer + 1) * d],
+            &ctx.ln1_b[layer * d..(layer + 1) * d],
+            d,
+        );
+        let q = scaled(linear(layer, 0, &h1, rows)?, g[0]);
+        let ky = scaled(linear(layer, 1, &h1, rows)?, g[1]);
+        let vv = scaled(linear(layer, 2, &h1, rows)?, g[2]);
+
+        // causal attention, full precision (paper App. A)
+        let mut o = vec![0.0f32; rows * d];
+        for b in 0..batch {
+            for head in 0..nh {
+                let c0 = head * hd;
+                for i in 0..seq {
+                    let qi = (b * seq + i) * d + c0;
+                    let mut maxv = f32::NEG_INFINITY;
+                    for j in 0..=i {
+                        let kj = (b * seq + j) * d + c0;
+                        let mut dot = 0.0f32;
+                        for t in 0..hd {
+                            dot += q[qi + t] * ky[kj + t];
+                        }
+                        let sc = dot * att_scale;
+                        att[j] = sc;
+                        if sc > maxv {
+                            maxv = sc;
+                        }
+                    }
+                    let mut denom = 0.0f32;
+                    for a in att.iter_mut().take(i + 1) {
+                        let e = (*a - maxv).exp();
+                        *a = e;
+                        denom += e;
+                    }
+                    for a in att.iter_mut().take(i + 1) {
+                        *a /= denom;
+                    }
+                    let oi = (b * seq + i) * d + c0;
+                    for t in 0..hd {
+                        let mut acc = 0.0f32;
+                        for j in 0..=i {
+                            acc += att[j] * vv[(b * seq + j) * d + c0 + t];
+                        }
+                        o[oi + t] = acc;
+                    }
+                }
+            }
+        }
+
+        let proj = scaled(linear(layer, 3, &o, rows)?, g[3]);
+        add_into(&mut x, &proj);
+
+        let h2 = layer_norm(
+            &x,
+            &ctx.ln2_g[layer * d..(layer + 1) * d],
+            &ctx.ln2_b[layer * d..(layer + 1) * d],
+            d,
+        );
+        let mut mid = scaled(linear(layer, 4, &h2, rows)?, g[4]);
+        for m in mid.iter_mut() {
+            *m = gelu(*m);
+        }
+        let proj2 = scaled(linear(layer, 5, &mid, rows)?, g[5]);
+        add_into(&mut x, &proj2);
+    }
+
+    let xf = layer_norm(&x, ctx.lnf_g, ctx.lnf_b, d);
+    // the model head is NOT quantized (paper App. A)
+    Ok(matmul_t(&xf, ctx.head_t, rows, d, v))
+}
+
+fn layer_norm(x: &[f32], g: &[f32], b: &[f32], d: usize) -> Vec<f32> {
+    let rows = x.len() / d;
+    let mut out = vec![0.0f32; x.len()];
+    for r in 0..rows {
+        let xr = &x[r * d..(r + 1) * d];
+        let mut mu = 0.0f32;
+        for &v in xr {
+            mu += v;
+        }
+        mu /= d as f32;
+        let mut var = 0.0f32;
+        for &v in xr {
+            let dv = v - mu;
+            var += dv * dv;
+        }
+        var /= d as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        let or = &mut out[r * d..(r + 1) * d];
+        for c in 0..d {
+            or[c] = (xr[c] - mu) * inv * g[c] + b[c];
+        }
+    }
+    out
+}
+
+/// tanh-approximation GELU (the `jax.nn.gelu` default).
+fn gelu(x: f32) -> f32 {
+    const C: f32 = 0.797_884_6; // sqrt(2/pi)
+    0.5 * x * (1.0 + (C * (x + 0.044715 * x * x * x)).tanh())
+}
+
+fn scaled(mut y: Vec<f32>, gain: f32) -> Vec<f32> {
+    if gain != 1.0 {
+        for v in y.iter_mut() {
+            *v *= gain;
+        }
+    }
+    y
+}
+
+fn add_into(x: &mut [f32], y: &[f32]) {
+    for (a, b) in x.iter_mut().zip(y) {
+        *a += *b;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Pcg64;
+    use crate::serve::cache::OperandCache;
+
+    fn tiny_dims() -> ModelDims {
+        ModelDims {
+            vocab: 32,
+            d_model: 32,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 64,
+            seq_len: 8,
+        }
+    }
+
+    fn tokens(rng: &mut Pcg64, dims: &ModelDims, rows: usize) -> Vec<i32> {
+        (0..rows)
+            .map(|_| (rng.next_u64() % dims.vocab as u64) as i32)
+            .collect()
+    }
+
+    #[test]
+    fn packed_forward_matches_reference_smoke() {
+        let dims = tiny_dims();
+        let params = Params::init_surrogate(&dims, 11);
+        let cache = OperandCache::new(32);
+        let qcfg = PerLayerQConfig::uniform(QConfig::fp4("ue4m3").unwrap());
+        let model =
+            PackedModel::build(&dims, &params, &qcfg, 8, &cache).unwrap();
+        assert_eq!(model.path_summary().packed, 2 * 6);
+        assert!(model.packed_weight_bytes() > 0);
+        let mut rng = Pcg64::new(12);
+        let toks = tokens(&mut rng, &dims, 2 * dims.seq_len);
+        let got = model.forward(&toks, 2, dims.seq_len).unwrap();
+        let want = reference_forward(
+            &params,
+            &dims,
+            &qcfg,
+            8,
+            &toks,
+            2,
+            dims.seq_len,
+        )
+        .unwrap();
+        assert_eq!(got.len(), 2 * dims.seq_len * dims.vocab);
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "logit {i}: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn baseline_config_bypasses_quantization() {
+        let dims = tiny_dims();
+        let params = Params::init_surrogate(&dims, 13);
+        let cache = OperandCache::new(8);
+        let qcfg = PerLayerQConfig::uniform(QConfig::baseline());
+        let model =
+            PackedModel::build(&dims, &params, &qcfg, 8, &cache).unwrap();
+        let s = model.path_summary();
+        assert_eq!((s.exact, s.packed, s.reference), (12, 0, 0));
+        // no operands were packed for exact layers
+        assert_eq!(cache.stats().misses, 0);
+    }
+
+    #[test]
+    fn mixed_layers_take_their_own_paths() {
+        let dims = tiny_dims();
+        let params = Params::init_surrogate(&dims, 14);
+        let cache = OperandCache::new(32);
+        let qcfg = PerLayerQConfig::uniform(QConfig::fp4("ue5m3").unwrap())
+            .with_override(
+                1,
+                QConfig::named("int4", "ue4m3", false).unwrap(),
+            );
+        let model =
+            PackedModel::build(&dims, &params, &qcfg, 8, &cache).unwrap();
+        let s = model.path_summary();
+        // layer 0: packed FP4; layer 1: INT4 -> reference
+        assert_eq!((s.exact, s.packed, s.reference), (0, 6, 6));
+        let mut rng = Pcg64::new(15);
+        let toks = tokens(&mut rng, &dims, dims.seq_len);
+        let got = model.forward(&toks, 1, dims.seq_len).unwrap();
+        let want = reference_forward(
+            &params,
+            &dims,
+            &qcfg,
+            8,
+            &toks,
+            1,
+            dims.seq_len,
+        )
+        .unwrap();
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn forward_validates_inputs() {
+        let dims = tiny_dims();
+        let params = Params::init_surrogate(&dims, 16);
+        let cache = OperandCache::new(8);
+        let qcfg = PerLayerQConfig::uniform(QConfig::fp4("ue4m3").unwrap());
+        let model =
+            PackedModel::build(&dims, &params, &qcfg, 8, &cache).unwrap();
+        // token out of range
+        assert!(model.forward(&[99; 8], 1, 8).is_err());
+        // wrong token count
+        assert!(model.forward(&[0; 7], 1, 8).is_err());
+        // seq too long
+        assert!(model.forward(&[0; 16], 1, 16).is_err());
+        // short sequences are fine
+        assert!(model.forward(&[0; 4], 1, 4).is_ok());
+        // misaligned block size refused at build
+        assert!(
+            PackedModel::build(&dims, &params, &qcfg, 24, &cache).is_err()
+        );
+    }
+}

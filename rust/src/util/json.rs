@@ -157,6 +157,11 @@ pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
     Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
 }
 
+/// [`obj`] with owned keys (dynamic labels, e.g. per-config bench maps).
+pub fn obj_owned(pairs: Vec<(String, Json)>) -> Json {
+    Json::Obj(pairs.into_iter().collect())
+}
+
 pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
     Json::Arr(items.into_iter().collect())
 }

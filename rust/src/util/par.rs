@@ -27,16 +27,35 @@ thread_local! {
     static IN_POOL_WORKER: Cell<bool> = const { Cell::new(false) };
 }
 
-/// Mark the current thread as a coordinator-pool worker. Inner
-/// data-parallel helpers ([`crate::quant::kernel::ChunkedKernel`])
-/// check [`on_worker_thread`] and stay serial, so N pool workers don't
-/// each fan out N kernel threads (ncpus² oversubscription).
-pub fn mark_worker_thread() {
-    IN_POOL_WORKER.with(|f| f.set(true));
+/// RAII marker: flags the current thread as a pool worker for the
+/// guard's lifetime and restores the previous flag on drop. Inner
+/// data-parallel helpers ([`crate::quant::kernel::ChunkedKernel`], the
+/// packed GEMM) check [`on_worker_thread`] and stay serial, so N pool
+/// workers don't each fan out N kernel threads (ncpus²
+/// oversubscription); drop-restore means a thread that only
+/// *sometimes* hosts nested data-parallel work (a serve-engine worker,
+/// a test harness thread) unwinds cleanly. Shared by the coordinator
+/// pool ([`crate::coordinator::pool`]) and the serve engine
+/// ([`crate::serve::engine`]).
+pub struct WorkerGuard {
+    prev: bool,
 }
 
-/// Whether this thread is a coordinator-pool worker (see
-/// [`mark_worker_thread`]).
+impl WorkerGuard {
+    pub fn enter() -> WorkerGuard {
+        let prev = IN_POOL_WORKER.with(|f| f.replace(true));
+        WorkerGuard { prev }
+    }
+}
+
+impl Drop for WorkerGuard {
+    fn drop(&mut self) {
+        let prev = self.prev;
+        IN_POOL_WORKER.with(|f| f.set(prev));
+    }
+}
+
+/// Whether this thread is a marked pool worker (see [`WorkerGuard`]).
 pub fn on_worker_thread() -> bool {
     IN_POOL_WORKER.with(|f| f.get())
 }
@@ -162,11 +181,27 @@ mod tests {
     }
 
     #[test]
+    fn worker_guard_restores_previous_flag() {
+        assert!(!on_worker_thread());
+        {
+            let _g = WorkerGuard::enter();
+            assert!(on_worker_thread());
+            {
+                let _g2 = WorkerGuard::enter(); // nesting is idempotent
+                assert!(on_worker_thread());
+            }
+            // inner drop restores the (still-marked) outer state
+            assert!(on_worker_thread());
+        }
+        assert!(!on_worker_thread());
+    }
+
+    #[test]
     fn worker_thread_flag_is_per_thread() {
         assert!(!on_worker_thread());
         std::thread::scope(|s| {
             s.spawn(|| {
-                mark_worker_thread();
+                let _g = WorkerGuard::enter();
                 assert!(on_worker_thread());
             });
         });

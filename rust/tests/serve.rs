@@ -1,0 +1,305 @@
+//! Serve subsystem acceptance suite (ISSUE-3).
+//!
+//! Pins the four load-bearing guarantees of the packed-domain serving
+//! path:
+//!
+//! 1. **Forward equivalence** — `PackedModel::forward` is bit-identical
+//!    to the scalar fake-quant reference forward over
+//!    {FP4, FP8} × {UE4M3, UE5M3} × block sizes {8, 32}, plus mixed
+//!    per-layer and reference-path (INT4 / per-tensor / weight-only)
+//!    configs.
+//! 2. **Batching invariance** — a request's logits do not depend on its
+//!    co-batched neighbors, including under per-tensor "-S" activation
+//!    scaling (the one batch-global statistic, applied per sequence).
+//! 3. **Engine determinism** — the same request set produces identical
+//!    logits for any worker count and batch policy.
+//! 4. **Operand-cache correctness** — cache hits return the operand the
+//!    first encode produced (bit-identical, same allocation), and
+//!    `quantized_matmul` reuses cached weight operands across calls.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use microscale::dist::Pcg64;
+use microscale::formats::{ElemFormat, UE5M3};
+use microscale::model::Params;
+use microscale::quant::gemm::{GemmOperand, PackedGemm};
+use microscale::quant::matmul::{quantized_matmul, quantized_matmul_with};
+use microscale::quant::{QuantScheme, ScalarKernel};
+use microscale::runtime::artifacts::ModelDims;
+use microscale::runtime::qconfig::{PerLayerQConfig, QConfig};
+use microscale::serve::batcher::BatcherConfig;
+use microscale::serve::cache::{operand_cache, OperandCache};
+use microscale::serve::engine::{EngineConfig, ServeEngine};
+use microscale::serve::packed_model::{reference_forward, PackedModel};
+
+fn dims() -> ModelDims {
+    ModelDims {
+        vocab: 32,
+        d_model: 32,
+        n_heads: 2,
+        n_layers: 3,
+        d_ff: 64,
+        seq_len: 8,
+    }
+}
+
+fn tokens(rng: &mut Pcg64, d: &ModelDims, count: usize) -> Vec<i32> {
+    (0..count).map(|_| (rng.next_u64() % d.vocab as u64) as i32).collect()
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i} {x} vs {y}");
+    }
+}
+
+#[test]
+fn packed_forward_equals_reference_across_format_grid() {
+    let d = dims();
+    let params = Params::init_surrogate(&d, 7);
+    let cache = OperandCache::new(256);
+    let mut rng = Pcg64::new(40);
+    for elem in ["fp4_e2m1", "fp8_e4m3"] {
+        for scale in ["ue4m3", "ue5m3"] {
+            for bs in [8usize, 32] {
+                let qcfg = PerLayerQConfig::uniform(
+                    QConfig::named(elem, scale, false).unwrap(),
+                );
+                let model =
+                    PackedModel::build(&d, &params, &qcfg, bs, &cache)
+                        .unwrap();
+                // every linear must actually be on the packed path
+                assert_eq!(
+                    model.path_summary().packed,
+                    d.n_layers * 6,
+                    "{elem}/{scale}/bs{bs}"
+                );
+                for batch in [1usize, 3] {
+                    let toks = tokens(&mut rng, &d, batch * d.seq_len);
+                    let got = model.forward(&toks, batch, d.seq_len).unwrap();
+                    let want = reference_forward(
+                        &params, &d, &qcfg, bs, &toks, batch, d.seq_len,
+                    )
+                    .unwrap();
+                    assert_bits_eq(
+                        &got,
+                        &want,
+                        &format!("{elem}/{scale}/bs{bs}/b{batch}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn mixed_and_fallback_configs_stay_pinned_to_reference() {
+    let d = dims();
+    let params = Params::init_surrogate(&d, 8);
+    let cache = OperandCache::new(256);
+    let mut rng = Pcg64::new(41);
+    let mut wonly = QConfig::fp4("ue4m3").unwrap();
+    wonly.act_quant = false;
+    let configs = [
+        // mixed per-layer: FP8 head/tail layers, exact middle
+        PerLayerQConfig::uniform(QConfig::fp4("ue5m3").unwrap())
+            .with_override(0, QConfig::named("fp8_e4m3", "ue5m3", false).unwrap())
+            .with_override(1, QConfig::baseline()),
+        // INT4 elements: reference path
+        PerLayerQConfig::uniform(QConfig::named("int4", "ue4m3", false).unwrap()),
+        // per-tensor eq. 11: reference path
+        PerLayerQConfig::uniform(
+            QConfig::named("fp4_e2m1", "ue4m3", true).unwrap(),
+        ),
+        // weight-only quantization: reference path
+        PerLayerQConfig::uniform(wonly),
+    ];
+    for qcfg in configs {
+        let model = PackedModel::build(&d, &params, &qcfg, 8, &cache).unwrap();
+        let toks = tokens(&mut rng, &d, 2 * d.seq_len);
+        let got = model.forward(&toks, 2, d.seq_len).unwrap();
+        let want =
+            reference_forward(&params, &d, &qcfg, 8, &toks, 2, d.seq_len)
+                .unwrap();
+        assert_bits_eq(&got, &want, &qcfg.id());
+    }
+}
+
+#[test]
+fn logits_do_not_depend_on_co_batched_neighbors() {
+    let d = dims();
+    let params = Params::init_surrogate(&d, 9);
+    let cache = OperandCache::new(256);
+    let mut rng = Pcg64::new(42);
+    let sv = d.seq_len * d.vocab;
+    // the per-tensor "-S" config is the adversarial case: its eq. 11
+    // absmax is the one batch-global statistic in the forward pass
+    let configs = [
+        PerLayerQConfig::uniform(QConfig::fp4("ue4m3").unwrap()),
+        PerLayerQConfig::uniform(
+            QConfig::named("fp4_e2m1", "ue4m3", true).unwrap(),
+        ),
+    ];
+    for qcfg in configs {
+        let model = PackedModel::build(&d, &params, &qcfg, 8, &cache).unwrap();
+        let r0 = tokens(&mut rng, &d, d.seq_len);
+        let r1 = tokens(&mut rng, &d, d.seq_len);
+        let r2 = tokens(&mut rng, &d, d.seq_len);
+        let solo = model.forward(&r0, 1, d.seq_len).unwrap();
+
+        let mut pair = r0.clone();
+        pair.extend_from_slice(&r1);
+        let out = model.forward(&pair, 2, d.seq_len).unwrap();
+        assert_bits_eq(&out[..sv], &solo, &format!("{} head-of-2", qcfg.id()));
+
+        let mut trio = r2.clone();
+        trio.extend_from_slice(&r0);
+        trio.extend_from_slice(&r1);
+        let out = model.forward(&trio, 3, d.seq_len).unwrap();
+        assert_bits_eq(
+            &out[sv..2 * sv],
+            &solo,
+            &format!("{} middle-of-3", qcfg.id()),
+        );
+    }
+}
+
+#[test]
+fn engine_is_deterministic_across_worker_counts() {
+    let d = dims();
+    let params = Params::init_surrogate(&d, 10);
+    let cache = OperandCache::new(256);
+    let qcfg = PerLayerQConfig::uniform(QConfig::fp4("ue5m3").unwrap());
+    let model =
+        Arc::new(PackedModel::build(&d, &params, &qcfg, 8, &cache).unwrap());
+    let mut rng = Pcg64::new(43);
+    let reqs: Vec<Vec<i32>> =
+        (0..9).map(|_| tokens(&mut rng, &d, d.seq_len)).collect();
+    let run = |workers: usize, max_batch: usize| -> Vec<Vec<f32>> {
+        let engine = ServeEngine::start(
+            model.clone(),
+            EngineConfig {
+                workers,
+                batcher: BatcherConfig {
+                    max_batch,
+                    max_wait: Duration::from_millis(1),
+                },
+            },
+        )
+        .unwrap();
+        let handles: Vec<_> = reqs
+            .iter()
+            .map(|r| engine.submit(r.clone()).unwrap())
+            .collect();
+        let out: Vec<Vec<f32>> =
+            handles.into_iter().map(|h| h.wait().unwrap()).collect();
+        let stats = engine.shutdown();
+        assert_eq!(stats.requests, reqs.len() as u64);
+        assert_eq!(stats.errors, 0);
+        assert!(stats.mean_batch >= 1.0);
+        assert!(stats.p50_ms <= stats.p99_ms);
+        out
+    };
+    let base = run(1, 4);
+    for (workers, max_batch) in [(2usize, 4usize), (3, 2), (2, 9)] {
+        let got = run(workers, max_batch);
+        for (i, (a, b)) in base.iter().zip(&got).enumerate() {
+            assert_bits_eq(
+                a,
+                b,
+                &format!("request {i} (workers {workers}, bs {max_batch})"),
+            );
+        }
+    }
+}
+
+#[test]
+fn engine_serves_mixed_length_requests() {
+    let d = dims();
+    let params = Params::init_surrogate(&d, 11);
+    let cache = OperandCache::new(256);
+    let qcfg = PerLayerQConfig::uniform(QConfig::fp4("ue4m3").unwrap());
+    let model =
+        Arc::new(PackedModel::build(&d, &params, &qcfg, 8, &cache).unwrap());
+    let engine = ServeEngine::start(
+        model.clone(),
+        EngineConfig {
+            workers: 2,
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: Duration::from_millis(1),
+            },
+        },
+    )
+    .unwrap();
+    let mut rng = Pcg64::new(44);
+    let mut handles = Vec::new();
+    for seq in [8usize, 4, 8, 4, 8] {
+        handles.push(engine.submit(tokens(&mut rng, &d, seq)).unwrap());
+    }
+    for h in handles {
+        let seq = h.seq;
+        let logits = h.wait().unwrap();
+        assert_eq!(logits.len(), seq * d.vocab);
+    }
+    // over-long and empty sequences are refused at submit
+    assert!(engine.submit(vec![0; d.seq_len + 1]).is_err());
+    assert!(engine.submit(Vec::new()).is_err());
+    engine.shutdown();
+}
+
+#[test]
+fn operand_cache_hits_are_bit_identical_to_fresh_encodes() {
+    let cache = OperandCache::new(16);
+    let scheme = QuantScheme::new(ElemFormat::FP4, UE5M3, 8);
+    let mut rng = Pcg64::new(45);
+    let (m, k, n) = (5usize, 48, 12);
+    let w = rng.normal_vec_f32(k * n, 5e-3);
+    let x = rng.normal_vec_f32(m * k, 5e-3);
+
+    let first = cache.get_or_pack_transposed(&scheme, &w, k, n).unwrap();
+    let second = cache.get_or_pack_transposed(&scheme, &w, k, n).unwrap();
+    let stats = cache.stats();
+    assert_eq!((stats.hits, stats.misses), (1, 1));
+    // the hit IS the first encode — one allocation, zero re-encodes
+    assert!(Arc::ptr_eq(&first, &second));
+
+    // and it is bit-identical to an uncached encode, through both the
+    // payload digest and an actual multiply
+    let fresh = GemmOperand::quantize_transposed(&scheme, &w, k, n).unwrap();
+    assert_eq!(first.bits_digest(), fresh.bits_digest());
+    assert_bits_eq(&first.decode(), &fresh.decode(), "decode");
+    let xo = GemmOperand::quantize(&scheme, &x, m, k).unwrap();
+    let via_cache = PackedGemm::serial().matmul(&xo, &first).unwrap();
+    let via_fresh = PackedGemm::serial().matmul(&xo, &fresh).unwrap();
+    assert_bits_eq(&via_cache, &via_fresh, "matmul");
+}
+
+#[test]
+fn quantized_matmul_reuses_cached_weight_operands() {
+    let scheme = QuantScheme::new(ElemFormat::FP4, UE5M3, 8);
+    let mut rng = Pcg64::new(46);
+    let (m, k, n) = (4usize, 32, 6);
+    let x = rng.normal_vec_f32(m * k, 5e-3);
+    let w = rng.normal_vec_f32(k * n, 5e-3);
+
+    let before = operand_cache().stats();
+    let a = quantized_matmul(&scheme, &x, &w, m, k, n);
+    let b = quantized_matmul(&scheme, &x, &w, m, k, n);
+    let after = operand_cache().stats();
+    // second call hit the shared cache (counters are global and
+    // monotonic, so compare deltas)
+    assert!(
+        after.hits >= before.hits + 1,
+        "hits {} -> {}",
+        before.hits,
+        after.hits
+    );
+    assert_bits_eq(&a, &b, "repeat call");
+    // cached dispatch stays bit-identical to the scalar reference path
+    let want =
+        quantized_matmul_with(&ScalarKernel, &scheme, &x, &w, m, k, n);
+    assert_bits_eq(&a, &want, "vs reference");
+}
