@@ -1,11 +1,12 @@
 //! Quickstart: quantize a tensor with every scale format of the paper,
 //! see the anomaly, store it on real packed bytes, multiply it natively
 //! in the packed code domain, serve a whole transformer on prepacked
-//! weights, and (when artifacts are present) run the L1 Pallas kernel
-//! artifact through PJRT.
+//! weights, generate tokens through the KV-cached scheduler, and (when
+//! artifacts are present) run the L1 Pallas kernel artifact through
+//! PJRT.
 //!
 //! ```bash
-//! cargo run --release --example quickstart          # steps 1-5
+//! cargo run --release --example quickstart          # steps 1-6
 //! make artifacts && cargo run --release --example quickstart  # + PJRT
 //! ```
 
@@ -142,7 +143,52 @@ fn main() -> anyhow::Result<()> {
         stats.p99_ms,
     );
 
-    // 6) The same quantizer as an AOT Pallas kernel through PJRT
+    // 6) Generate: KV-cached continuous-batching decode over the same
+    //    prepacked weights (operand-cache hit — nothing re-encodes).
+    //    Every step's logits are bit-identical to re-running the full
+    //    prefix; streams replay exactly from their seeds.
+    let model = std::sync::Arc::new(microscale::serve::PackedModel::build(
+        &dims,
+        &params,
+        &qcfg,
+        16,
+        microscale::serve::operand_cache(),
+    )?);
+    let mut sched = microscale::serve::Scheduler::new(
+        microscale::serve::DecodeEngine::new(model)?,
+        microscale::serve::SchedulerConfig::default(),
+    );
+    for id in 0..4u64 {
+        let prompt: Vec<i32> = (0..4)
+            .map(|_| (rng.next_u64() % dims.vocab as u64) as i32)
+            .collect();
+        sched.submit(microscale::serve::DecodeRequest {
+            id,
+            prompt,
+            max_new_tokens: 8,
+            eos: None,
+            sampling: if id % 2 == 0 {
+                microscale::serve::Sampling::Greedy
+            } else {
+                microscale::serve::Sampling::Temperature {
+                    temp: 0.8,
+                    seed: 40 + id,
+                }
+            },
+        })?;
+    }
+    for r in sched.run()? {
+        println!(
+            "  request {}: {:?} ({:?}, ttft {:.2} ms)",
+            r.id,
+            r.tokens,
+            r.finish,
+            r.ttft.as_secs_f64() * 1e3,
+        );
+    }
+    println!("Scheduler: 4 seeded streams generated, KV-cached ✓\n");
+
+    // 7) The same quantizer as an AOT Pallas kernel through PJRT
     //    (optional: needs `make artifacts` and a native PJRT build).
     let manifest = match Manifest::load(std::path::Path::new("artifacts")) {
         Ok(m) => m,

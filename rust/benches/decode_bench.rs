@@ -1,0 +1,17 @@
+//! Generation-path benchmark: thin wrapper over the same driver that
+//! backs `microscale decode-bench` (`microscale::serve::decode_bench`),
+//! so `cargo bench --bench decode_bench` and the CLI produce identical
+//! `BENCH_decode.json` reports (field map in EXPERIMENTS.md §Perf).
+//!
+//! Pass `-- --smoke` (or set `MICROSCALE_BENCH_SMOKE=1`) for the
+//! CI-sized run on a shrunken model.
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("MICROSCALE_BENCH_SMOKE").is_ok();
+    let opts = microscale::serve::decode_bench::DecodeBenchOpts::new(smoke);
+    if let Err(e) = microscale::serve::decode_bench::run(&opts) {
+        eprintln!("decode bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -11,6 +11,7 @@
 //! microscale theory             MSE-σ theory sweep (--elem --scale --bs)
 //! microscale quantize           fake-quant an f32 binary file
 //! microscale serve-bench        packed-domain serving bench (BENCH_serve.json)
+//! microscale decode-bench       KV-cached generation bench (BENCH_decode.json)
 //! microscale selftest           quick smoke of the full stack
 //! ```
 //!
@@ -266,6 +267,35 @@ fn run() -> Result<()> {
             }
             microscale::serve::bench::run(&opts)?;
         }
+        "decode-bench" => {
+            let mut opts = microscale::serve::decode_bench::DecodeBenchOpts::new(
+                args.has("smoke"),
+            );
+            if let Some(out) = args.get("out") {
+                opts.out = PathBuf::from(out);
+            }
+            opts.prompt_len = args.get_usize("prompt", opts.prompt_len)?;
+            opts.max_new = args.get_usize("max-new", opts.max_new)?;
+            opts.rounds = args.get_usize("rounds", opts.rounds)?;
+            opts.baseline_requests = args
+                .get_usize("baseline-requests", opts.baseline_requests)?;
+            if let Some(cs) = args.get("concurrency") {
+                opts.concurrency = cs
+                    .split(',')
+                    .map(|s| {
+                        s.trim().parse::<usize>().map_err(|e| {
+                            anyhow::anyhow!("--concurrency {s:?}: {e}")
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            if let Some(q) = args.get("qconfig") {
+                let cfg = microscale::runtime::qconfig::PerLayerQConfig::parse(q)
+                    .with_context(|| format!("--qconfig {q:?}"))?;
+                opts.qconfigs = Some(vec![(q.to_string(), cfg)]);
+            }
+            microscale::serve::decode_bench::run(&opts)?;
+        }
         "selftest" => {
             let ctx = ctx_from(&args)?;
             let sess = ctx.session()?;
@@ -294,13 +324,17 @@ fn run() -> Result<()> {
                 "microscale — reproduction of 'Is Finer Better?' (IBM, 2026)\n\
                  \n\
                  commands: figure <id> | table <1|2|3> | all | hw | train |\n\
-                 models | eval | theory | quantize | serve-bench | selftest\n\
+                 models | eval | theory | quantize | serve-bench |\n\
+                 decode-bench | selftest\n\
                  figures: 1a 1b 2a 2b 2c 3a 3b 3c 4a 4b 5a 5b 6 7 8 9 10 11\n\
                  12 13 14 15 16 17\n\
                  flags: --fast --results DIR --models DIR --artifacts DIR\n\
                  --train-steps N --quiet\n\
                  serve-bench flags: --smoke --workers N --batch-sizes 8,32\n\
-                 --rounds N --serial-requests N --qconfig CFG --out FILE"
+                 --rounds N --serial-requests N --qconfig CFG --out FILE\n\
+                 decode-bench flags: --smoke --concurrency 1,4,8 --prompt N\n\
+                 --max-new N --rounds N --baseline-requests N --qconfig CFG\n\
+                 --out FILE"
             );
             if other != "help" {
                 bail!("unknown command {other:?}");

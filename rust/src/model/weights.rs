@@ -132,6 +132,23 @@ impl Params {
     pub const QUANTIZED: [&'static str; 6] =
         ["wq", "wk", "wv", "wo", "w1", "w2"];
 
+    /// Highest absolute position these parameters can embed, i.e. the
+    /// learned positional table's row count. Autoregressive decode
+    /// assigns step `t` of a sequence with an `L`-token prompt the
+    /// absolute position `L + t`, so `prompt_len + fed_tokens` must
+    /// stay ≤ this bound. The decode layers validate against
+    /// `ModelDims::seq_len` (which `PackedModel::build` pins to this
+    /// table's size by checking the `pos` element count); this
+    /// accessor is the weights-level view, used by the decode bench
+    /// and tests to assert the two bounds agree.
+    pub fn max_positions(&self) -> Result<usize> {
+        let (shape, _) = self.get("pos")?;
+        shape
+            .first()
+            .copied()
+            .with_context(|| format!("pos tensor has rank-0 shape {shape:?}"))
+    }
+
     /// Per-(layer, tensor) σ of the stored quantized weight tensors:
     /// the model's σ spectrum (x-axis population of Fig. 2(b)).
     pub fn sigma_spectrum(&self, n_layers: usize) -> Vec<(String, f64)> {
@@ -274,6 +291,9 @@ mod tests {
         let wo = stats::std_dev_f32(p.get("wo").unwrap().1);
         let wq = stats::std_dev_f32(p.get("wq").unwrap().1);
         assert!(wo < wq, "wo σ {wo} vs wq σ {wq}");
+        // the decode position bound comes from the pos table itself
+        assert_eq!(p.max_positions().unwrap(), dims.seq_len);
+        assert!(toy().max_positions().is_err()); // no pos tensor
     }
 
     #[test]

@@ -476,29 +476,39 @@ impl PackedGemm {
         }
         let engine = Engine::build(x);
         let tile_n = self.tile_n.max(1);
-        let threads = plan_threads(
-            m.saturating_mul(n).saturating_mul(k.max(1)),
-            self.threads,
-            self.par_threshold,
-        );
-        let mut out = vec![0.0f32; m * n];
-        par::par_chunks_mut(&mut out, n, threads, |off, chunk| {
-            let row0 = off / n;
-            match &engine {
-                Engine::ProdLut4(plut) => {
-                    prod_panel::<4, 256>(x, w, plut, row0, chunk, tile_n)
-                }
-                Engine::ProdLut6(plut) => {
-                    prod_panel::<6, 4096>(x, w, plut, row0, chunk, tile_n)
-                }
-                Engine::TwoLut(lut) => {
-                    twolut_panel(x, w, lut, row0, chunk, tile_n)
-                }
-                Engine::IntPsum(ilut) => {
-                    int_panel(x, w, ilut, row0, chunk, tile_n)
-                }
+        let run_panel = |row0: usize, chunk: &mut [f32]| match &engine {
+            Engine::ProdLut4(plut) => {
+                prod_panel::<4, 256>(x, w, plut, row0, chunk, tile_n)
             }
-        });
+            Engine::ProdLut6(plut) => {
+                prod_panel::<6, 4096>(x, w, plut, row0, chunk, tile_n)
+            }
+            Engine::TwoLut(lut) => twolut_panel(x, w, lut, row0, chunk, tile_n),
+            Engine::IntPsum(ilut) => int_panel(x, w, ilut, row0, chunk, tile_n),
+        };
+        let mut out = vec![0.0f32; m * n];
+        // single-row activations (every KV-cached decode step lands
+        // here) and sub-threshold shapes skip the row-panel threading
+        // machinery entirely: threads split output *rows*, so one row
+        // can never fan out, and the setup cost is pure overhead on the
+        // m = 1 hot path. Same panel code, same accumulation order —
+        // bit-identical either way (packed_gemm tests pin it).
+        let threads = if m == 1 {
+            1
+        } else {
+            plan_threads(
+                m.saturating_mul(n).saturating_mul(k.max(1)),
+                self.threads,
+                self.par_threshold,
+            )
+        };
+        if threads <= 1 {
+            run_panel(0, &mut out);
+        } else {
+            par::par_chunks_mut(&mut out, n, threads, |off, chunk| {
+                run_panel(off / n, chunk)
+            });
+        }
         Ok(out)
     }
 }

@@ -22,6 +22,11 @@
 //! On the packed path the weight operand comes from the process-wide
 //! [`super::opcache::operand_cache`], so sweeps that re-multiply the
 //! same weight tensor under the same scheme encode it exactly once.
+//! Single-row activations (`m == 1` — the KV-cached decode hot path,
+//! one new token per step) additionally short-circuit the engine's
+//! tile/threading setup inside [`PackedGemm::matmul`]; the serial and
+//! panel paths share one accumulation order, so the fast path is
+//! bit-identical (pinned in `rust/tests/packed_gemm.rs`).
 
 use crate::formats::ElemFormat;
 

@@ -93,7 +93,9 @@ fn bench_dims(smoke: bool) -> ModelDims {
 /// The default config axis: the paper's FP4 scale-format pair, FP8, and
 /// a mixed per-layer assignment (first/last layers at FP8, the bulk at
 /// FP4/UE5M3 — the *Scaling Laws For Mixed Quantization* shape).
-fn default_configs(
+/// Shared with [`super::decode_bench`] so the two reports cover the
+/// same format axis.
+pub(crate) fn default_configs(
     dims: &ModelDims,
 ) -> crate::Result<Vec<(String, PerLayerQConfig)>> {
     let fp8 = QConfig::named("fp8_e4m3", "ue4m3", false)?;

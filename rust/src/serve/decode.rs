@@ -1,0 +1,311 @@
+//! KV-cached autoregressive decoding over a [`PackedModel`].
+//!
+//! [`DecodeEngine`] is the thin, correctness-guarded entry to the
+//! incremental forward spine ([`super::packed_model`] module docs):
+//! prefill runs a sequence's prompt once, caching every position's
+//! post-gain K/V rows ([`SeqKv`]); each subsequent [`DecodeEngine::step`]
+//! feeds exactly one new token per live sequence and quantizes only that
+//! token's activations through the packed GEMM. The load-bearing
+//! contract — pinned step by step in `rust/tests/decode.rs` — is that
+//! the cached step's logits are **bit-identical** to re-running
+//! [`super::packed_model::reference_forward`] on the full prefix.
+//!
+//! The one configuration that contract cannot cover is per-tensor "-S"
+//! *activation* scaling: its eq. 11 absmax spans the whole prefix,
+//! which an incremental step never sees. [`DecodeEngine::new`] refuses
+//! such configs up front (weight-only "-S" is fine — weights quantize
+//! once at build time). Everything else the model builder accepts —
+//! packed FP4/FP6/FP8 layers, reference-path INT4, `bf16-exact`
+//! layers, mixed per-layer assignments — decodes exactly.
+//!
+//! Sampling ([`Sampler`]) is deterministic: greedy argmax (lowest index
+//! on ties) or temperature sampling driven by a per-request
+//! [`Pcg64`] seed, so a token stream is reproducible from
+//! `(weights, qconfig, prompt, sampling)` alone — independent of
+//! co-scheduled neighbors, admission order, and GEMM threading (see
+//! [`super::scheduler`]).
+
+use std::sync::Arc;
+
+use anyhow::ensure;
+
+use crate::dist::Pcg64;
+
+use super::packed_model::PackedModel;
+pub use super::packed_model::SeqKv;
+
+/// Token-selection policy for one request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Sampling {
+    /// Argmax over the logits; ties break to the lowest token id.
+    Greedy,
+    /// Softmax at `temp` (> 0), sampled with a dedicated
+    /// [`Pcg64`] stream — same seed, same stream, always.
+    Temperature { temp: f64, seed: u64 },
+}
+
+/// A deterministic sampler instantiated from a [`Sampling`] policy.
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    rng: Option<Pcg64>,
+    temp: f64,
+}
+
+impl Sampler {
+    pub fn new(policy: &Sampling) -> crate::Result<Sampler> {
+        match *policy {
+            Sampling::Greedy => Ok(Sampler { rng: None, temp: 0.0 }),
+            Sampling::Temperature { temp, seed } => {
+                ensure!(
+                    temp.is_finite() && temp > 0.0,
+                    "sampling temperature {temp} must be positive"
+                );
+                Ok(Sampler { rng: Some(Pcg64::new(seed)), temp })
+            }
+        }
+    }
+
+    /// Pick the next token from one vocab-sized logit row.
+    pub fn pick(&mut self, logits: &[f32]) -> i32 {
+        match &mut self.rng {
+            None => {
+                // greedy: strict > keeps the lowest index on exact ties
+                let mut best = 0usize;
+                for (i, &l) in logits.iter().enumerate() {
+                    if l > logits[best] {
+                        best = i;
+                    }
+                }
+                best as i32
+            }
+            Some(rng) => {
+                // softmax in f64 with max subtraction; one uniform draw
+                // walks the cumulative mass. All arithmetic is
+                // deterministic, so streams replay exactly.
+                let maxv =
+                    logits.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let weights: Vec<f64> = logits
+                    .iter()
+                    .map(|&l| (((l - maxv) as f64) / self.temp).exp())
+                    .collect();
+                let total: f64 = weights.iter().sum();
+                let u = rng.uniform() * total;
+                let mut cum = 0.0f64;
+                for (i, &w) in weights.iter().enumerate() {
+                    cum += w;
+                    if u < cum {
+                        return i as i32;
+                    }
+                }
+                (logits.len() - 1) as i32
+            }
+        }
+    }
+}
+
+/// KV-cached decoding facade over a shared [`PackedModel`] (module
+/// docs). Cheap to clone-by-Arc into schedulers and benches.
+pub struct DecodeEngine {
+    model: Arc<PackedModel>,
+}
+
+impl DecodeEngine {
+    /// Wrap `model`, refusing configurations whose cached step could
+    /// not be bit-identical to the full-prefix reference (per-tensor
+    /// "-S" activation scaling — see module docs).
+    pub fn new(model: Arc<PackedModel>) -> crate::Result<DecodeEngine> {
+        for layer in 0..model.dims().n_layers {
+            let cfg = model.qcfg().layer(layer);
+            ensure!(
+                !(cfg.quant_on && cfg.per_tensor && cfg.act_quant),
+                "layer {layer} ({}): per-tensor activation scaling needs the \
+                 whole-prefix absmax — KV-cached decode cannot reproduce it \
+                 bit-exactly (use weight-only -S or a block scheme)",
+                cfg.id()
+            );
+        }
+        Ok(DecodeEngine { model })
+    }
+
+    pub fn model(&self) -> &Arc<PackedModel> {
+        &self.model
+    }
+
+    /// A cache shaped for this model with full `seq_len` capacity.
+    pub fn new_kv(&self) -> SeqKv {
+        self.model.new_kv()
+    }
+
+    /// Run `tokens` (appended after `kv.len()` cached positions —
+    /// `kv.len() == 0` for a fresh prompt, more for chunked prefill)
+    /// and return the **last** position's logits (`vocab`).
+    pub fn prefill(
+        &self,
+        tokens: &[i32],
+        kv: &mut SeqKv,
+    ) -> crate::Result<Vec<f32>> {
+        self.model.forward_ragged(
+            tokens,
+            &[tokens.len()],
+            std::slice::from_mut(kv),
+            true,
+        )
+    }
+
+    /// One decode step: token `b` of `tokens` extends cache `b`.
+    /// Returns `batch × vocab` next-token logits.
+    pub fn step(
+        &self,
+        tokens: &[i32],
+        kvs: &mut [SeqKv],
+    ) -> crate::Result<Vec<f32>> {
+        let lens = vec![1usize; kvs.len()];
+        self.model.forward_ragged(tokens, &lens, kvs, true)
+    }
+
+    /// Mixed prefill + decode step (continuous batching): `lens[b]` new
+    /// tokens for sequence `b`. Returns each sequence's final-position
+    /// logits (`batch × vocab`).
+    pub fn step_ragged(
+        &self,
+        tokens: &[i32],
+        lens: &[usize],
+        kvs: &mut [SeqKv],
+    ) -> crate::Result<Vec<f32>> {
+        self.model.forward_ragged(tokens, lens, kvs, true)
+    }
+}
+
+/// The cache-free baseline: generate `max_new` tokens by re-running
+/// [`PackedModel::forward`] on the **full prefix** for every token —
+/// the decode-bench denominator, and the stream oracle the differential
+/// tests compare scheduler output against. Stops early on `eos` or a
+/// full context window.
+pub fn generate_reforward(
+    model: &PackedModel,
+    prompt: &[i32],
+    max_new: usize,
+    eos: Option<i32>,
+    sampling: &Sampling,
+) -> crate::Result<Vec<i32>> {
+    ensure!(!prompt.is_empty(), "empty prompt");
+    let vocab = model.dims().vocab;
+    let mut sampler = Sampler::new(sampling)?;
+    let mut prefix = prompt.to_vec();
+    let mut out = Vec::with_capacity(max_new);
+    while out.len() < max_new {
+        let logits = model.forward(&prefix, 1, prefix.len())?;
+        let last = &logits[(prefix.len() - 1) * vocab..prefix.len() * vocab];
+        let tok = sampler.pick(last);
+        out.push(tok);
+        if eos == Some(tok) || prefix.len() == model.dims().seq_len {
+            break;
+        }
+        prefix.push(tok);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::Params;
+    use crate::runtime::artifacts::ModelDims;
+    use crate::runtime::qconfig::{PerLayerQConfig, QConfig};
+    use crate::serve::cache::OperandCache;
+
+    fn tiny() -> (ModelDims, Params) {
+        let dims = ModelDims {
+            vocab: 32,
+            d_model: 32,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 64,
+            seq_len: 8,
+        };
+        let params = Params::init_surrogate(&dims, 21);
+        (dims, params)
+    }
+
+    #[test]
+    fn greedy_breaks_ties_to_lowest_index() {
+        let mut s = Sampler::new(&Sampling::Greedy).unwrap();
+        assert_eq!(s.pick(&[0.5, 2.0, 2.0, -1.0]), 1);
+        assert_eq!(s.pick(&[3.0, 2.0, 3.0]), 0);
+    }
+
+    #[test]
+    fn temperature_streams_replay_per_seed() {
+        let logits = vec![0.1f32, 0.7, -0.3, 0.2];
+        let draw = |seed: u64| -> Vec<i32> {
+            let mut s = Sampler::new(&Sampling::Temperature {
+                temp: 0.8,
+                seed,
+            })
+            .unwrap();
+            (0..32).map(|_| s.pick(&logits)).collect()
+        };
+        assert_eq!(draw(5), draw(5));
+        assert_ne!(draw(5), draw(6)); // astronomically unlikely to match
+        assert!(draw(5).iter().all(|&t| (0..4).contains(&t)));
+        // zero/negative temperatures are refused
+        assert!(Sampler::new(&Sampling::Temperature { temp: 0.0, seed: 1 })
+            .is_err());
+    }
+
+    #[test]
+    fn engine_refuses_per_tensor_activation_scaling() {
+        let (dims, params) = tiny();
+        let cache = OperandCache::new(32);
+        let per_tensor = PerLayerQConfig::uniform(QConfig::fp4("ue4m3").unwrap())
+            .with_override(
+                1,
+                QConfig::named("fp4_e2m1", "ue4m3", true).unwrap(),
+            );
+        let model = Arc::new(
+            PackedModel::build(&dims, &params, &per_tensor, 8, &cache).unwrap(),
+        );
+        assert!(DecodeEngine::new(model).is_err());
+        // weight-only -S quantizes no activations: allowed
+        let mut wonly = QConfig::named("fp4_e2m1", "ue4m3", true).unwrap();
+        wonly.act_quant = false;
+        let qcfg = PerLayerQConfig::uniform(wonly);
+        let model = Arc::new(
+            PackedModel::build(&dims, &params, &qcfg, 8, &cache).unwrap(),
+        );
+        assert!(DecodeEngine::new(model).is_ok());
+    }
+
+    #[test]
+    fn prefill_then_steps_match_whole_batch_forward() {
+        let (dims, params) = tiny();
+        let cache = OperandCache::new(32);
+        let qcfg = PerLayerQConfig::uniform(QConfig::fp4("ue5m3").unwrap());
+        let model = Arc::new(
+            PackedModel::build(&dims, &params, &qcfg, 8, &cache).unwrap(),
+        );
+        let engine = DecodeEngine::new(model.clone()).unwrap();
+        let toks: Vec<i32> = vec![3, 1, 4, 1, 5, 9, 2, 6];
+        let full = model.forward(&toks, 1, toks.len()).unwrap();
+        let v = dims.vocab;
+
+        let mut kv = engine.new_kv();
+        let got = engine.prefill(&toks[..3], &mut kv).unwrap();
+        assert_eq!(kv.len(), 3);
+        for (i, (a, b)) in got.iter().zip(&full[2 * v..3 * v]).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "prefill logit {i}");
+        }
+        for (t, &tok) in toks.iter().enumerate().skip(3) {
+            let got =
+                engine.step(&[tok], std::slice::from_mut(&mut kv)).unwrap();
+            let want = &full[t * v..(t + 1) * v];
+            for (i, (a, b)) in got.iter().zip(want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "step {t} logit {i}");
+            }
+        }
+        assert_eq!(kv.len(), toks.len());
+        assert!(kv.resident_bytes() > 0);
+        // context is full: another step must refuse
+        assert!(engine.step(&[0], std::slice::from_mut(&mut kv)).is_err());
+    }
+}

@@ -1,0 +1,366 @@
+//! The `microscale decode-bench` driver: KV-cached autoregressive
+//! generation under continuous batching, across the paper's format axis
+//! ({FP4/UE4M3, FP4/UE5M3, FP8, mixed-per-layer}) × concurrent-sequence
+//! counts.
+//!
+//! Per config the driver (1) builds a [`PackedModel`] through the
+//! shared operand cache, (2) gates on the decode exactness contract —
+//! a forced-token generation whose KV-cached step logits must be
+//! bit-identical to [`reference_forward`] re-run on the full prefix at
+//! **every** step, and whose scheduler stream must equal the cache-free
+//! [`generate_reforward`] stream — nothing is timed otherwise, (3)
+//! measures the **re-forward-per-token** baseline (full-prefix forward
+//! per generated token, no KV cache), then (4) drives the
+//! [`Scheduler`] at each concurrency level, recording tok/s,
+//! time-to-first-token, and inter-token p50/p95. Results land in
+//! machine-readable **`BENCH_decode.json`** (field map in
+//! EXPERIMENTS.md §Perf); the acceptance line checks cached decode at
+//! the largest concurrency against the baseline at ≥ 2× tok/s (full
+//! shapes only — smoke runs record `pass: null`).
+//!
+//! Shared by the CLI subcommand and `cargo bench --bench decode_bench`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Context;
+
+use super::cache::operand_cache;
+use super::decode::{generate_reforward, DecodeEngine, Sampling};
+use super::packed_model::{reference_forward, PackedModel};
+use super::scheduler::{DecodeRequest, Scheduler, SchedulerConfig};
+use crate::dist::Pcg64;
+use crate::model::weights::Params;
+use crate::runtime::artifacts::ModelDims;
+use crate::runtime::qconfig::PerLayerQConfig;
+use crate::util::json::{self, Json};
+
+/// Driver options (CLI flags map onto these).
+#[derive(Debug, Clone)]
+pub struct DecodeBenchOpts {
+    /// CI-sized run: tiny model, one small concurrency, `pass: null`.
+    pub smoke: bool,
+    /// Report path (`BENCH_decode.json` in the working directory).
+    pub out: PathBuf,
+    /// Concurrent-sequence counts to drive.
+    pub concurrency: Vec<usize>,
+    /// Prompt tokens per request.
+    pub prompt_len: usize,
+    /// Generation budget per request.
+    pub max_new: usize,
+    /// Request rounds per concurrency point (`requests = c × rounds`).
+    pub rounds: usize,
+    /// Requests in the re-forward-per-token baseline measurement.
+    pub baseline_requests: usize,
+    /// Override the config axis (label, per-layer config).
+    pub qconfigs: Option<Vec<(String, PerLayerQConfig)>>,
+}
+
+impl DecodeBenchOpts {
+    pub fn new(smoke: bool) -> DecodeBenchOpts {
+        DecodeBenchOpts {
+            smoke,
+            out: PathBuf::from("BENCH_decode.json"),
+            concurrency: if smoke { vec![2] } else { vec![1, 4, 8] },
+            prompt_len: if smoke { 4 } else { 32 },
+            max_new: if smoke { 6 } else { 32 },
+            rounds: if smoke { 1 } else { 2 },
+            baseline_requests: if smoke { 2 } else { 4 },
+            qconfigs: None,
+        }
+    }
+}
+
+fn bench_dims(smoke: bool) -> ModelDims {
+    if smoke {
+        ModelDims {
+            vocab: 64,
+            d_model: 64,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 128,
+            seq_len: 32,
+        }
+    } else {
+        ModelDims {
+            vocab: 256,
+            d_model: 128,
+            n_heads: 4,
+            n_layers: 4,
+            d_ff: 512,
+            seq_len: 128,
+        }
+    }
+}
+
+fn prompt(rng: &mut Pcg64, dims: &ModelDims, len: usize) -> Vec<i32> {
+    (0..len).map(|_| (rng.next_u64() % dims.vocab as u64) as i32).collect()
+}
+
+fn pct_ms(samples: &mut [f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let idx = ((samples.len() - 1) as f64 * p / 100.0).round() as usize;
+    samples[idx]
+}
+
+/// The bit-exactness gate: generate a short forced-token stream and
+/// assert the KV-cached step logits equal the full-prefix scalar
+/// reference bit for bit at every step, then assert the scheduler's
+/// greedy stream equals the cache-free re-forward stream.
+fn exactness_gate(
+    label: &str,
+    model: &Arc<PackedModel>,
+    params: &Params,
+    qcfg: &PerLayerQConfig,
+    block_size: usize,
+    rng: &mut Pcg64,
+) -> crate::Result<()> {
+    let dims = *model.dims();
+    let engine = DecodeEngine::new(model.clone())?;
+    let steps = 4usize.min(dims.seq_len.saturating_sub(4));
+    let toks = prompt(rng, &dims, 4 + steps);
+    let mut kv = engine.new_kv();
+    let mut got = engine.prefill(&toks[..4], &mut kv)?;
+    for t in 4..=4 + steps {
+        // `got` holds the cached logits for the t-token prefix
+        let prefix = &toks[..t];
+        let want =
+            reference_forward(params, &dims, qcfg, block_size, prefix, 1, t)?;
+        let last = &want[(t - 1) * dims.vocab..t * dims.vocab];
+        anyhow::ensure!(
+            got.iter().zip(last).all(|(a, b)| a.to_bits() == b.to_bits()),
+            "{label}: cached step logits diverge from the full-prefix \
+             reference at position {t} — refusing to time"
+        );
+        if t == 4 + steps {
+            break;
+        }
+        got = engine.step(&[toks[t]], std::slice::from_mut(&mut kv))?;
+    }
+    // stream-level: scheduler output == cache-free re-forward stream
+    let p = prompt(rng, &dims, 4);
+    let max_new = 4usize;
+    let want = generate_reforward(model, &p, max_new, None, &Sampling::Greedy)?;
+    let mut sched = Scheduler::new(
+        DecodeEngine::new(model.clone())?,
+        SchedulerConfig::default(),
+    );
+    sched.submit(DecodeRequest {
+        id: 0,
+        prompt: p,
+        max_new_tokens: max_new,
+        eos: None,
+        sampling: Sampling::Greedy,
+    })?;
+    let results = sched.run()?;
+    let got = results.first().map(|r| r.tokens.as_slice());
+    anyhow::ensure!(
+        got == Some(want.as_slice()),
+        "{label}: scheduler stream {got:?} != re-forward stream {want:?}"
+    );
+    Ok(())
+}
+
+/// Run the bench and write the report; returns the report JSON.
+pub fn run(opts: &DecodeBenchOpts) -> crate::Result<Json> {
+    let dims = bench_dims(opts.smoke);
+    let block_size = if opts.smoke { 16 } else { 32 };
+    anyhow::ensure!(
+        opts.prompt_len >= 1 && opts.prompt_len < dims.seq_len,
+        "prompt length {} leaves no room to generate (seq_len {})",
+        opts.prompt_len,
+        dims.seq_len
+    );
+    let params = Params::init_surrogate(&dims, 2026);
+    anyhow::ensure!(
+        params.max_positions()? == dims.seq_len,
+        "pos table supports {} positions, dims.seq_len is {}",
+        params.max_positions()?,
+        dims.seq_len
+    );
+    let configs = match &opts.qconfigs {
+        Some(c) => c.clone(),
+        None => super::bench::default_configs(&dims)?,
+    };
+    let largest_c = opts.concurrency.iter().copied().max().unwrap_or(1);
+    let mut rng = Pcg64::new(0xDEC0);
+
+    println!(
+        "== decode-bench ({}) : {} layers, d_model {}, d_ff {}, seq {}, \
+         bs{block_size} blocks, prompt {}, {} new tokens/request ==",
+        if opts.smoke { "smoke" } else { "full" },
+        dims.n_layers,
+        dims.d_model,
+        dims.d_ff,
+        dims.seq_len,
+        opts.prompt_len,
+        opts.max_new,
+    );
+
+    let mut config_entries: Vec<(String, Json)> = Vec::new();
+    let mut min_speedup = f64::INFINITY;
+    for (label, qcfg) in &configs {
+        let t_build = Instant::now();
+        let model = Arc::new(PackedModel::build(
+            &dims,
+            &params,
+            qcfg,
+            block_size,
+            operand_cache(),
+        )?);
+        let build_ms = t_build.elapsed().as_secs_f64() * 1e3;
+        exactness_gate(label, &model, &params, qcfg, block_size, &mut rng)?;
+        println!(
+            "\n-- {label} ({}) : build {build_ms:.1} ms, step-wise bit-exact \
+             vs full-prefix reference OK",
+            qcfg.id(),
+        );
+
+        // baseline: no KV cache, full-prefix forward per generated token
+        let base_prompts: Vec<Vec<i32>> = (0..opts.baseline_requests)
+            .map(|_| prompt(&mut rng, &dims, opts.prompt_len))
+            .collect();
+        let t0 = Instant::now();
+        let mut base_tokens = 0usize;
+        for p in &base_prompts {
+            base_tokens +=
+                generate_reforward(&model, p, opts.max_new, None, &Sampling::Greedy)?
+                    .len();
+        }
+        let base_secs = t0.elapsed().as_secs_f64();
+        let base_tok_s = base_tokens as f64 / base_secs.max(1e-9);
+        println!(
+            "   re-forward baseline: {base_tok_s:8.1} tok/s \
+             ({base_tokens} tokens, {:.1} ms/token)",
+            1e3 * base_secs / base_tokens.max(1) as f64
+        );
+
+        let mut conc_entries: Vec<(String, Json)> = Vec::new();
+        let mut cfg_speedup = f64::NAN;
+        for &c in &opts.concurrency {
+            let n_req = c * opts.rounds;
+            let mut sched = Scheduler::new(
+                DecodeEngine::new(model.clone())?,
+                SchedulerConfig { max_active: c, max_prefill_per_step: c },
+            );
+            let t0 = Instant::now();
+            for id in 0..n_req {
+                sched.submit(DecodeRequest {
+                    id: id as u64,
+                    prompt: prompt(&mut rng, &dims, opts.prompt_len),
+                    max_new_tokens: opts.max_new,
+                    eos: None,
+                    sampling: Sampling::Temperature {
+                        temp: 0.9,
+                        seed: 0x5EED ^ id as u64,
+                    },
+                })?;
+            }
+            let results = sched.run()?;
+            let secs = t0.elapsed().as_secs_f64();
+            let tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
+            let tok_s = tokens as f64 / secs.max(1e-9);
+            let mut ttft: Vec<f64> =
+                results.iter().map(|r| r.ttft.as_secs_f64() * 1e3).collect();
+            let mut itl: Vec<f64> = results
+                .iter()
+                .flat_map(|r| r.itl.iter().map(|d| d.as_secs_f64() * 1e3))
+                .collect();
+            let speedup = tok_s / base_tok_s;
+            if c == largest_c {
+                cfg_speedup = speedup;
+            }
+            let (ttft_p50, ttft_p95) =
+                (pct_ms(&mut ttft, 50.0), pct_ms(&mut ttft, 95.0));
+            let (itl_p50, itl_p95) =
+                (pct_ms(&mut itl, 50.0), pct_ms(&mut itl, 95.0));
+            println!(
+                "   c{c:<3}: {tok_s:8.1} tok/s  ttft p50 {ttft_p50:6.1} ms  \
+                 p95 {ttft_p95:6.1} ms  itl p50 {itl_p50:6.2} ms  \
+                 p95 {itl_p95:6.2} ms  ({speedup:.2}x vs re-forward)",
+            );
+            conc_entries.push((
+                format!("c{c}"),
+                json::obj(vec![
+                    ("requests", json::num(n_req as f64)),
+                    ("tokens", json::num(tokens as f64)),
+                    ("tok_per_s", json::num(tok_s)),
+                    ("ttft_p50_ms", json::num(ttft_p50)),
+                    ("ttft_p95_ms", json::num(ttft_p95)),
+                    ("itl_p50_ms", json::num(itl_p50)),
+                    ("itl_p95_ms", json::num(itl_p95)),
+                    ("speedup_vs_reforward", json::num(speedup)),
+                ]),
+            ));
+        }
+        if cfg_speedup.is_finite() {
+            min_speedup = min_speedup.min(cfg_speedup);
+        }
+        config_entries.push((
+            label.clone(),
+            json::obj(vec![
+                ("qconfig", json::s(&qcfg.id())),
+                ("bit_exact", Json::Bool(true)),
+                ("build_ms", json::num(build_ms)),
+                ("reforward_tok_per_s", json::num(base_tok_s)),
+                ("concurrency", json::obj_owned(conc_entries)),
+            ]),
+        ));
+    }
+
+    let pass = min_speedup.is_finite() && min_speedup >= 2.0;
+    println!(
+        "\n   acceptance target (cached decode >= 2.00x re-forward at \
+         c{largest_c}): {}",
+        if opts.smoke {
+            "n/a (smoke shapes)".to_string()
+        } else if pass {
+            format!("PASS (min {min_speedup:.2}x)")
+        } else {
+            format!("MISS (min {min_speedup:.2}x, host-dependent)")
+        }
+    );
+    let report = json::obj(vec![
+        ("bench", json::s("decode")),
+        ("smoke", Json::Bool(opts.smoke)),
+        (
+            "model",
+            json::obj(vec![
+                ("vocab", json::num(dims.vocab as f64)),
+                ("d_model", json::num(dims.d_model as f64)),
+                ("n_heads", json::num(dims.n_heads as f64)),
+                ("n_layers", json::num(dims.n_layers as f64)),
+                ("d_ff", json::num(dims.d_ff as f64)),
+                ("seq_len", json::num(dims.seq_len as f64)),
+                ("block_size", json::num(block_size as f64)),
+            ]),
+        ),
+        ("prompt_len", json::num(opts.prompt_len as f64)),
+        ("max_new", json::num(opts.max_new as f64)),
+        ("configs", json::obj_owned(config_entries)),
+        ("target_speedup", json::num(2.0)),
+        (
+            "min_concurrent_speedup",
+            if min_speedup.is_finite() {
+                json::num(min_speedup)
+            } else {
+                Json::Null
+            },
+        ),
+        // the 2x target is defined on the full shapes only; smoke runs
+        // record null so trajectory tooling can't misread tiny-shape
+        // ratios as an acceptance verdict
+        (
+            "pass",
+            if opts.smoke { Json::Null } else { Json::Bool(pass) },
+        ),
+    ]);
+    std::fs::write(&opts.out, report.to_string())
+        .with_context(|| format!("writing {}", opts.out.display()))?;
+    println!("   wrote {}", opts.out.display());
+    Ok(report)
+}

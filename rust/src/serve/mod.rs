@@ -38,11 +38,29 @@
 //! {FP4/UE4M3, FP4/UE5M3, FP8, mixed-per-layer} × batch sizes and emits
 //! machine-readable `BENCH_serve.json` (field map in EXPERIMENTS.md
 //! §Perf). Architecture notes live in DESIGN.md §9.
+//!
+//! On top of the one-shot forward path sits token-by-token
+//! **generation**:
+//!
+//! * [`decode`] — [`DecodeEngine`]: KV-cached autoregressive stepping
+//!   over the shared incremental forward spine, bit-identical at every
+//!   generated token to re-running the full prefix through
+//!   [`reference_forward`] (the decode exactness contract, DESIGN.md
+//!   §10; pinned by `rust/tests/decode.rs`).
+//! * [`scheduler`] — [`Scheduler`]: continuous batching — sequences
+//!   admitted and retired mid-flight, prefill and decode fused into one
+//!   ragged forward per iteration, deterministic seeded sampling.
+//!
+//! `microscale decode-bench` ([`decode_bench`]) measures generation
+//! throughput/latency and emits `BENCH_decode.json`.
 
 pub mod batcher;
 pub mod bench;
+pub mod decode;
+pub mod decode_bench;
 pub mod engine;
 pub mod packed_model;
+pub mod scheduler;
 
 /// The weight-operand cache lives in the quant layer
 /// ([`crate::quant::opcache`] — it is generic quant infrastructure);
@@ -51,5 +69,9 @@ pub use crate::quant::opcache as cache;
 
 pub use batcher::{Batcher, BatcherConfig};
 pub use self::cache::{operand_cache, CacheStats, OperandCache};
+pub use decode::{DecodeEngine, Sampler, Sampling};
 pub use engine::{EngineConfig, ResponseHandle, ServeEngine, ServeStats};
-pub use packed_model::{reference_forward, PackedModel};
+pub use packed_model::{reference_forward, PackedModel, SeqKv};
+pub use scheduler::{
+    DecodeRequest, DecodeResult, FinishReason, Scheduler, SchedulerConfig,
+};

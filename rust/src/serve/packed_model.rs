@@ -37,6 +37,31 @@
 //! per-tensor absmax — is deliberately computed per *sequence*
 //! ([`quantize_acts_by_sequence`]). `rust/tests/serve.rs` pins the
 //! guarantee by re-batching the same request among different neighbors.
+//!
+//! # One numeric spine: whole-batch, prefill, and decode
+//!
+//! `forward_spine` is the single implementation behind all three
+//! entry shapes. It processes a *ragged* batch — `lens[b]` new tokens
+//! for sequence `b`, appended after `kvs[b].len()` positions already
+//! resident in that sequence's [`SeqKv`] cache (f32 post-gain keys and
+//! values per layer; attention is full precision per paper App. A, so
+//! the cache holds exactly what the whole-batch pass would have
+//! computed). [`PackedModel::forward`] is the `past = 0`, equal-`lens`
+//! special case; prefill is one sequence with `past = 0`; a decode step
+//! is `lens = [1, 1, ...]` over live caches ([`crate::serve::decode`]).
+//!
+//! The KV-cached step is **bit-identical** to re-running the full
+//! prefix because every reduction keeps a fixed order: the attention
+//! dot `Σ_t q[t]·k[t]` and the value mix `Σ_j a[j]·v[j]` run in
+//! ascending `t`/`j` exactly as the whole-batch loop ran them (cache
+//! row `j` holds the same bits row `j` of the whole-batch K/V GEMM
+//! produced, by the per-row GEMM contract), softmax normalizes over the
+//! same `j = 0..=i` span, and LN/GELU/residual are per-row. The one
+//! construct this argument cannot cover is per-tensor "-S" *activation*
+//! scaling, whose eq. 11 absmax spans the whole prefix — the decode
+//! engine refuses those configs up front. `rust/tests/decode.rs` pins
+//! step-by-step bit-equality against [`reference_forward`] re-run on
+//! the full prefix at every generated token.
 
 use std::sync::Arc;
 
@@ -115,13 +140,14 @@ impl Linear {
         Ok(Linear { path, cfg: *cfg, scheme: Some(scheme), k, n })
     }
 
-    /// `x` is row-major `rows × k` (rows = batch·seq); returns
-    /// `rows × n`. `seq` bounds the per-sequence quantization chunks.
+    /// `x` is row-major `rows × k` (rows = Σ lens); returns `rows × n`.
+    /// `lens` gives each sequence's row count, bounding the
+    /// per-sequence quantization chunks (ragged batches are fine).
     fn apply(
         &self,
         x: &[f32],
         rows: usize,
-        seq: usize,
+        lens: &[usize],
         gemm: &PackedGemm,
     ) -> crate::Result<Vec<f32>> {
         debug_assert_eq!(x.len(), rows * self.k);
@@ -138,7 +164,7 @@ impl Linear {
                 let scheme = self.scheme.as_ref().unwrap();
                 if self.cfg.act_quant {
                     let xq = quantize_acts_by_sequence(
-                        scheme, x, rows, seq, self.k,
+                        scheme, x, rows, lens, self.k,
                     );
                     Ok(matmul_t(&xq, wt_q, rows, self.k, self.n))
                 } else {
@@ -155,6 +181,64 @@ pub struct PathSummary {
     pub exact: usize,
     pub packed: usize,
     pub reference: usize,
+}
+
+/// One sequence's KV cache: per layer, one f32 key row and one value
+/// row per resident position, stored **post-gain** (the exact bits the
+/// whole-batch K/V GEMMs + γ scaling produce — attention is full
+/// precision per paper App. A, so nothing is quantized here).
+///
+/// Rows append in position order; [`SeqKv::len`] is the number of
+/// resident positions. The module-docs exactness argument is why f32
+/// rows are sufficient for bit-identical KV-cached decode.
+#[derive(Debug, Clone, Default)]
+pub struct SeqKv {
+    /// Per layer: `len * d_model` cached key rows.
+    k: Vec<Vec<f32>>,
+    /// Per layer: `len * d_model` cached value rows.
+    v: Vec<Vec<f32>>,
+    len: usize,
+}
+
+impl SeqKv {
+    /// Empty cache for an `n_layers`-deep model.
+    pub fn new(n_layers: usize) -> SeqKv {
+        SeqKv { k: vec![Vec::new(); n_layers], v: vec![Vec::new(); n_layers], len: 0 }
+    }
+
+    /// Empty cache with room for `positions` rows of width `d_model`
+    /// per layer (decode appends one row per step — reserve once).
+    pub fn with_capacity(
+        n_layers: usize,
+        d_model: usize,
+        positions: usize,
+    ) -> SeqKv {
+        let mk = || {
+            (0..n_layers)
+                .map(|_| Vec::with_capacity(positions * d_model))
+                .collect()
+        };
+        SeqKv { k: mk(), v: mk(), len: 0 }
+    }
+
+    /// Resident positions.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Layers this cache was shaped for.
+    pub fn layers(&self) -> usize {
+        self.k.len()
+    }
+
+    /// Resident f32 payload bytes across all layers (capacity excluded).
+    pub fn resident_bytes(&self) -> usize {
+        self.k
+            .iter()
+            .chain(self.v.iter())
+            .map(|rows| rows.len() * std::mem::size_of::<f32>())
+            .sum()
+    }
 }
 
 /// The prepacked surrogate transformer (see module docs).
@@ -308,16 +392,60 @@ impl PackedModel {
 
     /// Logits (`batch · seq · vocab`, row-major) for `batch` sequences
     /// of `seq` tokens each (`tokens.len() == batch · seq`,
-    /// `1 <= seq <= dims.seq_len`).
+    /// `1 <= seq <= dims.seq_len`) — the `past = 0` special case of
+    /// [`PackedModel::forward_ragged`] over scratch caches.
     pub fn forward(
         &self,
         tokens: &[i32],
         batch: usize,
         seq: usize,
     ) -> crate::Result<Vec<f32>> {
+        ensure!(batch > 0, "empty batch");
+        let lens = vec![seq; batch];
+        // scratch caches sized up front: the spine appends seq rows per
+        // layer, and growth reallocations on the one-shot serving hot
+        // path would be pure waste
+        let mut kvs: Vec<SeqKv> = (0..batch)
+            .map(|_| SeqKv::with_capacity(self.dims.n_layers, self.dims.d_model, seq))
+            .collect();
+        self.forward_ragged(tokens, &lens, &mut kvs, false)
+    }
+
+    /// A KV cache shaped for this model, with capacity for a full
+    /// `seq_len`-position sequence.
+    pub fn new_kv(&self) -> SeqKv {
+        SeqKv::with_capacity(
+            self.dims.n_layers,
+            self.dims.d_model,
+            self.dims.seq_len,
+        )
+    }
+
+    /// Incremental ragged forward: `lens[b]` new tokens for sequence
+    /// `b` (concatenated in `tokens`), each appended after the
+    /// `kvs[b].len()` positions already resident in its cache. Caches
+    /// gain the new positions' keys/values. Returns all new rows'
+    /// logits (`Σ lens × vocab`), or — with `last_only` — one row per
+    /// sequence (`batch × vocab`, each sequence's final new position).
+    ///
+    /// Bit-identical to re-running the full prefix (module docs) for
+    /// every configuration **except** per-tensor "-S" *activation*
+    /// scaling, whose eq. 11 absmax spans the whole prefix — a span an
+    /// incremental call never sees, so its chunks quantize under a
+    /// different factor. [`crate::serve::decode::DecodeEngine::new`]
+    /// refuses those configs; callers driving this API directly must
+    /// apply the same rule to keep the guarantee. On error the caches
+    /// may hold a partial step — discard them.
+    pub fn forward_ragged(
+        &self,
+        tokens: &[i32],
+        lens: &[usize],
+        kvs: &mut [SeqKv],
+        last_only: bool,
+    ) -> crate::Result<Vec<f32>> {
         let ctx = self.ctx();
-        forward_core(&ctx, tokens, batch, seq, |layer, which, x, rows| {
-            self.linears[layer * 6 + which].apply(x, rows, seq, &self.gemm)
+        forward_spine(&ctx, tokens, lens, kvs, last_only, |layer, which, x, rows| {
+            self.linears[layer * 6 + which].apply(x, rows, lens, &self.gemm)
         })
     }
 
@@ -369,6 +497,7 @@ pub fn reference_forward(
     batch: usize,
     seq: usize,
 ) -> crate::Result<Vec<f32>> {
+    ensure!(batch > 0, "empty batch");
     let (d, v) = (dims.d_model, dims.vocab);
     let head_t = transpose(params.get("head")?.1, d, v);
     let ctx = Ctx {
@@ -384,7 +513,11 @@ pub fn reference_forward(
         gains: params.get("gains")?.1,
         head_t: &head_t,
     };
-    forward_core(&ctx, tokens, batch, seq, |layer, which, x, rows| {
+    let lens = vec![seq; batch];
+    let mut kvs: Vec<SeqKv> = (0..batch)
+        .map(|_| SeqKv::with_capacity(dims.n_layers, d, seq))
+        .collect();
+    forward_spine(&ctx, tokens, &lens, &mut kvs, false, |layer, which, x, rows| {
         let cfg = qcfg.layer(layer);
         let (kd, nd) = linear_dims(dims, which);
         let data = params.get(Params::QUANTIZED[which])?.1;
@@ -396,7 +529,7 @@ pub fn reference_forward(
         let scheme = cfg.scheme(block_size);
         let wt_q = ScalarKernel.fake_quant(&scheme, &wt);
         if cfg.act_quant {
-            let xq = quantize_acts_by_sequence(&scheme, x, rows, seq, kd);
+            let xq = quantize_acts_by_sequence(&scheme, x, rows, &lens, kd);
             Ok(matmul_t(&xq, &wt_q, rows, kd, nd))
         } else {
             Ok(matmul_t(x, &wt_q, rows, kd, nd))
@@ -405,33 +538,40 @@ pub fn reference_forward(
 }
 
 /// Fake-quantize a `rows × k` activation matrix one sequence at a time
-/// (`seq` rows per chunk). For per-tensor "-S" schemes the eq. 11
-/// absmax then spans a single request, never its co-batched neighbors —
-/// the batching-invariance guarantee. For plain block schemes
-/// (`k % bs == 0`, blocks within rows) chunking changes nothing.
+/// (`lens[b]` rows per chunk, ragged batches included). For per-tensor
+/// "-S" schemes the eq. 11 absmax then spans a single request, never
+/// its co-batched neighbors — the batching-invariance guarantee. For
+/// plain block schemes (`k % bs == 0`, blocks within rows) chunking
+/// changes nothing.
 fn quantize_acts_by_sequence(
     scheme: &QuantScheme,
     x: &[f32],
     rows: usize,
-    seq: usize,
+    lens: &[usize],
     k: usize,
 ) -> Vec<f32> {
     debug_assert_eq!(x.len(), rows * k);
-    debug_assert_eq!(rows % seq.max(1), 0);
+    debug_assert_eq!(lens.iter().sum::<usize>(), rows);
     let mut out = x.to_vec();
-    for chunk in out.chunks_mut(seq.max(1) * k) {
-        crate::quant::fake_quant_into(scheme, chunk);
+    let mut r0 = 0usize;
+    for &l in lens {
+        crate::quant::fake_quant_into(scheme, &mut out[r0 * k..(r0 + l) * k]);
+        r0 += l;
     }
     out
 }
 
-/// The shared forward skeleton: everything except the quantized linears,
-/// which are injected as `linear(layer, which, x, rows) -> rows × n`.
-fn forward_core<L>(
+/// The shared forward skeleton behind whole-batch, prefill, and decode
+/// (module docs): everything except the quantized linears, which are
+/// injected as `linear(layer, which, x, rows) -> rows × n`. Appends the
+/// new positions' post-gain K/V rows to `kvs` and bumps each cache's
+/// `len` on success.
+fn forward_spine<L>(
     ctx: &Ctx,
     tokens: &[i32],
-    batch: usize,
-    seq: usize,
+    lens: &[usize],
+    kvs: &mut [SeqKv],
+    last_only: bool,
     mut linear: L,
 ) -> crate::Result<Vec<f32>>
 where
@@ -440,15 +580,49 @@ where
     let dims = ctx.dims;
     let (d, v, nh) = (dims.d_model, dims.vocab, dims.n_heads);
     let hd = d / nh;
+    let batch = lens.len();
     ensure!(batch > 0, "empty batch");
     ensure!(
-        seq >= 1 && seq <= dims.seq_len,
-        "sequence length {seq} out of range 1..={}",
-        dims.seq_len
+        kvs.len() == batch,
+        "{} KV caches for {batch} sequences",
+        kvs.len()
     );
+    let mut rows = 0usize;
+    let mut max_ctx = 0usize;
+    for (b, (&l, kv)) in lens.iter().zip(kvs.iter()).enumerate() {
+        ensure!(l >= 1, "sequence {b}: empty token span");
+        ensure!(
+            kv.layers() == dims.n_layers,
+            "sequence {b}: KV cache has {} layers, model has {}",
+            kv.layers(),
+            dims.n_layers
+        );
+        // row payloads must match the declared length — catches caches
+        // reused after a failed (partial) step and caches built against
+        // a different d_model, both of which would otherwise silently
+        // misalign the attention reads
+        for (li, kl) in kv.k.iter().enumerate() {
+            ensure!(
+                kl.len() == kv.len * d && kv.v[li].len() == kv.len * d,
+                "sequence {b}: KV cache layer {li} holds {}/{} values for \
+                 {} positions of width {d} — reused after a failed step?",
+                kl.len(),
+                kv.v[li].len(),
+                kv.len
+            );
+        }
+        ensure!(
+            kv.len + l <= dims.seq_len,
+            "sequence {b}: {} cached + {l} new positions exceed seq_len {}",
+            kv.len,
+            dims.seq_len
+        );
+        rows += l;
+        max_ctx = max_ctx.max(kv.len + l);
+    }
     ensure!(
-        tokens.len() == batch * seq,
-        "token count {} != batch {batch} x seq {seq}",
+        tokens.len() == rows,
+        "token count {} != sum of spans {rows}",
         tokens.len()
     );
     for &t in tokens {
@@ -457,23 +631,29 @@ where
             "token {t} out of vocab range 0..{v}"
         );
     }
-    let rows = batch * seq;
+    let pasts: Vec<usize> = kvs.iter().map(|kv| kv.len).collect();
 
-    // x = embed[tokens] + pos[:seq]
+    // x = embed[tokens] + pos[past..past+len] per sequence
     let mut x = vec![0.0f32; rows * d];
-    for r in 0..rows {
-        let tok = tokens[r] as usize;
-        let p = r % seq;
-        let e = &ctx.embed[tok * d..(tok + 1) * d];
-        let pp = &ctx.pos[p * d..(p + 1) * d];
-        let xr = &mut x[r * d..(r + 1) * d];
-        for c in 0..d {
-            xr[c] = e[c] + pp[c];
+    {
+        let mut r = 0usize;
+        for (b, &l) in lens.iter().enumerate() {
+            for i in 0..l {
+                let tok = tokens[r] as usize;
+                let p = pasts[b] + i;
+                let e = &ctx.embed[tok * d..(tok + 1) * d];
+                let pp = &ctx.pos[p * d..(p + 1) * d];
+                let xr = &mut x[r * d..(r + 1) * d];
+                for c in 0..d {
+                    xr[c] = e[c] + pp[c];
+                }
+                r += 1;
+            }
         }
     }
 
     let att_scale = 1.0 / (hd as f32).sqrt();
-    let mut att = vec![0.0f32; seq];
+    let mut att = vec![0.0f32; max_ctx];
     for layer in 0..dims.n_layers {
         let g = &ctx.gains[layer * 6..(layer + 1) * 6];
         let h1 = layer_norm(
@@ -486,19 +666,37 @@ where
         let ky = scaled(linear(layer, 1, &h1, rows)?, g[1]);
         let vv = scaled(linear(layer, 2, &h1, rows)?, g[2]);
 
-        // causal attention, full precision (paper App. A)
+        // append the new post-gain K/V rows to each sequence's cache —
+        // bit-for-bit the rows the whole-batch pass computes, by the
+        // per-row GEMM contract
+        {
+            let mut r0 = 0usize;
+            for (b, &l) in lens.iter().enumerate() {
+                kvs[b].k[layer].extend_from_slice(&ky[r0 * d..(r0 + l) * d]);
+                kvs[b].v[layer].extend_from_slice(&vv[r0 * d..(r0 + l) * d]);
+                r0 += l;
+            }
+        }
+
+        // causal attention over cache + new rows, full precision (paper
+        // App. A); reductions run in ascending position order — the
+        // exact op sequence of the whole-batch loop
         let mut o = vec![0.0f32; rows * d];
-        for b in 0..batch {
+        let mut r0 = 0usize;
+        for (b, &l) in lens.iter().enumerate() {
+            let kc = &kvs[b].k[layer];
+            let vc = &kvs[b].v[layer];
             for head in 0..nh {
                 let c0 = head * hd;
-                for i in 0..seq {
-                    let qi = (b * seq + i) * d + c0;
+                for i in 0..l {
+                    let qi = (r0 + i) * d + c0;
+                    let ctx_len = pasts[b] + i + 1;
                     let mut maxv = f32::NEG_INFINITY;
-                    for j in 0..=i {
-                        let kj = (b * seq + j) * d + c0;
+                    for j in 0..ctx_len {
+                        let kj = j * d + c0;
                         let mut dot = 0.0f32;
                         for t in 0..hd {
-                            dot += q[qi + t] * ky[kj + t];
+                            dot += q[qi + t] * kc[kj + t];
                         }
                         let sc = dot * att_scale;
                         att[j] = sc;
@@ -507,24 +705,25 @@ where
                         }
                     }
                     let mut denom = 0.0f32;
-                    for a in att.iter_mut().take(i + 1) {
+                    for a in att.iter_mut().take(ctx_len) {
                         let e = (*a - maxv).exp();
                         *a = e;
                         denom += e;
                     }
-                    for a in att.iter_mut().take(i + 1) {
+                    for a in att.iter_mut().take(ctx_len) {
                         *a /= denom;
                     }
-                    let oi = (b * seq + i) * d + c0;
+                    let oi = (r0 + i) * d + c0;
                     for t in 0..hd {
                         let mut acc = 0.0f32;
-                        for j in 0..=i {
-                            acc += att[j] * vv[(b * seq + j) * d + c0 + t];
+                        for j in 0..ctx_len {
+                            acc += att[j] * vc[j * d + c0 + t];
                         }
                         o[oi + t] = acc;
                     }
                 }
             }
+            r0 += l;
         }
 
         let proj = scaled(linear(layer, 3, &o, rows)?, g[3]);
@@ -543,9 +742,26 @@ where
         let proj2 = scaled(linear(layer, 5, &mid, rows)?, g[5]);
         add_into(&mut x, &proj2);
     }
+    for (kv, &l) in kvs.iter_mut().zip(lens) {
+        kv.len += l;
+    }
 
+    // the model head is NOT quantized (paper App. A); LN + head are
+    // per-row, so the last-row-only path is bit-identical to slicing
+    // the all-rows result
+    if last_only {
+        let mut out = vec![0.0f32; batch * v];
+        let mut r0 = 0usize;
+        for (b, &l) in lens.iter().enumerate() {
+            let r = r0 + l - 1;
+            let xf = layer_norm(&x[r * d..(r + 1) * d], ctx.lnf_g, ctx.lnf_b, d);
+            let row = matmul_t(&xf, ctx.head_t, 1, d, v);
+            out[b * v..(b + 1) * v].copy_from_slice(&row);
+            r0 += l;
+        }
+        return Ok(out);
+    }
     let xf = layer_norm(&x, ctx.lnf_g, ctx.lnf_b, d);
-    // the model head is NOT quantized (paper App. A)
     Ok(matmul_t(&xf, ctx.head_t, rows, d, v))
 }
 

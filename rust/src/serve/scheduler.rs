@@ -1,0 +1,400 @@
+//! Continuous-batching generation scheduler.
+//!
+//! One [`Scheduler`] drives many concurrent generation requests through
+//! a [`DecodeEngine`], admitting and evicting sequences **mid-flight**:
+//! every [`Scheduler::step`] builds a single ragged spine call that
+//! prefills newly admitted prompts *and* decodes one token for every
+//! live sequence at once, then samples, then retires finished sequences
+//! — the vLLM-style iteration-level scheduling loop, minus the GPU.
+//!
+//! # Sequence lifecycle
+//!
+//! ```text
+//! waiting ──admit──▶ prefill ──▶ decoding ──stop──▶ finished
+//!            (≤ max_prefill_per_step joins per step,
+//!             ≤ max_active sequences KV-resident)
+//! ```
+//!
+//! Stop conditions, checked after each sampled token: the token equals
+//! `eos` (kept in the output), `max_new_tokens` reached, or the context
+//! window is exhausted ([`FinishReason::ContextFull`] — the final token
+//! is still returned; it just cannot be fed back).
+//!
+//! # Determinism
+//!
+//! A request's token stream is a pure function of
+//! `(weights, qconfig, prompt, sampling policy)`: step logits are
+//! bit-identical to the full-prefix reference regardless of which
+//! neighbors share the ragged batch (batching invariance + the decode
+//! exactness contract), and each request samples from its **own**
+//! seeded [`crate::dist::Pcg64`] stream. Admission order, `max_active`,
+//! and GEMM threading therefore cannot change any stream —
+//! `rust/tests/decode.rs` pins this by permuting all three.
+
+use std::collections::VecDeque;
+use std::time::{Duration, Instant};
+
+use anyhow::ensure;
+
+use super::decode::{DecodeEngine, Sampler, Sampling, SeqKv};
+
+/// One generation request.
+#[derive(Debug, Clone)]
+pub struct DecodeRequest {
+    /// Caller-chosen id, echoed in the result (need not be unique, but
+    /// results sort by it).
+    pub id: u64,
+    /// Prompt tokens (`1..=seq_len`).
+    pub prompt: Vec<i32>,
+    /// Generation budget (≥ 1).
+    pub max_new_tokens: usize,
+    /// Optional stop token (kept in the output when hit).
+    pub eos: Option<i32>,
+    pub sampling: Sampling,
+}
+
+/// Why a sequence retired.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// Sampled the `eos` token.
+    Eos,
+    /// Generated `max_new_tokens`.
+    MaxTokens,
+    /// Prompt + generated tokens filled the model's context window.
+    ContextFull,
+}
+
+/// A finished request: its generated tokens plus per-token timing.
+#[derive(Debug, Clone)]
+pub struct DecodeResult {
+    pub id: u64,
+    pub prompt_len: usize,
+    /// Generated tokens, in order (includes the `eos` token if hit).
+    pub tokens: Vec<i32>,
+    pub finish: FinishReason,
+    /// Submit → first generated token (includes queueing + prefill).
+    pub ttft: Duration,
+    /// Gaps between consecutive token emissions (`tokens.len() - 1`
+    /// entries) — the inter-token latency samples.
+    pub itl: Vec<Duration>,
+}
+
+/// Scheduling policy.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerConfig {
+    /// KV-resident sequences decoded concurrently.
+    pub max_active: usize,
+    /// New prompts prefilled per step — bounds how much prefill work a
+    /// single ragged batch mixes into the decode cadence (long prompts
+    /// would otherwise stall every live stream's next token).
+    pub max_prefill_per_step: usize,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig { max_active: 8, max_prefill_per_step: 2 }
+    }
+}
+
+struct Active {
+    req: DecodeRequest,
+    submitted: Instant,
+    kv: SeqKv,
+    sampler: Sampler,
+    /// Generated tokens; the last one is the next decode-step input
+    /// (unless the sequence just finished).
+    out: Vec<i32>,
+    emitted: Vec<Instant>,
+}
+
+/// The continuous-batching driver (module docs). Single-threaded by
+/// design — the parallelism lives in the GEMM under the spine, and a
+/// deterministic driver is what makes the stream-invariance tests
+/// meaningful.
+pub struct Scheduler {
+    engine: DecodeEngine,
+    cfg: SchedulerConfig,
+    waiting: VecDeque<(DecodeRequest, Instant)>,
+    active: Vec<Active>,
+    finished: Vec<DecodeResult>,
+}
+
+impl Scheduler {
+    pub fn new(engine: DecodeEngine, cfg: SchedulerConfig) -> Scheduler {
+        Scheduler {
+            engine,
+            cfg: SchedulerConfig {
+                max_active: cfg.max_active.max(1),
+                max_prefill_per_step: cfg.max_prefill_per_step.max(1),
+            },
+            waiting: VecDeque::new(),
+            active: Vec::new(),
+            finished: Vec::new(),
+        }
+    }
+
+    /// Queue a request (validated against the model's limits).
+    pub fn submit(&mut self, req: DecodeRequest) -> crate::Result<()> {
+        let dims = *self.engine.model().dims();
+        ensure!(
+            !req.prompt.is_empty() && req.prompt.len() <= dims.seq_len,
+            "prompt length {} out of range 1..={}",
+            req.prompt.len(),
+            dims.seq_len
+        );
+        for &t in &req.prompt {
+            ensure!(
+                t >= 0 && (t as usize) < dims.vocab,
+                "prompt token {t} out of vocab range 0..{}",
+                dims.vocab
+            );
+        }
+        ensure!(req.max_new_tokens >= 1, "max_new_tokens must be >= 1");
+        // fail fast on a bad sampling policy, before admission
+        Sampler::new(&req.sampling)?;
+        self.waiting.push_back((req, Instant::now()));
+        Ok(())
+    }
+
+    /// Requests not yet admitted.
+    pub fn pending(&self) -> usize {
+        self.waiting.len()
+    }
+
+    /// KV-resident sequences.
+    pub fn active(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Total resident KV bytes across live sequences.
+    pub fn kv_resident_bytes(&self) -> usize {
+        self.active.iter().map(|a| a.kv.resident_bytes()).sum()
+    }
+
+    /// Take the results finished so far (sorted by request id).
+    pub fn take_finished(&mut self) -> Vec<DecodeResult> {
+        let mut out = std::mem::take(&mut self.finished);
+        out.sort_by_key(|r| r.id);
+        out
+    }
+
+    /// Run one scheduling iteration: admit, one ragged forward (prefill
+    /// + decode fused), sample, retire. Returns the number of tokens
+    /// generated (0 means fully idle).
+    pub fn step(&mut self) -> crate::Result<usize> {
+        // admit up to the prefill budget while KV slots are free
+        let mut admitted = 0usize;
+        while self.active.len() < self.cfg.max_active
+            && admitted < self.cfg.max_prefill_per_step
+        {
+            let Some((req, submitted)) = self.waiting.pop_front() else {
+                break;
+            };
+            let sampler = Sampler::new(&req.sampling)?;
+            self.active.push(Active {
+                req,
+                submitted,
+                kv: self.engine.new_kv(),
+                sampler,
+                out: Vec::new(),
+                emitted: Vec::new(),
+            });
+            admitted += 1;
+        }
+        if self.active.is_empty() {
+            return Ok(0);
+        }
+
+        // one ragged spine call: whole prompt for fresh sequences, one
+        // token for live ones
+        let mut tokens = Vec::new();
+        let mut lens = Vec::with_capacity(self.active.len());
+        for a in &self.active {
+            if a.kv.len() == 0 {
+                tokens.extend_from_slice(&a.req.prompt);
+                lens.push(a.req.prompt.len());
+            } else {
+                tokens.push(*a.out.last().expect("decoding seq has a token"));
+                lens.push(1);
+            }
+        }
+        let mut kvs: Vec<SeqKv> = self
+            .active
+            .iter_mut()
+            .map(|a| std::mem::take(&mut a.kv))
+            .collect();
+        let logits = match self.engine.step_ragged(&tokens, &lens, &mut kvs) {
+            Ok(logits) => {
+                for (a, kv) in self.active.iter_mut().zip(kvs) {
+                    a.kv = kv;
+                }
+                logits
+            }
+            Err(e) => {
+                // a failed forward may leave partial K/V rows in the
+                // caches (forward_ragged's contract) — they are
+                // unusable, so the in-flight sequences are dropped
+                // rather than resumed against corrupt state. submit()
+                // validation makes this unreachable in practice.
+                self.active.clear();
+                return Err(e);
+            }
+        };
+        let now = Instant::now();
+        let vocab = self.engine.model().dims().vocab;
+        let seq_cap = self.engine.model().dims().seq_len;
+
+        // sample one token per sequence, then retire finished ones
+        let mut produced = 0usize;
+        let mut b = 0usize;
+        let mut i = 0usize;
+        while i < self.active.len() {
+            let a = &mut self.active[i];
+            let tok = a.sampler.pick(&logits[b * vocab..(b + 1) * vocab]);
+            a.out.push(tok);
+            a.emitted.push(now);
+            produced += 1;
+            b += 1;
+            let finish = if a.req.eos == Some(tok) {
+                Some(FinishReason::Eos)
+            } else if a.out.len() >= a.req.max_new_tokens {
+                Some(FinishReason::MaxTokens)
+            } else if a.kv.len() >= seq_cap {
+                // the sampled token has no position left to occupy
+                Some(FinishReason::ContextFull)
+            } else {
+                None
+            };
+            match finish {
+                Some(f) => {
+                    let done = self.active.remove(i);
+                    self.finished.push(finalize(done, f));
+                }
+                None => i += 1,
+            }
+        }
+        Ok(produced)
+    }
+
+    /// Drive [`Scheduler::step`] until every submitted request has
+    /// finished; returns all results sorted by request id.
+    pub fn run(&mut self) -> crate::Result<Vec<DecodeResult>> {
+        while !self.waiting.is_empty() || !self.active.is_empty() {
+            self.step()?;
+        }
+        Ok(self.take_finished())
+    }
+}
+
+fn finalize(a: Active, finish: FinishReason) -> DecodeResult {
+    let ttft = a
+        .emitted
+        .first()
+        .map(|t| t.duration_since(a.submitted))
+        .unwrap_or_default();
+    let itl = a
+        .emitted
+        .windows(2)
+        .map(|w| w[1].duration_since(w[0]))
+        .collect();
+    DecodeResult {
+        id: a.req.id,
+        prompt_len: a.req.prompt.len(),
+        tokens: a.out,
+        finish,
+        ttft,
+        itl,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::Params;
+    use crate::runtime::artifacts::ModelDims;
+    use crate::runtime::qconfig::{PerLayerQConfig, QConfig};
+    use crate::serve::cache::OperandCache;
+    use crate::serve::packed_model::PackedModel;
+    use std::sync::Arc;
+
+    fn engine() -> DecodeEngine {
+        let dims = ModelDims {
+            vocab: 32,
+            d_model: 32,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 64,
+            seq_len: 8,
+        };
+        let params = Params::init_surrogate(&dims, 33);
+        let cache = OperandCache::new(32);
+        let qcfg = PerLayerQConfig::uniform(QConfig::fp4("ue4m3").unwrap());
+        let model = Arc::new(
+            PackedModel::build(&dims, &params, &qcfg, 8, &cache).unwrap(),
+        );
+        DecodeEngine::new(model).unwrap()
+    }
+
+    fn req(id: u64, prompt: Vec<i32>, max_new: usize) -> DecodeRequest {
+        DecodeRequest {
+            id,
+            prompt,
+            max_new_tokens: max_new,
+            eos: None,
+            sampling: Sampling::Greedy,
+        }
+    }
+
+    #[test]
+    fn drains_more_requests_than_slots() {
+        let mut s = Scheduler::new(
+            engine(),
+            SchedulerConfig { max_active: 2, max_prefill_per_step: 1 },
+        );
+        for id in 0..5 {
+            s.submit(req(id, vec![1, 2, 3], 3)).unwrap();
+        }
+        assert_eq!(s.pending(), 5);
+        let results = s.run().unwrap();
+        assert_eq!(results.len(), 5);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.tokens.len(), 3);
+            assert_eq!(r.finish, FinishReason::MaxTokens);
+            assert_eq!(r.itl.len(), 2);
+        }
+        assert_eq!((s.pending(), s.active()), (0, 0));
+        assert_eq!(s.kv_resident_bytes(), 0);
+    }
+
+    #[test]
+    fn context_full_stops_generation() {
+        let mut s = Scheduler::new(engine(), SchedulerConfig::default());
+        // prompt fills 7 of 8 positions: token 1 lands the cache at 8
+        // after the feed-back step, so exactly 2 tokens fit
+        s.submit(req(9, vec![0; 7], 100)).unwrap();
+        let r = &s.run().unwrap()[0];
+        assert_eq!(r.tokens.len(), 2);
+        assert_eq!(r.finish, FinishReason::ContextFull);
+        // a full-window prompt still yields exactly one token
+        s.submit(req(10, vec![0; 8], 100)).unwrap();
+        let r = &s.run().unwrap()[0];
+        assert_eq!(r.tokens.len(), 1);
+        assert_eq!(r.finish, FinishReason::ContextFull);
+    }
+
+    #[test]
+    fn submit_validates_requests() {
+        let mut s = Scheduler::new(engine(), SchedulerConfig::default());
+        assert!(s.submit(req(0, vec![], 3)).is_err());
+        assert!(s.submit(req(0, vec![0; 9], 3)).is_err());
+        assert!(s.submit(req(0, vec![99], 3)).is_err());
+        assert!(s.submit(req(0, vec![1], 0)).is_err());
+        let bad_temp = DecodeRequest {
+            sampling: Sampling::Temperature { temp: -1.0, seed: 0 },
+            ..req(0, vec![1], 3)
+        };
+        assert!(s.submit(bad_temp).is_err());
+        assert_eq!(s.pending(), 0);
+    }
+}

@@ -1,0 +1,321 @@
+//! Decode subsystem acceptance suite (ISSUE-4).
+//!
+//! Pins the load-bearing guarantees of KV-cached autoregressive
+//! generation:
+//!
+//! 1. **Step-wise differential exactness** — at every generated token,
+//!    the KV-cached step's logits are bit-identical to re-running the
+//!    scalar fake-quant `reference_forward` on the **full prefix**,
+//!    across {FP4, FP8} × {UE4M3, UE5M3} × block sizes {8, 32} and a
+//!    mixed per-layer config (packed + reference-path INT4 +
+//!    bf16-exact layers in one model).
+//! 2. **Chunked prefill exactness** — splitting a prompt across
+//!    prefill calls changes nothing.
+//! 3. **Scheduler stream invariance** — same seeds ⇒ same token
+//!    streams, regardless of admission order, concurrency limits, or
+//!    GEMM threading; streams equal the cache-free re-forward oracle.
+//! 4. **Stop conditions** — eos, max-tokens, and context-full retire
+//!    sequences correctly, with populated TTFT/ITL metrics.
+
+use std::sync::Arc;
+
+use microscale::dist::Pcg64;
+use microscale::model::Params;
+use microscale::quant::gemm::PackedGemm;
+use microscale::runtime::artifacts::ModelDims;
+use microscale::runtime::qconfig::{PerLayerQConfig, QConfig};
+use microscale::serve::cache::OperandCache;
+use microscale::serve::decode::generate_reforward;
+use microscale::serve::packed_model::{reference_forward, PackedModel};
+use microscale::serve::scheduler::{
+    DecodeRequest, FinishReason, Scheduler, SchedulerConfig,
+};
+use microscale::serve::{DecodeEngine, Sampling};
+
+fn dims() -> ModelDims {
+    ModelDims {
+        vocab: 32,
+        d_model: 32,
+        n_heads: 2,
+        n_layers: 2,
+        d_ff: 64,
+        seq_len: 10,
+    }
+}
+
+fn tokens(rng: &mut Pcg64, d: &ModelDims, count: usize) -> Vec<i32> {
+    (0..count).map(|_| (rng.next_u64() % d.vocab as u64) as i32).collect()
+}
+
+fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.to_bits(), y.to_bits(), "{what}: element {i} {x} vs {y}");
+    }
+}
+
+/// Feed `toks[prompt_len..]` one token at a time through the cached
+/// engine and assert every step's logits equal the full-prefix scalar
+/// reference bit for bit.
+fn assert_stepwise_differential(
+    model: &Arc<PackedModel>,
+    params: &Params,
+    qcfg: &PerLayerQConfig,
+    block_size: usize,
+    toks: &[i32],
+    prompt_len: usize,
+    what: &str,
+) {
+    let d = *model.dims();
+    let engine = DecodeEngine::new(model.clone()).unwrap();
+    let mut kv = engine.new_kv();
+    let mut got = engine.prefill(&toks[..prompt_len], &mut kv).unwrap();
+    for t in prompt_len..=toks.len() {
+        // `got` holds the cached-step logits for the t-token prefix;
+        // the oracle recomputes that prefix from scratch
+        let want = reference_forward(
+            params,
+            &d,
+            qcfg,
+            block_size,
+            &toks[..t],
+            1,
+            t,
+        )
+        .unwrap();
+        assert_bits_eq(
+            &got,
+            &want[(t - 1) * d.vocab..t * d.vocab],
+            &format!("{what}: step logits at prefix {t}"),
+        );
+        if t == toks.len() {
+            break;
+        }
+        got = engine.step(&[toks[t]], std::slice::from_mut(&mut kv)).unwrap();
+        assert_eq!(kv.len(), t + 1, "{what}: cache length");
+    }
+}
+
+#[test]
+fn cached_decode_matches_full_prefix_reference_across_grid() {
+    let d = dims();
+    let params = Params::init_surrogate(&d, 17);
+    assert_eq!(params.max_positions().unwrap(), d.seq_len);
+    let cache = OperandCache::new(256);
+    let mut rng = Pcg64::new(50);
+    for elem in ["fp4_e2m1", "fp8_e4m3"] {
+        for scale in ["ue4m3", "ue5m3"] {
+            for bs in [8usize, 32] {
+                let qcfg = PerLayerQConfig::uniform(
+                    QConfig::named(elem, scale, false).unwrap(),
+                );
+                let model = Arc::new(
+                    PackedModel::build(&d, &params, &qcfg, bs, &cache)
+                        .unwrap(),
+                );
+                // the grid must exercise the packed engine, not a
+                // fallback
+                assert_eq!(
+                    model.path_summary().packed,
+                    d.n_layers * 6,
+                    "{elem}/{scale}/bs{bs}"
+                );
+                let toks = tokens(&mut rng, &d, d.seq_len);
+                assert_stepwise_differential(
+                    &model,
+                    &params,
+                    &qcfg,
+                    bs,
+                    &toks,
+                    3,
+                    &format!("{elem}/{scale}/bs{bs}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mixed_per_layer_config_decodes_exactly() {
+    let d = ModelDims { n_layers: 3, ..dims() };
+    let params = Params::init_surrogate(&d, 18);
+    let cache = OperandCache::new(256);
+    let mut rng = Pcg64::new(51);
+    // one model spanning all three linear paths: packed FP4 bulk,
+    // reference-path INT4, and an exact bf16 layer
+    let qcfg = PerLayerQConfig::uniform(QConfig::fp4("ue5m3").unwrap())
+        .with_override(0, QConfig::named("int4", "ue4m3", false).unwrap())
+        .with_override(2, QConfig::baseline());
+    let model =
+        Arc::new(PackedModel::build(&d, &params, &qcfg, 8, &cache).unwrap());
+    let s = model.path_summary();
+    assert_eq!((s.exact, s.packed, s.reference), (6, 6, 6));
+    let toks = tokens(&mut rng, &d, d.seq_len);
+    assert_stepwise_differential(
+        &model, &params, &qcfg, 8, &toks, 2, "mixed",
+    );
+}
+
+#[test]
+fn chunked_prefill_is_bit_identical_to_one_shot() {
+    let d = dims();
+    let params = Params::init_surrogate(&d, 19);
+    let cache = OperandCache::new(64);
+    let qcfg = PerLayerQConfig::uniform(QConfig::fp4("ue4m3").unwrap());
+    let model =
+        Arc::new(PackedModel::build(&d, &params, &qcfg, 8, &cache).unwrap());
+    let engine = DecodeEngine::new(model).unwrap();
+    let mut rng = Pcg64::new(52);
+    let toks = tokens(&mut rng, &d, 7);
+
+    let mut kv_once = engine.new_kv();
+    let once = engine.prefill(&toks, &mut kv_once).unwrap();
+    let mut kv_split = engine.new_kv();
+    engine.prefill(&toks[..3], &mut kv_split).unwrap();
+    let split = engine.prefill(&toks[3..], &mut kv_split).unwrap();
+    assert_eq!((kv_once.len(), kv_split.len()), (7, 7));
+    assert_bits_eq(&once, &split, "chunked prefill last-token logits");
+
+    // and the caches are interchangeable for the next step
+    let a = engine.step(&[5], std::slice::from_mut(&mut kv_once)).unwrap();
+    let b = engine.step(&[5], std::slice::from_mut(&mut kv_split)).unwrap();
+    assert_bits_eq(&a, &b, "step after chunked prefill");
+}
+
+#[test]
+fn scheduler_streams_are_invariant_to_order_concurrency_and_threads() {
+    let d = dims();
+    let params = Params::init_surrogate(&d, 20);
+    let cache = OperandCache::new(256);
+    let qcfg = PerLayerQConfig::uniform(QConfig::fp4("ue5m3").unwrap());
+    let model =
+        Arc::new(PackedModel::build(&d, &params, &qcfg, 8, &cache).unwrap());
+    let mut rng = Pcg64::new(53);
+    let reqs: Vec<DecodeRequest> = (0..6)
+        .map(|id| {
+            let prompt_len = 2 + (id as usize % 3);
+            DecodeRequest {
+                id,
+                prompt: tokens(&mut rng, &d, prompt_len),
+                max_new_tokens: 3 + (id as usize % 4),
+                eos: None,
+                sampling: if id % 2 == 0 {
+                    Sampling::Greedy
+                } else {
+                    Sampling::Temperature { temp: 0.7, seed: 1000 + id }
+                },
+            }
+        })
+        .collect();
+
+    // oracle: each request generated alone, cache-free, full re-forward
+    let want: Vec<Vec<i32>> = reqs
+        .iter()
+        .map(|r| {
+            generate_reforward(
+                &model,
+                &r.prompt,
+                r.max_new_tokens,
+                r.eos,
+                &r.sampling,
+            )
+            .unwrap()
+        })
+        .collect();
+
+    // serial-GEMM twin of the same model: "worker count" knob
+    let serial = Arc::new(
+        PackedModel::build(&d, &params, &qcfg, 8, &cache)
+            .unwrap()
+            .with_gemm(PackedGemm::serial()),
+    );
+    let runs: Vec<(Arc<PackedModel>, SchedulerConfig, bool)> = vec![
+        (
+            model.clone(),
+            SchedulerConfig { max_active: 2, max_prefill_per_step: 1 },
+            false,
+        ),
+        (
+            model.clone(),
+            SchedulerConfig { max_active: 6, max_prefill_per_step: 6 },
+            true, // reversed admission order
+        ),
+        (
+            serial,
+            SchedulerConfig { max_active: 3, max_prefill_per_step: 2 },
+            true,
+        ),
+    ];
+    for (m, cfg, reversed) in runs {
+        let mut sched = Scheduler::new(DecodeEngine::new(m).unwrap(), cfg);
+        let order: Vec<usize> = if reversed {
+            (0..reqs.len()).rev().collect()
+        } else {
+            (0..reqs.len()).collect()
+        };
+        for &i in &order {
+            sched.submit(reqs[i].clone()).unwrap();
+        }
+        let results = sched.run().unwrap();
+        assert_eq!(results.len(), reqs.len());
+        for (r, w) in results.iter().zip(&want) {
+            assert_eq!(
+                r.tokens, *w,
+                "request {} stream (max_active {}, reversed {reversed})",
+                r.id, cfg.max_active
+            );
+            assert_eq!(r.finish, FinishReason::MaxTokens, "request {}", r.id);
+            assert_eq!(r.itl.len(), r.tokens.len() - 1, "request {}", r.id);
+        }
+    }
+}
+
+#[test]
+fn eos_and_context_full_retire_sequences() {
+    let d = dims();
+    let params = Params::init_surrogate(&d, 22);
+    let cache = OperandCache::new(64);
+    let qcfg = PerLayerQConfig::uniform(QConfig::fp4("ue4m3").unwrap());
+    let model =
+        Arc::new(PackedModel::build(&d, &params, &qcfg, 8, &cache).unwrap());
+    let mut rng = Pcg64::new(54);
+    let prompt = tokens(&mut rng, &d, 3);
+
+    // learn the free-running greedy stream, then stop on its 3rd token
+    let free =
+        generate_reforward(&model, &prompt, 5, None, &Sampling::Greedy)
+            .unwrap();
+    assert_eq!(free.len(), 5);
+    let eos = free[2];
+    let cut = free.iter().position(|&t| t == eos).unwrap();
+    let mut sched =
+        Scheduler::new(DecodeEngine::new(model.clone()).unwrap(), SchedulerConfig::default());
+    sched
+        .submit(DecodeRequest {
+            id: 0,
+            prompt: prompt.clone(),
+            max_new_tokens: 5,
+            eos: Some(eos),
+            sampling: Sampling::Greedy,
+        })
+        .unwrap();
+    let r = &sched.run().unwrap()[0];
+    assert_eq!(r.tokens, free[..=cut].to_vec());
+    assert_eq!(r.finish, FinishReason::Eos);
+    assert_eq!(r.prompt_len, prompt.len());
+
+    // a window-filling request retires as ContextFull with metrics
+    sched
+        .submit(DecodeRequest {
+            id: 1,
+            prompt: tokens(&mut rng, &d, d.seq_len - 1),
+            max_new_tokens: 100,
+            eos: None,
+            sampling: Sampling::Greedy,
+        })
+        .unwrap();
+    let r = &sched.run().unwrap()[0];
+    assert_eq!(r.finish, FinishReason::ContextFull);
+    assert_eq!(r.tokens.len(), 2);
+    assert_eq!(r.itl.len(), 1);
+}

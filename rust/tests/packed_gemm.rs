@@ -136,6 +136,63 @@ fn gemm_determinism_across_threads_and_tiles() {
 }
 
 #[test]
+fn single_row_fast_path_is_bit_identical_to_tiled_threaded() {
+    // m = 1 (the KV-cached decode step shape) takes the serial
+    // short-circuit inside PackedGemm::matmul — no plan_threads, no
+    // par_chunks_mut. It must be bit-identical both to the explicitly
+    // tiled/threaded engine on the same operands and to the decode
+    // reference, for FP and INT elements alike.
+    let mut rng = Pcg64::new(0x1A07);
+    let (k, n) = (96, 29);
+    let x = rng.normal_vec_f32(k, 5e-3);
+    let w = rng.normal_vec_f32(k * n, 5e-3);
+    for scheme in [
+        QuantScheme::new(ElemFormat::FP4, UE5M3, 8),
+        QuantScheme::new(ElemFormat::Fp(FP6_E2M3), UE4M3, 16),
+        QuantScheme::new(ElemFormat::FP8, UE4M3, 16),
+        QuantScheme::new(ElemFormat::INT4, UE4M3, 8),
+    ] {
+        let xo = GemmOperand::quantize(&scheme, &x, 1, k).unwrap();
+        let wo = GemmOperand::quantize_transposed(&scheme, &w, k, n).unwrap();
+        let fast = PackedGemm::auto().matmul(&xo, &wo).unwrap();
+        // an engine that would thread if it could (par_threshold 0):
+        // m = 1 must still take the serial path and match bytes
+        for tile_n in [1, 8, 256] {
+            let forced = PackedGemm { tile_n, threads: 8, par_threshold: 0 }
+                .matmul(&xo, &wo)
+                .unwrap();
+            assert_bits_eq(
+                &forced,
+                &fast,
+                &format!("{} m=1 tile {tile_n}", scheme.id()),
+            );
+        }
+        if matches!(scheme.elem, ElemFormat::Fp(_)) {
+            let want = matmul_t(&xo.decode(), &wo.decode(), 1, k, n);
+            assert_bits_eq(
+                &fast,
+                &want,
+                &format!("{} m=1 vs decode reference", scheme.id()),
+            );
+        }
+        // the single row of a taller multiply matches the m=1 result:
+        // the short-circuit changes setup, never accumulation order
+        let x3 = {
+            let mut v = x.clone();
+            v.extend(rng.normal_vec_f32(2 * k, 5e-3));
+            v
+        };
+        let xo3 = GemmOperand::quantize(&scheme, &x3, 3, k).unwrap();
+        let tall = PackedGemm::auto().matmul(&xo3, &wo).unwrap();
+        assert_bits_eq(
+            &tall[..n],
+            &fast,
+            &format!("{} row 0 of m=3", scheme.id()),
+        );
+    }
+}
+
+#[test]
 fn chunked_kernel_determinism_across_threads_and_tiles() {
     use microscale::quant::ChunkedKernel;
     let mut rng = Pcg64::new(0xC4A);

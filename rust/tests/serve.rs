@@ -16,9 +16,16 @@
 //! 4. **Operand-cache correctness** — cache hits return the operand the
 //!    first encode produced (bit-identical, same allocation), and
 //!    `quantized_matmul` reuses cached weight operands across calls.
+//! 5. **Batcher state machine** (ISSUE-4) — the release rules match a
+//!    naive declarative reference over fuzzed arrival/length streams,
+//!    pinning the PR-3 size-trigger fix (a full non-head group releases
+//!    ahead of an idle incompatible head) so it cannot regress.
+//! 6. **Cache eviction boundaries** (ISSUE-4) — byte-budget exact-fit,
+//!    oversized single operands, and FIFO-under-hits entry-cap cases,
+//!    with `resident_bytes` accounting exact after every eviction.
 
-use std::sync::Arc;
-use std::time::Duration;
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 use microscale::dist::Pcg64;
 use microscale::formats::{ElemFormat, UE5M3};
@@ -28,7 +35,7 @@ use microscale::quant::matmul::{quantized_matmul, quantized_matmul_with};
 use microscale::quant::{QuantScheme, ScalarKernel};
 use microscale::runtime::artifacts::ModelDims;
 use microscale::runtime::qconfig::{PerLayerQConfig, QConfig};
-use microscale::serve::batcher::BatcherConfig;
+use microscale::serve::batcher::{Batcher, BatcherConfig, Request};
 use microscale::serve::cache::{operand_cache, OperandCache};
 use microscale::serve::engine::{EngineConfig, ServeEngine};
 use microscale::serve::packed_model::{reference_forward, PackedModel};
@@ -275,6 +282,221 @@ fn operand_cache_hits_are_bit_identical_to_fresh_encodes() {
     let via_cache = PackedGemm::serial().matmul(&xo, &first).unwrap();
     let via_fresh = PackedGemm::serial().matmul(&xo, &fresh).unwrap();
     assert_bits_eq(&via_cache, &via_fresh, "matmul");
+}
+
+/// A declarative model of the batcher's release state machine
+/// (DESIGN.md §9): the head's equal-seq group releases on
+/// size/deadline/drain; otherwise the first-seen *full* non-head group
+/// releases on size alone (the PR-3 fix this suite pins). Operates on
+/// plain `(id, seq)` pairs so divergence from the real collector is a
+/// bug in exactly one of them.
+struct RefBatcher {
+    queue: Vec<(u64, usize)>,
+    max_batch: usize,
+}
+
+impl RefBatcher {
+    fn collect(&mut self, deadline_hit: bool, closed: bool) -> Option<Vec<u64>> {
+        let head_seq = self.queue.first()?.1;
+        let head_group: Vec<usize> = (0..self.queue.len())
+            .filter(|&i| self.queue[i].1 == head_seq)
+            .take(self.max_batch)
+            .collect();
+        let take = if head_group.len() == self.max_batch
+            || deadline_hit
+            || closed
+        {
+            head_group
+        } else {
+            // distinct non-head lengths in first-appearance order; the
+            // first one with a full group releases
+            let mut seen = Vec::new();
+            let mut full: Option<Vec<usize>> = None;
+            for &(_, seq) in &self.queue {
+                if seq == head_seq || seen.contains(&seq) {
+                    continue;
+                }
+                seen.push(seq);
+                let group: Vec<usize> = (0..self.queue.len())
+                    .filter(|&i| self.queue[i].1 == seq)
+                    .take(self.max_batch)
+                    .collect();
+                if group.len() == self.max_batch {
+                    full = Some(group);
+                    break;
+                }
+            }
+            full?
+        };
+        let ids = take.iter().map(|&i| self.queue[i].0).collect();
+        for &i in take.iter().rev() {
+            self.queue.remove(i);
+        }
+        Some(ids)
+    }
+}
+
+fn raw_request(id: u64, seq: usize) -> Request {
+    let (tx, _rx) = mpsc::channel();
+    Request { id, tokens: vec![0; seq], seq, enqueued: Instant::now(), done: tx }
+}
+
+/// `next_batch()` bounded to 10 s: the fuzz suites only call it when
+/// the reference model says a release is due, so a regression in the
+/// release rules must fail fast instead of sleeping out the huge
+/// `max_wait` the size-trigger tests pin the deadline arm shut with.
+fn next_ids_bounded(b: &Arc<Batcher>) -> Option<Vec<u64>> {
+    let (tx, rx) = mpsc::channel();
+    let bb = Arc::clone(b);
+    std::thread::spawn(move || {
+        let ids = bb
+            .next_batch()
+            .map(|v| v.iter().map(|r| r.id).collect::<Vec<u64>>());
+        let _ = tx.send(ids);
+    });
+    rx.recv_timeout(Duration::from_secs(10))
+        .expect("batcher blocked although the reference says a release is due")
+}
+
+#[test]
+fn batcher_fuzz_matches_naive_reference_size_and_drain_triggers() {
+    // max_wait is huge, so pre-close releases come from the size
+    // trigger alone and post-close from the drain trigger — both
+    // deterministic, both checked batch-for-batch against RefBatcher
+    // over random arrival/length streams.
+    for seed in 0..25u64 {
+        let mut rng = Pcg64::new(0xBA7C + seed);
+        let max_batch = 1 + (rng.next_u64() % 4) as usize;
+        let b = Arc::new(Batcher::new(BatcherConfig {
+            max_batch,
+            max_wait: Duration::from_secs(3600),
+        }));
+        let mut naive = RefBatcher { queue: Vec::new(), max_batch };
+        for id in 0..40u64 {
+            let seq = [4usize, 8, 12][(rng.next_u64() % 3) as usize];
+            assert!(b.submit(raw_request(id, seq)));
+            naive.queue.push((id, seq));
+            while let Some(want) = naive.collect(false, false) {
+                let got = next_ids_bounded(&b).unwrap();
+                assert_eq!(got, want, "seed {seed} bs{max_batch} size trigger");
+                assert_eq!(b.pending(), naive.queue.len(), "seed {seed}");
+            }
+        }
+        b.close();
+        loop {
+            let want = naive.collect(true, true);
+            let got = next_ids_bounded(&b);
+            assert_eq!(got, want, "seed {seed} bs{max_batch} drain");
+            if want.is_none() {
+                break;
+            }
+        }
+        assert_eq!(b.pending(), 0);
+    }
+}
+
+#[test]
+fn batcher_fuzz_matches_naive_reference_deadline_trigger() {
+    // max_wait zero: the head's deadline has always passed, so every
+    // collection releases the head group (possibly partial) — the
+    // deadline arm of the state machine, again batch-for-batch.
+    for seed in 0..10u64 {
+        let mut rng = Pcg64::new(0xDEAD + seed);
+        let max_batch = 1 + (rng.next_u64() % 4) as usize;
+        let b = Arc::new(Batcher::new(BatcherConfig {
+            max_batch,
+            max_wait: Duration::ZERO,
+        }));
+        let mut naive = RefBatcher { queue: Vec::new(), max_batch };
+        for id in 0..24u64 {
+            let seq = [4usize, 8][(rng.next_u64() % 2) as usize];
+            assert!(b.submit(raw_request(id, seq)));
+            naive.queue.push((id, seq));
+        }
+        while let Some(want) = naive.collect(true, false) {
+            let got = next_ids_bounded(&b).unwrap();
+            assert_eq!(got, want, "seed {seed} bs{max_batch} deadline");
+        }
+        assert_eq!(b.pending(), 0);
+    }
+}
+
+#[test]
+fn operand_cache_byte_budget_boundaries() {
+    // each transposed 8x3 FP4/bs8 operand resides at exactly 36 bytes
+    // (3x8 code bytes + 3 f32 scales); budgets are chosen around that
+    let scheme = QuantScheme::new(ElemFormat::FP4, UE5M3, 8);
+    let mut rng = Pcg64::new(0xCAFE);
+    let mut tensor = || rng.normal_vec_f32(8 * 3, 0.02);
+
+    // exact fit: two operands == the budget, byte for byte — the third
+    // insert evicts exactly one entry, and accounting stays exact
+    let cache = OperandCache::with_byte_cap(64, 72);
+    let a = cache.get_or_pack_transposed(&scheme, &tensor(), 8, 3).unwrap();
+    let b = cache.get_or_pack_transposed(&scheme, &tensor(), 8, 3).unwrap();
+    assert_eq!(a.resident_bytes() + b.resident_bytes(), 72);
+    assert_eq!(cache.stats().resident_bytes, 72);
+    assert_eq!(cache.stats().evictions, 0);
+    let c = cache.get_or_pack_transposed(&scheme, &tensor(), 8, 3).unwrap();
+    let s = cache.stats();
+    assert_eq!((s.entries, s.evictions), (2, 1));
+    assert_eq!(s.resident_bytes, b.resident_bytes() + c.resident_bytes());
+
+    // a single operand over the whole budget is served but cannot stay
+    // resident: the cache evicts down to empty and accounts to zero
+    let cache = OperandCache::with_byte_cap(64, 35);
+    let w = tensor();
+    let big = cache.get_or_pack_transposed(&scheme, &w, 8, 3).unwrap();
+    assert_eq!(big.resident_bytes(), 36);
+    let s = cache.stats();
+    assert_eq!((s.entries, s.resident_bytes, s.evictions), (0, 0, 1));
+    // the returned operand is fully usable despite eviction
+    assert_eq!(big.decode().len(), 3 * 8);
+    // and re-requesting it is a fresh miss, not a corrupt hit
+    let again = cache.get_or_pack_transposed(&scheme, &w, 8, 3).unwrap();
+    assert_eq!(cache.stats().misses, 2);
+    assert_eq!(big.bits_digest(), again.bits_digest());
+}
+
+#[test]
+fn operand_cache_entry_cap_is_fifo_under_mixed_hits() {
+    let scheme = QuantScheme::new(ElemFormat::FP4, UE5M3, 8);
+    let mut rng = Pcg64::new(0xF1F0);
+    let mut tensor = || rng.normal_vec_f32(8 * 3, 0.02);
+    let cache = OperandCache::new(3);
+    let (wa, wb, wc, wd) = (tensor(), tensor(), tensor(), tensor());
+    let a = cache.get_or_pack_transposed(&scheme, &wa, 8, 3).unwrap();
+    let b = cache.get_or_pack_transposed(&scheme, &wb, 8, 3).unwrap();
+    let c = cache.get_or_pack_transposed(&scheme, &wc, 8, 3).unwrap();
+    // a hit on the oldest entry does NOT refresh its position (FIFO,
+    // not LRU — insertion order is the only order)
+    let a_hit = cache.get_or_pack_transposed(&scheme, &wa, 8, 3).unwrap();
+    assert!(Arc::ptr_eq(&a, &a_hit));
+    let d = cache.get_or_pack_transposed(&scheme, &wd, 8, 3).unwrap();
+    let s = cache.stats();
+    assert_eq!((s.entries, s.evictions, s.hits, s.misses), (3, 1, 1, 4));
+    assert_eq!(
+        s.resident_bytes,
+        b.resident_bytes() + c.resident_bytes() + d.resident_bytes()
+    );
+    // B, C, D are still resident hits (and hits never reorder FIFO)
+    let hits_before = cache.stats().hits;
+    for w in [&wb, &wc, &wd] {
+        cache.get_or_pack_transposed(&scheme, w, 8, 3).unwrap();
+    }
+    assert_eq!(cache.stats().hits, hits_before + 3);
+    // A was evicted despite its recent hit: this get re-encodes (a
+    // fresh allocation with identical bits), evicting B next in line
+    let misses_before = cache.stats().misses;
+    let a2 = cache.get_or_pack_transposed(&scheme, &wa, 8, 3).unwrap();
+    let s = cache.stats();
+    assert_eq!((s.misses, s.evictions), (misses_before + 1, 2));
+    assert!(!Arc::ptr_eq(&a, &a2));
+    assert_eq!(a.bits_digest(), a2.bits_digest());
+    assert_eq!(
+        s.resident_bytes,
+        c.resident_bytes() + d.resident_bytes() + a2.resident_bytes()
+    );
 }
 
 #[test]
