@@ -1,12 +1,13 @@
 //! Quickstart: quantize a tensor with every scale format of the paper,
 //! see the anomaly, store it on real packed bytes, multiply it natively
 //! in the packed code domain, serve a whole transformer on prepacked
-//! weights, generate tokens through the KV-cached scheduler, and (when
+//! weights, generate tokens through the KV-cached scheduler, run
+//! memory-bounded generation with an MX-quantized KV cache, and (when
 //! artifacts are present) run the L1 Pallas kernel artifact through
 //! PJRT.
 //!
 //! ```bash
-//! cargo run --release --example quickstart          # steps 1-6
+//! cargo run --release --example quickstart          # steps 1-7
 //! make artifacts && cargo run --release --example quickstart  # + PJRT
 //! ```
 
@@ -188,7 +189,62 @@ fn main() -> anyhow::Result<()> {
     }
     println!("Scheduler: 4 seeded streams generated, KV-cached ✓\n");
 
-    // 7) The same quantizer as an AOT Pallas kernel through PJRT
+    // 7) Memory-bounded generation: the same scheduler over a paged,
+    //    byte-budgeted KV pool whose pages quantize the cache itself to
+    //    MXFP8 (UE5M3 scales). The budget holds ~1.5 sequences, so
+    //    requests queue / evict-and-requeue at capacity instead of
+    //    growing memory without bound — and the KV cache costs a
+    //    fraction of f32.
+    let model = std::sync::Arc::new(microscale::serve::PackedModel::build(
+        &dims,
+        &params,
+        &qcfg,
+        16,
+        microscale::serve::operand_cache(),
+    )?);
+    let kv_cfg = microscale::runtime::qconfig::PerLayerQConfig::uniform(
+        microscale::runtime::QConfig::named("fp8_e4m3", "ue5m3", false)?,
+    );
+    let probe =
+        microscale::serve::KvPool::build(&dims, &kv_cfg, 16, 4, usize::MAX)?;
+    let exact = microscale::serve::KvPool::exact(&dims, 4, usize::MAX)?;
+    println!(
+        "KvPool codec {}: {} B/position vs {} B/position f32",
+        probe.codec_id(0),
+        probe.position_bytes(),
+        exact.position_bytes(),
+    );
+    let budget = probe.bytes_for_positions(dims.seq_len) * 3 / 2;
+    let pool =
+        microscale::serve::KvPool::build(&dims, &kv_cfg, 16, 4, budget)?;
+    let mut sched = microscale::serve::Scheduler::new(
+        microscale::serve::DecodeEngine::with_pool(model, pool.clone())?,
+        microscale::serve::SchedulerConfig::default(),
+    );
+    for id in 0..4u64 {
+        let prompt: Vec<i32> = (0..6)
+            .map(|_| (rng.next_u64() % dims.vocab as u64) as i32)
+            .collect();
+        sched.submit(microscale::serve::DecodeRequest {
+            id,
+            prompt,
+            max_new_tokens: 8,
+            eos: None,
+            sampling: microscale::serve::Sampling::Greedy,
+        })?;
+    }
+    let results = sched.run()?;
+    println!(
+        "KvPool: {} requests under a {} B budget — peak resident {} B, \
+         {} preemptions, accounting drained to {} B ✓\n",
+        results.len(),
+        pool.budget_bytes(),
+        sched.peak_kv_resident_bytes(),
+        sched.preemptions(),
+        pool.used_bytes(),
+    );
+
+    // 8) The same quantizer as an AOT Pallas kernel through PJRT
     //    (optional: needs `make artifacts` and a native PJRT build).
     let manifest = match Manifest::load(std::path::Path::new("artifacts")) {
         Ok(m) => m,

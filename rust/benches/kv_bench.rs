@@ -1,0 +1,17 @@
+//! Memory-bounded KV benchmark: thin wrapper over the same driver that
+//! backs `microscale kv-bench` (`microscale::serve::kv_bench`), so
+//! `cargo bench --bench kv_bench` and the CLI produce identical
+//! `BENCH_kv.json` reports (field map in EXPERIMENTS.md §Perf).
+//!
+//! Pass `-- --smoke` (or set `MICROSCALE_BENCH_SMOKE=1`) for the
+//! CI-sized run on a shrunken model.
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("MICROSCALE_BENCH_SMOKE").is_ok();
+    let opts = microscale::serve::kv_bench::KvBenchOpts::new(smoke);
+    if let Err(e) = microscale::serve::kv_bench::run(&opts) {
+        eprintln!("kv bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

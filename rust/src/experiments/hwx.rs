@@ -108,6 +108,7 @@ pub fn sec31_costs() -> String {
         ]);
     }
     let mut out = t.render();
+    out.push_str(&kv_storage_table());
     let mut c = Table::new(
         "Sec. 3.1: scale-fusion multiplier complexity M²·K (K = 24b psum)",
         &["scale fmt", "M (incl implied 1)", "M²·K", "vs UE4M3"],
@@ -128,6 +129,121 @@ pub fn sec31_costs() -> String {
     out.push_str(&native_gemm_table(&mut rng));
     out
 }
+
+/// The Sec. 3.1 storage model applied to the serving path's dominant
+/// memory cost: KV-cache bytes per decoded position, analytic
+/// ([`memory::kv_exact_position_bytes`] /
+/// [`memory::kv_packed_position_bytes`]) vs the bytes a real
+/// [`crate::serve::KvPool`] page codec materializes — plus a live
+/// allocation check: a prefill through the paged decode engine must
+/// leave the pool's exact byte accounting equal to its page-reservation
+/// arithmetic.
+fn kv_storage_table() -> String {
+    use crate::runtime::artifacts::ModelDims;
+    use crate::runtime::qconfig::{PerLayerQConfig, QConfig};
+    use crate::serve::KvPool;
+
+    // llama-8B-class serving shape for the headline numbers
+    let big = ModelDims {
+        vocab: 32000,
+        d_model: 4096,
+        n_heads: 32,
+        n_layers: 32,
+        d_ff: 14336,
+        seq_len: 8192,
+    };
+    let mut t = Table::new(
+        "KV-cache storage per decoded position (d_model 4096, 32 layers)",
+        &["KV codec", "analytic B/pos", "pool B/pos", "x vs f32"],
+    );
+    let exact_b = memory::kv_exact_position_bytes(big.d_model, big.n_layers);
+    let configs: [(&str, KvRowSpec); 4] = [
+        ("f32 (Exact)", None),
+        ("fp8_e4m3/ue4m3 bs32", Some(("fp8_e4m3", "ue4m3", 8, 1, 32))),
+        ("fp4_e2m1/ue4m3 bs32", Some(("fp4_e2m1", "ue4m3", 4, 1, 32))),
+        ("fp4_e2m1/ue5m3 bs8", Some(("fp4_e2m1", "ue5m3", 4, 1, 8))),
+    ];
+    for (label, q) in configs {
+        let (qcfg, analytic, bs) = match q {
+            None => (
+                PerLayerQConfig::uniform(QConfig::baseline()),
+                exact_b,
+                32usize,
+            ),
+            Some((elem, scale, bits, sb, bs)) => (
+                PerLayerQConfig::uniform(
+                    QConfig::named(elem, scale, false).expect("known formats"),
+                ),
+                memory::kv_packed_position_bytes(
+                    big.d_model,
+                    big.n_layers,
+                    bits,
+                    sb,
+                    bs,
+                ),
+                bs,
+            ),
+        };
+        let pool = KvPool::build(&big, &qcfg, bs, 16, usize::MAX)
+            .expect("buildable codec");
+        t.row(vec![
+            label.to_string(),
+            analytic.to_string(),
+            pool.position_bytes().to_string(),
+            format!("{:.2}", exact_b as f64 / pool.position_bytes() as f64),
+        ]);
+    }
+    let mut out = t.render();
+
+    // live check on a tiny model: allocate through a real prefill and
+    // compare the pool's exact accounting against its reservation math
+    let check = || -> crate::Result<bool> {
+        use crate::model::weights::Params;
+        use crate::serve::cache::operand_cache;
+        use crate::serve::{DecodeEngine, PackedModel};
+        let dims = ModelDims {
+            vocab: 32,
+            d_model: 32,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 64,
+            seq_len: 16,
+        };
+        let params = Params::init_surrogate(&dims, 7);
+        let qcfg = PerLayerQConfig::uniform(QConfig::baseline());
+        let model = std::sync::Arc::new(PackedModel::build(
+            &dims,
+            &params,
+            &qcfg,
+            8,
+            operand_cache(),
+        )?);
+        let pool = KvPool::build(
+            &dims,
+            &PerLayerQConfig::uniform(QConfig::fp4("ue4m3")?),
+            8,
+            4,
+            1 << 20,
+        )?;
+        let engine = DecodeEngine::with_pool(model, pool.clone())?;
+        let mut kv = engine.new_kv();
+        engine.prefill(&[1, 2, 3, 4, 5, 6, 7, 8, 9, 10], &mut kv)?;
+        Ok(pool.used_bytes() == pool.bytes_for_positions(10)
+            && kv.resident_bytes() == pool.used_bytes())
+    };
+    out.push_str(&format!(
+        "Live paged-prefill accounting (FP4 KV pages, 10 positions): {}\n",
+        match check() {
+            Ok(true) => "exact",
+            Ok(false) => "MISMATCH (bug!)",
+            Err(_) => "unavailable",
+        }
+    ));
+    out
+}
+
+/// `(elem name, scale name, elem bits, scale bytes, block size)`.
+type KvRowSpec = Option<(&'static str, &'static str, u32, usize, usize)>;
 
 /// The Sec. 3.1 byte accounting priced on a real compute path: GEMM
 /// operands for the native packed engine ([`crate::quant::gemm`]), with
@@ -186,5 +302,12 @@ mod tests {
         assert!(costs.contains("bytes/element"));
         // the native-GEMM check must confirm bit-exactness inline
         assert!(costs.contains("bit-exact"), "{costs}");
+        // ... and the KV storage table must confirm the live pool
+        // accounting check inline
+        assert!(costs.contains("KV-cache storage"), "{costs}");
+        assert!(
+            costs.contains("10 positions): exact"),
+            "live KV pool accounting check failed:\n{costs}"
+        );
     }
 }

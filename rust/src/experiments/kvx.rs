@@ -1,0 +1,264 @@
+//! The in-vivo KV block-size anomaly sweep (`microscale kv-sweep`).
+//!
+//! The paper derives the block-size anomaly on weight tensors; this
+//! experiment reproduces it on **live decode traces**: the post-LN,
+//! post-gain K/V activations an actual KV-cached generation run leaves
+//! behind — exactly the rows the serving stack's `Mx` page codec
+//! ([`crate::serve::kvpool`]) quantizes. The sweep
+//!
+//! 1. runs a greedy generation through [`crate::serve::DecodeEngine`]
+//!    over an Exact [`crate::serve::KvPool`] and captures every cached
+//!    K/V row ([`crate::serve::SeqKv::layer_rows_f32`]);
+//! 2. reports the rows' empirical σ per layer (the statistic Sec. 3.2
+//!    ties the anomaly to);
+//! 3. σ-normalizes the pooled rows onto the narrow regimes real LLM
+//!    KV tensors occupy (the same model-substitution philosophy as
+//!    DESIGN.md §1 — the surrogate's scale is arbitrary, the *shape*
+//!    is live), and
+//! 4. quantizes them across element formats {FP4, FP8} × scale formats
+//!    {UE4M3, UE5M3, BF16} × block sizes, tabulating relative MSE.
+//!
+//! Expected verdicts, mirroring Fig. 2(b,c) in vivo: under UE4M3
+//! scales the error **inverts** (smaller blocks worse — the U-shape)
+//! once σ sits below the collapse threshold; under UE5M3 and BF16
+//! scales it stays monotone. The `kvx` test pins the σ = 5e-3 FP4
+//! verdicts.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::dist::Pcg64;
+use crate::formats::ElemFormat;
+use crate::model::weights::Params;
+use crate::quant::{fake_quant, QuantScheme};
+use crate::report::Table;
+use crate::runtime::artifacts::ModelDims;
+use crate::runtime::qconfig::{PerLayerQConfig, QConfig};
+use crate::serve::cache::operand_cache;
+use crate::serve::{DecodeEngine, KvPool, PackedModel};
+
+/// Block sizes the sweep covers (all divide the sweep model's
+/// `d_model`, so blocks never span rows).
+pub const BLOCK_SIZES: [usize; 4] = [4, 8, 16, 32];
+
+/// σ targets the live rows are normalized onto: both sides of the
+/// UE4M3 collapse threshold (σ ≲ 2e-2, Sec. 3.2).
+pub const SIGMAS: [f64; 3] = [2e-3, 5e-3, 2e-2];
+
+/// One (element, scale, σ-target) curve over [`BLOCK_SIZES`].
+pub struct KvCurve {
+    /// Element format name (`fp4_e2m1`, `fp8_e4m3`).
+    pub elem: String,
+    /// Scale format name (`ue4m3`, `ue5m3`, `bf16`).
+    pub scale: String,
+    /// σ the pooled live rows were normalized to.
+    pub sigma: f64,
+    /// `(block size, MSE / σ²)` points, ascending block size.
+    pub points: Vec<(usize, f64)>,
+}
+
+impl KvCurve {
+    /// `"inverted"` when the smallest block is ≥ 5% worse than the
+    /// largest (the anomaly), `"monotone"` when it is strictly better,
+    /// `"flat"` otherwise.
+    pub fn verdict(&self) -> &'static str {
+        let first = self.points.first().map(|p| p.1).unwrap_or(0.0);
+        let last = self.points.last().map(|p| p.1).unwrap_or(0.0);
+        if first > last * 1.05 {
+            "inverted"
+        } else if first < last {
+            "monotone"
+        } else {
+            "flat"
+        }
+    }
+}
+
+/// The captured trace plus every quantization curve.
+pub struct KvSweep {
+    /// Per `(layer, stream)` empirical σ of the captured rows
+    /// (stream 0 = K, 1 = V).
+    pub trace_sigma: Vec<(usize, usize, f64)>,
+    /// Values captured across layers and both streams.
+    pub values: usize,
+    /// Decoded positions in the trace.
+    pub positions: usize,
+    pub curves: Vec<KvCurve>,
+}
+
+/// Capture a live KV trace and run the sweep (`fast` shrinks the
+/// generation length).
+pub fn sweep(fast: bool) -> crate::Result<KvSweep> {
+    let dims = ModelDims {
+        vocab: 64,
+        d_model: 64,
+        n_heads: 2,
+        n_layers: 2,
+        d_ff: 128,
+        seq_len: if fast { 24 } else { 48 },
+    };
+    let params = Params::init_surrogate(&dims, 0x5EED);
+    // weights stay exact: the sweep isolates KV-cache quantization
+    let qcfg = PerLayerQConfig::uniform(QConfig::baseline());
+    let model = Arc::new(PackedModel::build(
+        &dims,
+        &params,
+        &qcfg,
+        16,
+        operand_cache(),
+    )?);
+    // the trace comes off the real paged serving path (Exact codec, so
+    // the captured rows are the bit-exact activations)
+    let pool = KvPool::exact(&dims, 8, usize::MAX)?;
+    let engine = DecodeEngine::with_pool(model.clone(), pool)?;
+    let mut rng = Pcg64::new(41);
+    let prompt: Vec<i32> = (0..8)
+        .map(|_| (rng.next_u64() % dims.vocab as u64) as i32)
+        .collect();
+    let mut sampler =
+        crate::serve::decode::Sampler::new(&crate::serve::Sampling::Greedy)?;
+    let mut kv = engine.new_kv();
+    let mut logits = engine.prefill(&prompt, &mut kv)?;
+    while kv.len() < dims.seq_len {
+        let tok = sampler.pick(&logits);
+        logits = engine.step(&[tok], std::slice::from_mut(&mut kv))?;
+    }
+
+    let mut pooled: Vec<f32> = Vec::new();
+    let mut trace_sigma = Vec::new();
+    for layer in 0..dims.n_layers {
+        let (k, v) = kv.layer_rows_f32(layer);
+        for (si, rows) in [k, v].into_iter().enumerate() {
+            trace_sigma.push((layer, si, crate::stats::std_dev_f32(&rows)));
+            pooled.extend(rows);
+        }
+    }
+    let positions = kv.len();
+    let emp = crate::stats::std_dev_f32(&pooled);
+    anyhow::ensure!(emp > 0.0, "degenerate KV trace (all zeros)");
+
+    let mut curves = Vec::new();
+    for &sigma in &SIGMAS {
+        let scale = (sigma / emp) as f32;
+        let xs: Vec<f32> = pooled.iter().map(|&v| v * scale).collect();
+        for elem in ["fp4_e2m1", "fp8_e4m3"] {
+            for scale_fmt in ["ue4m3", "ue5m3", "bf16"] {
+                let ef = ElemFormat::from_name(elem).unwrap();
+                let sf = crate::formats::scale_format(scale_fmt).unwrap();
+                let mut points = Vec::new();
+                for &bs in &BLOCK_SIZES {
+                    let n = xs.len() - xs.len() % bs;
+                    let scheme = QuantScheme::new(ef, sf, bs);
+                    let q = fake_quant(&scheme, &xs[..n]);
+                    let mse = crate::stats::mse_f32(&xs[..n], &q);
+                    points.push((bs, mse / (sigma * sigma)));
+                }
+                curves.push(KvCurve {
+                    elem: elem.to_string(),
+                    scale: scale_fmt.to_string(),
+                    sigma,
+                    points,
+                });
+            }
+        }
+    }
+    Ok(KvSweep { trace_sigma, values: pooled.len(), positions, curves })
+}
+
+/// Run the sweep and render it; optionally export
+/// `kv_anomaly.csv` next to the other experiment sinks.
+pub fn anomaly_sweep(fast: bool, csv: Option<&Path>) -> crate::Result<String> {
+    let s = sweep(fast)?;
+    let mut out = String::from(
+        "== KV block-size anomaly on live decode traces ==\n\
+         \n\
+         Cached post-gain K/V rows from a KV-cached greedy generation,\n\
+         sigma-normalized, quantized per block size (rel MSE = MSE/sigma^2).\n\
+         The paper's anomaly, in vivo: UE4M3 inverts below the collapse\n\
+         sigma; UE5M3/BF16 stay monotone.\n\n",
+    );
+    out.push_str(&format!(
+        "trace: {} positions, {} values; per-(layer, K/V) sigma: {}\n\n",
+        s.positions,
+        s.values,
+        s.trace_sigma
+            .iter()
+            .map(|(l, si, sd)| format!(
+                "L{l}{} {sd:.2e}",
+                if *si == 0 { "K" } else { "V" }
+            ))
+            .collect::<Vec<_>>()
+            .join(", "),
+    ));
+    for &sigma in &SIGMAS {
+        let mut t = Table::new(
+            &format!("KV rows normalized to sigma = {sigma:.0e}"),
+            &["elem", "scale", "bs4", "bs8", "bs16", "bs32", "verdict"],
+        );
+        for c in s.curves.iter().filter(|c| c.sigma == sigma) {
+            let mut cells = vec![c.elem.clone(), c.scale.clone()];
+            cells.extend(c.points.iter().map(|(_, m)| format!("{m:.3e}")));
+            cells.push(match c.verdict() {
+                "inverted" => "INVERTED (anomaly)".to_string(),
+                v => v.to_string(),
+            });
+            t.row(cells);
+        }
+        out.push_str(&t.render());
+    }
+    if let Some(path) = csv {
+        let mut csv_out =
+            String::from("sigma_target,elem,scale,block_size,rel_mse\n");
+        for c in &s.curves {
+            for (bs, m) in &c.points {
+                csv_out.push_str(&format!(
+                    "{:.6e},{},{},{bs},{m:.6e}\n",
+                    c.sigma, c.elem, c.scale
+                ));
+            }
+        }
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(path, csv_out)?;
+        out.push_str(&format!("wrote {}\n", path.display()));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn live_trace_reproduces_the_anomaly() {
+        let s = sweep(true).unwrap();
+        assert!(s.positions >= 16 && s.values > 4000);
+        // the Sec. 3.2 shape, on live KV rows at sigma = 5e-3: UE4M3
+        // inverts (the anomaly), UE5M3 stays monotone — and UE5M3 beats
+        // UE4M3 at every block size
+        let find = |elem: &str, scale: &str| {
+            s.curves
+                .iter()
+                .find(|c| c.elem == elem && c.scale == scale && c.sigma == 5e-3)
+                .unwrap()
+        };
+        let u43 = find("fp4_e2m1", "ue4m3");
+        let u53 = find("fp4_e2m1", "ue5m3");
+        assert_eq!(u43.verdict(), "inverted", "{:?}", u43.points);
+        assert_eq!(u53.verdict(), "monotone", "{:?}", u53.points);
+        // (same 5%-noise slack as quant::tests::ue5m3_never_worse_...)
+        for ((bs, a), (_, b)) in u43.points.iter().zip(&u53.points) {
+            assert!(*a >= b * 0.95, "bs{bs}: ue4m3 {a} < ue5m3 {b}");
+        }
+    }
+
+    #[test]
+    fn render_carries_the_curves_and_verdicts() {
+        let out = anomaly_sweep(true, None).unwrap();
+        assert!(out.contains("INVERTED (anomaly)"));
+        assert!(out.contains("monotone"));
+        assert!(out.contains("ue5m3"));
+        assert!(out.contains("trace:"));
+    }
+}

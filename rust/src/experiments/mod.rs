@@ -8,6 +8,7 @@
 //! `results/`.
 
 pub mod hwx;
+pub mod kvx;
 pub mod ppl;
 pub mod synth;
 pub mod theory_figs;

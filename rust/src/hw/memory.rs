@@ -43,6 +43,32 @@ pub fn packed_bytes_per_element(elem_bits: u32, numel: usize, block: usize) -> f
     packed_payload_bytes(elem_bits, numel, block) as f64 / numel as f64
 }
 
+/// f32 KV-cache bytes one decoded position holds resident: a `d_model`
+/// key row and value row per layer at 4 bytes each — the storage cost
+/// of the serving path's `Exact` KV codec
+/// ([`crate::serve::kvpool`]), and the per-token figure the serve/decode
+/// bench reports price memory with.
+pub fn kv_exact_position_bytes(d_model: usize, n_layers: usize) -> usize {
+    2 * n_layers * d_model * 4
+}
+
+/// Packed MX KV-cache bytes per position: per row, a bit-packed
+/// `elem_bits`-wide code field (rounded up to whole bytes) plus
+/// `scale_bytes` per `block`-wide block — exactly the
+/// [`crate::serve::kvpool`] `Mx` page row layout (1-byte scale codes
+/// for UE4M3/UE5M3/E8M0-class formats, 4 for quasi-continuous BF16).
+pub fn kv_packed_position_bytes(
+    d_model: usize,
+    n_layers: usize,
+    elem_bits: u32,
+    scale_bytes: usize,
+    block: usize,
+) -> usize {
+    let row = (d_model * elem_bits as usize + 7) / 8
+        + d_model.div_ceil(block.max(1)) * scale_bytes;
+    2 * n_layers * row
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -88,6 +114,23 @@ mod tests {
         // a trailing partial block still carries a scale byte
         assert_eq!(packed_payload_bytes(4, 12, 8), 6 + 2);
         assert_eq!(packed_bytes_per_element(4, 0, 8), 0.0);
+    }
+
+    #[test]
+    fn kv_position_costs_match_the_page_layout() {
+        // llama-8B-ish shape: FP4 bs32 KV is ~7.5x smaller than f32
+        let (d, l) = (4096usize, 32usize);
+        assert_eq!(kv_exact_position_bytes(d, l), 1_048_576);
+        assert_eq!(kv_packed_position_bytes(d, l, 4, 1, 32), 139_264);
+        assert_eq!(kv_packed_position_bytes(d, l, 8, 1, 32), 270_336);
+        let ratio = kv_exact_position_bytes(d, l) as f64
+            / kv_packed_position_bytes(d, l, 4, 1, 32) as f64;
+        assert!((ratio - 7.529).abs() < 1e-2, "{ratio}");
+        // bf16-class scales pay 4 bytes per block
+        assert_eq!(
+            kv_packed_position_bytes(64, 1, 4, 4, 16),
+            2 * (32 + 4 * 4)
+        );
     }
 
     #[test]

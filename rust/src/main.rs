@@ -12,6 +12,8 @@
 //! microscale quantize           fake-quant an f32 binary file
 //! microscale serve-bench        packed-domain serving bench (BENCH_serve.json)
 //! microscale decode-bench       KV-cached generation bench (BENCH_decode.json)
+//! microscale kv-bench           paged-KV memory/throughput bench (BENCH_kv.json)
+//! microscale kv-sweep           KV block-size anomaly sweep on live decode traces
 //! microscale selftest           quick smoke of the full stack
 //! ```
 //!
@@ -296,6 +298,29 @@ fn run() -> Result<()> {
             }
             microscale::serve::decode_bench::run(&opts)?;
         }
+        "kv-bench" => {
+            let mut opts =
+                microscale::serve::kv_bench::KvBenchOpts::new(args.has("smoke"));
+            if let Some(out) = args.get("out") {
+                opts.out = PathBuf::from(out);
+            }
+            opts.concurrency = args.get_usize("concurrency", opts.concurrency)?;
+            opts.prompt_len = args.get_usize("prompt", opts.prompt_len)?;
+            opts.max_new = args.get_usize("max-new", opts.max_new)?;
+            opts.requests = args.get_usize("requests", opts.requests)?;
+            opts.page_rows = args.get_usize("page-rows", opts.page_rows)?;
+            opts.budget_seqs = args.get_f64("budget-seqs", opts.budget_seqs)?;
+            microscale::serve::kv_bench::run(&opts)?;
+        }
+        "kv-sweep" => {
+            let fast = args.has("fast");
+            let csv = PathBuf::from(args.get_or("results", "results"))
+                .join("kv_anomaly.csv");
+            println!(
+                "{}",
+                experiments::kvx::anomaly_sweep(fast, Some(csv.as_path()))?
+            );
+        }
         "selftest" => {
             let ctx = ctx_from(&args)?;
             let sess = ctx.session()?;
@@ -325,7 +350,7 @@ fn run() -> Result<()> {
                  \n\
                  commands: figure <id> | table <1|2|3> | all | hw | train |\n\
                  models | eval | theory | quantize | serve-bench |\n\
-                 decode-bench | selftest\n\
+                 decode-bench | kv-bench | kv-sweep | selftest\n\
                  figures: 1a 1b 2a 2b 2c 3a 3b 3c 4a 4b 5a 5b 6 7 8 9 10 11\n\
                  12 13 14 15 16 17\n\
                  flags: --fast --results DIR --models DIR --artifacts DIR\n\
@@ -334,7 +359,11 @@ fn run() -> Result<()> {
                  --rounds N --serial-requests N --qconfig CFG --out FILE\n\
                  decode-bench flags: --smoke --concurrency 1,4,8 --prompt N\n\
                  --max-new N --rounds N --baseline-requests N --qconfig CFG\n\
-                 --out FILE"
+                 --out FILE\n\
+                 kv-bench flags: --smoke --concurrency N --prompt N\n\
+                 --max-new N --requests N --page-rows N --budget-seqs X\n\
+                 --out FILE\n\
+                 kv-sweep flags: --fast --results DIR"
             );
             if other != "help" {
                 bail!("unknown command {other:?}");

@@ -167,6 +167,51 @@ pub(crate) fn encode_block(
     Ok(s)
 }
 
+/// Pack one code byte per element into `out`, LSB-first at `bits` per
+/// code — the exact stream layout [`BitWriter`] produces (pinned by a
+/// test below), writing into a caller-provided region instead of a
+/// growable buffer. Shared with the KV page codec
+/// ([`crate::serve::kvpool`]) so the two packed element-field layouts
+/// cannot drift apart. `out` must hold `ceil(codes.len()·bits/8)`
+/// bytes.
+pub(crate) fn pack_codes(codes: &[u8], bits: u32, out: &mut [u8]) {
+    let mut acc = 0u32;
+    let mut nbits = 0u32;
+    let mut i = 0usize;
+    for &c in codes {
+        acc |= (c as u32) << nbits;
+        nbits += bits;
+        while nbits >= 8 {
+            out[i] = acc as u8;
+            i += 1;
+            acc >>= 8;
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        out[i] = acc as u8;
+    }
+}
+
+/// Inverse of [`pack_codes`]: read `out.len()` fixed-width codes from
+/// `data`, one byte per code (matches [`BitReader`] — same test).
+pub(crate) fn unpack_codes(data: &[u8], bits: u32, out: &mut [u8]) {
+    let mask = (1u32 << bits) - 1;
+    let mut acc = 0u32;
+    let mut nbits = 0u32;
+    let mut i = 0usize;
+    for o in out.iter_mut() {
+        while nbits < bits {
+            acc |= (data[i] as u32) << nbits;
+            i += 1;
+            nbits += 8;
+        }
+        *o = (acc & mask) as u8;
+        acc >>= bits;
+        nbits -= bits;
+    }
+}
+
 /// LSB-first bit packer for fixed-width codes.
 struct BitWriter {
     buf: Vec<u8>,
@@ -571,6 +616,29 @@ mod tests {
         let mut r = BitReader::new(&buf);
         for &c in &codes {
             assert_eq!(r.read(6), c);
+        }
+    }
+
+    #[test]
+    fn slice_packers_match_bitwriter_stream() {
+        // pack_codes/unpack_codes (the KV page codec's element field)
+        // must produce byte-for-byte the BitWriter stream — one layout,
+        // two writers
+        for bits in [4u32, 6, 8] {
+            let n = 53usize; // odd count: exercises the trailing byte
+            let codes: Vec<u8> =
+                (0..n).map(|i| ((i * 29) % (1 << bits)) as u8).collect();
+            let mut w = BitWriter::with_capacity(n * bits as usize);
+            for &c in &codes {
+                w.push(c as u32, bits);
+            }
+            let want = w.finish();
+            let mut got = vec![0u8; (n * bits as usize + 7) / 8];
+            pack_codes(&codes, bits, &mut got);
+            assert_eq!(got, want, "{bits}-bit pack");
+            let mut back = vec![0u8; n];
+            unpack_codes(&got, bits, &mut back);
+            assert_eq!(back, codes, "{bits}-bit unpack");
         }
     }
 }

@@ -329,6 +329,18 @@ pub fn run(opts: &BenchOpts) -> crate::Result<Json> {
             ]),
         ),
         ("workers", json::num(opts.workers as f64)),
+        // a full-length request's scratch KV residency during its
+        // forward (f32 rows; see hw::memory) — the figure that makes
+        // this report memory-comparable with BENCH_decode/BENCH_kv
+        (
+            "kv_bytes_per_seq",
+            json::num(
+                (crate::hw::memory::kv_exact_position_bytes(
+                    dims.d_model,
+                    dims.n_layers,
+                ) * dims.seq_len) as f64,
+            ),
+        ),
         ("configs", json::obj_owned(config_entries)),
         (
             "operand_cache",

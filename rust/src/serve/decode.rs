@@ -31,6 +31,7 @@ use anyhow::ensure;
 
 use crate::dist::Pcg64;
 
+use super::kvpool::KvPool;
 use super::packed_model::PackedModel;
 pub use super::packed_model::SeqKv;
 
@@ -105,15 +106,44 @@ impl Sampler {
 
 /// KV-cached decoding facade over a shared [`PackedModel`] (module
 /// docs). Cheap to clone-by-Arc into schedulers and benches.
+/// Optionally backed by a byte-budgeted [`KvPool`]
+/// ([`DecodeEngine::with_pool`]), in which case [`DecodeEngine::new_kv`]
+/// hands out paged caches and the scheduler drives admission/eviction
+/// from the pool's page accounting.
 pub struct DecodeEngine {
     model: Arc<PackedModel>,
+    pool: Option<Arc<KvPool>>,
 }
 
 impl DecodeEngine {
     /// Wrap `model`, refusing configurations whose cached step could
     /// not be bit-identical to the full-prefix reference (per-tensor
-    /// "-S" activation scaling — see module docs).
+    /// "-S" activation scaling — see module docs). Caches come from
+    /// unbounded inline storage; use [`DecodeEngine::with_pool`] for
+    /// memory-bounded serving.
     pub fn new(model: Arc<PackedModel>) -> crate::Result<DecodeEngine> {
+        Self::build(model, None)
+    }
+
+    /// Like [`DecodeEngine::new`], but caches allocate from `pool`.
+    /// The pool must match the model's shape, and its budget must fit
+    /// at least one full-context sequence — the invariant that makes
+    /// the scheduler's evict-down-to-one policy deadlock-free.
+    ///
+    /// With an all-`Exact` pool the decode exactness contract holds
+    /// unchanged; `Mx` page codecs trade it for the stated
+    /// quantized-KV error model ([`super::kvpool`] docs).
+    pub fn with_pool(
+        model: Arc<PackedModel>,
+        pool: Arc<KvPool>,
+    ) -> crate::Result<DecodeEngine> {
+        Self::build(model, Some(pool))
+    }
+
+    fn build(
+        model: Arc<PackedModel>,
+        pool: Option<Arc<KvPool>>,
+    ) -> crate::Result<DecodeEngine> {
         for layer in 0..model.dims().n_layers {
             let cfg = model.qcfg().layer(layer);
             ensure!(
@@ -124,16 +154,45 @@ impl DecodeEngine {
                 cfg.id()
             );
         }
-        Ok(DecodeEngine { model })
+        if let Some(p) = &pool {
+            let dims = model.dims();
+            ensure!(
+                p.d_model() == dims.d_model && p.n_layers() == dims.n_layers,
+                "KV pool shaped for d_model {} × {} layers, model is {} × {}",
+                p.d_model(),
+                p.n_layers(),
+                dims.d_model,
+                dims.n_layers
+            );
+            let worst = p.bytes_for_positions(dims.seq_len);
+            ensure!(
+                worst <= p.budget_bytes(),
+                "KV pool budget {} cannot hold one full-context sequence \
+                 ({worst} bytes for {} positions) — generation could \
+                 deadlock at capacity",
+                p.budget_bytes(),
+                dims.seq_len
+            );
+        }
+        Ok(DecodeEngine { model, pool })
     }
 
     pub fn model(&self) -> &Arc<PackedModel> {
         &self.model
     }
 
-    /// A cache shaped for this model with full `seq_len` capacity.
+    /// The backing KV pool, when this engine is memory-bounded.
+    pub fn pool(&self) -> Option<&Arc<KvPool>> {
+        self.pool.as_ref()
+    }
+
+    /// A cache shaped for this model: paged when the engine has a
+    /// [`KvPool`], inline (full `seq_len` capacity) otherwise.
     pub fn new_kv(&self) -> SeqKv {
-        self.model.new_kv()
+        match &self.pool {
+            Some(p) => p.seq(),
+            None => self.model.new_kv(),
+        }
     }
 
     /// Run `tokens` (appended after `kv.len()` cached positions —

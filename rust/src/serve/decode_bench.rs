@@ -72,7 +72,9 @@ impl DecodeBenchOpts {
     }
 }
 
-fn bench_dims(smoke: bool) -> ModelDims {
+/// Bench model shapes, shared with [`super::kv_bench`] so the decode
+/// and KV reports stay comparable.
+pub(crate) fn bench_dims(smoke: bool) -> ModelDims {
     if smoke {
         ModelDims {
             vocab: 64,
@@ -98,7 +100,7 @@ fn prompt(rng: &mut Pcg64, dims: &ModelDims, len: usize) -> Vec<i32> {
     (0..len).map(|_| (rng.next_u64() % dims.vocab as u64) as i32).collect()
 }
 
-fn pct_ms(samples: &mut [f64], p: f64) -> f64 {
+pub(crate) fn pct_ms(samples: &mut [f64], p: f64) -> f64 {
     if samples.is_empty() {
         return 0.0;
     }
@@ -262,6 +264,9 @@ pub fn run(opts: &DecodeBenchOpts) -> crate::Result<Json> {
             }
             let results = sched.run()?;
             let secs = t0.elapsed().as_secs_f64();
+            // resident KV high-water mark across the run — what makes
+            // this report memory-comparable with BENCH_kv.json
+            let kv_peak = sched.peak_kv_resident_bytes();
             let tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
             let tok_s = tokens as f64 / secs.max(1e-9);
             let mut ttft: Vec<f64> =
@@ -281,7 +286,8 @@ pub fn run(opts: &DecodeBenchOpts) -> crate::Result<Json> {
             println!(
                 "   c{c:<3}: {tok_s:8.1} tok/s  ttft p50 {ttft_p50:6.1} ms  \
                  p95 {ttft_p95:6.1} ms  itl p50 {itl_p50:6.2} ms  \
-                 p95 {itl_p95:6.2} ms  ({speedup:.2}x vs re-forward)",
+                 p95 {itl_p95:6.2} ms  peak KV {kv_peak} B  \
+                 ({speedup:.2}x vs re-forward)",
             );
             conc_entries.push((
                 format!("c{c}"),
@@ -293,6 +299,7 @@ pub fn run(opts: &DecodeBenchOpts) -> crate::Result<Json> {
                     ("ttft_p95_ms", json::num(ttft_p95)),
                     ("itl_p50_ms", json::num(itl_p50)),
                     ("itl_p95_ms", json::num(itl_p95)),
+                    ("kv_peak_bytes", json::num(kv_peak as f64)),
                     ("speedup_vs_reforward", json::num(speedup)),
                 ]),
             ));
@@ -341,6 +348,13 @@ pub fn run(opts: &DecodeBenchOpts) -> crate::Result<Json> {
         ),
         ("prompt_len", json::num(opts.prompt_len as f64)),
         ("max_new", json::num(opts.max_new as f64)),
+        (
+            "kv_bytes_per_position",
+            json::num(crate::hw::memory::kv_exact_position_bytes(
+                dims.d_model,
+                dims.n_layers,
+            ) as f64),
+        ),
         ("configs", json::obj_owned(config_entries)),
         ("target_speedup", json::num(2.0)),
         (

@@ -115,7 +115,7 @@ impl StatsInner {
 }
 
 /// Aggregate serving statistics. Latency percentiles cover the most
-/// recent [`LATENCY_WINDOW`] requests (submit → logits-ready);
+/// recent `LATENCY_WINDOW` (4096) requests (submit → logits-ready);
 /// throughput is measured over the first-submit → last-completion
 /// window.
 #[derive(Debug, Clone, Copy, Default)]

@@ -1,0 +1,874 @@
+//! Paged, byte-budgeted KV-cache storage with pluggable page codecs.
+//!
+//! PR 4's decode engine stored each sequence's K/V rows in unbounded
+//! per-sequence `Vec<f32>`s — fine for tests, unusable under production
+//! memory pressure, where the KV cache (not the weights) dominates the
+//! resident bytes of serving at scale. This module replaces that storage
+//! with a process-wide [`KvPool`]: fixed-size **pages** (a page holds
+//! [`KvPool::page_rows`] cache rows of one layer's K *or* V stream)
+//! allocated against a hard byte budget, with every allocation and free
+//! accounted exactly ([`KvPool::used_bytes`] is the sum of live page
+//! bytes, nothing estimated). Sequences hold page handles per layer
+//! (the internal `PagedKv`, wrapped by [`super::SeqKv`]); the
+//! scheduler turns the budget into admission/eviction decisions
+//! (DESIGN.md §11).
+//!
+//! # Page codecs and the exactness-contract split
+//!
+//! Each layer's pages run one codec, derived from a
+//! [`PerLayerQConfig`]:
+//!
+//! * **Exact** (`bf16-exact` / quantization off — the default): rows are
+//!   stored as raw f32 little-endian bytes. Writing and reading a page
+//!   is a bit-copy, so the PR-4 decode contract — cached step logits
+//!   bit-identical to the full-prefix reference — holds unchanged
+//!   (`rust/tests/decode.rs` and the Exact half of
+//!   `rust/tests/kvpool.rs` pin it, evict-and-requeue included).
+//! * **Mx** (any `quant_on` config): each row is blocked along
+//!   `d_model`, and every block stores bit-packed sign-magnitude element
+//!   codes (FP8 → 8 bits, FP6 → 6, FP4 → 4) plus its scale — a 1-byte
+//!   level index for UE4M3/UE5M3/E8M0-class scale formats, a 4-byte f32
+//!   for quasi-continuous BF16 scales — through the exact same encode
+//!   pipeline as [`crate::quant::packed::PackedMxTensor`]. The decode
+//!   guarantee is deliberately **weaker** and precisely stated: a cached
+//!   row reads back as `fake_quant(scheme, row)` of the row that was
+//!   written, bit for bit. Attention therefore runs over quantized K/V,
+//!   and logits carry the corresponding error (the in-vivo testbed for
+//!   the paper's block-size anomaly — `microscale kv-sweep`). What *is*
+//!   still exact: incremental decode and whole-prefix re-forward see the
+//!   same quantized rows, so KV-cached stepping remains bit-identical
+//!   to re-running the prefix **under the same codec** (pinned by the
+//!   differential matrix in `rust/tests/kvpool.rs`).
+//!
+//! Per-tensor ("-S") KV configs are refused at [`KvPool::build`]: their
+//! eq. 11 absmax spans the whole stream, which rows written one step at
+//! a time can never see.
+//!
+//! # Accounting
+//!
+//! Pages are allocated lazily as rows append and freed eagerly when a
+//! sequence resets (eviction) or drops. [`KvPool::bytes_for_rows`]
+//! prices a planned append exactly — same page arithmetic the allocator
+//! uses — which is what lets the scheduler *reserve* a step's pages up
+//! front and evict-and-requeue instead of failing mid-forward. A failed
+//! allocation (budget exhausted) changes nothing and is counted in
+//! [`KvPoolStats::failed_allocs`].
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::ensure;
+
+use crate::quant::packed::{encode_block, pack_codes, unpack_codes, LevelCodec};
+use crate::quant::QuantScheme;
+use crate::runtime::artifacts::ModelDims;
+use crate::runtime::qconfig::PerLayerQConfig;
+
+use super::packed_model::SeqKv;
+
+/// How one layer's pages encode cache rows (see module docs).
+enum CodecKind {
+    /// Raw f32 LE rows — bit-identical storage, the PR-4 contract.
+    Exact,
+    /// Per-block element codes + scales via the packed-MX pipeline.
+    Mx {
+        scheme: QuantScheme,
+        elem: LevelCodec,
+        /// bits per element code (sign + magnitude index)
+        elem_bits: u32,
+        /// signed decode LUT over the full code space
+        lut: Vec<f32>,
+        /// 1-byte scale codec; `None` stores f32 scales (BF16 class)
+        scale: Option<LevelCodec>,
+    },
+}
+
+/// One layer's codec plus its derived row geometry.
+struct LayerCodec {
+    kind: CodecKind,
+    /// exact bytes one cache row occupies inside a page
+    row_bytes: usize,
+}
+
+impl LayerCodec {
+    fn exact(d: usize) -> LayerCodec {
+        LayerCodec { kind: CodecKind::Exact, row_bytes: d * 4 }
+    }
+
+    fn mx(scheme: QuantScheme, d: usize) -> crate::Result<LayerCodec> {
+        ensure!(
+            !scheme.per_tensor,
+            "per-tensor (-S) KV configs are unsupported: the eq. 11 absmax \
+             spans the whole stream, which incremental appends never see"
+        );
+        ensure!(
+            d % scheme.block_size == 0,
+            "KV block size {} must divide d_model {d}",
+            scheme.block_size
+        );
+        let elem = LevelCodec::for_elem(&scheme.elem);
+        let elem_bits = elem.mag_bits() + 1;
+        ensure!(
+            elem_bits <= 8,
+            "element format {} needs {elem_bits} bits/code (max 8)",
+            scheme.elem.name()
+        );
+        let scale = LevelCodec::for_scale(&scheme.scale);
+        let scale_bytes = if scale.is_some() { 1 } else { 4 };
+        let row_bytes = (d * elem_bits as usize + 7) / 8
+            + (d / scheme.block_size) * scale_bytes;
+        let lut = elem.signed_lut();
+        Ok(LayerCodec {
+            kind: CodecKind::Mx { scheme, elem, elem_bits, lut, scale },
+            row_bytes,
+        })
+    }
+
+    fn id(&self) -> String {
+        match &self.kind {
+            CodecKind::Exact => "exact".to_string(),
+            CodecKind::Mx { scheme, .. } => scheme.id(),
+        }
+    }
+
+    /// Encode one `d`-wide row into `out` (`row_bytes` long).
+    /// `codes` is a zeroed `d`-byte scratch buffer (re-zeroed here).
+    fn encode_row(
+        &self,
+        row: &[f32],
+        out: &mut [u8],
+        codes: &mut [u8],
+    ) -> crate::Result<()> {
+        match &self.kind {
+            CodecKind::Exact => {
+                for (c, &v) in out.chunks_exact_mut(4).zip(row) {
+                    c.copy_from_slice(&v.to_le_bytes());
+                }
+            }
+            CodecKind::Mx { scheme, elem, elem_bits, scale, .. } => {
+                let d = row.len();
+                let bs = scheme.block_size;
+                let code_bytes = (d * *elem_bits as usize + 7) / 8;
+                codes[..d].fill(0);
+                let (code_region, scale_region) = out.split_at_mut(code_bytes);
+                for (bi, block) in row.chunks(bs).enumerate() {
+                    let s = encode_block(
+                        scheme,
+                        elem,
+                        1.0,
+                        block,
+                        &mut codes[bi * bs..bi * bs + block.len()],
+                    )?;
+                    match scale {
+                        Some(sc) => {
+                            scale_region[bi] = sc.encode_mag(s).ok_or_else(
+                                || {
+                                    anyhow::anyhow!(
+                                        "KV scale {s} is not on the {} grid",
+                                        scheme.scale.name
+                                    )
+                                },
+                            )? as u8;
+                        }
+                        None => scale_region[bi * 4..bi * 4 + 4]
+                            .copy_from_slice(&s.to_le_bytes()),
+                    }
+                }
+                pack_codes(&codes[..d], *elem_bits, code_region);
+            }
+        }
+        Ok(())
+    }
+
+    /// Decode one row from `data` (`row_bytes` long) into `out` (`d`),
+    /// using `codes` as a zeroable `d`-byte scratch.
+    fn decode_row(&self, data: &[u8], out: &mut [f32], codes: &mut [u8]) {
+        match &self.kind {
+            CodecKind::Exact => {
+                for (v, c) in out.iter_mut().zip(data.chunks_exact(4)) {
+                    *v = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+                }
+            }
+            CodecKind::Mx { scheme, elem_bits, lut, scale, .. } => {
+                let d = out.len();
+                let bs = scheme.block_size;
+                let code_bytes = (d * *elem_bits as usize + 7) / 8;
+                let (code_region, scale_region) = data.split_at(code_bytes);
+                unpack_codes(code_region, *elem_bits, &mut codes[..d]);
+                for (bi, block) in out.chunks_mut(bs).enumerate() {
+                    let s = match scale {
+                        Some(sc) => sc.decode(scale_region[bi] as u32),
+                        None => f32::from_le_bytes([
+                            scale_region[bi * 4],
+                            scale_region[bi * 4 + 1],
+                            scale_region[bi * 4 + 2],
+                            scale_region[bi * 4 + 3],
+                        ]),
+                    };
+                    for (j, v) in block.iter_mut().enumerate() {
+                        // same op order as fake_quant: s * (±level); a
+                        // collapsed block (s = 0) fills +0.0 because its
+                        // codes were written as zero
+                        let c = codes[bi * bs + j];
+                        *v = if s > 0.0 { s * lut[c as usize] } else { 0.0 };
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// One live page: encoded row payload plus its fill level.
+struct Page {
+    data: Vec<u8>,
+    rows: usize,
+}
+
+/// Allocator state behind the pool mutex.
+struct Inner {
+    /// handle → page (freed handles are `None` and recycled)
+    slots: Vec<Option<Page>>,
+    free_slots: Vec<u32>,
+    used_bytes: usize,
+    peak_bytes: usize,
+    allocs: u64,
+    frees: u64,
+    failed: u64,
+}
+
+/// A snapshot of the pool's allocation counters.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvPoolStats {
+    /// Pages allocated over the pool's lifetime.
+    pub allocs: u64,
+    /// Pages freed over the pool's lifetime.
+    pub frees: u64,
+    /// Allocations refused because they would exceed the budget.
+    pub failed_allocs: u64,
+    /// Pages currently live.
+    pub live_pages: usize,
+    /// Bytes currently allocated (sum of live page payloads — exact).
+    pub used_bytes: usize,
+    /// High-water mark of [`KvPoolStats::used_bytes`].
+    pub peak_bytes: usize,
+}
+
+/// The process-wide paged KV arena (see module docs): fixed-row pages,
+/// a hard byte budget, one codec per layer. Shared by every sequence
+/// created through [`KvPool::seq`]; thread-safe (allocation state sits
+/// behind one mutex).
+pub struct KvPool {
+    d_model: usize,
+    n_layers: usize,
+    page_rows: usize,
+    budget: usize,
+    layers: Vec<LayerCodec>,
+    inner: Mutex<Inner>,
+}
+
+impl KvPool {
+    /// Build a pool for `dims` with per-layer KV codecs from `kv_cfg`
+    /// (`quant_on == false` → Exact; anything else → Mx with that
+    /// element/scale at `block_size`-wide blocks along `d_model`).
+    /// `page_rows` cache rows per page; `budget_bytes` caps the live
+    /// page bytes across all sequences.
+    pub fn build(
+        dims: &ModelDims,
+        kv_cfg: &PerLayerQConfig,
+        block_size: usize,
+        page_rows: usize,
+        budget_bytes: usize,
+    ) -> crate::Result<Arc<KvPool>> {
+        ensure!(page_rows > 0, "page_rows must be positive");
+        ensure!(dims.n_layers > 0 && dims.d_model > 0, "degenerate dims");
+        let mut layers = Vec::with_capacity(dims.n_layers);
+        for l in 0..dims.n_layers {
+            let cfg = kv_cfg.layer(l);
+            let lc = if cfg.quant_on {
+                LayerCodec::mx(cfg.scheme(block_size), dims.d_model)?
+            } else {
+                LayerCodec::exact(dims.d_model)
+            };
+            layers.push(lc);
+        }
+        Ok(Arc::new(KvPool {
+            d_model: dims.d_model,
+            n_layers: dims.n_layers,
+            page_rows,
+            budget: budget_bytes,
+            layers,
+            inner: Mutex::new(Inner {
+                slots: Vec::new(),
+                free_slots: Vec::new(),
+                used_bytes: 0,
+                peak_bytes: 0,
+                allocs: 0,
+                frees: 0,
+                failed: 0,
+            }),
+        }))
+    }
+
+    /// All-layers-Exact pool: the f32 PR-4 contract, now byte-budgeted.
+    pub fn exact(
+        dims: &ModelDims,
+        page_rows: usize,
+        budget_bytes: usize,
+    ) -> crate::Result<Arc<KvPool>> {
+        Self::build(
+            dims,
+            &PerLayerQConfig::uniform(crate::runtime::QConfig::baseline()),
+            1,
+            page_rows,
+            budget_bytes,
+        )
+    }
+
+    /// A fresh empty sequence cache backed by this pool.
+    pub fn seq(self: &Arc<Self>) -> SeqKv {
+        SeqKv::paged(PagedKv::new(self.clone()))
+    }
+
+    /// Row width every page stores (the model's `d_model`).
+    pub fn d_model(&self) -> usize {
+        self.d_model
+    }
+
+    /// Layers per sequence.
+    pub fn n_layers(&self) -> usize {
+        self.n_layers
+    }
+
+    /// Cache rows per page.
+    pub fn page_rows(&self) -> usize {
+        self.page_rows
+    }
+
+    /// The hard byte budget.
+    pub fn budget_bytes(&self) -> usize {
+        self.budget
+    }
+
+    /// Bytes currently allocated (exact; see [`KvPoolStats`]).
+    pub fn used_bytes(&self) -> usize {
+        self.inner.lock().unwrap().used_bytes
+    }
+
+    /// Budget headroom.
+    pub fn free_bytes(&self) -> usize {
+        self.budget.saturating_sub(self.used_bytes())
+    }
+
+    /// Allocation counters snapshot.
+    pub fn stats(&self) -> KvPoolStats {
+        let g = self.inner.lock().unwrap();
+        KvPoolStats {
+            allocs: g.allocs,
+            frees: g.frees,
+            failed_allocs: g.failed,
+            live_pages: (g.allocs - g.frees) as usize,
+            used_bytes: g.used_bytes,
+            peak_bytes: g.peak_bytes,
+        }
+    }
+
+    /// Exact bytes one cache row of `layer` occupies.
+    pub fn row_bytes(&self, layer: usize) -> usize {
+        self.layers[layer].row_bytes
+    }
+
+    /// Exact bytes of one `layer` page (`page_rows · row_bytes`).
+    pub fn page_bytes(&self, layer: usize) -> usize {
+        self.page_rows * self.layers[layer].row_bytes
+    }
+
+    /// Row-level storage cost of one cached position across all layers
+    /// and both K/V streams — the marginal (page-amortized) cost of one
+    /// decoded token.
+    pub fn position_bytes(&self) -> usize {
+        self.layers.iter().map(|lc| 2 * lc.row_bytes).sum()
+    }
+
+    /// The codec id of `layer`'s pages (`"exact"` or a scheme id).
+    pub fn codec_id(&self, layer: usize) -> String {
+        self.layers[layer].id()
+    }
+
+    /// Whether every layer runs the Exact codec (the bit-exact decode
+    /// contract applies to the whole model).
+    pub fn is_exact(&self) -> bool {
+        self.layers.iter().all(|l| matches!(l.kind, CodecKind::Exact))
+    }
+
+    /// Exact page bytes that growing a sequence from `existing` to
+    /// `existing + new` resident positions allocates — the same
+    /// arithmetic the allocator performs, so a reservation made with
+    /// this number cannot fail mid-forward.
+    pub fn bytes_for_rows(&self, existing: usize, new: usize) -> usize {
+        let pages =
+            |rows: usize| (rows + self.page_rows - 1) / self.page_rows;
+        let dp = pages(existing + new) - pages(existing);
+        self.layers.iter().map(|lc| 2 * dp * self.page_rows * lc.row_bytes).sum()
+    }
+
+    /// Page bytes a fresh sequence of `positions` rows allocates.
+    pub fn bytes_for_positions(&self, positions: usize) -> usize {
+        self.bytes_for_rows(0, positions)
+    }
+
+    /// Allocate one `layer` page against the budget.
+    fn alloc(&self, layer: usize) -> crate::Result<u32> {
+        let pb = self.page_bytes(layer);
+        let mut g = self.inner.lock().unwrap();
+        if g.used_bytes + pb > self.budget {
+            g.failed += 1;
+            anyhow::bail!(
+                "KV pool budget exhausted: {} used + {pb} page bytes > {} \
+                 budget (evict or raise the budget)",
+                g.used_bytes,
+                self.budget
+            );
+        }
+        g.used_bytes += pb;
+        g.peak_bytes = g.peak_bytes.max(g.used_bytes);
+        g.allocs += 1;
+        let page = Page { data: vec![0u8; pb], rows: 0 };
+        let id = match g.free_slots.pop() {
+            Some(id) => {
+                g.slots[id as usize] = Some(page);
+                id
+            }
+            None => {
+                g.slots.push(Some(page));
+                (g.slots.len() - 1) as u32
+            }
+        };
+        Ok(id)
+    }
+
+    /// Free one page (memory is released, not retained).
+    fn free(&self, id: u32) {
+        let mut g = self.inner.lock().unwrap();
+        let page = g.slots[id as usize].take().expect("double free");
+        g.used_bytes -= page.data.len();
+        g.frees += 1;
+        g.free_slots.push(id);
+    }
+
+    /// Append `rows` (`n · d_model` values) to one layer stream. Every
+    /// page the append needs is allocated **up front**, then one lock
+    /// acquisition covers the whole row-encode loop (this runs once per
+    /// layer-stream per decode step — the hot path). A budget failure
+    /// is atomic for the stream: pages this call allocated are freed
+    /// again and no rows are written (callers additionally reserve via
+    /// [`KvPool::bytes_for_rows`], so the path is cold).
+    fn stream_append(
+        &self,
+        layer: usize,
+        stream: &mut Stream,
+        rows: &[f32],
+        codes: &mut [u8],
+    ) -> crate::Result<()> {
+        let d = self.d_model;
+        debug_assert_eq!(rows.len() % d, 0);
+        let total = stream.rows + rows.len() / d;
+        let pages_before = stream.pages.len();
+        while stream.pages.len() * self.page_rows < total {
+            match self.alloc(layer) {
+                Ok(id) => stream.pages.push(id),
+                Err(e) => {
+                    for id in stream.pages.drain(pages_before..) {
+                        self.free(id);
+                    }
+                    return Err(e);
+                }
+            }
+        }
+        let lc = &self.layers[layer];
+        let rb = lc.row_bytes;
+        let mut g = self.inner.lock().unwrap();
+        for row in rows.chunks_exact(d) {
+            let page_id = stream.pages[stream.rows / self.page_rows];
+            let slot = stream.rows % self.page_rows;
+            let page = g.slots[page_id as usize]
+                .as_mut()
+                .expect("stream page is live");
+            debug_assert_eq!(page.rows, slot);
+            lc.encode_row(row, &mut page.data[slot * rb..(slot + 1) * rb], codes)?;
+            page.rows = slot + 1;
+            stream.rows += 1;
+        }
+        Ok(())
+    }
+
+    /// Decode a whole layer's K and V streams into `k_out`/`v_out`
+    /// (cleared first) under a single lock acquisition — the spine's
+    /// per-layer attention read.
+    fn stream_gather_pair(
+        &self,
+        layer: usize,
+        ks: &Stream,
+        vs: &Stream,
+        k_out: &mut Vec<f32>,
+        v_out: &mut Vec<f32>,
+        codes: &mut [u8],
+    ) {
+        let d = self.d_model;
+        let lc = &self.layers[layer];
+        let g = self.inner.lock().unwrap();
+        for (stream, out) in [(ks, k_out), (vs, v_out)] {
+            out.clear();
+            out.resize(stream.rows * d, 0.0);
+            for (pi, &page_id) in stream.pages.iter().enumerate() {
+                let page = g.slots[page_id as usize]
+                    .as_ref()
+                    .expect("stream page is live");
+                let base = pi * self.page_rows;
+                // saturating: an aborted append may leave an allocated
+                // page holding no rows for this stream
+                let n = page.rows.min(stream.rows.saturating_sub(base));
+                for r in 0..n {
+                    lc.decode_row(
+                        &page.data[r * lc.row_bytes..(r + 1) * lc.row_bytes],
+                        &mut out[(base + r) * d..(base + r + 1) * d],
+                        codes,
+                    );
+                }
+            }
+        }
+    }
+
+    /// Release every page of a stream.
+    fn stream_free(&self, stream: &mut Stream) {
+        for id in stream.pages.drain(..) {
+            self.free(id);
+        }
+        stream.rows = 0;
+    }
+}
+
+/// One layer-stream's page handles.
+#[derive(Default)]
+struct Stream {
+    pages: Vec<u32>,
+    rows: usize,
+}
+
+/// A pool-backed sequence cache: per layer, one K and one V page
+/// stream. Created via [`KvPool::seq`] (which wraps it in the public
+/// [`SeqKv`]); pages return to the pool on [`PagedKv::reset`] or drop.
+pub(crate) struct PagedKv {
+    pool: Arc<KvPool>,
+    k: Vec<Stream>,
+    v: Vec<Stream>,
+    /// `d_model`-byte element-code scratch shared by every append and
+    /// gather (the per-row codec would otherwise allocate per call on
+    /// the decode hot path).
+    codes: Vec<u8>,
+}
+
+impl PagedKv {
+    fn new(pool: Arc<KvPool>) -> PagedKv {
+        let mk = || (0..pool.n_layers).map(|_| Stream::default()).collect();
+        let codes = vec![0u8; pool.d_model];
+        PagedKv { k: mk(), v: mk(), codes, pool }
+    }
+
+    pub(crate) fn pool(&self) -> &Arc<KvPool> {
+        &self.pool
+    }
+
+    pub(crate) fn layers(&self) -> usize {
+        self.k.len()
+    }
+
+    /// `(k rows, v rows)` resident in `layer`.
+    pub(crate) fn rows(&self, layer: usize) -> (usize, usize) {
+        (self.k[layer].rows, self.v[layer].rows)
+    }
+
+    pub(crate) fn append(
+        &mut self,
+        layer: usize,
+        k_rows: &[f32],
+        v_rows: &[f32],
+    ) -> crate::Result<()> {
+        self.pool.stream_append(
+            layer,
+            &mut self.k[layer],
+            k_rows,
+            &mut self.codes,
+        )?;
+        self.pool.stream_append(
+            layer,
+            &mut self.v[layer],
+            v_rows,
+            &mut self.codes,
+        )
+    }
+
+    /// Decode one layer's K and V rows into the output buffers; the
+    /// caller threads the element-code scratch (resized here) so the
+    /// per-token attention read allocates nothing.
+    pub(crate) fn gather_with(
+        &self,
+        layer: usize,
+        k_out: &mut Vec<f32>,
+        v_out: &mut Vec<f32>,
+        codes: &mut Vec<u8>,
+    ) {
+        codes.resize(self.pool.d_model, 0);
+        self.pool.stream_gather_pair(
+            layer,
+            &self.k[layer],
+            &self.v[layer],
+            k_out,
+            v_out,
+            codes,
+        );
+    }
+
+    /// Allocating convenience wrapper over [`PagedKv::gather_with`]
+    /// (cold paths: trace capture, tests).
+    pub(crate) fn gather(
+        &self,
+        layer: usize,
+        k_out: &mut Vec<f32>,
+        v_out: &mut Vec<f32>,
+    ) {
+        let mut codes = Vec::new();
+        self.gather_with(layer, k_out, v_out, &mut codes);
+    }
+
+    /// Allocated page bytes across all streams (what this sequence
+    /// holds of the pool budget — includes partially filled pages).
+    pub(crate) fn resident_bytes(&self) -> usize {
+        self.k
+            .iter()
+            .zip(&self.v)
+            .enumerate()
+            .map(|(l, (ks, vs))| {
+                (ks.pages.len() + vs.pages.len()) * self.pool.page_bytes(l)
+            })
+            .sum()
+    }
+
+    /// Free every page and return to the empty state.
+    pub(crate) fn reset(&mut self) {
+        for s in self.k.iter_mut().chain(self.v.iter_mut()) {
+            self.pool.stream_free(s);
+        }
+    }
+}
+
+impl Drop for PagedKv {
+    fn drop(&mut self) {
+        self.reset();
+    }
+}
+
+impl std::fmt::Debug for PagedKv {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PagedKv")
+            .field("layers", &self.k.len())
+            .field("rows", &self.k.first().map_or(0, |s| s.rows))
+            .field("resident_bytes", &self.resident_bytes())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Pcg64;
+    use crate::quant::fake_quant;
+    use crate::runtime::QConfig;
+
+    fn dims(d_model: usize, n_layers: usize) -> ModelDims {
+        ModelDims {
+            vocab: 16,
+            d_model,
+            n_heads: 1,
+            n_layers,
+            d_ff: 2 * d_model,
+            seq_len: 64,
+        }
+    }
+
+    #[test]
+    fn exact_pages_roundtrip_bit_identically() {
+        let pool = KvPool::exact(&dims(16, 2), 4, 1 << 20).unwrap();
+        let mut kv = PagedKv::new(pool.clone());
+        // awkward values: -0.0, subnormals, extremes
+        let mut rng = Pcg64::new(3);
+        let mut rows = rng.normal_vec_f32(6 * 16, 1e-3);
+        rows[0] = -0.0;
+        rows[1] = f32::MIN_POSITIVE / 2.0;
+        rows[2] = 3.4e38;
+        rows[3] = -1.1754944e-38;
+        kv.append(0, &rows, &rows).unwrap();
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        kv.gather(0, &mut k, &mut v);
+        assert_eq!(k.len(), rows.len());
+        for (a, b) in rows.iter().zip(k.iter().chain(&v)) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn mx_pages_decode_as_fake_quant_of_the_written_row() {
+        // the stated Mx error model: reading back a row yields exactly
+        // fake_quant(scheme, row) — across elements, scales (incl. the
+        // f32-scale bf16 path), block sizes, and σ regimes
+        crate::util::check::property("kv mx roundtrip", 60, |g| {
+            let d = *g.pick(&[16usize, 32, 64]);
+            let bs = *g.pick(&[4usize, 8, 16]);
+            if d % bs != 0 {
+                return;
+            }
+            let elem = *g.pick(&["fp4_e2m1", "fp8_e4m3", "fp6_e2m3"]);
+            let scale = *g.pick(&["ue4m3", "ue5m3", "e8m0", "bf16"]);
+            let sigma = g.log_uniform(1e-5, 1.0);
+            let cfg = QConfig::named(elem, scale, false).unwrap();
+            let pool = KvPool::build(
+                &dims(d, 1),
+                &PerLayerQConfig::uniform(cfg),
+                bs,
+                4,
+                1 << 24,
+            )
+            .unwrap();
+            let mut kv = PagedKv::new(pool);
+            let n_rows = g.usize_in(1, 9);
+            let rows = g.normal_vec_f32(n_rows * d, sigma);
+            kv.append(0, &rows, &rows).unwrap();
+            let (mut k, mut v) = (Vec::new(), Vec::new());
+            kv.gather(0, &mut k, &mut v);
+            let scheme = cfg.scheme(bs);
+            // per-row quantization: blocks never span rows
+            let mut want = Vec::new();
+            for row in rows.chunks(d) {
+                want.extend(fake_quant(&scheme, row));
+            }
+            for (i, (a, b)) in k.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "{elem}/{scale}/bs{bs} elem {i}: {a} vs {b}"
+                );
+            }
+            assert_eq!(v, k);
+        });
+    }
+
+    #[test]
+    fn byte_accounting_is_exact_after_every_alloc_and_free() {
+        let d = dims(8, 2);
+        let pool = KvPool::exact(&d, 4, 10_000).unwrap();
+        let row_bytes = 8 * 4;
+        let page_bytes = 4 * row_bytes;
+        assert_eq!(pool.page_bytes(0), page_bytes);
+        assert_eq!(pool.position_bytes(), 2 * 2 * row_bytes);
+        let mut kv = PagedKv::new(pool.clone());
+        let mut expect = 0usize;
+        let one = vec![0.5f32; 8];
+        for step in 1..=9usize {
+            for layer in 0..2 {
+                kv.append(layer, &one, &one).unwrap();
+            }
+            // each layer has 2 streams; pages grow at rows 1, 5, 9...
+            let pages_per_stream = (step + 3) / 4;
+            expect = 2 * 2 * pages_per_stream * page_bytes;
+            assert_eq!(pool.used_bytes(), expect, "after step {step}");
+            assert_eq!(kv.resident_bytes(), expect);
+            assert_eq!(
+                pool.bytes_for_rows(0, step),
+                expect,
+                "reservation math at {step} rows"
+            );
+        }
+        // marginal growth math matches the allocator exactly
+        assert_eq!(pool.bytes_for_rows(9, 3), 0); // rows 10..12 fit page 3
+        assert_eq!(pool.bytes_for_rows(9, 4), 4 * page_bytes);
+        kv.reset();
+        assert_eq!(pool.used_bytes(), 0);
+        assert_eq!(kv.resident_bytes(), 0);
+        let s = pool.stats();
+        assert_eq!(s.allocs, s.frees);
+        assert_eq!(s.failed_allocs, 0);
+        assert_eq!(s.peak_bytes, expect);
+        // drop-frees also return pages
+        let mut kv2 = PagedKv::new(pool.clone());
+        kv2.append(0, &one, &one).unwrap();
+        assert!(pool.used_bytes() > 0);
+        drop(kv2);
+        assert_eq!(pool.used_bytes(), 0);
+    }
+
+    #[test]
+    fn budget_refusal_leaves_accounting_unchanged() {
+        let d = dims(8, 1);
+        // room for exactly 2 pages (one K + one V page of 4 rows)
+        let page = 4 * 8 * 4;
+        let pool = KvPool::exact(&d, 4, 2 * page).unwrap();
+        let mut kv = PagedKv::new(pool.clone());
+        let rows = vec![1.0f32; 4 * 8];
+        kv.append(0, &rows, &rows).unwrap();
+        assert_eq!(pool.used_bytes(), 2 * page);
+        assert_eq!(pool.free_bytes(), 0);
+        let one = vec![1.0f32; 8];
+        let err = kv.append(0, &one, &one).unwrap_err();
+        assert!(format!("{err}").contains("budget exhausted"));
+        assert_eq!(pool.used_bytes(), 2 * page);
+        assert_eq!(pool.stats().failed_allocs, 1);
+        // the failed append wrote nothing: row counts are unchanged
+        assert_eq!(kv.rows(0), (4, 4));
+        kv.reset();
+        assert_eq!(pool.used_bytes(), 0);
+        // after the free the same append succeeds
+        let mut kv2 = PagedKv::new(pool.clone());
+        kv2.append(0, &one, &one).unwrap();
+        assert_eq!(kv2.rows(0), (1, 1));
+    }
+
+    #[test]
+    fn build_rejects_unsupported_kv_configs() {
+        let d = dims(16, 1);
+        // per-tensor KV scaling is refused
+        let per_tensor = PerLayerQConfig::uniform(
+            QConfig::named("fp4_e2m1", "ue4m3", true).unwrap(),
+        );
+        assert!(KvPool::build(&d, &per_tensor, 8, 4, 1 << 20).is_err());
+        // block size must divide d_model
+        let fp8 = PerLayerQConfig::uniform(
+            QConfig::named("fp8_e4m3", "ue5m3", false).unwrap(),
+        );
+        assert!(KvPool::build(&d, &fp8, 12, 4, 1 << 20).is_err());
+        assert!(KvPool::build(&d, &fp8, 8, 0, 1 << 20).is_err());
+        let pool = KvPool::build(&d, &fp8, 8, 4, 1 << 20).unwrap();
+        assert_eq!(pool.codec_id(0), "fp8_e4m3/ue5m3/bs8");
+        assert!(!pool.is_exact());
+        // fp8 codes (8b) + 1-byte scales every 8 elems
+        assert_eq!(pool.row_bytes(0), 16 + 2);
+    }
+
+    #[test]
+    fn mixed_per_layer_codecs_price_rows_independently() {
+        let d = dims(32, 3);
+        let cfg = PerLayerQConfig::uniform(QConfig::baseline())
+            .with_override(1, QConfig::fp4("ue5m3").unwrap())
+            .with_override(
+                2,
+                QConfig::named("fp8_e4m3", "ue4m3", false).unwrap(),
+            );
+        let pool = KvPool::build(&d, &cfg, 16, 4, 1 << 24).unwrap();
+        assert_eq!(pool.row_bytes(0), 32 * 4); // exact f32
+        assert_eq!(pool.row_bytes(1), 16 + 2); // fp4: d/2 codes + 2 scales
+        assert_eq!(pool.row_bytes(2), 32 + 2); // fp8: d codes + 2 scales
+        assert_eq!(
+            pool.position_bytes(),
+            2 * (128 + 18 + 34),
+            "K+V row bytes across layers"
+        );
+        assert_eq!(pool.codec_id(0), "exact");
+    }
+}

@@ -50,15 +50,30 @@
 //! * [`scheduler`] — [`Scheduler`]: continuous batching — sequences
 //!   admitted and retired mid-flight, prefill and decode fused into one
 //!   ragged forward per iteration, deterministic seeded sampling.
+//! * [`kvpool`] — [`KvPool`]: the paged, byte-budgeted KV-cache arena
+//!   (DESIGN.md §11). Fixed-size pages with a per-layer page codec:
+//!   `Exact` pages keep the decode contract bit for bit, `Mx` pages
+//!   store block-quantized K/V (FP8/FP4 codes + UE4M3/UE5M3/BF16-class
+//!   scales) under a stated error model — the KV cache as an in-vivo
+//!   testbed for the paper's block-size anomaly (`microscale
+//!   kv-sweep`). With a pool attached ([`DecodeEngine::with_pool`])
+//!   the scheduler admits and evicts on real page-budget accounting:
+//!   requests queue at capacity, and evicted sequences resume with
+//!   their token streams unchanged.
 //!
 //! `microscale decode-bench` ([`decode_bench`]) measures generation
-//! throughput/latency and emits `BENCH_decode.json`.
+//! throughput/latency and emits `BENCH_decode.json`; `microscale
+//! kv-bench` ([`kv_bench`]) measures the memory/throughput trade of
+//! Exact vs FP8 vs FP4 KV pages at a fixed page budget and emits
+//! `BENCH_kv.json`.
 
 pub mod batcher;
 pub mod bench;
 pub mod decode;
 pub mod decode_bench;
 pub mod engine;
+pub mod kv_bench;
+pub mod kvpool;
 pub mod packed_model;
 pub mod scheduler;
 
@@ -71,6 +86,7 @@ pub use batcher::{Batcher, BatcherConfig};
 pub use self::cache::{operand_cache, CacheStats, OperandCache};
 pub use decode::{DecodeEngine, Sampler, Sampling};
 pub use engine::{EngineConfig, ResponseHandle, ServeEngine, ServeStats};
+pub use kvpool::{KvPool, KvPoolStats};
 pub use packed_model::{reference_forward, PackedModel, SeqKv};
 pub use scheduler::{
     DecodeRequest, DecodeResult, FinishReason, Scheduler, SchedulerConfig,

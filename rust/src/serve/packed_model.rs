@@ -35,7 +35,7 @@
 //! is per-row (blocks never span rows in the [`GemmOperand`] layout);
 //! and the one batch-global statistic in the system — the eq. 11
 //! per-tensor absmax — is deliberately computed per *sequence*
-//! ([`quantize_acts_by_sequence`]). `rust/tests/serve.rs` pins the
+//! (`quantize_acts_by_sequence`). `rust/tests/serve.rs` pins the
 //! guarantee by re-batching the same request among different neighbors.
 //!
 //! # One numeric spine: whole-batch, prefill, and decode
@@ -43,10 +43,12 @@
 //! `forward_spine` is the single implementation behind all three
 //! entry shapes. It processes a *ragged* batch — `lens[b]` new tokens
 //! for sequence `b`, appended after `kvs[b].len()` positions already
-//! resident in that sequence's [`SeqKv`] cache (f32 post-gain keys and
+//! resident in that sequence's [`SeqKv`] cache (post-gain keys and
 //! values per layer; attention is full precision per paper App. A, so
-//! the cache holds exactly what the whole-batch pass would have
-//! computed). [`PackedModel::forward`] is the `past = 0`, equal-`lens`
+//! an exact cache holds exactly what the whole-batch pass would have
+//! computed — [`SeqKv`] docs describe the inline f32 backend and the
+//! paged backend with its `Exact`/`Mx` page codecs).
+//! [`PackedModel::forward`] is the `past = 0`, equal-`lens`
 //! special case; prefill is one sequence with `past = 0`; a decode step
 //! is `lens = [1, 1, ...]` over live caches ([`crate::serve::decode`]).
 //!
@@ -183,31 +185,60 @@ pub struct PathSummary {
     pub reference: usize,
 }
 
-/// One sequence's KV cache: per layer, one f32 key row and one value
-/// row per resident position, stored **post-gain** (the exact bits the
-/// whole-batch K/V GEMMs + γ scaling produce — attention is full
-/// precision per paper App. A, so nothing is quantized here).
+/// One sequence's KV cache: per layer, one key row and one value row
+/// per resident position, stored **post-gain** (the bits the
+/// whole-batch K/V GEMMs + γ scaling produce — attention itself is full
+/// precision per paper App. A).
+///
+/// Two storage backends share this type:
+///
+/// * **Inline** ([`SeqKv::new`] / [`SeqKv::with_capacity`]) — plain
+///   per-layer `Vec<f32>` rows, read zero-copy by the spine. Always
+///   bit-exact; this is the PR-4 layout and what scratch caches use.
+/// * **Paged** ([`crate::serve::KvPool::seq`]) — rows live in
+///   fixed-size pages allocated from a byte-budgeted
+///   [`crate::serve::KvPool`] and pass through the pool's per-layer
+///   page codec: `Exact` pages round-trip f32 bits unchanged (the
+///   decode exactness contract holds verbatim), `Mx` pages store
+///   block-quantized codes + scales and read back as
+///   `fake_quant(scheme, row)` — the stated error model
+///   ([`crate::serve::kvpool`] module docs).
 ///
 /// Rows append in position order; [`SeqKv::len`] is the number of
-/// resident positions. The module-docs exactness argument is why f32
-/// rows are sufficient for bit-identical KV-cached decode.
-#[derive(Debug, Clone, Default)]
+/// resident positions.
+#[derive(Debug, Default)]
 pub struct SeqKv {
-    /// Per layer: `len * d_model` cached key rows.
-    k: Vec<Vec<f32>>,
-    /// Per layer: `len * d_model` cached value rows.
-    v: Vec<Vec<f32>>,
+    store: Store,
     len: usize,
 }
 
+#[derive(Debug)]
+enum Store {
+    Inline { k: Vec<Vec<f32>>, v: Vec<Vec<f32>> },
+    Paged(super::kvpool::PagedKv),
+}
+
+impl Default for Store {
+    fn default() -> Store {
+        Store::Inline { k: Vec::new(), v: Vec::new() }
+    }
+}
+
 impl SeqKv {
-    /// Empty cache for an `n_layers`-deep model.
+    /// Empty inline cache for an `n_layers`-deep model.
     pub fn new(n_layers: usize) -> SeqKv {
-        SeqKv { k: vec![Vec::new(); n_layers], v: vec![Vec::new(); n_layers], len: 0 }
+        SeqKv {
+            store: Store::Inline {
+                k: vec![Vec::new(); n_layers],
+                v: vec![Vec::new(); n_layers],
+            },
+            len: 0,
+        }
     }
 
-    /// Empty cache with room for `positions` rows of width `d_model`
-    /// per layer (decode appends one row per step — reserve once).
+    /// Empty inline cache with room for `positions` rows of width
+    /// `d_model` per layer (decode appends one row per step — reserve
+    /// once).
     pub fn with_capacity(
         n_layers: usize,
         d_model: usize,
@@ -218,7 +249,12 @@ impl SeqKv {
                 .map(|_| Vec::with_capacity(positions * d_model))
                 .collect()
         };
-        SeqKv { k: mk(), v: mk(), len: 0 }
+        SeqKv { store: Store::Inline { k: mk(), v: mk() }, len: 0 }
+    }
+
+    /// Wrap a pool-backed cache ([`crate::serve::KvPool::seq`]).
+    pub(crate) fn paged(p: super::kvpool::PagedKv) -> SeqKv {
+        SeqKv { store: Store::Paged(p), len: 0 }
     }
 
     /// Resident positions.
@@ -228,16 +264,150 @@ impl SeqKv {
 
     /// Layers this cache was shaped for.
     pub fn layers(&self) -> usize {
-        self.k.len()
+        match &self.store {
+            Store::Inline { k, .. } => k.len(),
+            Store::Paged(p) => p.layers(),
+        }
     }
 
-    /// Resident f32 payload bytes across all layers (capacity excluded).
+    /// Whether this cache is backed by a [`crate::serve::KvPool`].
+    pub fn is_paged(&self) -> bool {
+        matches!(self.store, Store::Paged(_))
+    }
+
+    /// The backing pool, when paged.
+    pub fn pool(&self) -> Option<&std::sync::Arc<super::kvpool::KvPool>> {
+        match &self.store {
+            Store::Inline { .. } => None,
+            Store::Paged(p) => Some(p.pool()),
+        }
+    }
+
+    /// Resident bytes: the f32 payload for inline caches, the exact
+    /// allocated page bytes (partially filled pages included) for
+    /// paged ones.
     pub fn resident_bytes(&self) -> usize {
-        self.k
-            .iter()
-            .chain(self.v.iter())
-            .map(|rows| rows.len() * std::mem::size_of::<f32>())
-            .sum()
+        match &self.store {
+            Store::Inline { k, v } => k
+                .iter()
+                .chain(v.iter())
+                .map(|rows| rows.len() * std::mem::size_of::<f32>())
+                .sum(),
+            Store::Paged(p) => p.resident_bytes(),
+        }
+    }
+
+    /// Release the cache's storage (paged: pages return to the pool)
+    /// and return to the empty state — the scheduler's eviction
+    /// primitive.
+    pub fn reset(&mut self) {
+        match &mut self.store {
+            Store::Inline { k, v } => {
+                for rows in k.iter_mut().chain(v.iter_mut()) {
+                    rows.clear();
+                }
+            }
+            Store::Paged(p) => p.reset(),
+        }
+        self.len = 0;
+    }
+
+    /// One layer's resident K and V rows, decoded to dense f32
+    /// (`len · d_model` each) — the KV sweep's trace-capture hook and a
+    /// debugging aid. Inline caches copy; paged caches decode through
+    /// their codec.
+    pub fn layer_rows_f32(&self, layer: usize) -> (Vec<f32>, Vec<f32>) {
+        match &self.store {
+            Store::Inline { k, v } => (k[layer].clone(), v[layer].clone()),
+            Store::Paged(p) => {
+                let (mut k, mut v) = (Vec::new(), Vec::new());
+                p.gather(layer, &mut k, &mut v);
+                (k, v)
+            }
+        }
+    }
+
+    /// Shape/consistency validation the spine runs per call: layer
+    /// count, per-layer row payloads == `len` (catches caches reused
+    /// after a failed partial step), and — for paged caches — that the
+    /// pool was built for this model's width.
+    fn validate_for(&self, dims: &ModelDims) -> crate::Result<()> {
+        let d = dims.d_model;
+        ensure!(
+            self.layers() == dims.n_layers,
+            "KV cache has {} layers, model has {}",
+            self.layers(),
+            dims.n_layers
+        );
+        match &self.store {
+            Store::Inline { k, v } => {
+                for (li, kl) in k.iter().enumerate() {
+                    ensure!(
+                        kl.len() == self.len * d && v[li].len() == self.len * d,
+                        "KV cache layer {li} holds {}/{} values for {} \
+                         positions of width {d} — reused after a failed step?",
+                        kl.len(),
+                        v[li].len(),
+                        self.len
+                    );
+                }
+            }
+            Store::Paged(p) => {
+                ensure!(
+                    p.pool().d_model() == d,
+                    "KV pool pages are {} wide, model d_model is {d}",
+                    p.pool().d_model()
+                );
+                for li in 0..p.layers() {
+                    let (kr, vr) = p.rows(li);
+                    ensure!(
+                        kr == self.len && vr == self.len,
+                        "KV cache layer {li} holds {kr}/{vr} rows for {} \
+                         positions — reused after a failed step?",
+                        self.len
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Append one layer's new post-gain K/V rows (paged caches may fail
+    /// on pool-budget exhaustion — callers reserve first).
+    fn append_layer(
+        &mut self,
+        layer: usize,
+        ky: &[f32],
+        vv: &[f32],
+    ) -> crate::Result<()> {
+        match &mut self.store {
+            Store::Inline { k, v } => {
+                k[layer].extend_from_slice(ky);
+                v[layer].extend_from_slice(vv);
+                Ok(())
+            }
+            Store::Paged(p) => p.append(layer, ky, vv),
+        }
+    }
+
+    /// One layer's resident rows for the attention loop. Inline caches
+    /// return their rows zero-copy; paged caches decode into the
+    /// caller's scratch buffers (`code_scratch` carries the element
+    /// codes, so the per-token read allocates nothing).
+    fn layer_rows<'a>(
+        &'a self,
+        layer: usize,
+        k_scratch: &'a mut Vec<f32>,
+        v_scratch: &'a mut Vec<f32>,
+        code_scratch: &mut Vec<u8>,
+    ) -> (&'a [f32], &'a [f32]) {
+        match &self.store {
+            Store::Inline { k, v } => (k[layer].as_slice(), v[layer].as_slice()),
+            Store::Paged(p) => {
+                p.gather_with(layer, k_scratch, v_scratch, code_scratch);
+                (k_scratch.as_slice(), v_scratch.as_slice())
+            }
+        }
     }
 }
 
@@ -434,8 +604,15 @@ impl PackedModel {
     /// incremental call never sees, so its chunks quantize under a
     /// different factor. [`crate::serve::decode::DecodeEngine::new`]
     /// refuses those configs; callers driving this API directly must
-    /// apply the same rule to keep the guarantee. On error the caches
-    /// may hold a partial step — discard them.
+    /// apply the same rule to keep the guarantee. For caches on a
+    /// [`crate::serve::KvPool`] the guarantee is per codec: `Exact`
+    /// pages keep it verbatim, `Mx` pages make attention read
+    /// block-quantized K/V (a stated error model), but incremental and
+    /// whole-prefix calls still agree bit for bit *under the same
+    /// codec* ([`crate::serve::kvpool`] docs). On error the caches may
+    /// hold a partial step — discard them (paged caches additionally
+    /// fail when the pool budget is exhausted; schedulers reserve pages
+    /// first via [`crate::serve::KvPool::bytes_for_rows`]).
     pub fn forward_ragged(
         &self,
         tokens: &[i32],
@@ -591,26 +768,12 @@ where
     let mut max_ctx = 0usize;
     for (b, (&l, kv)) in lens.iter().zip(kvs.iter()).enumerate() {
         ensure!(l >= 1, "sequence {b}: empty token span");
-        ensure!(
-            kv.layers() == dims.n_layers,
-            "sequence {b}: KV cache has {} layers, model has {}",
-            kv.layers(),
-            dims.n_layers
-        );
-        // row payloads must match the declared length — catches caches
-        // reused after a failed (partial) step and caches built against
-        // a different d_model, both of which would otherwise silently
-        // misalign the attention reads
-        for (li, kl) in kv.k.iter().enumerate() {
-            ensure!(
-                kl.len() == kv.len * d && kv.v[li].len() == kv.len * d,
-                "sequence {b}: KV cache layer {li} holds {}/{} values for \
-                 {} positions of width {d} — reused after a failed step?",
-                kl.len(),
-                kv.v[li].len(),
-                kv.len
-            );
-        }
+        // shape + row-payload validation — catches caches reused after
+        // a failed (partial) step and caches built against a different
+        // model, both of which would otherwise silently misalign the
+        // attention reads
+        kv.validate_for(dims)
+            .map_err(|e| anyhow::anyhow!("sequence {b}: {e}"))?;
         ensure!(
             kv.len + l <= dims.seq_len,
             "sequence {b}: {} cached + {l} new positions exceed seq_len {}",
@@ -654,6 +817,10 @@ where
 
     let att_scale = 1.0 / (hd as f32).sqrt();
     let mut att = vec![0.0f32; max_ctx];
+    // scratch for paged caches (inline caches are read zero-copy)
+    let mut k_scratch: Vec<f32> = Vec::new();
+    let mut v_scratch: Vec<f32> = Vec::new();
+    let mut code_scratch: Vec<u8> = Vec::new();
     for layer in 0..dims.n_layers {
         let g = &ctx.gains[layer * 6..(layer + 1) * 6];
         let h1 = layer_norm(
@@ -668,12 +835,18 @@ where
 
         // append the new post-gain K/V rows to each sequence's cache —
         // bit-for-bit the rows the whole-batch pass computes, by the
-        // per-row GEMM contract
+        // per-row GEMM contract (Mx-paged caches quantize here; the
+        // attention below then reads the quantized rows back, which is
+        // what keeps incremental and whole-prefix decode identical
+        // under any one codec)
         {
             let mut r0 = 0usize;
             for (b, &l) in lens.iter().enumerate() {
-                kvs[b].k[layer].extend_from_slice(&ky[r0 * d..(r0 + l) * d]);
-                kvs[b].v[layer].extend_from_slice(&vv[r0 * d..(r0 + l) * d]);
+                kvs[b].append_layer(
+                    layer,
+                    &ky[r0 * d..(r0 + l) * d],
+                    &vv[r0 * d..(r0 + l) * d],
+                )?;
                 r0 += l;
             }
         }
@@ -684,8 +857,12 @@ where
         let mut o = vec![0.0f32; rows * d];
         let mut r0 = 0usize;
         for (b, &l) in lens.iter().enumerate() {
-            let kc = &kvs[b].k[layer];
-            let vc = &kvs[b].v[layer];
+            let (kc, vc) = kvs[b].layer_rows(
+                layer,
+                &mut k_scratch,
+                &mut v_scratch,
+                &mut code_scratch,
+            );
             for head in 0..nh {
                 let c0 = head * hd;
                 for i in 0..l {

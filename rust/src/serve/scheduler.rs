@@ -11,14 +11,37 @@
 //!
 //! ```text
 //! waiting ──admit──▶ prefill ──▶ decoding ──stop──▶ finished
-//!            (≤ max_prefill_per_step joins per step,
-//!             ≤ max_active sequences KV-resident)
+//!            ▲  (≤ max_prefill_per_step joins per step,          │
+//!            │   ≤ max_active sequences KV-resident,             │
+//!            │   and — with a KvPool — only if the step's pages  │
+//!            │   fit the byte budget)                            │
+//!            └────────────── preempted ◀──evict-at-capacity──────┘
 //! ```
 //!
 //! Stop conditions, checked after each sampled token: the token equals
 //! `eos` (kept in the output), `max_new_tokens` reached, or the context
 //! window is exhausted ([`FinishReason::ContextFull`] — the final token
 //! is still returned; it just cannot be fed back).
+//!
+//! # Memory-bounded scheduling
+//!
+//! When the engine carries a [`crate::serve::KvPool`]
+//! ([`DecodeEngine::with_pool`]), every step **reserves** its page cost
+//! up front with the pool's exact page arithmetic
+//! ([`crate::serve::KvPool::bytes_for_rows`]): admission stops at the
+//! first waiting request whose prefill pages don't fit (admission
+//! blocks — FIFO order is preserved), and if the live sequences' next
+//! decode step itself no longer fits, the **youngest** active sequence
+//! is evicted — its pages return to the pool and the request moves to
+//! the head of a preempted queue ([`Scheduler::preempted`]) with its
+//! sampler state and generated tokens intact. A preempted sequence
+//! resumes by re-prefilling `prompt ++ generated` in one ragged call;
+//! under the Exact codec the full-prefix exactness contract makes the
+//! resumed logits bit-identical to the uninterrupted ones (and under an
+//! Mx codec identical under that same codec), so **preemption never
+//! changes a token stream** — pinned by `rust/tests/kvpool.rs`. The
+//! engine guarantees the budget fits one full-context sequence, so
+//! evicting down to a single sequence always makes progress.
 //!
 //! # Determinism
 //!
@@ -107,6 +130,19 @@ struct Active {
     emitted: Vec<Instant>,
 }
 
+impl Active {
+    /// New cache rows the next step appends for this sequence: the
+    /// whole `prompt ++ generated` prefix when the cache is empty
+    /// (fresh prefill or a preempted resume), one token otherwise.
+    fn step_len(&self) -> usize {
+        if self.kv.len() == 0 {
+            self.req.prompt.len() + self.out.len()
+        } else {
+            1
+        }
+    }
+}
+
 /// The continuous-batching driver (module docs). Single-threaded by
 /// design — the parallelism lives in the GEMM under the spine, and a
 /// deterministic driver is what makes the stream-invariance tests
@@ -115,8 +151,13 @@ pub struct Scheduler {
     engine: DecodeEngine,
     cfg: SchedulerConfig,
     waiting: VecDeque<(DecodeRequest, Instant)>,
+    /// Evicted-at-capacity sequences, resumed before new admissions
+    /// (front = most recently evicted = next to resume).
+    preempted: VecDeque<Active>,
     active: Vec<Active>,
     finished: Vec<DecodeResult>,
+    preemptions: u64,
+    peak_kv_bytes: usize,
 }
 
 impl Scheduler {
@@ -128,8 +169,11 @@ impl Scheduler {
                 max_prefill_per_step: cfg.max_prefill_per_step.max(1),
             },
             waiting: VecDeque::new(),
+            preempted: VecDeque::new(),
             active: Vec::new(),
             finished: Vec::new(),
+            preemptions: 0,
+            peak_kv_bytes: 0,
         }
     }
 
@@ -161,14 +205,38 @@ impl Scheduler {
         self.waiting.len()
     }
 
+    /// Sequences evicted at pool capacity, awaiting resume.
+    pub fn preempted(&self) -> usize {
+        self.preempted.len()
+    }
+
     /// KV-resident sequences.
     pub fn active(&self) -> usize {
         self.active.len()
     }
 
-    /// Total resident KV bytes across live sequences.
+    /// Whether no work remains (waiting, preempted, or KV-resident).
+    pub fn is_idle(&self) -> bool {
+        self.waiting.is_empty()
+            && self.preempted.is_empty()
+            && self.active.is_empty()
+    }
+
+    /// Total resident KV bytes across live sequences (allocated page
+    /// bytes when the engine runs on a [`crate::serve::KvPool`]).
     pub fn kv_resident_bytes(&self) -> usize {
         self.active.iter().map(|a| a.kv.resident_bytes()).sum()
+    }
+
+    /// High-water mark of [`Scheduler::kv_resident_bytes`] observed
+    /// after each step.
+    pub fn peak_kv_resident_bytes(&self) -> usize {
+        self.peak_kv_bytes
+    }
+
+    /// Evict-and-requeue events so far.
+    pub fn preemptions(&self) -> u64 {
+        self.preemptions
     }
 
     /// Take the results finished so far (sorted by request id).
@@ -178,18 +246,61 @@ impl Scheduler {
         out
     }
 
-    /// Run one scheduling iteration: admit, one ragged forward (prefill
-    /// + decode fused), sample, retire. Returns the number of tokens
-    /// generated (0 means fully idle).
+    /// Exact page bytes the next spine call over `active` allocates
+    /// (0 without a pool — inline caches are unbounded).
+    fn planned_step_bytes(&self) -> usize {
+        let Some(pool) = self.engine.pool() else { return 0 };
+        self.active
+            .iter()
+            .map(|a| pool.bytes_for_rows(a.kv.len(), a.step_len()))
+            .sum()
+    }
+
+    /// Whether the live set's next step plus `extra` additional fresh
+    /// prefill rows fits the pool budget (vacuously true without one).
+    fn step_fits(&self, extra_prefill_rows: usize) -> bool {
+        match self.engine.pool() {
+            None => true,
+            Some(pool) => {
+                self.planned_step_bytes()
+                    + pool.bytes_for_positions(extra_prefill_rows)
+                    <= pool.free_bytes()
+            }
+        }
+    }
+
+    /// Run one scheduling iteration: admit (within KV slots *and* the
+    /// pool's page budget), evict-and-requeue if the live set outgrew
+    /// the pool, one ragged forward (prefill + decode fused), sample,
+    /// retire. Returns the number of tokens generated — 0 means nothing
+    /// could run: either fully idle, or every admission is blocked on
+    /// pool pages held *outside* this scheduler (check
+    /// [`Scheduler::is_idle`] to tell the two apart; [`Scheduler::run`]
+    /// errors on the latter instead of spinning).
     pub fn step(&mut self) -> crate::Result<usize> {
-        // admit up to the prefill budget while KV slots are free
+        // admit up to the prefill budget while KV slots are free and —
+        // with a pool — while the candidate's prefill pages fit on top
+        // of the live set's planned step. Preempted sequences resume
+        // first (they hold generated tokens); then waiting requests in
+        // FIFO order, blocking at the first one that doesn't fit.
         let mut admitted = 0usize;
         while self.active.len() < self.cfg.max_active
             && admitted < self.cfg.max_prefill_per_step
         {
-            let Some((req, submitted)) = self.waiting.pop_front() else {
+            if let Some(a) = self.preempted.front() {
+                if !self.step_fits(a.step_len()) {
+                    break;
+                }
+                let a = self.preempted.pop_front().unwrap();
+                self.active.push(a);
+                admitted += 1;
+                continue;
+            }
+            let Some((req, _)) = self.waiting.front() else { break };
+            if !self.step_fits(req.prompt.len()) {
                 break;
-            };
+            }
+            let (req, submitted) = self.waiting.pop_front().unwrap();
             let sampler = Sampler::new(&req.sampling)?;
             self.active.push(Active {
                 req,
@@ -205,14 +316,37 @@ impl Scheduler {
             return Ok(0);
         }
 
-        // one ragged spine call: whole prompt for fresh sequences, one
-        // token for live ones
+        // at capacity the live set itself may no longer fit (decode
+        // growth crossing page boundaries): evict the youngest sequence
+        // — free its pages, requeue it with sampler + tokens intact —
+        // until the step fits. The engine's budget invariant (one full
+        // sequence always fits) bounds this at one survivor.
+        while !self.step_fits(0) {
+            // the engine's budget invariant guarantees one sequence
+            // *alone* always fits, so reaching zero evictable neighbors
+            // means the shortfall is external: the process-wide pool's
+            // pages are held by sequences outside this scheduler
+            ensure!(
+                self.active.len() > 1,
+                "scheduler blocked: the KV pool cannot fit the last live \
+                 sequence's next step — its pages are held outside this \
+                 scheduler (free them or raise the budget)"
+            );
+            let mut victim = self.active.pop().unwrap();
+            victim.kv.reset();
+            self.preempted.push_front(victim);
+            self.preemptions += 1;
+        }
+
+        // one ragged spine call: the full `prompt ++ generated` prefix
+        // for fresh and resumed sequences, one token for live ones
         let mut tokens = Vec::new();
         let mut lens = Vec::with_capacity(self.active.len());
         for a in &self.active {
             if a.kv.len() == 0 {
                 tokens.extend_from_slice(&a.req.prompt);
-                lens.push(a.req.prompt.len());
+                tokens.extend_from_slice(&a.out);
+                lens.push(a.req.prompt.len() + a.out.len());
             } else {
                 tokens.push(*a.out.last().expect("decoding seq has a token"));
                 lens.push(1);
@@ -241,6 +375,7 @@ impl Scheduler {
             }
         };
         let now = Instant::now();
+        self.peak_kv_bytes = self.peak_kv_bytes.max(self.kv_resident_bytes());
         let vocab = self.engine.model().dims().vocab;
         let seq_cap = self.engine.model().dims().seq_len;
 
@@ -278,9 +413,22 @@ impl Scheduler {
 
     /// Drive [`Scheduler::step`] until every submitted request has
     /// finished; returns all results sorted by request id.
+    ///
+    /// Errors instead of spinning if the scheduler can make no progress
+    /// — possible only when the KV pool's pages are held by sequences
+    /// *outside* this scheduler (the pool is process-wide), since the
+    /// engine's budget invariant guarantees this scheduler's own
+    /// sequences alone can always advance.
     pub fn run(&mut self) -> crate::Result<Vec<DecodeResult>> {
-        while !self.waiting.is_empty() || !self.active.is_empty() {
-            self.step()?;
+        while !self.is_idle() {
+            let produced = self.step()?;
+            ensure!(
+                produced > 0 || self.is_idle(),
+                "scheduler blocked: the KV pool has no room for the next \
+                 request's prefill and no live sequence to evict — pages \
+                 are held outside this scheduler (free them or raise the \
+                 budget)"
+            );
         }
         Ok(self.take_finished())
     }

@@ -1,0 +1,317 @@
+//! Paged-KV subsystem acceptance suite (ISSUE-5).
+//!
+//! Pins the load-bearing guarantees of the byte-budgeted KV pool:
+//!
+//! 1. **Admission blocks at capacity** — with a pool sized for one
+//!    in-flight sequence, requests queue (FIFO) instead of failing, and
+//!    every stream still equals the cache-free full-prefix oracle.
+//! 2. **Evict-and-requeue is invisible in the tokens** — forcing
+//!    mid-generation evictions (budget < combined working set) changes
+//!    no stream under the Exact codec, and preemptions really happen.
+//! 3. **Byte accounting is exact** — the pool's `used_bytes` equals the
+//!    scheduler's resident total at every step and returns to zero
+//!    (allocs == frees) after every run.
+//! 4. **Mx codec differential matrix** — over {FP8, FP4} × {UE4M3,
+//!    UE5M3} × block sizes {8, 32}: token-by-token stepping is
+//!    bit-identical to one whole-prefix call under the same codec, and
+//!    the quantized-KV logits error against the Exact codec is nonzero
+//!    but bounded (FP8 well under FP4).
+
+use std::sync::Arc;
+
+use microscale::dist::Pcg64;
+use microscale::model::Params;
+use microscale::runtime::artifacts::ModelDims;
+use microscale::runtime::qconfig::{PerLayerQConfig, QConfig};
+use microscale::serve::cache::OperandCache;
+use microscale::serve::decode::generate_reforward;
+use microscale::serve::packed_model::PackedModel;
+use microscale::serve::scheduler::{
+    DecodeRequest, FinishReason, Scheduler, SchedulerConfig,
+};
+use microscale::serve::{DecodeEngine, KvPool, Sampling};
+
+fn dims() -> ModelDims {
+    ModelDims {
+        vocab: 32,
+        d_model: 32,
+        n_heads: 2,
+        n_layers: 2,
+        d_ff: 64,
+        seq_len: 16,
+    }
+}
+
+fn model(seed: u64, qcfg: &PerLayerQConfig) -> Arc<PackedModel> {
+    let d = dims();
+    let params = Params::init_surrogate(&d, seed);
+    let cache = OperandCache::new(256);
+    Arc::new(PackedModel::build(&d, &params, qcfg, 8, &cache).unwrap())
+}
+
+fn tokens(rng: &mut Pcg64, count: usize) -> Vec<i32> {
+    let v = dims().vocab as u64;
+    (0..count).map(|_| (rng.next_u64() % v) as i32).collect()
+}
+
+fn req(id: u64, prompt: Vec<i32>, max_new: usize) -> DecodeRequest {
+    DecodeRequest {
+        id,
+        prompt,
+        max_new_tokens: max_new,
+        eos: None,
+        sampling: if id % 2 == 0 {
+            Sampling::Greedy
+        } else {
+            Sampling::Temperature { temp: 0.8, seed: 900 + id }
+        },
+    }
+}
+
+#[test]
+fn admission_blocks_at_capacity_and_streams_match_the_oracle() {
+    let qcfg = PerLayerQConfig::uniform(QConfig::fp4("ue5m3").unwrap());
+    let model = model(61, &qcfg);
+    // page math: d_model 32 → 128 B/row, 2 rows/page → 256 B/page;
+    // one full 16-position sequence = 8 pages × 4 streams = 8192 B
+    let pool = KvPool::exact(&dims(), 2, 8192).unwrap();
+    assert_eq!(pool.bytes_for_positions(16), 8192);
+
+    let mut rng = Pcg64::new(70);
+    let reqs: Vec<DecodeRequest> =
+        (0..3).map(|id| req(id, tokens(&mut rng, 10), 4)).collect();
+    let want: Vec<Vec<i32>> = reqs
+        .iter()
+        .map(|r| {
+            generate_reforward(
+                &model,
+                &r.prompt,
+                r.max_new_tokens,
+                r.eos,
+                &r.sampling,
+            )
+            .unwrap()
+        })
+        .collect();
+
+    let mut sched = Scheduler::new(
+        DecodeEngine::with_pool(model, pool.clone()).unwrap(),
+        SchedulerConfig { max_active: 8, max_prefill_per_step: 8 },
+    );
+    for r in &reqs {
+        sched.submit(r.clone()).unwrap();
+    }
+    // a 10-token prefill takes 5120 B, so a second one (another 5120 B)
+    // cannot fit: admission must block, not error
+    sched.step().unwrap();
+    assert_eq!(sched.active(), 1, "only one sequence fits the budget");
+    assert_eq!(sched.pending(), 2, "the rest queue FIFO");
+    assert!(pool.used_bytes() <= pool.budget_bytes());
+    assert_eq!(sched.kv_resident_bytes(), pool.used_bytes());
+
+    let results = sched.run().unwrap();
+    assert_eq!(results.len(), 3);
+    for (r, w) in results.iter().zip(&want) {
+        assert_eq!(r.tokens, *w, "request {} stream", r.id);
+        assert_eq!(r.finish, FinishReason::MaxTokens);
+    }
+    assert!(sched.peak_kv_resident_bytes() <= pool.budget_bytes());
+    assert_eq!(pool.used_bytes(), 0, "all pages returned");
+    let s = pool.stats();
+    assert_eq!(s.allocs, s.frees);
+}
+
+#[test]
+fn evict_and_requeue_preserves_streams_bit_exactly() {
+    let qcfg = PerLayerQConfig::uniform(QConfig::fp4("ue4m3").unwrap());
+    let model = model(62, &qcfg);
+    // budget = one full sequence (8192 B), but two requests that each
+    // grow to 11 positions (6144 B apiece): both admit while small,
+    // then decode growth forces evict-and-requeue
+    let pool = KvPool::exact(&dims(), 2, 8192).unwrap();
+    let mut rng = Pcg64::new(71);
+    let reqs: Vec<DecodeRequest> =
+        (0..2).map(|id| req(id, tokens(&mut rng, 2), 10)).collect();
+    let want: Vec<Vec<i32>> = reqs
+        .iter()
+        .map(|r| {
+            generate_reforward(
+                &model,
+                &r.prompt,
+                r.max_new_tokens,
+                r.eos,
+                &r.sampling,
+            )
+            .unwrap()
+        })
+        .collect();
+
+    let mut sched = Scheduler::new(
+        DecodeEngine::with_pool(model, pool.clone()).unwrap(),
+        SchedulerConfig { max_active: 4, max_prefill_per_step: 4 },
+    );
+    for r in &reqs {
+        sched.submit(r.clone()).unwrap();
+    }
+    let mut saw_preempted = false;
+    while !sched.is_idle() {
+        sched.step().unwrap();
+        saw_preempted |= sched.preempted() > 0;
+        assert_eq!(
+            sched.kv_resident_bytes(),
+            pool.used_bytes(),
+            "scheduler residency == pool accounting at every step"
+        );
+        assert!(pool.used_bytes() <= pool.budget_bytes());
+    }
+    let results = sched.take_finished();
+    assert_eq!(results.len(), 2);
+    for (r, w) in results.iter().zip(&want) {
+        assert_eq!(
+            r.tokens, *w,
+            "request {}: eviction must not change the stream",
+            r.id
+        );
+        assert_eq!(r.itl.len(), r.tokens.len() - 1);
+    }
+    assert!(
+        sched.preemptions() > 0 && saw_preempted,
+        "the budget must actually have forced evictions \
+         ({} preemptions)",
+        sched.preemptions()
+    );
+    assert_eq!(pool.used_bytes(), 0);
+    let s = pool.stats();
+    assert_eq!(s.allocs, s.frees);
+    assert!(s.peak_bytes <= pool.budget_bytes());
+}
+
+#[test]
+fn paged_exact_decode_is_bit_identical_to_inline() {
+    let qcfg = PerLayerQConfig::uniform(QConfig::fp4("ue5m3").unwrap());
+    let model = model(63, &qcfg);
+    let pool = KvPool::exact(&dims(), 4, 1 << 20).unwrap();
+    let inline = DecodeEngine::new(model.clone()).unwrap();
+    let paged = DecodeEngine::with_pool(model, pool).unwrap();
+    let mut rng = Pcg64::new(72);
+    let toks = tokens(&mut rng, 12);
+
+    let mut kv_i = inline.new_kv();
+    let mut kv_p = paged.new_kv();
+    assert!(!kv_i.is_paged() && kv_p.is_paged());
+    let mut a = inline.prefill(&toks[..4], &mut kv_i).unwrap();
+    let mut b = paged.prefill(&toks[..4], &mut kv_p).unwrap();
+    for t in 4..toks.len() {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.to_bits(), y.to_bits(), "prefix {t}");
+        }
+        a = inline.step(&[toks[t]], std::slice::from_mut(&mut kv_i)).unwrap();
+        b = paged.step(&[toks[t]], std::slice::from_mut(&mut kv_p)).unwrap();
+    }
+    // the exact pages hold the identical rows
+    for layer in 0..dims().n_layers {
+        let (ki, vi) = kv_i.layer_rows_f32(layer);
+        let (kp, vp) = kv_p.layer_rows_f32(layer);
+        assert!(ki.iter().zip(&kp).all(|(x, y)| x.to_bits() == y.to_bits()));
+        assert!(vi.iter().zip(&vp).all(|(x, y)| x.to_bits() == y.to_bits()));
+    }
+}
+
+/// Stepped decode vs one whole-prefix ragged call under the same Mx
+/// codec: identical bits (the codec-relative exactness contract), and
+/// the error vs the Exact codec is nonzero but bounded.
+#[test]
+fn mx_codec_differential_matrix() {
+    let weights = PerLayerQConfig::uniform(QConfig::fp4("ue5m3").unwrap());
+    let model = model(64, &weights);
+    let mut rng = Pcg64::new(73);
+    let toks = tokens(&mut rng, 12);
+
+    // exact-codec reference logits for the same prefix
+    let exact_engine = DecodeEngine::new(model.clone()).unwrap();
+    let mut kv_e = exact_engine.new_kv();
+    let exact_logits = exact_engine.prefill(&toks, &mut kv_e).unwrap();
+    let exact_rms = rms(&exact_logits);
+
+    for elem in ["fp8_e4m3", "fp4_e2m1"] {
+        for scale in ["ue4m3", "ue5m3"] {
+            for bs in [8usize, 32] {
+                let kv_cfg = PerLayerQConfig::uniform(
+                    QConfig::named(elem, scale, false).unwrap(),
+                );
+                let mk_pool = || {
+                    KvPool::build(&dims(), &kv_cfg, bs, 4, 1 << 22).unwrap()
+                };
+                let label = format!("{elem}/{scale}/bs{bs}");
+
+                let engine =
+                    DecodeEngine::with_pool(model.clone(), mk_pool()).unwrap();
+                let mut kv = engine.new_kv();
+                let mut stepped =
+                    engine.prefill(&toks[..4], &mut kv).unwrap();
+                for t in 4..toks.len() {
+                    stepped = engine
+                        .step(&[toks[t]], std::slice::from_mut(&mut kv))
+                        .unwrap();
+                }
+                let engine2 =
+                    DecodeEngine::with_pool(model.clone(), mk_pool()).unwrap();
+                let mut kv2 = engine2.new_kv();
+                let whole = engine2.prefill(&toks, &mut kv2).unwrap();
+                assert_eq!(stepped.len(), whole.len(), "{label}");
+                for (i, (x, y)) in stepped.iter().zip(&whole).enumerate() {
+                    assert_eq!(
+                        x.to_bits(),
+                        y.to_bits(),
+                        "{label}: stepped vs whole-prefix logit {i}"
+                    );
+                }
+
+                // error model sanity vs the Exact codec: quantization
+                // really happened, and stays within generous bounds
+                let err = rms_diff(&whole, &exact_logits) / exact_rms;
+                assert!(err > 0.0, "{label}: Mx KV changed nothing?");
+                let bound = if elem == "fp8_e4m3" { 1.0 } else { 3.0 };
+                assert!(
+                    err.is_finite() && err < bound,
+                    "{label}: rel logits error {err} out of bounds"
+                );
+            }
+        }
+    }
+}
+
+/// Per-tensor KV codecs and mismatched pools are refused up front.
+#[test]
+fn invalid_pool_configurations_are_refused() {
+    let qcfg = PerLayerQConfig::uniform(QConfig::fp4("ue5m3").unwrap());
+    let model = model(65, &qcfg);
+    // per-tensor KV scaling
+    let per_tensor = PerLayerQConfig::uniform(
+        QConfig::named("fp4_e2m1", "ue4m3", true).unwrap(),
+    );
+    assert!(KvPool::build(&dims(), &per_tensor, 8, 4, 1 << 20).is_err());
+    // pool too small for one full-context sequence → deadlock risk,
+    // refused by the engine
+    let tiny = KvPool::exact(&dims(), 2, 4096).unwrap();
+    assert!(DecodeEngine::with_pool(model.clone(), tiny).is_err());
+    // shape mismatch
+    let other = ModelDims { d_model: 64, ..dims() };
+    let wrong = KvPool::exact(&other, 2, 1 << 20).unwrap();
+    assert!(DecodeEngine::with_pool(model, wrong).is_err());
+}
+
+fn rms(x: &[f32]) -> f64 {
+    (x.iter().map(|&v| (v as f64).powi(2)).sum::<f64>() / x.len() as f64)
+        .sqrt()
+}
+
+fn rms_diff(a: &[f32], b: &[f32]) -> f64 {
+    (a.iter()
+        .zip(b)
+        .map(|(&x, &y)| ((x - y) as f64).powi(2))
+        .sum::<f64>()
+        / a.len() as f64)
+        .sqrt()
+}
