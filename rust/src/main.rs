@@ -262,6 +262,16 @@ fn run() -> Result<()> {
                     })
                     .collect::<Result<Vec<_>>>()?;
             }
+            if let Some(sc) = args.get("shards") {
+                opts.shard_counts = sc
+                    .split(',')
+                    .map(|s| {
+                        s.trim().parse::<usize>().map_err(|e| {
+                            anyhow::anyhow!("--shards {s:?}: {e}")
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+            }
             if let Some(q) = args.get("qconfig") {
                 let cfg = microscale::runtime::qconfig::PerLayerQConfig::parse(q)
                     .with_context(|| format!("--qconfig {q:?}"))?;
@@ -287,6 +297,16 @@ fn run() -> Result<()> {
                     .map(|s| {
                         s.trim().parse::<usize>().map_err(|e| {
                             anyhow::anyhow!("--concurrency {s:?}: {e}")
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            if let Some(sc) = args.get("shards") {
+                opts.shard_counts = sc
+                    .split(',')
+                    .map(|s| {
+                        s.trim().parse::<usize>().map_err(|e| {
+                            anyhow::anyhow!("--shards {s:?}: {e}")
                         })
                     })
                     .collect::<Result<Vec<_>>>()?;
@@ -356,10 +376,11 @@ fn run() -> Result<()> {
                  flags: --fast --results DIR --models DIR --artifacts DIR\n\
                  --train-steps N --quiet\n\
                  serve-bench flags: --smoke --workers N --batch-sizes 8,32\n\
-                 --rounds N --serial-requests N --qconfig CFG --out FILE\n\
-                 decode-bench flags: --smoke --concurrency 1,4,8 --prompt N\n\
-                 --max-new N --rounds N --baseline-requests N --qconfig CFG\n\
+                 --rounds N --serial-requests N --shards 1,2,4 --qconfig CFG\n\
                  --out FILE\n\
+                 decode-bench flags: --smoke --concurrency 1,4,8 --prompt N\n\
+                 --max-new N --rounds N --baseline-requests N --shards 1,2\n\
+                 --qconfig CFG --out FILE\n\
                  kv-bench flags: --smoke --concurrency N --prompt N\n\
                  --max-new N --requests N --page-rows N --budget-seqs X\n\
                  --out FILE\n\

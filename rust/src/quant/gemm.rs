@@ -351,6 +351,111 @@ impl GemmOperand {
             .chain(self.scales.iter().map(|&s| s.to_bits() as u64));
         crate::util::fnv1a_words(words, crate::util::FNV_OFFSET_BASIS)
     }
+
+    /// A new operand holding rows `r0..r1` of this one: same scheme,
+    /// same per-tensor factor, and byte-identical codes/scales for the
+    /// kept rows (quantization is fully per-row, so slicing commutes
+    /// with packing — except under `per_tensor`, where the retained
+    /// parent `s_t` was fit to the *whole* tensor's absmax and a
+    /// re-quantize of the slice would differ).
+    ///
+    /// For a transposed weight operand
+    /// ([`GemmOperand::quantize_transposed`]) rows are output columns,
+    /// so this is the column-shard primitive
+    /// [`crate::quant::shard::ShardedOperand`] builds on.
+    pub fn slice_rows(&self, r0: usize, r1: usize) -> crate::Result<GemmOperand> {
+        anyhow::ensure!(
+            r0 < r1 && r1 <= self.rows,
+            "row slice {r0}..{r1} out of range for {} rows",
+            self.rows
+        );
+        let scales =
+            self.scales[r0 * self.blocks_per_row..r1 * self.blocks_per_row]
+                .to_vec();
+        let mut scale_min_nz = f32::INFINITY;
+        let mut scale_max = 0.0f32;
+        for &s in &scales {
+            if s > 0.0 && s < scale_min_nz {
+                scale_min_nz = s;
+            }
+            if s > scale_max {
+                scale_max = s;
+            }
+        }
+        Ok(GemmOperand {
+            scheme: self.scheme,
+            rows: r1 - r0,
+            cols: self.cols,
+            blocks_per_row: self.blocks_per_row,
+            stride: self.stride,
+            elem_bits: self.elem_bits,
+            codes: self.codes[r0 * self.stride..r1 * self.stride].to_vec(),
+            scales,
+            s_t: self.s_t,
+            scale_bytes: self.scale_bytes,
+            scale_min_nz,
+            scale_max,
+            elem_codec: LevelCodec::for_elem(&self.scheme.elem),
+        })
+    }
+
+    /// Stack operands row-wise into one: the inverse of
+    /// [`GemmOperand::slice_rows`] over a contiguous partition.
+    /// Requires identical scheme, column count, and per-tensor factor
+    /// bits; the result's codes and scales are the parts' bytes
+    /// concatenated, so `concat_rows(split(op)).bits_digest() ==
+    /// op.bits_digest()`.
+    pub fn concat_rows(parts: &[&GemmOperand]) -> crate::Result<GemmOperand> {
+        anyhow::ensure!(!parts.is_empty(), "nothing to concatenate");
+        let head = parts[0];
+        let mut rows = 0usize;
+        let mut codes = Vec::new();
+        let mut scales = Vec::new();
+        for p in parts {
+            anyhow::ensure!(
+                p.scheme == head.scheme,
+                "scheme mismatch across row parts"
+            );
+            anyhow::ensure!(
+                p.cols == head.cols,
+                "column mismatch across row parts: {} vs {}",
+                p.cols,
+                head.cols
+            );
+            anyhow::ensure!(
+                p.s_t.to_bits() == head.s_t.to_bits(),
+                "per-tensor factor mismatch across row parts"
+            );
+            rows += p.rows;
+            codes.extend_from_slice(&p.codes);
+            scales.extend_from_slice(&p.scales);
+        }
+        let mut scale_min_nz = f32::INFINITY;
+        let mut scale_max = 0.0f32;
+        for &s in &scales {
+            if s > 0.0 && s < scale_min_nz {
+                scale_min_nz = s;
+            }
+            if s > scale_max {
+                scale_max = s;
+            }
+        }
+        Ok(GemmOperand {
+            scheme: head.scheme,
+            rows,
+            cols: head.cols,
+            blocks_per_row: head.blocks_per_row,
+            stride: head.stride,
+            elem_bits: head.elem_bits,
+            codes,
+            scales,
+            s_t: head.s_t,
+            scale_bytes: head.scale_bytes,
+            scale_min_nz,
+            scale_max,
+            elem_codec: LevelCodec::for_elem(&head.scheme.elem),
+        })
+    }
 }
 
 /// Decode tables for one element format, built once per GEMM call.

@@ -22,11 +22,13 @@ pub mod kernel;
 pub mod matmul;
 pub mod opcache;
 pub mod packed;
+pub mod shard;
 
 pub use gemm::{packed_matmul, GemmOperand, PackedGemm};
 pub use kernel::{default_kernel, ChunkedKernel, QuantKernel, ScalarKernel};
 pub use opcache::{operand_cache, CacheStats, OperandCache};
 pub use packed::PackedMxTensor;
+pub use shard::{shard_ranges, ShardedOperand};
 
 use crate::formats::{ElemFormat, MiniFloat};
 

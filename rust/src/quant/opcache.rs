@@ -35,6 +35,12 @@ struct Key {
     k: usize,
     n: usize,
     scheme: String,
+    /// Column-shard slot `(index, count)` of the split this entry
+    /// holds — `(0, 1)` for the whole operand. The content digests
+    /// cover the *full* weight either way, so without this field a
+    /// shard encode and an unsharded encode of the same bytes would
+    /// alias to one entry and serve the wrong operand to one of them.
+    shard: (usize, usize),
 }
 
 /// Monotonic cache counters (snapshot via [`OperandCache::stats`]).
@@ -106,8 +112,67 @@ impl OperandCache {
         k: usize,
         n: usize,
     ) -> crate::Result<Arc<GemmOperand>> {
+        self.lookup_or_pack(scheme, w, k, n, (0, 1), || {
+            GemmOperand::quantize_transposed(scheme, w, k, n)
+        })
+    }
+
+    /// The prepacked transposed operand for output columns `c0..c1`
+    /// (shard `index` of `count`) of a row-major `k × n` weight
+    /// matrix. Keyed by the *full* weight's content digest plus the
+    /// shard slot, so shards of one tensor share the cheap one-pass
+    /// digest while sharded and unsharded entries never alias (shard
+    /// slot `(0, 1)` is the whole operand, i.e.
+    /// [`OperandCache::get_or_pack_transposed`]).
+    #[allow(clippy::too_many_arguments)]
+    pub fn get_or_pack_transposed_shard(
+        &self,
+        scheme: &QuantScheme,
+        w: &[f32],
+        k: usize,
+        n: usize,
+        index: usize,
+        count: usize,
+        c0: usize,
+        c1: usize,
+    ) -> crate::Result<Arc<GemmOperand>> {
+        anyhow::ensure!(
+            index < count && c0 < c1 && c1 <= n,
+            "shard {index}/{count} columns {c0}..{c1} invalid for n={n}"
+        );
+        if count == 1 {
+            anyhow::ensure!(
+                c0 == 0 && c1 == n,
+                "a 1-count shard must cover all {n} columns"
+            );
+            return self.get_or_pack_transposed(scheme, w, k, n);
+        }
+        self.lookup_or_pack(scheme, w, k, n, (index, count), || {
+            anyhow::ensure!(w.len() == k * n, "weight len != {k}x{n}");
+            // materialize the k × (c1-c0) column slice, then pack it
+            // transposed: per-row quantization makes this byte-equal
+            // to slicing rows c0..c1 of the full transposed operand
+            let width = c1 - c0;
+            let mut sub = vec![0.0f32; k * width];
+            for r in 0..k {
+                sub[r * width..(r + 1) * width]
+                    .copy_from_slice(&w[r * n + c0..r * n + c1]);
+            }
+            GemmOperand::quantize_transposed(scheme, &sub, k, width)
+        })
+    }
+
+    fn lookup_or_pack(
+        &self,
+        scheme: &QuantScheme,
+        w: &[f32],
+        k: usize,
+        n: usize,
+        shard: (usize, usize),
+        pack: impl FnOnce() -> crate::Result<GemmOperand>,
+    ) -> crate::Result<Arc<GemmOperand>> {
         let (h1, h2) = content_digests(w);
-        let key = Key { h1, h2, k, n, scheme: scheme.id() };
+        let key = Key { h1, h2, k, n, scheme: scheme.id(), shard };
         {
             let mut g = self.inner.lock().unwrap();
             let found = g.map.get(&key).cloned();
@@ -119,7 +184,7 @@ impl OperandCache {
         // pack outside the lock: two threads missing the same key may
         // both encode, but encoding is deterministic and the first
         // insert wins, so every caller still sees one canonical operand
-        let op = Arc::new(GemmOperand::quantize_transposed(scheme, w, k, n)?);
+        let op = Arc::new(pack()?);
         let mut g = self.inner.lock().unwrap();
         g.misses += 1;
         if let Some(existing) = g.map.get(&key).cloned() {
@@ -213,6 +278,45 @@ mod tests {
         let c = cache.get_or_pack_transposed(&scheme16, &w, k, n).unwrap();
         assert!(!Arc::ptr_eq(&a, &c));
         assert_eq!(cache.stats().entries, 2);
+    }
+
+    #[test]
+    fn shard_slots_never_alias_the_unsharded_entry() {
+        let cache = OperandCache::new(8);
+        let mut rng = Pcg64::new(9);
+        let (k, n) = (16usize, 16usize);
+        let w = rng.normal_vec_f32(k * n, 0.02);
+        let scheme = QuantScheme::new(ElemFormat::FP4, UE5M3, 8);
+        let full = cache.get_or_pack_transposed(&scheme, &w, k, n).unwrap();
+        // shard 0 of 2 covers columns 0..8 of the same bytes/shape key
+        let s0 = cache
+            .get_or_pack_transposed_shard(&scheme, &w, k, n, 0, 2, 0, 8)
+            .unwrap();
+        let s1 = cache
+            .get_or_pack_transposed_shard(&scheme, &w, k, n, 1, 2, 8, 16)
+            .unwrap();
+        assert!(!Arc::ptr_eq(&full, &s0));
+        assert_eq!(cache.stats().entries, 3);
+        // repeat lookups hit the same Arcs
+        let s0b = cache
+            .get_or_pack_transposed_shard(&scheme, &w, k, n, 0, 2, 0, 8)
+            .unwrap();
+        assert!(Arc::ptr_eq(&s0, &s0b));
+        // the shard encode equals slicing the full operand's rows
+        assert_eq!(
+            s0.bits_digest(),
+            full.slice_rows(0, 8).unwrap().bits_digest()
+        );
+        assert_eq!(
+            s1.bits_digest(),
+            full.slice_rows(8, 16).unwrap().bits_digest()
+        );
+        // a 1-count shard IS the unsharded entry (intentional sharing)
+        let whole = cache
+            .get_or_pack_transposed_shard(&scheme, &w, k, n, 0, 1, 0, 16)
+            .unwrap();
+        assert!(Arc::ptr_eq(&full, &whole));
+        assert_eq!(cache.stats().entries, 3);
     }
 
     #[test]

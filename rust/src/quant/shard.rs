@@ -1,0 +1,320 @@
+//! Column-wise tensor-parallel sharding of prepacked GEMM operands.
+//!
+//! A transposed weight operand ([`GemmOperand::quantize_transposed`])
+//! stores one block row per *output column*, so splitting it row-wise
+//! partitions the GEMM's output columns — each shard computes
+//! `x · wᵀ[c0..c1]` independently, with no partial sums crossing
+//! shards. Two invariants make the split bit-exact:
+//!
+//! 1. **Block alignment.** Scale blocks run along the contraction
+//!    dimension `k` *within* each row, so any row (= output column)
+//!    boundary already keeps every per-block scale intact. We
+//!    nevertheless align shard boundaries to whole column blocks of
+//!    `block_size` output columns ([`shard_ranges`]) so that sharding
+//!    composes with activation-side blocking and future fused layouts
+//!    never see a scale group straddling a shard.
+//! 2. **Fixed-order combine.** Each output element `out[r, c]` is
+//!    produced by exactly one shard, accumulated in the same ascending
+//!    contraction order as the unsharded kernel, and scattered into
+//!    its final position in fixed shard order — no floating-point
+//!    reduction is reordered, so sharded output bits equal unsharded
+//!    output bits for every shard count (DESIGN.md §12).
+//!
+//! The `fusion_safe` range check (gemm.rs) is evaluated per shard: a
+//! shard's scale range is a subset of the parent's, so a fusion-safe
+//! parent yields only fusion-safe shards, while a fusion-*unsafe*
+//! parent may produce a mix of packed and decode-fallback shards.
+//! Either way the bits match the unsharded result, because both paths
+//! are exact per output column (the packed path equals decode+matmul
+//! whenever its intermediates stay in range, which is what
+//! `fusion_safe` certifies).
+
+use std::sync::Arc;
+
+use crate::util::par::ShardPool;
+
+use super::gemm::{GemmOperand, PackedGemm};
+
+/// Split `n` output columns into at most `shards` contiguous ranges
+/// whose boundaries fall on multiples of `block_size` (the last range
+/// absorbs any trailing partial block). Whole column blocks are
+/// distributed as evenly as possible — range sizes differ by at most
+/// one block — and the effective shard count is capped at
+/// `ceil(n / block_size)`, so no range is ever empty: asking for more
+/// shards than there are column blocks degrades gracefully instead of
+/// manufacturing empty workers.
+pub fn shard_ranges(
+    n: usize,
+    block_size: usize,
+    shards: usize,
+) -> Vec<(usize, usize)> {
+    assert!(block_size > 0, "block size must be positive");
+    if n == 0 {
+        return vec![(0, 0)];
+    }
+    let units = n.div_ceil(block_size);
+    let count = shards.clamp(1, units);
+    let base = units / count;
+    let extra = units % count; // first `extra` shards take one more block
+    let mut ranges = Vec::with_capacity(count);
+    let mut unit = 0usize;
+    for s in 0..count {
+        let take = base + usize::from(s < extra);
+        let c0 = unit * block_size;
+        unit += take;
+        let c1 = (unit * block_size).min(n);
+        ranges.push((c0, c1));
+    }
+    ranges
+}
+
+/// A transposed weight operand split into block-aligned column shards,
+/// plus the fan-out/combine logic that keeps the sharded matmul
+/// bit-identical to the unsharded one.
+///
+/// Shard `s` holds output columns `ranges[s] = (c0, c1)` as an
+/// independent [`GemmOperand`] (rows `c0..c1` of the transposed
+/// parent). A one-shard instance stores the parent operand itself and
+/// [`ShardedOperand::matmul`] routes straight through
+/// [`PackedGemm::matmul`] — the unsharded path is the `shards = 1`
+/// special case, not a separate code path.
+pub struct ShardedOperand {
+    ops: Vec<Arc<GemmOperand>>,
+    ranges: Vec<(usize, usize)>,
+    /// contraction length (the parent's logical columns).
+    k: usize,
+    /// total output columns (the parent's logical rows).
+    n: usize,
+}
+
+impl ShardedOperand {
+    /// Wrap a whole (unsharded) transposed operand.
+    pub fn single(op: Arc<GemmOperand>) -> ShardedOperand {
+        let (k, n) = (op.cols(), op.rows());
+        ShardedOperand { ranges: vec![(0, n)], ops: vec![op], k, n }
+    }
+
+    /// Split a transposed operand into at most `shards` block-aligned
+    /// column shards via [`GemmOperand::slice_rows`]. `shards <= 1`
+    /// (or a single-block operand) shares the parent allocation
+    /// through [`ShardedOperand::single`] instead of copying.
+    pub fn split(
+        op: &Arc<GemmOperand>,
+        shards: usize,
+    ) -> crate::Result<ShardedOperand> {
+        let ranges = shard_ranges(op.rows(), op.scheme().block_size, shards);
+        if ranges.len() <= 1 {
+            return Ok(ShardedOperand::single(op.clone()));
+        }
+        let mut ops = Vec::with_capacity(ranges.len());
+        for &(c0, c1) in &ranges {
+            ops.push(Arc::new(op.slice_rows(c0, c1)?));
+        }
+        Ok(ShardedOperand { ops, ranges, k: op.cols(), n: op.rows() })
+    }
+
+    /// Assemble from pre-packed shard operands (e.g. per-shard
+    /// [`crate::quant::opcache::OperandCache`] entries) and their
+    /// column ranges. Validates that the ranges tile `0..n`
+    /// contiguously and that every operand matches its range and
+    /// shares one scheme and per-tensor factor.
+    pub fn from_parts(
+        ops: Vec<Arc<GemmOperand>>,
+        ranges: Vec<(usize, usize)>,
+    ) -> crate::Result<ShardedOperand> {
+        anyhow::ensure!(
+            !ops.is_empty() && ops.len() == ranges.len(),
+            "{} operands vs {} ranges",
+            ops.len(),
+            ranges.len()
+        );
+        let k = ops[0].cols();
+        let mut at = 0usize;
+        for (op, &(c0, c1)) in ops.iter().zip(&ranges) {
+            anyhow::ensure!(
+                c0 == at && c1 > c0,
+                "shard ranges must tile 0..n contiguously (got {c0}..{c1} \
+                 at {at})"
+            );
+            anyhow::ensure!(
+                op.rows() == c1 - c0,
+                "shard operand has {} rows for range {c0}..{c1}",
+                op.rows()
+            );
+            anyhow::ensure!(
+                op.cols() == k,
+                "shard contraction mismatch: {} vs {k}",
+                op.cols()
+            );
+            anyhow::ensure!(
+                op.scheme() == ops[0].scheme()
+                    && op.per_tensor_factor().to_bits()
+                        == ops[0].per_tensor_factor().to_bits(),
+                "shards must share one scheme and per-tensor factor"
+            );
+            at = c1;
+        }
+        let n = at;
+        Ok(ShardedOperand { ops, ranges, k, n })
+    }
+
+    /// Number of shards (1 for the unsharded wrapper).
+    pub fn shards(&self) -> usize {
+        self.ops.len()
+    }
+
+    /// The shard operands, in column order.
+    pub fn parts(&self) -> &[Arc<GemmOperand>] {
+        &self.ops
+    }
+
+    /// Output-column range `(c0, c1)` owned by each shard.
+    pub fn ranges(&self) -> &[(usize, usize)] {
+        &self.ranges
+    }
+
+    /// Contraction length `k`.
+    pub fn contraction(&self) -> usize {
+        self.k
+    }
+
+    /// Total output columns `n`.
+    pub fn out_cols(&self) -> usize {
+        self.n
+    }
+
+    /// Sum of the shards' in-RAM bytes (equals the parent's
+    /// [`GemmOperand::resident_bytes`] exactly — slicing copies rows,
+    /// it never pads).
+    pub fn resident_bytes(&self) -> usize {
+        self.ops.iter().map(|op| op.resident_bytes()).sum()
+    }
+
+    /// Sum of the shards' wire-format bytes. May exceed the parent's
+    /// [`GemmOperand::payload_bytes`] by at most one byte per shard
+    /// (sub-byte code fields are rounded up per operand).
+    pub fn payload_bytes(&self) -> usize {
+        self.ops.iter().map(|op| op.payload_bytes()).sum()
+    }
+
+    /// Stitch the shards back into one operand
+    /// ([`GemmOperand::concat_rows`]); byte-for-byte equal to the
+    /// parent, `bits_digest` included.
+    pub fn reassemble(&self) -> crate::Result<GemmOperand> {
+        let refs: Vec<&GemmOperand> =
+            self.ops.iter().map(Arc::as_ref).collect();
+        GemmOperand::concat_rows(&refs)
+    }
+
+    /// Sharded `x · wᵀ`: fan one packed matmul per shard out over
+    /// `pool` (or run them serially in shard order when `pool` is
+    /// `None`), then scatter each shard's `m × (c1-c0)` panel into its
+    /// fixed column range of the `m × n` output. Bit-identical to
+    /// `gemm.matmul(&x, &parent)` for every shard count and pool size
+    /// — each output element is computed by the same kernel in the
+    /// same accumulation order, and the combine only moves bytes.
+    pub fn matmul(
+        &self,
+        x: GemmOperand,
+        gemm: &PackedGemm,
+        pool: Option<&ShardPool>,
+    ) -> crate::Result<Vec<f32>> {
+        if self.ops.len() == 1 {
+            return gemm.matmul(&x, &self.ops[0]);
+        }
+        let m = x.rows();
+        let x = Arc::new(x);
+        let gemm = *gemm;
+        let parts: Vec<crate::Result<Vec<f32>>> = match pool {
+            Some(pool) => pool.run(
+                self.ops
+                    .iter()
+                    .map(|op| {
+                        let (x, op) = (Arc::clone(&x), Arc::clone(op));
+                        move || gemm.matmul(&x, &op)
+                    })
+                    .collect(),
+            ),
+            None => self.ops.iter().map(|op| gemm.matmul(&x, op)).collect(),
+        };
+        let n = self.n;
+        let mut out = vec![0.0f32; m * n];
+        for (part, &(c0, c1)) in parts.into_iter().zip(&self.ranges) {
+            let part = part?;
+            let w = c1 - c0;
+            debug_assert_eq!(part.len(), m * w);
+            for r in 0..m {
+                out[r * n + c0..r * n + c1]
+                    .copy_from_slice(&part[r * w..(r + 1) * w]);
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Pcg64;
+    use crate::formats::{ElemFormat, UE4M3};
+    use crate::quant::kernel::plan_threads;
+    use crate::quant::QuantScheme;
+
+    fn scheme(bs: usize) -> QuantScheme {
+        QuantScheme { elem: ElemFormat::FP4, scale: UE4M3, block_size: bs, per_tensor: false }
+    }
+
+    #[test]
+    fn ranges_tile_and_align() {
+        for (n, bs, shards) in
+            [(64, 8, 4), (13, 8, 2), (96, 32, 7), (8, 8, 5), (100, 16, 3)]
+        {
+            let r = shard_ranges(n, bs, shards);
+            assert!(r.len() <= shards.max(1));
+            assert!(r.len() <= n.div_ceil(bs));
+            let mut at = 0;
+            for (i, &(c0, c1)) in r.iter().enumerate() {
+                assert_eq!(c0, at, "n={n} bs={bs} shards={shards}");
+                assert!(c1 > c0);
+                assert_eq!(c0 % bs, 0, "start must be block-aligned");
+                if i + 1 < r.len() {
+                    assert_eq!(c1 % bs, 0, "interior ends block-aligned");
+                }
+                at = c1;
+            }
+            assert_eq!(at, n, "ranges must cover every column");
+        }
+        // degenerate: one block or fewer -> one shard
+        assert_eq!(shard_ranges(5, 8, 4), vec![(0, 5)]);
+        assert_eq!(shard_ranges(0, 8, 4), vec![(0, 0)]);
+    }
+
+    #[test]
+    fn single_shard_routes_through_parent() {
+        let mut rng = Pcg64::new(11);
+        let (k, n) = (16usize, 24usize);
+        let w = rng.normal_vec_f32(k * n, 1.0);
+        let op =
+            Arc::new(GemmOperand::quantize_transposed(&scheme(8), &w, k, n).unwrap());
+        let sh = ShardedOperand::split(&op, 1).unwrap();
+        assert_eq!(sh.shards(), 1);
+        // no copy: the single shard IS the parent allocation
+        assert!(Arc::ptr_eq(&sh.parts()[0], &op));
+        assert_eq!(sh.resident_bytes(), op.resident_bytes());
+    }
+
+    #[test]
+    fn pool_workers_pin_inner_kernels_serial() {
+        // plan_threads() must collapse to 1 on every shard slot (inline
+        // job 0 and pool workers alike): the no-oversubscription pin.
+        let pool = ShardPool::new(3);
+        let plans = pool.run(
+            (0..4)
+                .map(|_| || plan_threads(usize::MAX / 4, 8, 0))
+                .collect::<Vec<_>>(),
+        );
+        assert_eq!(plans, vec![1, 1, 1, 1]);
+        // off-pool, the same request fans out
+        assert!(plan_threads(usize::MAX / 4, 8, 0) > 1 || crate::util::par::max_threads() == 1);
+    }
+}

@@ -1,17 +1,24 @@
 //! The `microscale serve-bench` driver: synthetic request traffic over
 //! the packed-domain serving stack, across the paper's format axis
-//! ({FP4/UE4M3, FP4/UE5M3, FP8, mixed-per-layer}) × batch sizes.
+//! ({FP4/UE4M3, FP4/UE5M3, FP8, mixed-per-layer}) × batch sizes ×
+//! tensor-parallel shard counts.
 //!
 //! Per config the driver (1) builds a [`PackedModel`] through the
 //! shared operand cache, (2) gates on bit-exactness against the scalar
 //! fake-quant [`reference_forward`] — nothing is timed unless the
 //! outputs match bit for bit, (3) measures the single-request **serial**
 //! baseline (1 worker, batch 1, single-threaded GEMM), then (4) drives
-//! batched traffic through a threaded [`ServeEngine`] per batch size.
-//! Results land in machine-readable **`BENCH_serve.json`** (field map
-//! in EXPERIMENTS.md §Perf); the acceptance line checks the batch-32
-//! engine at ≥ 3× the serial baseline (full shapes only — smoke runs
-//! record `pass: null`).
+//! batched traffic through a threaded [`ServeEngine`] per batch size,
+//! and (5) re-runs the largest batch size per shard count on a
+//! **controlled** sharded engine — one worker, inner GEMM pinned
+//! serial, each sharded forward gated bit-exact against the unsharded
+//! bits — so every concurrent core in that section comes from
+//! [`PackedModel::build_sharded`]'s shard fan-out and the axis
+//! isolates shard scaling. Results land in machine-readable
+//! **`BENCH_serve.json`** (field map in EXPERIMENTS.md §Perf); the
+//! acceptance lines check the batch-32 engine at ≥ 3× the serial
+//! baseline and shards=2 at ≥ 1.6× shards=1 (full shapes only — smoke
+//! runs record `pass: null`).
 //!
 //! Shared by the CLI subcommand and `cargo bench --bench serve_bench`.
 
@@ -48,6 +55,8 @@ pub struct BenchOpts {
     pub rounds: usize,
     /// Requests in the serial baseline measurement.
     pub serial_requests: usize,
+    /// Tensor-parallel shard counts to drive at the largest batch size.
+    pub shard_counts: Vec<usize>,
     /// Override the config axis (label, per-layer config).
     pub qconfigs: Option<Vec<(String, PerLayerQConfig)>>,
 }
@@ -61,6 +70,7 @@ impl BenchOpts {
             batch_sizes: if smoke { vec![4] } else { vec![8, 32] },
             rounds: if smoke { 1 } else { 2 },
             serial_requests: if smoke { 2 } else { 6 },
+            shard_counts: if smoke { vec![1, 2] } else { vec![1, 2, 4] },
             qconfigs: None,
         }
     }
@@ -148,6 +158,7 @@ pub fn run(opts: &BenchOpts) -> crate::Result<Json> {
 
     let mut config_entries: Vec<(String, Json)> = Vec::new();
     let mut min_speedup = f64::INFINITY;
+    let mut min_shard2 = f64::INFINITY;
     for (label, qcfg) in &configs {
         let t_build = Instant::now();
         let model = Arc::new(PackedModel::build(
@@ -277,6 +288,96 @@ pub fn run(opts: &BenchOpts) -> crate::Result<Json> {
         if cfg_speedup.is_finite() {
             min_speedup = min_speedup.min(cfg_speedup);
         }
+
+        // shard scaling: the largest batch size again, but one engine
+        // worker and the inner GEMM pinned serial — every concurrent
+        // core in this section comes from tensor-parallel shard
+        // fan-out, so the ratio isolates shard scaling from batching
+        // and GEMM threading
+        let mut shard_entries: Vec<(String, Json)> = Vec::new();
+        let mut shards1_req_s = f64::NAN;
+        let mut cfg_shard2 = f64::NAN;
+        for &shards in &opts.shard_counts {
+            let smodel = Arc::new(
+                PackedModel::build_sharded(
+                    &dims,
+                    &params,
+                    qcfg,
+                    block_size,
+                    operand_cache(),
+                    shards,
+                )?
+                .with_gemm(PackedGemm::serial()),
+            );
+            // bit-exactness gate: sharded logits must equal the
+            // reference-checked unsharded bits before anything is timed
+            let sharded = smodel.forward(&toks, gate_batch, dims.seq_len)?;
+            anyhow::ensure!(
+                sharded.len() == got.len()
+                    && sharded
+                        .iter()
+                        .zip(&got)
+                        .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{label}: shards={shards} forward diverges from shards=1 \
+                 — refusing to time"
+            );
+            let engine = ServeEngine::start(
+                smodel,
+                EngineConfig {
+                    workers: 1,
+                    batcher: BatcherConfig {
+                        max_batch: largest_bs,
+                        max_wait: Duration::from_millis(2),
+                    },
+                },
+            )?;
+            let n_req = largest_bs * opts.rounds;
+            let t0 = Instant::now();
+            let mut handles = Vec::with_capacity(n_req);
+            for _ in 0..n_req {
+                handles
+                    .push(engine.submit(random_tokens(&mut rng, &dims, 1))?);
+            }
+            for h in handles {
+                h.wait()?;
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            engine.shutdown();
+            let req_s = n_req as f64 / secs.max(1e-9);
+            if shards == 1 {
+                shards1_req_s = req_s;
+            }
+            let speedup = req_s / shards1_req_s;
+            if shards == 2 {
+                cfg_shard2 = speedup;
+            }
+            println!(
+                "   shards={shards}: {req_s:7.2} req/s at bs{largest_bs} \
+                 ({speedup:.2}x vs 1 shard, bit-exact)"
+            );
+            shard_entries.push((
+                format!("s{shards}"),
+                json::obj(vec![
+                    ("shards", json::num(shards as f64)),
+                    ("requests", json::num(n_req as f64)),
+                    ("req_per_s", json::num(req_s)),
+                    ("tok_per_s", json::num(req_s * dims.seq_len as f64)),
+                    ("bit_exact", Json::Bool(true)),
+                    (
+                        "speedup_vs_1shard",
+                        if speedup.is_finite() {
+                            json::num(speedup)
+                        } else {
+                            Json::Null
+                        },
+                    ),
+                ]),
+            ));
+        }
+        if cfg_shard2.is_finite() {
+            min_shard2 = min_shard2.min(cfg_shard2);
+        }
+
         config_entries.push((
             label.clone(),
             json::obj(vec![
@@ -297,19 +398,35 @@ pub fn run(opts: &BenchOpts) -> crate::Result<Json> {
                 ),
                 ("serial_req_per_s", json::num(serial_req_s)),
                 ("batch", json::obj_owned(batch_entries)),
+                ("shards", json::obj_owned(shard_entries)),
             ]),
         ));
     }
 
-    let pass = min_speedup.is_finite() && min_speedup >= 3.0;
+    let batch_pass = min_speedup.is_finite() && min_speedup >= 3.0;
+    // vacuous when the shard axis omits shards=2 (explicit --shards)
+    let shard_pass = !min_shard2.is_finite() || min_shard2 >= 1.6;
+    let pass = batch_pass && shard_pass;
     println!(
         "\n   acceptance target (engine >= 3.00x serial at bs{largest_bs}): {}",
         if opts.smoke {
             "n/a (smoke shapes)".to_string()
-        } else if pass {
+        } else if batch_pass {
             format!("PASS (min {min_speedup:.2}x)")
         } else {
             format!("MISS (min {min_speedup:.2}x, host-dependent)")
+        }
+    );
+    println!(
+        "   shard target (shards=2 >= 1.60x shards=1 at bs{largest_bs}): {}",
+        if opts.smoke {
+            "n/a (smoke shapes)".to_string()
+        } else if !min_shard2.is_finite() {
+            "n/a (no shards=2 point)".to_string()
+        } else if min_shard2 >= 1.6 {
+            format!("PASS (min {min_shard2:.2}x)")
+        } else {
+            format!("MISS (min {min_shard2:.2}x, host-dependent)")
         }
     );
     let cache = operand_cache().stats();
@@ -357,6 +474,21 @@ pub fn run(opts: &BenchOpts) -> crate::Result<Json> {
             "min_batch_speedup",
             if min_speedup.is_finite() {
                 json::num(min_speedup)
+            } else {
+                Json::Null
+            },
+        ),
+        (
+            "shard_counts",
+            json::arr(
+                opts.shard_counts.iter().map(|&s| json::num(s as f64)),
+            ),
+        ),
+        ("shard_target", json::num(1.6)),
+        (
+            "min_shard2_speedup",
+            if min_shard2.is_finite() {
+                json::num(min_shard2)
             } else {
                 Json::Null
             },

@@ -23,7 +23,12 @@
 //! [`Pcg64`] seed, so a token stream is reproducible from
 //! `(weights, qconfig, prompt, sampling)` alone — independent of
 //! co-scheduled neighbors, admission order, and GEMM threading (see
-//! [`super::scheduler`]).
+//! [`super::scheduler`]). Tensor-parallel sharding joins that list:
+//! the m == 1 decode step routes through the same sharded
+//! [`super::packed_model`] linears as prefill, and shard fan-out is
+//! bit-invariant (DESIGN.md §12), so a model built with
+//! [`PackedModel::build_sharded`] emits the same token stream for
+//! every shard count — `rust/tests/shard.rs` pins this end to end.
 
 use std::sync::Arc;
 

@@ -1,7 +1,10 @@
 //! The `microscale decode-bench` driver: KV-cached autoregressive
 //! generation under continuous batching, across the paper's format axis
 //! ({FP4/UE4M3, FP4/UE5M3, FP8, mixed-per-layer}) × concurrent-sequence
-//! counts.
+//! counts × tensor-parallel shard counts (the shard axis re-runs the
+//! largest concurrency on a [`PackedModel::build_sharded`] model,
+//! gating each shard count's greedy stream bit-identical to shards=1
+//! before timing).
 //!
 //! Per config the driver (1) builds a [`PackedModel`] through the
 //! shared operand cache, (2) gates on the decode exactness contract —
@@ -53,6 +56,8 @@ pub struct DecodeBenchOpts {
     pub rounds: usize,
     /// Requests in the re-forward-per-token baseline measurement.
     pub baseline_requests: usize,
+    /// Tensor-parallel shard counts to drive at the largest concurrency.
+    pub shard_counts: Vec<usize>,
     /// Override the config axis (label, per-layer config).
     pub qconfigs: Option<Vec<(String, PerLayerQConfig)>>,
 }
@@ -67,6 +72,7 @@ impl DecodeBenchOpts {
             max_new: if smoke { 6 } else { 32 },
             rounds: if smoke { 1 } else { 2 },
             baseline_requests: if smoke { 2 } else { 4 },
+            shard_counts: vec![1, 2],
             qconfigs: None,
         }
     }
@@ -307,6 +313,115 @@ pub fn run(opts: &DecodeBenchOpts) -> crate::Result<Json> {
         if cfg_speedup.is_finite() {
             min_speedup = min_speedup.min(cfg_speedup);
         }
+
+        // shard scaling: the largest concurrency again on sharded
+        // models with the inner GEMM pinned serial, so added cores come
+        // from shard fan-out alone. Gated twice per shard count: the
+        // prefill logits must equal the unsharded bits, and the greedy
+        // scheduler stream must equal the shards=1 stream.
+        let gate_prompt = prompt(&mut rng, &dims, opts.prompt_len);
+        let gate_logits = model.forward(&gate_prompt, 1, opts.prompt_len)?;
+        let gate_stream = generate_reforward(
+            &model,
+            &gate_prompt,
+            opts.max_new.min(4),
+            None,
+            &Sampling::Greedy,
+        )?;
+        let mut shard_entries: Vec<(String, Json)> = Vec::new();
+        let mut shards1_tok_s = f64::NAN;
+        for &shards in &opts.shard_counts {
+            let smodel = Arc::new(
+                PackedModel::build_sharded(
+                    &dims,
+                    &params,
+                    qcfg,
+                    block_size,
+                    operand_cache(),
+                    shards,
+                )?
+                .with_gemm(crate::quant::gemm::PackedGemm::serial()),
+            );
+            let logits = smodel.forward(&gate_prompt, 1, opts.prompt_len)?;
+            anyhow::ensure!(
+                logits.len() == gate_logits.len()
+                    && logits
+                        .iter()
+                        .zip(&gate_logits)
+                        .all(|(a, b)| a.to_bits() == b.to_bits()),
+                "{label}: shards={shards} prefill logits diverge from \
+                 shards=1 — refusing to time"
+            );
+            let mut sched = Scheduler::new(
+                DecodeEngine::new(smodel.clone())?,
+                SchedulerConfig::default(),
+            );
+            sched.submit(DecodeRequest {
+                id: 0,
+                prompt: gate_prompt.clone(),
+                max_new_tokens: opts.max_new.min(4),
+                eos: None,
+                sampling: Sampling::Greedy,
+            })?;
+            let stream = sched.run()?;
+            anyhow::ensure!(
+                stream.first().map(|r| r.tokens.as_slice())
+                    == Some(gate_stream.as_slice()),
+                "{label}: shards={shards} token stream diverges from \
+                 shards=1 — refusing to time"
+            );
+            let n_req = largest_c * opts.rounds;
+            let mut sched = Scheduler::new(
+                DecodeEngine::new(smodel)?,
+                SchedulerConfig {
+                    max_active: largest_c,
+                    max_prefill_per_step: largest_c,
+                },
+            );
+            let t0 = Instant::now();
+            for id in 0..n_req {
+                sched.submit(DecodeRequest {
+                    id: id as u64,
+                    prompt: prompt(&mut rng, &dims, opts.prompt_len),
+                    max_new_tokens: opts.max_new,
+                    eos: None,
+                    sampling: Sampling::Temperature {
+                        temp: 0.9,
+                        seed: 0x57A2 ^ id as u64,
+                    },
+                })?;
+            }
+            let results = sched.run()?;
+            let secs = t0.elapsed().as_secs_f64();
+            let tokens: usize = results.iter().map(|r| r.tokens.len()).sum();
+            let tok_s = tokens as f64 / secs.max(1e-9);
+            if shards == 1 {
+                shards1_tok_s = tok_s;
+            }
+            let speedup = tok_s / shards1_tok_s;
+            println!(
+                "   shards={shards}: {tok_s:8.1} tok/s at c{largest_c} \
+                 ({speedup:.2}x vs 1 shard, stream-exact)"
+            );
+            shard_entries.push((
+                format!("s{shards}"),
+                json::obj(vec![
+                    ("shards", json::num(shards as f64)),
+                    ("tokens", json::num(tokens as f64)),
+                    ("tok_per_s", json::num(tok_s)),
+                    ("bit_exact", Json::Bool(true)),
+                    (
+                        "speedup_vs_1shard",
+                        if speedup.is_finite() {
+                            json::num(speedup)
+                        } else {
+                            Json::Null
+                        },
+                    ),
+                ]),
+            ));
+        }
+
         config_entries.push((
             label.clone(),
             json::obj(vec![
@@ -315,6 +430,7 @@ pub fn run(opts: &DecodeBenchOpts) -> crate::Result<Json> {
                 ("build_ms", json::num(build_ms)),
                 ("reforward_tok_per_s", json::num(base_tok_s)),
                 ("concurrency", json::obj_owned(conc_entries)),
+                ("shards", json::obj_owned(shard_entries)),
             ]),
         ));
     }
@@ -348,6 +464,12 @@ pub fn run(opts: &DecodeBenchOpts) -> crate::Result<Json> {
         ),
         ("prompt_len", json::num(opts.prompt_len as f64)),
         ("max_new", json::num(opts.max_new as f64)),
+        (
+            "shard_counts",
+            json::arr(
+                opts.shard_counts.iter().map(|&s| json::num(s as f64)),
+            ),
+        ),
         (
             "kv_bytes_per_position",
             json::num(crate::hw::memory::kv_exact_position_bytes(

@@ -10,6 +10,14 @@
 //! coordinator pool follows); a lone worker leaves the guard off and
 //! lets the GEMM fan out across cores.
 //!
+//! A tensor-parallel model ([`PackedModel::build_sharded`]) composes
+//! with both modes: each forward's shard fan-out is bounded by the
+//! model's own [`crate::util::par::ShardPool`] (shards − 1 persistent
+//! workers plus the calling engine worker, every slot marked), so
+//! total threading is `workers + shards − 1`, never `workers ×
+//! shards`, and logits stay bit-identical to the unsharded model for
+//! any worker count.
+//!
 //! Determinism: request logits are identical for any worker count and
 //! any arrival interleaving — batching invariance (see
 //! [`super::packed_model`]) makes co-batch composition irrelevant, and

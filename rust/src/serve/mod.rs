@@ -34,10 +34,21 @@
 //!   exact operand the first encode produced, so cached and fresh paths
 //!   are bit-identical by construction.
 //!
+//! Linears scale *within* one forward via tensor-parallel sharding:
+//! [`PackedModel::build_sharded`] splits every packed weight into
+//! block-aligned column shards
+//! ([`crate::quant::shard::ShardedOperand`], one
+//! [`OperandCache`] entry per shard slot) and runs them concurrently
+//! on a persistent [`crate::util::par::ShardPool`] whose workers
+//! follow the same [`crate::util::par::WorkerGuard`] protocol, so
+//! engine workers × shards never oversubscribes. Sharded logits and
+//! decode streams are bit-identical to `shards = 1` (DESIGN.md §12,
+//! pinned differentially by `rust/tests/shard.rs`).
+//!
 //! `microscale serve-bench` ([`bench`]) drives synthetic traffic across
-//! {FP4/UE4M3, FP4/UE5M3, FP8, mixed-per-layer} × batch sizes and emits
-//! machine-readable `BENCH_serve.json` (field map in EXPERIMENTS.md
-//! §Perf). Architecture notes live in DESIGN.md §9.
+//! {FP4/UE4M3, FP4/UE5M3, FP8, mixed-per-layer} × batch sizes × shard
+//! counts and emits machine-readable `BENCH_serve.json` (field map in
+//! EXPERIMENTS.md §Perf). Architecture notes live in DESIGN.md §9.
 //!
 //! On top of the one-shot forward path sits token-by-token
 //! **generation**:
@@ -86,6 +97,8 @@ pub use batcher::{Batcher, BatcherConfig};
 pub use self::cache::{operand_cache, CacheStats, OperandCache};
 pub use decode::{DecodeEngine, Sampler, Sampling};
 pub use engine::{EngineConfig, ResponseHandle, ServeEngine, ServeStats};
+pub use crate::quant::shard::{shard_ranges, ShardedOperand};
+pub use crate::util::par::ShardPool;
 pub use kvpool::{KvPool, KvPoolStats};
 pub use packed_model::{reference_forward, PackedModel, SeqKv};
 pub use scheduler::{

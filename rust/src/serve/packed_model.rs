@@ -16,6 +16,21 @@
 //!   [`PackedGemm`] against the cached weight operand. Bit-identical to
 //!   the reference path by the engine's exactness contract (DESIGN.md
 //!   §8) — which the serve property suite re-pins end to end.
+//!
+//! # Tensor-parallel sharding
+//!
+//! [`PackedModel::build_sharded`] splits every packed-path weight into
+//! `shards` block-aligned column shards ([`ShardedOperand`], cached
+//! per shard slot in the [`OperandCache`]) and fans each linear's
+//! shard matmuls out over a persistent [`ShardPool`] of `shards - 1`
+//! marked workers (the calling thread runs shard 0). Because sharding
+//! partitions *output columns* and the combine scatters fixed-order
+//! panels, sharded logits are bit-identical to `shards = 1` for every
+//! entry shape — whole-batch forward, prefill, and the m == 1 decode
+//! step all route through the same [`Linear::apply`] (DESIGN.md §12;
+//! `rust/tests/shard.rs` pins the invariance differentially). Layers
+//! whose output is a single scale block, and the Exact/Reference
+//! paths, simply stay unsharded.
 //! * **Reference** — INT elements, per-tensor "-S" scaling, or
 //!   weight-only quantization: the prepacked weights are the scalar
 //!   fake-quant of the transposed tensor, and the GEMM is the f32
@@ -73,7 +88,9 @@ use crate::formats::ElemFormat;
 use crate::model::weights::Params;
 use crate::quant::gemm::{GemmOperand, PackedGemm};
 use crate::quant::matmul::{matmul_t, transpose};
+use crate::quant::shard::{shard_ranges, ShardedOperand};
 use crate::quant::{QuantKernel, QuantScheme, ScalarKernel};
+use crate::util::par::ShardPool;
 use crate::runtime::artifacts::ModelDims;
 use crate::runtime::qconfig::{PerLayerQConfig, QConfig};
 
@@ -83,9 +100,10 @@ use super::cache::OperandCache;
 enum LinearPath {
     /// Quantization off: plain f32 GEMM on stored transposed weights.
     Exact { wt: Vec<f32> },
-    /// Code-domain path: prepacked weight operand (shared through the
-    /// [`OperandCache`]), activations quantized per batch.
-    Packed { op: Arc<GemmOperand> },
+    /// Code-domain path: prepacked weight operand in 1..=N block-aligned
+    /// column shards (each shared through the [`OperandCache`]),
+    /// activations quantized per batch.
+    Packed { ops: ShardedOperand },
     /// Scalar fake-quant fallback: prepacked fake-quantized transposed
     /// weights + f32 reference GEMM.
     Reference { wt_q: Vec<f32> },
@@ -109,6 +127,7 @@ impl Linear {
         k: usize,
         n: usize,
         cache: &OperandCache,
+        shards: usize,
     ) -> crate::Result<Linear> {
         if !cfg.quant_on {
             return Ok(Linear {
@@ -131,9 +150,25 @@ impl Linear {
             && matches!(scheme.elem, ElemFormat::Fp(_))
             && k % scheme.block_size == 0;
         let path = if packed_ok {
-            LinearPath::Packed {
-                op: cache.get_or_pack_transposed(&scheme, w, k, n)?,
-            }
+            // effective shard count degrades with the layer's output
+            // width (shard_ranges caps at whole column blocks); each
+            // shard is its own cache entry, keyed by shard slot
+            let ranges = shard_ranges(n, scheme.block_size, shards);
+            let ops = if ranges.len() <= 1 {
+                ShardedOperand::single(
+                    cache.get_or_pack_transposed(&scheme, w, k, n)?,
+                )
+            } else {
+                let count = ranges.len();
+                let mut parts = Vec::with_capacity(count);
+                for (i, &(c0, c1)) in ranges.iter().enumerate() {
+                    parts.push(cache.get_or_pack_transposed_shard(
+                        &scheme, w, k, n, i, count, c0, c1,
+                    )?);
+                }
+                ShardedOperand::from_parts(parts, ranges)?
+            };
+            LinearPath::Packed { ops }
         } else {
             LinearPath::Reference {
                 wt_q: ScalarKernel.fake_quant(&scheme, &transpose(w, k, n)),
@@ -151,16 +186,17 @@ impl Linear {
         rows: usize,
         lens: &[usize],
         gemm: &PackedGemm,
+        pool: Option<&ShardPool>,
     ) -> crate::Result<Vec<f32>> {
         debug_assert_eq!(x.len(), rows * self.k);
         match &self.path {
             LinearPath::Exact { wt } => {
                 Ok(matmul_t(x, wt, rows, self.k, self.n))
             }
-            LinearPath::Packed { op } => {
+            LinearPath::Packed { ops } => {
                 let scheme = self.scheme.as_ref().unwrap();
                 let xo = GemmOperand::quantize(scheme, x, rows, self.k)?;
-                gemm.matmul(&xo, op)
+                ops.matmul(xo, gemm, pool)
             }
             LinearPath::Reference { wt_q } => {
                 let scheme = self.scheme.as_ref().unwrap();
@@ -430,6 +466,11 @@ pub struct PackedModel {
     head_t: Vec<f32>,
     /// `n_layers × 6` linears in [`Params::QUANTIZED`] order.
     linears: Vec<Linear>,
+    /// Configured tensor-parallel shard count (1 = unsharded).
+    shards: usize,
+    /// Persistent shard workers (`shards - 1` threads), present iff
+    /// `shards > 1`; `Arc` so engines/tests can share or swap pools.
+    shard_pool: Option<Arc<ShardPool>>,
 }
 
 /// Contraction/output dims of quantized linear `which`
@@ -455,6 +496,23 @@ impl PackedModel {
         block_size: usize,
         cache: &OperandCache,
     ) -> crate::Result<PackedModel> {
+        PackedModel::build_sharded(dims, params, qcfg, block_size, cache, 1)
+    }
+
+    /// [`PackedModel::build`] with every packed-path weight split into
+    /// `shards` block-aligned column shards, multiplied concurrently on
+    /// a dedicated [`ShardPool`] (module docs). `shards = 1` is exactly
+    /// `build`; any `N > 1` produces bit-identical logits to `N = 1`
+    /// for every entry shape.
+    pub fn build_sharded(
+        dims: &ModelDims,
+        params: &Params,
+        qcfg: &PerLayerQConfig,
+        block_size: usize,
+        cache: &OperandCache,
+        shards: usize,
+    ) -> crate::Result<PackedModel> {
+        ensure!(shards > 0, "shard count must be positive");
         ensure!(block_size > 0, "block size must be positive");
         ensure!(
             dims.n_heads > 0 && dims.d_model % dims.n_heads == 0,
@@ -494,10 +552,12 @@ impl PackedModel {
                 );
                 let w = &data[layer * per..(layer + 1) * per];
                 linears.push(Linear::build(
-                    &cfg, block_size, w, kd, nd, cache,
+                    &cfg, block_size, w, kd, nd, cache, shards,
                 )?);
             }
         }
+        let shard_pool =
+            (shards > 1).then(|| Arc::new(ShardPool::new(shards - 1)));
         Ok(PackedModel {
             dims: *dims,
             qcfg: qcfg.clone(),
@@ -514,6 +574,8 @@ impl PackedModel {
             gains: get("gains", l * 6)?,
             head_t: transpose(&head, d, v),
             linears,
+            shards,
+            shard_pool,
         })
     }
 
@@ -522,6 +584,23 @@ impl PackedModel {
     pub fn with_gemm(mut self, gemm: PackedGemm) -> PackedModel {
         self.gemm = gemm;
         self
+    }
+
+    /// Override the shard-worker pool, e.g. to share one pool across
+    /// models or to size workers independently of the shard count
+    /// (tests pin that pools larger than the shard count stay
+    /// bit-exact and never oversubscribe — every shard slot runs its
+    /// inner kernel serially regardless of pool size).
+    pub fn with_shard_pool(mut self, pool: Arc<ShardPool>) -> PackedModel {
+        self.shard_pool = Some(pool);
+        self
+    }
+
+    /// Configured tensor-parallel shard count (1 = unsharded). Layers
+    /// narrower than `shards` column blocks hold fewer effective
+    /// shards.
+    pub fn shards(&self) -> usize {
+        self.shards
     }
 
     pub fn dims(&self) -> &ModelDims {
@@ -554,7 +633,7 @@ impl PackedModel {
         self.linears
             .iter()
             .map(|lin| match &lin.path {
-                LinearPath::Packed { op } => op.payload_bytes(),
+                LinearPath::Packed { ops } => ops.payload_bytes(),
                 _ => 0,
             })
             .sum()
@@ -621,8 +700,10 @@ impl PackedModel {
         last_only: bool,
     ) -> crate::Result<Vec<f32>> {
         let ctx = self.ctx();
+        let pool = self.shard_pool.as_deref();
         forward_spine(&ctx, tokens, lens, kvs, last_only, |layer, which, x, rows| {
-            self.linears[layer * 6 + which].apply(x, rows, lens, &self.gemm)
+            self.linears[layer * 6 + which]
+                .apply(x, rows, lens, &self.gemm, pool)
         })
     }
 
@@ -1085,6 +1166,42 @@ mod tests {
         for (a, b) in got.iter().zip(&want) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn sharded_forward_is_bit_identical_to_unsharded() {
+        let dims = tiny_dims();
+        let params = Params::init_surrogate(&dims, 21);
+        let cache = OperandCache::new(64);
+        let qcfg = PerLayerQConfig::uniform(QConfig::fp4("ue4m3").unwrap());
+        let base =
+            PackedModel::build(&dims, &params, &qcfg, 8, &cache).unwrap();
+        let mut rng = Pcg64::new(22);
+        let toks = tokens(&mut rng, &dims, 2 * dims.seq_len);
+        let want = base.forward(&toks, 2, dims.seq_len).unwrap();
+        for shards in [2usize, 3, 7] {
+            let model = PackedModel::build_sharded(
+                &dims, &params, &qcfg, 8, &cache, shards,
+            )
+            .unwrap();
+            assert_eq!(model.shards(), shards);
+            // sharding never changes the path split or the wire bytes'
+            // resident total
+            assert_eq!(model.path_summary(), base.path_summary());
+            let got = model.forward(&toks, 2, dims.seq_len).unwrap();
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(
+                    a.to_bits(),
+                    b.to_bits(),
+                    "shards={shards} logit {i}: {a} vs {b}"
+                );
+            }
+        }
+        // a zero shard count is rejected, not clamped
+        assert!(PackedModel::build_sharded(
+            &dims, &params, &qcfg, 8, &cache, 0
+        )
+        .is_err());
     }
 
     #[test]

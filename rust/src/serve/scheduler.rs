@@ -23,6 +23,13 @@
 //! window is exhausted ([`FinishReason::ContextFull`] — the final token
 //! is still returned; it just cannot be fed back).
 //!
+//! The scheduler is agnostic to tensor-parallel sharding: a model from
+//! [`crate::serve::PackedModel::build_sharded`] fans each fused
+//! prefill+decode spine call out across its shard pool and yields the
+//! same token streams as `shards = 1` — including under paged-KvPool
+//! eviction and requeue, which `rust/tests/shard.rs` pins against the
+//! cache-free oracle.
+//!
 //! # Memory-bounded scheduling
 //!
 //! When the engine carries a [`crate::serve::KvPool`]

@@ -16,7 +16,8 @@
 //! re-raise on scope exit), matching rayon semantics.
 
 use std::cell::Cell;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Mutex};
 
 /// Number of worker threads to use by default (logical CPUs).
 pub fn max_threads() -> usize {
@@ -142,6 +143,118 @@ where
     });
 }
 
+type ShardJob = Box<dyn FnOnce() + Send + 'static>;
+
+/// Persistent worker pool for tensor-parallel shard fan-out.
+///
+/// Unlike [`par_map`] (scoped threads, spawned per call), a
+/// `ShardPool` keeps its workers alive for the lifetime of a sharded
+/// model, so the per-token decode fast path (m == 1, microseconds per
+/// linear) pays a channel send instead of a thread spawn. Every worker
+/// holds a [`WorkerGuard`] for its whole life, and [`ShardPool::run`]
+/// executes job 0 inline on the caller under a guard of its own, so
+/// inner kernels ([`crate::quant::gemm::PackedGemm`],
+/// `ChunkedKernel`) see [`on_worker_thread`] and stay serial on every
+/// shard — the thread count of a sharded matmul is exactly
+/// `1 + workers`, never `shards × ncpus`.
+///
+/// Jobs are dispatched round-robin (one queue per worker); `run` is
+/// order-preserving and a pool with zero workers (or a single job)
+/// degrades to an inline serial loop. A panicking job takes its worker
+/// down and `run` re-panics on the caller, matching the
+/// scoped-thread semantics of [`par_map`].
+pub struct ShardPool {
+    txs: Vec<mpsc::Sender<ShardJob>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    next: AtomicUsize,
+}
+
+impl ShardPool {
+    /// Spawn `workers` persistent marked worker threads. `workers` is
+    /// the *extra* parallelism: a model sharded N ways wants
+    /// `ShardPool::new(N - 1)` because the caller runs one shard
+    /// itself.
+    pub fn new(workers: usize) -> ShardPool {
+        let mut txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let (tx, rx) = mpsc::channel::<ShardJob>();
+            let handle = std::thread::Builder::new()
+                .name(format!("shard-worker-{i}"))
+                .spawn(move || {
+                    let _guard = WorkerGuard::enter();
+                    while let Ok(job) = rx.recv() {
+                        job();
+                    }
+                })
+                .expect("spawn shard worker");
+            txs.push(tx);
+            handles.push(handle);
+        }
+        ShardPool { txs, handles, next: AtomicUsize::new(0) }
+    }
+
+    /// Number of pool worker threads (callers add one for themselves).
+    pub fn workers(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Run every job, returning results in job order. Job 0 executes
+    /// inline on the calling thread (under a [`WorkerGuard`]); the
+    /// rest are dispatched round-robin to the pool workers.
+    pub fn run<T, F>(&self, jobs: Vec<F>) -> Vec<T>
+    where
+        T: Send + 'static,
+        F: FnOnce() -> T + Send + 'static,
+    {
+        let n = jobs.len();
+        if n == 0 {
+            return Vec::new();
+        }
+        if self.txs.is_empty() || n == 1 {
+            let _g = WorkerGuard::enter();
+            return jobs.into_iter().map(|job| job()).collect();
+        }
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let (tx, rx) = mpsc::channel::<(usize, T)>();
+        let mut jobs = jobs.into_iter();
+        let first = jobs.next().expect("n >= 1");
+        for (off, job) in jobs.enumerate() {
+            let txc = tx.clone();
+            let slot =
+                self.next.fetch_add(1, Ordering::Relaxed) % self.txs.len();
+            let boxed: ShardJob = Box::new(move || {
+                let _ = txc.send((off + 1, job()));
+            });
+            self.txs[slot].send(boxed).expect("shard worker alive");
+        }
+        // drop the caller's sender so a worker that dies mid-run (job
+        // panic) surfaces as a channel disconnect below instead of a
+        // deadlocked recv
+        drop(tx);
+        {
+            let _g = WorkerGuard::enter();
+            out[0] = Some(first());
+        }
+        for _ in 1..n {
+            let (i, v) = rx.recv().expect("shard worker completed its job");
+            out[i] = Some(v);
+        }
+        out.into_iter()
+            .map(|o| o.expect("every job reported a result"))
+            .collect()
+    }
+}
+
+impl Drop for ShardPool {
+    fn drop(&mut self) {
+        self.txs.clear(); // hang up: workers drain and exit
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -207,6 +320,50 @@ mod tests {
         });
         // marking another thread does not leak into this one
         assert!(!on_worker_thread());
+    }
+
+    #[test]
+    fn shard_pool_is_order_preserving_and_reusable() {
+        let pool = ShardPool::new(3);
+        assert_eq!(pool.workers(), 3);
+        for round in 0..4usize {
+            let jobs: Vec<_> = (0..7usize)
+                .map(|i| move || i * i + round)
+                .collect();
+            let got = pool.run(jobs);
+            let want: Vec<usize> = (0..7).map(|i| i * i + round).collect();
+            assert_eq!(got, want, "round={round}");
+        }
+    }
+
+    #[test]
+    fn shard_pool_marks_every_job_as_worker() {
+        // Both the inline job-0 slot and the pool workers must report
+        // on_worker_thread() == true, or inner kernels would fan out.
+        for workers in [0usize, 1, 4] {
+            let pool = ShardPool::new(workers);
+            assert!(!on_worker_thread());
+            let jobs: Vec<_> =
+                (0..6).map(|_| on_worker_thread as fn() -> bool).collect();
+            let marked = pool.run(jobs);
+            assert!(
+                marked.iter().all(|&m| m),
+                "workers={workers} marked={marked:?}"
+            );
+            // the inline guard is released after the call
+            assert!(!on_worker_thread());
+        }
+    }
+
+    #[test]
+    fn shard_pool_degenerate_shapes() {
+        let pool = ShardPool::new(2);
+        let empty: Vec<u32> = pool.run(Vec::<fn() -> u32>::new());
+        assert!(empty.is_empty());
+        assert_eq!(pool.run(vec![|| 7u32]), vec![7]);
+        // more jobs than workers queue and still complete in order
+        let jobs: Vec<_> = (0..23u32).map(|i| move || i).collect();
+        assert_eq!(pool.run(jobs), (0..23).collect::<Vec<u32>>());
     }
 
     #[test]

@@ -1,0 +1,498 @@
+//! Tensor-parallel shard-invariance acceptance suite (ISSUE 6).
+//!
+//! Sharding is a pure execution-layout change: for every configuration
+//! the repo serves, `shards = N` must produce the same *bits* as
+//! `shards = 1`. This suite pins that differentially:
+//!
+//! 1. **Split properties** (fuzz) — shard column ranges are
+//!    block-aligned and tile `0..n`; shards reassemble to the parent
+//!    operand byte-for-byte (`bits_digest`); `resident_bytes` sums
+//!    exactly; a shard's bytes equal an independent re-quantize of its
+//!    column slice.
+//! 2. **Matmul invariance** — sharded `x · wᵀ` is bit-identical to the
+//!    unsharded packed GEMM for random shapes (odd column counts
+//!    included), with and without a [`ShardPool`], pools larger than
+//!    the shard count included.
+//! 3. **Forward/decode invariance** — logits and full decode token
+//!    streams for shards ∈ {1,2,3,4,7} equal the 1-shard baseline
+//!    across {FP4,FP8} × {UE4M3,UE5M3} × block sizes {8,32}, the mixed
+//!    per-layer config, and the fusion-fallback path (extreme scale
+//!    magnitudes driving decode fallback in some shards but not
+//!    others).
+//! 4. **Cache keying** — sharded and unsharded encodes of the same
+//!    weight bytes occupy distinct [`OperandCache`] entries; repeat
+//!    lookups return `Arc`-identical operands per shard slot.
+//! 5. **Scheduler under memory pressure** — sharded decode through the
+//!    paged [`KvPool`] (evict-and-requeue) keeps stream equality vs
+//!    the cache-free oracle, with pool workers exceeding the shard
+//!    count, and every shard slot runs marked (no oversubscription).
+
+use std::sync::Arc;
+
+use microscale::dist::Pcg64;
+use microscale::formats::{ElemFormat, MiniFloat, BF16_SCALE, E8M0, UE4M3, UE5M3};
+use microscale::model::Params;
+use microscale::quant::gemm::{GemmOperand, PackedGemm};
+use microscale::quant::shard::{shard_ranges, ShardedOperand};
+use microscale::quant::QuantScheme;
+use microscale::runtime::artifacts::ModelDims;
+use microscale::runtime::qconfig::{PerLayerQConfig, QConfig};
+use microscale::serve::cache::OperandCache;
+use microscale::serve::decode::generate_reforward;
+use microscale::serve::packed_model::PackedModel;
+use microscale::serve::scheduler::{DecodeRequest, Scheduler, SchedulerConfig};
+use microscale::serve::{DecodeEngine, KvPool, Sampling};
+use microscale::util::par::{on_worker_thread, ShardPool};
+
+const SHARD_COUNTS: [usize; 5] = [1, 2, 3, 4, 7];
+
+fn dims() -> ModelDims {
+    ModelDims {
+        vocab: 32,
+        d_model: 32,
+        n_heads: 2,
+        n_layers: 2,
+        d_ff: 64,
+        seq_len: 16,
+    }
+}
+
+fn tokens(rng: &mut Pcg64, count: usize) -> Vec<i32> {
+    let v = dims().vocab as u64;
+    (0..count).map(|_| (rng.next_u64() % v) as i32).collect()
+}
+
+fn assert_bits_eq(got: &[f32], want: &[f32], what: &str) {
+    assert_eq!(got.len(), want.len(), "{what}: length");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert_eq!(a.to_bits(), b.to_bits(), "{what}: element {i} {a} vs {b}");
+    }
+}
+
+#[test]
+fn shard_ranges_fuzz_block_aligned_and_near_even() {
+    let mut rng = Pcg64::new(0x5A01);
+    for _ in 0..300 {
+        let n = 1 + (rng.next_u64() % 300) as usize;
+        let bs = [1usize, 3, 8, 16, 32][(rng.next_u64() % 5) as usize];
+        let shards = 1 + (rng.next_u64() % 9) as usize;
+        let ranges = shard_ranges(n, bs, shards);
+        let units = n.div_ceil(bs);
+        assert_eq!(ranges.len(), shards.min(units), "n={n} bs={bs}");
+        let mut at = 0usize;
+        let mut unit_counts = Vec::new();
+        for (i, &(c0, c1)) in ranges.iter().enumerate() {
+            assert_eq!(c0, at, "contiguous cover (n={n} bs={bs} s={shards})");
+            assert!(c1 > c0, "no empty shard (n={n} bs={bs} s={shards})");
+            assert_eq!(c0 % bs, 0, "block-aligned start");
+            if i + 1 < ranges.len() {
+                assert_eq!(c1 % bs, 0, "block-aligned interior boundary");
+            }
+            unit_counts.push((c1 - c0).div_ceil(bs));
+            at = c1;
+        }
+        assert_eq!(at, n, "full cover (n={n} bs={bs} s={shards})");
+        let (mn, mx) = (
+            unit_counts.iter().min().unwrap(),
+            unit_counts.iter().max().unwrap(),
+        );
+        assert!(mx - mn <= 1, "near-even in blocks (n={n} bs={bs} s={shards})");
+    }
+}
+
+#[test]
+fn split_reassembles_byte_for_byte_and_bytes_sum_exactly() {
+    let schemes: [(ElemFormat, MiniFloat, usize); 3] = [
+        (ElemFormat::FP4, UE4M3, 8),
+        (ElemFormat::FP8, UE5M3, 16),
+        (ElemFormat::FP4, BF16_SCALE, 8),
+    ];
+    let mut rng = Pcg64::new(0x5A02);
+    for _ in 0..40 {
+        let k = 1 + (rng.next_u64() % 48) as usize;
+        let n = 1 + (rng.next_u64() % 90) as usize;
+        let (elem, scale, bs) = schemes[(rng.next_u64() % 3) as usize];
+        let scheme = QuantScheme { elem, scale, block_size: bs, per_tensor: false };
+        let w = rng.normal_vec_f32(k * n, 0.5);
+        let parent =
+            Arc::new(GemmOperand::quantize_transposed(&scheme, &w, k, n).unwrap());
+        for shards in [1usize, 2, 3, 5, 9] {
+            let sh = ShardedOperand::split(&parent, shards).unwrap();
+            let label = format!("k={k} n={n} bs={bs} shards={shards}");
+            // byte accounting: slicing copies rows, never pads
+            assert_eq!(sh.resident_bytes(), parent.resident_bytes(), "{label}");
+            // reassembly is the identity, digest included
+            assert_eq!(
+                sh.reassemble().unwrap().bits_digest(),
+                parent.bits_digest(),
+                "{label}"
+            );
+            // each shard equals an independent re-quantize of its own
+            // column slice (per-row encode commutes with slicing)
+            for (op, &(c0, c1)) in sh.parts().iter().zip(sh.ranges()) {
+                let width = c1 - c0;
+                let mut sub = vec![0.0f32; k * width];
+                for r in 0..k {
+                    sub[r * width..(r + 1) * width]
+                        .copy_from_slice(&w[r * n + c0..r * n + c1]);
+                }
+                let fresh =
+                    GemmOperand::quantize_transposed(&scheme, &sub, k, width)
+                        .unwrap();
+                assert_eq!(
+                    op.bits_digest(),
+                    fresh.bits_digest(),
+                    "{label} shard {c0}..{c1}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn sharded_matmul_is_bit_identical_with_and_without_pool() {
+    let mut rng = Pcg64::new(0x5A03);
+    let gemm = PackedGemm::auto();
+    // pool deliberately larger than any shard count below
+    let pool = ShardPool::new(8);
+    for &(elem, scale, bs) in &[
+        (ElemFormat::FP4, UE4M3, 8usize),
+        (ElemFormat::FP8, UE5M3, 16),
+    ] {
+        let scheme = QuantScheme { elem, scale, block_size: bs, per_tensor: false };
+        // odd / non-divisible output widths included
+        for &(m, k, n) in &[(1usize, 32usize, 13usize), (5, 16, 50), (8, 48, 64)]
+        {
+            let x = rng.normal_vec_f32(m * k, 1.0);
+            let w = rng.normal_vec_f32(k * n, 0.5);
+            let parent = Arc::new(
+                GemmOperand::quantize_transposed(&scheme, &w, k, n).unwrap(),
+            );
+            let xo = GemmOperand::quantize(&scheme, &x, m, k).unwrap();
+            let want = gemm.matmul(&xo, &parent).unwrap();
+            for shards in SHARD_COUNTS {
+                let sh = ShardedOperand::split(&parent, shards).unwrap();
+                let label = format!("m={m} k={k} n={n} shards={shards}");
+                let xo2 = GemmOperand::quantize(&scheme, &x, m, k).unwrap();
+                let got = sh.matmul(xo2, &gemm, Some(&pool)).unwrap();
+                assert_bits_eq(&got, &want, &format!("{label} (pooled)"));
+                let xo3 = GemmOperand::quantize(&scheme, &x, m, k).unwrap();
+                let got = sh.matmul(xo3, &gemm, None).unwrap();
+                assert_bits_eq(&got, &want, &format!("{label} (serial)"));
+            }
+        }
+    }
+}
+
+/// Extreme scale magnitudes force the packed GEMM's `fusion_safe`
+/// fallback. With the extremes confined to some columns, the unsharded
+/// operand falls back to decode while individual shards stay packed —
+/// the sharded result must still match bit for bit (both paths are
+/// exact per output column).
+#[test]
+fn fusion_fallback_path_is_shard_invariant() {
+    let mut rng = Pcg64::new(0x5A04);
+    let gemm = PackedGemm::auto();
+    let pool = ShardPool::new(3);
+    for &scale in &[E8M0, BF16_SCALE] {
+        for &mag in &[1e20f64, 1e-25] {
+            let scheme = QuantScheme {
+                elem: ElemFormat::FP4,
+                scale,
+                block_size: 8,
+                per_tensor: false,
+            };
+            let (m, k, n) = (3usize, 16usize, 24usize);
+            let x: Vec<f32> =
+                rng.normal_vec_f32(m * k, 1.0).iter().map(|v| v * mag as f32).collect();
+            // extremes only in the first 8 output columns: shard 0 of 3
+            // inherits them, shards 1..2 see normal-range scales
+            let mut w = rng.normal_vec_f32(k * n, 0.5);
+            for r in 0..k {
+                for c in 0..8 {
+                    w[r * n + c] *= mag as f32;
+                }
+            }
+            let parent = Arc::new(
+                GemmOperand::quantize_transposed(&scheme, &w, k, n).unwrap(),
+            );
+            let xo = GemmOperand::quantize(&scheme, &x, m, k).unwrap();
+            let want = gemm.matmul(&xo, &parent).unwrap();
+            for shards in [2usize, 3] {
+                let sh = ShardedOperand::split(&parent, shards).unwrap();
+                let xo2 = GemmOperand::quantize(&scheme, &x, m, k).unwrap();
+                let got = sh.matmul(xo2, &gemm, Some(&pool)).unwrap();
+                assert_bits_eq(
+                    &got,
+                    &want,
+                    &format!("{}/mag={mag:e}/shards={shards}", scale.name),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn forward_logits_shard_invariant_across_format_matrix() {
+    let d = dims();
+    let params = Params::init_surrogate(&d, 81);
+    let mut rng = Pcg64::new(0x5A05);
+    for elem in ["fp4_e2m1", "fp8_e4m3"] {
+        for scale in ["ue4m3", "ue5m3"] {
+            for block_size in [8usize, 32] {
+                let qcfg = PerLayerQConfig::uniform(
+                    QConfig::named(elem, scale, false).unwrap(),
+                );
+                let cache = OperandCache::new(256);
+                let base = PackedModel::build(&d, &params, &qcfg, block_size, &cache)
+                    .unwrap();
+                for batch in [1usize, 4] {
+                    let toks = tokens(&mut rng, batch * d.seq_len);
+                    let want = base.forward(&toks, batch, d.seq_len).unwrap();
+                    for shards in SHARD_COUNTS {
+                        let model = PackedModel::build_sharded(
+                            &d, &params, &qcfg, block_size, &cache, shards,
+                        )
+                        .unwrap();
+                        let got = model.forward(&toks, batch, d.seq_len).unwrap();
+                        assert_bits_eq(
+                            &got,
+                            &want,
+                            &format!(
+                                "{elem}/{scale}/bs{block_size}/batch{batch}\
+                                 /shards={shards}"
+                            ),
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_token_streams_shard_invariant() {
+    let d = dims();
+    let params = Params::init_surrogate(&d, 82);
+    let mut rng = Pcg64::new(0x5A06);
+    for (elem, scale) in [("fp4_e2m1", "ue4m3"), ("fp8_e4m3", "ue5m3")] {
+        let qcfg =
+            PerLayerQConfig::uniform(QConfig::named(elem, scale, false).unwrap());
+        let cache = OperandCache::new(256);
+        let base = Arc::new(
+            PackedModel::build(&d, &params, &qcfg, 8, &cache).unwrap(),
+        );
+        let reqs: Vec<DecodeRequest> = (0..3)
+            .map(|id| DecodeRequest {
+                id,
+                prompt: tokens(&mut rng, 4 + id as usize),
+                max_new_tokens: 6,
+                eos: None,
+                sampling: if id % 2 == 0 {
+                    Sampling::Greedy
+                } else {
+                    Sampling::Temperature { temp: 0.8, seed: 700 + id }
+                },
+            })
+            .collect();
+        let want: Vec<Vec<i32>> = reqs
+            .iter()
+            .map(|r| {
+                generate_reforward(&base, &r.prompt, r.max_new_tokens, r.eos, &r.sampling)
+                    .unwrap()
+            })
+            .collect();
+        for shards in SHARD_COUNTS {
+            let model = Arc::new(
+                PackedModel::build_sharded(&d, &params, &qcfg, 8, &cache, shards)
+                    .unwrap(),
+            );
+            let mut sched = Scheduler::new(
+                DecodeEngine::new(model).unwrap(),
+                SchedulerConfig { max_active: 4, max_prefill_per_step: 4 },
+            );
+            for r in &reqs {
+                sched.submit(r.clone()).unwrap();
+            }
+            let results = sched.run().unwrap();
+            assert_eq!(results.len(), reqs.len());
+            for (r, w) in results.iter().zip(&want) {
+                assert_eq!(
+                    r.tokens, *w,
+                    "{elem}/{scale} shards={shards} request {} stream",
+                    r.id
+                );
+            }
+        }
+    }
+}
+
+/// Mixed per-layer precision: layer 0 packed FP4, layer 1 INT4 on the
+/// reference path — the reference path never shards, the packed layer
+/// does, and the composition must stay bit-invariant end to end.
+#[test]
+fn mixed_per_layer_config_shard_invariant() {
+    let d = dims();
+    let params = Params::init_surrogate(&d, 83);
+    let qcfg = PerLayerQConfig::uniform(QConfig::fp4("ue5m3").unwrap())
+        .with_override(1, QConfig::named("int4", "ue4m3", false).unwrap());
+    let cache = OperandCache::new(256);
+    let base =
+        Arc::new(PackedModel::build(&d, &params, &qcfg, 8, &cache).unwrap());
+    let s = base.path_summary();
+    assert_eq!((s.packed, s.reference), (6, 6), "mixed paths as intended");
+    let mut rng = Pcg64::new(0x5A07);
+    let toks = tokens(&mut rng, 2 * d.seq_len);
+    let want = base.forward(&toks, 2, d.seq_len).unwrap();
+    let prompt = tokens(&mut rng, 5);
+    let want_stream =
+        generate_reforward(&base, &prompt, 6, None, &Sampling::Greedy).unwrap();
+    for shards in SHARD_COUNTS {
+        let model = Arc::new(
+            PackedModel::build_sharded(&d, &params, &qcfg, 8, &cache, shards)
+                .unwrap(),
+        );
+        let got = model.forward(&toks, 2, d.seq_len).unwrap();
+        assert_bits_eq(&got, &want, &format!("mixed/shards={shards}"));
+        let got_stream =
+            generate_reforward(&model, &prompt, 6, None, &Sampling::Greedy)
+                .unwrap();
+        assert_eq!(got_stream, want_stream, "mixed/shards={shards} stream");
+    }
+}
+
+/// Regression (ISSUE 6 satellite): cache keys must include the shard
+/// slot. The content digests cover the full weight for both the
+/// unsharded operand and each shard, so without the slot in the key a
+/// shard lookup would alias the unsharded entry.
+#[test]
+fn opcache_shard_entries_are_distinct_and_arc_shared() {
+    let cache = OperandCache::new(64);
+    let mut rng = Pcg64::new(0x5A08);
+    let (k, n) = (16usize, 24usize);
+    let w = rng.normal_vec_f32(k * n, 0.5);
+    let scheme = QuantScheme {
+        elem: ElemFormat::FP4,
+        scale: UE4M3,
+        block_size: 8,
+        per_tensor: false,
+    };
+    let full = cache.get_or_pack_transposed(&scheme, &w, k, n).unwrap();
+    let baseline = cache.stats().entries;
+
+    let ranges = shard_ranges(n, scheme.block_size, 3);
+    assert_eq!(ranges, vec![(0, 8), (8, 16), (16, 24)]);
+    let mut shards = Vec::new();
+    for (i, &(c0, c1)) in ranges.iter().enumerate() {
+        shards.push(
+            cache
+                .get_or_pack_transposed_shard(&scheme, &w, k, n, i, 3, c0, c1)
+                .unwrap(),
+        );
+    }
+    // three NEW entries: no shard aliased the unsharded operand
+    assert_eq!(cache.stats().entries, baseline + 3);
+    for (s, &(c0, c1)) in shards.iter().zip(&ranges) {
+        assert!(!Arc::ptr_eq(s, &full), "shard {c0}..{c1} aliased full");
+        assert_eq!(
+            s.bits_digest(),
+            full.slice_rows(c0, c1).unwrap().bits_digest(),
+            "shard {c0}..{c1} bytes"
+        );
+    }
+    // shard slots of different counts are distinct entries too
+    let half = cache
+        .get_or_pack_transposed_shard(&scheme, &w, k, n, 0, 2, 0, 16)
+        .unwrap();
+    assert!(!Arc::ptr_eq(&half, &shards[0]));
+    assert_eq!(cache.stats().entries, baseline + 4);
+    // repeat lookups are hits returning the identical Arc
+    let again = cache
+        .get_or_pack_transposed_shard(&scheme, &w, k, n, 0, 3, 0, 8)
+        .unwrap();
+    assert!(Arc::ptr_eq(&again, &shards[0]));
+    assert_eq!(cache.stats().entries, baseline + 4);
+    // the ShardedOperand a sharded model assembles from those entries
+    // reassembles to the unsharded bytes
+    let sh = ShardedOperand::from_parts(shards, ranges).unwrap();
+    assert_eq!(sh.reassemble().unwrap().bits_digest(), full.bits_digest());
+    assert_eq!(sh.resident_bytes(), full.resident_bytes());
+}
+
+/// Satellite: sharded decode under the paged KvPool with
+/// evict-and-requeue, pool workers > shard count, streams equal the
+/// cache-free oracle, and no thread-pool oversubscription (every shard
+/// slot is a marked worker).
+#[test]
+fn sharded_paged_decode_survives_eviction_and_never_oversubscribes() {
+    // the no-oversubscription pin: every ShardPool slot (inline job 0
+    // and workers alike) reports as a marked pool worker, which is
+    // what keeps the inner GEMM serial per shard
+    let probe = ShardPool::new(6);
+    let marks =
+        probe.run((0..7).map(|_| on_worker_thread as fn() -> bool).collect());
+    assert!(marks.iter().all(|&m| m), "unmarked shard slot: {marks:?}");
+    assert!(!on_worker_thread(), "guard must not leak past run()");
+
+    let d = dims();
+    let params = Params::init_surrogate(&d, 84);
+    let qcfg = PerLayerQConfig::uniform(QConfig::fp4("ue4m3").unwrap());
+    let cache = OperandCache::new(256);
+    let base =
+        Arc::new(PackedModel::build(&d, &params, &qcfg, 8, &cache).unwrap());
+    // 6 pool workers for 3 shards: worker count > shard count
+    let model = Arc::new(
+        PackedModel::build_sharded(&d, &params, &qcfg, 8, &cache, 3)
+            .unwrap()
+            .with_shard_pool(Arc::new(ShardPool::new(6))),
+    );
+    assert_eq!(model.shards(), 3);
+
+    // budget = one full sequence; two requests growing to 12 positions
+    // apiece force evict-and-requeue mid-generation (kvpool.rs idiom)
+    let pool = KvPool::exact(&d, 2, 8192).unwrap();
+    let mut rng = Pcg64::new(0x5A09);
+    let reqs: Vec<DecodeRequest> = (0..2)
+        .map(|id| DecodeRequest {
+            id,
+            prompt: tokens(&mut rng, 2),
+            max_new_tokens: 10,
+            eos: None,
+            sampling: if id % 2 == 0 {
+                Sampling::Greedy
+            } else {
+                Sampling::Temperature { temp: 0.8, seed: 900 + id }
+            },
+        })
+        .collect();
+    // the oracle is cache-free AND unsharded: one run checks both the
+    // paged-KV and the sharding layer at once
+    let want: Vec<Vec<i32>> = reqs
+        .iter()
+        .map(|r| {
+            generate_reforward(&base, &r.prompt, r.max_new_tokens, r.eos, &r.sampling)
+                .unwrap()
+        })
+        .collect();
+    let mut sched = Scheduler::new(
+        DecodeEngine::with_pool(model, pool.clone()).unwrap(),
+        SchedulerConfig { max_active: 4, max_prefill_per_step: 4 },
+    );
+    for r in &reqs {
+        sched.submit(r.clone()).unwrap();
+    }
+    let results = sched.run().unwrap();
+    assert_eq!(results.len(), 2);
+    for (r, w) in results.iter().zip(&want) {
+        assert_eq!(
+            r.tokens, *w,
+            "request {}: sharded paged stream vs cache-free unsharded oracle",
+            r.id
+        );
+    }
+    assert!(
+        sched.preemptions() > 0,
+        "the budget must actually have forced evictions"
+    );
+    assert_eq!(pool.used_bytes(), 0, "all pages returned");
+}
