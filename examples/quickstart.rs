@@ -83,7 +83,11 @@ fn main() -> anyhow::Result<()> {
     // 4) Multiply without ever dequantizing: the packed-native GEMM
     //    engine consumes the integer codes directly (decode LUTs +
     //    per-block scale fusion, mirroring the PE datapath) and is
-    //    bit-identical to dequantize-then-f32-GEMM.
+    //    bit-identical to dequantize-then-f32-GEMM. The inner loops
+    //    dispatch at runtime to AVX2 / NEON vector kernels where the
+    //    host supports them (MICROSCALE_SIMD=scalar pins them off) —
+    //    and stay bit-identical either way, because the vector lanes
+    //    replay the scalar reduction order exactly (DESIGN.md §13).
     let (m, kd, nd) = (48usize, 256, 32);
     let a = rng.normal_vec_f32(m * kd, 5e-3);
     let b = rng.normal_vec_f32(kd * nd, 5e-3);
@@ -94,9 +98,11 @@ fn main() -> anyhow::Result<()> {
     assert!(y.iter().zip(&want).all(|(u, v)| u.to_bits() == v.to_bits()));
     println!(
         "PackedGemm: {m}x{kd}x{nd} multiplied in the code domain \
-         ({} + {} packed bytes) == dequant + f32 GEMM, bit-for-bit ✓\n",
+         ({} + {} packed bytes, '{}' simd kernel) == dequant + f32 \
+         GEMM, bit-for-bit ✓\n",
         xo.payload_bytes(),
         wo.payload_bytes(),
+        microscale::util::simd::kernel_name(),
     );
 
     // 5) Serve a whole model on those packed codes: prepack a surrogate

@@ -31,6 +31,7 @@ use microscale::quant::{
     ChunkedKernel, PackedMxTensor, QuantKernel, QuantScheme, ScalarKernel,
 };
 use microscale::util::json;
+use microscale::util::simd::{self, SimdLevel};
 use microscale::util::timer::{bench, black_box, BenchResult};
 
 fn main() {
@@ -145,19 +146,28 @@ fn gemm_bench(smoke: bool, budget: Duration) {
         wo.payload_bytes() as f64 / (1 << 20) as f64,
     );
 
-    // correctness gate before timing anything: the engine must be
-    // bit-exact against decode + matmul_t on these exact operands
+    // correctness gates before timing anything: the auto-dispatch
+    // engine AND the scalar-pinned engine must both be bit-exact
+    // against decode + matmul_t on these exact operands
     let reference = matmul_t(&xo.decode(), &wo.decode(), m, k, n);
-    let engine_out = PackedGemm::auto().matmul(&xo, &wo).unwrap();
-    assert!(
-        reference
-            .iter()
-            .zip(&engine_out)
-            .all(|(a, b)| a.to_bits() == b.to_bits()),
-        "packed GEMM disagrees with the decode reference — do not trust \
-         the timings"
+    for (engine, label) in [
+        (PackedGemm::auto(), simd::kernel_name()),
+        (PackedGemm::auto().with_simd(SimdLevel::Scalar), "scalar-pinned"),
+    ] {
+        let engine_out = engine.matmul(&xo, &wo).unwrap();
+        assert!(
+            reference
+                .iter()
+                .zip(&engine_out)
+                .all(|(a, b)| a.to_bits() == b.to_bits()),
+            "packed GEMM ({label}) disagrees with the decode reference — \
+             do not trust the timings"
+        );
+    }
+    println!(
+        "    bit-exact vs dequant+matmul_t (auto '{}' + scalar): OK",
+        simd::kernel_name()
     );
-    println!("    bit-exact vs dequant+matmul_t: OK");
 
     let base = bench("gemm/dequant+naive-f32", budget, || {
         let dx = xo.decode();
@@ -167,10 +177,22 @@ fn gemm_bench(smoke: bool, budget: Duration) {
     let flops = 2.0 * m as f64 * n as f64 * k as f64;
     println!("    -> {:.2} GFLOP/s", flops / base.median_ns);
 
-    let serial_engine = PackedGemm::serial();
-    let serial = bench("gemm/packed-1t", budget, || {
-        black_box(serial_engine.matmul(&xo, &wo).unwrap());
+    // the simd axis: identical serial engine, scalar-pinned vs
+    // auto-dispatch — isolates the vector kernels from threading
+    let scalar_engine = PackedGemm::serial().with_simd(SimdLevel::Scalar);
+    let scalar_serial = bench("gemm/packed-1t-scalar", budget, || {
+        black_box(scalar_engine.matmul(&xo, &wo).unwrap());
     });
+    println!("    -> {:.2} GFLOP/s", flops / scalar_serial.median_ns);
+
+    let serial_engine = PackedGemm::serial();
+    let serial = bench(
+        &format!("gemm/packed-1t-{}", simd::kernel_name()),
+        budget,
+        || {
+            black_box(serial_engine.matmul(&xo, &wo).unwrap());
+        },
+    );
     println!("    -> {:.2} GFLOP/s", flops / serial.median_ns);
 
     let auto_engine = PackedGemm::auto();
@@ -204,6 +226,21 @@ fn gemm_bench(smoke: bool, budget: Duration) {
             "MISS (host-dependent)"
         }
     );
+    let simd_speedup = scalar_serial.median_ns / serial.median_ns;
+    let simd_applicable = simd::active() != SimdLevel::Scalar;
+    let simd_pass = simd_speedup >= 2.0;
+    println!(
+        "    simd axis ({} vs scalar, serial): {simd_speedup:.2}x — \
+         target (>= 2.00x on 1024^3): {}",
+        simd::kernel_name(),
+        if smoke || !simd_applicable {
+            "n/a"
+        } else if simd_pass {
+            "PASS"
+        } else {
+            "MISS (host-dependent)"
+        }
+    );
 
     let report = json::obj(vec![
         ("bench", json::s("packed_gemm")),
@@ -221,6 +258,10 @@ fn gemm_bench(smoke: bool, budget: Duration) {
         ("packed_wire_bytes", json::num(wire_bytes)),
         ("paths", json::obj(vec![
             ("dequant_naive_f32", path_stats(&base, flops, None)),
+            (
+                "packed_serial_scalar",
+                path_stats(&scalar_serial, flops, Some(wire_bytes)),
+            ),
             ("packed_serial", path_stats(&serial, flops, Some(wire_bytes))),
             ("packed_threaded", path_stats(&auto, flops, Some(wire_bytes))),
         ])),
@@ -228,6 +269,27 @@ fn gemm_bench(smoke: bool, budget: Duration) {
         ("speedup_serial", json::num(speedup_serial)),
         ("speedup_threaded", json::num(speedup_auto)),
         ("target_speedup", json::num(4.0)),
+        // the simd axis (ISSUE 7): auto-dispatch vector kernel vs the
+        // scalar-pinned kernel on the identical serial engine. The 2x
+        // gate is defined on the full 1024^3 FP4/UE5M3 shape and only
+        // where a vector kernel is actually active — smoke runs and
+        // scalar-only hosts (or MICROSCALE_SIMD=scalar) record null.
+        (
+            "simd",
+            json::obj(vec![
+                ("kernel", json::s(simd::kernel_name())),
+                ("speedup_vs_scalar", json::num(simd_speedup)),
+                ("target_speedup", json::num(2.0)),
+                (
+                    "pass",
+                    if smoke || !simd_applicable {
+                        json::Json::Null
+                    } else {
+                        json::Json::Bool(simd_pass)
+                    },
+                ),
+            ]),
+        ),
         // the 4x target is defined on the full 1024^3 shapes only;
         // smoke runs record null so trajectory tooling can't misread a
         // tiny-shape ratio as an acceptance verdict

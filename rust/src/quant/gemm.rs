@@ -59,13 +59,38 @@
 //! per-tensor operands fall back to decode + [`super::matmul::matmul_t`]
 //! inside [`PackedGemm::matmul`] — same answer, none of the speed.
 
+use std::sync::OnceLock;
+
 use crate::formats::ElemFormat;
 use crate::util::par;
+use crate::util::simd::{self, SimdLevel};
 
 use super::kernel::plan_threads;
 use super::matmul::matmul_t;
 use super::packed::{encode_block, LevelCodec, PackedMxTensor};
 use super::QuantScheme;
+
+/// f32 lanes per vector register group: 8 for AVX2, 4 for NEON. The
+/// interleaved weight panels and the column-split alignment are laid
+/// out at this width; it is an arch constant, so one panel layout
+/// serves every kernel the process can dispatch to.
+#[cfg(target_arch = "aarch64")]
+const SIMD_LANES: usize = 4;
+#[cfg(not(target_arch = "aarch64"))]
+const SIMD_LANES: usize = 8;
+
+/// Lazily built weight-side layout for the vector kernels: rows grouped
+/// in [`SIMD_LANES`]-wide **lane groups**, codes interleaved t-major
+/// (`codes[g·stride·L + t·L + lane]`) and scales block-major
+/// (`scales[g·bpr·L + b·L + lane]`), so one vector load at position `t`
+/// fetches the codes of `L` adjacent output columns. Padded lanes (the
+/// last group when `rows % L != 0`) carry code 0 and scale 0.0: their
+/// fused scale is exactly `0.0`, every term contributes `+0.0`, and the
+/// store masks them out — they can never perturb a real output.
+struct SimdPanels {
+    codes: Vec<u8>,
+    scales: Vec<f32>,
+}
 
 /// A quantized matrix in GEMM-ready packed-domain layout (see module
 /// docs): `rows × cols`, blocks along `cols`, one code byte per element
@@ -96,6 +121,12 @@ pub struct GemmOperand {
     /// largest block scale.
     scale_max: f32,
     elem_codec: LevelCodec,
+    /// interleaved vector-kernel panels, built on first SIMD multiply
+    /// (weight operands are packed once and multiplied many times, so
+    /// the cost amortizes to zero on the serve path). Not counted in
+    /// [`GemmOperand::resident_bytes`], which prices the canonical
+    /// codes + scales representation the cache accounts for.
+    panels: OnceLock<SimdPanels>,
 }
 
 impl GemmOperand {
@@ -185,6 +216,7 @@ impl GemmOperand {
             scale_min_nz,
             scale_max,
             elem_codec,
+            panels: OnceLock::new(),
         })
     }
 
@@ -251,6 +283,7 @@ impl GemmOperand {
             scale_min_nz,
             scale_max,
             elem_codec: LevelCodec::for_elem(&scheme.elem),
+            panels: OnceLock::new(),
         })
     }
 
@@ -396,6 +429,7 @@ impl GemmOperand {
             scale_min_nz,
             scale_max,
             elem_codec: LevelCodec::for_elem(&self.scheme.elem),
+            panels: OnceLock::new(),
         })
     }
 
@@ -454,6 +488,35 @@ impl GemmOperand {
             scale_min_nz,
             scale_max,
             elem_codec: LevelCodec::for_elem(&head.scheme.elem),
+            panels: OnceLock::new(),
+        })
+    }
+
+    /// The interleaved vector-kernel view of this operand (see
+    /// [`SimdPanels`]), built on first use and cached for the operand's
+    /// lifetime. Pure re-layout of the canonical codes/scales — no
+    /// value changes — so it cannot affect results, only speed.
+    fn simd_panels(&self) -> &SimdPanels {
+        self.panels.get_or_init(|| {
+            let l = SIMD_LANES;
+            let groups = self.rows.div_ceil(l).max(1);
+            let bpr = self.blocks_per_row;
+            let mut codes = vec![0u8; groups * self.stride * l];
+            let mut scales = vec![0.0f32; groups * bpr * l];
+            for j in 0..self.rows {
+                let (g, lane) = (j / l, j % l);
+                let src = &self.codes[j * self.stride..(j + 1) * self.stride];
+                let dst = &mut codes[g * self.stride * l..];
+                for (t, &c) in src.iter().enumerate() {
+                    dst[t * l + lane] = c;
+                }
+                let ssrc = &self.scales[j * bpr..(j + 1) * bpr];
+                let sdst = &mut scales[g * bpr * l..];
+                for (b, &s) in ssrc.iter().enumerate() {
+                    sdst[b * l + lane] = s;
+                }
+            }
+            SimdPanels { codes, scales }
         })
     }
 }
@@ -519,26 +582,44 @@ pub struct PackedGemm {
     /// (`tile_n × k` bytes) is streamed per activation row, so size it
     /// to keep the tile L2-resident.
     pub tile_n: usize,
-    /// Worker-thread cap; output rows are split across workers.
+    /// Worker-thread cap; output rows are split across workers (or
+    /// output columns, when there are fewer rows than workers).
     pub threads: usize,
     /// Minimum `m·k·n` product before threads are used.
     pub par_threshold: usize,
+    /// Vector instruction set for the FP inner kernels
+    /// ([`crate::util::simd`]; DESIGN.md §13). Any level is clamped to
+    /// what the host supports at dispatch time; every level produces
+    /// bit-identical results, so this knob — like the others — changes
+    /// only speed.
+    pub simd: SimdLevel,
 }
 
 impl PackedGemm {
     /// Production configuration: 64-column tiles, one worker per logical
-    /// CPU, threading from 2 Mi multiply-accumulates up.
+    /// CPU, threading from 2 Mi multiply-accumulates up, vector kernels
+    /// per the process-wide [`simd::active`] dispatch.
     pub fn auto() -> PackedGemm {
         PackedGemm {
             tile_n: 64,
             threads: par::max_threads(),
             par_threshold: 1 << 21,
+            simd: simd::active(),
         }
     }
 
     /// Single-threaded variant (benches isolate tiling from threading).
     pub fn serial() -> PackedGemm {
         PackedGemm { threads: 1, ..PackedGemm::auto() }
+    }
+
+    /// This engine pinned to an explicit [`SimdLevel`] — the hook the
+    /// differential suites and the bench's `simd` axis use to compare
+    /// instruction sets inside one process, independent of the latched
+    /// `MICROSCALE_SIMD`.
+    pub fn with_simd(mut self, level: SimdLevel) -> PackedGemm {
+        self.simd = level;
+        self
     }
 
     /// Multiply `x` (`m × k`) by the prepacked transposed weights `w`
@@ -568,7 +649,11 @@ impl PackedGemm {
             w.cols
         );
         let (m, n, k) = (x.rows, w.rows, x.cols);
-        if m * n == 0 {
+        if m * n == 0 || k == 0 {
+            // k == 0 is an explicit short-circuit, not a reliance on
+            // empty loop bounds: a zero-length contraction is the empty
+            // sum, i.e. an all-zero m×n result on every engine path
+            // (regression-pinned in rust/tests/packed_gemm.rs)
             return Ok(vec![0.0f32; m * n]);
         }
         let fp_elems = matches!(x.scheme.elem, ElemFormat::Fp(_));
@@ -581,22 +666,67 @@ impl PackedGemm {
         }
         let engine = Engine::build(x);
         let tile_n = self.tile_n.max(1);
-        let run_panel = |row0: usize, chunk: &mut [f32]| match &engine {
-            Engine::ProdLut4(plut) => {
-                prod_panel::<4, 256>(x, w, plut, row0, chunk, tile_n)
+        // resolve the vector level for this (engine, host) pair: FP
+        // kernels have AVX2 bodies (FP4 additionally a NEON one);
+        // integer psums and unsupported hosts run scalar. DESIGN.md §13
+        // tabulates exactly this mapping.
+        let level = match (self.simd.clamped(), &engine) {
+            (SimdLevel::Avx2, Engine::IntPsum(_)) => SimdLevel::Scalar,
+            (SimdLevel::Neon, Engine::ProdLut4(_)) => SimdLevel::Neon,
+            (SimdLevel::Neon, _) => SimdLevel::Scalar,
+            (l, _) => l,
+        };
+        if level != SimdLevel::Scalar {
+            // build the interleaved weight panels once, outside the
+            // worker split (OnceLock makes racing builds safe, but
+            // doing it here keeps the workers compute-only)
+            let _ = w.simd_panels();
+        }
+        // every path accumulates each output's terms in the same
+        // ascending-t order, one (r, j) range per worker — which rows
+        // or columns a worker owns can never change a byte
+        let run = |r0: usize,
+                   r1: usize,
+                   j0: usize,
+                   j1: usize,
+                   out: &mut [f32],
+                   out_cols: usize| {
+            match (&engine, level) {
+                #[cfg(target_arch = "x86_64")]
+                (Engine::ProdLut4(plut), SimdLevel::Avx2) => unsafe {
+                    prod_panel_fp4_avx2(x, w, plut, r0, r1, j0, j1, out, out_cols)
+                },
+                #[cfg(target_arch = "x86_64")]
+                (Engine::ProdLut6(plut), SimdLevel::Avx2) => unsafe {
+                    prod_panel_fp6_avx2(x, w, plut, r0, r1, j0, j1, out, out_cols)
+                },
+                #[cfg(target_arch = "x86_64")]
+                (Engine::TwoLut(lut), SimdLevel::Avx2) => unsafe {
+                    twolut_panel_avx2(x, w, lut, r0, r1, j0, j1, out, out_cols)
+                },
+                #[cfg(target_arch = "aarch64")]
+                (Engine::ProdLut4(plut), SimdLevel::Neon) => unsafe {
+                    prod_panel_fp4_neon(x, w, plut, r0, r1, j0, j1, out, out_cols)
+                },
+                (Engine::ProdLut4(plut), _) => prod_panel::<4, 256>(
+                    x, w, plut, r0, r1, j0, j1, out, out_cols, tile_n,
+                ),
+                (Engine::ProdLut6(plut), _) => prod_panel::<6, 4096>(
+                    x, w, plut, r0, r1, j0, j1, out, out_cols, tile_n,
+                ),
+                (Engine::TwoLut(lut), _) => twolut_panel(
+                    x, w, lut, r0, r1, j0, j1, out, out_cols, tile_n,
+                ),
+                (Engine::IntPsum(ilut), _) => int_panel(
+                    x, w, ilut, r0, r1, j0, j1, out, out_cols, tile_n,
+                ),
             }
-            Engine::ProdLut6(plut) => {
-                prod_panel::<6, 4096>(x, w, plut, row0, chunk, tile_n)
-            }
-            Engine::TwoLut(lut) => twolut_panel(x, w, lut, row0, chunk, tile_n),
-            Engine::IntPsum(ilut) => int_panel(x, w, ilut, row0, chunk, tile_n),
         };
         let mut out = vec![0.0f32; m * n];
         // single-row activations (every KV-cached decode step lands
-        // here) and sub-threshold shapes skip the row-panel threading
-        // machinery entirely: threads split output *rows*, so one row
-        // can never fan out, and the setup cost is pure overhead on the
-        // m = 1 hot path. Same panel code, same accumulation order —
+        // here) and sub-threshold shapes skip the threading machinery
+        // entirely: the setup cost is pure overhead on the m = 1 hot
+        // path. Same panel code, same accumulation order —
         // bit-identical either way (packed_gemm tests pin it).
         let threads = if m == 1 {
             1
@@ -608,14 +738,57 @@ impl PackedGemm {
             )
         };
         if threads <= 1 {
-            run_panel(0, &mut out);
-        } else {
+            run(0, m, 0, n, &mut out, n);
+        } else if threads <= m {
             par::par_chunks_mut(&mut out, n, threads, |off, chunk| {
-                run_panel(off / n, chunk)
+                let r0 = off / n;
+                run(r0, r0 + chunk.len() / n, 0, n, chunk, n)
             });
+        } else {
+            // small-m, wide-n shapes (decode/prefill tails): a row
+            // split can never use more than m workers, so fan out over
+            // the *column* axis instead. Workers compute disjoint
+            // lane-group-aligned column ranges into private buffers,
+            // scattered back in fixed order — each output is produced
+            // by exactly one worker running the identical per-output
+            // term sequence, so the split stays bit-identical
+            // (pinned for m ∈ {2,3} in rust/tests/packed_gemm.rs).
+            let ranges = split_columns(n, threads);
+            let parts = par::par_map(ranges.clone(), threads, |(j0, j1)| {
+                let mut buf = vec![0.0f32; m * (j1 - j0)];
+                run(0, m, j0, j1, &mut buf, j1 - j0);
+                buf
+            });
+            for ((j0, j1), part) in ranges.into_iter().zip(parts) {
+                let width = j1 - j0;
+                for i in 0..m {
+                    out[i * n + j0..i * n + j1]
+                        .copy_from_slice(&part[i * width..(i + 1) * width]);
+                }
+            }
         }
         Ok(out)
     }
+}
+
+/// Partition `0..n` into at most `parts` contiguous column ranges,
+/// aligned to [`SIMD_LANES`] lane groups (except the final boundary at
+/// `n`) so every worker's range starts on a vector-store boundary.
+/// Alignment is a speed concern only — outputs are computed
+/// independently, so any split yields identical bytes.
+fn split_columns(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let groups = n.div_ceil(SIMD_LANES);
+    let parts = parts.min(groups).max(1);
+    let base = groups / parts;
+    let extra = groups % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut g0 = 0usize;
+    for p in 0..parts {
+        let g1 = g0 + base + usize::from(p < extra);
+        out.push(((g0 * SIMD_LANES).min(n), (g1 * SIMD_LANES).min(n)));
+        g0 = g1;
+    }
+    out
 }
 
 impl Default for PackedGemm {
@@ -681,27 +854,29 @@ fn fusion_safe(x: &GemmOperand, w: &GemmOperand) -> bool {
 /// `N = 1 << (2·EB)` entries). Each output's terms are accumulated in
 /// ascending `t` with one rounded add per term — the exact op sequence
 /// of [`matmul_t`] on the decoded operands (module docs).
+#[allow(clippy::too_many_arguments)]
 fn prod_panel<const EB: usize, const N: usize>(
     x: &GemmOperand,
     w: &GemmOperand,
     plut: &[f32; N],
-    row0: usize,
+    r0: usize,
+    r1: usize,
+    j0: usize,
+    j1: usize,
     out: &mut [f32],
+    out_cols: usize,
     tile_n: usize,
 ) {
     let mask = (1usize << EB) - 1;
-    let n = w.rows;
     let bpr = x.blocks_per_row;
     let bs = x.scheme.block_size;
     let stride = x.stride;
-    let nrows = out.len() / n;
-    for jt0 in (0..n).step_by(tile_n) {
-        let jt1 = (jt0 + tile_n).min(n);
-        for i in 0..nrows {
-            let r = row0 + i;
+    for jt0 in (j0..j1).step_by(tile_n) {
+        let jt1 = (jt0 + tile_n).min(j1);
+        for r in r0..r1 {
             let cx = &x.codes[r * stride..(r + 1) * stride];
             let sx = &x.scales[r * bpr..(r + 1) * bpr];
-            let orow = &mut out[i * n..(i + 1) * n];
+            let orow = &mut out[(r - r0) * out_cols..][..out_cols];
             let mut j = jt0;
             // 4-wide register blocking: four independent accumulator
             // chains hide the f32 add latency the naive loop serializes on
@@ -729,10 +904,10 @@ fn prod_panel<const EB: usize, const N: usize>(
                         acc[3] += ss[3] * plut[ix | ((cw3[t] as usize) & mask)];
                     }
                 }
-                orow[j] = acc[0];
-                orow[j + 1] = acc[1];
-                orow[j + 2] = acc[2];
-                orow[j + 3] = acc[3];
+                orow[j - j0] = acc[0];
+                orow[j + 1 - j0] = acc[1];
+                orow[j + 2 - j0] = acc[2];
+                orow[j + 3 - j0] = acc[3];
                 j += 4;
             }
             while j < jt1 {
@@ -748,7 +923,7 @@ fn prod_panel<const EB: usize, const N: usize>(
                         acc += ss * plut[ix | ((cw[t] as usize) & mask)];
                     }
                 }
-                orow[j] = acc;
+                orow[j - j0] = acc;
                 j += 1;
             }
         }
@@ -758,26 +933,28 @@ fn prod_panel<const EB: usize, const N: usize>(
 /// FP8 inner kernel: two 256-entry decode LUT loads per term instead of
 /// one 256 KiB product table. `ss·(lx·lw)` is exact at ≤ 24 significand
 /// bits, so the bit-exactness argument is unchanged.
+#[allow(clippy::too_many_arguments)]
 fn twolut_panel(
     x: &GemmOperand,
     w: &GemmOperand,
     lut: &[f32; 256],
-    row0: usize,
+    r0: usize,
+    r1: usize,
+    j0: usize,
+    j1: usize,
     out: &mut [f32],
+    out_cols: usize,
     tile_n: usize,
 ) {
-    let n = w.rows;
     let bpr = x.blocks_per_row;
     let bs = x.scheme.block_size;
     let stride = x.stride;
-    let nrows = out.len() / n;
-    for jt0 in (0..n).step_by(tile_n) {
-        let jt1 = (jt0 + tile_n).min(n);
-        for i in 0..nrows {
-            let r = row0 + i;
+    for jt0 in (j0..j1).step_by(tile_n) {
+        let jt1 = (jt0 + tile_n).min(j1);
+        for r in r0..r1 {
             let cx = &x.codes[r * stride..(r + 1) * stride];
             let sx = &x.scales[r * bpr..(r + 1) * bpr];
-            let orow = &mut out[i * n..(i + 1) * n];
+            let orow = &mut out[(r - r0) * out_cols..][..out_cols];
             let mut j = jt0;
             while j + 2 <= jt1 {
                 let cw0 = &w.codes[j * stride..(j + 1) * stride];
@@ -796,8 +973,8 @@ fn twolut_panel(
                         acc[1] += ss[1] * (lx * lut[cw1[t] as usize]);
                     }
                 }
-                orow[j] = acc[0];
-                orow[j + 1] = acc[1];
+                orow[j - j0] = acc[0];
+                orow[j + 1 - j0] = acc[1];
                 j += 2;
             }
             while j < jt1 {
@@ -812,7 +989,7 @@ fn twolut_panel(
                         acc += ss * (lut[cx[t] as usize] * lut[cw[t] as usize]);
                     }
                 }
-                orow[j] = acc;
+                orow[j - j0] = acc;
                 j += 1;
             }
         }
@@ -823,26 +1000,28 @@ fn twolut_panel(
 /// fused `acc += ss · psum` per block — the PE datapath of
 /// [`crate::hw::pe`] verbatim. Pad codes decode to integer 0, so the
 /// loop runs whole (padded) blocks with a constant trip count.
+#[allow(clippy::too_many_arguments)]
 fn int_panel(
     x: &GemmOperand,
     w: &GemmOperand,
     ilut: &[i32; 256],
-    row0: usize,
+    r0: usize,
+    r1: usize,
+    j0: usize,
+    j1: usize,
     out: &mut [f32],
+    out_cols: usize,
     tile_n: usize,
 ) {
-    let n = w.rows;
     let bpr = x.blocks_per_row;
     let bs = x.scheme.block_size;
     let stride = x.stride;
-    let nrows = out.len() / n;
-    for jt0 in (0..n).step_by(tile_n) {
-        let jt1 = (jt0 + tile_n).min(n);
-        for i in 0..nrows {
-            let r = row0 + i;
+    for jt0 in (j0..j1).step_by(tile_n) {
+        let jt1 = (jt0 + tile_n).min(j1);
+        for r in r0..r1 {
             let cx = &x.codes[r * stride..(r + 1) * stride];
             let sx = &x.scales[r * bpr..(r + 1) * bpr];
-            let orow = &mut out[i * n..(i + 1) * n];
+            let orow = &mut out[(r - r0) * out_cols..][..out_cols];
             for j in jt0..jt1 {
                 let cw = &w.codes[j * stride..(j + 1) * stride];
                 let sw = &w.scales[j * bpr..(j + 1) * bpr];
@@ -855,7 +1034,264 @@ fn int_panel(
                     }
                     acc += (sx[b] * sw[b]) * psum as f32;
                 }
-                orow[j] = acc;
+                orow[j - j0] = acc;
+            }
+        }
+    }
+}
+
+/// AVX2 FP4 kernel: one lane group (8 output columns) per accumulator
+/// register, weights read from the interleaved [`SimdPanels`]. Each
+/// lane runs the scalar single-column kernel's exact op sequence —
+/// `ss = sx[b] * sw[b]` (one rounded mul), then ascending-`t`
+/// `acc += ss * plut[(cx[t] << 4) | cw[t]]` (one rounded mul + add per
+/// term) — so bit-equality with [`prod_panel`] is structural, not a
+/// rounding theorem. The 16-entry product-LUT row selected by the
+/// activation code is resolved per lane via [`simd::x86::lut16`]
+/// (`vpermps` + blend), the in-register form of the OCP MX FP4 code
+/// space. No FMA anywhere: fusing mul+add would change results.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+unsafe fn prod_panel_fp4_avx2(
+    x: &GemmOperand,
+    w: &GemmOperand,
+    plut: &[f32; 256],
+    r0: usize,
+    r1: usize,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+    out_cols: usize,
+) {
+    use core::arch::x86_64::*;
+    debug_assert_eq!(j0 % 8, 0, "column ranges are lane-group aligned");
+    let panels = w.simd_panels();
+    let bpr = x.blocks_per_row;
+    let bs = x.scheme.block_size;
+    let stride = x.stride;
+    let mask = _mm256_set1_epi32(15);
+    for g in (j0 / 8)..j1.div_ceil(8) {
+        let jlo = g * 8;
+        let jhi = (jlo + 8).min(j1);
+        let pc = &panels.codes[g * stride * 8..][..stride * 8];
+        let ps = &panels.scales[g * bpr * 8..][..bpr * 8];
+        for r in r0..r1 {
+            let cx = &x.codes[r * stride..][..stride];
+            let sx = &x.scales[r * bpr..][..bpr];
+            let mut acc = _mm256_setzero_ps();
+            for b in 0..bpr {
+                let sw = _mm256_loadu_ps(ps.as_ptr().add(b * 8));
+                let ss = _mm256_mul_ps(_mm256_set1_ps(sx[b]), sw);
+                let t0 = b * bs;
+                let tl = bs.min(x.cols - t0);
+                for t in t0..t0 + tl {
+                    let ix = ((cx[t] as usize) & 15) << 4;
+                    let lo = _mm256_loadu_ps(plut.as_ptr().add(ix));
+                    let hi = _mm256_loadu_ps(plut.as_ptr().add(ix + 8));
+                    let idx = _mm256_and_si256(
+                        simd::x86::load8_u8_i32(pc.as_ptr().add(t * 8)),
+                        mask,
+                    );
+                    let p = simd::x86::lut16(lo, hi, idx);
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(ss, p));
+                }
+            }
+            let orow = &mut out[(r - r0) * out_cols..][..out_cols];
+            if jhi - jlo == 8 {
+                _mm256_storeu_ps(orow.as_mut_ptr().add(jlo - j0), acc);
+            } else {
+                // padded lanes (scale 0.0, code 0) accumulate exact
+                // zeros; mask them off on the partial store
+                let mut tmp = [0.0f32; 8];
+                _mm256_storeu_ps(tmp.as_mut_ptr(), acc);
+                orow[jlo - j0..][..jhi - jlo]
+                    .copy_from_slice(&tmp[..jhi - jlo]);
+            }
+        }
+    }
+}
+
+/// AVX2 FP6 kernel: identical loop structure to [`prod_panel_fp4_avx2`]
+/// but the 64-entry product-LUT row no longer fits a register shuffle,
+/// so lanes gather from `plut[(cx[t] & 63) << 6 ..]` with `vgatherdps`.
+/// Same per-lane op sequence as the scalar kernel — bit-identical.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+unsafe fn prod_panel_fp6_avx2(
+    x: &GemmOperand,
+    w: &GemmOperand,
+    plut: &[f32; 4096],
+    r0: usize,
+    r1: usize,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+    out_cols: usize,
+) {
+    use core::arch::x86_64::*;
+    debug_assert_eq!(j0 % 8, 0, "column ranges are lane-group aligned");
+    let panels = w.simd_panels();
+    let bpr = x.blocks_per_row;
+    let bs = x.scheme.block_size;
+    let stride = x.stride;
+    let mask = _mm256_set1_epi32(63);
+    for g in (j0 / 8)..j1.div_ceil(8) {
+        let jlo = g * 8;
+        let jhi = (jlo + 8).min(j1);
+        let pc = &panels.codes[g * stride * 8..][..stride * 8];
+        let ps = &panels.scales[g * bpr * 8..][..bpr * 8];
+        for r in r0..r1 {
+            let cx = &x.codes[r * stride..][..stride];
+            let sx = &x.scales[r * bpr..][..bpr];
+            let mut acc = _mm256_setzero_ps();
+            for b in 0..bpr {
+                let sw = _mm256_loadu_ps(ps.as_ptr().add(b * 8));
+                let ss = _mm256_mul_ps(_mm256_set1_ps(sx[b]), sw);
+                let t0 = b * bs;
+                let tl = bs.min(x.cols - t0);
+                for t in t0..t0 + tl {
+                    let ix = ((cx[t] as usize) & 63) << 6;
+                    let idx = _mm256_and_si256(
+                        simd::x86::load8_u8_i32(pc.as_ptr().add(t * 8)),
+                        mask,
+                    );
+                    let p =
+                        _mm256_i32gather_ps::<4>(plut.as_ptr().add(ix), idx);
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(ss, p));
+                }
+            }
+            let orow = &mut out[(r - r0) * out_cols..][..out_cols];
+            if jhi - jlo == 8 {
+                _mm256_storeu_ps(orow.as_mut_ptr().add(jlo - j0), acc);
+            } else {
+                let mut tmp = [0.0f32; 8];
+                _mm256_storeu_ps(tmp.as_mut_ptr(), acc);
+                orow[jlo - j0..][..jhi - jlo]
+                    .copy_from_slice(&tmp[..jhi - jlo]);
+            }
+        }
+    }
+}
+
+/// AVX2 FP8 kernel: the dual-256-entry-LUT path vectorized. The
+/// activation level `lx = lut[cx[t]]` broadcasts (it is shared by the
+/// whole lane group); the weight levels gather per lane; then
+/// `acc += ss * (lx * lw)` with the scalar kernel's exact mul/add
+/// sequence and parenthesization — bit-identical to [`twolut_panel`].
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "avx2")]
+unsafe fn twolut_panel_avx2(
+    x: &GemmOperand,
+    w: &GemmOperand,
+    lut: &[f32; 256],
+    r0: usize,
+    r1: usize,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+    out_cols: usize,
+) {
+    use core::arch::x86_64::*;
+    debug_assert_eq!(j0 % 8, 0, "column ranges are lane-group aligned");
+    let panels = w.simd_panels();
+    let bpr = x.blocks_per_row;
+    let bs = x.scheme.block_size;
+    let stride = x.stride;
+    for g in (j0 / 8)..j1.div_ceil(8) {
+        let jlo = g * 8;
+        let jhi = (jlo + 8).min(j1);
+        let pc = &panels.codes[g * stride * 8..][..stride * 8];
+        let ps = &panels.scales[g * bpr * 8..][..bpr * 8];
+        for r in r0..r1 {
+            let cx = &x.codes[r * stride..][..stride];
+            let sx = &x.scales[r * bpr..][..bpr];
+            let mut acc = _mm256_setzero_ps();
+            for b in 0..bpr {
+                let sw = _mm256_loadu_ps(ps.as_ptr().add(b * 8));
+                let ss = _mm256_mul_ps(_mm256_set1_ps(sx[b]), sw);
+                let t0 = b * bs;
+                let tl = bs.min(x.cols - t0);
+                for t in t0..t0 + tl {
+                    let lx = _mm256_set1_ps(lut[cx[t] as usize]);
+                    let idx = simd::x86::load8_u8_i32(pc.as_ptr().add(t * 8));
+                    let lw = _mm256_i32gather_ps::<4>(lut.as_ptr(), idx);
+                    acc = _mm256_add_ps(
+                        acc,
+                        _mm256_mul_ps(ss, _mm256_mul_ps(lx, lw)),
+                    );
+                }
+            }
+            let orow = &mut out[(r - r0) * out_cols..][..out_cols];
+            if jhi - jlo == 8 {
+                _mm256_storeu_ps(orow.as_mut_ptr().add(jlo - j0), acc);
+            } else {
+                let mut tmp = [0.0f32; 8];
+                _mm256_storeu_ps(tmp.as_mut_ptr(), acc);
+                orow[jlo - j0..][..jhi - jlo]
+                    .copy_from_slice(&tmp[..jhi - jlo]);
+            }
+        }
+    }
+}
+
+/// NEON FP4 kernel: one lane group (4 output columns) per accumulator,
+/// the 16-entry product-LUT row resolved with `vqtbl4q_u8` over the
+/// four table registers from [`simd::neon::lut16_table`]. Per-lane op
+/// sequence matches [`prod_panel`] exactly (`vmulq_n_f32` computes
+/// `sw[b] * sx[b]`, the same rounded product as the scalar
+/// `sx[b] * sw[b]`); no FMA — bit-identical.
+#[cfg(target_arch = "aarch64")]
+#[allow(clippy::too_many_arguments)]
+#[target_feature(enable = "neon")]
+unsafe fn prod_panel_fp4_neon(
+    x: &GemmOperand,
+    w: &GemmOperand,
+    plut: &[f32; 256],
+    r0: usize,
+    r1: usize,
+    j0: usize,
+    j1: usize,
+    out: &mut [f32],
+    out_cols: usize,
+) {
+    use core::arch::aarch64::*;
+    debug_assert_eq!(j0 % 4, 0, "column ranges are lane-group aligned");
+    let panels = w.simd_panels();
+    let bpr = x.blocks_per_row;
+    let bs = x.scheme.block_size;
+    let stride = x.stride;
+    for g in (j0 / 4)..j1.div_ceil(4) {
+        let jlo = g * 4;
+        let jhi = (jlo + 4).min(j1);
+        let pc = &panels.codes[g * stride * 4..][..stride * 4];
+        let ps = &panels.scales[g * bpr * 4..][..bpr * 4];
+        for r in r0..r1 {
+            let cx = &x.codes[r * stride..][..stride];
+            let sx = &x.scales[r * bpr..][..bpr];
+            let mut acc = vdupq_n_f32(0.0);
+            for b in 0..bpr {
+                let ss = vmulq_n_f32(vld1q_f32(ps.as_ptr().add(b * 4)), sx[b]);
+                let t0 = b * bs;
+                let tl = bs.min(x.cols - t0);
+                for t in t0..t0 + tl {
+                    let ix = ((cx[t] as usize) & 15) << 4;
+                    let tbl = simd::neon::lut16_table(plut.as_ptr().add(ix));
+                    let idx = simd::neon::lut16_indices(pc.as_ptr().add(t * 4));
+                    let p = vreinterpretq_f32_u8(vqtbl4q_u8(tbl, idx));
+                    acc = vaddq_f32(acc, vmulq_f32(ss, p));
+                }
+            }
+            let orow = &mut out[(r - r0) * out_cols..][..out_cols];
+            if jhi - jlo == 4 {
+                vst1q_f32(orow.as_mut_ptr().add(jlo - j0), acc);
+            } else {
+                let mut tmp = [0.0f32; 4];
+                vst1q_f32(tmp.as_mut_ptr(), acc);
+                orow[jlo - j0..][..jhi - jlo]
+                    .copy_from_slice(&tmp[..jhi - jlo]);
             }
         }
     }

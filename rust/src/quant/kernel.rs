@@ -280,6 +280,9 @@ fn block_absmax(blk: &[f32]) -> f32 {
 
 /// The kernel bulk call sites use: [`ChunkedKernel::auto`], unless the
 /// `MICROSCALE_KERNEL=scalar` environment variable forces the reference.
+/// The env is **latched**: read once per process on the first call and
+/// cached in a `OnceLock` (this runs on dispatch hot paths), so set it
+/// before the first quantization; later changes are ignored.
 pub fn default_kernel() -> &'static dyn QuantKernel {
     static SCALAR: ScalarKernel = ScalarKernel;
     static CHUNKED: OnceLock<ChunkedKernel> = OnceLock::new();

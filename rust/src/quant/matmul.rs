@@ -50,12 +50,23 @@ pub enum GemmPath {
 /// multiple of the block size so flat and row-aligned blockings agree.
 /// `MICROSCALE_GEMM=reference` / `=packed` forces one side (debug aid;
 /// forcing `packed` on unaligned `k` changes which elements share a
-/// block, i.e. the quantization itself).
+/// block, i.e. the quantization itself). The env is **latched**: it is
+/// read once per process on the first dispatch and cached — this
+/// function runs per GEMM call, and a syscall-backed `env::var` on that
+/// hot path cost real decode throughput. Set it before the first
+/// matmul; later changes have no effect.
 pub fn gemm_path_for(scheme: &QuantScheme, k: usize) -> GemmPath {
-    match std::env::var("MICROSCALE_GEMM").as_deref() {
-        Ok("reference") => return GemmPath::Reference,
-        Ok("packed") => return GemmPath::PackedNative,
-        _ => {}
+    static FORCED: std::sync::OnceLock<Option<GemmPath>> =
+        std::sync::OnceLock::new();
+    let forced = FORCED.get_or_init(|| {
+        match std::env::var("MICROSCALE_GEMM").as_deref() {
+            Ok("reference") => Some(GemmPath::Reference),
+            Ok("packed") => Some(GemmPath::PackedNative),
+            _ => None,
+        }
+    });
+    if let Some(path) = forced {
+        return *path;
     }
     let aligned = scheme.block_size > 0 && k % scheme.block_size == 0;
     let fp_elems = matches!(scheme.elem, ElemFormat::Fp(_));

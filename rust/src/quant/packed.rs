@@ -142,13 +142,13 @@ pub(crate) fn encode_block(
     codes: &mut [u8],
 ) -> crate::Result<f32> {
     let sign_shift = elem_codec.mag_bits();
-    let mut absmax = 0.0f32;
-    for &v in block {
-        let a = (v * s_t).abs();
-        if a > absmax {
-            absmax = a;
-        }
-    }
+    // SIMD-dispatched absmax fold (crate::util::simd) — the one
+    // data-parallel stage of the encode pipeline. Each |v·s_t| is a
+    // single rounded op per element and max is order-free over the
+    // non-NaN results, so every level returns identical bits; the
+    // cast + binary-search element encode below stays scalar (its
+    // per-element control flow does not vectorize cheaply).
+    let absmax = crate::util::simd::absmax_scaled(block, s_t);
     let s = scheme.scale.cast(absmax / scheme.elem.max_val());
     if s > 0.0 {
         for (cd, &v) in codes.iter_mut().zip(block) {

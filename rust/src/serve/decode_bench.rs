@@ -450,6 +450,9 @@ pub fn run(opts: &DecodeBenchOpts) -> crate::Result<Json> {
     let report = json::obj(vec![
         ("bench", json::s("decode")),
         ("smoke", Json::Bool(opts.smoke)),
+        // the vector kernel every packed GEMM in this run dispatched to
+        // (ISSUE 7 simd axis; "scalar" = no vector unit or pinned off)
+        ("simd_kernel", json::s(crate::util::simd::kernel_name())),
         (
             "model",
             json::obj(vec![

@@ -376,6 +376,9 @@ pub fn run(opts: &KvBenchOpts) -> crate::Result<Json> {
     let report = json::obj(vec![
         ("bench", json::s("kv")),
         ("smoke", Json::Bool(opts.smoke)),
+        // the vector kernel the KV page codec (and every packed GEMM)
+        // dispatched to in this run (ISSUE 7 simd axis)
+        ("simd_kernel", json::s(crate::util::simd::kernel_name())),
         (
             "model",
             json::obj(vec![

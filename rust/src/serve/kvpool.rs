@@ -60,6 +60,7 @@ use anyhow::ensure;
 
 use crate::quant::packed::{encode_block, pack_codes, unpack_codes, LevelCodec};
 use crate::quant::QuantScheme;
+use crate::util::simd;
 use crate::runtime::artifacts::ModelDims;
 use crate::runtime::qconfig::PerLayerQConfig;
 
@@ -204,12 +205,22 @@ impl LayerCodec {
                             scale_region[bi * 4 + 3],
                         ]),
                     };
-                    for (j, v) in block.iter_mut().enumerate() {
-                        // same op order as fake_quant: s * (±level); a
-                        // collapsed block (s = 0) fills +0.0 because its
-                        // codes were written as zero
-                        let c = codes[bi * bs + j];
-                        *v = if s > 0.0 { s * lut[c as usize] } else { 0.0 };
+                    // same op order as fake_quant: s * (±level), one
+                    // rounded multiply per element, so any lane width
+                    // computes identical bits ([`crate::util::simd`]
+                    // dispatches: FP4's 16-entry LUT as an in-register
+                    // shuffle, FP6/FP8 as a gather). A collapsed block
+                    // (s = 0) fills +0.0 — its codes were written as
+                    // zero.
+                    if s > 0.0 {
+                        let bc = &codes[bi * bs..bi * bs + block.len()];
+                        if *elem_bits == 4 {
+                            simd::scale_lut16(s, bc, lut, block);
+                        } else {
+                            simd::scale_lut(s, bc, lut, block);
+                        }
+                    } else {
+                        block.fill(0.0);
                     }
                 }
             }
@@ -397,6 +408,35 @@ impl KvPool {
     /// contract applies to the whole model).
     pub fn is_exact(&self) -> bool {
         self.layers.iter().all(|l| matches!(l.kind, CodecKind::Exact))
+    }
+
+    /// Push `rows` (`n · d_model` values, row-major) through `layer`'s
+    /// page codec — encode then decode, no page allocation — returning
+    /// what a cached read would see. This is the codec's contract
+    /// surface (`fake_quant` of each row under the layer scheme, bit
+    /// for bit, for Mx; identity for Exact) exposed directly so the
+    /// differential suite (`rust/tests/simd.rs`) can compare it across
+    /// `MICROSCALE_SIMD` levels without standing up sequences.
+    pub fn codec_roundtrip(
+        &self,
+        layer: usize,
+        rows: &[f32],
+    ) -> crate::Result<Vec<f32>> {
+        let d = self.d_model;
+        ensure!(
+            rows.len() % d == 0,
+            "rows length {} is not a multiple of d_model {d}",
+            rows.len()
+        );
+        let lc = &self.layers[layer];
+        let mut buf = vec![0u8; lc.row_bytes];
+        let mut codes = vec![0u8; d];
+        let mut out = vec![0.0f32; rows.len()];
+        for (row, orow) in rows.chunks(d).zip(out.chunks_mut(d)) {
+            lc.encode_row(row, &mut buf, &mut codes)?;
+            lc.decode_row(&buf, orow, &mut codes);
+        }
+        Ok(out)
     }
 
     /// Exact page bytes that growing a sequence from `existing` to

@@ -39,7 +39,10 @@
 //!   plain f32 GEMM on stored transposed weights.
 //!
 //! Set `MICROSCALE_SERVE=reference` to force every layer onto the
-//! reference path when bisecting a discrepancy.
+//! reference path when bisecting a discrepancy. The variable is
+//! **latched** — read once per process at the first layer build and
+//! cached (like `MICROSCALE_KERNEL`, `MICROSCALE_GEMM` and
+//! `MICROSCALE_SIMD`); set it before the model is built.
 //!
 //! # Batching invariance
 //!
@@ -139,8 +142,15 @@ impl Linear {
             });
         }
         let scheme = cfg.scheme(block_size);
-        let forced_ref =
-            std::env::var("MICROSCALE_SERVE").as_deref() == Ok("reference");
+        // latched: read once per process (Linear::build runs per layer
+        // per model build, and model rebuilds happen inside sweeps).
+        // Set MICROSCALE_SERVE before the first build; changes after
+        // that are ignored.
+        static FORCED_REF: std::sync::OnceLock<bool> =
+            std::sync::OnceLock::new();
+        let forced_ref = *FORCED_REF.get_or_init(|| {
+            std::env::var("MICROSCALE_SERVE").as_deref() == Ok("reference")
+        });
         // the packed engine is used only where it is provably
         // bit-identical to the reference (minifloat elements, no eq. 11
         // pre-scaling, both operands quantized, aligned contraction)

@@ -9,6 +9,7 @@ pub mod check;
 pub mod cli;
 pub mod json;
 pub mod par;
+pub mod simd;
 pub mod timer;
 
 /// 64-bit FNV-1a offset basis (shared by every content digest in the

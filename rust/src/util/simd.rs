@@ -1,0 +1,522 @@
+//! Runtime SIMD dispatch for the packed hot paths.
+//!
+//! Every vectorized kernel in the crate — the packed-GEMM inner loops
+//! ([`crate::quant::gemm`]), the per-block absmax of the shared encode
+//! pipeline ([`crate::quant::packed`]), and the KV page-codec row
+//! decode ([`crate::serve::kvpool`]) — selects its instruction set
+//! through this one module, so the whole process answers "which kernels
+//! are we running?" with a single word ([`kernel_name`]).
+//!
+//! # Dispatch
+//!
+//! [`active`] picks the best [`SimdLevel`] the host supports, **once
+//! per process** (latched in a `OnceLock`, like `MICROSCALE_KERNEL` and
+//! `MICROSCALE_GEMM`): AVX2 on x86_64 when `is_x86_feature_detected!`
+//! says so, NEON on aarch64 (baseline ISA there), scalar everywhere
+//! else. `MICROSCALE_SIMD=scalar|avx2|neon|auto` overrides the choice
+//! for bisection — the env is read at the *first* dispatch and latched,
+//! so set it before the process starts, not mid-run. A forced level the
+//! host cannot execute falls back to scalar with a `log` warning rather
+//! than faulting.
+//!
+//! # Bit-exactness
+//!
+//! The vector kernels are **bit-identical** to the scalar reference by
+//! construction, not by tolerance: they vectorize across *independent
+//! outputs* (output columns in the GEMM, elements of a decoded row in
+//! the codec) while keeping each output's own operation sequence —
+//! operand values, rounding steps, accumulation order — exactly the
+//! scalar kernel's. No FMA, no reassociation. DESIGN.md §13 states the
+//! lane-group argument in full; `rust/tests/simd.rs` pins it
+//! differentially across the format × block-size × shard grid.
+//!
+//! The primitives in this module (`*_with` variants) take an explicit
+//! level so the differential suites can compare instruction sets inside
+//! one process regardless of what [`active`] latched.
+
+use std::sync::OnceLock;
+
+/// An instruction-set level the dispatcher can select.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdLevel {
+    /// Portable scalar loops — always available, the reference.
+    Scalar,
+    /// 256-bit AVX2 kernels (x86_64, runtime-detected).
+    Avx2,
+    /// 128-bit NEON kernels (aarch64, where NEON is baseline).
+    Neon,
+}
+
+impl SimdLevel {
+    /// Stable lowercase kernel name — the vocabulary of
+    /// `MICROSCALE_SIMD` and of the `simd` fields in the bench reports.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdLevel::Scalar => "scalar",
+            SimdLevel::Avx2 => "avx2",
+            SimdLevel::Neon => "neon",
+        }
+    }
+
+    /// Whether this host can actually execute the level's kernels.
+    pub fn supported(self) -> bool {
+        match self {
+            SimdLevel::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            SimdLevel::Avx2 => std::arch::is_x86_feature_detected!("avx2"),
+            #[cfg(not(target_arch = "x86_64"))]
+            SimdLevel::Avx2 => false,
+            SimdLevel::Neon => cfg!(target_arch = "aarch64"),
+        }
+    }
+
+    /// This level, or [`SimdLevel::Scalar`] when the host cannot run it
+    /// — the guard every dispatch site applies before entering an
+    /// `unsafe` vector kernel.
+    pub fn clamped(self) -> SimdLevel {
+        if self.supported() {
+            self
+        } else {
+            SimdLevel::Scalar
+        }
+    }
+}
+
+static ACTIVE: OnceLock<SimdLevel> = OnceLock::new();
+
+fn best_available() -> SimdLevel {
+    if SimdLevel::Avx2.supported() {
+        SimdLevel::Avx2
+    } else if SimdLevel::Neon.supported() {
+        SimdLevel::Neon
+    } else {
+        SimdLevel::Scalar
+    }
+}
+
+fn detect() -> SimdLevel {
+    let var = match std::env::var("MICROSCALE_SIMD") {
+        Ok(v) => v,
+        Err(_) => return best_available(),
+    };
+    match var.as_str() {
+        "auto" => best_available(),
+        "scalar" => SimdLevel::Scalar,
+        "avx2" | "neon" => {
+            let level = if var == "avx2" {
+                SimdLevel::Avx2
+            } else {
+                SimdLevel::Neon
+            };
+            if level.supported() {
+                level
+            } else {
+                log::warn!(
+                    "MICROSCALE_SIMD={var} is not executable on this host; \
+                     falling back to scalar kernels"
+                );
+                SimdLevel::Scalar
+            }
+        }
+        other => {
+            log::warn!(
+                "unknown MICROSCALE_SIMD={other:?} (expected \
+                 scalar|avx2|neon|auto); auto-detecting"
+            );
+            best_available()
+        }
+    }
+}
+
+/// The process-wide instruction-set level (see module docs). Latched on
+/// first call; `MICROSCALE_SIMD` changes after that are ignored.
+pub fn active() -> SimdLevel {
+    *ACTIVE.get_or_init(detect)
+}
+
+/// [`active`]'s stable name — what the bench reports record per run.
+pub fn kernel_name() -> &'static str {
+    active().name()
+}
+
+// ---------------------------------------------------------------------
+// Shared pointwise primitives.
+//
+// Each has a scalar body that *is* the semantics, and vector bodies
+// that replay the same per-element operation sequence wider. The
+// `*_with` form takes an explicit level (differential tests); the
+// plain form dispatches on `active()`.
+// ---------------------------------------------------------------------
+
+/// The per-block absmax of the encode pipeline: `max |v · s_t|` with
+/// NaN inputs ignored (a NaN never beats the running maximum — the
+/// scalar `a > absmax` fold's exact semantics).
+pub fn absmax_scaled(block: &[f32], s_t: f32) -> f32 {
+    absmax_scaled_with(active(), block, s_t)
+}
+
+/// [`absmax_scaled`] at an explicit level (clamped to what the host
+/// supports). Bit-identical across levels: every candidate is the same
+/// rounded `v * s_t` then `abs`, and max is order-independent over the
+/// non-NaN candidates.
+pub fn absmax_scaled_with(level: SimdLevel, block: &[f32], s_t: f32) -> f32 {
+    match level.clamped() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe { x86::absmax_scaled_avx2(block, s_t) },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe { neon::absmax_scaled_neon(block, s_t) },
+        _ => absmax_scaled_scalar(block, s_t),
+    }
+}
+
+fn absmax_scaled_scalar(block: &[f32], s_t: f32) -> f32 {
+    let mut absmax = 0.0f32;
+    for &v in block {
+        let a = (v * s_t).abs();
+        if a > absmax {
+            absmax = a;
+        }
+    }
+    absmax
+}
+
+/// Pointwise decode of one block: `out[i] = s * lut[codes[i] & 15]`
+/// over a 16-entry signed LUT (the FP4 code space). One rounded
+/// multiply per element — any lane width computes identical bits.
+pub fn scale_lut16(s: f32, codes: &[u8], lut: &[f32], out: &mut [f32]) {
+    scale_lut16_with(active(), s, codes, lut, out)
+}
+
+/// [`scale_lut16`] at an explicit level (clamped to host support).
+pub fn scale_lut16_with(
+    level: SimdLevel,
+    s: f32,
+    codes: &[u8],
+    lut: &[f32],
+    out: &mut [f32],
+) {
+    assert!(lut.len() >= 16, "lut16 needs 16 entries");
+    assert_eq!(codes.len(), out.len());
+    match level.clamped() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe {
+            x86::scale_lut16_avx2(s, codes, lut, out)
+        },
+        #[cfg(target_arch = "aarch64")]
+        SimdLevel::Neon => unsafe {
+            neon::scale_lut16_neon(s, codes, lut, out)
+        },
+        _ => scale_lut16_scalar(s, codes, lut, out),
+    }
+}
+
+fn scale_lut16_scalar(s: f32, codes: &[u8], lut: &[f32], out: &mut [f32]) {
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = s * lut[(c & 15) as usize];
+    }
+}
+
+/// Pointwise decode of one block over an arbitrary-size signed LUT
+/// (64 entries for FP6, 256 for FP8): `out[i] = s * lut[codes[i]]`,
+/// vectorized as a gather. Every code must index inside `lut` (the
+/// bit-unpack masks codes to their field width, so it always does).
+pub fn scale_lut(s: f32, codes: &[u8], lut: &[f32], out: &mut [f32]) {
+    scale_lut_with(active(), s, codes, lut, out)
+}
+
+/// [`scale_lut`] at an explicit level (clamped to host support).
+pub fn scale_lut_with(
+    level: SimdLevel,
+    s: f32,
+    codes: &[u8],
+    lut: &[f32],
+    out: &mut [f32],
+) {
+    assert_eq!(codes.len(), out.len());
+    debug_assert!(codes.iter().all(|&c| (c as usize) < lut.len()));
+    match level.clamped() {
+        #[cfg(target_arch = "x86_64")]
+        SimdLevel::Avx2 => unsafe {
+            x86::scale_lut_gather_avx2(s, codes, lut, out)
+        },
+        _ => scale_lut_scalar(s, codes, lut, out),
+    }
+}
+
+fn scale_lut_scalar(s: f32, codes: &[u8], lut: &[f32], out: &mut [f32]) {
+    for (o, &c) in out.iter_mut().zip(codes) {
+        *o = s * lut[c as usize];
+    }
+}
+
+/// AVX2 bodies plus the in-register building blocks the GEMM kernels
+/// share ([`crate::quant::gemm`] imports these rather than re-deriving
+/// the shuffle sequences).
+#[cfg(target_arch = "x86_64")]
+pub(crate) mod x86 {
+    use core::arch::x86_64::*;
+
+    /// Widen 8 code bytes at `p` to 8 i32 lanes.
+    ///
+    /// # Safety
+    /// Caller guarantees AVX2 and 8 readable bytes at `p`.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn load8_u8_i32(p: *const u8) -> __m256i {
+        _mm256_cvtepu8_epi32(_mm_loadl_epi64(p as *const __m128i))
+    }
+
+    /// 16-entry f32 table lookup: lane `l` reads `table[idx[l]]` for
+    /// `idx[l] < 16`, the table given as its low/high 8-entry halves.
+    /// `vpermps` consumes the low 3 index bits; bit 3, shifted into the
+    /// lane sign position, blends between the halves — the in-register
+    /// realization of the FP4 16-entry code space (SNIPPETS.md §2).
+    ///
+    /// # Safety
+    /// Caller guarantees AVX2; every index lane must be < 16.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn lut16(lo: __m256, hi: __m256, idx: __m256i) -> __m256 {
+        let a = _mm256_permutevar8x32_ps(lo, idx);
+        let b = _mm256_permutevar8x32_ps(hi, idx);
+        let pick_hi = _mm256_castsi256_ps(_mm256_slli_epi32(idx, 28));
+        _mm256_blendv_ps(a, b, pick_hi)
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn absmax_scaled_avx2(block: &[f32], s_t: f32) -> f32 {
+        let sign = _mm256_set1_ps(-0.0);
+        let vst = _mm256_set1_ps(s_t);
+        let mut acc = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= block.len() {
+            let v = _mm256_loadu_ps(block.as_ptr().add(i));
+            let a = _mm256_andnot_ps(sign, _mm256_mul_ps(v, vst));
+            // operand order matters: maxps returns its *second* operand
+            // on unordered compares, so a NaN lane in `a` keeps `acc` —
+            // the scalar fold's NaN-ignoring behavior
+            acc = _mm256_max_ps(a, acc);
+            i += 8;
+        }
+        // lanes hold non-NaN abs values now; reduce with plain max
+        let hi4 = _mm256_extractf128_ps(acc, 1);
+        let m4 = _mm_max_ps(_mm256_castps256_ps128(acc), hi4);
+        let m2 = _mm_max_ps(m4, _mm_movehl_ps(m4, m4));
+        let m1 = _mm_max_ss(m2, _mm_shuffle_ps(m2, m2, 1));
+        let mut absmax = _mm_cvtss_f32(m1);
+        for &v in &block[i..] {
+            let a = (v * s_t).abs();
+            if a > absmax {
+                absmax = a;
+            }
+        }
+        absmax
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn scale_lut16_avx2(
+        s: f32,
+        codes: &[u8],
+        lut: &[f32],
+        out: &mut [f32],
+    ) {
+        let lo = _mm256_loadu_ps(lut.as_ptr());
+        let hi = _mm256_loadu_ps(lut.as_ptr().add(8));
+        let vs = _mm256_set1_ps(s);
+        let mask = _mm256_set1_epi32(15);
+        let mut i = 0usize;
+        while i + 8 <= codes.len() {
+            let idx =
+                _mm256_and_si256(load8_u8_i32(codes.as_ptr().add(i)), mask);
+            let v = lut16(lo, hi, idx);
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(vs, v));
+            i += 8;
+        }
+        super::scale_lut16_scalar(s, &codes[i..], lut, &mut out[i..]);
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub(super) unsafe fn scale_lut_gather_avx2(
+        s: f32,
+        codes: &[u8],
+        lut: &[f32],
+        out: &mut [f32],
+    ) {
+        let vs = _mm256_set1_ps(s);
+        let mut i = 0usize;
+        while i + 8 <= codes.len() {
+            let idx = load8_u8_i32(codes.as_ptr().add(i));
+            let v = _mm256_i32gather_ps::<4>(lut.as_ptr(), idx);
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_mul_ps(vs, v));
+            i += 8;
+        }
+        super::scale_lut_scalar(s, &codes[i..], lut, &mut out[i..]);
+    }
+}
+
+/// NEON bodies plus the byte-index building block the GEMM FP4 kernel
+/// shares (`vqtbl4q`-based 16-entry f32 table lookup).
+#[cfg(target_arch = "aarch64")]
+pub(crate) mod neon {
+    use core::arch::aarch64::*;
+
+    /// Load a 16-entry f32 table as the four byte-table registers
+    /// `vqtbl4q_u8` consumes.
+    ///
+    /// # Safety
+    /// Caller guarantees NEON and 16 readable f32 at `p`.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    pub unsafe fn lut16_table(p: *const f32) -> uint8x16x4_t {
+        uint8x16x4_t(
+            vreinterpretq_u8_f32(vld1q_f32(p)),
+            vreinterpretq_u8_f32(vld1q_f32(p.add(4))),
+            vreinterpretq_u8_f32(vld1q_f32(p.add(8))),
+            vreinterpretq_u8_f32(vld1q_f32(p.add(12))),
+        )
+    }
+
+    /// Expand 4 code bytes at `p` (each < 16 after masking) into the
+    /// byte-index vector selecting their f32 table entries: lane `l`
+    /// holds bytes `4c..4c+4` little-endian, i.e. `c·0x04040404 +
+    /// 0x03020100` per u32 lane.
+    ///
+    /// # Safety
+    /// Caller guarantees NEON and 4 readable bytes at `p`.
+    #[inline]
+    #[target_feature(enable = "neon")]
+    pub unsafe fn lut16_indices(p: *const u8) -> uint8x16_t {
+        let raw = (p as *const u32).read_unaligned();
+        let c16 = vmovl_u8(vcreate_u8(raw as u64));
+        let c32 = vandq_u32(vmovl_u16(vget_low_u16(c16)), vdupq_n_u32(15));
+        let bi = vaddq_u32(
+            vmulq_n_u32(c32, 0x0404_0404),
+            vdupq_n_u32(0x0302_0100),
+        );
+        vreinterpretq_u8_u32(bi)
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn absmax_scaled_neon(block: &[f32], s_t: f32) -> f32 {
+        let vst = vdupq_n_f32(s_t);
+        let mut acc = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 4 <= block.len() {
+            let a = vabsq_f32(vmulq_f32(vld1q_f32(block.as_ptr().add(i)), vst));
+            // maxnm: a NaN lane in `a` yields the `acc` lane — the
+            // scalar fold's NaN-ignoring behavior
+            acc = vmaxnmq_f32(acc, a);
+            i += 4;
+        }
+        let mut absmax = vmaxnmvq_f32(acc);
+        for &v in &block[i..] {
+            let a = (v * s_t).abs();
+            if a > absmax {
+                absmax = a;
+            }
+        }
+        absmax
+    }
+
+    #[target_feature(enable = "neon")]
+    pub(super) unsafe fn scale_lut16_neon(
+        s: f32,
+        codes: &[u8],
+        lut: &[f32],
+        out: &mut [f32],
+    ) {
+        let tbl = lut16_table(lut.as_ptr());
+        let vs = vdupq_n_f32(s);
+        let mut i = 0usize;
+        while i + 4 <= codes.len() {
+            let idx = lut16_indices(codes.as_ptr().add(i));
+            let v = vreinterpretq_f32_u8(vqtbl4q_u8(tbl, idx));
+            vst1q_f32(out.as_mut_ptr().add(i), vmulq_f32(vs, v));
+            i += 4;
+        }
+        super::scale_lut16_scalar(s, &codes[i..], lut, &mut out[i..]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn levels_to_try() -> Vec<SimdLevel> {
+        let mut ls = vec![SimdLevel::Scalar];
+        for l in [SimdLevel::Avx2, SimdLevel::Neon] {
+            if l.supported() {
+                ls.push(l);
+            }
+        }
+        ls
+    }
+
+    #[test]
+    fn active_is_latched_and_named() {
+        let a = active();
+        assert_eq!(a, active());
+        assert!(["scalar", "avx2", "neon"].contains(&kernel_name()));
+        assert_eq!(a.name(), kernel_name());
+        assert!(a.supported());
+    }
+
+    #[test]
+    fn clamped_never_exceeds_host() {
+        for l in [SimdLevel::Scalar, SimdLevel::Avx2, SimdLevel::Neon] {
+            assert!(l.clamped().supported());
+        }
+    }
+
+    #[test]
+    fn absmax_levels_agree_including_nan_and_signed_zero() {
+        let mut data: Vec<f32> = (0..67)
+            .map(|i| ((i * 37 % 19) as f32 - 9.0) * 0.125)
+            .collect();
+        data[3] = f32::NAN;
+        data[40] = -0.0;
+        data[41] = f32::INFINITY * 0.0; // NaN via arithmetic
+        let reference = absmax_scaled_scalar(&data, 1.0);
+        for level in levels_to_try() {
+            for s_t in [1.0f32, 0.5, 3.0] {
+                let want = absmax_scaled_scalar(&data, s_t);
+                let got = absmax_scaled_with(level, &data, s_t);
+                assert_eq!(
+                    got.to_bits(),
+                    want.to_bits(),
+                    "{} s_t={s_t}",
+                    level.name()
+                );
+            }
+        }
+        // the NaN lanes really were ignored, not propagated
+        assert!(reference.is_finite());
+    }
+
+    #[test]
+    fn scale_lut_levels_agree() {
+        let lut16v: Vec<f32> = (0..16).map(|i| (i as f32) * 0.25 - 2.0).collect();
+        let lut256: Vec<f32> =
+            (0..256).map(|i| ((i * 31 % 97) as f32) * 0.017 - 0.8).collect();
+        let codes16: Vec<u8> = (0..53).map(|i| (i * 7 % 16) as u8).collect();
+        let codes256: Vec<u8> = (0..53).map(|i| (i * 41 % 256) as u8).collect();
+        for level in levels_to_try() {
+            for s in [0.75f32, 1.0, 1.5e-3] {
+                let mut want = vec![0.0f32; codes16.len()];
+                scale_lut16_scalar(s, &codes16, &lut16v, &mut want);
+                let mut got = vec![0.0f32; codes16.len()];
+                scale_lut16_with(level, s, &codes16, &lut16v, &mut got);
+                for (a, b) in got.iter().zip(&want) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{}", level.name());
+                }
+                let mut want = vec![0.0f32; codes256.len()];
+                scale_lut_scalar(s, &codes256, &lut256, &mut want);
+                let mut got = vec![0.0f32; codes256.len()];
+                scale_lut_with(level, s, &codes256, &lut256, &mut got);
+                for (a, b) in got.iter().zip(&want) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{}", level.name());
+                }
+            }
+        }
+    }
+}

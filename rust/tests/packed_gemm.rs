@@ -18,6 +18,7 @@ use microscale::formats::{
 use microscale::quant::gemm::{packed_matmul, GemmOperand, PackedGemm};
 use microscale::quant::matmul::{matmul_t, quantized_matmul_with};
 use microscale::quant::{QuantKernel, QuantScheme, ScalarKernel};
+use microscale::util::simd::SimdLevel;
 
 /// The ISSUE acceptance matrix.
 const ELEMS: [ElemFormat; 4] = [
@@ -98,6 +99,13 @@ fn packed_gemm_bit_exact_property() {
             tile_n: g.usize_in(1, 9),
             threads: g.usize_in(1, 4),
             par_threshold: 0,
+            // unsupported levels clamp to scalar, so picking freely
+            // also exercises the clamp
+            simd: *g.pick(&[
+                SimdLevel::Scalar,
+                SimdLevel::Avx2,
+                SimdLevel::Neon,
+            ]),
         };
         let got = engine.matmul(&xo, &wo).unwrap();
         assert_bits_eq(&got, &want, &scheme.id());
@@ -118,18 +126,31 @@ fn gemm_determinism_across_threads_and_tiles() {
     ] {
         let xo = GemmOperand::quantize(&scheme, &x, m, k).unwrap();
         let wo = GemmOperand::quantize_transposed(&scheme, &w, k, n).unwrap();
-        let baseline = PackedGemm { tile_n: 64, threads: 1, par_threshold: 0 }
-            .matmul(&xo, &wo)
-            .unwrap();
+        let baseline = PackedGemm {
+            tile_n: 64,
+            threads: 1,
+            par_threshold: 0,
+            simd: SimdLevel::Scalar,
+        }
+        .matmul(&xo, &wo)
+        .unwrap();
         for tile_n in [1, 3, 8, 256] {
             for threads in [1, 2, 4, 8] {
-                let engine = PackedGemm { tile_n, threads, par_threshold: 0 };
-                let got = engine.matmul(&xo, &wo).unwrap();
-                assert_bits_eq(
-                    &got,
-                    &baseline,
-                    &format!("{} tile {tile_n} threads {threads}", scheme.id()),
-                );
+                for simd in [SimdLevel::Scalar, SimdLevel::Avx2, SimdLevel::Neon]
+                {
+                    let engine =
+                        PackedGemm { tile_n, threads, par_threshold: 0, simd };
+                    let got = engine.matmul(&xo, &wo).unwrap();
+                    assert_bits_eq(
+                        &got,
+                        &baseline,
+                        &format!(
+                            "{} tile {tile_n} threads {threads} {}",
+                            scheme.id(),
+                            simd.name()
+                        ),
+                    );
+                }
             }
         }
     }
@@ -158,9 +179,14 @@ fn single_row_fast_path_is_bit_identical_to_tiled_threaded() {
         // an engine that would thread if it could (par_threshold 0):
         // m = 1 must still take the serial path and match bytes
         for tile_n in [1, 8, 256] {
-            let forced = PackedGemm { tile_n, threads: 8, par_threshold: 0 }
-                .matmul(&xo, &wo)
-                .unwrap();
+            let forced = PackedGemm {
+                tile_n,
+                threads: 8,
+                par_threshold: 0,
+                ..PackedGemm::auto()
+            }
+            .matmul(&xo, &wo)
+            .unwrap();
             assert_bits_eq(
                 &forced,
                 &fast,
@@ -293,10 +319,16 @@ fn int_psum_path_is_block_fused_and_accurate() {
             }
         }
 
-        // (b) byte-stable across engine configurations
+        // (b) byte-stable across engine configurations (the int psum
+        // path always runs the scalar kernel, whatever simd asks for)
         for tile_n in [1, 4, 64] {
             for threads in [1, 2, 5] {
-                let engine = PackedGemm { tile_n, threads, par_threshold: 0 };
+                let engine = PackedGemm {
+                    tile_n,
+                    threads,
+                    par_threshold: 0,
+                    ..PackedGemm::auto()
+                };
                 let again = engine.matmul(&xo, &wo).unwrap();
                 assert_bits_eq(&again, &got, "int determinism");
             }
@@ -337,6 +369,84 @@ fn extreme_magnitudes_stay_bit_exact_on_unbounded_scale_grids() {
                 &want,
                 &format!("{} mag {mag:e}", scheme.id()),
             );
+        }
+    }
+}
+
+#[test]
+fn small_m_wide_n_column_split_is_bit_identical_to_serial() {
+    // ISSUE 7 bugfix pin: m ∈ {2,3} with n far past the worker count.
+    // The old row-only split could use at most m workers here; the
+    // engine now fans out over the column axis — and that split must
+    // never change a byte vs the serial engine, on the vector kernels
+    // and the scalar ones alike.
+    let mut rng = Pcg64::new(0xC015);
+    let (k, n) = (64, 1536);
+    for scheme in [
+        QuantScheme::new(ElemFormat::FP4, UE5M3, 16),
+        QuantScheme::new(ElemFormat::Fp(FP6_E3M2), UE4M3, 16),
+        QuantScheme::new(ElemFormat::FP8, UE4M3, 16),
+        QuantScheme::new(ElemFormat::INT4, UE4M3, 8),
+    ] {
+        for m in [2usize, 3] {
+            let x = rng.normal_vec_f32(m * k, 5e-3);
+            let w = rng.normal_vec_f32(k * n, 5e-3);
+            let xo = GemmOperand::quantize(&scheme, &x, m, k).unwrap();
+            let wo =
+                GemmOperand::quantize_transposed(&scheme, &w, k, n).unwrap();
+            let serial = PackedGemm::serial().matmul(&xo, &wo).unwrap();
+            for threads in [4, 8, 16] {
+                for simd in [SimdLevel::Scalar, SimdLevel::Avx2] {
+                    let engine = PackedGemm {
+                        threads,
+                        par_threshold: 0,
+                        simd,
+                        ..PackedGemm::auto()
+                    };
+                    let got = engine.matmul(&xo, &wo).unwrap();
+                    assert_bits_eq(
+                        &got,
+                        &serial,
+                        &format!(
+                            "{} m={m} threads={threads} {}",
+                            scheme.id(),
+                            simd.name()
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn zero_length_contraction_returns_all_zero_output() {
+    // ISSUE 7 bugfix pin: k == 0 with m·n > 0 is the empty sum — an
+    // all-zero m×n result on every engine path, serial and threaded,
+    // not an accident of loop bounds.
+    for scheme in [
+        QuantScheme::new(ElemFormat::FP4, UE5M3, 8),
+        QuantScheme::new(ElemFormat::Fp(FP6_E3M2), UE4M3, 8),
+        QuantScheme::new(ElemFormat::FP8, UE4M3, 8),
+        QuantScheme::new(ElemFormat::INT4, UE4M3, 8),
+    ] {
+        let (m, n) = (3usize, 5usize);
+        let xo = GemmOperand::quantize(&scheme, &[], m, 0).unwrap();
+        let wo = GemmOperand::quantize_transposed(&scheme, &[], 0, n).unwrap();
+        for engine in [
+            PackedGemm::serial(),
+            PackedGemm { threads: 8, par_threshold: 0, ..PackedGemm::auto() },
+        ] {
+            let got = engine.matmul(&xo, &wo).unwrap();
+            assert_eq!(got.len(), m * n, "{}", scheme.id());
+            for (i, v) in got.iter().enumerate() {
+                assert_eq!(
+                    v.to_bits(),
+                    0.0f32.to_bits(),
+                    "{} out {i} nonzero for k=0",
+                    scheme.id()
+                );
+            }
         }
     }
 }
