@@ -2,12 +2,13 @@
 //! see the anomaly, store it on real packed bytes, multiply it natively
 //! in the packed code domain, serve a whole transformer on prepacked
 //! weights, generate tokens through the KV-cached scheduler, run
-//! memory-bounded generation with an MX-quantized KV cache, and (when
-//! artifacts are present) run the L1 Pallas kernel artifact through
-//! PJRT.
+//! memory-bounded generation with an MX-quantized KV cache, stream
+//! tokens over a loopback HTTP server whose KV pool shares prompt
+//! prefixes, and (when artifacts are present) run the L1 Pallas kernel
+//! artifact through PJRT.
 //!
 //! ```bash
-//! cargo run --release --example quickstart          # steps 1-7
+//! cargo run --release --example quickstart          # steps 1-8
 //! make artifacts && cargo run --release --example quickstart  # + PJRT
 //! ```
 
@@ -182,6 +183,7 @@ fn main() -> anyhow::Result<()> {
                     seed: 40 + id,
                 }
             },
+            priority: microscale::serve::Priority::Interactive,
         })?;
     }
     for r in sched.run()? {
@@ -237,6 +239,7 @@ fn main() -> anyhow::Result<()> {
             max_new_tokens: 8,
             eos: None,
             sampling: microscale::serve::Sampling::Greedy,
+            priority: microscale::serve::Priority::Interactive,
         })?;
     }
     let results = sched.run()?;
@@ -250,7 +253,81 @@ fn main() -> anyhow::Result<()> {
         pool.used_bytes(),
     );
 
-    // 8) The same quantizer as an AOT Pallas kernel through PJRT
+    // 8) The serving edge: the same scheduler over a KV pool that
+    //    hash-conses shared prompt prefixes (one physical copy for N
+    //    requests over one system prompt), then behind a dependency-free
+    //    HTTP/1.1 front-end with SSE token streaming.
+    let model = std::sync::Arc::new(microscale::serve::PackedModel::build(
+        &dims,
+        &params,
+        &qcfg,
+        16,
+        microscale::serve::operand_cache(),
+    )?);
+    let pool = microscale::serve::KvPool::build_with(
+        &dims, &kv_cfg, 16, 4, usize::MAX, true, // prefix sharing on
+    )?;
+    let mut sched = microscale::serve::Scheduler::new(
+        microscale::serve::DecodeEngine::with_pool(model, pool.clone())?,
+        microscale::serve::SchedulerConfig::default(),
+    );
+    // Three co-resident requests over one 8-token (2-page) system
+    // prompt: the first interns the prefix pages, the other two attach.
+    let system_prompt: Vec<i32> = (0..8)
+        .map(|_| (rng.next_u64() % dims.vocab as u64) as i32)
+        .collect();
+    for id in 0..3u64 {
+        let mut prompt = system_prompt.clone();
+        prompt.push(id as i32);
+        sched.submit(microscale::serve::DecodeRequest {
+            id,
+            prompt,
+            max_new_tokens: 4,
+            eos: None,
+            sampling: microscale::serve::Sampling::Greedy,
+            priority: microscale::serve::Priority::Interactive,
+        })?;
+    }
+    let shared_results = sched.run()?;
+    let dedup_hits = pool.stats().dedup_hits;
+    assert_eq!(shared_results.len(), 3);
+    assert!(dedup_hits >= 4); // 2 prefix pages x 2 attaching requests
+    println!(
+        "Prefix sharing: 3 requests over one system prompt held one \
+         physical copy of its pages ({dedup_hits} page dedup hits) ✓"
+    );
+    // Same scheduler, now serving over loopback HTTP with SSE.
+    let server = microscale::serve::HttpServer::start(sched, "127.0.0.1:0")?;
+    let addr = server.addr();
+    let mut prompt = system_prompt.clone();
+    prompt.push(99);
+    let body = format!(
+        "{{\"prompt\":{prompt:?},\"max_new_tokens\":6,\"stream\":true}}"
+    );
+    let stream = std::net::TcpStream::connect(addr)?;
+    let mut w = &stream;
+    microscale::serve::net::write_request(
+        &mut w,
+        "POST",
+        "/v1/completions",
+        body.as_bytes(),
+    )?;
+    let mut r = std::io::BufReader::new(stream.try_clone()?);
+    let (status, _) = microscale::serve::net::read_response_head(&mut r)?;
+    assert_eq!(status, 200);
+    let mut events = 0;
+    while microscale::serve::net::read_chunk(&mut r)?.is_some() {
+        events += 1;
+    }
+    assert!(events >= 7); // 6 token events + the terminal done event
+    server.shutdown();
+    assert_eq!(pool.used_bytes(), 0);
+    println!(
+        "HttpServer: streamed a completion over {addr} as {events} SSE \
+         events; pool drained to 0 B ✓\n"
+    );
+
+    // 9) The same quantizer as an AOT Pallas kernel through PJRT
     //    (optional: needs `make artifacts` and a native PJRT build).
     let manifest = match Manifest::load(std::path::Path::new("artifacts")) {
         Ok(m) => m,

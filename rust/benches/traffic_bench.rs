@@ -1,0 +1,17 @@
+//! Serving-edge traffic benchmark: thin wrapper over the same driver
+//! that backs `microscale traffic-bench` (`microscale::serve::traffic`),
+//! so `cargo bench --bench traffic_bench` and the CLI produce identical
+//! `BENCH_traffic.json` reports (field map in EXPERIMENTS.md §Perf).
+//!
+//! Pass `-- --smoke` (or set `MICROSCALE_BENCH_SMOKE=1`) for the
+//! CI-sized run on a shrunken model.
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("MICROSCALE_BENCH_SMOKE").is_ok();
+    let opts = microscale::serve::traffic::TrafficOpts::new(smoke);
+    if let Err(e) = microscale::serve::traffic::run(&opts) {
+        eprintln!("traffic bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

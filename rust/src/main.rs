@@ -13,6 +13,7 @@
 //! microscale serve-bench        packed-domain serving bench (BENCH_serve.json)
 //! microscale decode-bench       KV-cached generation bench (BENCH_decode.json)
 //! microscale kv-bench           paged-KV memory/throughput bench (BENCH_kv.json)
+//! microscale traffic-bench      serving-edge traffic bench (BENCH_traffic.json)
 //! microscale kv-sweep           KV block-size anomaly sweep on live decode traces
 //! microscale selftest           quick smoke of the full stack
 //! ```
@@ -332,6 +333,29 @@ fn run() -> Result<()> {
             opts.budget_seqs = args.get_f64("budget-seqs", opts.budget_seqs)?;
             microscale::serve::kv_bench::run(&opts)?;
         }
+        "traffic-bench" => {
+            let mut opts = microscale::serve::traffic::TrafficOpts::new(
+                args.has("smoke"),
+            );
+            if let Some(out) = args.get("out") {
+                opts.out = PathBuf::from(out);
+            }
+            opts.requests = args.get_usize("requests", opts.requests)?;
+            opts.concurrency = args.get_usize("concurrency", opts.concurrency)?;
+            opts.seed = args.get_usize("seed", opts.seed as usize)? as u64;
+            opts.prefix_len = args.get_usize("prefix-len", opts.prefix_len)?;
+            opts.shared_ratio =
+                args.get_f64("shared-ratio", opts.shared_ratio)?;
+            opts.batch_frac = args.get_f64("batch-frac", opts.batch_frac)?;
+            opts.cancel_frac = args.get_f64("cancel-frac", opts.cancel_frac)?;
+            opts.burst_len = args.get_usize("burst-len", opts.burst_len)?;
+            opts.rate_per_s = args.get_f64("rate", opts.rate_per_s)?;
+            opts.burst_gap_ms =
+                args.get_f64("burst-gap-ms", opts.burst_gap_ms)?;
+            opts.page_rows = args.get_usize("page-rows", opts.page_rows)?;
+            opts.budget_seqs = args.get_f64("budget-seqs", opts.budget_seqs)?;
+            microscale::serve::traffic::run(&opts)?;
+        }
         "kv-sweep" => {
             let fast = args.has("fast");
             let csv = PathBuf::from(args.get_or("results", "results"))
@@ -370,7 +394,8 @@ fn run() -> Result<()> {
                  \n\
                  commands: figure <id> | table <1|2|3> | all | hw | train |\n\
                  models | eval | theory | quantize | serve-bench |\n\
-                 decode-bench | kv-bench | kv-sweep | selftest\n\
+                 decode-bench | kv-bench | traffic-bench | kv-sweep |\n\
+                 selftest\n\
                  figures: 1a 1b 2a 2b 2c 3a 3b 3c 4a 4b 5a 5b 6 7 8 9 10 11\n\
                  12 13 14 15 16 17\n\
                  flags: --fast --results DIR --models DIR --artifacts DIR\n\
@@ -384,6 +409,10 @@ fn run() -> Result<()> {
                  kv-bench flags: --smoke --concurrency N --prompt N\n\
                  --max-new N --requests N --page-rows N --budget-seqs X\n\
                  --out FILE\n\
+                 traffic-bench flags: --smoke --requests N --concurrency N\n\
+                 --seed N --prefix-len N --shared-ratio X --batch-frac X\n\
+                 --cancel-frac X --burst-len N --rate X --burst-gap-ms X\n\
+                 --page-rows N --budget-seqs X --out FILE\n\
                  kv-sweep flags: --fast --results DIR"
             );
             if other != "help" {

@@ -32,7 +32,7 @@ use anyhow::Context;
 use super::cache::operand_cache;
 use super::decode::{generate_reforward, DecodeEngine, Sampling};
 use super::packed_model::{reference_forward, PackedModel};
-use super::scheduler::{DecodeRequest, Scheduler, SchedulerConfig};
+use super::scheduler::{DecodeRequest, Priority, Scheduler, SchedulerConfig};
 use crate::dist::Pcg64;
 use crate::model::weights::Params;
 use crate::runtime::artifacts::ModelDims;
@@ -106,15 +106,6 @@ fn prompt(rng: &mut Pcg64, dims: &ModelDims, len: usize) -> Vec<i32> {
     (0..len).map(|_| (rng.next_u64() % dims.vocab as u64) as i32).collect()
 }
 
-pub(crate) fn pct_ms(samples: &mut [f64], p: f64) -> f64 {
-    if samples.is_empty() {
-        return 0.0;
-    }
-    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let idx = ((samples.len() - 1) as f64 * p / 100.0).round() as usize;
-    samples[idx]
-}
-
 /// The bit-exactness gate: generate a short forced-token stream and
 /// assert the KV-cached step logits equal the full-prefix scalar
 /// reference bit for bit at every step, then assert the scheduler's
@@ -163,6 +154,7 @@ fn exactness_gate(
         max_new_tokens: max_new,
         eos: None,
         sampling: Sampling::Greedy,
+        priority: Priority::Interactive,
     })?;
     let results = sched.run()?;
     let got = results.first().map(|r| r.tokens.as_slice());
@@ -253,7 +245,11 @@ pub fn run(opts: &DecodeBenchOpts) -> crate::Result<Json> {
             let n_req = c * opts.rounds;
             let mut sched = Scheduler::new(
                 DecodeEngine::new(model.clone())?,
-                SchedulerConfig { max_active: c, max_prefill_per_step: c },
+                SchedulerConfig {
+                    max_active: c,
+                    max_prefill_per_step: c,
+                    ..SchedulerConfig::default()
+                },
             );
             let t0 = Instant::now();
             for id in 0..n_req {
@@ -266,6 +262,7 @@ pub fn run(opts: &DecodeBenchOpts) -> crate::Result<Json> {
                         temp: 0.9,
                         seed: 0x5EED ^ id as u64,
                     },
+                    priority: Priority::Interactive,
                 })?;
             }
             let results = sched.run()?;
@@ -277,6 +274,10 @@ pub fn run(opts: &DecodeBenchOpts) -> crate::Result<Json> {
             let tok_s = tokens as f64 / secs.max(1e-9);
             let mut ttft: Vec<f64> =
                 results.iter().map(|r| r.ttft.as_secs_f64() * 1e3).collect();
+            let mut qwait: Vec<f64> = results
+                .iter()
+                .map(|r| r.queue_wait.as_secs_f64() * 1e3)
+                .collect();
             let mut itl: Vec<f64> = results
                 .iter()
                 .flat_map(|r| r.itl.iter().map(|d| d.as_secs_f64() * 1e3))
@@ -285,10 +286,12 @@ pub fn run(opts: &DecodeBenchOpts) -> crate::Result<Json> {
             if c == largest_c {
                 cfg_speedup = speedup;
             }
-            let (ttft_p50, ttft_p95) =
-                (pct_ms(&mut ttft, 50.0), pct_ms(&mut ttft, 95.0));
-            let (itl_p50, itl_p95) =
-                (pct_ms(&mut itl, 50.0), pct_ms(&mut itl, 95.0));
+            let [ttft_p50, ttft_p95] =
+                crate::stats::percentiles(&mut ttft, [50.0, 95.0]);
+            let [qwait_p50, qwait_p95] =
+                crate::stats::percentiles(&mut qwait, [50.0, 95.0]);
+            let [itl_p50, itl_p95] =
+                crate::stats::percentiles(&mut itl, [50.0, 95.0]);
             println!(
                 "   c{c:<3}: {tok_s:8.1} tok/s  ttft p50 {ttft_p50:6.1} ms  \
                  p95 {ttft_p95:6.1} ms  itl p50 {itl_p50:6.2} ms  \
@@ -303,6 +306,10 @@ pub fn run(opts: &DecodeBenchOpts) -> crate::Result<Json> {
                     ("tok_per_s", json::num(tok_s)),
                     ("ttft_p50_ms", json::num(ttft_p50)),
                     ("ttft_p95_ms", json::num(ttft_p95)),
+                    // submit → admission, split out of ttft so SLO
+                    // readers can separate queueing from decode latency
+                    ("queue_wait_p50_ms", json::num(qwait_p50)),
+                    ("queue_wait_p95_ms", json::num(qwait_p95)),
                     ("itl_p50_ms", json::num(itl_p50)),
                     ("itl_p95_ms", json::num(itl_p95)),
                     ("kv_peak_bytes", json::num(kv_peak as f64)),
@@ -362,6 +369,7 @@ pub fn run(opts: &DecodeBenchOpts) -> crate::Result<Json> {
                 max_new_tokens: opts.max_new.min(4),
                 eos: None,
                 sampling: Sampling::Greedy,
+                priority: Priority::Interactive,
             })?;
             let stream = sched.run()?;
             anyhow::ensure!(
@@ -376,6 +384,7 @@ pub fn run(opts: &DecodeBenchOpts) -> crate::Result<Json> {
                 SchedulerConfig {
                     max_active: largest_c,
                     max_prefill_per_step: largest_c,
+                    ..SchedulerConfig::default()
                 },
             );
             let t0 = Instant::now();
@@ -389,6 +398,7 @@ pub fn run(opts: &DecodeBenchOpts) -> crate::Result<Json> {
                         temp: 0.9,
                         seed: 0x57A2 ^ id as u64,
                     },
+                    priority: Priority::Interactive,
                 })?;
             }
             let results = sched.run()?;

@@ -83,15 +83,10 @@ impl StatsInner {
     }
 
     fn snapshot(&self) -> ServeStats {
-        let mut lat = self.latencies_ns.clone();
-        lat.sort_unstable();
-        let pct = |p: f64| -> f64 {
-            if lat.is_empty() {
-                return 0.0;
-            }
-            let idx = ((lat.len() - 1) as f64 * p / 100.0).round() as usize;
-            lat[idx] as f64 / 1e6
-        };
+        let mut lat_ms: Vec<f64> =
+            self.latencies_ns.iter().map(|&ns| ns as f64 / 1e6).collect();
+        let [p50, p95, p99] =
+            crate::stats::percentiles(&mut lat_ms, [50.0, 95.0, 99.0]);
         let window = match (self.first_submit, self.last_done) {
             (Some(a), Some(b)) => b.duration_since(a).as_secs_f64(),
             _ => 0.0,
@@ -113,9 +108,9 @@ impl StatsInner {
             } else {
                 0.0
             },
-            p50_ms: pct(50.0),
-            p95_ms: pct(95.0),
-            p99_ms: pct(99.0),
+            p50_ms: p50,
+            p95_ms: p95,
+            p99_ms: p99,
             req_per_s: rate(self.requests),
             tok_per_s: rate(self.tokens),
         }

@@ -1,0 +1,599 @@
+//! Streaming HTTP front-end over the [`Scheduler`] (see
+//! [`super::net`] for the wire layer; this module is the glue).
+//!
+//! # Threading model
+//!
+//! The scheduler is **not** shared: one dedicated loop thread owns it
+//! outright and everything else talks to it over an mpsc [`Cmd`]
+//! channel. The loop blocks on `recv` while the scheduler is idle
+//! (zero CPU between requests), and while work is in flight it drains
+//! pending commands with `try_recv` between [`Scheduler::step`] calls
+//! — so admission, cancellation, and stats stay responsive at exactly
+//! step granularity without any locking around model state. The loop
+//! exits once the command channel is closed *and* the scheduler is
+//! idle, so shutdown never abandons admitted work.
+//!
+//! Each accepted connection gets its own thread (requests are
+//! long-lived token streams; a thread per stream is the simplest
+//! correct thing at our scale). Responses always close the
+//! connection (`Connection: close`), matching [`super::net`] framing.
+//!
+//! # Determinism
+//!
+//! The front-end inherits the scheduler's contract: token streams are
+//! a pure function of `(weights, qconfig, prompt, sampling)`, so HTTP
+//! concurrency, arrival interleaving, and priority classes cannot
+//! change any stream — `rust/tests/http.rs` pins served streams
+//! against the [`super::decode::generate_reforward`] oracle.
+//!
+//! # Cancellation
+//!
+//! A client disconnect mid-stream surfaces as a failed chunk write;
+//! the connection thread then sends [`Cmd::Cancel`] and drops its
+//! event receiver (either alone suffices — the scheduler also cancels
+//! on a hung-up sink). The scheduler frees the sequence's KV pages on
+//! the spot, so a disconnected client's pages never linger.
+//!
+//! # API
+//!
+//! * `GET /healthz` — liveness: `{"ok": true}`.
+//! * `GET /stats` — scheduler + KV pool counters ([`ServerStats`]).
+//! * `POST /v1/completions` — body `{"prompt": [i32, ..], ..}`; see
+//!   [`parse_completion`] for the accepted fields. With
+//!   `"stream": true` the response is a `text/event-stream` of
+//!   `data: {"token": N}` events, terminated by `data: {"done": ..}`;
+//!   otherwise one JSON object after the request finishes.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::{self, JoinHandle};
+
+use anyhow::{anyhow, Context};
+
+use crate::util::json::{self, Json};
+
+use super::net;
+use super::scheduler::{
+    DecodeRequest, DecodeResult, Priority, Scheduler, StreamEvent,
+};
+use super::Sampling;
+
+/// What connection threads ask of the scheduler loop.
+enum Cmd {
+    /// Admit a request; `reply` carries the validation verdict
+    /// ([`Scheduler::submit_streaming`]'s result) back to the
+    /// connection before any token flows.
+    Submit {
+        req: DecodeRequest,
+        sink: mpsc::Sender<StreamEvent>,
+        reply: mpsc::Sender<crate::Result<()>>,
+    },
+    /// Drop a request wherever it sits (client disconnected).
+    Cancel { id: u64 },
+    /// Snapshot the counters.
+    Stats { reply: mpsc::Sender<ServerStats> },
+}
+
+/// Scheduler + KV pool counters, as served by `GET /stats`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServerStats {
+    /// Requests waiting for admission.
+    pub pending: usize,
+    /// Requests decoding right now.
+    pub active: usize,
+    /// Requests evicted and awaiting re-admission.
+    pub preempted: usize,
+    /// Lifetime eviction count.
+    pub preemptions: u64,
+    /// Lifetime cancellation count.
+    pub cancellations: u64,
+    /// KV pool bytes currently allocated (0 without a paged pool).
+    pub kv_used_bytes: usize,
+    /// KV pool high-water mark.
+    pub kv_peak_bytes: usize,
+    /// Full pages deduplicated by prefix sharing.
+    pub kv_dedup_hits: u64,
+    /// Extra bytes an unshared pool would hold right now.
+    pub kv_shared_bytes: usize,
+}
+
+impl ServerStats {
+    fn to_json(self) -> Json {
+        json::obj(vec![
+            ("pending", json::num(self.pending as f64)),
+            ("active", json::num(self.active as f64)),
+            ("preempted", json::num(self.preempted as f64)),
+            ("preemptions", json::num(self.preemptions as f64)),
+            ("cancellations", json::num(self.cancellations as f64)),
+            ("kv_used_bytes", json::num(self.kv_used_bytes as f64)),
+            ("kv_peak_bytes", json::num(self.kv_peak_bytes as f64)),
+            ("kv_dedup_hits", json::num(self.kv_dedup_hits as f64)),
+            ("kv_shared_bytes", json::num(self.kv_shared_bytes as f64)),
+        ])
+    }
+}
+
+fn snapshot(sched: &Scheduler) -> ServerStats {
+    let pool = sched.pool().map(|p| p.stats());
+    ServerStats {
+        pending: sched.pending(),
+        active: sched.active(),
+        preempted: sched.preempted(),
+        preemptions: sched.preemptions(),
+        cancellations: sched.cancellations(),
+        kv_used_bytes: pool.map_or(0, |p| p.used_bytes),
+        kv_peak_bytes: pool.map_or(0, |p| p.peak_bytes),
+        kv_dedup_hits: pool.map_or(0, |p| p.dedup_hits),
+        kv_shared_bytes: pool.map_or(0, |p| p.shared_bytes),
+    }
+}
+
+/// The scheduler-owning loop (see module docs for the idle/busy
+/// protocol). Step errors drop the in-flight set (the scheduler's
+/// own contract) but the loop keeps serving — submit-time validation
+/// makes forward errors unreachable for admitted requests.
+fn scheduler_loop(mut sched: Scheduler, rx: mpsc::Receiver<Cmd>) {
+    let mut open = true;
+    loop {
+        if sched.is_idle() {
+            if !open {
+                return;
+            }
+            match rx.recv() {
+                Ok(cmd) => apply(&mut sched, cmd),
+                Err(_) => return,
+            }
+        }
+        while open {
+            match rx.try_recv() {
+                Ok(cmd) => apply(&mut sched, cmd),
+                Err(mpsc::TryRecvError::Empty) => break,
+                Err(mpsc::TryRecvError::Disconnected) => open = false,
+            }
+        }
+        if !sched.is_idle() {
+            let _ = sched.step();
+        }
+    }
+}
+
+fn apply(sched: &mut Scheduler, cmd: Cmd) {
+    match cmd {
+        Cmd::Submit { req, sink, reply } => {
+            let _ = reply.send(sched.submit_streaming(req, sink));
+        }
+        Cmd::Cancel { id } => {
+            sched.cancel(id);
+        }
+        Cmd::Stats { reply } => {
+            let _ = reply.send(snapshot(sched));
+        }
+    }
+}
+
+/// Decode a `POST /v1/completions` body. Accepted fields:
+///
+/// * `prompt` (required): token id array.
+/// * `max_new_tokens` (default 16), `eos` (default none).
+/// * `temperature` + `seed` → [`Sampling::Temperature`]; omitting
+///   `temperature` means greedy. `seed` defaults to 0.
+/// * `priority`: `"interactive"` (default) or `"batch"`.
+/// * `stream`: `true` for SSE token streaming (default `false`).
+///
+/// The request id is server-assigned — bodies cannot pick one.
+fn parse_completion(
+    body: &[u8],
+    id: u64,
+) -> crate::Result<(DecodeRequest, bool)> {
+    let text = std::str::from_utf8(body).context("body is not UTF-8")?;
+    let j = Json::parse(text).context("body is not JSON")?;
+    let prompt: Vec<i32> = j
+        .get("prompt")?
+        .as_f64_vec()
+        .context("prompt must be a token id array")?
+        .into_iter()
+        .map(|v| v as i32)
+        .collect();
+    let max_new_tokens = match j.opt("max_new_tokens") {
+        Some(v) => v.as_usize().context("max_new_tokens")?,
+        None => 16,
+    };
+    let eos = match j.opt("eos") {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(v.as_i64().context("eos")? as i32),
+    };
+    let sampling = match j.opt("temperature") {
+        Some(t) => Sampling::Temperature {
+            temp: t.as_f64().context("temperature")?,
+            seed: match j.opt("seed") {
+                Some(v) => v.as_f64().context("seed")? as u64,
+                None => 0,
+            },
+        },
+        None => Sampling::Greedy,
+    };
+    let priority = match j.opt("priority") {
+        Some(p) => {
+            let name = p.as_str().context("priority")?;
+            Priority::parse(name).ok_or_else(|| {
+                anyhow!(
+                    "unknown priority {name:?} (expected \
+                     \"interactive\" or \"batch\")"
+                )
+            })?
+        }
+        None => Priority::Interactive,
+    };
+    let stream = match j.opt("stream") {
+        Some(v) => v.as_bool().context("stream")?,
+        None => false,
+    };
+    Ok((
+        DecodeRequest { id, prompt, max_new_tokens, eos, sampling, priority },
+        stream,
+    ))
+}
+
+/// A finished request as JSON (the non-stream response body, and the
+/// `"done"` payload of the final SSE event).
+fn result_json(r: &DecodeResult) -> Json {
+    json::obj(vec![
+        ("id", json::num(r.id as f64)),
+        ("priority", json::s(r.priority.as_str())),
+        ("prompt_len", json::num(r.prompt_len as f64)),
+        (
+            "tokens",
+            json::arr(r.tokens.iter().map(|&t| json::num(t as f64))),
+        ),
+        ("finish", json::s(r.finish.as_str())),
+        ("queue_wait_ms", json::num(r.queue_wait.as_secs_f64() * 1e3)),
+        ("ttft_ms", json::num(r.ttft.as_secs_f64() * 1e3)),
+        (
+            "itl_ms",
+            json::f64s(
+                &r.itl
+                    .iter()
+                    .map(|d| d.as_secs_f64() * 1e3)
+                    .collect::<Vec<_>>(),
+            ),
+        ),
+    ])
+}
+
+fn reason_for(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Error",
+    }
+}
+
+fn write_error<W: std::io::Write>(
+    w: &mut W,
+    status: u16,
+    msg: &str,
+) -> crate::Result<()> {
+    let body = json::obj(vec![("error", json::s(msg))]).to_string();
+    net::write_response(
+        w,
+        status,
+        reason_for(status),
+        "application/json",
+        body.as_bytes(),
+    )
+}
+
+/// Serve `POST /v1/completions` on an established connection.
+fn completions(
+    req: &net::Request,
+    out: &mut &TcpStream,
+    cmd_tx: &mpsc::Sender<Cmd>,
+    id: u64,
+) -> crate::Result<()> {
+    let (dreq, stream_mode) = match parse_completion(&req.body, id) {
+        Ok(parsed) => parsed,
+        Err(e) => return write_error(out, 400, &format!("{e:#}")),
+    };
+    let (sink_tx, sink_rx) = mpsc::channel();
+    let (reply_tx, reply_rx) = mpsc::channel();
+    let submitted = cmd_tx
+        .send(Cmd::Submit { req: dreq, sink: sink_tx, reply: reply_tx })
+        .is_ok();
+    if !submitted {
+        return write_error(out, 503, "server is shutting down");
+    }
+    match reply_rx.recv() {
+        Ok(Ok(())) => {}
+        Ok(Err(e)) => return write_error(out, 400, &format!("{e:#}")),
+        Err(_) => return write_error(out, 503, "scheduler unavailable"),
+    }
+    if stream_mode {
+        let mut cw =
+            net::ChunkWriter::start(&mut *out, 200, "OK", "text/event-stream")?;
+        for ev in sink_rx.iter() {
+            match ev {
+                StreamEvent::Token(t) => {
+                    let data = format!("data: {{\"token\":{t}}}\n\n");
+                    if cw.chunk(data.as_bytes()).is_err() {
+                        // Client hung up: reclaim the sequence's KV
+                        // pages now (the dropped sink_rx would also
+                        // get there, one step later).
+                        let _ = cmd_tx.send(Cmd::Cancel { id });
+                        return Ok(());
+                    }
+                }
+                StreamEvent::Done(r) => {
+                    let done = result_json(&r).to_string();
+                    let data = format!("data: {{\"done\":{done}}}\n\n");
+                    let _ = cw.chunk(data.as_bytes());
+                    return cw.end();
+                }
+            }
+        }
+        // Sink closed without Done: the scheduler dropped the request
+        // (step error). Terminate the stream so the client unblocks.
+        let _ = cw.chunk(b"data: {\"error\":\"request dropped\"}\n\n");
+        cw.end()
+    } else {
+        for ev in sink_rx.iter() {
+            if let StreamEvent::Done(r) = ev {
+                let body = result_json(&r).to_string();
+                return net::write_response(
+                    out,
+                    200,
+                    "OK",
+                    "application/json",
+                    body.as_bytes(),
+                );
+            }
+        }
+        write_error(out, 500, "request dropped")
+    }
+}
+
+fn route(
+    req: &net::Request,
+    out: &mut &TcpStream,
+    cmd_tx: &mpsc::Sender<Cmd>,
+    ids: &AtomicU64,
+) -> crate::Result<()> {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("GET", "/healthz") => net::write_response(
+            out,
+            200,
+            "OK",
+            "application/json",
+            b"{\"ok\":true}",
+        ),
+        ("GET", "/stats") => {
+            let (tx, rx) = mpsc::channel();
+            if cmd_tx.send(Cmd::Stats { reply: tx }).is_err() {
+                return write_error(out, 503, "server is shutting down");
+            }
+            match rx.recv() {
+                Ok(stats) => {
+                    let body = stats.to_json().to_string();
+                    net::write_response(
+                        out,
+                        200,
+                        "OK",
+                        "application/json",
+                        body.as_bytes(),
+                    )
+                }
+                Err(_) => write_error(out, 503, "scheduler unavailable"),
+            }
+        }
+        ("POST", "/v1/completions") => {
+            let id = ids.fetch_add(1, Ordering::Relaxed);
+            completions(req, out, cmd_tx, id)
+        }
+        _ => write_error(out, 404, "no such route"),
+    }
+}
+
+/// One connection: read a single request, answer it, close (every
+/// response carries `Connection: close`). Socket errors just end the
+/// connection — the peer is gone.
+fn handle_conn(
+    stream: TcpStream,
+    cmd_tx: mpsc::Sender<Cmd>,
+    ids: Arc<AtomicU64>,
+) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    let mut reader = BufReader::new(read_half);
+    let mut out = &stream;
+    if let Ok(Some(req)) = net::read_request(&mut reader) {
+        let _ = route(&req, &mut out, &cmd_tx, &ids);
+    }
+}
+
+/// The serving edge: a TCP listener, per-connection threads, and the
+/// scheduler loop, bundled behind one handle. Dropping the handle
+/// shuts everything down in order (stop accepting → finish open
+/// connections → close the command channel → drain the scheduler).
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    cmd_tx: Option<mpsc::Sender<Cmd>>,
+    accept: Option<JoinHandle<()>>,
+    conns: Arc<Mutex<Vec<JoinHandle<()>>>>,
+    sched_loop: Option<JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (use port 0 for an OS-assigned port) and start
+    /// serving `sched`. The scheduler must be idle-or-fresh; it is
+    /// consumed — the server's loop thread owns it from here on.
+    pub fn start(sched: Scheduler, addr: &str) -> crate::Result<HttpServer> {
+        let listener = TcpListener::bind(addr)
+            .with_context(|| format!("binding {addr}"))?;
+        let local = listener.local_addr().context("local_addr")?;
+        let (cmd_tx, cmd_rx) = mpsc::channel();
+        let sched_loop = thread::Builder::new()
+            .name("http-sched".into())
+            .spawn(move || scheduler_loop(sched, cmd_rx))
+            .context("spawning scheduler loop")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let conns: Arc<Mutex<Vec<JoinHandle<()>>>> =
+            Arc::new(Mutex::new(Vec::new()));
+        let ids = Arc::new(AtomicU64::new(1));
+        let accept = {
+            let stop = stop.clone();
+            let conns = conns.clone();
+            let cmd_tx = cmd_tx.clone();
+            thread::Builder::new()
+                .name("http-accept".into())
+                .spawn(move || {
+                    for stream in listener.incoming() {
+                        if stop.load(Ordering::SeqCst) {
+                            break;
+                        }
+                        let Ok(stream) = stream else { continue };
+                        let tx = cmd_tx.clone();
+                        let ids = ids.clone();
+                        let handle = thread::Builder::new()
+                            .name("http-conn".into())
+                            .spawn(move || handle_conn(stream, tx, ids));
+                        if let Ok(h) = handle {
+                            conns.lock().unwrap().push(h);
+                        }
+                    }
+                })
+                .context("spawning accept loop")?
+        };
+        Ok(HttpServer {
+            addr: local,
+            stop,
+            cmd_tx: Some(cmd_tx),
+            accept: Some(accept),
+            conns,
+            sched_loop: Some(sched_loop),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Orderly shutdown; also runs on drop. Open streams finish —
+    /// the scheduler loop drains admitted work before exiting.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        if self.accept.is_none() && self.cmd_tx.is_none() {
+            return;
+        }
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the accept loop so it observes the stop flag.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        let handles = std::mem::take(&mut *self.conns.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+        // Last sender gone → the scheduler loop drains and exits.
+        self.cmd_tx = None;
+        if let Some(h) = self.sched_loop.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn completion_body_defaults_and_overrides() {
+        let (req, stream) =
+            parse_completion(br#"{"prompt": [1, 2, 3]}"#, 7).unwrap();
+        assert_eq!(req.id, 7);
+        assert_eq!(req.prompt, vec![1, 2, 3]);
+        assert_eq!(req.max_new_tokens, 16);
+        assert_eq!(req.eos, None);
+        assert_eq!(req.sampling, Sampling::Greedy);
+        assert_eq!(req.priority, Priority::Interactive);
+        assert!(!stream);
+
+        let body = br#"{"prompt": [4], "max_new_tokens": 3, "eos": 0,
+                        "temperature": 0.5, "seed": 9,
+                        "priority": "batch", "stream": true}"#;
+        let (req, stream) = parse_completion(body, 8).unwrap();
+        assert_eq!(req.max_new_tokens, 3);
+        assert_eq!(req.eos, Some(0));
+        assert_eq!(
+            req.sampling,
+            Sampling::Temperature { temp: 0.5, seed: 9 }
+        );
+        assert_eq!(req.priority, Priority::Batch);
+        assert!(stream);
+
+        // `"eos": null` means "no stop token", same as omitting it.
+        let (req, _) =
+            parse_completion(br#"{"prompt": [4], "eos": null}"#, 9).unwrap();
+        assert_eq!(req.eos, None);
+    }
+
+    #[test]
+    fn completion_body_rejects_malformed_input() {
+        for body in [
+            &b"not json"[..],
+            br#"{"max_new_tokens": 4}"#,           // prompt missing
+            br#"{"prompt": "abc"}"#,               // prompt not an array
+            br#"{"prompt": [1], "priority": "x"}"#, // unknown class
+            br#"{"prompt": [1], "stream": 3}"#,    // stream not a bool
+        ] {
+            assert!(parse_completion(body, 1).is_err(), "{body:?}");
+        }
+    }
+
+    #[test]
+    fn result_json_carries_tokens_and_timing() {
+        use super::super::scheduler::FinishReason;
+        use std::time::Duration;
+        let r = DecodeResult {
+            id: 3,
+            prompt_len: 5,
+            priority: Priority::Batch,
+            tokens: vec![7, 8, 0],
+            finish: FinishReason::Eos,
+            queue_wait: Duration::from_millis(2),
+            ttft: Duration::from_millis(10),
+            itl: vec![Duration::from_millis(4); 2],
+        };
+        let j = result_json(&r);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("id").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(parsed.get("finish").unwrap().as_str().unwrap(), "eos");
+        assert_eq!(
+            parsed.get("priority").unwrap().as_str().unwrap(),
+            "batch"
+        );
+        assert_eq!(
+            parsed.get("tokens").unwrap().as_f64_vec().unwrap(),
+            vec![7.0, 8.0, 0.0]
+        );
+        assert_eq!(parsed.get("itl_ms").unwrap().as_arr().unwrap().len(), 2);
+        assert!(
+            (parsed.get("ttft_ms").unwrap().as_f64().unwrap() - 10.0).abs()
+                < 1e-9
+        );
+    }
+}

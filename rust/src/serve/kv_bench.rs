@@ -31,10 +31,11 @@ use anyhow::Context;
 
 use super::cache::operand_cache;
 use super::decode::{generate_reforward, DecodeEngine, Sampling};
-use super::decode_bench::{bench_dims, pct_ms};
+use super::decode_bench::bench_dims;
 use super::kvpool::KvPool;
 use super::packed_model::PackedModel;
-use super::scheduler::{DecodeRequest, Scheduler, SchedulerConfig};
+use super::scheduler::{DecodeRequest, Priority, Scheduler, SchedulerConfig};
+use crate::stats::percentiles;
 use crate::dist::Pcg64;
 use crate::model::weights::Params;
 use crate::runtime::qconfig::{PerLayerQConfig, QConfig};
@@ -117,7 +118,11 @@ fn exact_stream_gate(
         .collect::<crate::Result<_>>()?;
     let mut sched = Scheduler::new(
         DecodeEngine::with_pool(model.clone(), pool.clone())?,
-        SchedulerConfig { max_active: 4, max_prefill_per_step: 4 },
+        SchedulerConfig {
+            max_active: 4,
+            max_prefill_per_step: 4,
+            ..SchedulerConfig::default()
+        },
     );
     for (id, p) in prompts.iter().enumerate() {
         sched.submit(DecodeRequest {
@@ -126,6 +131,7 @@ fn exact_stream_gate(
             max_new_tokens: max_new,
             eos: None,
             sampling: Sampling::Greedy,
+            priority: Priority::Interactive,
         })?;
     }
     let results = sched.run()?;
@@ -257,6 +263,7 @@ pub fn run(opts: &KvBenchOpts) -> crate::Result<Json> {
             SchedulerConfig {
                 max_active: opts.concurrency,
                 max_prefill_per_step: opts.concurrency,
+                ..SchedulerConfig::default()
             },
         );
         let t0 = Instant::now();
@@ -270,6 +277,7 @@ pub fn run(opts: &KvBenchOpts) -> crate::Result<Json> {
                     temp: 0.9,
                     seed: 0xB0B ^ id as u64,
                 },
+                priority: Priority::Interactive,
             })?;
         }
         let results = sched.run()?;
@@ -284,6 +292,8 @@ pub fn run(opts: &KvBenchOpts) -> crate::Result<Json> {
             .collect();
         let peak = sched.peak_kv_resident_bytes();
         let stats = pool.stats();
+        let [ttft_p50, ttft_p95] = percentiles(&mut ttft, [50.0, 95.0]);
+        let [itl_p50, itl_p95] = percentiles(&mut itl, [50.0, 95.0]);
         // two independent accountings must agree: the allocator's
         // high-water mark vs the scheduler's per-sequence residency sum
         // (pages only move inside spine calls, which end exactly where
@@ -295,8 +305,8 @@ pub fn run(opts: &KvBenchOpts) -> crate::Result<Json> {
         println!(
             "   {tok_s:8.1} tok/s  ttft p50 {:6.1} ms  itl p50 {:6.2} ms  \
              peak KV {peak} B ({:.0}% of budget)  {} preemptions",
-            pct_ms(&mut ttft.clone(), 50.0),
-            pct_ms(&mut itl.clone(), 50.0),
+            ttft_p50,
+            itl_p50,
             100.0 * peak as f64 / budget as f64,
             sched.preemptions(),
         );
@@ -330,10 +340,10 @@ pub fn run(opts: &KvBenchOpts) -> crate::Result<Json> {
                 ("requests", json::num(opts.requests as f64)),
                 ("tokens", json::num(tokens as f64)),
                 ("tok_per_s", json::num(tok_s)),
-                ("ttft_p50_ms", json::num(pct_ms(&mut ttft, 50.0))),
-                ("ttft_p95_ms", json::num(pct_ms(&mut ttft, 95.0))),
-                ("itl_p50_ms", json::num(pct_ms(&mut itl, 50.0))),
-                ("itl_p95_ms", json::num(pct_ms(&mut itl, 95.0))),
+                ("ttft_p50_ms", json::num(ttft_p50)),
+                ("ttft_p95_ms", json::num(ttft_p95)),
+                ("itl_p50_ms", json::num(itl_p50)),
+                ("itl_p95_ms", json::num(itl_p95)),
                 ("kv_peak_bytes", json::num(peak as f64)),
                 ("preemptions", json::num(sched.preemptions() as f64)),
                 (

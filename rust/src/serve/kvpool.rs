@@ -53,7 +53,47 @@
 //! front and evict-and-requeue instead of failing mid-forward. A failed
 //! allocation (budget exhausted) changes nothing and is counted in
 //! [`KvPoolStats::failed_allocs`].
+//!
+//! # Prefix sharing (hash-consed read-only pages)
+//!
+//! Production traffic is dominated by shared system prompts: N
+//! concurrent requests over one 1k-token prefix write N bit-identical
+//! copies of its KV pages (prefill is deterministic, so identical
+//! prompt → identical rows → identical encoded bytes). With
+//! [`KvPool::build_with`]`(.., prefix_sharing: true)` the pool
+//! **hash-conses full pages by content**: the moment a page fills, its
+//! payload is digested (dual independent FNV-1a over the page words,
+//! confirmed by a full byte compare on any digest hit — a hash
+//! collision can never alias two different pages) and looked up in a
+//! per-codec intern table. A hit repoints the stream at the canonical
+//! page, bumps its refcount, and physically frees the duplicate;
+//! a miss makes this page the canonical copy. Sharing is invisible to
+//! readers — a shared page decodes the same bytes as the private copy
+//! it replaced, so token streams stay bit-identical to the unshared
+//! pool (`rust/tests/prefix.rs` pins this across codecs, eviction, and
+//! cancellation).
+//!
+//! Copy-on-write degenerates structurally: only **full** pages are
+//! interned, full pages are never written again (appends land in the
+//! tail page at `rows % page_rows`), and every tail page is private.
+//! Divergence after a shared prefix therefore needs no write fault —
+//! the diverging rows go to pages that were never shared. An explicit
+//! prefix clone ([`SeqKv::fork`]) shares full pages by refcount bump
+//! and deep-copies only the partial tail.
+//!
+//! Accounting under sharing: [`KvPoolStats::used_bytes`] and
+//! `live_pages` count **physical** pages (a page freed by a dedup hit
+//! really is released), [`KvPoolStats::shared_bytes`] is the extra
+//! bytes an unshared pool would hold (`Σ (refs − 1) · page_bytes`),
+//! and refcounted frees only destroy a page at its last reference.
+//! [`KvPool::bytes_for_rows`] stays deliberately conservative — it
+//! prices an append as if every page were private, so a reservation
+//! can only over-estimate; dedup then returns the saved pages.
+//! [`KvPool::build`] keeps sharing **off** so existing byte-accounting
+//! contracts (kv-bench's `peak_bytes`/drain cross-checks) are
+//! unchanged.
 
+use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
 
 use anyhow::ensure;
@@ -61,6 +101,7 @@ use anyhow::ensure;
 use crate::quant::packed::{encode_block, pack_codes, unpack_codes, LevelCodec};
 use crate::quant::QuantScheme;
 use crate::util::simd;
+use crate::util::{fnv1a_words, FNV_OFFSET_BASIS};
 use crate::runtime::artifacts::ModelDims;
 use crate::runtime::qconfig::PerLayerQConfig;
 
@@ -228,10 +269,21 @@ impl LayerCodec {
     }
 }
 
-/// One live page: encoded row payload plus its fill level.
+/// Intern-table key: codec space + dual independent page digests.
+/// Distinct codecs decode the same bytes differently, so pages only
+/// dedup inside one codec space (layers with equal codec ids share a
+/// space; K and V streams of one layer always do).
+type DedupKey = (u32, u64, u64);
+
+/// One live page: encoded row payload plus its fill level and, under
+/// prefix sharing, its reference count / intern-table key.
 struct Page {
     data: Vec<u8>,
     rows: usize,
+    /// streams holding this page (> 1 only for hash-consed full pages)
+    refs: u32,
+    /// set iff this page is a canonical entry in `Inner::dedup`
+    interned: Option<DedupKey>,
 }
 
 /// Allocator state behind the pool mutex.
@@ -239,11 +291,84 @@ struct Inner {
     /// handle → page (freed handles are `None` and recycled)
     slots: Vec<Option<Page>>,
     free_slots: Vec<u32>,
+    /// content digest → canonical page handle (prefix sharing only)
+    dedup: HashMap<DedupKey, u32>,
     used_bytes: usize,
     peak_bytes: usize,
     allocs: u64,
     frees: u64,
     failed: u64,
+    dedup_hits: u64,
+    /// `Σ (refs − 1) · page_bytes` over live pages — what an unshared
+    /// pool would additionally hold
+    shared_saved: usize,
+}
+
+impl Inner {
+    /// Allocate one `pb`-byte page against `budget`.
+    fn alloc_page(&mut self, pb: usize, budget: usize) -> crate::Result<u32> {
+        if self.used_bytes + pb > budget {
+            self.failed += 1;
+            anyhow::bail!(
+                "KV pool budget exhausted: {} used + {pb} page bytes > \
+                 {budget} budget (evict or raise the budget)",
+                self.used_bytes,
+            );
+        }
+        self.used_bytes += pb;
+        self.peak_bytes = self.peak_bytes.max(self.used_bytes);
+        self.allocs += 1;
+        let page =
+            Page { data: vec![0u8; pb], rows: 0, refs: 1, interned: None };
+        let id = match self.free_slots.pop() {
+            Some(id) => {
+                self.slots[id as usize] = Some(page);
+                id
+            }
+            None => {
+                self.slots.push(Some(page));
+                (self.slots.len() - 1) as u32
+            }
+        };
+        Ok(id)
+    }
+
+    /// Drop one reference; the page is destroyed (memory released, not
+    /// retained) only at its last reference, so `allocs − frees` and
+    /// `used_bytes` always describe physical pages.
+    fn free_page(&mut self, id: u32) {
+        let page = self.slots[id as usize].as_mut().expect("double free");
+        if page.refs > 1 {
+            page.refs -= 1;
+            self.shared_saved -= page.data.len();
+            return;
+        }
+        let page = self.slots[id as usize].take().expect("double free");
+        if let Some(key) = page.interned {
+            self.dedup.remove(&key);
+        }
+        self.used_bytes -= page.data.len();
+        self.frees += 1;
+        self.free_slots.push(id);
+    }
+}
+
+/// Dual independent FNV-1a digests over a page payload (u64 LE words,
+/// zero-padded tail). Two 64-bit hashes make an accidental collision
+/// astronomically unlikely, and the intern path byte-compares on every
+/// digest hit anyway — the digests are an index, never the identity.
+fn page_digest(data: &[u8]) -> (u64, u64) {
+    let words = || {
+        data.chunks(8).map(|c| {
+            let mut b = [0u8; 8];
+            b[..c.len()].copy_from_slice(c);
+            u64::from_le_bytes(b)
+        })
+    };
+    (
+        fnv1a_words(words(), FNV_OFFSET_BASIS),
+        fnv1a_words(words(), !FNV_OFFSET_BASIS),
+    )
 }
 
 /// A snapshot of the pool's allocation counters.
@@ -261,6 +386,12 @@ pub struct KvPoolStats {
     pub used_bytes: usize,
     /// High-water mark of [`KvPoolStats::used_bytes`].
     pub peak_bytes: usize,
+    /// Full pages deduplicated against an existing canonical copy
+    /// (prefix sharing; 0 when sharing is off).
+    pub dedup_hits: u64,
+    /// Extra bytes an unshared pool would currently hold:
+    /// `Σ (refs − 1) · page_bytes` over live pages.
+    pub shared_bytes: usize,
 }
 
 /// The process-wide paged KV arena (see module docs): fixed-row pages,
@@ -273,6 +404,10 @@ pub struct KvPool {
     page_rows: usize,
     budget: usize,
     layers: Vec<LayerCodec>,
+    /// per-layer dedup space: layers with equal codec ids share one
+    sharing_spaces: Vec<u32>,
+    /// hash-cons full pages by content (see module docs)
+    sharing: bool,
     inner: Mutex<Inner>,
 }
 
@@ -281,13 +416,30 @@ impl KvPool {
     /// (`quant_on == false` → Exact; anything else → Mx with that
     /// element/scale at `block_size`-wide blocks along `d_model`).
     /// `page_rows` cache rows per page; `budget_bytes` caps the live
-    /// page bytes across all sequences.
+    /// page bytes across all sequences. Prefix sharing stays **off**
+    /// (see [`KvPool::build_with`]).
     pub fn build(
         dims: &ModelDims,
         kv_cfg: &PerLayerQConfig,
         block_size: usize,
         page_rows: usize,
         budget_bytes: usize,
+    ) -> crate::Result<Arc<KvPool>> {
+        Self::build_with(dims, kv_cfg, block_size, page_rows, budget_bytes, false)
+    }
+
+    /// [`KvPool::build`] with prefix sharing selectable: when
+    /// `prefix_sharing` is true, full pages are hash-consed by content
+    /// so identical prefixes across sequences (and identical K/V
+    /// streams) hold one refcounted physical copy — see the module
+    /// docs for the exactness and accounting contracts.
+    pub fn build_with(
+        dims: &ModelDims,
+        kv_cfg: &PerLayerQConfig,
+        block_size: usize,
+        page_rows: usize,
+        budget_bytes: usize,
+        prefix_sharing: bool,
     ) -> crate::Result<Arc<KvPool>> {
         ensure!(page_rows > 0, "page_rows must be positive");
         ensure!(dims.n_layers > 0 && dims.d_model > 0, "degenerate dims");
@@ -301,20 +453,39 @@ impl KvPool {
             };
             layers.push(lc);
         }
+        let mut space_ids: Vec<String> = Vec::new();
+        let sharing_spaces = layers
+            .iter()
+            .map(|lc| {
+                let id = lc.id();
+                match space_ids.iter().position(|s| *s == id) {
+                    Some(i) => i as u32,
+                    None => {
+                        space_ids.push(id);
+                        (space_ids.len() - 1) as u32
+                    }
+                }
+            })
+            .collect();
         Ok(Arc::new(KvPool {
             d_model: dims.d_model,
             n_layers: dims.n_layers,
             page_rows,
             budget: budget_bytes,
             layers,
+            sharing_spaces,
+            sharing: prefix_sharing,
             inner: Mutex::new(Inner {
                 slots: Vec::new(),
                 free_slots: Vec::new(),
+                dedup: HashMap::new(),
                 used_bytes: 0,
                 peak_bytes: 0,
                 allocs: 0,
                 frees: 0,
                 failed: 0,
+                dedup_hits: 0,
+                shared_saved: 0,
             }),
         }))
     }
@@ -369,6 +540,12 @@ impl KvPool {
         self.budget.saturating_sub(self.used_bytes())
     }
 
+    /// Whether full pages are hash-consed by content (see
+    /// [`KvPool::build_with`]).
+    pub fn prefix_sharing(&self) -> bool {
+        self.sharing
+    }
+
     /// Allocation counters snapshot.
     pub fn stats(&self) -> KvPoolStats {
         let g = self.inner.lock().unwrap();
@@ -379,6 +556,8 @@ impl KvPool {
             live_pages: (g.allocs - g.frees) as usize,
             used_bytes: g.used_bytes,
             peak_bytes: g.peak_bytes,
+            dedup_hits: g.dedup_hits,
+            shared_bytes: g.shared_saved,
         }
     }
 
@@ -458,40 +637,58 @@ impl KvPool {
     /// Allocate one `layer` page against the budget.
     fn alloc(&self, layer: usize) -> crate::Result<u32> {
         let pb = self.page_bytes(layer);
-        let mut g = self.inner.lock().unwrap();
-        if g.used_bytes + pb > self.budget {
-            g.failed += 1;
-            anyhow::bail!(
-                "KV pool budget exhausted: {} used + {pb} page bytes > {} \
-                 budget (evict or raise the budget)",
-                g.used_bytes,
-                self.budget
-            );
-        }
-        g.used_bytes += pb;
-        g.peak_bytes = g.peak_bytes.max(g.used_bytes);
-        g.allocs += 1;
-        let page = Page { data: vec![0u8; pb], rows: 0 };
-        let id = match g.free_slots.pop() {
-            Some(id) => {
-                g.slots[id as usize] = Some(page);
-                id
-            }
-            None => {
-                g.slots.push(Some(page));
-                (g.slots.len() - 1) as u32
-            }
-        };
-        Ok(id)
+        self.inner.lock().unwrap().alloc_page(pb, self.budget)
     }
 
-    /// Free one page (memory is released, not retained).
+    /// Drop one reference to a page (see [`Inner::free_page`]).
     fn free(&self, id: u32) {
-        let mut g = self.inner.lock().unwrap();
-        let page = g.slots[id as usize].take().expect("double free");
-        g.used_bytes -= page.data.len();
-        g.frees += 1;
-        g.free_slots.push(id);
+        self.inner.lock().unwrap().free_page(id);
+    }
+
+    /// Hash-cons the just-filled page at `stream.pages[pidx]`: on a
+    /// confirmed content match the stream is repointed at the canonical
+    /// page and its private copy physically freed; otherwise this page
+    /// becomes the canonical copy for its digest. Runs under the append
+    /// lock, once per page fill.
+    fn intern_full_page(
+        &self,
+        g: &mut Inner,
+        stream: &mut Stream,
+        pidx: usize,
+        layer: usize,
+    ) {
+        let own_id = stream.pages[pidx];
+        let own = g.slots[own_id as usize].as_ref().expect("page is live");
+        debug_assert_eq!(own.rows, self.page_rows);
+        let key: DedupKey = {
+            let (h1, h2) = page_digest(&own.data);
+            (self.sharing_spaces[layer], h1, h2)
+        };
+        match g.dedup.get(&key).copied() {
+            Some(canon_id) => {
+                let canon = g.slots[canon_id as usize]
+                    .as_ref()
+                    .expect("canonical page is live");
+                let own = g.slots[own_id as usize].as_ref().unwrap();
+                if canon.data != own.data {
+                    // digest collision: both pages stay private
+                    return;
+                }
+                let pb = canon.data.len();
+                let canon =
+                    g.slots[canon_id as usize].as_mut().unwrap();
+                canon.refs += 1;
+                g.shared_saved += pb;
+                g.dedup_hits += 1;
+                stream.pages[pidx] = canon_id;
+                g.free_page(own_id);
+            }
+            None => {
+                g.dedup.insert(key, own_id);
+                g.slots[own_id as usize].as_mut().unwrap().interned =
+                    Some(key);
+            }
+        }
     }
 
     /// Append `rows` (`n · d_model` values) to one layer stream. Every
@@ -527,15 +724,20 @@ impl KvPool {
         let rb = lc.row_bytes;
         let mut g = self.inner.lock().unwrap();
         for row in rows.chunks_exact(d) {
-            let page_id = stream.pages[stream.rows / self.page_rows];
+            let pidx = stream.rows / self.page_rows;
+            let page_id = stream.pages[pidx];
             let slot = stream.rows % self.page_rows;
             let page = g.slots[page_id as usize]
                 .as_mut()
                 .expect("stream page is live");
+            debug_assert_eq!(page.refs, 1, "shared pages are read-only");
             debug_assert_eq!(page.rows, slot);
             lc.encode_row(row, &mut page.data[slot * rb..(slot + 1) * rb], codes)?;
             page.rows = slot + 1;
             stream.rows += 1;
+            if self.sharing && slot + 1 == self.page_rows {
+                self.intern_full_page(&mut g, stream, pidx, layer);
+            }
         }
         Ok(())
     }
@@ -591,6 +793,45 @@ impl KvPool {
 struct Stream {
     pages: Vec<u32>,
     rows: usize,
+}
+
+/// Clone one stream for [`PagedKv::fork`]: full pages are shared by a
+/// refcount bump, partial (tail) pages deep-copied into fresh private
+/// pages. Every touched page id is recorded in `bumped`/`fresh` so a
+/// mid-clone budget failure can be rolled back exactly.
+fn clone_stream(
+    pool: &KvPool,
+    g: &mut Inner,
+    layer: usize,
+    src: &Stream,
+    bumped: &mut Vec<u32>,
+    fresh: &mut Vec<u32>,
+) -> crate::Result<Stream> {
+    let mut pages = Vec::with_capacity(src.pages.len());
+    for &id in &src.pages {
+        let (full, len) = {
+            let p = g.slots[id as usize].as_ref().expect("page is live");
+            (p.rows == pool.page_rows, p.data.len())
+        };
+        if full {
+            g.slots[id as usize].as_mut().unwrap().refs += 1;
+            g.shared_saved += len;
+            bumped.push(id);
+            pages.push(id);
+        } else {
+            let nid = g.alloc_page(pool.page_bytes(layer), pool.budget)?;
+            let (data, rows) = {
+                let p = g.slots[id as usize].as_ref().unwrap();
+                (p.data.clone(), p.rows)
+            };
+            let np = g.slots[nid as usize].as_mut().unwrap();
+            np.data.copy_from_slice(&data);
+            np.rows = rows;
+            fresh.push(nid);
+            pages.push(nid);
+        }
+    }
+    Ok(Stream { pages, rows: src.rows })
 }
 
 /// A pool-backed sequence cache: per layer, one K and one V page
@@ -697,6 +938,53 @@ impl PagedKv {
         for s in self.k.iter_mut().chain(self.v.iter_mut()) {
             self.pool.stream_free(s);
         }
+    }
+
+    /// Clone this sequence's resident prefix into a new cache. Full
+    /// pages are shared by refcount bump — copy-on-write degenerates
+    /// structurally, because shared pages are immutable and divergence
+    /// writes land in private tail pages — while partial tail pages
+    /// are deep-copied. The whole clone is priced against the budget
+    /// under one lock: a mid-clone budget failure rolls back every
+    /// refcount bump and fresh page, changing nothing.
+    pub(crate) fn fork(&self) -> crate::Result<PagedKv> {
+        let mut g = self.pool.inner.lock().unwrap();
+        let mut bumped: Vec<u32> = Vec::new();
+        let mut fresh: Vec<u32> = Vec::new();
+        let mut k = Vec::with_capacity(self.k.len());
+        let mut v = Vec::with_capacity(self.v.len());
+        let mut err = None;
+        'clone: for (dst, streams) in [(&mut k, &self.k), (&mut v, &self.v)] {
+            for (layer, src) in streams.iter().enumerate() {
+                match clone_stream(
+                    &self.pool,
+                    &mut g,
+                    layer,
+                    src,
+                    &mut bumped,
+                    &mut fresh,
+                ) {
+                    Ok(s) => dst.push(s),
+                    Err(e) => {
+                        err = Some(e);
+                        break 'clone;
+                    }
+                }
+            }
+        }
+        if let Some(e) = err {
+            for id in bumped.into_iter().chain(fresh) {
+                g.free_page(id);
+            }
+            return Err(e);
+        }
+        drop(g);
+        Ok(PagedKv {
+            pool: self.pool.clone(),
+            k,
+            v,
+            codes: vec![0u8; self.pool.d_model],
+        })
     }
 }
 
@@ -910,5 +1198,162 @@ mod tests {
             "K+V row bytes across layers"
         );
         assert_eq!(pool.codec_id(0), "exact");
+    }
+
+    /// 8 distinct rows of d_model = 8 (two full 4-row pages' worth).
+    fn eight_rows() -> Vec<f32> {
+        (0..64).map(|i| (i as f32 + 1.0) / 7.0).collect()
+    }
+
+    #[test]
+    fn shared_pages_hash_cons_to_one_physical_copy() {
+        let d = dims(8, 1);
+        let pool = KvPool::build_with(
+            &d,
+            &PerLayerQConfig::uniform(QConfig::baseline()),
+            1,
+            4,
+            1 << 20,
+            true,
+        )
+        .unwrap();
+        assert!(pool.prefix_sharing());
+        let pb = pool.page_bytes(0);
+        let rows = eight_rows();
+        // one sequence: its V stream dedups against its K stream
+        let mut kv1 = PagedKv::new(pool.clone());
+        kv1.append(0, &rows, &rows).unwrap();
+        let s = pool.stats();
+        assert_eq!(s.allocs, 4, "2 K + 2 V pages allocated");
+        assert_eq!(s.frees, 2, "both V pages deduplicated away");
+        assert_eq!(s.live_pages, 2);
+        assert_eq!(s.used_bytes, 2 * pb, "one physical prefix copy");
+        assert_eq!(s.dedup_hits, 2);
+        assert_eq!(s.shared_bytes, 2 * pb);
+        // a second sequence over the same prefix adds zero bytes
+        let mut kv2 = PagedKv::new(pool.clone());
+        kv2.append(0, &rows, &rows).unwrap();
+        let s = pool.stats();
+        assert_eq!(s.used_bytes, 2 * pb, "still one physical copy");
+        assert_eq!(s.dedup_hits, 6);
+        assert_eq!(s.shared_bytes, 6 * pb, "3 extra holders × 2 pages");
+        assert_eq!(s.live_pages, 2);
+        // sharing is invisible to readers: bit-exact gathers
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        kv2.gather(0, &mut k, &mut v);
+        for (a, b) in rows.iter().zip(k.iter().chain(&v)) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // refcounted free: kv1's release leaves kv2's pages live…
+        kv1.reset();
+        assert_eq!(pool.used_bytes(), 2 * pb);
+        kv2.gather(0, &mut k, &mut v);
+        for (a, b) in rows.iter().zip(&k) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // …and the last reference drains the pool to zero
+        kv2.reset();
+        let s = pool.stats();
+        assert_eq!(s.used_bytes, 0);
+        assert_eq!(s.allocs, s.frees);
+        assert_eq!(s.shared_bytes, 0);
+    }
+
+    #[test]
+    fn sharing_stays_off_in_the_default_build() {
+        let d = dims(8, 1);
+        let pool = KvPool::exact(&d, 4, 1 << 20).unwrap();
+        assert!(!pool.prefix_sharing());
+        let rows = eight_rows();
+        let mut kv1 = PagedKv::new(pool.clone());
+        let mut kv2 = PagedKv::new(pool.clone());
+        kv1.append(0, &rows, &rows).unwrap();
+        kv2.append(0, &rows, &rows).unwrap();
+        let s = pool.stats();
+        assert_eq!(s.dedup_hits, 0);
+        assert_eq!(s.shared_bytes, 0);
+        assert_eq!(s.used_bytes, 8 * pool.page_bytes(0), "every copy private");
+    }
+
+    #[test]
+    fn fork_shares_full_pages_and_copies_the_tail() {
+        let d = dims(8, 1);
+        let pool = KvPool::build_with(
+            &d,
+            &PerLayerQConfig::uniform(QConfig::baseline()),
+            1,
+            4,
+            1 << 20,
+            true,
+        )
+        .unwrap();
+        let pb = pool.page_bytes(0);
+        let rows: Vec<f32> = eight_rows()[..48].to_vec(); // 6 rows
+        let mut base = PagedKv::new(pool.clone());
+        base.append(0, &rows, &rows).unwrap();
+        // K: full page (canonical) + 2-row tail; V: shared full + tail
+        let used0 = pool.used_bytes();
+        assert_eq!(used0, 3 * pb);
+        let shared0 = pool.stats().shared_bytes;
+        // fork: both full-page holders bump refs, both tails copied
+        let mut fork = base.fork().unwrap();
+        assert_eq!(pool.used_bytes(), used0 + 2 * pb, "only tails copied");
+        assert_eq!(pool.stats().shared_bytes, shared0 + 2 * pb);
+        assert_eq!(fork.rows(0), (6, 6));
+        // divergence: each side appends different rows; the shared
+        // prefix pages are immutable, so neither sees the other's tail
+        let a = vec![0.25f32; 16]; // 2 rows
+        let b = vec![-0.75f32; 16];
+        base.append(0, &a, &a).unwrap();
+        fork.append(0, &b, &b).unwrap();
+        let (mut kb, mut vb) = (Vec::new(), Vec::new());
+        let (mut kf, mut vf) = (Vec::new(), Vec::new());
+        base.gather(0, &mut kb, &mut vb);
+        fork.gather(0, &mut kf, &mut vf);
+        assert_eq!(kb[..48], rows[..], "base prefix intact");
+        assert_eq!(kf[..48], rows[..], "fork prefix intact");
+        assert_eq!(kb[48..], a[..]);
+        assert_eq!(kf[48..], b[..]);
+        // both sides release: the pool drains to zero
+        base.reset();
+        fork.reset();
+        let s = pool.stats();
+        assert_eq!(s.used_bytes, 0);
+        assert_eq!(s.allocs, s.frees);
+    }
+
+    #[test]
+    fn fork_budget_failure_rolls_back_exactly() {
+        let d = dims(8, 1);
+        let pb = 4 * 8 * 4;
+        // room for 4 pages: base usage is 3 (shared full + two tails),
+        // the fork needs 2 tail copies — the second one must fail
+        let pool = KvPool::build_with(
+            &d,
+            &PerLayerQConfig::uniform(QConfig::baseline()),
+            1,
+            4,
+            4 * pb,
+            true,
+        )
+        .unwrap();
+        let rows: Vec<f32> = eight_rows()[..48].to_vec(); // 6 rows
+        let mut base = PagedKv::new(pool.clone());
+        base.append(0, &rows, &rows).unwrap();
+        let before = pool.stats();
+        assert_eq!(before.used_bytes, 3 * pb);
+        let err = base.fork().unwrap_err();
+        assert!(format!("{err}").contains("budget exhausted"));
+        let after = pool.stats();
+        assert_eq!(after.used_bytes, before.used_bytes);
+        assert_eq!(after.live_pages, before.live_pages);
+        assert_eq!(after.shared_bytes, before.shared_bytes);
+        assert_eq!(after.failed_allocs, before.failed_allocs + 1);
+        // the base sequence is untouched and still drains cleanly
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        base.gather(0, &mut k, &mut v);
+        assert_eq!(k[..], rows[..]);
+        base.reset();
+        assert_eq!(pool.used_bytes(), 0);
     }
 }

@@ -77,16 +77,40 @@
 //! kv-bench` ([`kv_bench`]) measures the memory/throughput trade of
 //! Exact vs FP8 vs FP4 KV pages at a fixed page budget and emits
 //! `BENCH_kv.json`.
+//!
+//! The **serving edge** (DESIGN.md §14) puts real traffic in front of
+//! the scheduler:
+//!
+//! * [`kvpool`] grows **prefix sharing** — with
+//!   [`KvPool::build_with`]`(.., prefix_sharing: true)` full pages are
+//!   hash-consed by content, so N requests over one system prompt hold
+//!   exactly one refcounted copy of its KV pages; divergence is
+//!   structurally copy-on-write (tails are always private) and token
+//!   streams stay bit-identical to the unshared pool.
+//! * [`net`] + [`http`] — a dependency-free HTTP/1.1 front-end
+//!   ([`HttpServer`]): `POST /v1/completions` with chunked SSE token
+//!   streaming, priority classes ([`Priority`]) honored in admission
+//!   and eviction, client disconnects cancelling mid-flight requests
+//!   and draining their pool pages.
+//! * [`traffic`] — `microscale traffic-bench`: a seeded trace (bursty
+//!   Poisson arrivals, length mixtures, shared-prefix ratio,
+//!   disconnect fraction) driven over loopback sockets, emitting
+//!   `BENCH_traffic.json` with per-class p50/p95/p99 TTFT/ITL/queue
+//!   wait, goodput, shared-vs-unshared peak KV bytes, and a
+//!   host-independent pass verdict.
 
 pub mod batcher;
 pub mod bench;
 pub mod decode;
 pub mod decode_bench;
 pub mod engine;
+pub mod http;
 pub mod kv_bench;
 pub mod kvpool;
+pub mod net;
 pub mod packed_model;
 pub mod scheduler;
+pub mod traffic;
 
 /// The weight-operand cache lives in the quant layer
 /// ([`crate::quant::opcache`] — it is generic quant infrastructure);
@@ -99,8 +123,10 @@ pub use decode::{DecodeEngine, Sampler, Sampling};
 pub use engine::{EngineConfig, ResponseHandle, ServeEngine, ServeStats};
 pub use crate::quant::shard::{shard_ranges, ShardedOperand};
 pub use crate::util::par::ShardPool;
+pub use http::{HttpServer, ServerStats};
 pub use kvpool::{KvPool, KvPoolStats};
 pub use packed_model::{reference_forward, PackedModel, SeqKv};
 pub use scheduler::{
-    DecodeRequest, DecodeResult, FinishReason, Scheduler, SchedulerConfig,
+    DecodeRequest, DecodeResult, FinishReason, Priority, Scheduler,
+    SchedulerConfig, StreamEvent,
 };

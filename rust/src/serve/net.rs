@@ -1,0 +1,427 @@
+//! Minimal dependency-free HTTP/1.1 framing over buffered streams.
+//!
+//! The serving edge deliberately vendors its own wire layer instead of
+//! pulling a server crate (the repo's dependency budget is `anyhow`
+//! alone): everything here is plain `std` over `BufRead`/`Write`, and
+//! — like the rest of the crate — small enough to read in one sitting.
+//! Two sides live in this module:
+//!
+//! * **Server side** ([`read_request`], [`Response`] writers): parse
+//!   one request off a connection, answer it either as a fixed
+//!   `Content-Length` body or as a `Transfer-Encoding: chunked` stream
+//!   ([`ChunkWriter`]) — the latter is what carries SSE token events
+//!   out of `super::http` as they are emitted.
+//! * **Client side** ([`write_request`], [`read_response`],
+//!   [`read_chunk`]): enough of a client to drive the real server over
+//!   loopback from tests and `microscale traffic-bench`, including
+//!   incremental chunk reads so the bench can timestamp each token's
+//!   arrival (TTFT/ITL are measured at the socket, not in-process).
+//!
+//! Parsing is strict and bounded: request/status lines and headers cap
+//! at [`MAX_LINE_BYTES`], header count at [`MAX_HEADERS`], bodies at
+//! [`MAX_BODY_BYTES`]; anything over is an error, not a truncation.
+//! Header names are lowercased at parse time so lookups are
+//! case-insensitive per RFC 9110.
+
+use std::io::{BufRead, Write};
+
+use anyhow::{anyhow, ensure, Context};
+
+/// Longest accepted request/status/header line (bytes, CRLF excluded).
+pub const MAX_LINE_BYTES: usize = 16 * 1024;
+/// Most headers accepted per message.
+pub const MAX_HEADERS: usize = 64;
+/// Largest accepted message body (fixed-length or chunked total).
+pub const MAX_BODY_BYTES: usize = 1024 * 1024;
+
+/// One parsed HTTP request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    /// `(lowercased name, value)` in arrival order.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    /// First value of `name` (give it lowercased).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        debug_assert_eq!(name, name.to_ascii_lowercase());
+        self.headers
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// One parsed HTTP response (client side).
+#[derive(Debug)]
+pub struct Response {
+    pub status: u16,
+    /// `(lowercased name, value)` in arrival order.
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Response {
+    /// First value of `name` (give it lowercased).
+    pub fn header(&self, name: &str) -> Option<&str> {
+        debug_assert_eq!(name, name.to_ascii_lowercase());
+        self.headers
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Read one CRLF- (or bare-LF-) terminated line, bounded by
+/// [`MAX_LINE_BYTES`]. `Ok(None)` means clean EOF before any byte.
+fn read_line<R: BufRead>(r: &mut R) -> crate::Result<Option<String>> {
+    let mut buf = Vec::new();
+    loop {
+        let mut byte = [0u8; 1];
+        match r.read(&mut byte) {
+            Ok(0) => {
+                if buf.is_empty() {
+                    return Ok(None);
+                }
+                anyhow::bail!("connection closed mid-line");
+            }
+            Ok(_) => {
+                if byte[0] == b'\n' {
+                    if buf.last() == Some(&b'\r') {
+                        buf.pop();
+                    }
+                    let s = String::from_utf8(buf)
+                        .map_err(|_| anyhow!("non-UTF-8 header line"))?;
+                    return Ok(Some(s));
+                }
+                ensure!(
+                    buf.len() < MAX_LINE_BYTES,
+                    "header line exceeds {MAX_LINE_BYTES} bytes"
+                );
+                buf.push(byte[0]);
+            }
+            Err(e) => return Err(anyhow!("reading header line: {e}")),
+        }
+    }
+}
+
+/// Parse `Name: value` header lines until the blank separator.
+fn read_headers<R: BufRead>(
+    r: &mut R,
+) -> crate::Result<Vec<(String, String)>> {
+    let mut headers = Vec::new();
+    loop {
+        let line = read_line(r)?
+            .ok_or_else(|| anyhow!("connection closed inside headers"))?;
+        if line.is_empty() {
+            return Ok(headers);
+        }
+        ensure!(headers.len() < MAX_HEADERS, "more than {MAX_HEADERS} headers");
+        let (name, value) = line
+            .split_once(':')
+            .ok_or_else(|| anyhow!("malformed header line {line:?}"))?;
+        headers.push((
+            name.trim().to_ascii_lowercase(),
+            value.trim().to_string(),
+        ));
+    }
+}
+
+/// Read a `Content-Length` body (0 without the header), bounded by
+/// [`MAX_BODY_BYTES`].
+fn read_sized_body<R: BufRead>(
+    r: &mut R,
+    headers: &[(String, String)],
+) -> crate::Result<Vec<u8>> {
+    let len = match headers.iter().find(|(n, _)| n == "content-length") {
+        None => 0usize,
+        Some((_, v)) => v
+            .parse::<usize>()
+            .with_context(|| format!("bad content-length {v:?}"))?,
+    };
+    ensure!(len <= MAX_BODY_BYTES, "body of {len} bytes exceeds cap");
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)
+        .map_err(|e| anyhow!("reading {len}-byte body: {e}"))?;
+    Ok(body)
+}
+
+/// Parse one request off the connection. `Ok(None)` is a clean close
+/// before the request line (keep-alive peer going away) — not an
+/// error.
+pub fn read_request<R: BufRead>(
+    r: &mut R,
+) -> crate::Result<Option<Request>> {
+    let Some(line) = read_line(r)? else { return Ok(None) };
+    let mut parts = line.split_whitespace();
+    let (method, path, version) = match (
+        parts.next(),
+        parts.next(),
+        parts.next(),
+    ) {
+        (Some(m), Some(p), Some(v)) => (m, p, v),
+        _ => anyhow::bail!("malformed request line {line:?}"),
+    };
+    ensure!(
+        version == "HTTP/1.1" || version == "HTTP/1.0",
+        "unsupported HTTP version {version:?}"
+    );
+    let headers = read_headers(r)?;
+    let body = read_sized_body(r, &headers)?;
+    Ok(Some(Request {
+        method: method.to_string(),
+        path: path.to_string(),
+        headers,
+        body,
+    }))
+}
+
+/// Write a complete fixed-length response.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    body: &[u8],
+) -> crate::Result<()> {
+    write!(
+        w,
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )
+    .and_then(|()| w.write_all(body))
+    .and_then(|()| w.flush())
+    .map_err(|e| anyhow!("writing response: {e}"))
+}
+
+/// A `Transfer-Encoding: chunked` response in progress: the head goes
+/// out at construction, each [`ChunkWriter::chunk`] flushes
+/// immediately (token latency is the point), and [`ChunkWriter::end`]
+/// writes the terminal chunk. Any write error surfaces to the caller —
+/// that is the server's client-disconnect signal.
+pub struct ChunkWriter<W: Write> {
+    w: W,
+}
+
+impl<W: Write> ChunkWriter<W> {
+    pub fn start(
+        mut w: W,
+        status: u16,
+        reason: &str,
+        content_type: &str,
+    ) -> crate::Result<ChunkWriter<W>> {
+        write!(
+            w,
+            "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+             Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+        )
+        .and_then(|()| w.flush())
+        .map_err(|e| anyhow!("writing chunked head: {e}"))?;
+        Ok(ChunkWriter { w })
+    }
+
+    /// Send one chunk (empty input is skipped — a zero-length chunk
+    /// would terminate the stream).
+    pub fn chunk(&mut self, data: &[u8]) -> crate::Result<()> {
+        if data.is_empty() {
+            return Ok(());
+        }
+        write!(self.w, "{:x}\r\n", data.len())
+            .and_then(|()| self.w.write_all(data))
+            .and_then(|()| self.w.write_all(b"\r\n"))
+            .and_then(|()| self.w.flush())
+            .map_err(|e| anyhow!("writing chunk: {e}"))
+    }
+
+    /// Terminate the stream (the `0\r\n\r\n` chunk).
+    pub fn end(mut self) -> crate::Result<()> {
+        self.w
+            .write_all(b"0\r\n\r\n")
+            .and_then(|()| self.w.flush())
+            .map_err(|e| anyhow!("writing terminal chunk: {e}"))
+    }
+}
+
+/// Client side: write one request with an optional body.
+pub fn write_request<W: Write>(
+    w: &mut W,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> crate::Result<()> {
+    write!(
+        w,
+        "{method} {path} HTTP/1.1\r\nHost: localhost\r\n\
+         Content-Length: {}\r\nConnection: close\r\n\r\n",
+        body.len()
+    )
+    .and_then(|()| w.write_all(body))
+    .and_then(|()| w.flush())
+    .map_err(|e| anyhow!("writing request: {e}"))
+}
+
+/// Client side: read one chunk of a chunked body. `Ok(None)` is the
+/// terminal chunk. Trailer sections are not supported (the server
+/// never sends them).
+pub fn read_chunk<R: BufRead>(r: &mut R) -> crate::Result<Option<Vec<u8>>> {
+    let line = read_line(r)?
+        .ok_or_else(|| anyhow!("connection closed before chunk size"))?;
+    let size = usize::from_str_radix(line.trim(), 16)
+        .with_context(|| format!("bad chunk size {line:?}"))?;
+    ensure!(size <= MAX_BODY_BYTES, "chunk of {size} bytes exceeds cap");
+    if size == 0 {
+        // consume the blank line after the terminal chunk
+        let _ = read_line(r)?;
+        return Ok(None);
+    }
+    let mut data = vec![0u8; size];
+    r.read_exact(&mut data)
+        .map_err(|e| anyhow!("reading {size}-byte chunk: {e}"))?;
+    let blank = read_line(r)?
+        .ok_or_else(|| anyhow!("connection closed after chunk"))?;
+    ensure!(blank.is_empty(), "missing CRLF after chunk");
+    Ok(Some(data))
+}
+
+/// Client side: read a response's status line and headers, leaving the
+/// body unread — the hook for latency-measuring clients that need a
+/// timestamp per [`read_chunk`] (the traffic bench's TTFT/ITL probes).
+pub fn read_response_head<R: BufRead>(
+    r: &mut R,
+) -> crate::Result<(u16, Vec<(String, String)>)> {
+    let line = read_line(r)?
+        .ok_or_else(|| anyhow!("connection closed before status line"))?;
+    let mut parts = line.split_whitespace();
+    let (version, status) = match (parts.next(), parts.next()) {
+        (Some(v), Some(s)) => (v, s),
+        _ => anyhow::bail!("malformed status line {line:?}"),
+    };
+    ensure!(
+        version.starts_with("HTTP/1."),
+        "unsupported HTTP version {version:?}"
+    );
+    let status: u16 = status
+        .parse()
+        .with_context(|| format!("bad status code {status:?}"))?;
+    Ok((status, read_headers(r)?))
+}
+
+/// Client side: read one full response — status line, headers, and the
+/// whole body (`Content-Length` or chunked, concatenated).
+pub fn read_response<R: BufRead>(r: &mut R) -> crate::Result<Response> {
+    let (status, headers) = read_response_head(r)?;
+    let chunked = headers
+        .iter()
+        .any(|(n, v)| n == "transfer-encoding" && v.eq_ignore_ascii_case("chunked"));
+    let body = if chunked {
+        let mut body = Vec::new();
+        while let Some(chunk) = read_chunk(r)? {
+            ensure!(
+                body.len() + chunk.len() <= MAX_BODY_BYTES,
+                "chunked body exceeds {MAX_BODY_BYTES} bytes"
+            );
+            body.extend_from_slice(&chunk);
+        }
+        body
+    } else {
+        read_sized_body(r, &headers)?
+    };
+    Ok(Response { status, headers, body })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    #[test]
+    fn parses_a_request_with_body() {
+        let raw = b"POST /v1/completions HTTP/1.1\r\nHost: x\r\n\
+                    Content-Type: application/json\r\nContent-Length: 2\r\n\
+                    \r\n{}GET /next HTTP/1.1\r\n\r\n";
+        let mut r = Cursor::new(&raw[..]);
+        let req = read_request(&mut r).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/completions");
+        assert_eq!(req.header("content-type"), Some("application/json"));
+        assert_eq!(req.body, b"{}");
+        // pipelined second request parses from where the body ended
+        let next = read_request(&mut r).unwrap().unwrap();
+        assert_eq!((next.method.as_str(), next.path.as_str()), ("GET", "/next"));
+        assert!(next.body.is_empty());
+        // clean EOF is None, not an error
+        assert!(read_request(&mut r).unwrap().is_none());
+    }
+
+    #[test]
+    fn rejects_malformed_and_oversized_requests() {
+        let cases: &[&[u8]] = &[
+            b"GARBAGE\r\n\r\n",
+            b"GET / HTTP/2\r\n\r\n",
+            b"GET / HTTP/1.1\r\nno-colon-here\r\n\r\n",
+            b"GET / HTTP/1.1\r\nContent-Length: nope\r\n\r\n",
+            b"GET / HTTP/1.1\r\nContent-Length: 9999999\r\n\r\n",
+            b"GET / HTTP/1.1\r\nContent-Length: 5\r\n\r\nab", // truncated
+        ];
+        for raw in cases {
+            let mut r = Cursor::new(&raw[..]);
+            assert!(read_request(&mut r).is_err(), "{:?}", &raw[..20]);
+        }
+        let long = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(MAX_LINE_BYTES));
+        assert!(read_request(&mut Cursor::new(long.as_bytes())).is_err());
+    }
+
+    #[test]
+    fn response_roundtrips_fixed_and_chunked() {
+        // fixed-length
+        let mut wire = Vec::new();
+        write_response(&mut wire, 200, "OK", "application/json", b"{\"a\":1}")
+            .unwrap();
+        let resp = read_response(&mut Cursor::new(&wire)).unwrap();
+        assert_eq!(resp.status, 200);
+        assert_eq!(resp.header("content-type"), Some("application/json"));
+        assert_eq!(resp.body, b"{\"a\":1}");
+        // chunked: three chunks concatenate, and the incremental reader
+        // sees each chunk separately (what the bench timestamps)
+        let mut wire = Vec::new();
+        let mut cw =
+            ChunkWriter::start(&mut wire, 200, "OK", "text/event-stream")
+                .unwrap();
+        cw.chunk(b"data: 1\n\n").unwrap();
+        cw.chunk(b"").unwrap(); // skipped, not terminal
+        cw.chunk(b"data: 2\n\n").unwrap();
+        cw.end().unwrap();
+        let resp = read_response(&mut Cursor::new(&wire)).unwrap();
+        assert_eq!(resp.body, b"data: 1\n\ndata: 2\n\n");
+        let mut r = Cursor::new(&wire);
+        let _head = read_response_head_for_test(&mut r);
+        assert_eq!(read_chunk(&mut r).unwrap().unwrap(), b"data: 1\n\n");
+        assert_eq!(read_chunk(&mut r).unwrap().unwrap(), b"data: 2\n\n");
+        assert!(read_chunk(&mut r).unwrap().is_none());
+    }
+
+    /// Consume status line + headers, leaving the body for read_chunk.
+    fn read_response_head_for_test<R: BufRead>(r: &mut R) {
+        loop {
+            let line = read_line(r).unwrap().unwrap();
+            if line.is_empty() {
+                return;
+            }
+        }
+    }
+
+    #[test]
+    fn client_request_parses_back() {
+        let mut wire = Vec::new();
+        write_request(&mut wire, "POST", "/v1/completions", b"{\"p\":1}")
+            .unwrap();
+        let req =
+            read_request(&mut Cursor::new(&wire)).unwrap().unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.body, b"{\"p\":1}");
+    }
+}

@@ -358,6 +358,22 @@ impl SeqKv {
         self.len = 0;
     }
 
+    /// Clone this cache's resident prefix into an independent cache.
+    /// Inline caches copy their rows; paged caches share full pages by
+    /// refcount bump and deep-copy only partial tail pages
+    /// ([`crate::serve::kvpool`] module docs — shared pages are
+    /// immutable, so divergence after the fork never touches them).
+    /// Paged forks are priced against the pool budget atomically.
+    pub fn fork(&self) -> crate::Result<SeqKv> {
+        let store = match &self.store {
+            Store::Inline { k, v } => {
+                Store::Inline { k: k.clone(), v: v.clone() }
+            }
+            Store::Paged(p) => Store::Paged(p.fork()?),
+        };
+        Ok(SeqKv { store, len: self.len })
+    }
+
     /// One layer's resident K and V rows, decoded to dense f32
     /// (`len · d_model` each) — the KV sweep's trace-capture hook and a
     /// debugging aid. Inline caches copy; paged caches decode through

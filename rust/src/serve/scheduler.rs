@@ -12,6 +12,8 @@
 //! ```text
 //! waiting ──admit──▶ prefill ──▶ decoding ──stop──▶ finished
 //!            ▲  (≤ max_prefill_per_step joins per step,          │
+//!            │   ≤ max_prefill_tokens fresh prefix rows mixed    │
+//!            │   into one ragged batch (chunked prefill),        │
 //!            │   ≤ max_active sequences KV-resident,             │
 //!            │   and — with a KvPool — only if the step's pages  │
 //!            │   fit the byte budget)                            │
@@ -30,25 +32,67 @@
 //! eviction and requeue, which `rust/tests/shard.rs` pins against the
 //! cache-free oracle.
 //!
+//! # Priority classes
+//!
+//! Every request carries a [`Priority`]: `Interactive` requests jump
+//! the admission queue (within the preempted set first, then the
+//! waiting set — FIFO *within* each class) and are the last candidates
+//! for eviction (the victim is the youngest `Batch` sequence when one
+//! exists, the youngest sequence otherwise). Priorities reorder *when*
+//! work runs, never *what* it computes: the per-request determinism
+//! contract below makes token streams invariant to admission order, so
+//! each class keeps the exact streams it would see alone.
+//!
+//! # Chunked prefill
+//!
+//! [`SchedulerConfig::max_prefill_tokens`] bounds the fresh prefix rows
+//! one ragged step may mix in across prefilling sequences — without it,
+//! one context-length prompt joins the batch as a single giant prefill
+//! and stalls every live stream's next token. A prefilling sequence
+//! feeds `prefix[kv.len() .. kv.len() + chunk]` per step (the spine
+//! appends after the cached positions, so chunking is just a smaller
+//! append) and samples only on the step that completes its prefix;
+//! decode feeds and that final completing token are exempt from the
+//! budget, so a step that would emit a token is never blocked. Logits
+//! at the sampled position are a pure function of the full prefix —
+//! streams are **invariant to the cap** (`rust/tests/decode.rs` pins
+//! this by sweeping it).
+//!
 //! # Memory-bounded scheduling
 //!
 //! When the engine carries a [`crate::serve::KvPool`]
 //! ([`DecodeEngine::with_pool`]), every step **reserves** its page cost
 //! up front with the pool's exact page arithmetic
 //! ([`crate::serve::KvPool::bytes_for_rows`]): admission stops at the
-//! first waiting request whose prefill pages don't fit (admission
-//! blocks — FIFO order is preserved), and if the live sequences' next
-//! decode step itself no longer fits, the **youngest** active sequence
-//! is evicted — its pages return to the pool and the request moves to
+//! first candidate whose prefill pages don't fit (admission blocks —
+//! FIFO order within a priority class is preserved), and if the live
+//! sequences' next decode step itself no longer fits, a victim is
+//! evicted — its pages return to the pool and the request moves to
 //! the head of a preempted queue ([`Scheduler::preempted`]) with its
 //! sampler state and generated tokens intact. A preempted sequence
-//! resumes by re-prefilling `prompt ++ generated` in one ragged call;
-//! under the Exact codec the full-prefix exactness contract makes the
-//! resumed logits bit-identical to the uninterrupted ones (and under an
-//! Mx codec identical under that same codec), so **preemption never
-//! changes a token stream** — pinned by `rust/tests/kvpool.rs`. The
-//! engine guarantees the budget fits one full-context sequence, so
-//! evicting down to a single sequence always makes progress.
+//! resumes by re-prefilling `prompt ++ generated` (chunked like any
+//! prefill); under the Exact codec the full-prefix exactness contract
+//! makes the resumed logits bit-identical to the uninterrupted ones
+//! (and under an Mx codec identical under that same codec), so
+//! **preemption never changes a token stream** — pinned by
+//! `rust/tests/kvpool.rs`. The engine guarantees the budget fits one
+//! full-context sequence, so evicting down to a single sequence always
+//! makes progress. Reservations deliberately price every page as
+//! private even on a prefix-sharing pool — dedup can only hand bytes
+//! back ([`crate::serve::kvpool`] module docs).
+//!
+//! # Streaming and cancellation
+//!
+//! [`Scheduler::submit_streaming`] attaches an `mpsc` sink that
+//! receives one [`StreamEvent::Token`] per sampled token as it is
+//! emitted and a final [`StreamEvent::Done`] carrying the
+//! [`DecodeResult`] (streamed results are delivered there, **not**
+//! through [`Scheduler::take_finished`]). A dropped receiver — the
+//! HTTP front-end's client-disconnect signal — cancels the sequence at
+//! its next token: its pages return to the pool immediately and no
+//! result is recorded. [`Scheduler::cancel`] does the same by request
+//! id from any state (waiting, preempted, or active). Cancellation
+//! cannot perturb surviving streams (per-request determinism again).
 //!
 //! # Determinism
 //!
@@ -58,15 +102,48 @@
 //! neighbors share the ragged batch (batching invariance + the decode
 //! exactness contract), and each request samples from its **own**
 //! seeded [`crate::dist::Pcg64`] stream. Admission order, `max_active`,
-//! and GEMM threading therefore cannot change any stream —
-//! `rust/tests/decode.rs` pins this by permuting all three.
+//! priorities, prefill chunking, and GEMM threading therefore cannot
+//! change any stream — `rust/tests/decode.rs` pins this by permuting
+//! all of them.
 
 use std::collections::VecDeque;
+use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
 use anyhow::ensure;
 
 use super::decode::{DecodeEngine, Sampler, Sampling, SeqKv};
+
+/// Admission/eviction priority class (see module docs): priorities
+/// reorder scheduling, never token streams.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq, Hash)]
+pub enum Priority {
+    /// Latency-sensitive: admitted first, evicted last.
+    #[default]
+    Interactive,
+    /// Throughput traffic: yields admission slots and eviction victims
+    /// to interactive work.
+    Batch,
+}
+
+impl Priority {
+    /// Stable lowercase name (JSON/CLI surface).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Priority::Interactive => "interactive",
+            Priority::Batch => "batch",
+        }
+    }
+
+    /// Inverse of [`Priority::as_str`].
+    pub fn parse(s: &str) -> Option<Priority> {
+        match s {
+            "interactive" => Some(Priority::Interactive),
+            "batch" => Some(Priority::Batch),
+            _ => None,
+        }
+    }
+}
 
 /// One generation request.
 #[derive(Debug, Clone)]
@@ -81,6 +158,8 @@ pub struct DecodeRequest {
     /// Optional stop token (kept in the output when hit).
     pub eos: Option<i32>,
     pub sampling: Sampling,
+    /// Admission/eviction class — cannot change the token stream.
+    pub priority: Priority,
 }
 
 /// Why a sequence retired.
@@ -94,14 +173,30 @@ pub enum FinishReason {
     ContextFull,
 }
 
+impl FinishReason {
+    /// Stable lowercase name (JSON surface).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            FinishReason::Eos => "eos",
+            FinishReason::MaxTokens => "max_tokens",
+            FinishReason::ContextFull => "context_full",
+        }
+    }
+}
+
 /// A finished request: its generated tokens plus per-token timing.
 #[derive(Debug, Clone)]
 pub struct DecodeResult {
     pub id: u64,
     pub prompt_len: usize,
+    pub priority: Priority,
     /// Generated tokens, in order (includes the `eos` token if hit).
     pub tokens: Vec<i32>,
     pub finish: FinishReason,
+    /// Submit → first admission into the active set — the pure
+    /// queueing share of [`DecodeResult::ttft`] (SLO verdicts separate
+    /// admission delay from decode latency).
+    pub queue_wait: Duration,
     /// Submit → first generated token (includes queueing + prefill).
     pub ttft: Duration,
     /// Gaps between consecutive token emissions (`tokens.len() - 1`
@@ -109,26 +204,53 @@ pub struct DecodeResult {
     pub itl: Vec<Duration>,
 }
 
+/// Per-token delivery for [`Scheduler::submit_streaming`].
+#[derive(Debug, Clone)]
+pub enum StreamEvent {
+    /// One sampled token, sent the step it is emitted.
+    Token(i32),
+    /// The request retired; carries the full result (streamed requests
+    /// do not appear in [`Scheduler::take_finished`]).
+    Done(DecodeResult),
+}
+
 /// Scheduling policy.
 #[derive(Debug, Clone, Copy)]
 pub struct SchedulerConfig {
     /// KV-resident sequences decoded concurrently.
     pub max_active: usize,
-    /// New prompts prefilled per step — bounds how much prefill work a
-    /// single ragged batch mixes into the decode cadence (long prompts
-    /// would otherwise stall every live stream's next token).
+    /// New prompts admitted (started prefilling) per step.
     pub max_prefill_per_step: usize,
+    /// Fresh prefix rows one ragged step may mix in across prefilling
+    /// sequences (chunked prefill — module docs). Decode feeds and the
+    /// token that completes a prefix are exempt, so a step that would
+    /// sample is never blocked. Streams are invariant to this cap.
+    pub max_prefill_tokens: usize,
 }
 
 impl Default for SchedulerConfig {
     fn default() -> Self {
-        SchedulerConfig { max_active: 8, max_prefill_per_step: 2 }
+        SchedulerConfig {
+            max_active: 8,
+            max_prefill_per_step: 2,
+            max_prefill_tokens: usize::MAX,
+        }
     }
+}
+
+/// A queued request awaiting admission.
+struct Waiting {
+    req: DecodeRequest,
+    submitted: Instant,
+    sink: Option<mpsc::Sender<StreamEvent>>,
 }
 
 struct Active {
     req: DecodeRequest,
     submitted: Instant,
+    /// First admission into the active set (survives preemption).
+    admitted: Instant,
+    sink: Option<mpsc::Sender<StreamEvent>>,
     kv: SeqKv,
     sampler: Sampler,
     /// Generated tokens; the last one is the next decode-step input
@@ -138,14 +260,28 @@ struct Active {
 }
 
 impl Active {
-    /// New cache rows the next step appends for this sequence: the
-    /// whole `prompt ++ generated` prefix when the cache is empty
-    /// (fresh prefill or a preempted resume), one token otherwise.
+    /// The full prefix this sequence replays: `prompt ++ generated`.
+    fn prefix_len(&self) -> usize {
+        self.req.prompt.len() + self.out.len()
+    }
+
+    /// Cache rows the sequence still needs before its next sample —
+    /// the **conservative** admission price (chunking may spread the
+    /// rows over several steps, never exceed them).
     fn step_len(&self) -> usize {
         if self.kv.len() == 0 {
-            self.req.prompt.len() + self.out.len()
+            self.prefix_len()
         } else {
             1
+        }
+    }
+
+    /// Prefix token at absolute position `pos`.
+    fn prefix_at(&self, pos: usize) -> i32 {
+        if pos < self.req.prompt.len() {
+            self.req.prompt[pos]
+        } else {
+            self.out[pos - self.req.prompt.len()]
         }
     }
 }
@@ -153,17 +289,19 @@ impl Active {
 /// The continuous-batching driver (module docs). Single-threaded by
 /// design — the parallelism lives in the GEMM under the spine, and a
 /// deterministic driver is what makes the stream-invariance tests
-/// meaningful.
+/// meaningful. (The HTTP front-end gives it a thread of its own and
+/// feeds it over a channel — `super::http`.)
 pub struct Scheduler {
     engine: DecodeEngine,
     cfg: SchedulerConfig,
-    waiting: VecDeque<(DecodeRequest, Instant)>,
+    waiting: VecDeque<Waiting>,
     /// Evicted-at-capacity sequences, resumed before new admissions
     /// (front = most recently evicted = next to resume).
     preempted: VecDeque<Active>,
     active: Vec<Active>,
     finished: Vec<DecodeResult>,
     preemptions: u64,
+    cancelled: u64,
     peak_kv_bytes: usize,
 }
 
@@ -174,18 +312,19 @@ impl Scheduler {
             cfg: SchedulerConfig {
                 max_active: cfg.max_active.max(1),
                 max_prefill_per_step: cfg.max_prefill_per_step.max(1),
+                max_prefill_tokens: cfg.max_prefill_tokens.max(1),
             },
             waiting: VecDeque::new(),
             preempted: VecDeque::new(),
             active: Vec::new(),
             finished: Vec::new(),
             preemptions: 0,
+            cancelled: 0,
             peak_kv_bytes: 0,
         }
     }
 
-    /// Queue a request (validated against the model's limits).
-    pub fn submit(&mut self, req: DecodeRequest) -> crate::Result<()> {
+    fn validate(&self, req: &DecodeRequest) -> crate::Result<()> {
         let dims = *self.engine.model().dims();
         ensure!(
             !req.prompt.is_empty() && req.prompt.len() <= dims.seq_len,
@@ -203,8 +342,60 @@ impl Scheduler {
         ensure!(req.max_new_tokens >= 1, "max_new_tokens must be >= 1");
         // fail fast on a bad sampling policy, before admission
         Sampler::new(&req.sampling)?;
-        self.waiting.push_back((req, Instant::now()));
         Ok(())
+    }
+
+    /// Queue a request (validated against the model's limits).
+    pub fn submit(&mut self, req: DecodeRequest) -> crate::Result<()> {
+        self.validate(&req)?;
+        self.waiting.push_back(Waiting {
+            req,
+            submitted: Instant::now(),
+            sink: None,
+        });
+        Ok(())
+    }
+
+    /// Queue a request whose tokens stream to `sink` as they are
+    /// emitted, ending with [`StreamEvent::Done`]. A dropped receiver
+    /// cancels the request at its next token (module docs).
+    pub fn submit_streaming(
+        &mut self,
+        req: DecodeRequest,
+        sink: mpsc::Sender<StreamEvent>,
+    ) -> crate::Result<()> {
+        self.validate(&req)?;
+        self.waiting.push_back(Waiting {
+            req,
+            submitted: Instant::now(),
+            sink: Some(sink),
+        });
+        Ok(())
+    }
+
+    /// Drop every request with `id` — waiting, preempted, or active
+    /// (mid-flight: its KV pages return to the pool immediately).
+    /// Returns how many sequences were cancelled; no result is
+    /// recorded for them. Surviving streams are unaffected
+    /// (per-request determinism).
+    pub fn cancel(&mut self, id: u64) -> usize {
+        let before = self.waiting.len() + self.preempted.len();
+        self.waiting.retain(|w| w.req.id != id);
+        self.preempted.retain(|a| a.req.id != id);
+        let mut n =
+            before - (self.waiting.len() + self.preempted.len());
+        let mut i = 0;
+        while i < self.active.len() {
+            if self.active[i].req.id == id {
+                let mut a = self.active.remove(i);
+                a.kv.reset();
+                n += 1;
+            } else {
+                i += 1;
+            }
+        }
+        self.cancelled += n as u64;
+        n
     }
 
     /// Requests not yet admitted.
@@ -220,6 +411,16 @@ impl Scheduler {
     /// KV-resident sequences.
     pub fn active(&self) -> usize {
         self.active.len()
+    }
+
+    /// Ids of the KV-resident sequences, admission order.
+    pub fn active_ids(&self) -> Vec<u64> {
+        self.active.iter().map(|a| a.req.id).collect()
+    }
+
+    /// The engine's KV pool, when it decodes through one.
+    pub fn pool(&self) -> Option<&std::sync::Arc<crate::serve::KvPool>> {
+        self.engine.pool()
     }
 
     /// Whether no work remains (waiting, preempted, or KV-resident).
@@ -246,7 +447,14 @@ impl Scheduler {
         self.preemptions
     }
 
-    /// Take the results finished so far (sorted by request id).
+    /// Sequences cancelled so far ([`Scheduler::cancel`] or a dropped
+    /// streaming receiver).
+    pub fn cancellations(&self) -> u64 {
+        self.cancelled
+    }
+
+    /// Take the results finished so far (sorted by request id;
+    /// streamed requests deliver through their sink instead).
     pub fn take_finished(&mut self) -> Vec<DecodeResult> {
         let mut out = std::mem::take(&mut self.finished);
         out.sort_by_key(|r| r.id);
@@ -254,7 +462,8 @@ impl Scheduler {
     }
 
     /// Exact page bytes the next spine call over `active` allocates
-    /// (0 without a pool — inline caches are unbounded).
+    /// (0 without a pool — inline caches are unbounded). Conservative
+    /// under chunked prefill: prices the whole remaining prefix.
     fn planned_step_bytes(&self) -> usize {
         let Some(pool) = self.engine.pool() else { return 0 };
         self.active
@@ -276,42 +485,84 @@ impl Scheduler {
         }
     }
 
+    /// Next admission candidate in `preempted`: the oldest-evicted
+    /// `Interactive` sequence, else the front.
+    fn pick_preempted(&self) -> Option<usize> {
+        if self.preempted.is_empty() {
+            return None;
+        }
+        Some(
+            self.preempted
+                .iter()
+                .position(|a| a.req.priority == Priority::Interactive)
+                .unwrap_or(0),
+        )
+    }
+
+    /// Next admission candidate in `waiting`: the oldest `Interactive`
+    /// request, else the front (FIFO within a class).
+    fn pick_waiting(&self) -> Option<usize> {
+        if self.waiting.is_empty() {
+            return None;
+        }
+        Some(
+            self.waiting
+                .iter()
+                .position(|w| w.req.priority == Priority::Interactive)
+                .unwrap_or(0),
+        )
+    }
+
+    /// Eviction victim: the youngest `Batch` sequence when one exists,
+    /// the youngest sequence otherwise.
+    fn pick_victim(&self) -> usize {
+        self.active
+            .iter()
+            .rposition(|a| a.req.priority == Priority::Batch)
+            .unwrap_or(self.active.len() - 1)
+    }
+
     /// Run one scheduling iteration: admit (within KV slots *and* the
-    /// pool's page budget), evict-and-requeue if the live set outgrew
-    /// the pool, one ragged forward (prefill + decode fused), sample,
-    /// retire. Returns the number of tokens generated — 0 means nothing
-    /// could run: either fully idle, or every admission is blocked on
-    /// pool pages held *outside* this scheduler (check
+    /// pool's page budget; interactive first), evict-and-requeue if the
+    /// live set outgrew the pool, one ragged forward (chunked prefill +
+    /// decode fused), sample, stream, retire. Returns the progress made
+    /// as cache rows appended (every sampled token appends its row) —
+    /// 0 means nothing could run: either fully idle, or every admission
+    /// is blocked on pool pages held *outside* this scheduler (check
     /// [`Scheduler::is_idle`] to tell the two apart; [`Scheduler::run`]
     /// errors on the latter instead of spinning).
     pub fn step(&mut self) -> crate::Result<usize> {
-        // admit up to the prefill budget while KV slots are free and —
-        // with a pool — while the candidate's prefill pages fit on top
-        // of the live set's planned step. Preempted sequences resume
-        // first (they hold generated tokens); then waiting requests in
-        // FIFO order, blocking at the first one that doesn't fit.
+        // admit up to the per-step budget while KV slots are free and —
+        // with a pool — while the candidate's (conservative, full-
+        // prefix) pages fit on top of the live set's planned step.
+        // Preempted sequences resume before fresh admissions, and
+        // interactive candidates go before batch ones; admission blocks
+        // at the first candidate that doesn't fit, preserving FIFO
+        // order within each priority class.
         let mut admitted = 0usize;
         while self.active.len() < self.cfg.max_active
             && admitted < self.cfg.max_prefill_per_step
         {
-            if let Some(a) = self.preempted.front() {
-                if !self.step_fits(a.step_len()) {
+            if let Some(idx) = self.pick_preempted() {
+                if !self.step_fits(self.preempted[idx].step_len()) {
                     break;
                 }
-                let a = self.preempted.pop_front().unwrap();
+                let a = self.preempted.remove(idx).unwrap();
                 self.active.push(a);
                 admitted += 1;
                 continue;
             }
-            let Some((req, _)) = self.waiting.front() else { break };
-            if !self.step_fits(req.prompt.len()) {
+            let Some(idx) = self.pick_waiting() else { break };
+            if !self.step_fits(self.waiting[idx].req.prompt.len()) {
                 break;
             }
-            let (req, submitted) = self.waiting.pop_front().unwrap();
-            let sampler = Sampler::new(&req.sampling)?;
+            let w = self.waiting.remove(idx).unwrap();
+            let sampler = Sampler::new(&w.req.sampling)?;
             self.active.push(Active {
-                req,
-                submitted,
+                req: w.req,
+                submitted: w.submitted,
+                admitted: Instant::now(),
+                sink: w.sink,
                 kv: self.engine.new_kv(),
                 sampler,
                 out: Vec::new(),
@@ -324,10 +575,10 @@ impl Scheduler {
         }
 
         // at capacity the live set itself may no longer fit (decode
-        // growth crossing page boundaries): evict the youngest sequence
-        // — free its pages, requeue it with sampler + tokens intact —
-        // until the step fits. The engine's budget invariant (one full
-        // sequence always fits) bounds this at one survivor.
+        // growth crossing page boundaries): evict a victim — free its
+        // pages, requeue it with sampler + tokens intact — until the
+        // step fits. The engine's budget invariant (one full sequence
+        // always fits) bounds this at one survivor.
         while !self.step_fits(0) {
             // the engine's budget invariant guarantees one sequence
             // *alone* always fits, so reaching zero evictable neighbors
@@ -339,34 +590,59 @@ impl Scheduler {
                  sequence's next step — its pages are held outside this \
                  scheduler (free them or raise the budget)"
             );
-            let mut victim = self.active.pop().unwrap();
+            let mut victim = self.active.remove(self.pick_victim());
             victim.kv.reset();
             self.preempted.push_front(victim);
             self.preemptions += 1;
         }
 
-        // one ragged spine call: the full `prompt ++ generated` prefix
-        // for fresh and resumed sequences, one token for live ones
+        // one ragged spine call. Each sequence feeds the next slice of
+        // its `prompt ++ generated` prefix: everything that remains
+        // when the prefill-token budget allows (a decode step is the
+        // `remaining == 1` case and is budget-exempt), a partial chunk
+        // or nothing otherwise — sequences with no chunk this step sit
+        // the batch out.
+        let mut prefill_left = self.cfg.max_prefill_tokens;
         let mut tokens = Vec::new();
         let mut lens = Vec::with_capacity(self.active.len());
+        let mut in_batch = Vec::with_capacity(self.active.len());
         for a in &self.active {
-            if a.kv.len() == 0 {
-                tokens.extend_from_slice(&a.req.prompt);
-                tokens.extend_from_slice(&a.out);
-                lens.push(a.req.prompt.len() + a.out.len());
+            let have = a.kv.len();
+            let remaining = a.prefix_len() - have;
+            debug_assert!(remaining >= 1);
+            let chunk = if remaining == 1 {
+                1
             } else {
-                tokens.push(*a.out.last().expect("decoding seq has a token"));
-                lens.push(1);
+                let c = remaining.min(prefill_left);
+                prefill_left -= c;
+                c
+            };
+            in_batch.push(chunk > 0);
+            if chunk == 0 {
+                continue;
             }
+            for pos in have..have + chunk {
+                tokens.push(a.prefix_at(pos));
+            }
+            lens.push(chunk);
         }
         let mut kvs: Vec<SeqKv> = self
             .active
             .iter_mut()
-            .map(|a| std::mem::take(&mut a.kv))
+            .zip(&in_batch)
+            .filter(|(_, &ib)| ib)
+            .map(|(a, _)| std::mem::take(&mut a.kv))
             .collect();
+        let appended = tokens.len();
         let logits = match self.engine.step_ragged(&tokens, &lens, &mut kvs) {
             Ok(logits) => {
-                for (a, kv) in self.active.iter_mut().zip(kvs) {
+                let holders = self
+                    .active
+                    .iter_mut()
+                    .zip(&in_batch)
+                    .filter(|(_, &ib)| ib)
+                    .map(|(a, _)| a);
+                for (a, kv) in holders.zip(kvs) {
                     a.kv = kv;
                 }
                 logits
@@ -386,17 +662,41 @@ impl Scheduler {
         let vocab = self.engine.model().dims().vocab;
         let seq_cap = self.engine.model().dims().seq_len;
 
-        // sample one token per sequence, then retire finished ones
-        let mut produced = 0usize;
-        let mut b = 0usize;
+        // sample one token per prefix-complete sequence (mid-prefill
+        // chunks consumed a logits row but have nothing to sample),
+        // stream it, then retire finished sequences and cancel ones
+        // whose stream receiver hung up
         let mut i = 0usize;
-        while i < self.active.len() {
+        let mut b = 0usize;
+        for ib in in_batch {
+            if !ib {
+                i += 1;
+                continue;
+            }
             let a = &mut self.active[i];
+            if a.kv.len() < a.prefix_len() {
+                // chunked prefill still in flight
+                b += 1;
+                i += 1;
+                continue;
+            }
             let tok = a.sampler.pick(&logits[b * vocab..(b + 1) * vocab]);
+            b += 1;
             a.out.push(tok);
             a.emitted.push(now);
-            produced += 1;
-            b += 1;
+            let hung_up = a
+                .sink
+                .as_ref()
+                .is_some_and(|s| s.send(StreamEvent::Token(tok)).is_err());
+            if hung_up {
+                // receiver dropped (client disconnect): cancel
+                // mid-flight, pages back to the pool, no result
+                let mut dead = self.active.remove(i);
+                dead.kv.reset();
+                self.cancelled += 1;
+                continue;
+            }
+            let a = &mut self.active[i];
             let finish = if a.req.eos == Some(tok) {
                 Some(FinishReason::Eos)
             } else if a.out.len() >= a.req.max_new_tokens {
@@ -409,17 +709,27 @@ impl Scheduler {
             };
             match finish {
                 Some(f) => {
-                    let done = self.active.remove(i);
-                    self.finished.push(finalize(done, f));
+                    let mut done = self.active.remove(i);
+                    let sink = done.sink.take();
+                    let result = finalize(done, f);
+                    match sink {
+                        // the tokens already streamed; a hung-up
+                        // receiver at Done needs no bookkeeping
+                        Some(s) => {
+                            let _ = s.send(StreamEvent::Done(result));
+                        }
+                        None => self.finished.push(result),
+                    }
                 }
                 None => i += 1,
             }
         }
-        Ok(produced)
+        Ok(appended)
     }
 
     /// Drive [`Scheduler::step`] until every submitted request has
-    /// finished; returns all results sorted by request id.
+    /// finished; returns all results sorted by request id (streamed
+    /// requests deliver through their sinks instead).
     ///
     /// Errors instead of spinning if the scheduler can make no progress
     /// — possible only when the KV pool's pages are held by sequences
@@ -428,9 +738,9 @@ impl Scheduler {
     /// sequences alone can always advance.
     pub fn run(&mut self) -> crate::Result<Vec<DecodeResult>> {
         while !self.is_idle() {
-            let produced = self.step()?;
+            let progressed = self.step()?;
             ensure!(
-                produced > 0 || self.is_idle(),
+                progressed > 0 || self.is_idle(),
                 "scheduler blocked: the KV pool has no room for the next \
                  request's prefill and no live sequence to evict — pages \
                  are held outside this scheduler (free them or raise the \
@@ -455,8 +765,10 @@ fn finalize(a: Active, finish: FinishReason) -> DecodeResult {
     DecodeResult {
         id: a.req.id,
         prompt_len: a.req.prompt.len(),
+        priority: a.req.priority,
         tokens: a.out,
         finish,
+        queue_wait: a.admitted.duration_since(a.submitted),
         ttft,
         itl,
     }
@@ -497,6 +809,7 @@ mod tests {
             max_new_tokens: max_new,
             eos: None,
             sampling: Sampling::Greedy,
+            priority: Priority::Interactive,
         }
     }
 
@@ -504,7 +817,11 @@ mod tests {
     fn drains_more_requests_than_slots() {
         let mut s = Scheduler::new(
             engine(),
-            SchedulerConfig { max_active: 2, max_prefill_per_step: 1 },
+            SchedulerConfig {
+                max_active: 2,
+                max_prefill_per_step: 1,
+                ..SchedulerConfig::default()
+            },
         );
         for id in 0..5 {
             s.submit(req(id, vec![1, 2, 3], 3)).unwrap();
@@ -517,6 +834,7 @@ mod tests {
             assert_eq!(r.tokens.len(), 3);
             assert_eq!(r.finish, FinishReason::MaxTokens);
             assert_eq!(r.itl.len(), 2);
+            assert!(r.queue_wait <= r.ttft, "admission precedes tokens");
         }
         assert_eq!((s.pending(), s.active()), (0, 0));
         assert_eq!(s.kv_resident_bytes(), 0);
@@ -551,5 +869,135 @@ mod tests {
         };
         assert!(s.submit(bad_temp).is_err());
         assert_eq!(s.pending(), 0);
+    }
+
+    #[test]
+    fn interactive_requests_jump_the_admission_queue() {
+        let mut s = Scheduler::new(
+            engine(),
+            SchedulerConfig {
+                max_active: 1,
+                max_prefill_per_step: 1,
+                ..SchedulerConfig::default()
+            },
+        );
+        let batch = DecodeRequest {
+            priority: Priority::Batch,
+            ..req(0, vec![1, 2], 2)
+        };
+        s.submit(batch.clone()).unwrap();
+        s.submit(DecodeRequest { id: 1, ..batch.clone() }).unwrap();
+        s.submit(req(2, vec![1, 2], 2)).unwrap();
+        // one slot: the interactive request (id 2) must run first even
+        // though two batch requests queued ahead of it
+        s.step().unwrap();
+        assert_eq!(s.active_ids(), vec![2]);
+        let results = s.run().unwrap();
+        assert_eq!(
+            results.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![0, 1, 2],
+            "take_finished sorts by id regardless of completion order"
+        );
+        assert_eq!(results[2].priority, Priority::Interactive);
+    }
+
+    #[test]
+    fn streams_are_invariant_to_the_prefill_token_cap() {
+        // same request mix under max_prefill_tokens ∈ {1, 3, unlimited}:
+        // chunking spreads prefix rows over steps but samples from the
+        // same completed-prefix logits, so every stream is identical
+        let run_with = |cap: usize| {
+            let mut s = Scheduler::new(
+                engine(),
+                SchedulerConfig {
+                    max_active: 4,
+                    max_prefill_per_step: 2,
+                    max_prefill_tokens: cap,
+                },
+            );
+            for id in 0..4 {
+                let prompt: Vec<i32> =
+                    (0..5).map(|t| ((t + id) % 32) as i32).collect();
+                s.submit(req(id, prompt, 3)).unwrap();
+            }
+            s.run()
+                .unwrap()
+                .into_iter()
+                .map(|r| (r.id, r.tokens))
+                .collect::<Vec<_>>()
+        };
+        let reference = run_with(usize::MAX);
+        for cap in [1, 3] {
+            assert_eq!(run_with(cap), reference, "cap {cap}");
+        }
+    }
+
+    #[test]
+    fn streaming_sink_receives_tokens_then_done() {
+        let mut s = Scheduler::new(engine(), SchedulerConfig::default());
+        let (tx, rx) = mpsc::channel();
+        s.submit_streaming(req(7, vec![1, 2, 3], 3), tx).unwrap();
+        // a plain request alongside keeps take_finished() exercised
+        s.submit(req(8, vec![1, 2, 3], 3)).unwrap();
+        let results = s.run().unwrap();
+        assert_eq!(results.len(), 1, "streamed result not in finished");
+        assert_eq!(results[0].id, 8);
+        let events: Vec<StreamEvent> = rx.try_iter().collect();
+        assert_eq!(events.len(), 4, "3 tokens + Done");
+        let mut streamed = Vec::new();
+        for e in &events[..3] {
+            match e {
+                StreamEvent::Token(t) => streamed.push(*t),
+                StreamEvent::Done(_) => panic!("Done before last token"),
+            }
+        }
+        match &events[3] {
+            StreamEvent::Done(r) => {
+                assert_eq!(r.id, 7);
+                assert_eq!(r.tokens, streamed);
+                // determinism: identical prompt+sampling ⇒ identical
+                // stream, whether streamed or collected
+                assert_eq!(r.tokens, results[0].tokens);
+            }
+            StreamEvent::Token(_) => panic!("expected Done last"),
+        }
+    }
+
+    #[test]
+    fn dropped_receiver_cancels_mid_flight() {
+        let mut s = Scheduler::new(engine(), SchedulerConfig::default());
+        let (tx, rx) = mpsc::channel();
+        s.submit_streaming(req(1, vec![1, 2, 3], 100), tx).unwrap();
+        s.submit(req(2, vec![1, 2, 3], 4)).unwrap();
+        s.step().unwrap(); // both prefill + first token
+        drop(rx);
+        let results = s.run().unwrap();
+        assert_eq!(s.cancellations(), 1);
+        assert_eq!(results.len(), 1, "only the survivor finishes");
+        assert_eq!(results[0].id, 2);
+        assert!(s.is_idle());
+    }
+
+    #[test]
+    fn cancel_by_id_covers_every_queue_state() {
+        let mut s = Scheduler::new(
+            engine(),
+            SchedulerConfig {
+                max_active: 1,
+                max_prefill_per_step: 1,
+                ..SchedulerConfig::default()
+            },
+        );
+        for id in 0..3 {
+            s.submit(req(id, vec![1, 2], 4)).unwrap();
+        }
+        s.step().unwrap(); // id 0 active; 1, 2 waiting
+        assert_eq!(s.cancel(0), 1, "active");
+        assert_eq!(s.cancel(2), 1, "waiting");
+        assert_eq!(s.cancel(5), 0, "unknown id");
+        assert_eq!(s.cancellations(), 2);
+        let results = s.run().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].id, 1);
     }
 }

@@ -1,0 +1,924 @@
+//! The `microscale traffic-bench` driver: trace-driven traffic against
+//! the real serving edge ([`super::http`]) — bursty arrivals, shared
+//! system prompts, mixed priority classes, mid-stream disconnects —
+//! measuring what production SLOs measure: per-class TTFT/ITL/queue
+//! wait at the socket, goodput, and peak KV bytes with and without
+//! prefix sharing.
+//!
+//! Two phases, one report (**`BENCH_traffic.json`**, field map in
+//! EXPERIMENTS.md §Perf):
+//!
+//! 1. **Sharing gates** (deterministic, no clocks): per KV codec in
+//!    {FP8, FP4} × {UE4M3, UE5M3}, the same backlog — shared-prefix
+//!    requests, a tight page budget forcing eviction, one mid-flight
+//!    cancellation — runs against a prefix-sharing pool and an
+//!    unshared one. Token streams must match bit for bit (admission
+//!    dynamics differ — sharing frees pages — so this exercises the
+//!    full order-invariance contract), the shared peak must not
+//!    exceed the unshared peak with `dedup_hits > 0`, both pools must
+//!    drain to zero, and N prefills of one page-aligned prompt must
+//!    leave **exactly one physical copy** of its pages
+//!    (`used == bytes_for_positions`, `shared == (N-1)·that`).
+//! 2. **Timed loopback run**: a seeded trace (Poisson arrivals inside
+//!    fixed-size bursts, prompt/output length mixtures, configurable
+//!    shared-prefix ratio, interactive/batch mix, a cancellation
+//!    fraction) drives [`super::http::HttpServer`] over real sockets,
+//!    one SSE-streaming client thread per request timestamping every
+//!    chunk. Afterwards the surviving streams are replayed through a
+//!    direct scheduler on an **unshared** pool under a different
+//!    prefill-chunking config — served tokens must match bit for bit
+//!    — and `/stats` must show the pool drained to zero.
+//!
+//! The `pass` verdict is host-independent: gates, stream equality,
+//! accounting, and drain — never the latency numbers. The per-class
+//! percentiles are reported for SLO eyeballs and trend lines, not
+//! gated (CI machines are not serving hardware).
+//!
+//! Shared by the CLI subcommand and `cargo bench --bench
+//! traffic_bench`.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, ensure, Context};
+
+use super::cache::operand_cache;
+use super::decode::{DecodeEngine, Sampling};
+use super::decode_bench::bench_dims;
+use super::http::HttpServer;
+use super::kvpool::KvPool;
+use super::net;
+use super::packed_model::PackedModel;
+use super::scheduler::{
+    DecodeRequest, Priority, Scheduler, SchedulerConfig,
+};
+use crate::dist::Pcg64;
+use crate::model::weights::Params;
+use crate::runtime::qconfig::{PerLayerQConfig, QConfig};
+use crate::stats::percentiles;
+use crate::util::json::{self, Json};
+
+/// Driver options (CLI flags map onto these).
+#[derive(Debug, Clone)]
+pub struct TrafficOpts {
+    /// CI-sized run: tiny model, tiny trace.
+    pub smoke: bool,
+    /// Report path (`BENCH_traffic.json` in the working directory).
+    pub out: PathBuf,
+    /// Requests in the trace.
+    pub requests: usize,
+    /// Scheduler `max_active` for the served run.
+    pub concurrency: usize,
+    /// Trace seed — same seed, same trace, always.
+    pub seed: u64,
+    /// Shared system-prompt length in tokens.
+    pub prefix_len: usize,
+    /// Fraction of requests that start with the shared prefix.
+    pub shared_ratio: f64,
+    /// Fraction of requests in the batch priority class.
+    pub batch_frac: f64,
+    /// Fraction of clients that hang up after their first token.
+    pub cancel_frac: f64,
+    /// Requests per burst (Poisson arrivals inside, a gap between).
+    pub burst_len: usize,
+    /// Poisson arrival rate inside a burst (requests/second).
+    pub rate_per_s: f64,
+    /// Idle gap between bursts (milliseconds).
+    pub burst_gap_ms: f64,
+    /// Cache rows per KV pool page.
+    pub page_rows: usize,
+    /// Pool budget in full-context sequences of the serving codec.
+    pub budget_seqs: f64,
+    /// Longest random tail appended after the prefix (tokens).
+    pub tail_max: usize,
+    /// Largest generation budget in the mixture (tokens).
+    pub max_new_max: usize,
+}
+
+impl TrafficOpts {
+    pub fn new(smoke: bool) -> TrafficOpts {
+        TrafficOpts {
+            smoke,
+            out: PathBuf::from("BENCH_traffic.json"),
+            requests: if smoke { 12 } else { 48 },
+            concurrency: if smoke { 3 } else { 8 },
+            seed: 0x7AFF1C,
+            prefix_len: if smoke { 8 } else { 32 },
+            shared_ratio: 0.6,
+            batch_frac: 0.35,
+            cancel_frac: if smoke { 0.2 } else { 0.15 },
+            burst_len: if smoke { 4 } else { 8 },
+            rate_per_s: if smoke { 400.0 } else { 200.0 },
+            burst_gap_ms: if smoke { 15.0 } else { 40.0 },
+            page_rows: if smoke { 4 } else { 16 },
+            budget_seqs: if smoke { 1.5 } else { 3.0 },
+            tail_max: if smoke { 4 } else { 16 },
+            max_new_max: if smoke { 6 } else { 24 },
+        }
+    }
+}
+
+/// The sharing-gate codec axis: the paper's {element} × {scale}
+/// matrix for KV pages.
+fn gate_codecs() -> crate::Result<Vec<(&'static str, PerLayerQConfig)>> {
+    Ok(vec![
+        (
+            "fp8_ue4m3",
+            PerLayerQConfig::uniform(QConfig::named(
+                "fp8_e4m3", "ue4m3", false,
+            )?),
+        ),
+        (
+            "fp8_ue5m3",
+            PerLayerQConfig::uniform(QConfig::named(
+                "fp8_e4m3", "ue5m3", false,
+            )?),
+        ),
+        ("fp4_ue4m3", PerLayerQConfig::uniform(QConfig::fp4("ue4m3")?)),
+        ("fp4_ue5m3", PerLayerQConfig::uniform(QConfig::fp4("ue5m3")?)),
+    ])
+}
+
+fn rand_prompt(rng: &mut Pcg64, vocab: usize, len: usize) -> Vec<i32> {
+    (0..len).map(|_| (rng.next_u64() % vocab as u64) as i32).collect()
+}
+
+/// One request of the trace, with its arrival offset.
+#[derive(Debug, Clone)]
+struct TraceReq {
+    /// Arrival offset from trace start (milliseconds).
+    at_ms: f64,
+    prompt: Vec<i32>,
+    max_new: usize,
+    priority: Priority,
+    /// Per-request sampling seed (small, so it survives JSON's f64).
+    seed: u64,
+    /// Hang up after receiving this many tokens (client disconnect).
+    cancel_after: Option<usize>,
+}
+
+/// Mixture draw: 70% in the lower half of `1..=max`, 30% upper.
+fn mixed_len(rng: &mut Pcg64, max: usize) -> usize {
+    let lo_max = (max / 2).max(1);
+    if rng.uniform() < 0.7 || lo_max == max {
+        1 + (rng.next_u64() as usize) % lo_max
+    } else {
+        lo_max + 1 + (rng.next_u64() as usize) % (max - lo_max)
+    }
+}
+
+/// Build the seeded trace (see module docs for the traffic model).
+fn build_trace(
+    opts: &TrafficOpts,
+    vocab: usize,
+    shared_prefix: &[i32],
+    rng: &mut Pcg64,
+) -> Vec<TraceReq> {
+    let mut at_ms = 0.0f64;
+    let mut trace = Vec::with_capacity(opts.requests);
+    for i in 0..opts.requests {
+        if i > 0 && i % opts.burst_len == 0 {
+            at_ms += opts.burst_gap_ms;
+        }
+        // exponential inter-arrival inside the burst
+        at_ms += -(1.0 - rng.uniform()).ln() * 1e3 / opts.rate_per_s;
+        let mut prompt = if rng.uniform() < opts.shared_ratio {
+            shared_prefix.to_vec()
+        } else {
+            Vec::new()
+        };
+        let tail = mixed_len(rng, opts.tail_max);
+        prompt.extend(rand_prompt(rng, vocab, tail));
+        // floor 3 so a first-token disconnect is genuinely mid-flight
+        let max_new = mixed_len(rng, opts.max_new_max).max(3);
+        let priority = if rng.uniform() < opts.batch_frac {
+            Priority::Batch
+        } else {
+            Priority::Interactive
+        };
+        let cancel_after = (rng.uniform() < opts.cancel_frac).then_some(1);
+        trace.push(TraceReq {
+            at_ms,
+            prompt,
+            max_new,
+            priority,
+            seed: 0xB0B ^ (i as u64),
+            cancel_after,
+        });
+    }
+    trace
+}
+
+// ---------------------------------------------------------------- gates
+
+/// Drive one backlog to completion on `pool`, cancelling `cancel_id`
+/// after `cancel_at` steps. Returns `(results sorted by id, peak
+/// shared_bytes observed, final pool stats)`.
+fn drive_backlog(
+    model: &Arc<PackedModel>,
+    pool: &Arc<KvPool>,
+    reqs: &[DecodeRequest],
+    cfg: SchedulerConfig,
+    cancel_id: u64,
+    cancel_at: usize,
+) -> crate::Result<(Vec<super::scheduler::DecodeResult>, usize)> {
+    let mut sched =
+        Scheduler::new(DecodeEngine::with_pool(model.clone(), pool.clone())?, cfg);
+    for r in reqs {
+        sched.submit(r.clone())?;
+    }
+    let mut peak_shared = 0usize;
+    let mut steps = 0usize;
+    while !sched.is_idle() {
+        if steps == cancel_at {
+            sched.cancel(cancel_id);
+            if sched.is_idle() {
+                break;
+            }
+        }
+        sched.step()?;
+        steps += 1;
+        peak_shared = peak_shared.max(pool.stats().shared_bytes);
+        ensure!(steps < 100_000, "gate run failed to converge");
+    }
+    Ok((sched.take_finished(), peak_shared))
+}
+
+/// N prefills of one page-aligned prompt must leave exactly one
+/// physical copy of its pages (the ISSUE's refcount acceptance,
+/// checked on real pool counters).
+fn one_copy_check(
+    model: &Arc<PackedModel>,
+    pool: &Arc<KvPool>,
+    prompt: &[i32],
+) -> crate::Result<Json> {
+    let n = 3usize;
+    ensure!(
+        !prompt.is_empty() && prompt.len() % pool.page_rows() == 0,
+        "one-copy prompt must be page-aligned"
+    );
+    let engine = DecodeEngine::with_pool(model.clone(), pool.clone())?;
+    let mut kvs = Vec::new();
+    for _ in 0..n {
+        let mut kv = engine.new_kv();
+        engine.prefill(prompt, &mut kv)?;
+        kvs.push(kv);
+    }
+    let one_seq = pool.bytes_for_positions(prompt.len());
+    let stats = pool.stats();
+    ensure!(
+        stats.used_bytes == one_seq,
+        "one-copy: {n} prefills hold {} B, want one sequence's {one_seq} B",
+        stats.used_bytes
+    );
+    ensure!(
+        stats.shared_bytes == (n - 1) * one_seq,
+        "one-copy: shared_bytes {} != {} duplicate sequences",
+        stats.shared_bytes,
+        n - 1
+    );
+    drop(kvs);
+    ensure!(
+        pool.used_bytes() == 0,
+        "one-copy: pool did not drain after the last reference dropped"
+    );
+    Ok(json::obj(vec![
+        ("sequences", json::num(n as f64)),
+        ("physical_bytes", json::num(one_seq as f64)),
+        ("shared_bytes", json::num(((n - 1) * one_seq) as f64)),
+        ("dedup_hits", json::num(stats.dedup_hits as f64)),
+    ]))
+}
+
+/// One codec's shared-vs-unshared gate (see module docs, phase 1).
+fn sharing_gate(
+    label: &str,
+    model: &Arc<PackedModel>,
+    kv_cfg: &PerLayerQConfig,
+    block_size: usize,
+    opts: &TrafficOpts,
+    rng: &mut Pcg64,
+) -> crate::Result<Json> {
+    let dims = *model.dims();
+    let probe = KvPool::build_with(
+        &dims, kv_cfg, block_size, opts.page_rows, usize::MAX, false,
+    )?;
+    let seq_bytes = probe.bytes_for_positions(dims.seq_len);
+    // tight on purpose: ~1.2 full sequences forces admission blocking
+    // and evict-and-requeue under both pools
+    let budget = (seq_bytes as f64 * 1.2).ceil() as usize;
+    let prefix = rand_prompt(rng, dims.vocab, opts.prefix_len);
+    let max_new = if opts.smoke { 4 } else { 8 };
+    let reqs: Vec<DecodeRequest> = (0..6u64)
+        .map(|id| {
+            let mut prompt = if id < 4 { prefix.clone() } else { Vec::new() };
+            let tail = 1 + (rng.next_u64() % 3) as usize;
+            prompt.extend(rand_prompt(rng, dims.vocab, tail));
+            DecodeRequest {
+                id,
+                prompt,
+                max_new_tokens: max_new,
+                eos: None,
+                sampling: Sampling::Temperature { temp: 0.9, seed: 0xA11 ^ id },
+                priority: if id % 3 == 0 {
+                    Priority::Batch
+                } else {
+                    Priority::Interactive
+                },
+            }
+        })
+        .collect();
+    let cfg = SchedulerConfig {
+        max_active: 3,
+        max_prefill_per_step: 2,
+        max_prefill_tokens: 2 * opts.page_rows,
+        ..SchedulerConfig::default()
+    };
+    let mk = |sharing| {
+        KvPool::build_with(
+            &dims, kv_cfg, block_size, opts.page_rows, budget, sharing,
+        )
+    };
+
+    let shared_pool = mk(true)?;
+    let (shared_res, peak_shared_extra) =
+        drive_backlog(model, &shared_pool, &reqs, cfg, 1, 3)?;
+    let shared_stats = shared_pool.stats();
+    let unshared_pool = mk(false)?;
+    let (unshared_res, _) =
+        drive_backlog(model, &unshared_pool, &reqs, cfg, 1, 3)?;
+    let unshared_stats = unshared_pool.stats();
+
+    ensure!(
+        shared_res.len() == unshared_res.len(),
+        "{label}: shared run finished {} requests, unshared {}",
+        shared_res.len(),
+        unshared_res.len()
+    );
+    for (a, b) in shared_res.iter().zip(&unshared_res) {
+        ensure!(
+            a.id == b.id && a.tokens == b.tokens && a.finish == b.finish,
+            "{label}: request {} diverges under prefix sharing: {:?} vs {:?}",
+            a.id,
+            a.tokens,
+            b.tokens
+        );
+    }
+    ensure!(
+        shared_stats.dedup_hits > 0,
+        "{label}: shared-prefix backlog produced no dedup hits"
+    );
+    // NB: peak physical bytes are reported, not gated against each
+    // other — sharing lowers resident bytes, which admits *more*
+    // sequences, and prefill pages go in privately before they are
+    // hash-consed, so the shared pool's transient high-water mark can
+    // legitimately sit a page-granule above the unshared one. The hard
+    // invariants are the budget bound and that real savings occurred.
+    ensure!(
+        shared_stats.peak_bytes <= budget
+            && unshared_stats.peak_bytes <= budget,
+        "{label}: a pool exceeded its budget (shared {} B, unshared {} \
+         B, budget {budget} B)",
+        shared_stats.peak_bytes,
+        unshared_stats.peak_bytes
+    );
+    ensure!(
+        peak_shared_extra > 0,
+        "{label}: sharing never held a duplicate sequence's bytes"
+    );
+    ensure!(
+        shared_pool.used_bytes() == 0 && unshared_pool.used_bytes() == 0,
+        "{label}: a pool failed to drain (shared {} B, unshared {} B)",
+        shared_pool.used_bytes(),
+        unshared_pool.used_bytes()
+    );
+
+    let one_copy = one_copy_check(model, &mk(true)?, &prefix)?;
+    println!(
+        "   {label}: streams match, peak {} B shared vs {} B unshared \
+         ({} dedup hits, {} B peak duplicate savings)",
+        shared_stats.peak_bytes,
+        unshared_stats.peak_bytes,
+        shared_stats.dedup_hits,
+        peak_shared_extra,
+    );
+    Ok(json::obj(vec![
+        ("kv_codec", json::s(&shared_pool.codec_id(0))),
+        ("streams_match", Json::Bool(true)),
+        ("finished", json::num(shared_res.len() as f64)),
+        ("budget_bytes", json::num(budget as f64)),
+        ("shared_peak_bytes", json::num(shared_stats.peak_bytes as f64)),
+        (
+            "unshared_peak_bytes",
+            json::num(unshared_stats.peak_bytes as f64),
+        ),
+        ("dedup_hits", json::num(shared_stats.dedup_hits as f64)),
+        ("peak_shared_bytes", json::num(peak_shared_extra as f64)),
+        ("drained", Json::Bool(true)),
+        ("one_copy", one_copy),
+    ]))
+}
+
+// ------------------------------------------------------------- clients
+
+/// What one socket client measured.
+#[derive(Debug)]
+struct ClientOut {
+    idx: usize,
+    priority: Priority,
+    /// The client hung up on purpose after `cancel_after` tokens.
+    cancelled: bool,
+    error: Option<String>,
+    got_done: bool,
+    /// Tokens from the final `done` event (authoritative).
+    tokens: Vec<i32>,
+    /// Tokens as streamed, one SSE event at a time.
+    sse_tokens: Vec<i32>,
+    ttft_ms: f64,
+    itl_ms: Vec<f64>,
+    queue_wait_ms: f64,
+}
+
+fn completion_body(tr: &TraceReq) -> String {
+    json::obj(vec![
+        (
+            "prompt",
+            json::arr(tr.prompt.iter().map(|&t| json::num(t as f64))),
+        ),
+        ("max_new_tokens", json::num(tr.max_new as f64)),
+        ("temperature", json::num(0.9)),
+        ("seed", json::num(tr.seed as f64)),
+        ("priority", json::s(tr.priority.as_str())),
+        ("stream", Json::Bool(true)),
+    ])
+    .to_string()
+}
+
+fn client_inner(
+    addr: SocketAddr,
+    tr: &TraceReq,
+    out: &mut ClientOut,
+) -> crate::Result<()> {
+    let stream = TcpStream::connect(addr).context("connect")?;
+    let mut w = &stream;
+    let body = completion_body(tr);
+    net::write_request(&mut w, "POST", "/v1/completions", body.as_bytes())?;
+    let sent = Instant::now();
+    let mut r = BufReader::new(stream.try_clone().context("clone socket")?);
+    let (status, _headers) = net::read_response_head(&mut r)?;
+    ensure!(status == 200, "HTTP {status}");
+    let mut last = sent;
+    while let Some(chunk) = net::read_chunk(&mut r)? {
+        let now = Instant::now();
+        let text =
+            std::str::from_utf8(&chunk).context("SSE chunk is not UTF-8")?;
+        let payload = text
+            .trim()
+            .strip_prefix("data: ")
+            .ok_or_else(|| anyhow!("not an SSE event: {text:?}"))?;
+        let ev = Json::parse(payload).context("SSE payload")?;
+        if let Some(tok) = ev.opt("token") {
+            let gap_ms = now.duration_since(last).as_secs_f64() * 1e3;
+            if out.sse_tokens.is_empty() {
+                out.ttft_ms = gap_ms;
+            } else {
+                out.itl_ms.push(gap_ms);
+            }
+            last = now;
+            out.sse_tokens.push(tok.as_i64()? as i32);
+            if tr.cancel_after == Some(out.sse_tokens.len()) {
+                out.cancelled = true;
+                // dropping both socket halves IS the cancellation
+                return Ok(());
+            }
+        } else if let Some(done) = ev.opt("done") {
+            out.got_done = true;
+            out.tokens = done
+                .get("tokens")?
+                .as_f64_vec()?
+                .into_iter()
+                .map(|v| v as i32)
+                .collect();
+            out.queue_wait_ms = done.get("queue_wait_ms")?.as_f64()?;
+        } else {
+            bail!("unexpected SSE event {payload:?}");
+        }
+    }
+    ensure!(out.got_done, "stream ended without a done event");
+    Ok(())
+}
+
+fn run_client(addr: SocketAddr, idx: usize, tr: &TraceReq) -> ClientOut {
+    let mut out = ClientOut {
+        idx,
+        priority: tr.priority,
+        cancelled: false,
+        error: None,
+        got_done: false,
+        tokens: Vec::new(),
+        sse_tokens: Vec::new(),
+        ttft_ms: 0.0,
+        itl_ms: Vec::new(),
+        queue_wait_ms: 0.0,
+    };
+    if let Err(e) = client_inner(addr, tr, &mut out) {
+        out.error = Some(format!("{e:#}"));
+    }
+    out
+}
+
+fn http_get(addr: SocketAddr, path: &str) -> crate::Result<Json> {
+    let stream = TcpStream::connect(addr).context("connect")?;
+    let mut w = &stream;
+    net::write_request(&mut w, "GET", path, b"")?;
+    let mut r = BufReader::new(stream.try_clone().context("clone socket")?);
+    let resp = net::read_response(&mut r)?;
+    ensure!(resp.status == 200, "GET {path}: HTTP {}", resp.status);
+    Json::parse(std::str::from_utf8(&resp.body).context("stats body")?)
+}
+
+/// Percentile block for one priority class.
+fn class_entry(outs: &[&ClientOut]) -> Json {
+    let mut ttft: Vec<f64> = outs.iter().map(|o| o.ttft_ms).collect();
+    let mut itl: Vec<f64> =
+        outs.iter().flat_map(|o| o.itl_ms.iter().copied()).collect();
+    let mut qw: Vec<f64> = outs.iter().map(|o| o.queue_wait_ms).collect();
+    let [t50, t95, t99] = percentiles(&mut ttft, [50.0, 95.0, 99.0]);
+    let [i50, i95, i99] = percentiles(&mut itl, [50.0, 95.0, 99.0]);
+    let [q50, q95, q99] = percentiles(&mut qw, [50.0, 95.0, 99.0]);
+    json::obj(vec![
+        ("finished", json::num(outs.len() as f64)),
+        ("ttft_p50_ms", json::num(t50)),
+        ("ttft_p95_ms", json::num(t95)),
+        ("ttft_p99_ms", json::num(t99)),
+        ("itl_p50_ms", json::num(i50)),
+        ("itl_p95_ms", json::num(i95)),
+        ("itl_p99_ms", json::num(i99)),
+        ("queue_wait_p50_ms", json::num(q50)),
+        ("queue_wait_p95_ms", json::num(q95)),
+        ("queue_wait_p99_ms", json::num(q99)),
+    ])
+}
+
+// ---------------------------------------------------------------- run
+
+/// Run the bench and write the report; returns the report JSON.
+pub fn run(opts: &TrafficOpts) -> crate::Result<Json> {
+    ensure!(opts.requests >= 1, "--requests must be at least 1");
+    ensure!(
+        opts.prefix_len % opts.page_rows == 0 && opts.prefix_len > 0,
+        "--prefix-len {} must be a positive multiple of --page-rows {} \
+         (whole pages are the unit of sharing)",
+        opts.prefix_len,
+        opts.page_rows
+    );
+    let dims = bench_dims(opts.smoke);
+    let block_size = if opts.smoke { 16 } else { 32 };
+    ensure!(
+        opts.prefix_len + opts.tail_max + opts.max_new_max.max(3)
+            <= dims.seq_len,
+        "prefix {} + tail {} + generation {} exceeds seq_len {}",
+        opts.prefix_len,
+        opts.tail_max,
+        opts.max_new_max.max(3),
+        dims.seq_len
+    );
+    let params = Params::init_surrogate(&dims, 2026);
+    let weights = PerLayerQConfig::uniform(QConfig::fp4("ue5m3")?);
+    let model = Arc::new(PackedModel::build(
+        &dims,
+        &params,
+        &weights,
+        block_size,
+        operand_cache(),
+    )?);
+    let mut rng = Pcg64::new(opts.seed);
+
+    println!(
+        "== traffic-bench ({}) : {} layers, d_model {}, seq {}, weights {}, \
+         {} requests (prefix {} tokens, {:.0}% shared, {:.0}% batch, \
+         {:.0}% disconnect), c{} ==",
+        if opts.smoke { "smoke" } else { "full" },
+        dims.n_layers,
+        dims.d_model,
+        dims.seq_len,
+        weights.id(),
+        opts.requests,
+        opts.prefix_len,
+        100.0 * opts.shared_ratio,
+        100.0 * opts.batch_frac,
+        100.0 * opts.cancel_frac,
+        opts.concurrency,
+    );
+
+    // phase 1: deterministic sharing gates, every codec of the matrix
+    println!("\n-- sharing gates ({{FP8,FP4}} x {{UE4M3,UE5M3}}) --");
+    let mut gate_entries: Vec<(String, Json)> = Vec::new();
+    for (label, kv_cfg) in gate_codecs()? {
+        let entry =
+            sharing_gate(label, &model, &kv_cfg, block_size, opts, &mut rng)?;
+        gate_entries.push((label.to_string(), entry));
+    }
+
+    // phase 2: the timed loopback run, FP4/UE5M3 KV (the paper's
+    // proposal), prefix sharing on
+    let serve_cfg = PerLayerQConfig::uniform(QConfig::fp4("ue5m3")?);
+    let probe = KvPool::build_with(
+        &dims, &serve_cfg, block_size, opts.page_rows, usize::MAX, false,
+    )?;
+    let budget = (probe.bytes_for_positions(dims.seq_len) as f64
+        * opts.budget_seqs)
+        .ceil() as usize;
+    let pool = KvPool::build_with(
+        &dims, &serve_cfg, block_size, opts.page_rows, budget, true,
+    )?;
+    let shared_prefix = rand_prompt(&mut rng, dims.vocab, opts.prefix_len);
+    let trace = build_trace(opts, dims.vocab, &shared_prefix, &mut rng);
+    let planned_cancels =
+        trace.iter().filter(|t| t.cancel_after.is_some()).count();
+
+    let sched = Scheduler::new(
+        DecodeEngine::with_pool(model.clone(), pool.clone())?,
+        SchedulerConfig {
+            max_active: opts.concurrency,
+            max_prefill_per_step: opts.concurrency,
+            max_prefill_tokens: 4 * opts.page_rows,
+        },
+    );
+    let server = HttpServer::start(sched, "127.0.0.1:0")?;
+    let addr = server.addr();
+    println!("\n-- serving {} requests over {addr} --", trace.len());
+
+    let t0 = Instant::now();
+    let handles: Vec<_> = trace
+        .iter()
+        .enumerate()
+        .map(|(idx, tr)| {
+            let tr = tr.clone();
+            thread::spawn(move || {
+                let target = Duration::from_secs_f64(tr.at_ms / 1e3);
+                let elapsed = t0.elapsed();
+                if target > elapsed {
+                    thread::sleep(target - elapsed);
+                }
+                run_client(addr, idx, &tr)
+            })
+        })
+        .collect();
+    let outs: Vec<ClientOut> = handles
+        .into_iter()
+        .map(|h| h.join().map_err(|_| anyhow!("client thread panicked")))
+        .collect::<crate::Result<_>>()?;
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    // the last disconnect may still be mid-cancel inside the
+    // scheduler loop; poll until the pool drains (bounded)
+    let mut final_stats = http_get(addr, "/stats")?;
+    let drained = |s: &Json| -> crate::Result<bool> {
+        Ok(s.get("pending")?.as_usize()? == 0
+            && s.get("active")?.as_usize()? == 0
+            && s.get("preempted")?.as_usize()? == 0
+            && s.get("kv_used_bytes")?.as_usize()? == 0)
+    };
+    for _ in 0..250 {
+        if drained(&final_stats)? {
+            break;
+        }
+        thread::sleep(Duration::from_millis(20));
+        final_stats = http_get(addr, "/stats")?;
+    }
+    let pool_drained = drained(&final_stats)?;
+    server.shutdown();
+
+    // sort the measurements back into trace order and split them
+    let mut outs = outs;
+    outs.sort_by_key(|o| o.idx);
+    let errors: Vec<String> = outs
+        .iter()
+        .filter_map(|o| {
+            o.error.as_ref().map(|e| format!("request {}: {e}", o.idx))
+        })
+        .collect();
+    ensure!(errors.is_empty(), "client failures: {errors:?}");
+    let completed: Vec<&ClientOut> =
+        outs.iter().filter(|o| o.got_done).collect();
+    let cancelled = outs.iter().filter(|o| o.cancelled).count();
+    ensure!(
+        completed.len() + cancelled == outs.len(),
+        "{} completed + {} cancelled != {} requests",
+        completed.len(),
+        cancelled,
+        outs.len()
+    );
+    // SSE events and the final result must tell the same story
+    let sse_ok = completed.iter().all(|o| o.sse_tokens == o.tokens);
+    ensure!(sse_ok, "an SSE stream disagrees with its done event");
+
+    // replay the survivors through a direct scheduler on an UNSHARED
+    // pool under a different prefill-chunking config: served streams
+    // must be bit-identical (sharing + HTTP + scheduling invariance)
+    let replay_pool = KvPool::build_with(
+        &dims, &serve_cfg, block_size, opts.page_rows, budget, false,
+    )?;
+    let mut replay = Scheduler::new(
+        DecodeEngine::with_pool(model.clone(), replay_pool.clone())?,
+        SchedulerConfig {
+            max_active: opts.concurrency,
+            max_prefill_per_step: opts.concurrency,
+            ..SchedulerConfig::default()
+        },
+    );
+    for o in &completed {
+        let tr = &trace[o.idx];
+        replay.submit(DecodeRequest {
+            id: o.idx as u64,
+            prompt: tr.prompt.clone(),
+            max_new_tokens: tr.max_new,
+            eos: None,
+            sampling: Sampling::Temperature { temp: 0.9, seed: tr.seed },
+            priority: tr.priority,
+        })?;
+    }
+    let direct = replay.run()?;
+    ensure!(
+        direct.len() == completed.len(),
+        "replay finished {} of {} requests",
+        direct.len(),
+        completed.len()
+    );
+    let mut streams_ok = true;
+    for (d, o) in direct.iter().zip(&completed) {
+        if d.id != o.idx as u64 || d.tokens != o.tokens {
+            streams_ok = false;
+            println!(
+                "   MISMATCH request {}: served {:?} vs direct {:?}",
+                o.idx, o.tokens, d.tokens
+            );
+        }
+    }
+
+    let tokens: usize = completed.iter().map(|o| o.tokens.len()).sum();
+    let goodput = tokens as f64 / wall_s.max(1e-9);
+    let by_class = |p: Priority| -> Vec<&ClientOut> {
+        completed.iter().copied().filter(|o| o.priority == p).collect()
+    };
+    let interactive = by_class(Priority::Interactive);
+    let batch = by_class(Priority::Batch);
+    let server_cancellations =
+        final_stats.get("cancellations")?.as_usize()?;
+    let kv_peak = final_stats.get("kv_peak_bytes")?.as_usize()?;
+    let dedup_hits = final_stats.get("kv_dedup_hits")?.as_usize()?;
+
+    println!(
+        "   {} completed / {} disconnected, {goodput:8.1} tok/s goodput, \
+         peak KV {kv_peak} B, {dedup_hits} dedup hits, drained: {}",
+        completed.len(),
+        cancelled,
+        pool_drained,
+    );
+
+    // host-independent verdict: the sharing gates all passed (they
+    // error out otherwise), served == direct bit for bit, SSE framing
+    // agreed with results, every request accounted for, the pool
+    // drained, and the server saw no more cancellations than clients
+    // staged
+    let pass = streams_ok
+        && pool_drained
+        && sse_ok
+        && server_cancellations <= planned_cancels
+        && (opts.shared_ratio == 0.0 || dedup_hits > 0);
+    println!(
+        "\n   verdict (gates + served-vs-direct streams + drain + \
+         accounting): {}",
+        if pass { "PASS" } else { "MISS" }
+    );
+
+    let report = json::obj(vec![
+        ("bench", json::s("traffic")),
+        ("smoke", Json::Bool(opts.smoke)),
+        ("simd_kernel", json::s(crate::util::simd::kernel_name())),
+        (
+            "model",
+            json::obj(vec![
+                ("vocab", json::num(dims.vocab as f64)),
+                ("d_model", json::num(dims.d_model as f64)),
+                ("n_heads", json::num(dims.n_heads as f64)),
+                ("n_layers", json::num(dims.n_layers as f64)),
+                ("d_ff", json::num(dims.d_ff as f64)),
+                ("seq_len", json::num(dims.seq_len as f64)),
+                ("block_size", json::num(block_size as f64)),
+            ]),
+        ),
+        ("weights_qconfig", json::s(&weights.id())),
+        ("kv_codec", json::s(&pool.codec_id(0))),
+        (
+            "workload",
+            json::obj(vec![
+                ("requests", json::num(opts.requests as f64)),
+                ("seed", json::num(opts.seed as f64)),
+                ("concurrency", json::num(opts.concurrency as f64)),
+                ("prefix_len", json::num(opts.prefix_len as f64)),
+                ("shared_ratio", json::num(opts.shared_ratio)),
+                ("batch_frac", json::num(opts.batch_frac)),
+                ("cancel_frac", json::num(opts.cancel_frac)),
+                ("burst_len", json::num(opts.burst_len as f64)),
+                ("rate_per_s", json::num(opts.rate_per_s)),
+                ("burst_gap_ms", json::num(opts.burst_gap_ms)),
+                ("page_rows", json::num(opts.page_rows as f64)),
+                ("budget_bytes", json::num(budget as f64)),
+                ("tail_max", json::num(opts.tail_max as f64)),
+                ("max_new_max", json::num(opts.max_new_max as f64)),
+            ]),
+        ),
+        ("sharing_gates", json::obj_owned(gate_entries)),
+        (
+            "http",
+            json::obj(vec![
+                ("completed", json::num(completed.len() as f64)),
+                ("disconnected", json::num(cancelled as f64)),
+                (
+                    "server_cancellations",
+                    json::num(server_cancellations as f64),
+                ),
+                ("streams_match_direct", Json::Bool(streams_ok)),
+                ("sse_matches_result", Json::Bool(sse_ok)),
+                ("drained", Json::Bool(pool_drained)),
+                ("kv_peak_bytes", json::num(kv_peak as f64)),
+                ("dedup_hits", json::num(dedup_hits as f64)),
+                ("goodput_tok_s", json::num(goodput)),
+                ("wall_s", json::num(wall_s)),
+                (
+                    "classes",
+                    json::obj(vec![
+                        ("interactive", class_entry(&interactive)),
+                        ("batch", class_entry(&batch)),
+                    ]),
+                ),
+            ]),
+        ),
+        // latency numbers above are SLO *inputs*, host-dependent by
+        // nature — the pass verdict deliberately excludes them
+        ("slo_verdict", Json::Null),
+        ("pass", Json::Bool(pass)),
+    ]);
+    std::fs::write(&opts.out, report.to_string())
+        .with_context(|| format!("writing {}", opts.out.display()))?;
+    println!("   wrote {}", opts.out.display());
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_is_seeded_and_shaped() {
+        let opts = TrafficOpts::new(true);
+        let prefix: Vec<i32> = (0..opts.prefix_len as i32).collect();
+        let mk = || {
+            let mut rng = Pcg64::new(opts.seed);
+            build_trace(&opts, 64, &prefix, &mut rng)
+        };
+        let a = mk();
+        let b = mk();
+        assert_eq!(a.len(), opts.requests);
+        // same seed, same trace — arrivals, prompts, classes, all of it
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_ms, y.at_ms);
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.max_new, y.max_new);
+            assert_eq!(x.priority, y.priority);
+            assert_eq!(x.cancel_after, y.cancel_after);
+        }
+        // arrivals are non-decreasing and every prompt fits the model
+        for w in a.windows(2) {
+            assert!(w[1].at_ms >= w[0].at_ms);
+        }
+        let shared =
+            a.iter().filter(|t| t.prompt.starts_with(&prefix)).count();
+        assert!(shared > 0, "no request drew the shared prefix");
+        for t in &a {
+            assert!(!t.prompt.is_empty());
+            assert!(t.max_new >= 3);
+            assert!(
+                t.prompt.len() + t.max_new
+                    <= opts.prefix_len + opts.tail_max + opts.max_new_max
+            );
+        }
+    }
+
+    #[test]
+    fn mixed_len_stays_in_range() {
+        let mut rng = Pcg64::new(7);
+        for max in [1usize, 2, 5, 16] {
+            for _ in 0..200 {
+                let v = mixed_len(&mut rng, max);
+                assert!((1..=max).contains(&v), "{v} out of 1..={max}");
+            }
+        }
+    }
+}

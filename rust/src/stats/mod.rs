@@ -91,6 +91,34 @@ pub fn chi2_rel(theory: &[f64], experiment: &[f64]) -> f64 {
     }
 }
 
+/// Nearest-rank percentile: sorts `samples` in place and returns the
+/// value at index `round((n-1)·p/100)`; `0.0` for an empty slice.
+///
+/// This is the one percentile rule every serving statistic in the repo
+/// uses ([`crate::serve::ServeStats`], `BENCH_decode.json`,
+/// `BENCH_kv.json`, `BENCH_traffic.json`), so p50/p95/p99 numbers are
+/// comparable across reports. The index rule means n = 1 returns the
+/// only sample for every p, and an exact quantile hit (e.g. p50 over
+/// an odd n) reads the middle element rather than interpolating.
+pub fn percentile(samples: &mut [f64], p: f64) -> f64 {
+    percentiles(samples, [p])[0]
+}
+
+/// [`percentile`] over many quantiles with a single sort.
+pub fn percentiles<const N: usize>(
+    samples: &mut [f64],
+    ps: [f64; N],
+) -> [f64; N] {
+    if samples.is_empty() {
+        return [0.0; N];
+    }
+    samples.sort_by(|a, b| a.total_cmp(b));
+    ps.map(|p| {
+        let idx = ((samples.len() - 1) as f64 * p / 100.0).round() as usize;
+        samples[idx.min(samples.len() - 1)]
+    })
+}
+
 /// Log-spaced grid in [lo, hi] (inclusive), like numpy.geomspace.
 pub fn geomspace(lo: f64, hi: f64, n: usize) -> Vec<f64> {
     assert!(lo > 0.0 && hi > lo && n >= 2);
@@ -177,6 +205,34 @@ mod tests {
         assert_eq!(chi2_rel(&t, &t), 0.0);
         let e = [1.1e-6, 2.2e-5, 3.3e-4];
         assert!(chi2_log(&t, &e) > 0.0);
+    }
+
+    #[test]
+    fn percentile_boundary_indices() {
+        // n = 0: every quantile is 0.0
+        assert_eq!(percentile(&mut [], 50.0), 0.0);
+        assert_eq!(percentiles(&mut [], [50.0, 99.0]), [0.0, 0.0]);
+        // n = 1: the only sample, for every p
+        assert_eq!(percentile(&mut [7.5], 0.0), 7.5);
+        assert_eq!(percentile(&mut [7.5], 50.0), 7.5);
+        assert_eq!(percentile(&mut [7.5], 100.0), 7.5);
+        // n = 2: round((1)·p/100) — p < 50 reads [0], p ≥ 50 reads [1]
+        // (round-half-away-from-zero puts the tie at the upper sample)
+        assert_eq!(percentile(&mut [3.0, 1.0], 0.0), 1.0);
+        assert_eq!(percentile(&mut [3.0, 1.0], 49.0), 1.0);
+        assert_eq!(percentile(&mut [3.0, 1.0], 50.0), 3.0);
+        assert_eq!(percentile(&mut [3.0, 1.0], 100.0), 3.0);
+        // exact quantile hits: 5 samples, p50 is the middle element and
+        // p25/p75 land on indices 1 and 3 exactly
+        let mut x = [50.0, 10.0, 40.0, 20.0, 30.0];
+        assert_eq!(percentiles(&mut x, [25.0, 50.0, 75.0]), [20.0, 30.0, 40.0]);
+        // one sort serves every quantile, input order irrelevant
+        let mut a = [9.0, 2.0, 5.0, 7.0];
+        let mut b = [2.0, 5.0, 7.0, 9.0];
+        assert_eq!(
+            percentiles(&mut a, [0.0, 95.0, 100.0]),
+            percentiles(&mut b, [0.0, 95.0, 100.0])
+        );
     }
 
     #[test]

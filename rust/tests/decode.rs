@@ -28,7 +28,7 @@ use microscale::serve::cache::OperandCache;
 use microscale::serve::decode::generate_reforward;
 use microscale::serve::packed_model::{reference_forward, PackedModel};
 use microscale::serve::scheduler::{
-    DecodeRequest, FinishReason, Scheduler, SchedulerConfig,
+    DecodeRequest, FinishReason, Priority, Scheduler, SchedulerConfig,
 };
 use microscale::serve::{DecodeEngine, Sampling};
 
@@ -204,6 +204,7 @@ fn scheduler_streams_are_invariant_to_order_concurrency_and_threads() {
                 } else {
                     Sampling::Temperature { temp: 0.7, seed: 1000 + id }
                 },
+                priority: Priority::Interactive,
             }
         })
         .collect();
@@ -232,17 +233,29 @@ fn scheduler_streams_are_invariant_to_order_concurrency_and_threads() {
     let runs: Vec<(Arc<PackedModel>, SchedulerConfig, bool)> = vec![
         (
             model.clone(),
-            SchedulerConfig { max_active: 2, max_prefill_per_step: 1 },
+            SchedulerConfig {
+                max_active: 2,
+                max_prefill_per_step: 1,
+                ..SchedulerConfig::default()
+            },
             false,
         ),
         (
             model.clone(),
-            SchedulerConfig { max_active: 6, max_prefill_per_step: 6 },
+            SchedulerConfig {
+                max_active: 6,
+                max_prefill_per_step: 6,
+                ..SchedulerConfig::default()
+            },
             true, // reversed admission order
         ),
         (
             serial,
-            SchedulerConfig { max_active: 3, max_prefill_per_step: 2 },
+            SchedulerConfig {
+                max_active: 3,
+                max_prefill_per_step: 2,
+                ..SchedulerConfig::default()
+            },
             true,
         ),
     ];
@@ -268,6 +281,157 @@ fn scheduler_streams_are_invariant_to_order_concurrency_and_threads() {
             assert_eq!(r.itl.len(), r.tokens.len() - 1, "request {}", r.id);
         }
     }
+}
+
+#[test]
+fn take_finished_returns_id_sorted_batches() {
+    let d = dims();
+    let params = Params::init_surrogate(&d, 23);
+    let cache = OperandCache::new(64);
+    let qcfg = PerLayerQConfig::uniform(QConfig::fp4("ue5m3").unwrap());
+    let model =
+        Arc::new(PackedModel::build(&d, &params, &qcfg, 8, &cache).unwrap());
+    let mut rng = Pcg64::new(55);
+    let mut sched = Scheduler::new(
+        DecodeEngine::new(model).unwrap(),
+        SchedulerConfig {
+            max_active: 2,
+            max_prefill_per_step: 1,
+            ..SchedulerConfig::default()
+        },
+    );
+    // submission order is scrambled and ids are sparse; lengths vary
+    // so completion order differs from id order too
+    for (id, max_new) in [(9u64, 2usize), (2, 5), (31, 3), (0, 4)] {
+        sched
+            .submit(DecodeRequest {
+                id,
+                prompt: tokens(&mut rng, &d, 3),
+                max_new_tokens: max_new,
+                eos: None,
+                sampling: Sampling::Greedy,
+                priority: Priority::Interactive,
+            })
+            .unwrap();
+    }
+    let mut seen = Vec::new();
+    let mut steps = 0;
+    while !sched.is_idle() {
+        sched.step().unwrap();
+        steps += 1;
+        assert!(steps < 1000);
+        let batch = sched.take_finished();
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        let mut sorted = ids.clone();
+        sorted.sort_unstable();
+        assert_eq!(ids, sorted, "each drained batch is id-sorted");
+        seen.extend(ids);
+    }
+    seen.sort_unstable();
+    assert_eq!(seen, vec![0, 2, 9, 31], "every request retired once");
+    assert!(sched.take_finished().is_empty(), "drained means drained");
+}
+
+#[test]
+fn prefill_token_limit_never_changes_streams() {
+    let d = dims();
+    let params = Params::init_surrogate(&d, 24);
+    let cache = OperandCache::new(64);
+    let qcfg = PerLayerQConfig::uniform(QConfig::fp4("ue4m3").unwrap());
+    let model =
+        Arc::new(PackedModel::build(&d, &params, &qcfg, 8, &cache).unwrap());
+    let mut rng = Pcg64::new(56);
+    let reqs: Vec<DecodeRequest> = (0..4u64)
+        .map(|id| DecodeRequest {
+            id,
+            prompt: tokens(&mut rng, &d, 4 + (id as usize % 3)),
+            max_new_tokens: 3,
+            eos: None,
+            sampling: Sampling::Temperature { temp: 0.8, seed: 70 + id },
+            priority: Priority::Interactive,
+        })
+        .collect();
+    let mut baseline: Option<Vec<Vec<i32>>> = None;
+    for limit in [1usize, 2, 3, usize::MAX] {
+        let mut sched = Scheduler::new(
+            DecodeEngine::new(model.clone()).unwrap(),
+            SchedulerConfig {
+                max_active: 3,
+                max_prefill_per_step: 2,
+                max_prefill_tokens: limit,
+            },
+        );
+        for r in &reqs {
+            sched.submit(r.clone()).unwrap();
+        }
+        let results = sched.run().unwrap();
+        for r in &results {
+            // queueing happens before the first token, never after
+            assert!(
+                r.queue_wait <= r.ttft,
+                "request {}: queue_wait {:?} > ttft {:?} (limit {limit})",
+                r.id,
+                r.queue_wait,
+                r.ttft
+            );
+        }
+        let streams: Vec<Vec<i32>> =
+            results.iter().map(|r| r.tokens.clone()).collect();
+        match &baseline {
+            None => baseline = Some(streams),
+            Some(want) => assert_eq!(
+                &streams, want,
+                "prefill chunk limit {limit} changed a stream"
+            ),
+        }
+    }
+}
+
+#[test]
+fn cancellation_mid_flight_drains_pool_accounting() {
+    let d = dims();
+    let params = Params::init_surrogate(&d, 25);
+    let cache = OperandCache::new(64);
+    let qcfg = PerLayerQConfig::uniform(QConfig::fp4("ue5m3").unwrap());
+    let model =
+        Arc::new(PackedModel::build(&d, &params, &qcfg, 8, &cache).unwrap());
+    let kv_cfg = PerLayerQConfig::uniform(
+        QConfig::named("fp8_e4m3", "ue5m3", false).unwrap(),
+    );
+    let pool =
+        microscale::serve::KvPool::build_with(&d, &kv_cfg, 8, 2, usize::MAX, true)
+            .unwrap();
+    let mut rng = Pcg64::new(57);
+    let mut sched = Scheduler::new(
+        DecodeEngine::with_pool(model, pool.clone()).unwrap(),
+        SchedulerConfig::default(),
+    );
+    let prompt = tokens(&mut rng, &d, 4);
+    for id in 0..2u64 {
+        sched
+            .submit(DecodeRequest {
+                id,
+                prompt: prompt.clone(), // shared prefix across both
+                max_new_tokens: 5,
+                eos: None,
+                sampling: Sampling::Greedy,
+                priority: Priority::Interactive,
+            })
+            .unwrap();
+    }
+    // two steps in, both sequences hold pages; cancel one mid-flight
+    sched.step().unwrap();
+    sched.step().unwrap();
+    assert!(pool.used_bytes() > 0);
+    assert_eq!(sched.cancel(0), 1, "request 0 was live");
+    let results = sched.run().unwrap();
+    assert_eq!(results.len(), 1, "only the survivor retires");
+    assert_eq!(results[0].id, 1);
+    assert_eq!(results[0].tokens.len(), 5);
+    assert_eq!(sched.cancellations(), 1);
+    assert_eq!(pool.used_bytes(), 0, "cancelled pages were reclaimed");
+    let s = pool.stats();
+    assert_eq!(s.allocs, s.frees, "page ledger balances");
 }
 
 #[test]
@@ -297,6 +461,7 @@ fn eos_and_context_full_retire_sequences() {
             max_new_tokens: 5,
             eos: Some(eos),
             sampling: Sampling::Greedy,
+            priority: Priority::Interactive,
         })
         .unwrap();
     let r = &sched.run().unwrap()[0];
@@ -312,6 +477,7 @@ fn eos_and_context_full_retire_sequences() {
             max_new_tokens: 100,
             eos: None,
             sampling: Sampling::Greedy,
+            priority: Priority::Interactive,
         })
         .unwrap();
     let r = &sched.run().unwrap()[0];

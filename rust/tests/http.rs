@@ -1,0 +1,438 @@
+//! Serving-edge acceptance suite (ISSUE-8): the HTTP front-end over
+//! the real scheduler, driven through loopback sockets.
+//!
+//! Pins the load-bearing guarantees of the serving edge:
+//!
+//! 1. **Oracle exactness over the wire** — tokens served by
+//!    `POST /v1/completions` (greedy and seeded sampling, both
+//!    response modes) are bit-identical to the cache-free
+//!    `generate_reforward` oracle; HTTP framing, concurrency, and
+//!    priority classes cannot change a stream.
+//! 2. **SSE streaming** — the chunked `text/event-stream` response
+//!    delivers one event per token and the terminal `done` event
+//!    repeats exactly the streamed tokens.
+//! 3. **Disconnect cancellation** — a client that hangs up mid-stream
+//!    leaves nothing behind: the pool drains to 0 bytes and other
+//!    in-flight requests complete bit-identically.
+//! 4. **Robustness** — malformed bodies get 400s, unknown routes 404s,
+//!    and the stats/health endpoints answer while work is in flight.
+
+use std::io::BufReader;
+use std::net::{SocketAddr, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use microscale::dist::Pcg64;
+use microscale::model::Params;
+use microscale::runtime::artifacts::ModelDims;
+use microscale::runtime::qconfig::{PerLayerQConfig, QConfig};
+use microscale::serve::decode::generate_reforward;
+use microscale::serve::net;
+use microscale::serve::packed_model::PackedModel;
+use microscale::serve::{
+    DecodeEngine, HttpServer, KvPool, Sampling, Scheduler, SchedulerConfig,
+};
+use microscale::util::json::Json;
+
+fn dims() -> ModelDims {
+    ModelDims {
+        vocab: 48,
+        d_model: 32,
+        n_heads: 2,
+        n_layers: 2,
+        d_ff: 64,
+        seq_len: 48,
+    }
+}
+
+fn model(seed: u64) -> Arc<PackedModel> {
+    let d = dims();
+    let params = Params::init_surrogate(&d, seed);
+    let qcfg =
+        PerLayerQConfig::uniform(QConfig::fp4("ue5m3").unwrap());
+    Arc::new(
+        PackedModel::build(
+            &d,
+            &params,
+            &qcfg,
+            16,
+            microscale::serve::operand_cache(),
+        )
+        .unwrap(),
+    )
+}
+
+fn start(
+    m: &Arc<PackedModel>,
+    pool: Option<Arc<KvPool>>,
+) -> HttpServer {
+    let engine = match pool {
+        Some(p) => DecodeEngine::with_pool(m.clone(), p).unwrap(),
+        None => DecodeEngine::new(m.clone()).unwrap(),
+    };
+    let sched = Scheduler::new(engine, SchedulerConfig::default());
+    HttpServer::start(sched, "127.0.0.1:0").unwrap()
+}
+
+/// One request/response exchange on a fresh connection.
+fn exchange(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    body: &[u8],
+) -> net::Response {
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = &stream;
+    net::write_request(&mut w, method, path, body).unwrap();
+    let mut r = BufReader::new(stream.try_clone().unwrap());
+    net::read_response(&mut r).unwrap()
+}
+
+fn body_json(resp: &net::Response) -> Json {
+    Json::parse(std::str::from_utf8(&resp.body).unwrap()).unwrap()
+}
+
+fn tokens_field(j: &Json, key: &str) -> Vec<i32> {
+    j.get(key)
+        .unwrap()
+        .as_f64_vec()
+        .unwrap()
+        .into_iter()
+        .map(|v| v as i32)
+        .collect()
+}
+
+fn prompt_json(prompt: &[i32]) -> String {
+    let items: Vec<String> =
+        prompt.iter().map(|t| t.to_string()).collect();
+    format!("[{}]", items.join(","))
+}
+
+/// Parse one SSE chunk (`data: {..}\n\n`) into its JSON payload.
+fn sse_payload(chunk: &[u8]) -> Json {
+    let text = std::str::from_utf8(chunk).unwrap();
+    let data = text
+        .trim()
+        .strip_prefix("data: ")
+        .unwrap_or_else(|| panic!("not an SSE event: {text:?}"));
+    Json::parse(data).unwrap()
+}
+
+#[test]
+fn health_stats_and_error_routes_answer() {
+    let m = model(70);
+    let server = start(&m, None);
+    let addr = server.addr();
+
+    let resp = exchange(addr, "GET", "/healthz", b"");
+    assert_eq!(resp.status, 200);
+    assert!(body_json(&resp).get("ok").unwrap().as_bool().unwrap());
+
+    let resp = exchange(addr, "GET", "/stats", b"");
+    assert_eq!(resp.status, 200);
+    let j = body_json(&resp);
+    for key in ["pending", "active", "preempted", "kv_used_bytes"] {
+        assert_eq!(j.get(key).unwrap().as_usize().unwrap(), 0, "{key}");
+    }
+
+    let resp = exchange(addr, "GET", "/nope", b"");
+    assert_eq!(resp.status, 404);
+    assert!(body_json(&resp).opt("error").is_some());
+
+    // Malformed completion bodies are 400s with a reason, and leave
+    // the server fully operational.
+    for bad in [
+        &b"not json"[..],
+        br#"{"max_new_tokens": 4}"#,
+        br#"{"prompt": [1], "priority": "urgent"}"#,
+    ] {
+        let resp = exchange(addr, "POST", "/v1/completions", bad);
+        assert_eq!(resp.status, 400, "{bad:?}");
+        assert!(body_json(&resp).opt("error").is_some());
+    }
+    let resp = exchange(addr, "GET", "/healthz", b"");
+    assert_eq!(resp.status, 200);
+    server.shutdown();
+}
+
+#[test]
+fn served_completions_match_the_reforward_oracle() {
+    let m = model(71);
+    let server = start(&m, None);
+    let addr = server.addr();
+    let mut rng = Pcg64::new(90);
+    let d = dims();
+
+    // greedy, then seeded sampling, then an explicit batch-class
+    // request — every served stream must equal the cache-free oracle.
+    let cases: Vec<(Vec<i32>, String, Sampling)> = vec![
+        (
+            (0..5)
+                .map(|_| (rng.next_u64() % d.vocab as u64) as i32)
+                .collect(),
+            String::new(),
+            Sampling::Greedy,
+        ),
+        (
+            (0..4)
+                .map(|_| (rng.next_u64() % d.vocab as u64) as i32)
+                .collect(),
+            ",\"temperature\":0.8,\"seed\":11".to_string(),
+            Sampling::Temperature { temp: 0.8, seed: 11 },
+        ),
+        (
+            (0..3)
+                .map(|_| (rng.next_u64() % d.vocab as u64) as i32)
+                .collect(),
+            ",\"priority\":\"batch\"".to_string(),
+            Sampling::Greedy,
+        ),
+    ];
+    for (i, (prompt, extra, sampling)) in cases.iter().enumerate() {
+        let want =
+            generate_reforward(&m, prompt, 6, None, sampling).unwrap();
+        let body = format!(
+            "{{\"prompt\":{},\"max_new_tokens\":6{extra}}}",
+            prompt_json(prompt)
+        );
+        let resp =
+            exchange(addr, "POST", "/v1/completions", body.as_bytes());
+        assert_eq!(resp.status, 200, "case {i}");
+        let j = body_json(&resp);
+        assert_eq!(tokens_field(&j, "tokens"), want, "case {i}");
+        assert_eq!(
+            j.get("finish").unwrap().as_str().unwrap(),
+            "max_tokens",
+            "case {i}"
+        );
+        assert_eq!(
+            j.get("prompt_len").unwrap().as_usize().unwrap(),
+            prompt.len()
+        );
+        assert_eq!(
+            j.get("itl_ms").unwrap().as_arr().unwrap().len(),
+            want.len() - 1
+        );
+        assert!(j.get("queue_wait_ms").unwrap().as_f64().unwrap() >= 0.0);
+        let want_class = if extra.contains("batch") {
+            "batch"
+        } else {
+            "interactive"
+        };
+        assert_eq!(
+            j.get("priority").unwrap().as_str().unwrap(),
+            want_class,
+            "case {i}"
+        );
+    }
+    server.shutdown();
+}
+
+#[test]
+fn sse_stream_is_incremental_and_matches_done() {
+    let m = model(72);
+    let server = start(&m, None);
+    let addr = server.addr();
+    let mut rng = Pcg64::new(91);
+    let d = dims();
+    let prompt: Vec<i32> = (0..4)
+        .map(|_| (rng.next_u64() % d.vocab as u64) as i32)
+        .collect();
+    let sampling = Sampling::Temperature { temp: 0.7, seed: 5 };
+    let want = generate_reforward(&m, &prompt, 5, None, &sampling).unwrap();
+
+    let body = format!(
+        "{{\"prompt\":{},\"max_new_tokens\":5,\"temperature\":0.7,\
+         \"seed\":5,\"stream\":true}}",
+        prompt_json(&prompt)
+    );
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut w = &stream;
+    net::write_request(&mut w, "POST", "/v1/completions", body.as_bytes())
+        .unwrap();
+    let mut r = BufReader::new(stream.try_clone().unwrap());
+    let (status, headers) = net::read_response_head(&mut r).unwrap();
+    assert_eq!(status, 200);
+    assert!(headers.iter().any(|(n, v)| n == "transfer-encoding"
+        && v.eq_ignore_ascii_case("chunked")));
+    assert!(headers.iter().any(|(n, v)| n == "content-type"
+        && v == "text/event-stream"));
+
+    let mut streamed = Vec::new();
+    let mut done: Option<Json> = None;
+    while let Some(chunk) = net::read_chunk(&mut r).unwrap() {
+        let j = sse_payload(&chunk);
+        if let Some(t) = j.opt("token") {
+            assert!(done.is_none(), "token after done");
+            streamed.push(t.as_i64().unwrap() as i32);
+        } else {
+            done = Some(j.get("done").unwrap().clone());
+        }
+    }
+    let done = done.expect("stream ended without a done event");
+    assert_eq!(streamed, want, "streamed tokens vs oracle");
+    assert_eq!(tokens_field(&done, "tokens"), want, "done payload");
+    assert_eq!(done.get("finish").unwrap().as_str().unwrap(), "max_tokens");
+    server.shutdown();
+}
+
+#[test]
+fn disconnect_mid_stream_drains_the_pool() {
+    let d = dims();
+    let m = model(73);
+    // An Exact pool keeps the oracle comparison valid for the
+    // surviving request; generous budget so only cancellation frees.
+    let pool = KvPool::exact(&d, 4, usize::MAX).unwrap();
+    let server = start(&m, Some(pool.clone()));
+    let addr = server.addr();
+    let mut rng = Pcg64::new(92);
+    let prompt_a: Vec<i32> = (0..4)
+        .map(|_| (rng.next_u64() % d.vocab as u64) as i32)
+        .collect();
+    let prompt_b: Vec<i32> = (0..6)
+        .map(|_| (rng.next_u64() % d.vocab as u64) as i32)
+        .collect();
+    let want_b =
+        generate_reforward(&m, &prompt_b, 8, None, &Sampling::Greedy)
+            .unwrap();
+
+    // Client A: a long stream (40 tokens to go), abandoned after two.
+    let body_a = format!(
+        "{{\"prompt\":{},\"max_new_tokens\":40,\"stream\":true}}",
+        prompt_json(&prompt_a)
+    );
+    let stream_a = TcpStream::connect(addr).unwrap();
+    {
+        let mut w = &stream_a;
+        net::write_request(
+            &mut w,
+            "POST",
+            "/v1/completions",
+            body_a.as_bytes(),
+        )
+        .unwrap();
+    }
+    let mut ra = BufReader::new(stream_a.try_clone().unwrap());
+    let (status, _) = net::read_response_head(&mut ra).unwrap();
+    assert_eq!(status, 200);
+    for _ in 0..2 {
+        let chunk = net::read_chunk(&mut ra).unwrap().unwrap();
+        assert!(sse_payload(&chunk).opt("token").is_some());
+    }
+    // Client B submits while A is (still) streaming, then A hangs up.
+    let body_b = format!(
+        "{{\"prompt\":{},\"max_new_tokens\":8}}",
+        prompt_json(&prompt_b)
+    );
+    let stream_b = TcpStream::connect(addr).unwrap();
+    {
+        let mut w = &stream_b;
+        net::write_request(
+            &mut w,
+            "POST",
+            "/v1/completions",
+            body_b.as_bytes(),
+        )
+        .unwrap();
+    }
+    drop(ra);
+    drop(stream_a); // the disconnect: no FIN-before-done handshake
+
+    let mut rb = BufReader::new(stream_b.try_clone().unwrap());
+    let resp = net::read_response(&mut rb).unwrap();
+    assert_eq!(resp.status, 200);
+    let j = body_json(&resp);
+    assert_eq!(
+        tokens_field(&j, "tokens"),
+        want_b,
+        "survivor stream must be untouched by the cancellation"
+    );
+
+    // The abandoned sequence's pages must drain — poll /stats until
+    // the scheduler reports nothing pending, active, or resident.
+    let mut drained = false;
+    for _ in 0..250 {
+        let resp = exchange(addr, "GET", "/stats", b"");
+        let j = body_json(&resp);
+        let busy = ["pending", "active", "preempted", "kv_used_bytes"]
+            .iter()
+            .map(|k| j.get(k).unwrap().as_usize().unwrap())
+            .sum::<usize>();
+        if busy == 0 {
+            drained = true;
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(drained, "pool never drained after client disconnect");
+    // At most the one abandoned request can have been cancelled (it
+    // may also have finished before the hang-up was observed).
+    let resp = exchange(addr, "GET", "/stats", b"");
+    let cancels =
+        body_json(&resp).get("cancellations").unwrap().as_usize().unwrap();
+    assert!(cancels <= 1, "cancellations {cancels}");
+    server.shutdown();
+    assert_eq!(pool.used_bytes(), 0);
+    let s = pool.stats();
+    assert_eq!(s.allocs, s.frees, "every allocated page was freed");
+}
+
+#[test]
+fn concurrent_streams_are_all_bit_exact() {
+    let d = dims();
+    let m = model(74);
+    let server = start(&m, None);
+    let addr = server.addr();
+    let mut rng = Pcg64::new(93);
+
+    // Six clients race over real sockets; each served stream must
+    // still equal its own single-request oracle.
+    let cases: Vec<(Vec<i32>, Sampling)> = (0..6u64)
+        .map(|i| {
+            let len = 3 + (i as usize % 3);
+            let prompt: Vec<i32> = (0..len)
+                .map(|_| (rng.next_u64() % d.vocab as u64) as i32)
+                .collect();
+            let sampling = if i % 2 == 0 {
+                Sampling::Greedy
+            } else {
+                Sampling::Temperature { temp: 0.9, seed: 300 + i }
+            };
+            (prompt, sampling)
+        })
+        .collect();
+    let want: Vec<Vec<i32>> = cases
+        .iter()
+        .map(|(p, s)| generate_reforward(&m, p, 6, None, s).unwrap())
+        .collect();
+
+    let handles: Vec<_> = cases
+        .iter()
+        .map(|(prompt, sampling)| {
+            let extra = match sampling {
+                Sampling::Greedy => String::new(),
+                Sampling::Temperature { temp, seed } => {
+                    format!(",\"temperature\":{temp},\"seed\":{seed}")
+                }
+            };
+            let body = format!(
+                "{{\"prompt\":{},\"max_new_tokens\":6{extra}}}",
+                prompt_json(prompt)
+            );
+            std::thread::spawn(move || {
+                let resp = exchange(
+                    addr,
+                    "POST",
+                    "/v1/completions",
+                    body.as_bytes(),
+                );
+                assert_eq!(resp.status, 200);
+                tokens_field(&body_json(&resp), "tokens")
+            })
+        })
+        .collect();
+    for (h, want) in handles.into_iter().zip(&want) {
+        assert_eq!(h.join().unwrap(), *want);
+    }
+    server.shutdown();
+}

@@ -27,7 +27,7 @@ use microscale::serve::cache::OperandCache;
 use microscale::serve::decode::generate_reforward;
 use microscale::serve::packed_model::PackedModel;
 use microscale::serve::scheduler::{
-    DecodeRequest, FinishReason, Scheduler, SchedulerConfig,
+    DecodeRequest, FinishReason, Priority, Scheduler, SchedulerConfig,
 };
 use microscale::serve::{DecodeEngine, KvPool, Sampling};
 
@@ -65,6 +65,7 @@ fn req(id: u64, prompt: Vec<i32>, max_new: usize) -> DecodeRequest {
         } else {
             Sampling::Temperature { temp: 0.8, seed: 900 + id }
         },
+        priority: Priority::Interactive,
     }
 }
 
@@ -96,7 +97,11 @@ fn admission_blocks_at_capacity_and_streams_match_the_oracle() {
 
     let mut sched = Scheduler::new(
         DecodeEngine::with_pool(model, pool.clone()).unwrap(),
-        SchedulerConfig { max_active: 8, max_prefill_per_step: 8 },
+        SchedulerConfig {
+            max_active: 8,
+            max_prefill_per_step: 8,
+            ..SchedulerConfig::default()
+        },
     );
     for r in &reqs {
         sched.submit(r.clone()).unwrap();
@@ -148,7 +153,11 @@ fn evict_and_requeue_preserves_streams_bit_exactly() {
 
     let mut sched = Scheduler::new(
         DecodeEngine::with_pool(model, pool.clone()).unwrap(),
-        SchedulerConfig { max_active: 4, max_prefill_per_step: 4 },
+        SchedulerConfig {
+            max_active: 4,
+            max_prefill_per_step: 4,
+            ..SchedulerConfig::default()
+        },
     );
     for r in &reqs {
         sched.submit(r.clone()).unwrap();

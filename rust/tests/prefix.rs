@@ -1,0 +1,295 @@
+//! Prefix-sharing acceptance suite (ISSUE-8): hash-consed KV pages
+//! under the real scheduler.
+//!
+//! Pins the tentpole's contracts at the integration level:
+//!
+//! 1. **Exactly one copy** — N requests over one page-aligned prompt
+//!    hold one physical copy of its pages, verified on real pool
+//!    counters (`used_bytes`, `shared_bytes`, `dedup_hits`), and the
+//!    pool drains to 0 when the last reference drops.
+//! 2. **Bit-identical streams** — a shared-prefix backlog driven
+//!    through the scheduler produces exactly the token streams of an
+//!    unshared pool, across the {FP8, FP4} × {UE4M3, UE5M3} KV codec
+//!    grid, under eviction pressure (tight budget) and a mid-flight
+//!    cancellation. Sharing changes admission dynamics (freed pages
+//!    admit sooner), so matching streams is a real invariant, not a
+//!    tautology.
+//! 3. **Copy-on-write forks** — [`SeqKv::fork`] shares the resident
+//!    prefix by refcount; divergence after the fork writes only
+//!    private tail pages and never perturbs either stream's logits.
+
+use std::sync::Arc;
+
+use microscale::dist::Pcg64;
+use microscale::model::Params;
+use microscale::runtime::artifacts::ModelDims;
+use microscale::runtime::qconfig::{PerLayerQConfig, QConfig};
+use microscale::serve::packed_model::PackedModel;
+use microscale::serve::scheduler::{
+    DecodeRequest, DecodeResult, Priority, Scheduler, SchedulerConfig,
+};
+use microscale::serve::{DecodeEngine, KvPool, Sampling};
+
+fn dims() -> ModelDims {
+    ModelDims {
+        vocab: 48,
+        d_model: 32,
+        n_heads: 2,
+        n_layers: 2,
+        d_ff: 64,
+        seq_len: 32,
+    }
+}
+
+const PAGE_ROWS: usize = 4;
+
+fn model(seed: u64) -> Arc<PackedModel> {
+    let d = dims();
+    let params = Params::init_surrogate(&d, seed);
+    let qcfg = PerLayerQConfig::uniform(QConfig::fp4("ue5m3").unwrap());
+    Arc::new(
+        PackedModel::build(
+            &d,
+            &params,
+            &qcfg,
+            16,
+            microscale::serve::operand_cache(),
+        )
+        .unwrap(),
+    )
+}
+
+fn tokens(rng: &mut Pcg64, count: usize) -> Vec<i32> {
+    let vocab = dims().vocab as u64;
+    (0..count).map(|_| (rng.next_u64() % vocab) as i32).collect()
+}
+
+fn kv_grid() -> Vec<(String, PerLayerQConfig)> {
+    let mut grid = Vec::new();
+    for scale in ["ue4m3", "ue5m3"] {
+        grid.push((
+            format!("fp8/{scale}"),
+            PerLayerQConfig::uniform(
+                QConfig::named("fp8_e4m3", scale, false).unwrap(),
+            ),
+        ));
+        grid.push((
+            format!("fp4/{scale}"),
+            PerLayerQConfig::uniform(QConfig::fp4(scale).unwrap()),
+        ));
+    }
+    grid
+}
+
+/// Submit everything, then step to completion, cancelling `cancel_id`
+/// after `cancel_at` steps. Returns results sorted by id.
+fn drive(
+    model: &Arc<PackedModel>,
+    pool: &Arc<KvPool>,
+    reqs: &[DecodeRequest],
+    cfg: SchedulerConfig,
+    cancel_id: u64,
+    cancel_at: usize,
+) -> Vec<DecodeResult> {
+    let mut sched = Scheduler::new(
+        DecodeEngine::with_pool(model.clone(), pool.clone()).unwrap(),
+        cfg,
+    );
+    for r in reqs {
+        sched.submit(r.clone()).unwrap();
+    }
+    let mut steps = 0usize;
+    while !sched.is_idle() {
+        if steps == cancel_at {
+            sched.cancel(cancel_id);
+            if sched.is_idle() {
+                break;
+            }
+        }
+        sched.step().unwrap();
+        steps += 1;
+        assert!(steps < 100_000, "backlog failed to converge");
+    }
+    sched.take_finished()
+}
+
+#[test]
+fn n_prefills_of_one_prompt_hold_exactly_one_copy() {
+    let d = dims();
+    let m = model(80);
+    let mut rng = Pcg64::new(100);
+    let prompt = tokens(&mut rng, 2 * PAGE_ROWS); // page-aligned
+    for (label, kv_cfg) in kv_grid() {
+        let pool = KvPool::build_with(
+            &d, &kv_cfg, 16, PAGE_ROWS, usize::MAX, true,
+        )
+        .unwrap();
+        let engine =
+            DecodeEngine::with_pool(m.clone(), pool.clone()).unwrap();
+        let mut kvs = Vec::new();
+        for _ in 0..4 {
+            let mut kv = engine.new_kv();
+            engine.prefill(&prompt, &mut kv).unwrap();
+            kvs.push(kv);
+        }
+        let one_seq = pool.bytes_for_positions(prompt.len());
+        let stats = pool.stats();
+        assert_eq!(stats.used_bytes, one_seq, "{label}: physical bytes");
+        assert_eq!(
+            stats.shared_bytes,
+            3 * one_seq,
+            "{label}: 3 duplicate sequences' worth shared"
+        );
+        // 3 later sequences x 2 full pages x 2 layers (K and V rows
+        // live in the same page here — count via hits being positive
+        // and exact byte accounting above)
+        assert!(stats.dedup_hits > 0, "{label}");
+        drop(kvs);
+        let stats = pool.stats();
+        assert_eq!(stats.used_bytes, 0, "{label}: drain");
+        assert_eq!(stats.allocs, stats.frees, "{label}: page ledger");
+    }
+}
+
+#[test]
+fn shared_streams_match_unshared_across_the_codec_grid() {
+    let d = dims();
+    let m = model(81);
+    let mut rng = Pcg64::new(101);
+    for (label, kv_cfg) in kv_grid() {
+        let prefix = tokens(&mut rng, 2 * PAGE_ROWS);
+        let reqs: Vec<DecodeRequest> = (0..6u64)
+            .map(|id| {
+                let mut prompt =
+                    if id < 4 { prefix.clone() } else { Vec::new() };
+                let tail = 1 + (rng.next_u64() % 3) as usize;
+                prompt.extend(tokens(&mut rng, tail));
+                DecodeRequest {
+                    id,
+                    prompt,
+                    max_new_tokens: 5,
+                    eos: None,
+                    sampling: Sampling::Temperature {
+                        temp: 0.9,
+                        seed: 0xC0 ^ id,
+                    },
+                    priority: if id % 3 == 0 {
+                        Priority::Batch
+                    } else {
+                        Priority::Interactive
+                    },
+                }
+            })
+            .collect();
+        // tight budget: ~1.2 sequences forces queueing and eviction
+        let probe = KvPool::build_with(
+            &d, &kv_cfg, 16, PAGE_ROWS, usize::MAX, false,
+        )
+        .unwrap();
+        let budget = (probe.bytes_for_positions(d.seq_len) as f64 * 1.2)
+            .ceil() as usize;
+        let cfg = SchedulerConfig {
+            max_active: 3,
+            max_prefill_per_step: 2,
+            max_prefill_tokens: 2 * PAGE_ROWS, // chunked prefill too
+        };
+        let shared = KvPool::build_with(
+            &d, &kv_cfg, 16, PAGE_ROWS, budget, true,
+        )
+        .unwrap();
+        let unshared = KvPool::build_with(
+            &d, &kv_cfg, 16, PAGE_ROWS, budget, false,
+        )
+        .unwrap();
+        let got = drive(&m, &shared, &reqs, cfg, 1, 3);
+        let want = drive(&m, &unshared, &reqs, cfg, 1, 3);
+        assert_eq!(got.len(), want.len(), "{label}: finished count");
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a.id, b.id, "{label}");
+            assert_eq!(
+                a.tokens, b.tokens,
+                "{label}: request {} diverges under sharing",
+                a.id
+            );
+            assert_eq!(a.finish, b.finish, "{label}: request {}", a.id);
+        }
+        let s = shared.stats();
+        assert!(s.dedup_hits > 0, "{label}: no pages were ever shared");
+        // Peak physical bytes are not compared across pools (sharing
+        // admits more sequences, so its transient high-water mark can
+        // sit a page-granule above the unshared pool's); the hard
+        // invariant is the budget bound.
+        assert!(s.peak_bytes <= budget, "{label}: shared budget bound");
+        assert!(
+            unshared.stats().peak_bytes <= budget,
+            "{label}: unshared budget bound"
+        );
+        assert_eq!(shared.used_bytes(), 0, "{label}: shared drain");
+        assert_eq!(unshared.used_bytes(), 0, "{label}: unshared drain");
+    }
+}
+
+#[test]
+fn forks_share_the_prefix_and_diverge_copy_on_write() {
+    let d = dims();
+    let m = model(82);
+    let mut rng = Pcg64::new(102);
+    // Exact pages so forked continuations can be checked bit-for-bit
+    // against fresh unforked caches.
+    let pool = {
+        let kv_cfg = PerLayerQConfig::uniform(QConfig::baseline());
+        KvPool::build_with(&d, &kv_cfg, 16, PAGE_ROWS, usize::MAX, true)
+            .unwrap()
+    };
+    let engine = DecodeEngine::with_pool(m.clone(), pool.clone()).unwrap();
+    let prompt = tokens(&mut rng, 2 * PAGE_ROWS);
+    let (x, y) = (1i32, 2i32);
+
+    let mut kv_a = engine.new_kv();
+    engine.prefill(&prompt, &mut kv_a).unwrap();
+    let mut kv_b = kv_a.fork().unwrap();
+    let one_seq = pool.bytes_for_positions(prompt.len());
+    let stats = pool.stats();
+    assert_eq!(stats.used_bytes, one_seq, "fork copies nothing");
+    assert_eq!(stats.shared_bytes, one_seq);
+
+    // Diverge: each fork appends a different token into its own
+    // private tail page; the shared prefix pages stay immutable.
+    let la =
+        engine.step(&[x], std::slice::from_mut(&mut kv_a)).unwrap();
+    let lb =
+        engine.step(&[y], std::slice::from_mut(&mut kv_b)).unwrap();
+    assert_eq!((kv_a.len(), kv_b.len()), (prompt.len() + 1, prompt.len() + 1));
+    let tail_page =
+        pool.bytes_for_positions(prompt.len() + 1) - one_seq;
+    let stats = pool.stats();
+    assert_eq!(
+        stats.used_bytes,
+        one_seq + 2 * tail_page,
+        "one shared prefix + two private tails"
+    );
+    assert_eq!(stats.shared_bytes, one_seq, "tails are never shared");
+
+    // Neither continuation was perturbed by the other: both equal a
+    // fresh, never-forked cache fed the same tokens.
+    for (tok, got) in [(x, &la), (y, &lb)] {
+        let mut fresh = engine.new_kv();
+        engine.prefill(&prompt, &mut fresh).unwrap();
+        let want = engine
+            .step(&[tok], std::slice::from_mut(&mut fresh))
+            .unwrap();
+        assert_eq!(got.len(), want.len());
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                a.to_bits(),
+                b.to_bits(),
+                "fork divergence perturbed logit {i} after token {tok}"
+            );
+        }
+    }
+    drop(kv_a);
+    drop(kv_b);
+    let stats = pool.stats();
+    assert_eq!(stats.used_bytes, 0, "drain");
+    assert_eq!(stats.allocs, stats.frees, "page ledger");
+}

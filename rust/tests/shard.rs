@@ -40,7 +40,9 @@ use microscale::runtime::qconfig::{PerLayerQConfig, QConfig};
 use microscale::serve::cache::OperandCache;
 use microscale::serve::decode::generate_reforward;
 use microscale::serve::packed_model::PackedModel;
-use microscale::serve::scheduler::{DecodeRequest, Scheduler, SchedulerConfig};
+use microscale::serve::scheduler::{
+    DecodeRequest, Priority, Scheduler, SchedulerConfig,
+};
 use microscale::serve::{DecodeEngine, KvPool, Sampling};
 use microscale::util::par::{on_worker_thread, ShardPool};
 
@@ -293,6 +295,7 @@ fn decode_token_streams_shard_invariant() {
                 } else {
                     Sampling::Temperature { temp: 0.8, seed: 700 + id }
                 },
+                priority: Priority::Interactive,
             })
             .collect();
         let want: Vec<Vec<i32>> = reqs
@@ -309,7 +312,11 @@ fn decode_token_streams_shard_invariant() {
             );
             let mut sched = Scheduler::new(
                 DecodeEngine::new(model).unwrap(),
-                SchedulerConfig { max_active: 4, max_prefill_per_step: 4 },
+                SchedulerConfig {
+                    max_active: 4,
+                    max_prefill_per_step: 4,
+                    ..SchedulerConfig::default()
+                },
             );
             for r in &reqs {
                 sched.submit(r.clone()).unwrap();
@@ -463,6 +470,7 @@ fn sharded_paged_decode_survives_eviction_and_never_oversubscribes() {
             } else {
                 Sampling::Temperature { temp: 0.8, seed: 900 + id }
             },
+            priority: Priority::Interactive,
         })
         .collect();
     // the oracle is cache-free AND unsharded: one run checks both the
@@ -476,7 +484,11 @@ fn sharded_paged_decode_survives_eviction_and_never_oversubscribes() {
         .collect();
     let mut sched = Scheduler::new(
         DecodeEngine::with_pool(model, pool.clone()).unwrap(),
-        SchedulerConfig { max_active: 4, max_prefill_per_step: 4 },
+        SchedulerConfig {
+            max_active: 4,
+            max_prefill_per_step: 4,
+            ..SchedulerConfig::default()
+        },
     );
     for r in &reqs {
         sched.submit(r.clone()).unwrap();
