@@ -1,0 +1,18 @@
+//! Cross-precision speculative decoding benchmark: thin wrapper over
+//! the same driver that backs `microscale spec-bench`
+//! (`microscale::serve::spec_bench`), so `cargo bench --bench
+//! spec_bench` and the CLI produce identical `BENCH_spec.json` reports
+//! (field map in EXPERIMENTS.md §Perf).
+//!
+//! Pass `-- --smoke` (or set `MICROSCALE_BENCH_SMOKE=1`) for the
+//! CI-sized run on a shrunken model and grid.
+
+fn main() {
+    let smoke = std::env::args().any(|a| a == "--smoke")
+        || std::env::var("MICROSCALE_BENCH_SMOKE").is_ok();
+    let opts = microscale::serve::spec_bench::SpecBenchOpts::new(smoke);
+    if let Err(e) = microscale::serve::spec_bench::run(&opts) {
+        eprintln!("spec bench failed: {e:#}");
+        std::process::exit(1);
+    }
+}

@@ -12,6 +12,7 @@
 //! microscale quantize           fake-quant an f32 binary file
 //! microscale serve-bench        packed-domain serving bench (BENCH_serve.json)
 //! microscale decode-bench       KV-cached generation bench (BENCH_decode.json)
+//! microscale spec-bench         speculative-decoding format sweep (BENCH_spec.json)
 //! microscale kv-bench           paged-KV memory/throughput bench (BENCH_kv.json)
 //! microscale traffic-bench      serving-edge traffic bench (BENCH_traffic.json)
 //! microscale kv-sweep           KV block-size anomaly sweep on live decode traces
@@ -312,12 +313,45 @@ fn run() -> Result<()> {
                     })
                     .collect::<Result<Vec<_>>>()?;
             }
+            if let Some(ks) = args.get("spec") {
+                opts.spec_ks = ks
+                    .split(',')
+                    .map(|s| {
+                        s.trim().parse::<usize>().map_err(|e| {
+                            anyhow::anyhow!("--spec {s:?}: {e}")
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+            }
             if let Some(q) = args.get("qconfig") {
                 let cfg = microscale::runtime::qconfig::PerLayerQConfig::parse(q)
                     .with_context(|| format!("--qconfig {q:?}"))?;
                 opts.qconfigs = Some(vec![(q.to_string(), cfg)]);
             }
             microscale::serve::decode_bench::run(&opts)?;
+        }
+        "spec-bench" => {
+            let mut opts = microscale::serve::spec_bench::SpecBenchOpts::new(
+                args.has("smoke"),
+            );
+            if let Some(out) = args.get("out") {
+                opts.out = PathBuf::from(out);
+            }
+            opts.k = args.get_usize("k", opts.k)?;
+            opts.prompt_len = args.get_usize("prompt", opts.prompt_len)?;
+            opts.max_new = args.get_usize("max-new", opts.max_new)?;
+            opts.requests = args.get_usize("requests", opts.requests)?;
+            if let Some(bs) = args.get("block-sizes") {
+                opts.block_sizes = bs
+                    .split(',')
+                    .map(|s| {
+                        s.trim().parse::<usize>().map_err(|e| {
+                            anyhow::anyhow!("--block-sizes {s:?}: {e}")
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            microscale::serve::spec_bench::run(&opts)?;
         }
         "kv-bench" => {
             let mut opts =
@@ -354,6 +388,18 @@ fn run() -> Result<()> {
                 args.get_f64("burst-gap-ms", opts.burst_gap_ms)?;
             opts.page_rows = args.get_usize("page-rows", opts.page_rows)?;
             opts.budget_seqs = args.get_f64("budget-seqs", opts.budget_seqs)?;
+            // SLO limits are opt-in: absent flags leave the report's
+            // slo_verdict null (latency is host-dependent)
+            for (flag, slot) in [
+                ("slo-ttft-p95-ms", &mut opts.slo_ttft_p95_ms),
+                ("slo-itl-p95-ms", &mut opts.slo_itl_p95_ms),
+            ] {
+                if let Some(v) = args.get(flag) {
+                    *slot = Some(v.parse::<f64>().map_err(|e| {
+                        anyhow::anyhow!("--{flag} {v:?}: {e}")
+                    })?);
+                }
+            }
             microscale::serve::traffic::run(&opts)?;
         }
         "kv-sweep" => {
@@ -394,8 +440,8 @@ fn run() -> Result<()> {
                  \n\
                  commands: figure <id> | table <1|2|3> | all | hw | train |\n\
                  models | eval | theory | quantize | serve-bench |\n\
-                 decode-bench | kv-bench | traffic-bench | kv-sweep |\n\
-                 selftest\n\
+                 decode-bench | spec-bench | kv-bench | traffic-bench |\n\
+                 kv-sweep | selftest\n\
                  figures: 1a 1b 2a 2b 2c 3a 3b 3c 4a 4b 5a 5b 6 7 8 9 10 11\n\
                  12 13 14 15 16 17\n\
                  flags: --fast --results DIR --models DIR --artifacts DIR\n\
@@ -405,14 +451,17 @@ fn run() -> Result<()> {
                  --out FILE\n\
                  decode-bench flags: --smoke --concurrency 1,4,8 --prompt N\n\
                  --max-new N --rounds N --baseline-requests N --shards 1,2\n\
-                 --qconfig CFG --out FILE\n\
+                 --spec 1,2,4 --qconfig CFG --out FILE\n\
+                 spec-bench flags: --smoke --k N --prompt N --max-new N\n\
+                 --requests N --block-sizes 4,8,16,32 --out FILE\n\
                  kv-bench flags: --smoke --concurrency N --prompt N\n\
                  --max-new N --requests N --page-rows N --budget-seqs X\n\
                  --out FILE\n\
                  traffic-bench flags: --smoke --requests N --concurrency N\n\
                  --seed N --prefix-len N --shared-ratio X --batch-frac X\n\
                  --cancel-frac X --burst-len N --rate X --burst-gap-ms X\n\
-                 --page-rows N --budget-seqs X --out FILE\n\
+                 --page-rows N --budget-seqs X\n\
+                 --slo-ttft-p95-ms X --slo-itl-p95-ms X --out FILE\n\
                  kv-sweep flags: --fast --results DIR"
             );
             if other != "help" {

@@ -8,7 +8,7 @@ use anyhow::{bail, Context, Result};
 use crate::util::json::Json;
 
 /// Model dimensions as lowered (fixed per artifact set).
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct ModelDims {
     pub vocab: usize,
     pub d_model: usize,

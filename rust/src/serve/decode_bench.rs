@@ -4,7 +4,10 @@
 //! counts × tensor-parallel shard counts (the shard axis re-runs the
 //! largest concurrency on a [`PackedModel::build_sharded`] model,
 //! gating each shard count's greedy stream bit-identical to shards=1
-//! before timing).
+//! before timing) × optional speculation depths (`--spec 1,2,4`: each
+//! config's model verifies an FP4/UE5M3 draft through
+//! [`super::spec::SpecDecodeEngine`], stream-exact-gated per depth —
+//! the dedicated grid sweep lives in `microscale spec-bench`).
 //!
 //! Per config the driver (1) builds a [`PackedModel`] through the
 //! shared operand cache, (2) gates on the decode exactness contract —
@@ -58,6 +61,9 @@ pub struct DecodeBenchOpts {
     pub baseline_requests: usize,
     /// Tensor-parallel shard counts to drive at the largest concurrency.
     pub shard_counts: Vec<usize>,
+    /// Speculation depths to drive per config with an FP4/UE5M3 draft
+    /// (`--spec 1,2,4`); empty leaves the speculative axis off.
+    pub spec_ks: Vec<usize>,
     /// Override the config axis (label, per-layer config).
     pub qconfigs: Option<Vec<(String, PerLayerQConfig)>>,
 }
@@ -73,6 +79,7 @@ impl DecodeBenchOpts {
             rounds: if smoke { 1 } else { 2 },
             baseline_requests: if smoke { 2 } else { 4 },
             shard_counts: vec![1, 2],
+            spec_ks: Vec::new(),
             qconfigs: None,
         }
     }
@@ -432,6 +439,86 @@ pub fn run(opts: &DecodeBenchOpts) -> crate::Result<Json> {
             ));
         }
 
+        // speculative axis (`--spec`): this config's model as the
+        // verify target, a fixed FP4/UE5M3 draft proposing k tokens.
+        // Gated stream-exact against the re-forward oracle per depth
+        // before timing, like every other number in this report.
+        let mut spec_entries: Vec<(String, Json)> = Vec::new();
+        if !opts.spec_ks.is_empty() {
+            let draft_cfg = PerLayerQConfig::uniform(
+                crate::runtime::qconfig::QConfig::fp4("ue5m3")?,
+            );
+            let draft = Arc::new(PackedModel::build(
+                &dims,
+                &params,
+                &draft_cfg,
+                block_size,
+                operand_cache(),
+            )?);
+            for &k in &opts.spec_ks {
+                let engine = super::spec::SpecDecodeEngine::new(
+                    model.clone(),
+                    draft.clone(),
+                    k,
+                )?;
+                let gp = prompt(&mut rng, &dims, opts.prompt_len);
+                let want = generate_reforward(
+                    &model,
+                    &gp,
+                    opts.max_new.min(4),
+                    None,
+                    &Sampling::Greedy,
+                )?;
+                let got = engine.generate(
+                    &gp,
+                    opts.max_new.min(4),
+                    None,
+                    &Sampling::Greedy,
+                )?;
+                anyhow::ensure!(
+                    got.tokens == want,
+                    "{label}: k={k} speculative stream {:?} != re-forward \
+                     stream {want:?} — refusing to time",
+                    got.tokens
+                );
+                let t0 = Instant::now();
+                let mut tokens = 0usize;
+                let (mut proposed, mut accepted) = (0usize, 0usize);
+                for _ in 0..opts.baseline_requests {
+                    let p = prompt(&mut rng, &dims, opts.prompt_len);
+                    let o = engine.generate(
+                        &p,
+                        opts.max_new,
+                        None,
+                        &Sampling::Greedy,
+                    )?;
+                    tokens += o.tokens.len();
+                    proposed += o.proposed;
+                    accepted += o.accepted;
+                }
+                let secs = t0.elapsed().as_secs_f64();
+                let tok_s = tokens as f64 / secs.max(1e-9);
+                let acc = if proposed == 0 {
+                    1.0
+                } else {
+                    accepted as f64 / proposed as f64
+                };
+                println!(
+                    "   spec k={k}: {tok_s:8.1} tok/s  acceptance {acc:5.3} \
+                     (fp4/ue5m3 draft, stream-exact)"
+                );
+                spec_entries.push((
+                    format!("k{k}"),
+                    json::obj(vec![
+                        ("k", json::num(k as f64)),
+                        ("tok_per_s", json::num(tok_s)),
+                        ("acceptance", json::num(acc)),
+                        ("stream_exact", Json::Bool(true)),
+                    ]),
+                ));
+            }
+        }
+
         config_entries.push((
             label.clone(),
             json::obj(vec![
@@ -441,6 +528,7 @@ pub fn run(opts: &DecodeBenchOpts) -> crate::Result<Json> {
                 ("reforward_tok_per_s", json::num(base_tok_s)),
                 ("concurrency", json::obj_owned(conc_entries)),
                 ("shards", json::obj_owned(shard_entries)),
+                ("spec", json::obj_owned(spec_entries)),
             ]),
         ));
     }

@@ -15,8 +15,15 @@
 //!
 //! Each accepted connection gets its own thread (requests are
 //! long-lived token streams; a thread per stream is the simplest
-//! correct thing at our scale). Responses always close the
-//! connection (`Connection: close`), matching [`super::net`] framing.
+//! correct thing at our scale). Connections are **persistent** per
+//! HTTP/1.1 ([`net::Request::keep_alive`]): the connection loop
+//! serves requests back-to-back on one socket until the client sends
+//! `Connection: close` (or is HTTP/1.0 without `keep-alive`), the
+//! per-connection request cap [`MAX_REQUESTS_PER_CONN`] is reached —
+//! the last allowed response advertises `Connection: close` — an idle
+//! gap exceeds [`KEEP_ALIVE_IDLE`], or a request fails to parse
+//! (best-effort `400`, then close). Every response's `Connection`
+//! header states what the loop will actually do next.
 //!
 //! # Determinism
 //!
@@ -49,6 +56,7 @@ use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread::{self, JoinHandle};
+use std::time::Duration;
 
 use anyhow::{anyhow, Context};
 
@@ -59,6 +67,16 @@ use super::scheduler::{
     DecodeRequest, DecodeResult, Priority, Scheduler, StreamEvent,
 };
 use super::Sampling;
+
+/// Most requests served on one persistent connection before the
+/// server closes it (resource hygiene: a chatty client re-handshakes
+/// occasionally instead of pinning a thread forever). The capping
+/// response advertises `Connection: close`.
+pub const MAX_REQUESTS_PER_CONN: usize = 100;
+
+/// How long a persistent connection may sit idle between requests
+/// before the server closes it.
+pub const KEEP_ALIVE_IDLE: Duration = Duration::from_secs(5);
 
 /// What connection threads ask of the scheduler loop.
 enum Cmd {
@@ -277,6 +295,7 @@ fn write_error<W: std::io::Write>(
     w: &mut W,
     status: u16,
     msg: &str,
+    keep_alive: bool,
 ) -> crate::Result<()> {
     let body = json::obj(vec![("error", json::s(msg))]).to_string();
     net::write_response(
@@ -285,6 +304,7 @@ fn write_error<W: std::io::Write>(
         reason_for(status),
         "application/json",
         body.as_bytes(),
+        keep_alive,
     )
 }
 
@@ -294,10 +314,13 @@ fn completions(
     out: &mut &TcpStream,
     cmd_tx: &mpsc::Sender<Cmd>,
     id: u64,
+    keep_alive: bool,
 ) -> crate::Result<()> {
     let (dreq, stream_mode) = match parse_completion(&req.body, id) {
         Ok(parsed) => parsed,
-        Err(e) => return write_error(out, 400, &format!("{e:#}")),
+        Err(e) => {
+            return write_error(out, 400, &format!("{e:#}"), keep_alive)
+        }
     };
     let (sink_tx, sink_rx) = mpsc::channel();
     let (reply_tx, reply_rx) = mpsc::channel();
@@ -305,16 +328,35 @@ fn completions(
         .send(Cmd::Submit { req: dreq, sink: sink_tx, reply: reply_tx })
         .is_ok();
     if !submitted {
-        return write_error(out, 503, "server is shutting down");
+        return write_error(
+            out,
+            503,
+            "server is shutting down",
+            keep_alive,
+        );
     }
     match reply_rx.recv() {
         Ok(Ok(())) => {}
-        Ok(Err(e)) => return write_error(out, 400, &format!("{e:#}")),
-        Err(_) => return write_error(out, 503, "scheduler unavailable"),
+        Ok(Err(e)) => {
+            return write_error(out, 400, &format!("{e:#}"), keep_alive)
+        }
+        Err(_) => {
+            return write_error(
+                out,
+                503,
+                "scheduler unavailable",
+                keep_alive,
+            )
+        }
     }
     if stream_mode {
-        let mut cw =
-            net::ChunkWriter::start(&mut *out, 200, "OK", "text/event-stream")?;
+        let mut cw = net::ChunkWriter::start(
+            &mut *out,
+            200,
+            "OK",
+            "text/event-stream",
+            keep_alive,
+        )?;
         for ev in sink_rx.iter() {
             match ev {
                 StreamEvent::Token(t) => {
@@ -349,10 +391,11 @@ fn completions(
                     "OK",
                     "application/json",
                     body.as_bytes(),
+                    keep_alive,
                 );
             }
         }
-        write_error(out, 500, "request dropped")
+        write_error(out, 500, "request dropped", keep_alive)
     }
 }
 
@@ -361,6 +404,7 @@ fn route(
     out: &mut &TcpStream,
     cmd_tx: &mpsc::Sender<Cmd>,
     ids: &AtomicU64,
+    keep_alive: bool,
 ) -> crate::Result<()> {
     match (req.method.as_str(), req.path.as_str()) {
         ("GET", "/healthz") => net::write_response(
@@ -369,11 +413,17 @@ fn route(
             "OK",
             "application/json",
             b"{\"ok\":true}",
+            keep_alive,
         ),
         ("GET", "/stats") => {
             let (tx, rx) = mpsc::channel();
             if cmd_tx.send(Cmd::Stats { reply: tx }).is_err() {
-                return write_error(out, 503, "server is shutting down");
+                return write_error(
+                    out,
+                    503,
+                    "server is shutting down",
+                    keep_alive,
+                );
             }
             match rx.recv() {
                 Ok(stats) => {
@@ -384,32 +434,77 @@ fn route(
                         "OK",
                         "application/json",
                         body.as_bytes(),
+                        keep_alive,
                     )
                 }
-                Err(_) => write_error(out, 503, "scheduler unavailable"),
+                Err(_) => write_error(
+                    out,
+                    503,
+                    "scheduler unavailable",
+                    keep_alive,
+                ),
             }
         }
         ("POST", "/v1/completions") => {
             let id = ids.fetch_add(1, Ordering::Relaxed);
-            completions(req, out, cmd_tx, id)
+            completions(req, out, cmd_tx, id, keep_alive)
         }
-        _ => write_error(out, 404, "no such route"),
+        _ => write_error(out, 404, "no such route", keep_alive),
     }
 }
 
-/// One connection: read a single request, answer it, close (every
-/// response carries `Connection: close`). Socket errors just end the
-/// connection — the peer is gone.
+/// One persistent connection (module docs): serve requests
+/// back-to-back on the socket until the client's framing says close,
+/// the request cap is reached, the idle timeout fires, or a request
+/// fails to parse. Socket errors just end the connection — the peer
+/// is gone.
 fn handle_conn(
     stream: TcpStream,
     cmd_tx: mpsc::Sender<Cmd>,
     ids: Arc<AtomicU64>,
 ) {
     let Ok(read_half) = stream.try_clone() else { return };
+    // bound the wait for the *next* request so an idle keep-alive
+    // client cannot pin this thread (and block server shutdown)
+    // forever; mid-request reads share the same bound
+    let _ = read_half.set_read_timeout(Some(KEEP_ALIVE_IDLE));
     let mut reader = BufReader::new(read_half);
     let mut out = &stream;
-    if let Ok(Some(req)) = net::read_request(&mut reader) {
-        let _ = route(&req, &mut out, &cmd_tx, &ids);
+    for served in 1..=MAX_REQUESTS_PER_CONN {
+        let req = match net::read_request(&mut reader) {
+            Ok(Some(req)) => req,
+            // clean EOF: the peer is done with the connection
+            Ok(None) => return,
+            Err(e) => {
+                // an idle timeout is a normal keep-alive close, not a
+                // protocol error — only garbage earns a 400
+                let timed_out =
+                    e.downcast_ref::<std::io::Error>().is_some_and(|io| {
+                        matches!(
+                            io.kind(),
+                            std::io::ErrorKind::WouldBlock
+                                | std::io::ErrorKind::TimedOut
+                        )
+                    });
+                if !timed_out {
+                    let _ = write_error(
+                        &mut out,
+                        400,
+                        &format!("{e:#}"),
+                        false,
+                    );
+                }
+                return;
+            }
+        };
+        let keep_alive =
+            req.keep_alive() && served < MAX_REQUESTS_PER_CONN;
+        if route(&req, &mut out, &cmd_tx, &ids, keep_alive).is_err() {
+            return;
+        }
+        if !keep_alive {
+            return;
+        }
     }
 }
 

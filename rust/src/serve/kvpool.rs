@@ -302,6 +302,10 @@ struct Inner {
     /// `Σ (refs − 1) · page_bytes` over live pages — what an unshared
     /// pool would additionally hold
     shared_saved: usize,
+    /// prefix registrations: pin handle → page ids each holding one
+    /// extra reference ([`KvPool::pin_prefix`])
+    pins: HashMap<u64, Vec<u32>>,
+    next_pin: u64,
 }
 
 impl Inner {
@@ -403,9 +407,14 @@ pub struct KvPool {
     n_layers: usize,
     page_rows: usize,
     budget: usize,
-    layers: Vec<LayerCodec>,
-    /// per-layer dedup space: layers with equal codec ids share one
-    sharing_spaces: Vec<u32>,
+    /// codec banks: `banks[0]` backs target sequences ([`KvPool::seq`]),
+    /// `banks[1]` (present only on [`KvPool::build_spec`] pools) backs
+    /// draft sequences ([`KvPool::draft_seq`]) under their own per-layer
+    /// codecs. Both banks allocate from the same budget and counters.
+    banks: Vec<Vec<LayerCodec>>,
+    /// per-(bank, layer) dedup space: layers with equal codec ids share
+    /// one — across banks too, since equal codecs decode equal bytes
+    sharing_spaces: Vec<Vec<u32>>,
     /// hash-cons full pages by content (see module docs)
     sharing: bool,
     inner: Mutex<Inner>,
@@ -441,30 +450,82 @@ impl KvPool {
         budget_bytes: usize,
         prefix_sharing: bool,
     ) -> crate::Result<Arc<KvPool>> {
+        Self::assemble(
+            dims,
+            vec![kv_cfg],
+            block_size,
+            page_rows,
+            budget_bytes,
+            prefix_sharing,
+        )
+    }
+
+    /// [`KvPool::build_with`] plus a second codec bank for speculative
+    /// decoding: draft sequences created through [`KvPool::draft_seq`]
+    /// encode their pages under `draft_cfg` while target sequences keep
+    /// `kv_cfg`, and both draw pages from the **same** byte budget and
+    /// counters — draft cache bytes are real serving memory, priced by
+    /// [`KvPool::draft_bytes_for_rows`] exactly like target bytes.
+    pub fn build_spec(
+        dims: &ModelDims,
+        kv_cfg: &PerLayerQConfig,
+        draft_cfg: &PerLayerQConfig,
+        block_size: usize,
+        page_rows: usize,
+        budget_bytes: usize,
+        prefix_sharing: bool,
+    ) -> crate::Result<Arc<KvPool>> {
+        Self::assemble(
+            dims,
+            vec![kv_cfg, draft_cfg],
+            block_size,
+            page_rows,
+            budget_bytes,
+            prefix_sharing,
+        )
+    }
+
+    fn assemble(
+        dims: &ModelDims,
+        bank_cfgs: Vec<&PerLayerQConfig>,
+        block_size: usize,
+        page_rows: usize,
+        budget_bytes: usize,
+        prefix_sharing: bool,
+    ) -> crate::Result<Arc<KvPool>> {
         ensure!(page_rows > 0, "page_rows must be positive");
         ensure!(dims.n_layers > 0 && dims.d_model > 0, "degenerate dims");
-        let mut layers = Vec::with_capacity(dims.n_layers);
-        for l in 0..dims.n_layers {
-            let cfg = kv_cfg.layer(l);
-            let lc = if cfg.quant_on {
-                LayerCodec::mx(cfg.scheme(block_size), dims.d_model)?
-            } else {
-                LayerCodec::exact(dims.d_model)
-            };
-            layers.push(lc);
+        let mut banks = Vec::with_capacity(bank_cfgs.len());
+        for cfg in &bank_cfgs {
+            let mut layers = Vec::with_capacity(dims.n_layers);
+            for l in 0..dims.n_layers {
+                let c = cfg.layer(l);
+                let lc = if c.quant_on {
+                    LayerCodec::mx(c.scheme(block_size), dims.d_model)?
+                } else {
+                    LayerCodec::exact(dims.d_model)
+                };
+                layers.push(lc);
+            }
+            banks.push(layers);
         }
         let mut space_ids: Vec<String> = Vec::new();
-        let sharing_spaces = layers
+        let sharing_spaces = banks
             .iter()
-            .map(|lc| {
-                let id = lc.id();
-                match space_ids.iter().position(|s| *s == id) {
-                    Some(i) => i as u32,
-                    None => {
-                        space_ids.push(id);
-                        (space_ids.len() - 1) as u32
-                    }
-                }
+            .map(|layers| {
+                layers
+                    .iter()
+                    .map(|lc| {
+                        let id = lc.id();
+                        match space_ids.iter().position(|s| *s == id) {
+                            Some(i) => i as u32,
+                            None => {
+                                space_ids.push(id);
+                                (space_ids.len() - 1) as u32
+                            }
+                        }
+                    })
+                    .collect()
             })
             .collect();
         Ok(Arc::new(KvPool {
@@ -472,7 +533,7 @@ impl KvPool {
             n_layers: dims.n_layers,
             page_rows,
             budget: budget_bytes,
-            layers,
+            banks,
             sharing_spaces,
             sharing: prefix_sharing,
             inner: Mutex::new(Inner {
@@ -486,6 +547,8 @@ impl KvPool {
                 failed: 0,
                 dedup_hits: 0,
                 shared_saved: 0,
+                pins: HashMap::new(),
+                next_pin: 1,
             }),
         }))
     }
@@ -508,6 +571,21 @@ impl KvPool {
     /// A fresh empty sequence cache backed by this pool.
     pub fn seq(self: &Arc<Self>) -> SeqKv {
         SeqKv::paged(PagedKv::new(self.clone()))
+    }
+
+    /// A fresh empty **draft** sequence cache: pages encode under the
+    /// draft codec bank of a [`KvPool::build_spec`] pool.
+    pub fn draft_seq(self: &Arc<Self>) -> crate::Result<SeqKv> {
+        ensure!(
+            self.has_draft_bank(),
+            "pool has no draft codec bank (build it with KvPool::build_spec)"
+        );
+        Ok(SeqKv::paged(PagedKv::new_bank(self.clone(), 1)))
+    }
+
+    /// Whether this pool carries a second (draft) codec bank.
+    pub fn has_draft_bank(&self) -> bool {
+        self.banks.len() > 1
     }
 
     /// Row width every page stores (the model's `d_model`).
@@ -563,30 +641,40 @@ impl KvPool {
 
     /// Exact bytes one cache row of `layer` occupies.
     pub fn row_bytes(&self, layer: usize) -> usize {
-        self.layers[layer].row_bytes
+        self.banks[0][layer].row_bytes
     }
 
     /// Exact bytes of one `layer` page (`page_rows · row_bytes`).
     pub fn page_bytes(&self, layer: usize) -> usize {
-        self.page_rows * self.layers[layer].row_bytes
+        self.page_rows * self.banks[0][layer].row_bytes
+    }
+
+    /// [`KvPool::page_bytes`] for an explicit codec bank.
+    fn bank_page_bytes(&self, bank: usize, layer: usize) -> usize {
+        self.page_rows * self.banks[bank][layer].row_bytes
     }
 
     /// Row-level storage cost of one cached position across all layers
     /// and both K/V streams — the marginal (page-amortized) cost of one
     /// decoded token.
     pub fn position_bytes(&self) -> usize {
-        self.layers.iter().map(|lc| 2 * lc.row_bytes).sum()
+        self.banks[0].iter().map(|lc| 2 * lc.row_bytes).sum()
     }
 
     /// The codec id of `layer`'s pages (`"exact"` or a scheme id).
     pub fn codec_id(&self, layer: usize) -> String {
-        self.layers[layer].id()
+        self.banks[0][layer].id()
+    }
+
+    /// The codec id of `layer`'s pages in the draft bank.
+    pub fn draft_codec_id(&self, layer: usize) -> Option<String> {
+        self.banks.get(1).map(|b| b[layer].id())
     }
 
     /// Whether every layer runs the Exact codec (the bit-exact decode
     /// contract applies to the whole model).
     pub fn is_exact(&self) -> bool {
-        self.layers.iter().all(|l| matches!(l.kind, CodecKind::Exact))
+        self.banks[0].iter().all(|l| matches!(l.kind, CodecKind::Exact))
     }
 
     /// Push `rows` (`n · d_model` values, row-major) through `layer`'s
@@ -607,7 +695,7 @@ impl KvPool {
             "rows length {} is not a multiple of d_model {d}",
             rows.len()
         );
-        let lc = &self.layers[layer];
+        let lc = &self.banks[0][layer];
         let mut buf = vec![0u8; lc.row_bytes];
         let mut codes = vec![0u8; d];
         let mut out = vec![0.0f32; rows.len()];
@@ -623,10 +711,32 @@ impl KvPool {
     /// arithmetic the allocator performs, so a reservation made with
     /// this number cannot fail mid-forward.
     pub fn bytes_for_rows(&self, existing: usize, new: usize) -> usize {
+        self.bank_bytes_for_rows(0, existing, new)
+    }
+
+    /// [`KvPool::bytes_for_rows`] under the draft codec bank (0 when
+    /// the pool has none).
+    pub fn draft_bytes_for_rows(&self, existing: usize, new: usize) -> usize {
+        if self.has_draft_bank() {
+            self.bank_bytes_for_rows(1, existing, new)
+        } else {
+            0
+        }
+    }
+
+    fn bank_bytes_for_rows(
+        &self,
+        bank: usize,
+        existing: usize,
+        new: usize,
+    ) -> usize {
         let pages =
             |rows: usize| (rows + self.page_rows - 1) / self.page_rows;
         let dp = pages(existing + new) - pages(existing);
-        self.layers.iter().map(|lc| 2 * dp * self.page_rows * lc.row_bytes).sum()
+        self.banks[bank]
+            .iter()
+            .map(|lc| 2 * dp * self.page_rows * lc.row_bytes)
+            .sum()
     }
 
     /// Page bytes a fresh sequence of `positions` rows allocates.
@@ -635,8 +745,8 @@ impl KvPool {
     }
 
     /// Allocate one `layer` page against the budget.
-    fn alloc(&self, layer: usize) -> crate::Result<u32> {
-        let pb = self.page_bytes(layer);
+    fn alloc(&self, bank: usize, layer: usize) -> crate::Result<u32> {
+        let pb = self.bank_page_bytes(bank, layer);
         self.inner.lock().unwrap().alloc_page(pb, self.budget)
     }
 
@@ -655,6 +765,7 @@ impl KvPool {
         g: &mut Inner,
         stream: &mut Stream,
         pidx: usize,
+        bank: usize,
         layer: usize,
     ) {
         let own_id = stream.pages[pidx];
@@ -662,7 +773,7 @@ impl KvPool {
         debug_assert_eq!(own.rows, self.page_rows);
         let key: DedupKey = {
             let (h1, h2) = page_digest(&own.data);
-            (self.sharing_spaces[layer], h1, h2)
+            (self.sharing_spaces[bank][layer], h1, h2)
         };
         match g.dedup.get(&key).copied() {
             Some(canon_id) => {
@@ -700,6 +811,7 @@ impl KvPool {
     /// [`KvPool::bytes_for_rows`], so the path is cold).
     fn stream_append(
         &self,
+        bank: usize,
         layer: usize,
         stream: &mut Stream,
         rows: &[f32],
@@ -710,7 +822,7 @@ impl KvPool {
         let total = stream.rows + rows.len() / d;
         let pages_before = stream.pages.len();
         while stream.pages.len() * self.page_rows < total {
-            match self.alloc(layer) {
+            match self.alloc(bank, layer) {
                 Ok(id) => stream.pages.push(id),
                 Err(e) => {
                     for id in stream.pages.drain(pages_before..) {
@@ -720,7 +832,7 @@ impl KvPool {
                 }
             }
         }
-        let lc = &self.layers[layer];
+        let lc = &self.banks[bank][layer];
         let rb = lc.row_bytes;
         let mut g = self.inner.lock().unwrap();
         for row in rows.chunks_exact(d) {
@@ -736,8 +848,68 @@ impl KvPool {
             page.rows = slot + 1;
             stream.rows += 1;
             if self.sharing && slot + 1 == self.page_rows {
-                self.intern_full_page(&mut g, stream, pidx, layer);
+                self.intern_full_page(&mut g, stream, pidx, bank, layer);
             }
+        }
+        Ok(())
+    }
+
+    /// Truncate one stream to `rows` rows: whole pages beyond the cut
+    /// are freed (refcount-aware), and a partial cut inside the new
+    /// tail page privatizes it — a shared tail is replaced by a fresh
+    /// private copy of the kept rows (the canonical page is untouched),
+    /// a privately-interned tail leaves the dedup table, since a page
+    /// whose tail rows will be rewritten must never be shareable. This
+    /// is what rolls rejected speculative-draft rows back off a
+    /// sequence. On a budget failure (privatizing copy of a shared tail
+    /// page) the stream still *reads* correctly but must be reset
+    /// before appending again; callers treat it as fatal for the
+    /// sequence.
+    fn stream_truncate(
+        &self,
+        bank: usize,
+        layer: usize,
+        stream: &mut Stream,
+        rows: usize,
+    ) -> crate::Result<()> {
+        if rows >= stream.rows {
+            return Ok(());
+        }
+        let pr = self.page_rows;
+        let keep_pages = (rows + pr - 1) / pr;
+        let mut g = self.inner.lock().unwrap();
+        for id in stream.pages.drain(keep_pages..) {
+            g.free_page(id);
+        }
+        stream.rows = rows;
+        let cut = rows % pr;
+        if cut == 0 {
+            // the cut lands on a page boundary: the new tail page (if
+            // any) is still full, so it may legitimately stay interned
+            // and shared
+            return Ok(());
+        }
+        let id = stream.pages[keep_pages - 1];
+        let shared =
+            g.slots[id as usize].as_ref().expect("page is live").refs > 1;
+        if shared {
+            let rb = self.banks[bank][layer].row_bytes;
+            let data =
+                g.slots[id as usize].as_ref().unwrap().data[..cut * rb]
+                    .to_vec();
+            let nid = g
+                .alloc_page(self.bank_page_bytes(bank, layer), self.budget)?;
+            let np = g.slots[nid as usize].as_mut().unwrap();
+            np.data[..cut * rb].copy_from_slice(&data);
+            np.rows = cut;
+            stream.pages[keep_pages - 1] = nid;
+            g.free_page(id);
+        } else {
+            let key = g.slots[id as usize].as_mut().unwrap().interned.take();
+            if let Some(key) = key {
+                g.dedup.remove(&key);
+            }
+            g.slots[id as usize].as_mut().unwrap().rows = cut;
         }
         Ok(())
     }
@@ -747,6 +919,7 @@ impl KvPool {
     /// per-layer attention read.
     fn stream_gather_pair(
         &self,
+        bank: usize,
         layer: usize,
         ks: &Stream,
         vs: &Stream,
@@ -755,7 +928,7 @@ impl KvPool {
         codes: &mut [u8],
     ) {
         let d = self.d_model;
-        let lc = &self.layers[layer];
+        let lc = &self.banks[bank][layer];
         let g = self.inner.lock().unwrap();
         for (stream, out) in [(ks, k_out), (vs, v_out)] {
             out.clear();
@@ -786,6 +959,79 @@ impl KvPool {
         }
         stream.rows = 0;
     }
+
+    /// Register `seq`'s resident **full** pages as a pinned prefix:
+    /// each gains one reference held by the returned registration
+    /// handle, so a known system prompt stays resident (and, with
+    /// sharing on, stays in the intern table — the next identical
+    /// prefill dedups against it instead of re-allocating) across idle
+    /// periods where every live sequence retires. Partial tail pages
+    /// are skipped — they are still append-mutable and must stay
+    /// private, so a pin covers the page-aligned prefix. Requires a
+    /// prefix-sharing pool (a pin without the intern table would hold
+    /// bytes no future sequence could attach to).
+    ///
+    /// Pinned references use the ordinary refcount machinery:
+    /// [`KvPoolStats::shared_bytes`] counts them, and
+    /// [`KvPool::unpin_prefix`] releases them through the same
+    /// refcount-aware free as any retiring sequence, so
+    /// allocs − frees and `used_bytes` drain to exactly zero once every
+    /// sequence *and* every pin is gone.
+    pub fn pin_prefix(&self, seq: &SeqKv) -> crate::Result<u64> {
+        ensure!(
+            self.sharing,
+            "pin_prefix needs a prefix-sharing pool (KvPool::build_with)"
+        );
+        let kv = seq.as_paged().ok_or_else(|| {
+            anyhow::anyhow!("pin_prefix needs a pool-backed sequence")
+        })?;
+        ensure!(
+            std::ptr::eq(kv.pool().as_ref(), self),
+            "sequence belongs to a different pool"
+        );
+        let mut g = self.inner.lock().unwrap();
+        let mut held = Vec::new();
+        for stream in kv.k.iter().chain(kv.v.iter()) {
+            for &id in &stream.pages {
+                let len = {
+                    let page = g.slots[id as usize]
+                        .as_mut()
+                        .expect("page is live");
+                    if page.rows < self.page_rows {
+                        continue;
+                    }
+                    page.refs += 1;
+                    page.data.len()
+                };
+                g.shared_saved += len;
+                held.push(id);
+            }
+        }
+        let pin = g.next_pin;
+        g.next_pin += 1;
+        g.pins.insert(pin, held);
+        Ok(pin)
+    }
+
+    /// Release a [`KvPool::pin_prefix`] registration, dropping one
+    /// reference per pinned page. Returns false for an unknown handle.
+    pub fn unpin_prefix(&self, pin: u64) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        match g.pins.remove(&pin) {
+            Some(ids) => {
+                for id in ids {
+                    g.free_page(id);
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Live prefix registrations ([`KvPool::pin_prefix`]).
+    pub fn pinned_prefixes(&self) -> usize {
+        self.inner.lock().unwrap().pins.len()
+    }
 }
 
 /// One layer-stream's page handles.
@@ -802,6 +1048,7 @@ struct Stream {
 fn clone_stream(
     pool: &KvPool,
     g: &mut Inner,
+    bank: usize,
     layer: usize,
     src: &Stream,
     bumped: &mut Vec<u32>,
@@ -819,7 +1066,8 @@ fn clone_stream(
             bumped.push(id);
             pages.push(id);
         } else {
-            let nid = g.alloc_page(pool.page_bytes(layer), pool.budget)?;
+            let nid =
+                g.alloc_page(pool.bank_page_bytes(bank, layer), pool.budget)?;
             let (data, rows) = {
                 let p = g.slots[id as usize].as_ref().unwrap();
                 (p.data.clone(), p.rows)
@@ -839,6 +1087,9 @@ fn clone_stream(
 /// [`SeqKv`]); pages return to the pool on [`PagedKv::reset`] or drop.
 pub(crate) struct PagedKv {
     pool: Arc<KvPool>,
+    /// which codec bank this sequence's pages encode under (0 =
+    /// target, 1 = draft — see [`KvPool::build_spec`])
+    bank: usize,
     k: Vec<Stream>,
     v: Vec<Stream>,
     /// `d_model`-byte element-code scratch shared by every append and
@@ -849,9 +1100,13 @@ pub(crate) struct PagedKv {
 
 impl PagedKv {
     fn new(pool: Arc<KvPool>) -> PagedKv {
+        Self::new_bank(pool, 0)
+    }
+
+    fn new_bank(pool: Arc<KvPool>, bank: usize) -> PagedKv {
         let mk = || (0..pool.n_layers).map(|_| Stream::default()).collect();
         let codes = vec![0u8; pool.d_model];
-        PagedKv { k: mk(), v: mk(), codes, pool }
+        PagedKv { k: mk(), v: mk(), codes, pool, bank }
     }
 
     pub(crate) fn pool(&self) -> &Arc<KvPool> {
@@ -874,17 +1129,41 @@ impl PagedKv {
         v_rows: &[f32],
     ) -> crate::Result<()> {
         self.pool.stream_append(
+            self.bank,
             layer,
             &mut self.k[layer],
             k_rows,
             &mut self.codes,
         )?;
         self.pool.stream_append(
+            self.bank,
             layer,
             &mut self.v[layer],
             v_rows,
             &mut self.codes,
         )
+    }
+
+    /// Truncate every layer's K and V streams to `rows` resident rows
+    /// (no-op layers already at or below it) — the speculative-decode
+    /// rollback that discards rejected draft rows. See
+    /// [`KvPool::stream_truncate`] for the sharing semantics.
+    pub(crate) fn truncate(&mut self, rows: usize) -> crate::Result<()> {
+        for layer in 0..self.k.len() {
+            self.pool.stream_truncate(
+                self.bank,
+                layer,
+                &mut self.k[layer],
+                rows,
+            )?;
+            self.pool.stream_truncate(
+                self.bank,
+                layer,
+                &mut self.v[layer],
+                rows,
+            )?;
+        }
+        Ok(())
     }
 
     /// Decode one layer's K and V rows into the output buffers; the
@@ -899,6 +1178,7 @@ impl PagedKv {
     ) {
         codes.resize(self.pool.d_model, 0);
         self.pool.stream_gather_pair(
+            self.bank,
             layer,
             &self.k[layer],
             &self.v[layer],
@@ -928,7 +1208,8 @@ impl PagedKv {
             .zip(&self.v)
             .enumerate()
             .map(|(l, (ks, vs))| {
-                (ks.pages.len() + vs.pages.len()) * self.pool.page_bytes(l)
+                (ks.pages.len() + vs.pages.len())
+                    * self.pool.bank_page_bytes(self.bank, l)
             })
             .sum()
     }
@@ -959,6 +1240,7 @@ impl PagedKv {
                 match clone_stream(
                     &self.pool,
                     &mut g,
+                    self.bank,
                     layer,
                     src,
                     &mut bumped,
@@ -981,6 +1263,7 @@ impl PagedKv {
         drop(g);
         Ok(PagedKv {
             pool: self.pool.clone(),
+            bank: self.bank,
             k,
             v,
             codes: vec![0u8; self.pool.d_model],
@@ -1355,5 +1638,249 @@ mod tests {
         assert_eq!(k[..], rows[..]);
         base.reset();
         assert_eq!(pool.used_bytes(), 0);
+    }
+
+    #[test]
+    fn truncate_frees_tail_pages_and_reappends_cleanly() {
+        let d = dims(8, 2);
+        let pool = KvPool::exact(&d, 4, 1 << 20).unwrap();
+        let pb = pool.page_bytes(0);
+        let rows = eight_rows(); // 8 rows = 2 full pages/stream
+        let mut kv = PagedKv::new(pool.clone());
+        for layer in 0..2 {
+            kv.append(layer, &rows, &rows).unwrap();
+        }
+        assert_eq!(pool.used_bytes(), 2 * 2 * 2 * pb);
+        // cut to 5 rows: ceil(5/4) = 2 pages per stream — nothing freed
+        // yet, the second page just became a 1-row tail
+        kv.truncate(5).unwrap();
+        assert_eq!(kv.rows(0), (5, 5));
+        assert_eq!(pool.used_bytes(), 2 * 2 * 2 * pb);
+        // cut to the page boundary: each stream drops its tail page
+        kv.truncate(4).unwrap();
+        assert_eq!(pool.used_bytes(), 2 * 2 * pb, "1 page per stream");
+        // the kept rows read back bit-exactly, and a re-append after
+        // the cut overwrites the stale region
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        kv.gather(0, &mut k, &mut v);
+        assert_eq!(k[..], rows[..32]);
+        let fresh = vec![9.0f32; 3 * 8];
+        for layer in 0..2 {
+            kv.append(layer, &fresh, &fresh).unwrap();
+        }
+        kv.gather(0, &mut k, &mut v);
+        assert_eq!(k[..32], rows[..32]);
+        assert_eq!(k[32..], fresh[..]);
+        kv.truncate(0).unwrap();
+        assert_eq!(pool.used_bytes(), 0);
+        let s = pool.stats();
+        assert_eq!(s.allocs, s.frees);
+    }
+
+    #[test]
+    fn truncate_into_a_shared_page_privatizes_the_kept_rows() {
+        let d = dims(8, 1);
+        let pool = KvPool::build_with(
+            &d,
+            &PerLayerQConfig::uniform(QConfig::baseline()),
+            1,
+            4,
+            1 << 20,
+            true,
+        )
+        .unwrap();
+        let rows = eight_rows();
+        let mut a = PagedKv::new(pool.clone());
+        let mut b = PagedKv::new(pool.clone());
+        a.append(0, &rows, &rows).unwrap();
+        b.append(0, &rows, &rows).unwrap();
+        let before = pool.stats();
+        assert_eq!(before.used_bytes, 2 * pool.page_bytes(0));
+        // b cuts into the shared page: its reference moves to a private
+        // copy, a's pages (and the canonical dedup entries) survive
+        b.truncate(2).unwrap();
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        b.gather(0, &mut k, &mut v);
+        assert_eq!(k[..], rows[..16], "kept rows intact after privatize");
+        a.gather(0, &mut k, &mut v);
+        assert_eq!(k[..], rows[..], "canonical holder untouched");
+        // b appends different rows after the cut — no COW fault, the
+        // private tail just grows
+        let tail = vec![4.5f32; 2 * 8];
+        b.append(0, &tail, &tail).unwrap();
+        b.gather(0, &mut k, &mut v);
+        assert_eq!(k[..16], rows[..16]);
+        assert_eq!(k[16..], tail[..]);
+        a.reset();
+        b.reset();
+        let s = pool.stats();
+        assert_eq!(s.used_bytes, 0);
+        assert_eq!(s.allocs, s.frees);
+    }
+
+    #[test]
+    fn truncate_uninterns_a_private_full_page_before_rewriting() {
+        let d = dims(8, 1);
+        let pool = KvPool::build_with(
+            &d,
+            &PerLayerQConfig::uniform(QConfig::baseline()),
+            1,
+            4,
+            1 << 20,
+            true,
+        )
+        .unwrap();
+        let rows = eight_rows();
+        let mut a = PagedKv::new(pool.clone());
+        // K page interns; V dedups against it. Free V first so the K
+        // page is private-but-interned, then truncate into it.
+        a.append(0, &rows[..32], &rows[..32]).unwrap();
+        pool.stream_free(&mut a.v[0]);
+        a.truncate(3).unwrap();
+        // the cut page left the dedup table: a new sequence writing the
+        // original content does NOT dedup against stale bytes
+        let mut b = PagedKv::new(pool.clone());
+        b.append(0, &rows[..32], &rows[..32]).unwrap();
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        b.gather(0, &mut k, &mut v);
+        assert_eq!(k[..], rows[..32]);
+        // and refilling a's page after the cut reads back what was
+        // written, not the stale suffix
+        let fill = vec![7.0f32; 8];
+        a.pool.stream_append(0, 0, &mut a.k[0], &fill, &mut a.codes).unwrap();
+        let (mut ka, mut va) = (Vec::new(), Vec::new());
+        a.gather(0, &mut ka, &mut va);
+        assert_eq!(ka[..24], rows[..24]);
+        assert_eq!(ka[24..32], fill[..]);
+        assert!(va.is_empty(), "v stream was freed above");
+    }
+
+    #[test]
+    fn pinned_prefix_survives_idle_drain_and_unpin_drains_to_zero() {
+        let d = dims(8, 1);
+        let pool = KvPool::build_with(
+            &d,
+            &PerLayerQConfig::uniform(QConfig::baseline()),
+            1,
+            4,
+            1 << 20,
+            true,
+        )
+        .unwrap();
+        let pb = pool.page_bytes(0);
+        let prefix = eight_rows(); // 2 full pages
+        let mut kv = PagedKv::new(pool.clone());
+        kv.append(0, &prefix, &prefix).unwrap();
+        let seq = SeqKv::paged(kv);
+        let pin = pool.pin_prefix(&seq).unwrap();
+        assert_eq!(pool.pinned_prefixes(), 1);
+        // idle drain: the last sequence retires, pinned pages stay
+        drop(seq);
+        let s = pool.stats();
+        assert_eq!(s.used_bytes, 2 * pb, "pin holds the physical prefix");
+        assert!(s.allocs > s.frees);
+        // a new sequence over the same prompt dedups against the
+        // pinned pages instead of re-allocating
+        let hits0 = pool.stats().dedup_hits;
+        let mut kv2 = PagedKv::new(pool.clone());
+        kv2.append(0, &prefix, &prefix).unwrap();
+        let s = pool.stats();
+        assert_eq!(s.used_bytes, 2 * pb, "re-arrival attached to the pin");
+        assert!(s.dedup_hits > hits0);
+        kv2.reset();
+        assert_eq!(pool.used_bytes(), 2 * pb);
+        // unpin: drain-to-zero accounting is exact again
+        assert!(pool.unpin_prefix(pin));
+        assert!(!pool.unpin_prefix(pin), "double unpin is refused");
+        let s = pool.stats();
+        assert_eq!(s.used_bytes, 0);
+        assert_eq!(s.allocs, s.frees);
+        assert_eq!(s.shared_bytes, 0);
+        assert_eq!(pool.pinned_prefixes(), 0);
+    }
+
+    #[test]
+    fn pin_skips_partial_tails_and_requires_sharing() {
+        let d = dims(8, 1);
+        // sharing off → refused
+        let off = KvPool::exact(&d, 4, 1 << 20).unwrap();
+        let mut kv = PagedKv::new(off.clone());
+        kv.append(0, &eight_rows(), &eight_rows()).unwrap();
+        let seq = SeqKv::paged(kv);
+        assert!(off.pin_prefix(&seq).is_err());
+        drop(seq);
+        // a 6-row sequence pins only its full page per stream
+        let pool = KvPool::build_with(
+            &d,
+            &PerLayerQConfig::uniform(QConfig::baseline()),
+            1,
+            4,
+            1 << 20,
+            true,
+        )
+        .unwrap();
+        let pb = pool.page_bytes(0);
+        let rows: Vec<f32> = eight_rows()[..48].to_vec();
+        let mut kv = PagedKv::new(pool.clone());
+        kv.append(0, &rows, &rows).unwrap();
+        let seq = SeqKv::paged(kv);
+        let pin = pool.pin_prefix(&seq).unwrap();
+        drop(seq);
+        // only the page-aligned prefix survives: 1 shared full page
+        // (K dedup'd V), the two private tails were freed on retire
+        assert_eq!(pool.used_bytes(), pb);
+        assert!(pool.unpin_prefix(pin));
+        assert_eq!(pool.used_bytes(), 0);
+    }
+
+    #[test]
+    fn draft_bank_prices_and_encodes_under_its_own_codec() {
+        let d = dims(16, 2);
+        let target = PerLayerQConfig::uniform(QConfig::baseline());
+        let draft = PerLayerQConfig::uniform(
+            QConfig::named("fp4_e2m1", "ue5m3", false).unwrap(),
+        );
+        let pool =
+            KvPool::build_spec(&d, &target, &draft, 8, 4, 1 << 20, false)
+                .unwrap();
+        assert!(pool.has_draft_bank());
+        assert_eq!(pool.codec_id(0), "exact");
+        assert_eq!(
+            pool.draft_codec_id(0).unwrap(),
+            "fp4_e2m1/ue5m3/bs8"
+        );
+        // draft rows are strictly cheaper than exact target rows and
+        // priced by their own arithmetic
+        let t1 = pool.bytes_for_rows(0, 1);
+        let d1 = pool.draft_bytes_for_rows(0, 1);
+        assert!(d1 < t1, "draft {d1} >= target {t1}");
+        // one draft page: 4 rows × (8 codes + 2 scales)
+        assert_eq!(d1, 2 * 2 * 4 * (8 + 2));
+        // both banks draw from the same budget/counters
+        let mut tseq = PagedKv::new(pool.clone());
+        let mut dseq = PagedKv::new_bank(pool.clone(), 1);
+        let one = vec![0.5f32; 16];
+        tseq.append(0, &one, &one).unwrap();
+        dseq.append(0, &one, &one).unwrap();
+        assert_eq!(pool.used_bytes(), t1 / 2 + d1 / 2);
+        // draft reads decode as fake_quant under the draft scheme
+        let (mut k, mut v) = (Vec::new(), Vec::new());
+        dseq.gather(0, &mut k, &mut v);
+        let scheme =
+            QConfig::named("fp4_e2m1", "ue5m3", false).unwrap().scheme(8);
+        let want = fake_quant(&scheme, &one);
+        for (a, b) in k.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        tseq.reset();
+        dseq.reset();
+        let s = pool.stats();
+        assert_eq!(s.used_bytes, 0);
+        assert_eq!(s.allocs, s.frees);
+        // no draft bank → draft pricing is zero and draft_seq refuses
+        let plain = KvPool::exact(&d, 4, 1 << 20).unwrap();
+        assert_eq!(plain.draft_bytes_for_rows(0, 8), 0);
+        assert!(!plain.has_draft_bank());
+        assert!(plain.draft_seq().is_err());
     }
 }

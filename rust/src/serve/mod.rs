@@ -98,6 +98,24 @@
 //!   `BENCH_traffic.json` with per-class p50/p95/p99 TTFT/ITL/queue
 //!   wait, goodput, shared-vs-unshared peak KV bytes, and a
 //!   host-independent pass verdict.
+//!
+//! **Speculative decoding** (DESIGN.md §15) turns the repo's multiple
+//! bit-exact execution paths for one weight source into throughput:
+//!
+//! * [`spec`] — [`SpecDecodeEngine`]: a cheap draft config (default
+//!   FP4/UE5M3) proposes k tokens through the m == 1 decode fast path;
+//!   the target config verifies all k + 1 positions in **one** ragged
+//!   spine call; replay acceptance (the request's own greedy or
+//!   seeded-Pcg64 sampler re-picks every emitted token from target
+//!   logits) keeps the emitted stream bit-identical to
+//!   non-speculative decode for every k, draft config, and
+//!   thread/shard count. [`Scheduler::new_speculative`] runs the same
+//!   protocol under continuous batching with draft KV in the shared
+//!   [`KvPool`] under its own codec bank (draft pages evict first).
+//! * [`spec_bench`] — `microscale spec-bench`: sweeps draft acceptance
+//!   over the paper's {FP4, FP8} × {UE4M3, UE5M3} × block-size grid
+//!   (the anomaly as an acceptance-rate curve) and emits
+//!   `BENCH_spec.json`, stream-invariance gated before any timing.
 
 pub mod batcher;
 pub mod bench;
@@ -110,6 +128,8 @@ pub mod kvpool;
 pub mod net;
 pub mod packed_model;
 pub mod scheduler;
+pub mod spec;
+pub mod spec_bench;
 pub mod traffic;
 
 /// The weight-operand cache lives in the quant layer
@@ -130,3 +150,4 @@ pub use scheduler::{
     DecodeRequest, DecodeResult, FinishReason, Priority, Scheduler,
     SchedulerConfig, StreamEvent,
 };
+pub use spec::{SpecDecodeEngine, SpecOutput};

@@ -39,6 +39,8 @@ pub const MAX_BODY_BYTES: usize = 1024 * 1024;
 pub struct Request {
     pub method: String,
     pub path: String,
+    /// `HTTP/1.1` or `HTTP/1.0` (anything else is rejected at parse).
+    pub version: String,
     /// `(lowercased name, value)` in arrival order.
     pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
@@ -52,6 +54,18 @@ impl Request {
             .iter()
             .find(|(n, _)| n == name)
             .map(|(_, v)| v.as_str())
+    }
+
+    /// Whether the client may reuse the connection after this request
+    /// (RFC 9112 §9.3): HTTP/1.1 defaults to persistent unless the
+    /// request says `Connection: close`; HTTP/1.0 defaults to close
+    /// unless it says `Connection: keep-alive`.
+    pub fn keep_alive(&self) -> bool {
+        match self.header("connection") {
+            Some(v) if v.eq_ignore_ascii_case("close") => false,
+            Some(v) if v.eq_ignore_ascii_case("keep-alive") => true,
+            _ => self.version == "HTTP/1.1",
+        }
     }
 }
 
@@ -103,7 +117,13 @@ fn read_line<R: BufRead>(r: &mut R) -> crate::Result<Option<String>> {
                 );
                 buf.push(byte[0]);
             }
-            Err(e) => return Err(anyhow!("reading header line: {e}")),
+            // keep the io::Error as the source so callers can tell a
+            // read timeout (idle keep-alive connection) from garbage
+            Err(e) => {
+                return Err(
+                    anyhow::Error::new(e).context("reading header line")
+                )
+            }
         }
     }
 }
@@ -174,23 +194,30 @@ pub fn read_request<R: BufRead>(
     Ok(Some(Request {
         method: method.to_string(),
         path: path.to_string(),
+        version: version.to_string(),
         headers,
         body,
     }))
 }
 
-/// Write a complete fixed-length response.
+/// Write a complete fixed-length response. `keep_alive` picks the
+/// `Connection` header: the server passes the client's negotiated
+/// persistence ([`Request::keep_alive`], possibly overridden by its
+/// requests-per-connection cap) so the advertised behavior always
+/// matches what the connection loop actually does.
 pub fn write_response<W: Write>(
     w: &mut W,
     status: u16,
     reason: &str,
     content_type: &str,
     body: &[u8],
+    keep_alive: bool,
 ) -> crate::Result<()> {
+    let conn = if keep_alive { "keep-alive" } else { "close" };
     write!(
         w,
         "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n",
+         Content-Length: {}\r\nConnection: {conn}\r\n\r\n",
         body.len()
     )
     .and_then(|()| w.write_all(body))
@@ -208,16 +235,21 @@ pub struct ChunkWriter<W: Write> {
 }
 
 impl<W: Write> ChunkWriter<W> {
+    /// Write the response head. `keep_alive` as in [`write_response`]
+    /// — chunked framing delimits the body, so a persistent connection
+    /// stays usable after [`ChunkWriter::end`].
     pub fn start(
         mut w: W,
         status: u16,
         reason: &str,
         content_type: &str,
+        keep_alive: bool,
     ) -> crate::Result<ChunkWriter<W>> {
+        let conn = if keep_alive { "keep-alive" } else { "close" };
         write!(
             w,
             "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
-             Transfer-Encoding: chunked\r\nConnection: close\r\n\r\n"
+             Transfer-Encoding: chunked\r\nConnection: {conn}\r\n\r\n"
         )
         .and_then(|()| w.flush())
         .map_err(|e| anyhow!("writing chunked head: {e}"))?;
@@ -246,17 +278,23 @@ impl<W: Write> ChunkWriter<W> {
     }
 }
 
-/// Client side: write one request with an optional body.
+/// Client side: write one request with an optional body. With
+/// `keep_alive` the HTTP/1.1 default (persistent) applies and no
+/// `Connection` header is sent; without it the request carries
+/// `Connection: close`, telling the server to close after responding.
 pub fn write_request<W: Write>(
     w: &mut W,
     method: &str,
     path: &str,
     body: &[u8],
+    keep_alive: bool,
 ) -> crate::Result<()> {
+    let conn =
+        if keep_alive { "" } else { "Connection: close\r\n" };
     write!(
         w,
         "{method} {path} HTTP/1.1\r\nHost: localhost\r\n\
-         Content-Length: {}\r\nConnection: close\r\n\r\n",
+         Content-Length: {}\r\n{conn}\r\n",
         body.len()
     )
     .and_then(|()| w.write_all(body))
@@ -379,18 +417,37 @@ mod tests {
     fn response_roundtrips_fixed_and_chunked() {
         // fixed-length
         let mut wire = Vec::new();
-        write_response(&mut wire, 200, "OK", "application/json", b"{\"a\":1}")
-            .unwrap();
+        write_response(
+            &mut wire,
+            200,
+            "OK",
+            "application/json",
+            b"{\"a\":1}",
+            false,
+        )
+        .unwrap();
         let resp = read_response(&mut Cursor::new(&wire)).unwrap();
         assert_eq!(resp.status, 200);
         assert_eq!(resp.header("content-type"), Some("application/json"));
+        assert_eq!(resp.header("connection"), Some("close"));
         assert_eq!(resp.body, b"{\"a\":1}");
+        // keep-alive responses advertise it
+        let mut wire = Vec::new();
+        write_response(&mut wire, 200, "OK", "application/json", b"{}", true)
+            .unwrap();
+        let resp = read_response(&mut Cursor::new(&wire)).unwrap();
+        assert_eq!(resp.header("connection"), Some("keep-alive"));
         // chunked: three chunks concatenate, and the incremental reader
         // sees each chunk separately (what the bench timestamps)
         let mut wire = Vec::new();
-        let mut cw =
-            ChunkWriter::start(&mut wire, 200, "OK", "text/event-stream")
-                .unwrap();
+        let mut cw = ChunkWriter::start(
+            &mut wire,
+            200,
+            "OK",
+            "text/event-stream",
+            true,
+        )
+        .unwrap();
         cw.chunk(b"data: 1\n\n").unwrap();
         cw.chunk(b"").unwrap(); // skipped, not terminal
         cw.chunk(b"data: 2\n\n").unwrap();
@@ -417,11 +474,40 @@ mod tests {
     #[test]
     fn client_request_parses_back() {
         let mut wire = Vec::new();
-        write_request(&mut wire, "POST", "/v1/completions", b"{\"p\":1}")
-            .unwrap();
+        write_request(
+            &mut wire,
+            "POST",
+            "/v1/completions",
+            b"{\"p\":1}",
+            true,
+        )
+        .unwrap();
         let req =
             read_request(&mut Cursor::new(&wire)).unwrap().unwrap();
         assert_eq!(req.method, "POST");
         assert_eq!(req.body, b"{\"p\":1}");
+        assert!(req.keep_alive(), "HTTP/1.1 defaults to persistent");
+        let mut wire = Vec::new();
+        write_request(&mut wire, "GET", "/stats", b"", false).unwrap();
+        let req =
+            read_request(&mut Cursor::new(&wire)).unwrap().unwrap();
+        assert!(!req.keep_alive(), "Connection: close honored");
+    }
+
+    #[test]
+    fn keep_alive_follows_version_defaults_and_overrides() {
+        let parse = |raw: &[u8]| {
+            read_request(&mut Cursor::new(raw)).unwrap().unwrap()
+        };
+        assert!(parse(b"GET / HTTP/1.1\r\n\r\n").keep_alive());
+        assert!(!parse(b"GET / HTTP/1.0\r\n\r\n").keep_alive());
+        assert!(!parse(
+            b"GET / HTTP/1.1\r\nConnection: Close\r\n\r\n"
+        )
+        .keep_alive());
+        assert!(parse(
+            b"GET / HTTP/1.0\r\nConnection: Keep-Alive\r\n\r\n"
+        )
+        .keep_alive());
     }
 }

@@ -303,6 +303,40 @@ impl SeqKv {
         SeqKv { store: Store::Paged(p), len: 0 }
     }
 
+    /// The paged backend, when there is one (pool-internal hooks:
+    /// prefix pinning).
+    pub(crate) fn as_paged(&self) -> Option<&super::kvpool::PagedKv> {
+        match &self.store {
+            Store::Inline { .. } => None,
+            Store::Paged(p) => Some(p),
+        }
+    }
+
+    /// Truncate the cache to its first `positions` rows per layer — the
+    /// speculative-decode rollback that discards rejected draft rows
+    /// (no-op when `positions >= len`). Inline caches shrink their row
+    /// vectors; paged caches free whole pages past the cut and
+    /// privatize a shared tail page ([`crate::serve::kvpool`] docs).
+    /// A paged privatizing copy can fail on budget exhaustion; the
+    /// cache must then be [`SeqKv::reset`] before further appends.
+    pub fn truncate(&mut self, positions: usize) -> crate::Result<()> {
+        if positions >= self.len {
+            return Ok(());
+        }
+        match &mut self.store {
+            Store::Inline { k, v } => {
+                for rows in k.iter_mut().chain(v.iter_mut()) {
+                    // every layer holds len rows of equal width
+                    let d = rows.len() / self.len;
+                    rows.truncate(positions * d);
+                }
+            }
+            Store::Paged(p) => p.truncate(positions)?,
+        }
+        self.len = positions;
+        Ok(())
+    }
+
     /// Resident positions.
     pub fn len(&self) -> usize {
         self.len

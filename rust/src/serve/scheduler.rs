@@ -81,6 +81,27 @@
 //! private even on a prefix-sharing pool — dedup can only hand bytes
 //! back ([`crate::serve::kvpool`] module docs).
 //!
+//! # Speculation mode
+//!
+//! [`Scheduler::new_speculative`] attaches a *draft* model — the same
+//! weight source under a cheaper quant config (default FP4/UE5M3) —
+//! and turns every decode-phase sequence's single-token step into a
+//! verify window: the draft proposes up to `k` greedy tokens (one
+//! batched ragged catch-up call plus single-token steps), and the
+//! step's **one** target spine call verifies every window alongside
+//! the usual prefill chunks (`last_only = false`, so all window rows'
+//! logits return). Replay acceptance — each sequence's own sampler
+//! re-picks every emitted token from the target's logits rows, which
+//! the multi-token append contract makes bit-identical to
+//! step-by-step decode — keeps every token stream exactly what the
+//! base scheduler emits; rejected rows roll back off both caches via
+//! [`SeqKv::truncate`]. Draft caches live in the shared
+//! [`crate::serve::KvPool`] under their own codec bank
+//! ([`crate::serve::KvPool::build_spec`]) and are the first thing
+//! dropped under memory pressure (the sequence degrades to plain
+//! decode — draft pages evict before any sequence does), so
+//! speculation never weakens the progress guarantee. DESIGN.md §15.
+//!
 //! # Streaming and cancellation
 //!
 //! [`Scheduler::submit_streaming`] attaches an `mpsc` sink that
@@ -107,12 +128,14 @@
 //! all of them.
 
 use std::collections::VecDeque;
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 use anyhow::ensure;
 
 use super::decode::{DecodeEngine, Sampler, Sampling, SeqKv};
+use super::packed_model::PackedModel;
+use super::spec::{accept_window, argmax};
 
 /// Admission/eviction priority class (see module docs): priorities
 /// reorder scheduling, never token streams.
@@ -252,6 +275,11 @@ struct Active {
     admitted: Instant,
     sink: Option<mpsc::Sender<StreamEvent>>,
     kv: SeqKv,
+    /// Speculation mode only: the draft model's cache for this
+    /// sequence (pool draft bank when pooled). Dropped first under
+    /// memory pressure — losing it only costs re-catch-up, never
+    /// tokens — and on eviction.
+    draft_kv: Option<SeqKv>,
     sampler: Sampler,
     /// Generated tokens; the last one is the next decode-step input
     /// (unless the sequence just finished).
@@ -294,6 +322,7 @@ impl Active {
 pub struct Scheduler {
     engine: DecodeEngine,
     cfg: SchedulerConfig,
+    spec: Option<SpecState>,
     waiting: VecDeque<Waiting>,
     /// Evicted-at-capacity sequences, resumed before new admissions
     /// (front = most recently evicted = next to resume).
@@ -305,6 +334,18 @@ pub struct Scheduler {
     peak_kv_bytes: usize,
 }
 
+/// Speculation mode state ([`Scheduler::new_speculative`]).
+struct SpecState {
+    /// The draft model's engine, used purely for its forward helpers —
+    /// draft caches come from the shared pool's draft bank, never from
+    /// this engine's `new_kv`.
+    draft: DecodeEngine,
+    /// Speculation depth: draft proposals per sequence per step.
+    k: usize,
+    proposed: u64,
+    accepted: u64,
+}
+
 impl Scheduler {
     pub fn new(engine: DecodeEngine, cfg: SchedulerConfig) -> Scheduler {
         Scheduler {
@@ -314,6 +355,7 @@ impl Scheduler {
                 max_prefill_per_step: cfg.max_prefill_per_step.max(1),
                 max_prefill_tokens: cfg.max_prefill_tokens.max(1),
             },
+            spec: None,
             waiting: VecDeque::new(),
             preempted: VecDeque::new(),
             active: Vec::new(),
@@ -322,6 +364,53 @@ impl Scheduler {
             cancelled: 0,
             peak_kv_bytes: 0,
         }
+    }
+
+    /// A scheduler in **speculation mode** (module docs): each step, a
+    /// `draft` model — the same weight source under a cheaper quant
+    /// config — proposes up to `k` greedy tokens per decode-phase
+    /// sequence, and the target engine verifies every window in the
+    /// step's single ragged spine call. Replay acceptance keeps every
+    /// token stream bit-identical to the non-speculative scheduler
+    /// (and therefore to the cache-free oracle) — speculation, like
+    /// priorities, reorders *when* work runs, never *what* it
+    /// computes. On a pooled engine the pool must carry a draft codec
+    /// bank ([`crate::serve::KvPool::build_spec`]); draft caches
+    /// allocate from it under the shared byte budget, and under
+    /// memory pressure draft pages are dropped (sequences degrade to
+    /// plain decode) before any sequence is evicted.
+    pub fn new_speculative(
+        engine: DecodeEngine,
+        draft: Arc<PackedModel>,
+        k: usize,
+        cfg: SchedulerConfig,
+    ) -> crate::Result<Scheduler> {
+        ensure!(k >= 1, "speculation depth k must be >= 1 (got {k})");
+        ensure!(
+            engine.model().dims() == draft.dims(),
+            "draft and target models must share one shape: {:?} vs {:?}",
+            engine.model().dims(),
+            draft.dims()
+        );
+        if let Some(p) = engine.pool() {
+            ensure!(
+                p.has_draft_bank(),
+                "speculative scheduling over a pool needs a draft codec \
+                 bank (build it with KvPool::build_spec)"
+            );
+        }
+        // validates the draft model's decode contract (per-tensor
+        // activation scaling is as illegal for drafts as for targets)
+        let draft = DecodeEngine::new(draft)?;
+        let mut s = Scheduler::new(engine, cfg);
+        s.spec = Some(SpecState { draft, k, proposed: 0, accepted: 0 });
+        Ok(s)
+    }
+
+    /// Speculation counters `(proposed, accepted)` since construction;
+    /// `None` when not in speculation mode.
+    pub fn spec_stats(&self) -> Option<(u64, u64)> {
+        self.spec.as_ref().map(|s| (s.proposed, s.accepted))
     }
 
     fn validate(&self, req: &DecodeRequest) -> crate::Result<()> {
@@ -431,9 +520,19 @@ impl Scheduler {
     }
 
     /// Total resident KV bytes across live sequences (allocated page
-    /// bytes when the engine runs on a [`crate::serve::KvPool`]).
+    /// bytes when the engine runs on a [`crate::serve::KvPool`]),
+    /// including draft caches in speculation mode.
     pub fn kv_resident_bytes(&self) -> usize {
-        self.active.iter().map(|a| a.kv.resident_bytes()).sum()
+        self.active
+            .iter()
+            .map(|a| {
+                a.kv.resident_bytes()
+                    + a.draft_kv
+                        .as_ref()
+                        .map(|d| d.resident_bytes())
+                        .unwrap_or(0)
+            })
+            .sum()
     }
 
     /// High-water mark of [`Scheduler::kv_resident_bytes`] observed
@@ -522,23 +621,17 @@ impl Scheduler {
             .unwrap_or(self.active.len() - 1)
     }
 
-    /// Run one scheduling iteration: admit (within KV slots *and* the
-    /// pool's page budget; interactive first), evict-and-requeue if the
-    /// live set outgrew the pool, one ragged forward (chunked prefill +
-    /// decode fused), sample, stream, retire. Returns the progress made
-    /// as cache rows appended (every sampled token appends its row) —
-    /// 0 means nothing could run: either fully idle, or every admission
-    /// is blocked on pool pages held *outside* this scheduler (check
-    /// [`Scheduler::is_idle`] to tell the two apart; [`Scheduler::run`]
-    /// errors on the latter instead of spinning).
-    pub fn step(&mut self) -> crate::Result<usize> {
-        // admit up to the per-step budget while KV slots are free and —
-        // with a pool — while the candidate's (conservative, full-
-        // prefix) pages fit on top of the live set's planned step.
-        // Preempted sequences resume before fresh admissions, and
-        // interactive candidates go before batch ones; admission blocks
-        // at the first candidate that doesn't fit, preserving FIFO
-        // order within each priority class.
+    /// Admit up to the per-step budget while KV slots are free and —
+    /// with a pool — while the candidate's (conservative, full-prefix)
+    /// pages fit on top of the live set's planned step. Preempted
+    /// sequences resume before fresh admissions, and interactive
+    /// candidates go before batch ones; admission blocks at the first
+    /// candidate that doesn't fit, preserving FIFO order within each
+    /// priority class. (Speculation overhead is deliberately not
+    /// priced here — the speculative step degrades itself to plain
+    /// decode under pressure, so base pricing is the floor it can
+    /// always reach.)
+    fn admit_new(&mut self) -> crate::Result<()> {
         let mut admitted = 0usize;
         while self.active.len() < self.cfg.max_active
             && admitted < self.cfg.max_prefill_per_step
@@ -564,12 +657,30 @@ impl Scheduler {
                 admitted: Instant::now(),
                 sink: w.sink,
                 kv: self.engine.new_kv(),
+                draft_kv: None,
                 sampler,
                 out: Vec::new(),
                 emitted: Vec::new(),
             });
             admitted += 1;
         }
+        Ok(())
+    }
+
+    /// Run one scheduling iteration: admit (within KV slots *and* the
+    /// pool's page budget; interactive first), evict-and-requeue if the
+    /// live set outgrew the pool, one ragged forward (chunked prefill +
+    /// decode fused), sample, stream, retire. Returns the progress made
+    /// as cache rows appended (every sampled token appends its row) —
+    /// 0 means nothing could run: either fully idle, or every admission
+    /// is blocked on pool pages held *outside* this scheduler (check
+    /// [`Scheduler::is_idle`] to tell the two apart; [`Scheduler::run`]
+    /// errors on the latter instead of spinning).
+    pub fn step(&mut self) -> crate::Result<usize> {
+        if self.spec.is_some() {
+            return self.step_spec();
+        }
+        self.admit_new()?;
         if self.active.is_empty() {
             return Ok(0);
         }
@@ -592,6 +703,7 @@ impl Scheduler {
             );
             let mut victim = self.active.remove(self.pick_victim());
             victim.kv.reset();
+            victim.draft_kv = None;
             self.preempted.push_front(victim);
             self.preemptions += 1;
         }
@@ -724,6 +836,374 @@ impl Scheduler {
                 None => i += 1,
             }
         }
+        Ok(appended)
+    }
+
+    /// One speculative scheduling iteration
+    /// ([`Scheduler::new_speculative`]): admit exactly as the base
+    /// step; plan per-sequence feeds — prefill chunks unchanged,
+    /// decode-phase sequences get a draft window of up to `k`
+    /// proposals; price the plan against the pool, **degrading
+    /// windows to plain decode youngest-first and dropping their
+    /// draft pages** before evicting any sequence; run the batched
+    /// draft phase (one ragged catch-up call + single-token steps);
+    /// verify everything in ONE target ragged spine call
+    /// (`last_only = false` — every window row's logits come back);
+    /// replay-accept per sequence with its own sampler; stream and
+    /// retire as the base step does; and roll rejected rows off both
+    /// caches with [`SeqKv::truncate`]. Token streams are
+    /// bit-identical to the base scheduler's (module docs).
+    fn step_spec(&mut self) -> crate::Result<usize> {
+        self.admit_new()?;
+        if self.active.is_empty() {
+            return Ok(0);
+        }
+        let k_max = self.spec.as_ref().expect("spec mode").k;
+        let dims = *self.engine.model().dims();
+        let seq_cap = dims.seq_len;
+        let vocab = dims.vocab;
+
+        /// Per-sequence feed plan for this step.
+        #[derive(Clone, Copy)]
+        struct Plan {
+            /// Target rows fed (0 = sits this batch out).
+            chunk: usize,
+            /// Draft proposals verified along with the feed.
+            kb: usize,
+        }
+        // per-sequence speculation cap, degraded under pool pressure;
+        // the plan is recomputed after every degrade/evict because the
+        // prefill-token budget redistributes
+        let mut kcap: Vec<usize> =
+            self.active.iter().map(|_| k_max).collect();
+        let plans: Vec<Plan> = loop {
+            let mut prefill_left = self.cfg.max_prefill_tokens;
+            let mut plans = Vec::with_capacity(self.active.len());
+            for (a, &kc) in self.active.iter().zip(&kcap) {
+                let have = a.kv.len();
+                let remaining = a.prefix_len() - have;
+                debug_assert!(remaining >= 1);
+                if remaining == 1 {
+                    // decode phase: the window appends kb + 1 rows
+                    // (context room) and emits at most kb + 1 tokens
+                    // (generation budget) — cap it so neither is ever
+                    // exceeded mid-window
+                    let kb = kc
+                        .min((seq_cap - have).saturating_sub(1))
+                        .min(
+                            (a.req.max_new_tokens - a.out.len())
+                                .saturating_sub(1),
+                        );
+                    plans.push(Plan { chunk: 1, kb });
+                } else {
+                    let c = remaining.min(prefill_left);
+                    prefill_left -= c;
+                    plans.push(Plan { chunk: c, kb: 0 });
+                }
+            }
+            // price the plan: target verify rows plus draft catch-up +
+            // proposal rows, both drawn from the one shared budget
+            let fits = match self.engine.pool() {
+                None => true,
+                Some(pool) => {
+                    let mut total = 0usize;
+                    for (a, p) in self.active.iter().zip(&plans) {
+                        total += pool
+                            .bytes_for_rows(a.kv.len(), p.chunk + p.kb);
+                        if p.kb > 0 {
+                            let dlen = a
+                                .draft_kv
+                                .as_ref()
+                                .map(|d| d.len())
+                                .unwrap_or(0);
+                            let dnew = a.prefix_len() - dlen + p.kb - 1;
+                            total +=
+                                pool.draft_bytes_for_rows(dlen, dnew);
+                        }
+                    }
+                    total <= pool.free_bytes()
+                }
+            };
+            if fits {
+                break plans;
+            }
+            // draft pages evict first: degrade the youngest sequence
+            // still speculating (or still holding a draft cache) to
+            // plain decode — losing a draft cache costs catch-up
+            // compute, never tokens — before any sequence eviction
+            if let Some(i) = (0..kcap.len()).rev().find(|&i| {
+                kcap[i] > 0 || self.active[i].draft_kv.is_some()
+            }) {
+                kcap[i] = 0;
+                self.active[i].draft_kv = None;
+                continue;
+            }
+            // every window is already plain decode: same shortfall
+            // handling as the base step
+            ensure!(
+                self.active.len() > 1,
+                "scheduler blocked: the KV pool cannot fit the last live \
+                 sequence's next step — its pages are held outside this \
+                 scheduler (free them or raise the budget)"
+            );
+            let vi = self.pick_victim();
+            kcap.remove(vi);
+            let mut victim = self.active.remove(vi);
+            victim.kv.reset();
+            victim.draft_kv = None;
+            self.preempted.push_front(victim);
+            self.preemptions += 1;
+        };
+
+        // --- draft phase: one ragged catch-up call over every token
+        // the draft caches have not seen, then single-token steps
+        // until each window is full. Proposals are greedy argmax —
+        // seed-free, so they cannot perturb any request's RNG.
+        let mut drafts: Vec<Vec<i32>> =
+            vec![Vec::new(); self.active.len()];
+        if plans.iter().any(|p| p.kb > 0) {
+            let pool = self.engine.pool().cloned();
+            let draft_model =
+                self.spec.as_ref().expect("spec mode").draft.model().clone();
+            let mut cur_gi: Vec<usize> = Vec::new();
+            let mut cur_kv: Vec<SeqKv> = Vec::new();
+            let mut tokens = Vec::new();
+            let mut lens = Vec::new();
+            for (i, p) in plans.iter().enumerate() {
+                if p.kb == 0 {
+                    continue;
+                }
+                let a = &mut self.active[i];
+                let dkv = match a.draft_kv.take() {
+                    Some(d) => d,
+                    None => match &pool {
+                        Some(pl) => pl.draft_seq()?,
+                        None => draft_model.new_kv(),
+                    },
+                };
+                for pos in dkv.len()..a.prefix_len() {
+                    tokens.push(a.prefix_at(pos));
+                }
+                lens.push(a.prefix_len() - dkv.len());
+                cur_gi.push(i);
+                cur_kv.push(dkv);
+            }
+            let draft = &self.spec.as_ref().expect("spec mode").draft;
+            let mut dl =
+                match draft.step_ragged(&tokens, &lens, &mut cur_kv) {
+                    Ok(l) => l,
+                    Err(e) => {
+                        // as in the base step: a failed forward may
+                        // leave partial rows — drop in-flight state
+                        self.active.clear();
+                        return Err(e);
+                    }
+                };
+            loop {
+                let mut keep_gi = Vec::new();
+                let mut keep_kv = Vec::new();
+                let mut toks = Vec::new();
+                for (r, (gi, kv)) in
+                    cur_gi.drain(..).zip(cur_kv.drain(..)).enumerate()
+                {
+                    let d = argmax(&dl[r * vocab..(r + 1) * vocab]);
+                    drafts[gi].push(d);
+                    if drafts[gi].len() < plans[gi].kb {
+                        toks.push(d);
+                        keep_gi.push(gi);
+                        keep_kv.push(kv);
+                    } else {
+                        self.active[gi].draft_kv = Some(kv);
+                    }
+                }
+                if keep_gi.is_empty() {
+                    break;
+                }
+                dl = match draft.step(&toks, &mut keep_kv) {
+                    Ok(l) => l,
+                    Err(e) => {
+                        self.active.clear();
+                        return Err(e);
+                    }
+                };
+                cur_gi = keep_gi;
+                cur_kv = keep_kv;
+            }
+        }
+
+        // --- one target ragged spine call verifies everything:
+        // prefill chunks feed as usual; each decode window feeds its
+        // pending token plus all proposals. last_only = false returns
+        // every fed row's logits — each window row is bit-identical
+        // to the step-by-step logits at that position (the multi-token
+        // append contract), which is what makes replay acceptance an
+        // identity on token streams.
+        let mut tokens = Vec::new();
+        let mut lens = Vec::new();
+        let mut in_batch = Vec::with_capacity(self.active.len());
+        for (i, (a, p)) in self.active.iter().zip(&plans).enumerate() {
+            in_batch.push(p.chunk > 0);
+            if p.chunk == 0 {
+                continue;
+            }
+            let have = a.kv.len();
+            if p.kb == 0 {
+                for pos in have..have + p.chunk {
+                    tokens.push(a.prefix_at(pos));
+                }
+                lens.push(p.chunk);
+            } else {
+                debug_assert_eq!(drafts[i].len(), p.kb);
+                tokens.push(a.prefix_at(a.prefix_len() - 1));
+                tokens.extend_from_slice(&drafts[i]);
+                lens.push(1 + p.kb);
+            }
+        }
+        let mut kvs: Vec<SeqKv> = self
+            .active
+            .iter_mut()
+            .zip(&in_batch)
+            .filter(|(_, &ib)| ib)
+            .map(|(a, _)| std::mem::take(&mut a.kv))
+            .collect();
+        let appended = tokens.len();
+        let logits = match self
+            .engine
+            .model()
+            .forward_ragged(&tokens, &lens, &mut kvs, false)
+        {
+            Ok(logits) => {
+                let holders = self
+                    .active
+                    .iter_mut()
+                    .zip(&in_batch)
+                    .filter(|(_, &ib)| ib)
+                    .map(|(a, _)| a);
+                for (a, kv) in holders.zip(kvs) {
+                    a.kv = kv;
+                }
+                logits
+            }
+            Err(e) => {
+                self.active.clear();
+                return Err(e);
+            }
+        };
+        let now = Instant::now();
+        self.peak_kv_bytes =
+            self.peak_kv_bytes.max(self.kv_resident_bytes());
+
+        // --- replay acceptance + retire, mirroring the base step's
+        // emission mechanics (out/emitted/sink ordering, hang-up
+        // cancellation, finish precedence eos > max_tokens > context)
+        let mut round_proposed = 0u64;
+        let mut round_accepted = 0u64;
+        let mut i = 0usize; // active index (shifts on removal)
+        let mut row = 0usize; // logits row offset
+        let mut bpos = 0usize; // ragged batch position
+        for (pi, ib) in in_batch.iter().enumerate() {
+            if !*ib {
+                i += 1;
+                continue;
+            }
+            let span = lens[bpos];
+            bpos += 1;
+            let rows = &logits[row * vocab..(row + span) * vocab];
+            row += span;
+            let p = plans[pi];
+            let a = &mut self.active[i];
+            if a.kv.len() < a.prefix_len() {
+                // chunked prefill still in flight: rows consumed,
+                // nothing to sample yet
+                i += 1;
+                continue;
+            }
+            // prefix length before this step's emissions
+            let base_len = a.prefix_len();
+            // emission rows: the window's kb + 1 tail rows (for a
+            // completing prefill chunk, exactly its last row)
+            let erows = &rows[(span - 1 - p.kb) * vocab..];
+            let window = &drafts[pi][..p.kb];
+            round_proposed += p.kb as u64;
+            let max_emit = (a.req.max_new_tokens - a.out.len())
+                .min(seq_cap + 1 - base_len);
+            let (emitted, accepted) = accept_window(
+                &mut a.sampler,
+                erows,
+                vocab,
+                window,
+                a.req.eos,
+                max_emit,
+            );
+            round_accepted += accepted as u64;
+            debug_assert!(!emitted.is_empty());
+            let mut hung_up = false;
+            for &tok in &emitted {
+                a.out.push(tok);
+                a.emitted.push(now);
+                hung_up = a.sink.as_ref().is_some_and(|s| {
+                    s.send(StreamEvent::Token(tok)).is_err()
+                });
+                if hung_up {
+                    break;
+                }
+            }
+            if hung_up {
+                // receiver dropped (client disconnect): cancel
+                // mid-flight, pages back to the pool, no result
+                let mut dead = self.active.remove(i);
+                dead.kv.reset();
+                dead.draft_kv = None;
+                self.cancelled += 1;
+                continue;
+            }
+            let a = &mut self.active[i];
+            let last = *emitted.last().expect("window emits >= 1");
+            let finish = if a.req.eos == Some(last) {
+                Some(FinishReason::Eos)
+            } else if a.out.len() >= a.req.max_new_tokens {
+                Some(FinishReason::MaxTokens)
+            } else if base_len - 1 + emitted.len() >= seq_cap {
+                // the last emitted token has no position left to occupy
+                Some(FinishReason::ContextFull)
+            } else {
+                None
+            };
+            match finish {
+                Some(f) => {
+                    let mut done = self.active.remove(i);
+                    done.draft_kv = None;
+                    let sink = done.sink.take();
+                    let result = finalize(done, f);
+                    match sink {
+                        Some(s) => {
+                            let _ = s.send(StreamEvent::Done(result));
+                        }
+                        None => self.finished.push(result),
+                    }
+                }
+                None => {
+                    // roll rejected window rows off both caches: the
+                    // valid cached prefix is everything but the new
+                    // pending token
+                    let keep = a.prefix_len() - 1;
+                    let trunc = a.kv.truncate(keep).and_then(|_| {
+                        match a.draft_kv.as_mut() {
+                            Some(d) => d.truncate(keep),
+                            None => Ok(()),
+                        }
+                    });
+                    if let Err(e) = trunc {
+                        self.active.clear();
+                        return Err(e);
+                    }
+                    i += 1;
+                }
+            }
+        }
+        let spec = self.spec.as_mut().expect("spec mode");
+        spec.proposed += round_proposed;
+        spec.accepted += round_accepted;
         Ok(appended)
     }
 
@@ -976,6 +1456,141 @@ mod tests {
         assert_eq!(results.len(), 1, "only the survivor finishes");
         assert_eq!(results[0].id, 2);
         assert!(s.is_idle());
+    }
+
+    fn spec_pair() -> (DecodeEngine, Arc<PackedModel>) {
+        let dims = ModelDims {
+            vocab: 32,
+            d_model: 32,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 64,
+            seq_len: 16,
+        };
+        let params = Params::init_surrogate(&dims, 33);
+        let cache = OperandCache::new(32);
+        let target = Arc::new(
+            PackedModel::build(
+                &dims,
+                &params,
+                &PerLayerQConfig::uniform(QConfig::baseline()),
+                8,
+                &cache,
+            )
+            .unwrap(),
+        );
+        let draft = Arc::new(
+            PackedModel::build(
+                &dims,
+                &params,
+                &PerLayerQConfig::uniform(QConfig::fp4("ue5m3").unwrap()),
+                8,
+                &cache,
+            )
+            .unwrap(),
+        );
+        (DecodeEngine::new(target).unwrap(), draft)
+    }
+
+    fn spec_mix() -> Vec<DecodeRequest> {
+        (0..4)
+            .map(|id| {
+                let prompt: Vec<i32> =
+                    (0..4).map(|t| ((3 * t + id) % 32) as i32).collect();
+                DecodeRequest {
+                    id,
+                    prompt,
+                    max_new_tokens: 6,
+                    eos: None,
+                    sampling: if id % 2 == 0 {
+                        Sampling::Greedy
+                    } else {
+                        Sampling::Temperature { temp: 0.8, seed: id }
+                    },
+                    priority: Priority::Interactive,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn speculative_streams_match_the_base_scheduler() {
+        let (base_engine, _) = spec_pair();
+        let mut base =
+            Scheduler::new(base_engine, SchedulerConfig::default());
+        for r in spec_mix() {
+            base.submit(r).unwrap();
+        }
+        let want: Vec<_> = base
+            .run()
+            .unwrap()
+            .into_iter()
+            .map(|r| (r.id, r.tokens, r.finish))
+            .collect();
+        for k in [1usize, 2, 4] {
+            let (engine, draft) = spec_pair();
+            let mut s = Scheduler::new_speculative(
+                engine,
+                draft,
+                k,
+                SchedulerConfig::default(),
+            )
+            .unwrap();
+            for r in spec_mix() {
+                s.submit(r).unwrap();
+            }
+            let got: Vec<_> = s
+                .run()
+                .unwrap()
+                .into_iter()
+                .map(|r| (r.id, r.tokens, r.finish))
+                .collect();
+            assert_eq!(got, want, "k={k}");
+            let (proposed, accepted) = s.spec_stats().unwrap();
+            assert!(proposed > 0, "k={k}: speculation never engaged");
+            assert!(accepted <= proposed);
+        }
+    }
+
+    #[test]
+    fn speculative_scheduler_validates_its_models() {
+        let (engine, draft) = spec_pair();
+        assert!(Scheduler::new_speculative(
+            engine,
+            draft.clone(),
+            0,
+            SchedulerConfig::default()
+        )
+        .is_err());
+        // mismatched shapes refused
+        let dims = ModelDims {
+            vocab: 32,
+            d_model: 32,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 64,
+            seq_len: 8,
+        };
+        let params = Params::init_surrogate(&dims, 33);
+        let cache = OperandCache::new(32);
+        let small = Arc::new(
+            PackedModel::build(
+                &dims,
+                &params,
+                &PerLayerQConfig::uniform(QConfig::baseline()),
+                8,
+                &cache,
+            )
+            .unwrap(),
+        );
+        let (engine, _) = spec_pair();
+        assert!(Scheduler::new_speculative(
+            engine,
+            small,
+            2,
+            SchedulerConfig::default()
+        )
+        .is_err());
     }
 
     #[test]

@@ -1,0 +1,496 @@
+//! Cross-precision speculative decoding: a cheap draft config proposes,
+//! the target config verifies — with **bit-identical output streams**.
+//!
+//! The repo holds several bit-exact execution paths for one weight
+//! source (packed FP4, packed FP8, Exact bf16 — DESIGN.md §§6–8).
+//! [`SpecDecodeEngine`] exploits that: a *draft* [`PackedModel`]
+//! (default FP4/UE5M3 — the cheapest packed path) proposes `k` tokens
+//! through the ordinary m == 1 decode fast path, then the *target*
+//! model verifies all `k + 1` positions in **one** ragged
+//! [`PackedModel::forward_ragged`] call (the PR-4 multi-token append:
+//! row `j` of a ragged feed is bit-identical to the last row of a
+//! full-prefix forward over the prefix up to `j`, independent of the
+//! tokens fed after it — causal attention never looks right).
+//!
+//! # Why the emitted stream is bit-identical to non-speculative decode
+//!
+//! Acceptance is **replay acceptance**: at every verified position the
+//! request's own [`Sampler`] — greedy argmax, or the seeded-Pcg64
+//! temperature sampler — picks a token from the *target* logits row,
+//! exactly as non-speculative decode would have (same logits bits by
+//! the append contract above, same RNG state because one uniform is
+//! drawn per emitted token in emission order, never for tokens that
+//! are not emitted). The draft proposal is then compared to that pick:
+//! a match means the window continues (the draft predicted the
+//! sampler), a mismatch emits the sampler's pick and discards the rest
+//! of the window. Every emitted token is therefore *the* token
+//! non-speculative decode emits, bit for bit, for every speculation
+//! depth `k`, every draft config, and every thread/shard count — the
+//! draft can only change *how fast* tokens appear, never *which*
+//! tokens. `rust/tests/spec.rs` pins this against the cache-free
+//! oracle ([`super::decode::generate_reforward`]).
+//!
+//! Rejected draft rows leave garbage K/V rows in both caches; the
+//! round rolls them back with [`SeqKv::truncate`] (paged caches free
+//! whole pages and privatize a shared tail — [`super::kvpool`] docs).
+//!
+//! # Acceptance rate as a paper lens
+//!
+//! The draft proposes its argmax. For a greedy target the acceptance
+//! rate is exactly the probability the draft config's argmax equals
+//! the target's — a direct, in-vivo measure of how far the draft
+//! quantization bends the output distribution. Sweeping the draft over
+//! the paper's {FP4, FP8} × {UE4M3, UE5M3} × block-size grid
+//! (`microscale spec-bench`) turns the block-size anomaly into an
+//! acceptance-rate curve: "finer is better" predicts acceptance rising
+//! as blocks shrink; the UE4M3 inversion predicts collapse below the
+//! threshold.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::ensure;
+
+use super::decode::{DecodeEngine, Sampler, Sampling};
+use super::kvpool::KvPool;
+use super::packed_model::{PackedModel, SeqKv};
+
+/// Greedy argmax with the [`Sampler`] tie-break (lowest index wins) —
+/// the draft's proposal rule. Deterministic and seed-free, so draft
+/// proposals are invariant to everything the decode contract is.
+pub(crate) fn argmax(row: &[f32]) -> i32 {
+    let mut best = 0usize;
+    for (i, &l) in row.iter().enumerate() {
+        if l > row[best] {
+            best = i;
+        }
+    }
+    best as i32
+}
+
+/// Replay-acceptance over one verify window (module docs): sample each
+/// target logits row with the request's own sampler, in order, stopping
+/// at the first draft mismatch (the sampler's pick is emitted in its
+/// place), on `eos`, or after `max_emit` tokens. `logits` holds
+/// `drafts.len() + 1` rows of `vocab`; returns the emitted tokens and
+/// how many draft proposals were accepted. The sampler draws exactly
+/// one uniform per emitted token — never for unemitted rows — so its
+/// RNG state stays in lockstep with non-speculative decode.
+pub(crate) fn accept_window(
+    sampler: &mut Sampler,
+    logits: &[f32],
+    vocab: usize,
+    drafts: &[i32],
+    eos: Option<i32>,
+    max_emit: usize,
+) -> (Vec<i32>, usize) {
+    debug_assert_eq!(logits.len(), (drafts.len() + 1) * vocab);
+    let mut emitted = Vec::with_capacity(drafts.len() + 1);
+    let mut accepted = 0usize;
+    for j in 0..=drafts.len() {
+        if emitted.len() >= max_emit {
+            break;
+        }
+        let tok = sampler.pick(&logits[j * vocab..(j + 1) * vocab]);
+        emitted.push(tok);
+        if eos == Some(tok) {
+            break;
+        }
+        if j < drafts.len() && tok == drafts[j] {
+            accepted += 1;
+        } else {
+            break;
+        }
+    }
+    (emitted, accepted)
+}
+
+/// One speculative generation's result and counters.
+#[derive(Debug, Clone)]
+pub struct SpecOutput {
+    /// The emitted stream — bit-identical to non-speculative decode.
+    pub tokens: Vec<i32>,
+    /// Draft tokens proposed across all rounds.
+    pub proposed: usize,
+    /// Draft tokens accepted (emitted because the sampler agreed).
+    pub accepted: usize,
+    /// Speculation rounds run (one target verify call each).
+    pub rounds: usize,
+    /// Wall time inside draft forwards (the speculation overhead).
+    pub draft_time: Duration,
+    /// Wall time inside target forwards (prefill + verify calls).
+    pub verify_time: Duration,
+}
+
+impl SpecOutput {
+    /// Accepted / proposed (1.0 when nothing was proposed).
+    pub fn acceptance(&self) -> f64 {
+        if self.proposed == 0 {
+            1.0
+        } else {
+            self.accepted as f64 / self.proposed as f64
+        }
+    }
+}
+
+/// Speculative decoding over two [`PackedModel`]s built from one weight
+/// source (module docs): `draft` proposes up to `k` greedy tokens per
+/// round, `target` verifies the whole window in one ragged call, and
+/// replay acceptance keeps the emitted stream bit-identical to
+/// non-speculative decode under the target model.
+pub struct SpecDecodeEngine {
+    target: DecodeEngine,
+    draft: DecodeEngine,
+    k: usize,
+}
+
+impl SpecDecodeEngine {
+    /// Wrap a target/draft model pair with inline (unbounded) caches.
+    /// Both models must share one shape — they are the same weights
+    /// under different quant configs — and both must satisfy the
+    /// KV-cached decode contract ([`DecodeEngine::new`]'s per-tensor
+    /// activation-scaling refusal applies to each).
+    pub fn new(
+        target: Arc<PackedModel>,
+        draft: Arc<PackedModel>,
+        k: usize,
+    ) -> crate::Result<SpecDecodeEngine> {
+        Self::build(target, draft, k, None)
+    }
+
+    /// Like [`SpecDecodeEngine::new`], but both caches allocate from
+    /// `pool` — the target sequence under the pool's primary codec
+    /// bank, the draft sequence under its draft bank
+    /// ([`KvPool::build_spec`]). The budget must fit one full-context
+    /// sequence of each so a lone generation can always finish.
+    pub fn with_pool(
+        target: Arc<PackedModel>,
+        draft: Arc<PackedModel>,
+        k: usize,
+        pool: Arc<KvPool>,
+    ) -> crate::Result<SpecDecodeEngine> {
+        Self::build(target, draft, k, Some(pool))
+    }
+
+    fn build(
+        target: Arc<PackedModel>,
+        draft: Arc<PackedModel>,
+        k: usize,
+        pool: Option<Arc<KvPool>>,
+    ) -> crate::Result<SpecDecodeEngine> {
+        ensure!(k >= 1, "speculation depth k must be >= 1 (got {k})");
+        ensure!(
+            target.dims() == draft.dims(),
+            "draft and target models must share one shape: {:?} vs {:?}",
+            target.dims(),
+            draft.dims()
+        );
+        let seq_len = target.dims().seq_len;
+        if let Some(p) = &pool {
+            ensure!(
+                p.has_draft_bank(),
+                "speculative decoding over a pool needs a draft codec \
+                 bank (build it with KvPool::build_spec)"
+            );
+            let worst = p.bytes_for_positions(seq_len)
+                + p.draft_bytes_for_rows(0, seq_len);
+            ensure!(
+                worst <= p.budget_bytes(),
+                "KV pool budget {} cannot hold one full-context target + \
+                 draft pair ({worst} bytes) — speculation could deadlock",
+                p.budget_bytes()
+            );
+        }
+        // the draft engine stays pool-less: its caches come from the
+        // shared pool's draft bank (new_draft_kv), not DecodeEngine
+        let draft = DecodeEngine::new(draft)?;
+        let target = match pool {
+            Some(p) => DecodeEngine::with_pool(target, p)?,
+            None => DecodeEngine::new(target)?,
+        };
+        Ok(SpecDecodeEngine { target, draft, k })
+    }
+
+    /// The verify-side engine (its pool, model, and caches).
+    pub fn target(&self) -> &DecodeEngine {
+        &self.target
+    }
+
+    /// The draft-side model.
+    pub fn draft_model(&self) -> &Arc<PackedModel> {
+        self.draft.model()
+    }
+
+    /// Speculation depth (draft proposals per round).
+    pub fn depth(&self) -> usize {
+        self.k
+    }
+
+    /// A draft cache: the pool's draft bank when pooled, inline
+    /// otherwise.
+    pub fn new_draft_kv(&self) -> crate::Result<SeqKv> {
+        match self.target.pool() {
+            Some(p) => p.draft_seq(),
+            None => Ok(self.draft.model().new_kv()),
+        }
+    }
+
+    /// Generate up to `max_new` tokens speculatively. The returned
+    /// stream is bit-identical to
+    /// [`super::decode::generate_reforward`] /
+    /// single-sequence scheduler decode under the target model for the
+    /// same `(prompt, eos, sampling)` — speculation changes throughput,
+    /// never tokens (module docs).
+    pub fn generate(
+        &self,
+        prompt: &[i32],
+        max_new: usize,
+        eos: Option<i32>,
+        sampling: &Sampling,
+    ) -> crate::Result<SpecOutput> {
+        ensure!(!prompt.is_empty(), "empty prompt");
+        let dims = *self.target.model().dims();
+        ensure!(
+            prompt.len() <= dims.seq_len,
+            "prompt ({} tokens) exceeds the context window ({})",
+            prompt.len(),
+            dims.seq_len
+        );
+        let vocab = dims.vocab;
+        let mut sampler = Sampler::new(sampling)?;
+        let mut tkv = self.target.new_kv();
+        let mut dkv = self.new_draft_kv()?;
+        // `prefix` is prompt ++ emitted; the target cache always holds
+        // its first `prefix.len() - 1` rows (the last token is pending
+        // — its row is produced by the next verify call).
+        let mut prefix = prompt.to_vec();
+        let mut out = Vec::with_capacity(max_new);
+        let mut proposed = 0usize;
+        let mut accepted_total = 0usize;
+        let mut rounds = 0usize;
+        let mut draft_time = Duration::ZERO;
+        let mut verify_time = Duration::ZERO;
+        if prefix.len() > 1 {
+            let t0 = Instant::now();
+            self.target.prefill(&prefix[..prefix.len() - 1], &mut tkv)?;
+            verify_time += t0.elapsed();
+        }
+        while out.len() < max_new {
+            rounds += 1;
+            // a verify window needs k_r + 1 context rows and can emit
+            // at most k_r + 1 tokens; cap it by the generation budget
+            // and the remaining context so no row is ever wasted
+            let remaining_new = max_new - out.len();
+            let ctx_room = dims.seq_len - tkv.len();
+            let k_r = self
+                .k
+                .min(remaining_new.saturating_sub(1))
+                .min(ctx_room.saturating_sub(1));
+            let mut drafts = Vec::with_capacity(k_r);
+            if k_r > 0 {
+                let t0 = Instant::now();
+                // catch-up feed: everything the draft cache has not
+                // seen (≥ 1 token — it ends with the pending token);
+                // after a fresh start this is the whole prompt
+                let mut dl =
+                    self.draft.prefill(&prefix[dkv.len()..], &mut dkv)?;
+                loop {
+                    let d = argmax(&dl);
+                    drafts.push(d);
+                    if drafts.len() == k_r {
+                        break;
+                    }
+                    dl = self
+                        .draft
+                        .step(&[d], std::slice::from_mut(&mut dkv))?;
+                }
+                draft_time += t0.elapsed();
+            }
+            proposed += k_r;
+            // one ragged spine call verifies every window row: feed
+            // the pending token plus all k_r proposals, read back all
+            // k_r + 1 new rows' logits
+            let mut feed = Vec::with_capacity(k_r + 1);
+            feed.push(*prefix.last().expect("prefix is never empty"));
+            feed.extend_from_slice(&drafts);
+            let t0 = Instant::now();
+            let logits = self.target.model().forward_ragged(
+                &feed,
+                &[feed.len()],
+                std::slice::from_mut(&mut tkv),
+                false,
+            )?;
+            verify_time += t0.elapsed();
+            let max_emit = remaining_new.min(ctx_room);
+            let (emitted, accepted) = accept_window(
+                &mut sampler,
+                &logits,
+                vocab,
+                &drafts,
+                eos,
+                max_emit,
+            );
+            accepted_total += accepted;
+            let hit_eos = emitted.last().copied().is_some_and(|t| {
+                eos == Some(t)
+            });
+            out.extend_from_slice(&emitted);
+            prefix.extend_from_slice(&emitted);
+            if hit_eos || out.len() >= max_new || prefix.len() > dims.seq_len
+            {
+                break;
+            }
+            // roll rejected rows back off both caches: the valid
+            // cached prefix is everything but the pending token
+            let keep = prefix.len() - 1;
+            tkv.truncate(keep)?;
+            dkv.truncate(keep)?;
+        }
+        Ok(SpecOutput {
+            tokens: out,
+            proposed,
+            accepted: accepted_total,
+            rounds,
+            draft_time,
+            verify_time,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::Params;
+    use crate::runtime::artifacts::ModelDims;
+    use crate::runtime::qconfig::{PerLayerQConfig, QConfig};
+    use crate::serve::cache::OperandCache;
+    use crate::serve::decode::generate_reforward;
+
+    fn tiny() -> (ModelDims, Params) {
+        let dims = ModelDims {
+            vocab: 48,
+            d_model: 32,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 64,
+            seq_len: 40,
+        };
+        let params = Params::init_surrogate(&dims, 77);
+        (dims, params)
+    }
+
+    fn model(
+        dims: &ModelDims,
+        params: &Params,
+        cfg: QConfig,
+        cache: &OperandCache,
+    ) -> Arc<PackedModel> {
+        Arc::new(
+            PackedModel::build(
+                dims,
+                params,
+                &PerLayerQConfig::uniform(cfg),
+                8,
+                cache,
+            )
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn accept_window_matches_and_stops_exactly() {
+        let mut s = Sampler::new(&Sampling::Greedy).unwrap();
+        // rows argmax: 1, 0, 2 — drafts [1, 0]: both accepted + bonus
+        let logits = vec![
+            0.0, 9.0, 0.0, //
+            9.0, 0.0, 0.0, //
+            0.0, 0.0, 9.0, //
+        ];
+        let (em, acc) =
+            accept_window(&mut s, &logits, 3, &[1, 0], None, 10);
+        assert_eq!(em, vec![1, 0, 2]);
+        assert_eq!(acc, 2);
+        // first mismatch replaces and stops
+        let (em, acc) =
+            accept_window(&mut s, &logits, 3, &[2, 0], None, 10);
+        assert_eq!(em, vec![1]);
+        assert_eq!(acc, 0);
+        // eos stops emission mid-window even on a match
+        let (em, acc) =
+            accept_window(&mut s, &logits, 3, &[1, 0], Some(1), 10);
+        assert_eq!(em, vec![1]);
+        assert_eq!(acc, 0, "eos token is emitted but ends the stream");
+        // max_emit caps the window (and the RNG draws with it)
+        let (em, acc) =
+            accept_window(&mut s, &logits, 3, &[1, 0], None, 2);
+        assert_eq!(em, vec![1, 0]);
+        assert_eq!(acc, 2);
+    }
+
+    #[test]
+    fn spec_stream_equals_the_reforward_oracle() {
+        let (dims, params) = tiny();
+        let cache = OperandCache::new(64);
+        let target =
+            model(&dims, &params, QConfig::baseline(), &cache);
+        let draft =
+            model(&dims, &params, QConfig::fp4("ue5m3").unwrap(), &cache);
+        let prompt: Vec<i32> = vec![5, 11, 2, 33, 7];
+        for k in [1usize, 3, 6] {
+            let eng =
+                SpecDecodeEngine::new(target.clone(), draft.clone(), k)
+                    .unwrap();
+            for sampling in [
+                Sampling::Greedy,
+                Sampling::Temperature { temp: 0.9, seed: 0xC0FFEE },
+            ] {
+                let want = generate_reforward(
+                    &target, &prompt, 16, None, &sampling,
+                )
+                .unwrap();
+                let got =
+                    eng.generate(&prompt, 16, None, &sampling).unwrap();
+                assert_eq!(got.tokens, want, "k={k} {sampling:?}");
+                assert!(got.proposed >= got.accepted);
+                assert!(got.rounds >= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn draft_equals_target_accepts_every_greedy_proposal() {
+        let (dims, params) = tiny();
+        let cache = OperandCache::new(64);
+        let target =
+            model(&dims, &params, QConfig::fp4("ue5m3").unwrap(), &cache);
+        let eng =
+            SpecDecodeEngine::new(target.clone(), target.clone(), 4)
+                .unwrap();
+        let out = eng
+            .generate(&[3, 1, 4, 1, 5], 20, None, &Sampling::Greedy)
+            .unwrap();
+        assert_eq!(out.tokens.len(), 20);
+        assert_eq!(
+            out.accepted, out.proposed,
+            "identical configs must agree on every greedy proposal"
+        );
+        assert!((out.acceptance() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn engine_validates_shape_and_depth() {
+        let (dims, params) = tiny();
+        let cache = OperandCache::new(64);
+        let target = model(&dims, &params, QConfig::baseline(), &cache);
+        let mut other = dims;
+        other.seq_len = 8;
+        let small_params = Params::init_surrogate(&other, 77);
+        let small =
+            model(&other, &small_params, QConfig::baseline(), &cache);
+        assert!(SpecDecodeEngine::new(target.clone(), small, 2).is_err());
+        assert!(
+            SpecDecodeEngine::new(target.clone(), target.clone(), 0)
+                .is_err()
+        );
+    }
+}

@@ -1,0 +1,402 @@
+//! The `microscale spec-bench` driver: cross-precision speculative
+//! decoding across the paper's format axis. A full-precision
+//! (`bf16-exact`) target verifies windows proposed by a microscaled
+//! draft, sweeping the draft codec over {FP4, FP8} × {UE4M3, UE5M3} ×
+//! block size {4, 8, 16, 32} — the acceptance rate per cell is a
+//! *behavioural* fidelity lens on the same grid the perplexity
+//! experiments score: the fraction of greedy draft proposals the exact
+//! target agrees with, measured on real decoding traffic instead of a
+//! held-out loss.
+//!
+//! Per cell the driver (1) builds the draft [`PackedModel`] through
+//! the shared operand cache, (2) gates on **stream invariance** — the
+//! speculative stream (greedy *and* seeded temperature) must be
+//! bit-identical to the cache-free [`generate_reforward`] stream of
+//! the target model; nothing is timed otherwise — then (3) times
+//! greedy speculative generation, recording acceptance, tok/s, the
+//! draft-overhead fraction (draft wall time over draft + verify), and
+//! the speedup against a non-speculative KV-cached baseline on the
+//! same target. Greedy timing keeps every reported acceptance number
+//! host-independent: it is a pure function of the weights and the
+//! draft codec.
+//!
+//! Results land in machine-readable **`BENCH_spec.json`** (field map
+//! in EXPERIMENTS.md §Perf). The acceptance line checks the best cell
+//! at ≥ 1.3× the non-speculative baseline (full shapes only — smoke
+//! runs record `pass: null`).
+//!
+//! Shared by the CLI subcommand and `cargo bench --bench spec_bench`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Context;
+
+use super::cache::operand_cache;
+use super::decode::{generate_reforward, DecodeEngine, Sampler, Sampling};
+use super::decode_bench::bench_dims;
+use super::packed_model::PackedModel;
+use super::spec::SpecDecodeEngine;
+use crate::dist::Pcg64;
+use crate::model::weights::Params;
+use crate::runtime::qconfig::{PerLayerQConfig, QConfig};
+use crate::util::json::{self, Json};
+
+/// Driver options (CLI flags map onto these).
+#[derive(Debug, Clone)]
+pub struct SpecBenchOpts {
+    /// CI-sized run: tiny model, shrunken grid, `pass: null`.
+    pub smoke: bool,
+    /// Report path (`BENCH_spec.json` in the working directory).
+    pub out: PathBuf,
+    /// Speculation depth (draft proposals per round).
+    pub k: usize,
+    /// Prompt tokens per request.
+    pub prompt_len: usize,
+    /// Generation budget per request.
+    pub max_new: usize,
+    /// Timed requests per grid cell.
+    pub requests: usize,
+    /// Draft-codec block sizes to sweep.
+    pub block_sizes: Vec<usize>,
+}
+
+impl SpecBenchOpts {
+    pub fn new(smoke: bool) -> SpecBenchOpts {
+        SpecBenchOpts {
+            smoke,
+            out: PathBuf::from("BENCH_spec.json"),
+            k: 4,
+            prompt_len: if smoke { 4 } else { 32 },
+            max_new: if smoke { 8 } else { 32 },
+            requests: if smoke { 2 } else { 6 },
+            block_sizes: if smoke {
+                vec![8, 16]
+            } else {
+                vec![4, 8, 16, 32]
+            },
+        }
+    }
+}
+
+/// The draft-codec element × scale axis (the paper's format matrix).
+fn draft_formats() -> crate::Result<Vec<(String, QConfig)>> {
+    let mut out = Vec::new();
+    for elem in ["fp4_e2m1", "fp8_e4m3"] {
+        for scale in ["ue4m3", "ue5m3"] {
+            let short = if elem == "fp4_e2m1" { "fp4" } else { "fp8" };
+            out.push((
+                format!("{short}_{scale}"),
+                QConfig::named(elem, scale, false)?,
+            ));
+        }
+    }
+    Ok(out)
+}
+
+fn prompt(rng: &mut Pcg64, vocab: usize, len: usize) -> Vec<i32> {
+    (0..len).map(|_| (rng.next_u64() % vocab as u64) as i32).collect()
+}
+
+/// Non-speculative KV-cached generation on `engine` — the baseline a
+/// speculative run must beat. Same stream as the speculative path by
+/// construction (that is the whole invariance contract).
+fn baseline_generate(
+    engine: &DecodeEngine,
+    prompt: &[i32],
+    max_new: usize,
+    sampling: &Sampling,
+) -> crate::Result<Vec<i32>> {
+    let mut sampler = Sampler::new(sampling)?;
+    let mut kv = engine.new_kv();
+    let mut logits = engine.prefill(prompt, &mut kv)?;
+    let mut out = Vec::with_capacity(max_new);
+    loop {
+        let tok = sampler.pick(&logits);
+        out.push(tok);
+        if out.len() >= max_new {
+            return Ok(out);
+        }
+        logits = engine.step(&[tok], std::slice::from_mut(&mut kv))?;
+    }
+}
+
+/// Stream-invariance gate for one cell: speculative output must equal
+/// the cache-free re-forward stream of the *target* model, greedy and
+/// seeded temperature both. Run before any timing.
+fn invariance_gate(
+    label: &str,
+    engine: &SpecDecodeEngine,
+    target: &Arc<PackedModel>,
+    prompt: &[i32],
+    max_new: usize,
+) -> crate::Result<()> {
+    let policies = [
+        Sampling::Greedy,
+        Sampling::Temperature { temp: 0.9, seed: 0x5BEC },
+    ];
+    for sampling in &policies {
+        let want = generate_reforward(target, prompt, max_new, None, sampling)?;
+        let got = engine.generate(prompt, max_new, None, sampling)?;
+        anyhow::ensure!(
+            got.tokens == want,
+            "{label}: speculative stream {:?} != re-forward stream {want:?} \
+             under {sampling:?} — refusing to time",
+            got.tokens
+        );
+    }
+    Ok(())
+}
+
+/// Run the bench and write the report; returns the report JSON.
+pub fn run(opts: &SpecBenchOpts) -> crate::Result<Json> {
+    let dims = bench_dims(opts.smoke);
+    anyhow::ensure!(opts.k >= 1, "--k must be at least 1");
+    anyhow::ensure!(
+        opts.prompt_len >= 1
+            && opts.prompt_len + opts.max_new <= dims.seq_len,
+        "prompt {} + max-new {} exceeds seq_len {}",
+        opts.prompt_len,
+        opts.max_new,
+        dims.seq_len
+    );
+    let params = Params::init_surrogate(&dims, 2026);
+    let formats = draft_formats()?;
+    let mut rng = Pcg64::new(0x5BEC);
+
+    println!(
+        "== spec-bench ({}) : {} layers, d_model {}, seq {}, k={}, \
+         prompt {}, {} new tokens/request, exact target ==",
+        if opts.smoke { "smoke" } else { "full" },
+        dims.n_layers,
+        dims.d_model,
+        dims.seq_len,
+        opts.k,
+        opts.prompt_len,
+        opts.max_new,
+    );
+
+    // the verifier: one exact target shared by every cell (the draft
+    // codec is the experiment; the target is the oracle)
+    let target = Arc::new(PackedModel::build(
+        &dims,
+        &params,
+        &PerLayerQConfig::uniform(QConfig::baseline()),
+        16,
+        operand_cache(),
+    )?);
+
+    // non-speculative KV-cached baseline on the same target
+    let base_engine = DecodeEngine::new(target.clone())?;
+    let base_prompts: Vec<Vec<i32>> = (0..opts.requests.max(1))
+        .map(|_| prompt(&mut rng, dims.vocab, opts.prompt_len))
+        .collect();
+    let t0 = Instant::now();
+    let mut base_tokens = 0usize;
+    for p in &base_prompts {
+        base_tokens +=
+            baseline_generate(&base_engine, p, opts.max_new, &Sampling::Greedy)?
+                .len();
+    }
+    let base_secs = t0.elapsed().as_secs_f64();
+    let base_tok_s = base_tokens as f64 / base_secs.max(1e-9);
+    println!(
+        "   non-speculative baseline: {base_tok_s:8.1} tok/s \
+         ({base_tokens} tokens)\n"
+    );
+
+    let mut cell_entries: Vec<(String, Json)> = Vec::new();
+    let mut best: Option<(String, f64, f64)> = None; // (cell, speedup, acc)
+    for (fmt_label, qcfg) in &formats {
+        for &bs in &opts.block_sizes {
+            let label = format!("{fmt_label}_bs{bs}");
+            let draft = Arc::new(PackedModel::build(
+                &dims,
+                &params,
+                &PerLayerQConfig::uniform(*qcfg),
+                bs,
+                operand_cache(),
+            )?);
+            let engine =
+                SpecDecodeEngine::new(target.clone(), draft, opts.k)?;
+            let gate_prompt = prompt(&mut rng, dims.vocab, opts.prompt_len);
+            invariance_gate(
+                &label,
+                &engine,
+                &target,
+                &gate_prompt,
+                opts.max_new.min(8),
+            )?;
+
+            // timed: greedy, so acceptance is a pure function of the
+            // weights and the draft codec (host-independent)
+            let t0 = Instant::now();
+            let mut tokens = 0usize;
+            let (mut proposed, mut accepted, mut rounds) = (0usize, 0, 0);
+            let mut draft_s = 0.0f64;
+            let mut verify_s = 0.0f64;
+            for p in &base_prompts {
+                let got =
+                    engine.generate(p, opts.max_new, None, &Sampling::Greedy)?;
+                tokens += got.tokens.len();
+                proposed += got.proposed;
+                accepted += got.accepted;
+                rounds += got.rounds;
+                draft_s += got.draft_time.as_secs_f64();
+                verify_s += got.verify_time.as_secs_f64();
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            let tok_s = tokens as f64 / secs.max(1e-9);
+            let acc = if proposed == 0 {
+                1.0
+            } else {
+                accepted as f64 / proposed as f64
+            };
+            let overhead = draft_s / (draft_s + verify_s).max(1e-12);
+            let speedup = tok_s / base_tok_s.max(1e-9);
+            if best.as_ref().map(|(_, s, _)| speedup > *s).unwrap_or(true) {
+                best = Some((label.clone(), speedup, acc));
+            }
+            println!(
+                "   {label:<16}: acceptance {acc:5.3}  {tok_s:8.1} tok/s  \
+                 ({speedup:.2}x vs non-spec, draft overhead {:.0}%)",
+                overhead * 100.0
+            );
+            cell_entries.push((
+                label,
+                json::obj(vec![
+                    ("draft_qconfig", json::s(&qcfg.id())),
+                    ("block_size", json::num(bs as f64)),
+                    ("stream_exact", Json::Bool(true)),
+                    ("acceptance", json::num(acc)),
+                    ("proposed", json::num(proposed as f64)),
+                    ("accepted", json::num(accepted as f64)),
+                    ("rounds", json::num(rounds as f64)),
+                    ("tok_per_s", json::num(tok_s)),
+                    ("speedup_vs_nonspec", json::num(speedup)),
+                    ("draft_overhead_frac", json::num(overhead)),
+                ]),
+            ));
+        }
+    }
+
+    let (best_cell, best_speedup, best_acc) =
+        best.expect("grid cannot be empty");
+    let pass = best_speedup >= 1.3;
+    println!(
+        "\n   acceptance target (best cell >= 1.30x non-speculative): {}",
+        if opts.smoke {
+            "n/a (smoke shapes)".to_string()
+        } else if pass {
+            format!("PASS ({best_cell} at {best_speedup:.2}x)")
+        } else {
+            format!(
+                "MISS (best {best_cell} at {best_speedup:.2}x, \
+                 host-dependent)"
+            )
+        }
+    );
+
+    let report = json::obj(vec![
+        ("bench", json::s("spec")),
+        ("smoke", Json::Bool(opts.smoke)),
+        ("simd_kernel", json::s(crate::util::simd::kernel_name())),
+        (
+            "model",
+            json::obj(vec![
+                ("vocab", json::num(dims.vocab as f64)),
+                ("d_model", json::num(dims.d_model as f64)),
+                ("n_heads", json::num(dims.n_heads as f64)),
+                ("n_layers", json::num(dims.n_layers as f64)),
+                ("d_ff", json::num(dims.d_ff as f64)),
+                ("seq_len", json::num(dims.seq_len as f64)),
+            ]),
+        ),
+        ("target_qconfig", json::s(&QConfig::baseline().id())),
+        ("k", json::num(opts.k as f64)),
+        ("prompt_len", json::num(opts.prompt_len as f64)),
+        ("max_new", json::num(opts.max_new as f64)),
+        ("requests", json::num(opts.requests as f64)),
+        ("baseline_tok_per_s", json::num(base_tok_s)),
+        ("cells", json::obj_owned(cell_entries)),
+        (
+            "best",
+            json::obj(vec![
+                ("cell", json::s(&best_cell)),
+                ("speedup_vs_nonspec", json::num(best_speedup)),
+                ("acceptance", json::num(best_acc)),
+            ]),
+        ),
+        ("target_speedup", json::num(1.3)),
+        // the 1.3x target is defined on the full shapes only; smoke
+        // runs record null so trajectory tooling can't misread
+        // tiny-shape ratios as an acceptance verdict
+        (
+            "pass",
+            if opts.smoke { Json::Null } else { Json::Bool(pass) },
+        ),
+    ]);
+    std::fs::write(&opts.out, report.to_string())
+        .with_context(|| format!("writing {}", opts.out.display()))?;
+    println!("   wrote {}", opts.out.display());
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn the_grid_covers_the_paper_format_matrix() {
+        let formats = draft_formats().unwrap();
+        let labels: Vec<&str> =
+            formats.iter().map(|(l, _)| l.as_str()).collect();
+        assert_eq!(
+            labels,
+            ["fp4_ue4m3", "fp4_ue5m3", "fp8_ue4m3", "fp8_ue5m3"]
+        );
+        for (_, q) in &formats {
+            assert!(q.quant_on, "grid cells must actually quantize");
+        }
+        let opts = SpecBenchOpts::new(false);
+        assert_eq!(opts.block_sizes, [4, 8, 16, 32]);
+        assert!(SpecBenchOpts::new(true).block_sizes.len() < 4);
+    }
+
+    #[test]
+    fn baseline_generate_matches_the_reforward_oracle() {
+        use crate::runtime::artifacts::ModelDims;
+        let dims = ModelDims {
+            vocab: 40,
+            d_model: 32,
+            n_heads: 2,
+            n_layers: 2,
+            d_ff: 64,
+            seq_len: 24,
+        };
+        let params = Params::init_surrogate(&dims, 9);
+        let m = Arc::new(
+            PackedModel::build(
+                &dims,
+                &params,
+                &PerLayerQConfig::uniform(QConfig::baseline()),
+                8,
+                operand_cache(),
+            )
+            .unwrap(),
+        );
+        let engine = DecodeEngine::new(m.clone()).unwrap();
+        let p = [3, 17, 5, 9];
+        for sampling in [
+            Sampling::Greedy,
+            Sampling::Temperature { temp: 0.8, seed: 4 },
+        ] {
+            let want =
+                generate_reforward(&m, &p, 6, None, &sampling).unwrap();
+            let got =
+                baseline_generate(&engine, &p, 6, &sampling).unwrap();
+            assert_eq!(got, want, "{sampling:?}");
+        }
+    }
+}

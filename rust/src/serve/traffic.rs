@@ -97,6 +97,11 @@ pub struct TrafficOpts {
     pub tail_max: usize,
     /// Largest generation budget in the mixture (tokens).
     pub max_new_max: usize,
+    /// Interactive-class TTFT p95 limit in ms (`--slo-ttft-p95-ms`).
+    /// `None` leaves the SLO verdict disarmed (`slo_verdict: null`).
+    pub slo_ttft_p95_ms: Option<f64>,
+    /// Interactive-class ITL p95 limit in ms (`--slo-itl-p95-ms`).
+    pub slo_itl_p95_ms: Option<f64>,
 }
 
 impl TrafficOpts {
@@ -118,6 +123,8 @@ impl TrafficOpts {
             budget_seqs: if smoke { 1.5 } else { 3.0 },
             tail_max: if smoke { 4 } else { 16 },
             max_new_max: if smoke { 6 } else { 24 },
+            slo_ttft_p95_ms: None,
+            slo_itl_p95_ms: None,
         }
     }
 }
@@ -466,7 +473,15 @@ fn client_inner(
     let stream = TcpStream::connect(addr).context("connect")?;
     let mut w = &stream;
     let body = completion_body(tr);
-    net::write_request(&mut w, "POST", "/v1/completions", body.as_bytes())?;
+    // one-shot socket per request (the arrival process owns connection
+    // lifetimes here), so tell the server to close after responding
+    net::write_request(
+        &mut w,
+        "POST",
+        "/v1/completions",
+        body.as_bytes(),
+        false,
+    )?;
     let sent = Instant::now();
     let mut r = BufReader::new(stream.try_clone().context("clone socket")?);
     let (status, _headers) = net::read_response_head(&mut r)?;
@@ -534,7 +549,7 @@ fn run_client(addr: SocketAddr, idx: usize, tr: &TraceReq) -> ClientOut {
 fn http_get(addr: SocketAddr, path: &str) -> crate::Result<Json> {
     let stream = TcpStream::connect(addr).context("connect")?;
     let mut w = &stream;
-    net::write_request(&mut w, "GET", path, b"")?;
+    net::write_request(&mut w, "GET", path, b"", false)?;
     let mut r = BufReader::new(stream.try_clone().context("clone socket")?);
     let resp = net::read_response(&mut r)?;
     ensure!(resp.status == 200, "GET {path}: HTTP {}", resp.status);
@@ -562,6 +577,42 @@ fn class_entry(outs: &[&ClientOut]) -> Json {
         ("queue_wait_p95_ms", json::num(q95)),
         ("queue_wait_p99_ms", json::num(q99)),
     ])
+}
+
+/// Evaluate the opt-in SLO check against the interactive-class p95s.
+///
+/// With neither limit set the check is *disarmed*: `slo_verdict` stays
+/// `null` and no `slo` object is emitted — latency is host-dependent,
+/// so an unconditional verdict would flap across machines. With at
+/// least one limit armed, returns a real boolean verdict plus an `slo`
+/// object recording both the limits and the measured values. Either
+/// way the verdict never feeds the host-independent `pass` field.
+fn slo_eval(
+    ttft_limit: Option<f64>,
+    itl_limit: Option<f64>,
+    ttft_p95: f64,
+    itl_p95: f64,
+) -> (Json, Json) {
+    if ttft_limit.is_none() && itl_limit.is_none() {
+        return (Json::Null, Json::Null);
+    }
+    let within = |limit: Option<f64>, measured: f64| match limit {
+        Some(l) => measured <= l,
+        None => true,
+    };
+    let ok = within(ttft_limit, ttft_p95) && within(itl_limit, itl_p95);
+    let lim = |v: Option<f64>| match v {
+        Some(l) => json::num(l),
+        None => Json::Null,
+    };
+    let obj = json::obj(vec![
+        ("class", json::s("interactive")),
+        ("ttft_p95_limit_ms", lim(ttft_limit)),
+        ("itl_p95_limit_ms", lim(itl_limit)),
+        ("ttft_p95_ms", json::num(ttft_p95)),
+        ("itl_p95_ms", json::num(itl_p95)),
+    ]);
+    (Json::Bool(ok), obj)
 }
 
 // ---------------------------------------------------------------- run
@@ -797,6 +848,32 @@ pub fn run(opts: &TrafficOpts) -> crate::Result<Json> {
         if pass { "PASS" } else { "MISS" }
     );
 
+    // opt-in SLO check (never part of `pass` — latency is the host's)
+    let (int_ttft_p95, int_itl_p95) = {
+        let mut ttft: Vec<f64> =
+            interactive.iter().map(|o| o.ttft_ms).collect();
+        let mut itl: Vec<f64> = interactive
+            .iter()
+            .flat_map(|o| o.itl_ms.iter().copied())
+            .collect();
+        let [t95] = percentiles(&mut ttft, [95.0]);
+        let [i95] = percentiles(&mut itl, [95.0]);
+        (t95, i95)
+    };
+    let (slo_verdict, slo_obj) = slo_eval(
+        opts.slo_ttft_p95_ms,
+        opts.slo_itl_p95_ms,
+        int_ttft_p95,
+        int_itl_p95,
+    );
+    if let Json::Bool(ok) = slo_verdict {
+        println!(
+            "   SLO (interactive ttft_p95 {int_ttft_p95:.2} ms, \
+             itl_p95 {int_itl_p95:.2} ms): {}",
+            if ok { "MET" } else { "MISSED" }
+        );
+    }
+
     let report = json::obj(vec![
         ("bench", json::s("traffic")),
         ("smoke", Json::Bool(opts.smoke)),
@@ -861,8 +938,10 @@ pub fn run(opts: &TrafficOpts) -> crate::Result<Json> {
             ]),
         ),
         // latency numbers above are SLO *inputs*, host-dependent by
-        // nature — the pass verdict deliberately excludes them
-        ("slo_verdict", Json::Null),
+        // nature — the pass verdict deliberately excludes them, and
+        // slo_verdict stays null unless a limit was armed on the CLI
+        ("slo", slo_obj),
+        ("slo_verdict", slo_verdict),
         ("pass", Json::Bool(pass)),
     ]);
     std::fs::write(&opts.out, report.to_string())
@@ -920,5 +999,39 @@ mod tests {
                 assert!((1..=max).contains(&v), "{v} out of 1..={max}");
             }
         }
+    }
+
+    // Regression: slo_verdict used to be emitted unconditionally.
+    // Disarmed (no CLI limit) must stay null; armed must judge the
+    // interactive p95s against the given limits, partial limits too.
+    #[test]
+    fn slo_verdict_is_null_unless_armed() {
+        let (verdict, obj) = slo_eval(None, None, 123.0, 45.0);
+        assert!(matches!(verdict, Json::Null), "disarmed verdict");
+        assert!(matches!(obj, Json::Null), "disarmed slo object");
+
+        // both limits armed and met
+        let (verdict, obj) = slo_eval(Some(200.0), Some(50.0), 123.0, 45.0);
+        assert!(verdict.as_bool().unwrap());
+        assert_eq!(obj.get("ttft_p95_ms").unwrap().as_f64().unwrap(), 123.0);
+        assert_eq!(
+            obj.get("ttft_p95_limit_ms").unwrap().as_f64().unwrap(),
+            200.0
+        );
+
+        // one limit missed fails the whole verdict
+        let (verdict, _) = slo_eval(Some(200.0), Some(40.0), 123.0, 45.0);
+        assert!(!verdict.as_bool().unwrap());
+
+        // a single armed limit judges only that axis; the other slot
+        // is recorded as null
+        let (verdict, obj) = slo_eval(Some(200.0), None, 123.0, 9999.0);
+        assert!(verdict.as_bool().unwrap());
+        assert!(matches!(
+            obj.get("itl_p95_limit_ms").unwrap(),
+            Json::Null
+        ));
+        let (verdict, _) = slo_eval(None, Some(40.0), 9999.0, 45.0);
+        assert!(!verdict.as_bool().unwrap());
     }
 }

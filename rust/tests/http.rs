@@ -16,6 +16,9 @@
 //!    in-flight requests complete bit-identically.
 //! 4. **Robustness** — malformed bodies get 400s, unknown routes 404s,
 //!    and the stats/health endpoints answer while work is in flight.
+//! 5. **Keep-alive** — one socket serves many requests in order; the
+//!    `Connection` header is always truthful and a client-requested
+//!    close actually closes.
 
 use std::io::BufReader;
 use std::net::{SocketAddr, TcpStream};
@@ -83,7 +86,7 @@ fn exchange(
 ) -> net::Response {
     let stream = TcpStream::connect(addr).unwrap();
     let mut w = &stream;
-    net::write_request(&mut w, method, path, body).unwrap();
+    net::write_request(&mut w, method, path, body, false).unwrap();
     let mut r = BufReader::new(stream.try_clone().unwrap());
     net::read_response(&mut r).unwrap()
 }
@@ -152,6 +155,61 @@ fn health_stats_and_error_routes_answer() {
     }
     let resp = exchange(addr, "GET", "/healthz", b"");
     assert_eq!(resp.status, 200);
+    server.shutdown();
+}
+
+#[test]
+fn keep_alive_serves_many_requests_on_one_socket() {
+    let m = model(75);
+    let server = start(&m, None);
+    let addr = server.addr();
+
+    // One TCP connection, several requests: the server must answer
+    // each in order and keep the socket open until the client asks
+    // for `Connection: close`.
+    let stream = TcpStream::connect(addr).unwrap();
+    let mut r = BufReader::new(stream.try_clone().unwrap());
+
+    for i in 0..3 {
+        let mut w = &stream;
+        net::write_request(&mut w, "GET", "/healthz", b"", true).unwrap();
+        let resp = net::read_response(&mut r).unwrap();
+        assert_eq!(resp.status, 200, "request {i}");
+        assert_eq!(resp.header("connection"), Some("keep-alive"));
+        assert!(body_json(&resp).get("ok").unwrap().as_bool().unwrap());
+    }
+
+    // A completion works mid-connection too — keep-alive is not
+    // limited to the trivial routes.
+    let body = format!(
+        "{{\"prompt\":{},\"max_new_tokens\":3}}",
+        prompt_json(&[1, 2, 3])
+    );
+    let mut w = &stream;
+    net::write_request(
+        &mut w,
+        "POST",
+        "/v1/completions",
+        body.as_bytes(),
+        true,
+    )
+    .unwrap();
+    let resp = net::read_response(&mut r).unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("connection"), Some("keep-alive"));
+    assert_eq!(tokens_field(&body_json(&resp), "tokens").len(), 3);
+
+    // The final request opts out; the server advertises the close
+    // and then actually closes (EOF on the next read).
+    let mut w = &stream;
+    net::write_request(&mut w, "GET", "/stats", b"", false).unwrap();
+    let resp = net::read_response(&mut r).unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.header("connection"), Some("close"));
+    let mut rest = Vec::new();
+    use std::io::Read;
+    r.read_to_end(&mut rest).unwrap();
+    assert!(rest.is_empty(), "server wrote past the closing response");
     server.shutdown();
 }
 
@@ -248,8 +306,14 @@ fn sse_stream_is_incremental_and_matches_done() {
     );
     let stream = TcpStream::connect(addr).unwrap();
     let mut w = &stream;
-    net::write_request(&mut w, "POST", "/v1/completions", body.as_bytes())
-        .unwrap();
+    net::write_request(
+        &mut w,
+        "POST",
+        "/v1/completions",
+        body.as_bytes(),
+        false,
+    )
+    .unwrap();
     let mut r = BufReader::new(stream.try_clone().unwrap());
     let (status, headers) = net::read_response_head(&mut r).unwrap();
     assert_eq!(status, 200);
@@ -309,6 +373,7 @@ fn disconnect_mid_stream_drains_the_pool() {
             "POST",
             "/v1/completions",
             body_a.as_bytes(),
+            false,
         )
         .unwrap();
     }
@@ -332,6 +397,7 @@ fn disconnect_mid_stream_drains_the_pool() {
             "POST",
             "/v1/completions",
             body_b.as_bytes(),
+            false,
         )
         .unwrap();
     }

@@ -1,0 +1,284 @@
+//! Speculative decoding acceptance suite (ISSUE-9): the
+//! cross-precision draft/verify engine and the scheduler's speculation
+//! mode, pinned to the one contract that makes speculation safe to
+//! ship — **the emitted stream is bit-identical to non-speculative
+//! decode**, for every depth, draft format, sampling policy, GEMM
+//! dispatch, and shard count.
+//!
+//! 1. **Oracle equality over the format grid** — spec streams equal
+//!    the cache-free `generate_reforward` stream for k ∈ {1,2,4,8}
+//!    over {FP4, FP8} × {UE4M3, UE5M3} drafts, greedy and seeded
+//!    temperature.
+//! 2. **Stop conditions** — eos and a full context window truncate the
+//!    spec stream exactly where they truncate the oracle.
+//! 3. **Bit determinism** — seeded rejection sampling produces the
+//!    same stream on repeated runs, under serial vs threaded GEMM
+//!    dispatch, and on a sharded target.
+//! 4. **Degenerate acceptance** — draft == target accepts every greedy
+//!    proposal (acceptance 1.0).
+//! 5. **Scheduler speculation mode** — pooled draft + target banks
+//!    ([`KvPool::build_spec`]) serve streams identical to the base
+//!    scheduler and drain the pool to zero bytes afterwards.
+
+use std::sync::Arc;
+
+use microscale::model::Params;
+use microscale::quant::gemm::PackedGemm;
+use microscale::runtime::artifacts::ModelDims;
+use microscale::runtime::qconfig::{PerLayerQConfig, QConfig};
+use microscale::serve::decode::generate_reforward;
+use microscale::serve::{
+    operand_cache, DecodeEngine, DecodeRequest, KvPool, PackedModel,
+    Priority, Sampling, Scheduler, SchedulerConfig, SpecDecodeEngine,
+};
+
+fn dims() -> ModelDims {
+    ModelDims {
+        vocab: 48,
+        d_model: 32,
+        n_heads: 2,
+        n_layers: 2,
+        d_ff: 64,
+        seq_len: 48,
+    }
+}
+
+fn params() -> Params {
+    Params::init_surrogate(&dims(), 2026)
+}
+
+fn model(cfg: QConfig, block: usize) -> Arc<PackedModel> {
+    Arc::new(
+        PackedModel::build(
+            &dims(),
+            &params(),
+            &PerLayerQConfig::uniform(cfg),
+            block,
+            operand_cache(),
+        )
+        .unwrap(),
+    )
+}
+
+#[test]
+fn spec_streams_equal_the_oracle_across_the_format_grid() {
+    let target = model(QConfig::baseline(), 16);
+    let prompt = [7, 1, 40, 3, 22];
+    for elem in ["fp4_e2m1", "fp8_e4m3"] {
+        for scale in ["ue4m3", "ue5m3"] {
+            let cfg = QConfig::named(elem, scale, false).unwrap();
+            let draft = model(cfg, 8);
+            for k in [1usize, 2, 4, 8] {
+                let engine = SpecDecodeEngine::new(
+                    target.clone(),
+                    draft.clone(),
+                    k,
+                )
+                .unwrap();
+                for sampling in [
+                    Sampling::Greedy,
+                    Sampling::Temperature { temp: 0.85, seed: 0xFEED },
+                ] {
+                    let want = generate_reforward(
+                        &target, &prompt, 14, None, &sampling,
+                    )
+                    .unwrap();
+                    let got = engine
+                        .generate(&prompt, 14, None, &sampling)
+                        .unwrap();
+                    assert_eq!(
+                        got.tokens, want,
+                        "{elem}/{scale} k={k} {sampling:?}"
+                    );
+                    assert!(got.accepted <= got.proposed);
+                    assert!(got.rounds >= 1);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn eos_and_context_stops_match_the_oracle() {
+    let d = dims();
+    let target = model(QConfig::baseline(), 16);
+    let draft = model(QConfig::fp4("ue5m3").unwrap(), 8);
+    let engine =
+        SpecDecodeEngine::new(target.clone(), draft, 3).unwrap();
+
+    // eos: pick a token the greedy stream actually emits mid-stream,
+    // then require both paths to stop at its first occurrence
+    let prompt = [9, 9, 2, 31];
+    let free =
+        generate_reforward(&target, &prompt, 10, None, &Sampling::Greedy)
+            .unwrap();
+    let eos = free[free.len() / 2];
+    let want = generate_reforward(
+        &target,
+        &prompt,
+        10,
+        Some(eos),
+        &Sampling::Greedy,
+    )
+    .unwrap();
+    assert_eq!(*want.last().unwrap(), eos);
+    let got = engine
+        .generate(&prompt, 10, Some(eos), &Sampling::Greedy)
+        .unwrap();
+    assert_eq!(got.tokens, want, "eos stop");
+
+    // context: a prompt three tokens short of the window; the oracle
+    // emits seq_len - prompt + 1 tokens, the spec path must match
+    let long: Vec<i32> =
+        (0..d.seq_len - 3).map(|t| (t % d.vocab) as i32).collect();
+    let want =
+        generate_reforward(&target, &long, 20, None, &Sampling::Greedy)
+            .unwrap();
+    assert_eq!(want.len(), 4, "oracle context-stop arithmetic");
+    let got =
+        engine.generate(&long, 20, None, &Sampling::Greedy).unwrap();
+    assert_eq!(got.tokens, want, "context stop");
+}
+
+#[test]
+fn seeded_streams_are_bit_deterministic_across_gemm_dispatch() {
+    let d = dims();
+    let p = params();
+    let prompt = [4, 17, 8];
+    let sampling = Sampling::Temperature { temp: 0.9, seed: 0xD00D };
+    let qt = PerLayerQConfig::uniform(QConfig::baseline());
+    let qd = PerLayerQConfig::uniform(QConfig::fp4("ue5m3").unwrap());
+    let run = |t: Arc<PackedModel>, dr: Arc<PackedModel>| {
+        SpecDecodeEngine::new(t, dr, 4)
+            .unwrap()
+            .generate(&prompt, 12, None, &sampling)
+            .unwrap()
+    };
+
+    let target = model(QConfig::baseline(), 16);
+    let draft = model(QConfig::fp4("ue5m3").unwrap(), 8);
+    let a = run(target.clone(), draft.clone());
+    let b = run(target.clone(), draft.clone());
+    assert_eq!(a.tokens, b.tokens, "same engine inputs, same stream");
+    assert_eq!(
+        (a.proposed, a.accepted, a.rounds),
+        (b.proposed, b.accepted, b.rounds)
+    );
+
+    // serial GEMM dispatch must not change a single bit
+    let ts = Arc::new(
+        PackedModel::build(&d, &p, &qt, 16, operand_cache())
+            .unwrap()
+            .with_gemm(PackedGemm::serial()),
+    );
+    let ds = Arc::new(
+        PackedModel::build(&d, &p, &qd, 8, operand_cache())
+            .unwrap()
+            .with_gemm(PackedGemm::serial()),
+    );
+    let c = run(ts, ds.clone());
+    assert_eq!(a.tokens, c.tokens, "serial vs threaded GEMM");
+
+    // neither must a tensor-parallel sharded target
+    let t2 = Arc::new(
+        PackedModel::build_sharded(&d, &p, &qt, 16, operand_cache(), 2)
+            .unwrap()
+            .with_gemm(PackedGemm::serial()),
+    );
+    let e = run(t2, ds);
+    assert_eq!(a.tokens, e.tokens, "sharded vs unsharded target");
+}
+
+#[test]
+fn identical_draft_and_target_accept_every_greedy_proposal() {
+    let m = model(QConfig::fp4("ue5m3").unwrap(), 16);
+    let engine = SpecDecodeEngine::new(m.clone(), m.clone(), 4).unwrap();
+    let got =
+        engine.generate(&[5, 1, 2], 16, None, &Sampling::Greedy).unwrap();
+    assert!(got.proposed > 0, "depth 4 over 16 tokens must propose");
+    assert_eq!(got.accepted, got.proposed, "degenerate pair rejects");
+    assert_eq!(got.acceptance(), 1.0);
+    let want =
+        generate_reforward(&m, &[5, 1, 2], 16, None, &Sampling::Greedy)
+            .unwrap();
+    assert_eq!(got.tokens, want);
+}
+
+#[test]
+fn speculative_scheduler_is_stream_identical_and_drains_the_pool() {
+    let d = dims();
+    let qt = PerLayerQConfig::uniform(QConfig::baseline());
+    let qd = PerLayerQConfig::uniform(QConfig::fp4("ue5m3").unwrap());
+    let target = model(QConfig::baseline(), 16);
+    let draft = model(QConfig::fp4("ue5m3").unwrap(), 16);
+    let reqs = || -> Vec<DecodeRequest> {
+        (0..4usize)
+            .map(|id| DecodeRequest {
+                id: id as u64,
+                prompt: (0..3 + id % 3)
+                    .map(|t| ((5 * t + id) % d.vocab) as i32)
+                    .collect(),
+                max_new_tokens: 8,
+                eos: None,
+                sampling: if id % 2 == 0 {
+                    Sampling::Greedy
+                } else {
+                    Sampling::Temperature {
+                        temp: 0.8,
+                        seed: 40 + id as u64,
+                    }
+                },
+                priority: if id % 3 == 0 {
+                    Priority::Batch
+                } else {
+                    Priority::Interactive
+                },
+            })
+            .collect()
+    };
+
+    // the oracle: the plain scheduler, no pool, no speculation
+    let mut base = Scheduler::new(
+        DecodeEngine::new(target.clone()).unwrap(),
+        SchedulerConfig::default(),
+    );
+    for r in reqs() {
+        base.submit(r).unwrap();
+    }
+    let want = base.run().unwrap();
+
+    // speculation mode over a two-bank pool: target pages under the
+    // primary codec, draft pages under the draft bank
+    let pool =
+        KvPool::build_spec(&d, &qt, &qd, 16, 4, usize::MAX, false).unwrap();
+    let mut sched = Scheduler::new_speculative(
+        DecodeEngine::with_pool(target.clone(), pool.clone()).unwrap(),
+        draft,
+        3,
+        SchedulerConfig::default(),
+    )
+    .unwrap();
+    for r in reqs() {
+        sched.submit(r).unwrap();
+    }
+    let got = sched.run().unwrap();
+    assert_eq!(got.len(), want.len());
+    for (g, w) in got.iter().zip(&want) {
+        assert_eq!(
+            (g.id, &g.tokens, &g.finish),
+            (w.id, &w.tokens, &w.finish),
+            "speculation changed a served stream"
+        );
+    }
+    let (proposed, accepted) = sched.spec_stats().unwrap();
+    assert!(proposed > 0, "no speculation happened");
+    assert!(accepted <= proposed);
+    drop(sched);
+    assert_eq!(
+        pool.used_bytes(),
+        0,
+        "draft + target pages must drain to zero"
+    );
+    let s = pool.stats();
+    assert_eq!(s.allocs, s.frees, "every allocated page was freed");
+}
