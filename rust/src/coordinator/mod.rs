@@ -10,12 +10,15 @@
 //! * executes CPU-pure jobs on a [`pool`] of workers with a bounded queue
 //!   (backpressure) and panic isolation, while PJRT-bound jobs run on the
 //!   coordinator thread (the PJRT client is not Sync),
-//! * streams results to CSV/JSON [`sink`]s consumed by EXPERIMENTS.md.
+//! * streams results to CSV/JSON [`sink`]s consumed by EXPERIMENTS.md,
+//! * hosts the offline mixed-precision auto-[`tuner`] behind
+//!   `microscale tune` (DESIGN.md §16).
 
 pub mod cache;
 pub mod pool;
 pub mod sink;
 pub mod spec;
+pub mod tuner;
 
 pub use cache::ResultCache;
 pub use pool::Pool;

@@ -15,6 +15,8 @@
 //! microscale spec-bench         speculative-decoding format sweep (BENCH_spec.json)
 //! microscale kv-bench           paged-KV memory/throughput bench (BENCH_kv.json)
 //! microscale traffic-bench      serving-edge traffic bench (BENCH_traffic.json)
+//! microscale tune               mixed-precision auto-tuner (BENCH_tune.json,
+//!                               emits tuned_qconfig.json for --qconfig-file)
 //! microscale kv-sweep           KV block-size anomaly sweep on live decode traces
 //! microscale selftest           quick smoke of the full stack
 //! ```
@@ -279,6 +281,14 @@ fn run() -> Result<()> {
                     .with_context(|| format!("--qconfig {q:?}"))?;
                 opts.qconfigs = Some(vec![(q.to_string(), cfg)]);
             }
+            if let Some(f) = args.get("qconfig-file") {
+                let (label, cfg, bs, _kv) =
+                    microscale::coordinator::tuner::load_qconfig_file(
+                        std::path::Path::new(f),
+                    )?;
+                opts.qconfigs = Some(vec![(label, cfg)]);
+                opts.block_size = Some(bs);
+            }
             microscale::serve::bench::run(&opts)?;
         }
         "decode-bench" => {
@@ -328,6 +338,14 @@ fn run() -> Result<()> {
                     .with_context(|| format!("--qconfig {q:?}"))?;
                 opts.qconfigs = Some(vec![(q.to_string(), cfg)]);
             }
+            if let Some(f) = args.get("qconfig-file") {
+                let (label, cfg, bs, _kv) =
+                    microscale::coordinator::tuner::load_qconfig_file(
+                        std::path::Path::new(f),
+                    )?;
+                opts.qconfigs = Some(vec![(label, cfg)]);
+                opts.block_size = Some(bs);
+            }
             microscale::serve::decode_bench::run(&opts)?;
         }
         "spec-bench" => {
@@ -365,6 +383,14 @@ fn run() -> Result<()> {
             opts.requests = args.get_usize("requests", opts.requests)?;
             opts.page_rows = args.get_usize("page-rows", opts.page_rows)?;
             opts.budget_seqs = args.get_f64("budget-seqs", opts.budget_seqs)?;
+            if let Some(f) = args.get("qconfig-file") {
+                let (_label, cfg, bs, kv) =
+                    microscale::coordinator::tuner::load_qconfig_file(
+                        std::path::Path::new(f),
+                    )?;
+                opts.block_size = Some(bs);
+                opts.tuned = Some((cfg, kv));
+            }
             microscale::serve::kv_bench::run(&opts)?;
         }
         "traffic-bench" => {
@@ -401,6 +427,47 @@ fn run() -> Result<()> {
                 }
             }
             microscale::serve::traffic::run(&opts)?;
+        }
+        "tune" => {
+            let mut opts = microscale::coordinator::tuner::TuneOpts::new(
+                args.has("smoke"),
+            );
+            if let Some(out) = args.get("out") {
+                opts.out = PathBuf::from(out);
+            }
+            if let Some(emit) = args.get("emit") {
+                opts.emit = PathBuf::from(emit);
+            }
+            opts.seed = args.get_usize("seed", opts.seed as usize)? as u64;
+            opts.budget_frac =
+                args.get_f64("budget-frac", opts.budget_frac)?;
+            if let Some(b) = args.get("budget-bytes") {
+                opts.budget_bytes = Some(b.parse::<usize>().map_err(|e| {
+                    anyhow::anyhow!("--budget-bytes {b:?}: {e}")
+                })?);
+            }
+            if let Some(v) = args.get("elems") {
+                opts.elems =
+                    v.split(',').map(|s| s.trim().to_string()).collect();
+            }
+            if let Some(v) = args.get("scales") {
+                opts.scales =
+                    v.split(',').map(|s| s.trim().to_string()).collect();
+            }
+            if let Some(v) = args.get("block-sizes") {
+                opts.block_sizes = v
+                    .split(',')
+                    .map(|s| {
+                        s.trim().parse::<usize>().map_err(|e| {
+                            anyhow::anyhow!("--block-sizes {s:?}: {e}")
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+            }
+            if args.has("no-rotate") {
+                opts.rotate = false;
+            }
+            microscale::coordinator::tuner::run(&opts)?;
         }
         "kv-sweep" => {
             let fast = args.has("fast");
@@ -441,22 +508,26 @@ fn run() -> Result<()> {
                  commands: figure <id> | table <1|2|3> | all | hw | train |\n\
                  models | eval | theory | quantize | serve-bench |\n\
                  decode-bench | spec-bench | kv-bench | traffic-bench |\n\
-                 kv-sweep | selftest\n\
+                 tune | kv-sweep | selftest\n\
                  figures: 1a 1b 2a 2b 2c 3a 3b 3c 4a 4b 5a 5b 6 7 8 9 10 11\n\
                  12 13 14 15 16 17\n\
                  flags: --fast --results DIR --models DIR --artifacts DIR\n\
                  --train-steps N --quiet\n\
                  serve-bench flags: --smoke --workers N --batch-sizes 8,32\n\
                  --rounds N --serial-requests N --shards 1,2,4 --qconfig CFG\n\
-                 --out FILE\n\
+                 --qconfig-file tuned_qconfig.json --out FILE\n\
                  decode-bench flags: --smoke --concurrency 1,4,8 --prompt N\n\
                  --max-new N --rounds N --baseline-requests N --shards 1,2\n\
-                 --spec 1,2,4 --qconfig CFG --out FILE\n\
+                 --spec 1,2,4 --qconfig CFG --qconfig-file FILE --out FILE\n\
                  spec-bench flags: --smoke --k N --prompt N --max-new N\n\
                  --requests N --block-sizes 4,8,16,32 --out FILE\n\
                  kv-bench flags: --smoke --concurrency N --prompt N\n\
                  --max-new N --requests N --page-rows N --budget-seqs X\n\
-                 --out FILE\n\
+                 --qconfig-file FILE --out FILE\n\
+                 tune flags: --smoke --seed N --budget-frac X\n\
+                 --budget-bytes N --elems fp4_e2m1,fp8_e4m3\n\
+                 --scales ue4m3,ue5m3,e8m0 --block-sizes 8,16,32\n\
+                 --no-rotate --out FILE --emit FILE\n\
                  traffic-bench flags: --smoke --requests N --concurrency N\n\
                  --seed N --prefix-len N --shared-ratio X --batch-frac X\n\
                  --cancel-frac X --burst-len N --rate X --burst-gap-ms X\n\

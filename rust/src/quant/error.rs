@@ -104,6 +104,52 @@ mod tests {
     }
 
     #[test]
+    fn measured_mse_agrees_with_theory_across_format_grid() {
+        // The tuner's scoring contract (DESIGN.md §16): the measured
+        // per-tensor MSE this module reports must track the closed-form
+        // Gaussian prediction in `theory` across the whole candidate
+        // grid the auto-tuner searches — {FP4, FP8} elements ×
+        // {UE4M3, UE5M3, E8M0} scales × block sizes 4..32 — at both a
+        // benign σ and the anomaly-regime σ the demo model uses. The
+        // band is generous (Monte-Carlo noise at 2^17 samples plus the
+        // theory's own cap-enumeration truncation), but a broken scale
+        // cast or block addressing bug misses it by orders of
+        // magnitude.
+        use crate::formats::{E8M0, UE5M3};
+        use crate::theory;
+        let mut seed = 100u64;
+        for elem in [ElemFormat::FP4, ElemFormat::FP8] {
+            for scale in [UE4M3, UE5M3, E8M0] {
+                for bs in [4usize, 8, 16, 32] {
+                    for sigma in [0.02, 6e-3] {
+                        seed += 1;
+                        let mut rng = Pcg64::new(seed);
+                        let x = rng.normal_vec_f32(1 << 17, sigma);
+                        let scheme = QuantScheme::new(elem, scale, bs);
+                        let measured = tensor_mse(&scheme, &x);
+                        let predicted = theory::mse_quantized_scales(
+                            &elem, &scale, sigma, bs,
+                        )
+                        .total();
+                        assert!(
+                            predicted > 0.0,
+                            "{}/σ={sigma}: predicted {predicted}",
+                            scheme.id()
+                        );
+                        let ratio = measured / predicted;
+                        assert!(
+                            (0.8..=1.25).contains(&ratio),
+                            "{}/σ={sigma}: measured {measured:.4e} vs \
+                             predicted {predicted:.4e} (ratio {ratio:.3})",
+                            scheme.id()
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn mse_vs_sigma_reports_sigma() {
         let mut rng = Pcg64::new(6);
         let x = rng.normal_vec_f32(1 << 14, 0.02);

@@ -22,6 +22,7 @@ pub mod kernel;
 pub mod matmul;
 pub mod opcache;
 pub mod packed;
+pub mod rotate;
 pub mod shard;
 
 pub use gemm::{packed_matmul, GemmOperand, PackedGemm};

@@ -41,6 +41,13 @@ struct Key {
     /// shard encode and an unsharded encode of the same bytes would
     /// alias to one entry and serve the wrong operand to one of them.
     shard: (usize, usize),
+    /// Whether the weight passed through the Hadamard pre-rotation
+    /// ([`crate::quant::rotate`]) before packing. The digests cover the
+    /// *unrotated* bytes (rotation happens inside the pack closure, so
+    /// callers never re-rotate per lookup) — without this field a
+    /// rotated and an unrotated encode of the same weight would alias
+    /// and one caller would multiply against the wrong basis.
+    rotate: bool,
 }
 
 /// Monotonic cache counters (snapshot via [`OperandCache::stats`]).
@@ -112,8 +119,27 @@ impl OperandCache {
         k: usize,
         n: usize,
     ) -> crate::Result<Arc<GemmOperand>> {
-        self.lookup_or_pack(scheme, w, k, n, (0, 1), || {
+        self.lookup_or_pack(scheme, w, k, n, (0, 1), false, || {
             GemmOperand::quantize_transposed(scheme, w, k, n)
+        })
+    }
+
+    /// Like [`OperandCache::get_or_pack_transposed`], but the weight's
+    /// contraction dimension is Hadamard-rotated (`W → HW`, i.e.
+    /// [`super::rotate::fwht_cols`]) before packing — the folded
+    /// weight-side half of the `Q(xH)·Q(HW)` rotated GEMM. Keyed by the
+    /// unrotated content digest plus a rotation flag, so rotated and
+    /// unrotated encodes of the same bytes never alias.
+    pub fn get_or_pack_transposed_rotated(
+        &self,
+        scheme: &QuantScheme,
+        w: &[f32],
+        k: usize,
+        n: usize,
+    ) -> crate::Result<Arc<GemmOperand>> {
+        self.lookup_or_pack(scheme, w, k, n, (0, 1), true, || {
+            let wr = super::rotate::fwht_cols(w, k, n);
+            GemmOperand::quantize_transposed(scheme, &wr, k, n)
         })
     }
 
@@ -147,21 +173,50 @@ impl OperandCache {
             );
             return self.get_or_pack_transposed(scheme, w, k, n);
         }
-        self.lookup_or_pack(scheme, w, k, n, (index, count), || {
-            anyhow::ensure!(w.len() == k * n, "weight len != {k}x{n}");
-            // materialize the k × (c1-c0) column slice, then pack it
-            // transposed: per-row quantization makes this byte-equal
-            // to slicing rows c0..c1 of the full transposed operand
+        self.lookup_or_pack(scheme, w, k, n, (index, count), false, || {
+            let sub = shard_slice(w, k, n, c0, c1)?;
+            GemmOperand::quantize_transposed(scheme, &sub, k, c1 - c0)
+        })
+    }
+
+    /// The rotated form of [`OperandCache::get_or_pack_transposed_shard`].
+    /// The FWHT acts on each output column independently over the
+    /// contraction dimension, so rotating the column slice equals
+    /// slicing the rotated full weight bit for bit — shards of a
+    /// rotated operand still reassemble to the unsharded rotated
+    /// encode.
+    #[allow(clippy::too_many_arguments)]
+    pub fn get_or_pack_transposed_shard_rotated(
+        &self,
+        scheme: &QuantScheme,
+        w: &[f32],
+        k: usize,
+        n: usize,
+        index: usize,
+        count: usize,
+        c0: usize,
+        c1: usize,
+    ) -> crate::Result<Arc<GemmOperand>> {
+        anyhow::ensure!(
+            index < count && c0 < c1 && c1 <= n,
+            "shard {index}/{count} columns {c0}..{c1} invalid for n={n}"
+        );
+        if count == 1 {
+            anyhow::ensure!(
+                c0 == 0 && c1 == n,
+                "a 1-count shard must cover all {n} columns"
+            );
+            return self.get_or_pack_transposed_rotated(scheme, w, k, n);
+        }
+        self.lookup_or_pack(scheme, w, k, n, (index, count), true, || {
+            let sub = shard_slice(w, k, n, c0, c1)?;
             let width = c1 - c0;
-            let mut sub = vec![0.0f32; k * width];
-            for r in 0..k {
-                sub[r * width..(r + 1) * width]
-                    .copy_from_slice(&w[r * n + c0..r * n + c1]);
-            }
+            let sub = super::rotate::fwht_cols(&sub, k, width);
             GemmOperand::quantize_transposed(scheme, &sub, k, width)
         })
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn lookup_or_pack(
         &self,
         scheme: &QuantScheme,
@@ -169,10 +224,11 @@ impl OperandCache {
         k: usize,
         n: usize,
         shard: (usize, usize),
+        rotate: bool,
         pack: impl FnOnce() -> crate::Result<GemmOperand>,
     ) -> crate::Result<Arc<GemmOperand>> {
         let (h1, h2) = content_digests(w);
-        let key = Key { h1, h2, k, n, scheme: scheme.id(), shard };
+        let key = Key { h1, h2, k, n, scheme: scheme.id(), shard, rotate };
         {
             let mut g = self.inner.lock().unwrap();
             let found = g.map.get(&key).cloned();
@@ -236,6 +292,26 @@ impl OperandCache {
 pub fn operand_cache() -> &'static OperandCache {
     static CACHE: OnceLock<OperandCache> = OnceLock::new();
     CACHE.get_or_init(|| OperandCache::new(128))
+}
+
+/// Materialize the `k × (c1-c0)` column slice of a row-major `k × n`
+/// weight: per-row quantization makes packing this byte-equal to
+/// slicing rows `c0..c1` of the full transposed operand.
+fn shard_slice(
+    w: &[f32],
+    k: usize,
+    n: usize,
+    c0: usize,
+    c1: usize,
+) -> crate::Result<Vec<f32>> {
+    anyhow::ensure!(w.len() == k * n, "weight len != {k}x{n}");
+    let width = c1 - c0;
+    let mut sub = vec![0.0f32; k * width];
+    for r in 0..k {
+        sub[r * width..(r + 1) * width]
+            .copy_from_slice(&w[r * n + c0..r * n + c1]);
+    }
+    Ok(sub)
 }
 
 /// Two independent FNV-1a word digests over the f32 bit patterns in
@@ -317,6 +393,76 @@ mod tests {
             .unwrap();
         assert!(Arc::ptr_eq(&full, &whole));
         assert_eq!(cache.stats().entries, 3);
+    }
+
+    #[test]
+    fn rotation_flag_never_aliases() {
+        // ISSUE-10 regression: rotation must be part of cache identity —
+        // rotated and unrotated encodes of the same weight bytes are
+        // distinct entries with distinct packed bits (mirror of the
+        // shard-slot aliasing tests above).
+        let cache = OperandCache::new(16);
+        let mut rng = Pcg64::new(21);
+        let (k, n) = (32usize, 16usize);
+        let w = rng.normal_vec_f32(k * n, 0.02);
+        let scheme = QuantScheme::new(ElemFormat::FP4, UE5M3, 8);
+        let plain = cache.get_or_pack_transposed(&scheme, &w, k, n).unwrap();
+        let rot = cache
+            .get_or_pack_transposed_rotated(&scheme, &w, k, n)
+            .unwrap();
+        assert!(!Arc::ptr_eq(&plain, &rot));
+        assert_ne!(plain.bits_digest(), rot.bits_digest());
+        assert_eq!(cache.stats().entries, 2);
+        // repeat lookups hit their own entries, in both orders
+        let rot2 = cache
+            .get_or_pack_transposed_rotated(&scheme, &w, k, n)
+            .unwrap();
+        let plain2 = cache.get_or_pack_transposed(&scheme, &w, k, n).unwrap();
+        assert!(Arc::ptr_eq(&rot, &rot2));
+        assert!(Arc::ptr_eq(&plain, &plain2));
+        assert_eq!(cache.stats().entries, 2);
+        // the rotated encode equals packing the pre-rotated bytes
+        let wr = crate::quant::rotate::fwht_cols(&w, k, n);
+        let direct = GemmOperand::quantize_transposed(&scheme, &wr, k, n).unwrap();
+        assert_eq!(rot.bits_digest(), direct.bits_digest());
+    }
+
+    #[test]
+    fn rotated_shards_slice_the_rotated_full_operand() {
+        let cache = OperandCache::new(16);
+        let mut rng = Pcg64::new(22);
+        let (k, n) = (16usize, 16usize);
+        let w = rng.normal_vec_f32(k * n, 0.02);
+        let scheme = QuantScheme::new(ElemFormat::FP4, UE5M3, 8);
+        let full = cache
+            .get_or_pack_transposed_rotated(&scheme, &w, k, n)
+            .unwrap();
+        let s0 = cache
+            .get_or_pack_transposed_shard_rotated(&scheme, &w, k, n, 0, 2, 0, 8)
+            .unwrap();
+        let s1 = cache
+            .get_or_pack_transposed_shard_rotated(&scheme, &w, k, n, 1, 2, 8, 16)
+            .unwrap();
+        assert!(!Arc::ptr_eq(&full, &s0));
+        assert_eq!(
+            s0.bits_digest(),
+            full.slice_rows(0, 8).unwrap().bits_digest()
+        );
+        assert_eq!(
+            s1.bits_digest(),
+            full.slice_rows(8, 16).unwrap().bits_digest()
+        );
+        // rotated shard never aliases the unrotated shard of same slot
+        let u0 = cache
+            .get_or_pack_transposed_shard(&scheme, &w, k, n, 0, 2, 0, 8)
+            .unwrap();
+        assert!(!Arc::ptr_eq(&s0, &u0));
+        assert_ne!(s0.bits_digest(), u0.bits_digest());
+        // a 1-count rotated shard IS the unsharded rotated entry
+        let whole = cache
+            .get_or_pack_transposed_shard_rotated(&scheme, &w, k, n, 0, 1, 0, 16)
+            .unwrap();
+        assert!(Arc::ptr_eq(&full, &whole));
     }
 
     #[test]

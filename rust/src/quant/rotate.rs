@@ -1,0 +1,292 @@
+//! Hadamard pre-rotation for microscaled linears (DESIGN.md §16).
+//!
+//! The paper's block-size anomaly is a *narrow-distribution* failure:
+//! when a block's absmax divided by the element max falls below the
+//! quantized scale format's smallest subnormal, the whole block
+//! collapses to zero (`s_zero` in [`crate::theory`]). A normalized
+//! Walsh–Hadamard rotation on the contraction dimension mixes every
+//! channel into every output coordinate, replacing each block's local
+//! spread with the tensor's global RMS — narrow channels are lifted out
+//! of the scale-underflow region at the cost of widening nothing (H is
+//! orthonormal, ‖Hx‖₂ = ‖x‖₂). LATMiX (PAPERS.md) and the
+//! `fast_hadamard_transform` dependency of the source repo's
+//! environment ground the technique; here it is exact, dependency-free,
+//! and CPU-side.
+//!
+//! Contract: `H` is the normalized Sylvester Hadamard matrix, symmetric
+//! and self-inverse (`H = Hᵀ = H⁻¹`). A linear `y = xW` becomes
+//! `y = (xH)(HW)` — rotating activation *rows* and weight *columns*
+//! (the contraction dimension) leaves the output basis untouched, so
+//! there is no epilogue to undo and attention/KV paths downstream are
+//! oblivious. The "inverse rotation" is folded into the prepacked
+//! weight operand at build time. Non-power-of-two dimensions use a
+//! block-diagonal cover: greedily the largest power-of-two chunk, then
+//! recurse on the remainder (`d = 2^a + 2^b + …`, a strictly decreasing
+//! sum — each chunk gets its own FWHT, cross-chunk mixing is skipped).
+//!
+//! Determinism: the in-place butterfly fixes the f32 evaluation order,
+//! so rotated packed and rotated reference paths see bit-identical
+//! inputs — the repo's packed==reference contract survives rotation by
+//! both sides calling the same functions here.
+
+/// In-place normalized FWHT over `x` (length MUST be a power of two).
+///
+/// Classic butterfly: `log2(n)` passes of paired sum/difference, then
+/// one multiply by `n^-1/2`. `n^-1/2` is exact in f32 only for even
+/// powers of two, so normalization uses `1.0 / sqrt(n)` — determinism
+/// (same bits every call) is what the contract needs, not exactness.
+pub fn fwht_pow2(x: &mut [f32]) {
+    let n = x.len();
+    debug_assert!(n.is_power_of_two(), "fwht_pow2 needs a power of two");
+    if n <= 1 {
+        return;
+    }
+    let mut h = 1;
+    while h < n {
+        let mut i = 0;
+        while i < n {
+            for j in i..i + h {
+                let a = x[j];
+                let b = x[j + h];
+                x[j] = a + b;
+                x[j + h] = a - b;
+            }
+            i += 2 * h;
+        }
+        h *= 2;
+    }
+    let norm = 1.0 / (n as f32).sqrt();
+    for v in x.iter_mut() {
+        *v *= norm;
+    }
+}
+
+/// The block-diagonal power-of-two cover of `d`: chunk `(offset, len)`
+/// pairs, largest chunk first, lengths strictly decreasing powers of
+/// two summing to `d` (the binary expansion of `d`).
+pub fn pow2_chunks(d: usize) -> Vec<(usize, usize)> {
+    let mut chunks = Vec::new();
+    let mut off = 0;
+    let mut rem = d;
+    while rem > 0 {
+        let len = if rem.is_power_of_two() {
+            rem
+        } else {
+            rem.next_power_of_two() / 2
+        };
+        chunks.push((off, len));
+        off += len;
+        rem -= len;
+    }
+    chunks
+}
+
+/// In-place block-diagonal FWHT over one vector of any length.
+pub fn fwht(x: &mut [f32]) {
+    for (off, len) in pow2_chunks(x.len()) {
+        fwht_pow2(&mut x[off..off + len]);
+    }
+}
+
+/// Rotate every row of a row-major `rows × d` matrix in place: the
+/// activation-side transform (`x → xH`; H symmetric, so right- and
+/// left-multiplication agree on a row vector).
+pub fn fwht_rows(x: &mut [f32], d: usize) {
+    if d == 0 {
+        return;
+    }
+    debug_assert_eq!(x.len() % d, 0, "matrix len {} not a multiple of d {d}", x.len());
+    for row in x.chunks_exact_mut(d) {
+        fwht(row);
+    }
+}
+
+/// Rotate every column of a row-major `k × n` matrix: the weight-side
+/// transform (`W → HW` over the contraction dimension `k`). Returns a
+/// new matrix; the column gather/scatter goes through a scratch vector
+/// so each column sees the identical f32 butterfly as [`fwht`].
+pub fn fwht_cols(w: &[f32], k: usize, n: usize) -> Vec<f32> {
+    assert_eq!(w.len(), k * n, "weight len {} != {k}x{n}", w.len());
+    let mut out = w.to_vec();
+    if k == 0 || n == 0 {
+        return out;
+    }
+    let mut col = vec![0.0f32; k];
+    for j in 0..n {
+        for i in 0..k {
+            col[i] = w[i * n + j];
+        }
+        fwht(&mut col);
+        for i in 0..k {
+            out[i * n + j] = col[i];
+        }
+    }
+    out
+}
+
+/// Rotate the columns of an `n × k` row-major *transposed* weight (each
+/// row is one output channel's k-vector over the contraction dim): the
+/// form the operand cache packs. Equivalent to `transpose(fwht_cols)`.
+pub fn fwht_rows_transposed(wt: &mut [f32], k: usize) {
+    fwht_rows(wt, k);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::Pcg64;
+
+    fn gauss(n: usize, seed: u64) -> Vec<f32> {
+        Pcg64::new(seed).normal_vec_f32(n, 1.0)
+    }
+
+    #[test]
+    fn matches_dense_hadamard_n8() {
+        // H_8 by direct Sylvester construction vs the butterfly.
+        let n = 8;
+        let mut h = vec![vec![1.0f64]];
+        while h.len() < n {
+            let m = h.len();
+            let mut nh = vec![vec![0.0f64; 2 * m]; 2 * m];
+            for i in 0..m {
+                for j in 0..m {
+                    nh[i][j] = h[i][j];
+                    nh[i][j + m] = h[i][j];
+                    nh[i + m][j] = h[i][j];
+                    nh[i + m][j + m] = -h[i][j];
+                }
+            }
+            h = nh;
+        }
+        let x = gauss(n, 7);
+        let mut fast = x.clone();
+        fwht_pow2(&mut fast);
+        let norm = 1.0 / (n as f64).sqrt();
+        for i in 0..n {
+            let dense: f64 = (0..n)
+                .map(|j| h[i][j] * x[j] as f64)
+                .sum::<f64>()
+                * norm;
+            assert!(
+                (dense - fast[i] as f64).abs() < 1e-5,
+                "row {i}: dense {dense} vs fast {}",
+                fast[i]
+            );
+        }
+    }
+
+    #[test]
+    fn self_inverse_round_trip() {
+        for d in [1usize, 2, 8, 64, 96, 100, 257] {
+            let x = gauss(d, 42 + d as u64);
+            let mut y = x.clone();
+            fwht(&mut y);
+            fwht(&mut y);
+            for i in 0..d {
+                assert!(
+                    (y[i] - x[i]).abs() <= 1e-4 * x[i].abs().max(1.0),
+                    "d={d} i={i}: {} vs {}",
+                    y[i],
+                    x[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn orthonormal_preserves_norm() {
+        for d in [4usize, 32, 48, 129] {
+            let x = gauss(d, 9 + d as u64);
+            let n0: f64 = x.iter().map(|v| (*v as f64).powi(2)).sum();
+            let mut y = x.clone();
+            fwht(&mut y);
+            let n1: f64 = y.iter().map(|v| (*v as f64).powi(2)).sum();
+            assert!(
+                (n1 - n0).abs() < 1e-3 * n0.max(1.0),
+                "d={d}: ‖Hx‖²={n1} vs ‖x‖²={n0}"
+            );
+        }
+    }
+
+    #[test]
+    fn chunks_cover_binary_expansion() {
+        assert_eq!(pow2_chunks(8), vec![(0, 8)]);
+        assert_eq!(pow2_chunks(12), vec![(0, 8), (8, 4)]);
+        assert_eq!(pow2_chunks(100), vec![(0, 64), (64, 32), (96, 4)]);
+        assert_eq!(pow2_chunks(1), vec![(0, 1)]);
+        assert!(pow2_chunks(0).is_empty());
+        for d in 1..300usize {
+            let c = pow2_chunks(d);
+            assert_eq!(c.iter().map(|(_, l)| l).sum::<usize>(), d);
+            let mut off = 0;
+            let mut prev = usize::MAX;
+            for (o, l) in c {
+                assert_eq!(o, off);
+                assert!(l.is_power_of_two() && l < prev);
+                off += l;
+                prev = l;
+            }
+        }
+    }
+
+    #[test]
+    fn rows_and_cols_are_transposes() {
+        let (k, n) = (24, 5);
+        let w = gauss(k * n, 3);
+        let rotated = fwht_cols(&w, k, n);
+        // transpose → fwht_rows → transpose back must agree bit for bit
+        let mut wt = vec![0.0f32; k * n];
+        for i in 0..k {
+            for j in 0..n {
+                wt[j * k + i] = w[i * n + j];
+            }
+        }
+        fwht_rows_transposed(&mut wt, k);
+        for i in 0..k {
+            for j in 0..n {
+                assert_eq!(
+                    rotated[i * n + j].to_bits(),
+                    wt[j * k + i].to_bits(),
+                    "({i},{j})"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rotation_commutes_with_matmul() {
+        // (xH)(HW) ≈ xW — the folding identity the packed path relies on.
+        let (m, k, n) = (3, 32, 7);
+        let x = gauss(m * k, 11);
+        let w = gauss(k * n, 13);
+        let mut xr = x.clone();
+        fwht_rows(&mut xr, k);
+        let wr = fwht_cols(&w, k, n);
+        for i in 0..m {
+            for j in 0..n {
+                let plain: f64 = (0..k)
+                    .map(|t| x[i * k + t] as f64 * w[t * n + j] as f64)
+                    .sum();
+                let rot: f64 = (0..k)
+                    .map(|t| xr[i * k + t] as f64 * wr[t * n + j] as f64)
+                    .sum();
+                assert!(
+                    (plain - rot).abs() < 1e-3 * plain.abs().max(1.0),
+                    "({i},{j}): {plain} vs {rot}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn rotation_is_deterministic() {
+        let x = gauss(96, 5);
+        let mut a = x.clone();
+        let mut b = x;
+        fwht(&mut a);
+        fwht(&mut b);
+        for (u, v) in a.iter().zip(&b) {
+            assert_eq!(u.to_bits(), v.to_bits());
+        }
+    }
+}

@@ -20,6 +20,21 @@ pub struct QConfig {
     pub scale: MiniFloat,
     pub per_tensor: bool,
     pub act_quant: bool,
+    /// Hadamard pre-rotation on the contraction dimension: activations
+    /// pass through [`crate::quant::rotate::fwht_rows`] and weights
+    /// through the matching column rotation before quantization, so the
+    /// GEMM computes `Q(xH)·Q(HᵀW)` (H self-inverse ⇒ same product in
+    /// exact arithmetic). On an exact (quant-off) linear the rotation is
+    /// elided entirely — `xHHᵀW = xW` — which keeps the exact path
+    /// bit-identical to the unrotated one (f32 FWHT round-trips are not
+    /// bit-exact, so the identity must be taken in the algebra, not
+    /// computed).
+    pub rotate: bool,
+    /// Per-layer block-size override: when set, [`QConfig::scheme`]
+    /// ignores the model-global block size. How the tuner assigns
+    /// different block sizes to different layers without rebuilding the
+    /// whole model around a new global.
+    pub bs_override: Option<usize>,
 }
 
 impl QConfig {
@@ -31,6 +46,8 @@ impl QConfig {
             scale: crate::formats::UE4M3,
             per_tensor: false,
             act_quant: true,
+            rotate: false,
+            bs_override: None,
         }
     }
 
@@ -57,6 +74,8 @@ impl QConfig {
             scale,
             per_tensor,
             act_quant: true,
+            rotate: false,
+            bs_override: None,
         })
     }
 
@@ -65,10 +84,23 @@ impl QConfig {
         self
     }
 
+    /// Builder-style Hadamard pre-rotation toggle.
+    pub fn with_rotate(mut self, on: bool) -> QConfig {
+        self.rotate = on;
+        self
+    }
+
+    /// Builder-style per-layer block-size override.
+    pub fn with_block_size(mut self, bs: usize) -> QConfig {
+        self.bs_override = Some(bs);
+        self
+    }
+
     /// Parse the short display id produced by [`QConfig::id`]:
     /// `bf16-exact` (or `none`) for the quantization-off baseline,
-    /// otherwise `<elem>/<scale>[-S][-wonly]` — e.g. `fp4_e2m1/ue5m3`,
-    /// `int4/ue4m3-S`, `fp8_e4m3/ue4m3-wonly`.
+    /// otherwise `<elem>/<scale>[-S][-wonly][@bs<N>][-rot]` — e.g.
+    /// `fp4_e2m1/ue5m3`, `int4/ue4m3-S`, `fp8_e4m3/ue4m3-wonly`,
+    /// `fp4_e2m1/ue4m3@bs8-rot`.
     pub fn parse(s: &str) -> Result<QConfig> {
         let s = s.trim();
         if s == "bf16-exact" || s == "none" {
@@ -76,12 +108,25 @@ impl QConfig {
         }
         let Some((elem, rest)) = s.split_once('/') else {
             bail!(
-                "bad qconfig {s:?}: expected <elem>/<scale>[-S][-wonly] \
-                 or bf16-exact"
+                "bad qconfig {s:?}: expected \
+                 <elem>/<scale>[-S][-wonly][@bs<N>][-rot] or bf16-exact"
             );
         };
-        // id() appends "-S" before "-wonly", so strip in reverse order
+        // id() appends suffixes in the order -S, -wonly, @bsN, -rot —
+        // strip them in reverse order
         let mut rest = rest;
+        let mut rotate = false;
+        if let Some(r) = rest.strip_suffix("-rot") {
+            rotate = true;
+            rest = r;
+        }
+        let mut bs_override = None;
+        if let Some((r, bs)) = rest.rsplit_once("@bs") {
+            bs_override = Some(bs.parse::<usize>().map_err(|e| {
+                anyhow::anyhow!("bad block-size override {bs:?}: {e}")
+            })?);
+            rest = r;
+        }
         let mut act_quant = true;
         if let Some(r) = rest.strip_suffix("-wonly") {
             act_quant = false;
@@ -94,29 +139,48 @@ impl QConfig {
         }
         let mut cfg = QConfig::named(elem, rest, per_tensor)?;
         cfg.act_quant = act_quant;
+        cfg.rotate = rotate;
+        cfg.bs_override = bs_override;
         Ok(cfg)
     }
 
-    /// Equivalent CPU-side scheme (for cross-validation tests).
+    /// Equivalent CPU-side scheme (for cross-validation tests). A
+    /// [`QConfig::bs_override`] wins over the model-global `block_size`.
     pub fn scheme(&self, block_size: usize) -> QuantScheme {
-        QuantScheme::new(self.elem, self.scale, block_size)
-            .with_per_tensor(self.per_tensor)
+        QuantScheme::new(
+            self.elem,
+            self.scale,
+            self.bs_override.unwrap_or(block_size),
+        )
+        .with_per_tensor(self.per_tensor)
     }
 
-    /// Short display id, e.g. `fp4/ue4m3-S` or `bf16-exact`.
+    /// The block size this config quantizes with, given the
+    /// model-global default.
+    pub fn effective_block_size(&self, block_size: usize) -> usize {
+        self.bs_override.unwrap_or(block_size)
+    }
+
+    /// Short display id, e.g. `fp4/ue4m3-S`, `fp4_e2m1/ue4m3@bs8-rot`,
+    /// or `bf16-exact`.
     pub fn id(&self) -> String {
         if !self.quant_on {
             return "bf16-exact".to_string();
         }
         format!(
-            "{}/{}{}{}",
+            "{}/{}{}{}{}{}",
             match self.elem {
                 ElemFormat::Int(m) if m == 7.0 => "int4".to_string(),
                 e => e.name().to_string(),
             },
             self.scale.name,
             if self.per_tensor { "-S" } else { "" },
-            if self.act_quant { "" } else { "-wonly" }
+            if self.act_quant { "" } else { "-wonly" },
+            match self.bs_override {
+                Some(bs) => format!("@bs{bs}"),
+                None => String::new(),
+            },
+            if self.rotate { "-rot" } else { "" }
         )
     }
 
@@ -284,6 +348,42 @@ mod tests {
         assert_eq!(QConfig::parse("none").unwrap(), QConfig::baseline());
         assert!(QConfig::parse("fp4_e2m1").is_err());
         assert!(QConfig::parse("fp4_e2m1/nope").is_err());
+    }
+
+    #[test]
+    fn rotation_and_block_override_round_trip() {
+        let r = QConfig::fp4("ue4m3").unwrap().with_rotate(true);
+        assert_eq!(r.id(), "fp4_e2m1/ue4m3-rot");
+        assert_eq!(QConfig::parse(&r.id()).unwrap(), r);
+
+        let b = QConfig::fp4("ue5m3").unwrap().with_block_size(8);
+        assert_eq!(b.id(), "fp4_e2m1/ue5m3@bs8");
+        assert_eq!(QConfig::parse(&b.id()).unwrap(), b);
+        assert_eq!(b.scheme(32).block_size, 8);
+        assert_eq!(b.effective_block_size(32), 8);
+
+        let both = QConfig::named("fp8_e4m3", "ue4m3", true)
+            .unwrap()
+            .with_rotate(true)
+            .with_block_size(16);
+        assert_eq!(both.id(), "fp8_e4m3/ue4m3-S@bs16-rot");
+        assert_eq!(QConfig::parse(&both.id()).unwrap(), both);
+
+        let mut wonly = QConfig::fp4("ue4m3").unwrap().with_rotate(true);
+        wonly.act_quant = false;
+        assert_eq!(wonly.id(), "fp4_e2m1/ue4m3-wonly-rot");
+        assert_eq!(QConfig::parse(&wonly.id()).unwrap(), wonly);
+
+        // no override: the model-global block size flows through
+        let plain = QConfig::fp4("ue4m3").unwrap();
+        assert_eq!(plain.scheme(32).block_size, 32);
+        assert!(QConfig::parse("fp4_e2m1/ue4m3@bsx").is_err());
+
+        // per-layer ids with the new suffixes round-trip too
+        let q = PerLayerQConfig::uniform(QConfig::fp4("ue5m3").unwrap())
+            .with_override(1, r)
+            .with_override(2, both);
+        assert_eq!(PerLayerQConfig::parse(&q.id()).unwrap(), q);
     }
 
     #[test]

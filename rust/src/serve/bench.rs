@@ -59,6 +59,9 @@ pub struct BenchOpts {
     pub shard_counts: Vec<usize>,
     /// Override the config axis (label, per-layer config).
     pub qconfigs: Option<Vec<(String, PerLayerQConfig)>>,
+    /// Override the global block size (tuned configs carry their own
+    /// via `--qconfig-file`; per-layer `@bsN` overrides still win).
+    pub block_size: Option<usize>,
 }
 
 impl BenchOpts {
@@ -72,6 +75,7 @@ impl BenchOpts {
             serial_requests: if smoke { 2 } else { 6 },
             shard_counts: if smoke { vec![1, 2] } else { vec![1, 2, 4] },
             qconfigs: None,
+            block_size: None,
         }
     }
 }
@@ -136,7 +140,9 @@ fn random_tokens(rng: &mut Pcg64, dims: &ModelDims, batch: usize) -> Vec<i32> {
 /// Run the bench and write the report; returns the report JSON.
 pub fn run(opts: &BenchOpts) -> crate::Result<Json> {
     let dims = bench_dims(opts.smoke);
-    let block_size = if opts.smoke { 16 } else { 32 };
+    let block_size = opts
+        .block_size
+        .unwrap_or(if opts.smoke { 16 } else { 32 });
     let params = Params::init_surrogate(&dims, 2026);
     let configs = match &opts.qconfigs {
         Some(c) => c.clone(),

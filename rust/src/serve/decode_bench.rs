@@ -66,6 +66,9 @@ pub struct DecodeBenchOpts {
     pub spec_ks: Vec<usize>,
     /// Override the config axis (label, per-layer config).
     pub qconfigs: Option<Vec<(String, PerLayerQConfig)>>,
+    /// Override the global block size (tuned configs carry their own
+    /// via `--qconfig-file`; per-layer `@bsN` overrides still win).
+    pub block_size: Option<usize>,
 }
 
 impl DecodeBenchOpts {
@@ -81,6 +84,7 @@ impl DecodeBenchOpts {
             shard_counts: vec![1, 2],
             spec_ks: Vec::new(),
             qconfigs: None,
+            block_size: None,
         }
     }
 }
@@ -175,7 +179,9 @@ fn exactness_gate(
 /// Run the bench and write the report; returns the report JSON.
 pub fn run(opts: &DecodeBenchOpts) -> crate::Result<Json> {
     let dims = bench_dims(opts.smoke);
-    let block_size = if opts.smoke { 16 } else { 32 };
+    let block_size = opts
+        .block_size
+        .unwrap_or(if opts.smoke { 16 } else { 32 });
     anyhow::ensure!(
         opts.prompt_len >= 1 && opts.prompt_len < dims.seq_len,
         "prompt length {} leaves no room to generate (seq_len {})",

@@ -62,6 +62,14 @@ pub struct KvBenchOpts {
     /// (the same byte budget is then applied to every codec, which is
     /// the point of the comparison).
     pub budget_seqs: f64,
+    /// Override the global block size (tuned configs carry their own
+    /// via `--qconfig-file`).
+    pub block_size: Option<usize>,
+    /// Tuned entry from `microscale tune` (`--qconfig-file`): the
+    /// weight config replaces the default FP4/UE5M3 model, and the KV
+    /// codec id (`"none"` for exact) is appended to the codec axis as
+    /// `tuned_kv`.
+    pub tuned: Option<(PerLayerQConfig, String)>,
 }
 
 impl KvBenchOpts {
@@ -75,6 +83,8 @@ impl KvBenchOpts {
             requests: if smoke { 4 } else { 16 },
             page_rows: if smoke { 8 } else { 16 },
             budget_seqs: if smoke { 1.5 } else { 3.0 },
+            block_size: None,
+            tuned: None,
         }
     }
 }
@@ -182,7 +192,9 @@ fn mx_consistency_gate(
 /// Run the bench and write the report; returns the report JSON.
 pub fn run(opts: &KvBenchOpts) -> crate::Result<Json> {
     let dims = bench_dims(opts.smoke);
-    let block_size = if opts.smoke { 16 } else { 32 };
+    let block_size = opts
+        .block_size
+        .unwrap_or(if opts.smoke { 16 } else { 32 });
     anyhow::ensure!(
         opts.prompt_len >= 1 && opts.prompt_len < dims.seq_len,
         "prompt length {} leaves no room to generate (seq_len {})",
@@ -190,7 +202,10 @@ pub fn run(opts: &KvBenchOpts) -> crate::Result<Json> {
         dims.seq_len
     );
     let params = Params::init_surrogate(&dims, 2026);
-    let weights = PerLayerQConfig::uniform(QConfig::fp4("ue5m3")?);
+    let weights = match &opts.tuned {
+        Some((w, _)) => w.clone(),
+        None => PerLayerQConfig::uniform(QConfig::fp4("ue5m3")?),
+    };
     let model = Arc::new(PackedModel::build(
         &dims,
         &params,
@@ -233,7 +248,23 @@ pub fn run(opts: &KvBenchOpts) -> crate::Result<Json> {
     let mut config_entries: Vec<(String, Json)> = Vec::new();
     let mut position_bytes: Vec<(String, usize)> = Vec::new();
     let mut accounting_ok = true;
-    for (label, kv_cfg) in kv_configs()? {
+    let mut codec_axis: Vec<(String, PerLayerQConfig)> = kv_configs()?
+        .into_iter()
+        .map(|(l, c)| (l.to_string(), c))
+        .collect();
+    if let Some((_, kv_id)) = &opts.tuned {
+        let codec = if kv_id == "none" {
+            QConfig::baseline()
+        } else {
+            QConfig::parse(kv_id)
+                .with_context(|| format!("tuned kv codec {kv_id:?}"))?
+        };
+        codec_axis.push((
+            "tuned_kv".to_string(),
+            PerLayerQConfig::uniform(codec),
+        ));
+    }
+    for (label, kv_cfg) in &codec_axis {
         let mk_pool = || {
             KvPool::build(&dims, &kv_cfg, block_size, opts.page_rows, budget)
         };

@@ -91,6 +91,7 @@ use crate::formats::ElemFormat;
 use crate::model::weights::Params;
 use crate::quant::gemm::{GemmOperand, PackedGemm};
 use crate::quant::matmul::{matmul_t, transpose};
+use crate::quant::rotate::{fwht_rows, fwht_rows_transposed};
 use crate::quant::shard::{shard_ranges, ShardedOperand};
 use crate::quant::{QuantKernel, QuantScheme, ScalarKernel};
 use crate::util::par::ShardPool;
@@ -133,6 +134,10 @@ impl Linear {
         shards: usize,
     ) -> crate::Result<Linear> {
         if !cfg.quant_on {
+            // rotation is *elided* on exact layers: `xHHᵀW = xW` holds in
+            // the algebra, so skipping both transforms is the only way to
+            // stay bit-identical to the unrotated exact path (f32 FWHT
+            // round-trips are not bit-exact) — DESIGN.md §16
             return Ok(Linear {
                 path: LinearPath::Exact { wt: transpose(w, k, n) },
                 cfg: *cfg,
@@ -142,6 +147,15 @@ impl Linear {
             });
         }
         let scheme = cfg.scheme(block_size);
+        if let Some(bs) = cfg.bs_override {
+            // the model-global block size is validated against the model
+            // dims once at build_sharded; a per-layer override must make
+            // the same guarantee for this layer's contraction dim
+            ensure!(
+                bs > 0 && k % bs == 0,
+                "per-layer block size {bs} must divide contraction dim {k}"
+            );
+        }
         // latched: read once per process (Linear::build runs per layer
         // per model build, and model rebuilds happen inside sweeps).
         // Set MICROSCALE_SERVE before the first build; changes after
@@ -159,29 +173,47 @@ impl Linear {
             && !scheme.per_tensor
             && matches!(scheme.elem, ElemFormat::Fp(_))
             && k % scheme.block_size == 0;
+        let rotate = cfg.rotate;
         let path = if packed_ok {
             // effective shard count degrades with the layer's output
             // width (shard_ranges caps at whole column blocks); each
-            // shard is its own cache entry, keyed by shard slot
+            // shard is its own cache entry, keyed by shard slot (and by
+            // the rotation flag: a rotated weight operand holds `HW`,
+            // the folded weight-side half of the rotated GEMM)
             let ranges = shard_ranges(n, scheme.block_size, shards);
             let ops = if ranges.len() <= 1 {
-                ShardedOperand::single(
-                    cache.get_or_pack_transposed(&scheme, w, k, n)?,
-                )
+                ShardedOperand::single(if rotate {
+                    cache.get_or_pack_transposed_rotated(&scheme, w, k, n)?
+                } else {
+                    cache.get_or_pack_transposed(&scheme, w, k, n)?
+                })
             } else {
                 let count = ranges.len();
                 let mut parts = Vec::with_capacity(count);
                 for (i, &(c0, c1)) in ranges.iter().enumerate() {
-                    parts.push(cache.get_or_pack_transposed_shard(
-                        &scheme, w, k, n, i, count, c0, c1,
-                    )?);
+                    parts.push(if rotate {
+                        cache.get_or_pack_transposed_shard_rotated(
+                            &scheme, w, k, n, i, count, c0, c1,
+                        )?
+                    } else {
+                        cache.get_or_pack_transposed_shard(
+                            &scheme, w, k, n, i, count, c0, c1,
+                        )?
+                    });
                 }
                 ShardedOperand::from_parts(parts, ranges)?
             };
             LinearPath::Packed { ops }
         } else {
+            let mut wt = transpose(w, k, n);
+            if rotate {
+                // each transposed row is one output channel's k-vector
+                // over the contraction dim — rotating rows here equals
+                // transpose(fwht_cols(w)) bit for bit
+                fwht_rows_transposed(&mut wt, k);
+            }
             LinearPath::Reference {
-                wt_q: ScalarKernel.fake_quant(&scheme, &transpose(w, k, n)),
+                wt_q: ScalarKernel.fake_quant(&scheme, &wt),
             }
         };
         Ok(Linear { path, cfg: *cfg, scheme: Some(scheme), k, n })
@@ -199,6 +231,18 @@ impl Linear {
         pool: Option<&ShardPool>,
     ) -> crate::Result<Vec<f32>> {
         debug_assert_eq!(x.len(), rows * self.k);
+        // activation-side half of the rotated GEMM: `x → xH` per row,
+        // before quantization, on the quantized paths only (exact
+        // layers elide rotation entirely — see Linear::build). The
+        // rotation is per-row, so batching invariance and the
+        // decode/ragged bit-identity argument survive unchanged.
+        let rotated: Option<Vec<f32>> =
+            (self.cfg.rotate && self.cfg.quant_on).then(|| {
+                let mut xr = x.to_vec();
+                fwht_rows(&mut xr, self.k);
+                xr
+            });
+        let x = rotated.as_deref().unwrap_or(x);
         match &self.path {
             LinearPath::Exact { wt } => {
                 Ok(matmul_t(x, wt, rows, self.k, self.n))
@@ -840,11 +884,22 @@ pub fn reference_forward(
         let (kd, nd) = linear_dims(dims, which);
         let data = params.get(Params::QUANTIZED[which])?.1;
         let w = &data[layer * kd * nd..(layer + 1) * kd * nd];
-        let wt = transpose(w, kd, nd);
+        let mut wt = transpose(w, kd, nd);
         if !cfg.quant_on {
+            // rotation elided on exact layers, exactly as Linear::build
             return Ok(matmul_t(x, &wt, rows, kd, nd));
         }
         let scheme = cfg.scheme(block_size);
+        // the same pre-rotation calls the packed path makes, in the
+        // same order, so the packed==reference bit contract holds with
+        // rotation on
+        let rotated: Option<Vec<f32>> = cfg.rotate.then(|| {
+            fwht_rows_transposed(&mut wt, kd);
+            let mut xr = x.to_vec();
+            fwht_rows(&mut xr, kd);
+            xr
+        });
+        let x = rotated.as_deref().unwrap_or(x);
         let wt_q = ScalarKernel.fake_quant(&scheme, &wt);
         if cfg.act_quant {
             let xq = quantize_acts_by_sequence(&scheme, x, rows, &lens, kd);
@@ -853,6 +908,59 @@ pub fn reference_forward(
             Ok(matmul_t(x, &wt_q, rows, kd, nd))
         }
     })
+}
+
+/// Run an **exact** (quantization-off) forward over `params` and record
+/// the input activations of every quantized linear: index
+/// `layer * 6 + which` ([`Params::QUANTIZED`] order) holds that
+/// linear's row-major `rows × k` input. The tuner's calibration hook —
+/// per-layer quantization error is measured on exactly the tensors the
+/// serving path would quantize (post-LN, post-GELU, post-attention),
+/// not on synthetic Gaussians.
+pub fn capture_linear_inputs(
+    params: &Params,
+    dims: &ModelDims,
+    tokens: &[i32],
+    batch: usize,
+    seq: usize,
+) -> crate::Result<Vec<Vec<f32>>> {
+    ensure!(batch > 0, "empty batch");
+    let (d, v) = (dims.d_model, dims.vocab);
+    let head_t = transpose(params.get("head")?.1, d, v);
+    let ctx = Ctx {
+        dims,
+        embed: params.get("embed")?.1,
+        pos: params.get("pos")?.1,
+        ln1_g: params.get("ln1_g")?.1,
+        ln1_b: params.get("ln1_b")?.1,
+        ln2_g: params.get("ln2_g")?.1,
+        ln2_b: params.get("ln2_b")?.1,
+        lnf_g: params.get("lnf_g")?.1,
+        lnf_b: params.get("lnf_b")?.1,
+        gains: params.get("gains")?.1,
+        head_t: &head_t,
+    };
+    let lens = vec![seq; batch];
+    let mut kvs: Vec<SeqKv> = (0..batch)
+        .map(|_| SeqKv::with_capacity(dims.n_layers, d, seq))
+        .collect();
+    let mut captures: Vec<Vec<f32>> = vec![Vec::new(); dims.n_layers * 6];
+    forward_spine(
+        &ctx,
+        tokens,
+        &lens,
+        &mut kvs,
+        false,
+        |layer, which, x, rows| {
+            captures[layer * 6 + which].extend_from_slice(x);
+            let (kd, nd) = linear_dims(dims, which);
+            let data = params.get(Params::QUANTIZED[which])?.1;
+            let w = &data[layer * kd * nd..(layer + 1) * kd * nd];
+            let wt = transpose(w, kd, nd);
+            Ok(matmul_t(x, &wt, rows, kd, nd))
+        },
+    )?;
+    Ok(captures)
 }
 
 /// Fake-quantize a `rows × k` activation matrix one sequence at a time
@@ -1262,6 +1370,143 @@ mod tests {
             &dims, &params, &qcfg, 8, &cache, 0
         )
         .is_err());
+    }
+
+    #[test]
+    fn rotated_packed_forward_matches_rotated_reference() {
+        let dims = tiny_dims();
+        let params = Params::init_surrogate(&dims, 31);
+        let cache = OperandCache::new(64);
+        let qcfg = PerLayerQConfig::uniform(
+            QConfig::fp4("ue4m3").unwrap().with_rotate(true),
+        );
+        let model =
+            PackedModel::build(&dims, &params, &qcfg, 8, &cache).unwrap();
+        assert_eq!(model.path_summary().packed, 12);
+        let mut rng = Pcg64::new(32);
+        let toks = tokens(&mut rng, &dims, 2 * dims.seq_len);
+        let got = model.forward(&toks, 2, dims.seq_len).unwrap();
+        let want = reference_forward(
+            &params,
+            &dims,
+            &qcfg,
+            8,
+            &toks,
+            2,
+            dims.seq_len,
+        )
+        .unwrap();
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "logit {i}: {a} vs {b}");
+        }
+        // rotation changes the numbers vs the unrotated config
+        let plain = PerLayerQConfig::uniform(QConfig::fp4("ue4m3").unwrap());
+        let unrot = PackedModel::build(&dims, &params, &plain, 8, &cache)
+            .unwrap()
+            .forward(&toks, 2, dims.seq_len)
+            .unwrap();
+        assert!(got.iter().zip(&unrot).any(|(a, b)| a.to_bits() != b.to_bits()));
+    }
+
+    #[test]
+    fn rotated_sharded_forward_is_bit_identical_to_unsharded() {
+        let dims = tiny_dims();
+        let params = Params::init_surrogate(&dims, 33);
+        let cache = OperandCache::new(64);
+        let qcfg = PerLayerQConfig::uniform(
+            QConfig::fp4("ue5m3").unwrap().with_rotate(true),
+        );
+        let base =
+            PackedModel::build(&dims, &params, &qcfg, 8, &cache).unwrap();
+        let mut rng = Pcg64::new(34);
+        let toks = tokens(&mut rng, &dims, dims.seq_len);
+        let want = base.forward(&toks, 1, dims.seq_len).unwrap();
+        for shards in [2usize, 3] {
+            let got = PackedModel::build_sharded(
+                &dims, &params, &qcfg, 8, &cache, shards,
+            )
+            .unwrap()
+            .forward(&toks, 1, dims.seq_len)
+            .unwrap();
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "shards={shards} logit {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn per_layer_block_size_override_flows_through() {
+        let dims = tiny_dims();
+        let params = Params::init_surrogate(&dims, 35);
+        let cache = OperandCache::new(64);
+        // layer 0 at bs8 (the global), layer 1 overridden to bs16
+        let qcfg = PerLayerQConfig::uniform(QConfig::fp4("ue4m3").unwrap())
+            .with_override(
+                1,
+                QConfig::fp4("ue4m3").unwrap().with_block_size(16),
+            );
+        let model =
+            PackedModel::build(&dims, &params, &qcfg, 8, &cache).unwrap();
+        assert_eq!(model.path_summary().packed, 12);
+        let mut rng = Pcg64::new(36);
+        let toks = tokens(&mut rng, &dims, dims.seq_len);
+        let got = model.forward(&toks, 1, dims.seq_len).unwrap();
+        let want = reference_forward(
+            &params,
+            &dims,
+            &qcfg,
+            8,
+            &toks,
+            1,
+            dims.seq_len,
+        )
+        .unwrap();
+        for (a, b) in got.iter().zip(&want) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // and differs from the uniform-bs8 forward
+        let uni = PerLayerQConfig::uniform(QConfig::fp4("ue4m3").unwrap());
+        let u = PackedModel::build(&dims, &params, &uni, 8, &cache)
+            .unwrap()
+            .forward(&toks, 1, dims.seq_len)
+            .unwrap();
+        assert!(got.iter().zip(&u).any(|(a, b)| a.to_bits() != b.to_bits()));
+        // an override that does not divide the contraction dim is refused
+        let bad = PerLayerQConfig::uniform(QConfig::fp4("ue4m3").unwrap())
+            .with_override(
+                0,
+                QConfig::fp4("ue4m3").unwrap().with_block_size(24),
+            );
+        assert!(PackedModel::build(&dims, &params, &bad, 8, &cache).is_err());
+    }
+
+    #[test]
+    fn capture_matches_reference_inputs() {
+        let dims = tiny_dims();
+        let params = Params::init_surrogate(&dims, 37);
+        let mut rng = Pcg64::new(38);
+        let toks = tokens(&mut rng, &dims, 2 * dims.seq_len);
+        let caps =
+            capture_linear_inputs(&params, &dims, &toks, 2, dims.seq_len)
+                .unwrap();
+        assert_eq!(caps.len(), dims.n_layers * 6);
+        let rows = 2 * dims.seq_len;
+        for (i, c) in caps.iter().enumerate() {
+            let which = i % 6;
+            let (kd, _) = linear_dims(&dims, which);
+            assert_eq!(c.len(), rows * kd, "linear {i}");
+            assert!(c.iter().any(|v| *v != 0.0), "linear {i} all zero");
+        }
+        // deterministic: same tokens → same bits
+        let again =
+            capture_linear_inputs(&params, &dims, &toks, 2, dims.seq_len)
+                .unwrap();
+        for (a, b) in caps.iter().zip(&again) {
+            assert_eq!(a.len(), b.len());
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
     }
 
     #[test]

@@ -1,0 +1,241 @@
+//! Hadamard pre-rotation acceptance suite (DESIGN.md §16).
+//!
+//! Pins the rotation layer's load-bearing guarantees from outside the
+//! crate:
+//!
+//! 1. **Transform algebra** — the normalized FWHT is self-inverse and
+//!    orthonormal, at power-of-two and arbitrary lengths (via the
+//!    block-diagonal largest-power-of-two cover), and the cover never
+//!    mixes across chunk boundaries.
+//! 2. **Exact-config elision** — a rotation flag on a
+//!    quantization-off layer is algebraically the identity
+//!    (`(xH)(HW) = xW`), so the implementation elides it; the logits
+//!    must be BIT-identical to the unrotated exact model, packed and
+//!    reference path alike.
+//! 3. **Differential gate** — under a quantized config the rotated
+//!    packed model stays bit-identical to the rotated scalar
+//!    reference (the repo's packed==reference contract survives
+//!    rotation), while genuinely changing the quantized logits.
+//! 4. **Shard invariance** — rotated + tensor-parallel sharded logits
+//!    are bit-identical to the unsharded rotated model.
+
+use microscale::dist::Pcg64;
+use microscale::model::weights::Params;
+use microscale::quant::rotate::{fwht, fwht_cols, fwht_rows, pow2_chunks};
+use microscale::runtime::artifacts::ModelDims;
+use microscale::runtime::qconfig::{PerLayerQConfig, QConfig};
+use microscale::serve::cache::OperandCache;
+use microscale::serve::packed_model::{reference_forward, PackedModel};
+
+fn dims() -> ModelDims {
+    ModelDims {
+        vocab: 48,
+        d_model: 32,
+        n_heads: 2,
+        n_layers: 2,
+        d_ff: 64,
+        seq_len: 12,
+    }
+}
+
+fn toks(dims: &ModelDims, batch: usize, seed: u64) -> Vec<i32> {
+    let mut rng = Pcg64::new(seed);
+    (0..batch * dims.seq_len)
+        .map(|_| (rng.next_u64() % dims.vocab as u64) as i32)
+        .collect()
+}
+
+fn bits(x: &[f32]) -> Vec<u32> {
+    x.iter().map(|v| v.to_bits()).collect()
+}
+
+#[test]
+fn fwht_self_inverse_and_orthonormal_any_length() {
+    for d in [1usize, 2, 4, 16, 64, 48, 96, 100, 257, 384] {
+        let mut rng = Pcg64::new(11 + d as u64);
+        let x = rng.normal_vec_f32(d, 1.0);
+        let mut y = x.clone();
+        fwht(&mut y);
+        // orthonormal: ‖Hx‖₂ = ‖x‖₂
+        let n0: f64 = x.iter().map(|v| (*v as f64).powi(2)).sum();
+        let n1: f64 = y.iter().map(|v| (*v as f64).powi(2)).sum();
+        assert!(
+            (n1 - n0).abs() < 1e-3 * n0.max(1.0),
+            "d={d}: ‖Hx‖²={n1} vs ‖x‖²={n0}"
+        );
+        // self-inverse: H(Hx) = x
+        fwht(&mut y);
+        for i in 0..d {
+            assert!(
+                (y[i] - x[i]).abs() <= 1e-4 * x[i].abs().max(1.0),
+                "d={d} i={i}: {} vs {}",
+                y[i],
+                x[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn non_power_of_two_cover_is_block_diagonal() {
+    // the cover is the binary expansion of d...
+    for d in [3usize, 12, 100, 257] {
+        let chunks = pow2_chunks(d);
+        assert_eq!(chunks.iter().map(|(_, l)| l).sum::<usize>(), d);
+        let mut expect_off = 0;
+        let mut prev = usize::MAX;
+        for &(off, len) in &chunks {
+            assert_eq!(off, expect_off, "d={d}");
+            assert!(len.is_power_of_two() && len < prev, "d={d}");
+            expect_off += len;
+            prev = len;
+        }
+        // ...and a basis vector inside one chunk never leaks outside it
+        for &(off, len) in &chunks {
+            let mut e = vec![0.0f32; d];
+            e[off] = 1.0;
+            fwht(&mut e);
+            for (i, v) in e.iter().enumerate() {
+                let inside = i >= off && i < off + len;
+                assert_eq!(
+                    *v != 0.0,
+                    inside,
+                    "d={d}: chunk ({off},{len}) leaked to {i}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn exact_config_elides_rotation_bit_identically() {
+    // Rotation on a quantization-off layer is the algebraic identity,
+    // so the implementation must elide it entirely: same bits, packed
+    // and reference paths, with and without the flag.
+    let dims = dims();
+    let params = Params::init_surrogate(&dims, 21);
+    let cache = OperandCache::new(32);
+    let tokens = toks(&dims, 2, 5);
+    let plain = PerLayerQConfig::uniform(QConfig::baseline());
+    let rotated =
+        PerLayerQConfig::uniform(QConfig::baseline().with_rotate(true));
+    let m0 = PackedModel::build(&dims, &params, &plain, 16, &cache).unwrap();
+    let m1 =
+        PackedModel::build(&dims, &params, &rotated, 16, &cache).unwrap();
+    let y0 = m0.forward(&tokens, 2, dims.seq_len).unwrap();
+    let y1 = m1.forward(&tokens, 2, dims.seq_len).unwrap();
+    assert_eq!(bits(&y0), bits(&y1), "packed path must elide rotation");
+    let r0 = reference_forward(
+        &params, &dims, &plain, 16, &tokens, 2, dims.seq_len,
+    )
+    .unwrap();
+    let r1 = reference_forward(
+        &params, &dims, &rotated, 16, &tokens, 2, dims.seq_len,
+    )
+    .unwrap();
+    assert_eq!(bits(&r0), bits(&r1), "reference path must elide rotation");
+    assert_eq!(bits(&y0), bits(&r0), "packed vs reference exact");
+}
+
+#[test]
+fn rotated_packed_matches_rotated_reference_and_changes_logits() {
+    let dims = dims();
+    let params = Params::init_surrogate(&dims, 22);
+    let cache = OperandCache::new(32);
+    let tokens = toks(&dims, 2, 6);
+    let base = QConfig::fp4("ue4m3").unwrap();
+    for bs in [8usize, 16] {
+        let plain = PerLayerQConfig::uniform(base);
+        let rot = PerLayerQConfig::uniform(base.with_rotate(true));
+        let packed =
+            PackedModel::build(&dims, &params, &rot, bs, &cache).unwrap();
+        let y = packed.forward(&tokens, 2, dims.seq_len).unwrap();
+        let r = reference_forward(
+            &params, &dims, &rot, bs, &tokens, 2, dims.seq_len,
+        )
+        .unwrap();
+        assert_eq!(bits(&y), bits(&r), "bs={bs}: packed vs reference");
+        // rotation must actually change the quantized computation
+        let mp =
+            PackedModel::build(&dims, &params, &plain, bs, &cache).unwrap();
+        let yp = mp.forward(&tokens, 2, dims.seq_len).unwrap();
+        assert_ne!(
+            bits(&y),
+            bits(&yp),
+            "bs={bs}: rotated logits should differ under quantization"
+        );
+    }
+}
+
+#[test]
+fn rotated_sharded_is_bit_identical_to_unsharded() {
+    let dims = dims();
+    let params = Params::init_surrogate(&dims, 23);
+    let cache = OperandCache::new(64);
+    let tokens = toks(&dims, 2, 7);
+    let rot = PerLayerQConfig::uniform(
+        QConfig::fp4("ue4m3").unwrap().with_rotate(true),
+    );
+    let whole =
+        PackedModel::build_sharded(&dims, &params, &rot, 16, &cache, 1)
+            .unwrap();
+    let want = whole.forward(&tokens, 2, dims.seq_len).unwrap();
+    for shards in [2usize, 4] {
+        let m = PackedModel::build_sharded(
+            &dims, &params, &rot, 16, &cache, shards,
+        )
+        .unwrap();
+        let got = m.forward(&tokens, 2, dims.seq_len).unwrap();
+        assert_eq!(bits(&want), bits(&got), "shards={shards}");
+    }
+}
+
+#[test]
+fn weight_rotation_commutes_with_column_slicing() {
+    // the sharding contract: rotating then slicing columns equals
+    // slicing then rotating (H acts on the contraction dim only)
+    let (k, n) = (32usize, 12);
+    let mut rng = Pcg64::new(31);
+    let w = rng.normal_vec_f32(k * n, 1.0);
+    let full = fwht_cols(&w, k, n);
+    let (c0, c1) = (3usize, 9);
+    let cols = c1 - c0;
+    let mut sliced = vec![0.0f32; k * cols];
+    for i in 0..k {
+        sliced[i * cols..(i + 1) * cols]
+            .copy_from_slice(&w[i * n + c0..i * n + c1]);
+    }
+    let sliced_rot = fwht_cols(&sliced, k, cols);
+    for i in 0..k {
+        for j in 0..cols {
+            assert_eq!(
+                sliced_rot[i * cols + j].to_bits(),
+                full[i * n + c0 + j].to_bits(),
+                "({i},{j})"
+            );
+        }
+    }
+}
+
+#[test]
+fn activation_rotation_is_per_row() {
+    // fwht_rows on a 2-row matrix equals fwht on each row separately —
+    // the decode path's guarantee that rotation cannot couple
+    // positions (KV/decode invariance rides on this)
+    let d = 48usize;
+    let mut rng = Pcg64::new(33);
+    let x = rng.normal_vec_f32(2 * d, 1.0);
+    let mut both = x.clone();
+    fwht_rows(&mut both, d);
+    for r in 0..2 {
+        let mut one = x[r * d..(r + 1) * d].to_vec();
+        fwht(&mut one);
+        for i in 0..d {
+            assert_eq!(
+                one[i].to_bits(),
+                both[r * d + i].to_bits(),
+                "row {r} elem {i}"
+            );
+        }
+    }
+}

@@ -1,0 +1,347 @@
+//! Auto-tuner acceptance suite (DESIGN.md §16): property tests pinning
+//! the `microscale tune` search layer.
+//!
+//! 1. **Budget fit, exactly** — the chosen assignment's byte total
+//!    equals the sum of real packed-operand `payload_bytes` over every
+//!    quantized weight, and never exceeds the budget; an infeasible
+//!    budget errors instead of overshooting.
+//! 2. **Determinism** — same seed, same tables, same choice, bit for
+//!    bit on the emitted config id.
+//! 3. **Budget monotonicity** — more bytes never buys more error (the
+//!    λ-sweep's exchange-argument guarantee, checked on real tables).
+//! 4. **Config round-trip** — the emitted per-layer id (with `@bsN`
+//!    and `-rot` suffixes) survives `PerLayerQConfig::parse`.
+//! 5. **The pinned rotation flip** — on the FP4 × UE4M3 axis (where
+//!    the paper's block-size anomaly lives), making Hadamard rotation
+//!    available moves the anomaly-regime layers' chosen block size
+//!    strictly DOWN: unrotated narrow channels collapse under fine
+//!    blocks (s_zero), rotated ones ride the tensor RMS and prefer
+//!    fine blocks again.
+//! 6. **Beats uniform at equal bytes** — at a budget just under the
+//!    uniform-fine cost, the mixed per-layer assignment achieves lower
+//!    end-to-end mean logits error than every uniform candidate that
+//!    fits the same budget.
+
+use microscale::coordinator::tuner::{
+    calibration, candidate_space, demo_model, e2e_logits_mse,
+    measure_tables, search, LayerTables,
+};
+use microscale::dist::Pcg64;
+use microscale::model::weights::Params;
+use microscale::quant::gemm::GemmOperand;
+use microscale::runtime::artifacts::ModelDims;
+use microscale::runtime::qconfig::{PerLayerQConfig, QConfig};
+use microscale::serve::cache::OperandCache;
+use microscale::serve::packed_model::PackedModel;
+
+const BLOCK_SIZE: usize = 16;
+
+fn dims() -> ModelDims {
+    ModelDims {
+        vocab: 64,
+        d_model: 64,
+        n_heads: 2,
+        n_layers: 4,
+        d_ff: 128,
+        seq_len: 16,
+    }
+}
+
+fn linear_dims(dims: &ModelDims, which: usize) -> (usize, usize) {
+    let (d, f) = (dims.d_model, dims.d_ff);
+    match which {
+        4 => (d, f),
+        5 => (f, d),
+        _ => (d, d),
+    }
+}
+
+/// Demo model + calibration + measured tables over the given axis.
+fn tables(
+    dims: &ModelDims,
+    params: &Params,
+    elems: &[&str],
+    scales: &[&str],
+    block_sizes: &[usize],
+    rotate: bool,
+) -> LayerTables {
+    let calib = calibration(params, dims, 7, 2).unwrap();
+    let cands = candidate_space(
+        dims,
+        &elems.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        &scales.iter().map(|s| s.to_string()).collect::<Vec<_>>(),
+        block_sizes,
+        rotate,
+    )
+    .unwrap();
+    measure_tables(params, dims, &calib, &cands, BLOCK_SIZE, 64).unwrap()
+}
+
+/// Independent byte accounting: sum of real packed-operand payloads
+/// for every quantized weight under the per-layer config.
+fn real_payload_bytes(
+    dims: &ModelDims,
+    params: &Params,
+    qcfg: &PerLayerQConfig,
+) -> usize {
+    let mut total = 0;
+    for layer in 0..dims.n_layers {
+        let scheme = qcfg.layer(layer).scheme(BLOCK_SIZE);
+        for (which, name) in Params::QUANTIZED.iter().enumerate() {
+            let (k, n) = linear_dims(dims, which);
+            let w = &params.get(name).unwrap().1[layer * k * n..][..k * n];
+            total += GemmOperand::quantize_transposed(&scheme, w, k, n)
+                .unwrap()
+                .payload_bytes();
+        }
+    }
+    total
+}
+
+#[test]
+fn search_fits_budget_with_exact_byte_accounting() {
+    let dims = dims();
+    let params = demo_model(&dims, 7).unwrap();
+    let t = tables(&dims, &params, &["fp4_e2m1"], &["ue4m3"], &[8, 32], true);
+    let (min_u, max_u) = t.uniform_bytes_range();
+    assert!(min_u < max_u, "degenerate byte axis");
+    for budget in [min_u, (min_u + max_u) / 2, max_u, max_u * 2] {
+        let c = search(&t, budget).unwrap();
+        assert!(
+            c.total_bytes <= budget,
+            "budget {budget}: chose {} bytes",
+            c.total_bytes
+        );
+        // the search's accounting is the real packed wire cost
+        assert_eq!(
+            c.total_bytes,
+            real_payload_bytes(&dims, &params, &c.qcfg),
+            "budget {budget}: table bytes disagree with packed operands"
+        );
+    }
+    // an infeasible budget must refuse, not overshoot
+    assert!(search(&t, min_u - 1).is_err());
+}
+
+#[test]
+fn search_is_deterministic_for_a_fixed_seed() {
+    let dims = dims();
+    let run = || {
+        let params = demo_model(&dims, 7).unwrap();
+        let t = tables(
+            &dims,
+            &params,
+            &["fp4_e2m1", "fp8_e4m3"],
+            &["ue4m3", "ue5m3"],
+            &[8, 16, 32],
+            true,
+        );
+        let (min_u, max_u) = t.uniform_bytes_range();
+        search(&t, (min_u + max_u) / 2).unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert_eq!(a.qcfg.id(), b.qcfg.id());
+    assert_eq!(a.picks, b.picks);
+    assert_eq!(a.total_bytes, b.total_bytes);
+    assert_eq!(a.total_err.to_bits(), b.total_err.to_bits());
+    // and a different seed actually changes the tables it ran on
+    let params2 = demo_model(&dims, 8).unwrap();
+    let t2 = tables(
+        &dims,
+        &params2,
+        &["fp4_e2m1", "fp8_e4m3"],
+        &["ue4m3", "ue5m3"],
+        &[8, 16, 32],
+        true,
+    );
+    assert_ne!(
+        t2.err[0][0].to_bits(),
+        tables(
+            &dims,
+            &demo_model(&dims, 7).unwrap(),
+            &["fp4_e2m1", "fp8_e4m3"],
+            &["ue4m3", "ue5m3"],
+            &[8, 16, 32],
+            true,
+        )
+        .err[0][0]
+            .to_bits()
+    );
+}
+
+#[test]
+fn search_error_is_monotone_in_budget() {
+    let dims = dims();
+    let params = demo_model(&dims, 7).unwrap();
+    let t = tables(
+        &dims,
+        &params,
+        &["fp4_e2m1", "fp8_e4m3"],
+        &["ue4m3", "ue5m3", "e8m0"],
+        &[8, 16, 32],
+        true,
+    );
+    let (min_u, max_u) = t.uniform_bytes_range();
+    let mut last = f64::INFINITY;
+    let steps = 8;
+    for i in 0..=steps {
+        let budget = min_u + (max_u - min_u) * i / steps;
+        let c = search(&t, budget).unwrap();
+        assert!(
+            c.total_err <= last * (1.0 + 1e-12),
+            "budget {budget}: err {} after {last}",
+            c.total_err
+        );
+        last = c.total_err;
+    }
+}
+
+#[test]
+fn chosen_config_round_trips_through_parse() {
+    let dims = dims();
+    let params = demo_model(&dims, 7).unwrap();
+    let t = tables(
+        &dims,
+        &params,
+        &["fp4_e2m1", "fp8_e4m3"],
+        &["ue4m3", "ue5m3"],
+        &[8, 16, 32],
+        true,
+    );
+    let (min_u, max_u) = t.uniform_bytes_range();
+    for budget in [min_u, (min_u + 3 * max_u) / 4] {
+        let c = search(&t, budget).unwrap();
+        let id = c.qcfg.id();
+        let back = PerLayerQConfig::parse(&id).unwrap();
+        assert_eq!(back, c.qcfg, "round trip of {id:?}");
+        assert_eq!(back.id(), id);
+        for l in 0..dims.n_layers {
+            assert_eq!(back.layer(l), c.qcfg.layer(l), "layer {l} of {id:?}");
+        }
+    }
+}
+
+#[test]
+fn rotation_flips_block_size_downward_on_the_anomaly_axis() {
+    // The pinned case. FP4 × UE4M3 only: UE5M3/E8M0 scales would
+    // rescue the narrow channels without any rotation (the paper's
+    // Sec. 5.2 result) and mask the flip. Open budget: the choice is
+    // the pure per-layer error argmin.
+    let dims = dims();
+    let params = demo_model(&dims, 7).unwrap();
+    let with_rot =
+        tables(&dims, &params, &["fp4_e2m1"], &["ue4m3"], &[8, 16, 32], true);
+    let no_rot = tables(
+        &dims,
+        &params,
+        &["fp4_e2m1"],
+        &["ue4m3"],
+        &[8, 16, 32],
+        false,
+    );
+    let open = usize::MAX / 2;
+    let c_rot = search(&with_rot, open).unwrap();
+    let c_no = search(&no_rot, open).unwrap();
+    let mut flipped = Vec::new();
+    for l in 0..dims.n_layers {
+        let b_rot = c_rot.qcfg.layer(l).effective_block_size(BLOCK_SIZE);
+        let b_no = c_no.qcfg.layer(l).effective_block_size(BLOCK_SIZE);
+        if b_rot < b_no {
+            // the downward move must come from an actually-rotated pick
+            assert!(
+                c_rot.qcfg.layer(l).rotate,
+                "layer {l}: block size fell {b_no} -> {b_rot} without \
+                 rotation"
+            );
+            flipped.push(l);
+        }
+    }
+    // the even (anomaly-regime) layers must flip: without rotation
+    // their narrow channels collapse under fine blocks, so the tuner
+    // holds a coarse block size; rotation lifts them to the tensor RMS
+    // and the fine block size wins again
+    for l in (0..dims.n_layers).step_by(2) {
+        assert!(
+            flipped.contains(&l),
+            "anomaly layer {l} did not flip: rot {} vs norot {}",
+            c_rot.qcfg.layer(l).id(),
+            c_no.qcfg.layer(l).id()
+        );
+    }
+    // and rotation must strictly reduce the achievable error
+    assert!(
+        c_rot.total_err < c_no.total_err,
+        "rotation should lower the open-budget error: {} vs {}",
+        c_rot.total_err,
+        c_no.total_err
+    );
+}
+
+#[test]
+fn tuned_beats_every_uniform_at_equal_bytes() {
+    let dims = dims();
+    let params = demo_model(&dims, 7).unwrap();
+    let t = tables(&dims, &params, &["fp4_e2m1"], &["ue4m3"], &[8, 32], true);
+    // budget one byte under the uniform-fine cost: no bs-8 uniform
+    // fits, but the tuner can still spend fine blocks where they pay
+    let (_, max_u) = t.uniform_bytes_range();
+    let budget = max_u - 1;
+    let tuned = search(&t, budget).unwrap();
+    // the winning assignment must actually be mixed (this is the
+    // heterogeneous-layer demo model working as designed)
+    let distinct: std::collections::BTreeSet<String> = (0..dims.n_layers)
+        .map(|l| tuned.qcfg.layer(l).id())
+        .collect();
+    assert!(distinct.len() > 1, "tuned config degenerated to uniform");
+
+    let cache = OperandCache::new(64);
+    let mut rng = Pcg64::new(99);
+    let tokens: Vec<i32> = (0..2 * dims.seq_len)
+        .map(|_| (rng.next_u64() % dims.vocab as u64) as i32)
+        .collect();
+    let exact = PerLayerQConfig::uniform(QConfig::baseline());
+    let exact_model =
+        PackedModel::build(&dims, &params, &exact, BLOCK_SIZE, &cache)
+            .unwrap();
+    let exact_logits = exact_model.forward(&tokens, 2, dims.seq_len).unwrap();
+    let tuned_mse = e2e_logits_mse(
+        &params,
+        &dims,
+        &tuned.qcfg,
+        BLOCK_SIZE,
+        &exact_logits,
+        &tokens,
+        2,
+        &cache,
+    )
+    .unwrap();
+    let mut compared = 0;
+    for (c, cand) in t.cands.iter().enumerate() {
+        if t.uniform_bytes(c) > budget {
+            continue;
+        }
+        let mse = e2e_logits_mse(
+            &params,
+            &dims,
+            &PerLayerQConfig::uniform(*cand),
+            BLOCK_SIZE,
+            &exact_logits,
+            &tokens,
+            2,
+            &cache,
+        )
+        .unwrap();
+        assert!(
+            tuned_mse < mse,
+            "uniform {} ({} bytes) at {mse:.4e} not beaten by tuned {} \
+             ({} bytes) at {tuned_mse:.4e}",
+            cand.id(),
+            t.uniform_bytes(c),
+            tuned.qcfg.id(),
+            tuned.total_bytes
+        );
+        compared += 1;
+    }
+    assert!(compared > 0, "no uniform candidate fit the {budget}-byte budget");
+}
